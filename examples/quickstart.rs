@@ -1,0 +1,50 @@
+//! Quickstart: run one Table-I-default simulation, print its outputs, and
+//! show a minimal one-way sweep.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use airesim::config::Params;
+use airesim::model::cluster::Simulation;
+use airesim::report;
+use airesim::sweep::{run_sweep, Sweep};
+
+fn main() {
+    // --- One simulation run ------------------------------------------ //
+    // 4096-server job, 16 warm standbys, 256-day length, Table I rates.
+    let params = Params::table1_defaults();
+    let out = Simulation::new(&params, 42).run();
+
+    println!("AIReSim quickstart — one run at Table I defaults (seed 42)\n");
+    println!(
+        "  makespan      : {:.1} days ({:.0} hours)",
+        out.makespan / 1440.0,
+        out.makespan / 60.0
+    );
+    println!(
+        "  failures      : {} ({} random, {} systematic)",
+        out.failures_total, out.failures_random, out.failures_systematic
+    );
+    println!(
+        "  repairs       : {} automated, {} manual",
+        out.repairs_auto, out.repairs_manual
+    );
+    println!("  preemptions   : {}", out.preemptions);
+    println!("  avg run burst : {:.1} min", out.avg_run_duration);
+    println!("  utilization   : {:.1}%", out.utilization(params.job_len) * 100.0);
+
+    // --- A small one-way sweep --------------------------------------- //
+    // How does recovery time shape total training time? (Fig 2a's x-axis.)
+    println!("\nSweeping recovery_time (5 replications per point)…\n");
+    let sweep = Sweep::one_way(
+        "Recovery time sensitivity",
+        "recovery_time",
+        &[10.0, 20.0, 30.0],
+        5,
+        42,
+    );
+    let result = run_sweep(&params, &sweep, 0);
+    print!("{}", report::text_table(&result, "makespan_hours"));
+    println!("\nNext: examples/capacity_planning.rs reproduces the paper's §IV study.");
+}

@@ -1,0 +1,70 @@
+"""AOT lowering: JAX analytical model -> HLO *text* artifact.
+
+HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits protos with
+64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+
+    python -m compile.aot --out ../artifacts/analytic.hlo.txt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_analytic() -> str:
+    spec = jax.ShapeDtypeStruct((model.BATCH, model.N_PARAMS), jnp.float32)
+    lowered = jax.jit(model.analytic_fn).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/analytic.hlo.txt")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+
+    text = lower_analytic()
+    out.write_text(text)
+    print(f"wrote {len(text)} chars to {out}")
+
+    # Machine-readable interface contract next to the artifact, so the Rust
+    # runtime can validate its column layout at load time.
+    meta = {
+        "batch": model.BATCH,
+        "n_params": model.N_PARAMS,
+        "n_outputs": model.N_OUTPUTS,
+        "param_names": list(model.PARAM_NAMES),
+        "output_names": list(model.OUTPUT_NAMES),
+        "m_steps": __import__("compile.kernels.uniformization", fromlist=["M_STEPS"]).M_STEPS,
+    }
+    meta_path = out.with_suffix(".json")
+    meta_path.write_text(json.dumps(meta, indent=2) + "\n")
+    print(f"wrote interface contract to {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

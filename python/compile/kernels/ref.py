@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernel.
+
+Everything here is straight-line jax.numpy with no Pallas -- the reference
+the kernel must match (pytest + hypothesis drive assert_allclose between
+the two implementations across shapes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dyadic_transients_ref(a0: jax.Array, pi0: jax.Array, m_steps: int) -> jax.Array:
+    """Reference for kernels.uniformization.dyadic_transients.
+
+    caps[:, i] = pi0 @ a0^(2^i) computed with a plain Python loop over
+    batched jnp einsums.
+    """
+    a = a0
+    caps = []
+    for _ in range(m_steps):
+        caps.append(jnp.einsum("bs,bst->bt", pi0, a))
+        a = jnp.einsum("bst,btu->bsu", a, a)
+    caps.append(jnp.einsum("bs,bst->bt", pi0, a))
+    return jnp.stack(caps, axis=1)
+
+
+def expm_series_ref(q: jax.Array, delta: jax.Array, k_terms: int) -> jax.Array:
+    """Reference uniformized Taylor series for A_0 = expm(Q * Delta).
+
+    Uses the uniformization form A = sum_k Poisson(q_unif*Delta, k) P^k with
+    P = I + Q/q_unif, which keeps every intermediate non-negative (a proper
+    stochastic matrix at every truncation).  q: [B, S, S] generator
+    matrices; delta: [B] time steps.  Matches model._expm_uniformized.
+    """
+    b, s, _ = q.shape
+    # Uniformization rate: strictly larger than the max outflow rate.
+    q_unif = jnp.max(-jnp.diagonal(q, axis1=1, axis2=2), axis=1) * 1.01 + 1e-12
+    p = jnp.eye(s, dtype=q.dtype)[None] + q / q_unif[:, None, None]
+    qt = q_unif * delta  # [B]
+    # w_k = e^{-qt} (qt)^k / k!, accumulated iteratively for stability.
+    a = jnp.zeros_like(q)
+    pk = jnp.broadcast_to(jnp.eye(s, dtype=q.dtype)[None], q.shape)
+    w = jnp.exp(-qt)  # w_0
+    for k in range(k_terms):
+        a = a + w[:, None, None] * pk
+        pk = jnp.einsum("bst,btu->bsu", pk, p)
+        w = w * qt / (k + 1)
+    return a + w[:, None, None] * pk

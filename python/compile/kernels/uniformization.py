@@ -1,0 +1,97 @@
+"""Layer-1 Pallas kernel: batched matrix-power (squaring) chain.
+
+The analytical CTMC baseline computes the transient distribution pi(T) of a
+per-server reliability Markov chain by scaling-and-squaring:
+
+    A_0   = expm(Q * Delta)          (short uniformized Taylor series, L2)
+    A_i+1 = A_i @ A_i                (this kernel, m static steps)
+    pi(2^i * Delta) = pi0 @ A_i      (dyadic capture, this kernel)
+
+so that with Delta = T / 2^m the final capture is exactly pi(T).  The
+batched [B, S, S] squaring chain is the compute hot spot of the analytical
+sweep pre-screener; it is expressed here as a Pallas kernel so the whole
+estimator lowers into one HLO module.
+
+TPU adaptation (DESIGN.md SS Hardware-Adaptation): the chain is rank-S
+matmuls with S padded from 7 live states to 8 lanes; the grid partitions the
+batch dimension so each step holds one [BT, 8, 8] tile set in VMEM
+(~BT*576 B -- VMEM-resident trivially; the roofline is MXU-rank-bound and
+documented rather than inflated).  interpret=True everywhere: the CPU PJRT
+client cannot run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Number of padded CTMC states (7 live + 1 pad lane).
+STATES = 8
+# Default number of squaring steps: T = Delta * 2**M_STEPS.
+M_STEPS = 16
+# Default batch tile for the Pallas grid.
+BLOCK_B = 8
+
+
+def _squaring_kernel(m_steps: int, a_ref, v0_ref, caps_ref):
+    """One grid step: squaring chain with dyadic captures for a batch tile.
+
+    a_ref    : [BT, S, S]  base matrix A_0 = expm(Q Delta)
+    v0_ref   : [BT, S]     initial distribution pi0
+    caps_ref : [BT, m+1, S] output; caps[:, i] = pi0 @ A_0^(2^i)
+    """
+    a = a_ref[...]
+    v0 = v0_ref[...]
+    for i in range(m_steps):
+        # pi(Delta * 2^i) = pi0 @ A_i
+        caps_ref[:, i, :] = jnp.einsum(
+            "bs,bst->bt", v0, a, preferred_element_type=jnp.float32
+        )
+        # A_{i+1} = A_i @ A_i  (batched 8x8 matmul -- the MXU hot spot)
+        a = jnp.einsum("bst,btu->bsu", a, a, preferred_element_type=jnp.float32)
+    # Final capture: pi(Delta * 2^m) = pi(T).
+    caps_ref[:, m_steps, :] = jnp.einsum(
+        "bs,bst->bt", v0, a, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("m_steps", "block_b"))
+def dyadic_transients(
+    a0: jax.Array,
+    pi0: jax.Array,
+    *,
+    m_steps: int = M_STEPS,
+    block_b: int = BLOCK_B,
+) -> jax.Array:
+    """Batched dyadic transient distributions via the Pallas squaring kernel.
+
+    Args:
+      a0:  [B, S, S] float32, one-step transition matrix expm(Q Delta).
+      pi0: [B, S]    float32, initial distribution.
+      m_steps: number of squarings (static).
+      block_b: batch tile size for the grid (static; must divide B).
+
+    Returns:
+      caps [B, m_steps + 1, S]: caps[:, i] = pi0 @ a0^(2^i); the last entry
+      is pi at the full horizon T = Delta * 2^m_steps.
+    """
+    b, s, s2 = a0.shape
+    assert s == s2 == STATES, f"expected padded S={STATES}, got {a0.shape}"
+    assert pi0.shape == (b, s)
+    assert b % block_b == 0, f"batch {b} not a multiple of tile {block_b}"
+
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_squaring_kernel, m_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, s, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, m_steps + 1, s), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m_steps + 1, s), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(a0, pi0)

@@ -1,0 +1,263 @@
+"""Layer-2 JAX model: batched analytical CTMC reliability estimator.
+
+This is the paper's *analytical comparator* (AIReSim SS II-C contrasts DES
+against Markov-model analysis [Trivedi 2001]) implemented as a real
+component: the Rust coordinator uses the AOT-compiled artifact both for
+sweep pre-screening and as a cross-check on DES means.
+
+Per-server CTMC over STATES = 8 padded lanes (7 live states):
+
+    0 GoodRun    : running, no latent systematic defect
+    1 BadRun     : running, latent systematic defect (elevated rate)
+    2 AutoRepG   : automated repair, server is good
+    3 AutoRepB   : automated repair, server is bad
+    4 ManRepG    : manual repair, server is good
+    5 ManRepB    : manual repair, server is bad
+    6 Retired    : absorbing (retirement policy; rate 0 at Table-I defaults)
+    7 (pad lane) : unreachable, kept for MXU-friendly 8x8 tiles
+
+Transitions (rates per minute). Every failure goes to automated repair
+first; with probability (1 - p_auto) the automated stage cannot resolve it
+and the server escalates to manual repair (serial pipeline, matching the
+Rust DES `model::repair`):
+
+    GoodRun  -> AutoRepG          lambda_r
+    BadRun   -> AutoRepB          lambda_r + lambda_s
+    AutoRepG -> GoodRun           mu_a * p_auto        (resolved by auto)
+    AutoRepG -> ManRepG           mu_a * (1 - p_auto)  (escalated)
+    AutoRepB -> GoodRun           mu_a * p_auto * (1 - p_auto_fail)
+    AutoRepB -> BadRun            mu_a * p_auto * p_auto_fail  (silent fail)
+    AutoRepB -> ManRepB           mu_a * (1 - p_auto)  (escalated)
+    ManRepG  -> GoodRun           mu_m
+    ManRepB  -> GoodRun           mu_m * (1 - p_man_fail)
+    ManRepB  -> BadRun            mu_m * p_man_fail * (1 - p_retire)
+    ManRepB  -> Retired           mu_m * p_man_fail * p_retire
+
+The transient distribution pi(t) is computed by scaling-and-squaring:
+a short uniformized Taylor series builds A0 = expm(Q * T / 2^m) (here, in
+jnp), then the Layer-1 Pallas kernel runs the m-step squaring chain with
+dyadic captures pi(T/2^m * 2^i).  From the dyadic trajectory we derive the
+time-averaged availability, the expected per-server failure rate, the
+expected number of job interruptions, and a makespan estimate
+
+    M ~= L / (1 - R*C),   R = N * rbar (job interruption rate),
+                          C = recovery + stall expectation per failure.
+
+Parameter-vector column layout (all float32; times in MINUTES, rates in
+1/minute) -- the Rust side (`analytical::columns`) mirrors this exactly:
+
+    0  lambda_r            random failure rate
+    1  lambda_s            additional systematic rate on bad servers
+    2  frac_bad            fraction of bad servers
+    3  recovery_time       job recovery time after a failure
+    4  job_size            servers required by the job (N)
+    5  job_len             failure-free job length (L)
+    6  warm_standbys       extra servers allocated to the job
+    7  p_auto              P(failure handled by automated repair)
+    8  p_auto_fail         P(automated repair fails to fix a bad server)
+    9  p_man_fail          P(manual repair fails to fix a bad server)
+    10 auto_time           mean automated repair time (1/mu_a)
+    11 man_time            mean manual repair time (1/mu_m)
+    12 host_selection_time host-selection + restart time
+    13 waiting_time        spare-pool preemption wait
+    14 working_pool        working-pool size
+    15 p_retire            P(retire | manual repair failed)   (0 at defaults)
+
+Outputs, [B, 8] float32 (`analytical::outputs` on the Rust side):
+
+    0 avail_T        P(running) at t = L
+    1 avail_avg      time-averaged P(running) over [0, L]
+    2 frac_bad_T     P(BadRun | running) at t = L
+    3 rbar           time-averaged per-server failure rate (1/min)
+    4 exp_failures   expected job interruptions over the makespan
+    5 makespan_est   estimated wall-clock job time (minutes)
+    6 overhead_frac  R*C, fraction of time lost to failures
+    7 pi_retired     P(Retired) at t = L
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.uniformization import M_STEPS, STATES, dyadic_transients
+
+# Static batch size of the AOT artifact; the Rust sweep pre-screener pads
+# its config batches to this.
+BATCH = 64
+N_PARAMS = 16
+N_OUTPUTS = 8
+# Taylor terms for the A0 series.  With m=16 squarings, q*Delta stays well
+# below 1 for every Table-I configuration, so 24 terms is beyond f32
+# precision.
+K_TERMS = 24
+
+PARAM_NAMES = (
+    "lambda_r", "lambda_s", "frac_bad", "recovery_time",
+    "job_size", "job_len", "warm_standbys", "p_auto",
+    "p_auto_fail", "p_man_fail", "auto_time", "man_time",
+    "host_selection_time", "waiting_time", "working_pool", "p_retire",
+)
+
+OUTPUT_NAMES = (
+    "avail_T", "avail_avg", "frac_bad_T", "rbar",
+    "exp_failures", "makespan_est", "overhead_frac", "pi_retired",
+)
+
+
+def build_generator(params: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Build the batched CTMC generator Q [B,S,S] and pi0 [B,S]."""
+    b = params.shape[0]
+    lam_r = params[:, 0]
+    lam_s = params[:, 1]
+    frac_bad = params[:, 2]
+    p_auto = params[:, 7]
+    p_auto_fail = params[:, 8]
+    p_man_fail = params[:, 9]
+    mu_a = 1.0 / jnp.maximum(params[:, 10], 1e-6)
+    mu_m = 1.0 / jnp.maximum(params[:, 11], 1e-6)
+    p_retire = params[:, 15]
+
+    lam_bad = lam_r + lam_s
+    q = jnp.zeros((b, STATES, STATES), dtype=jnp.float32)
+    # Off-diagonal rates (serial auto-then-manual pipeline; see docstring).
+    q = q.at[:, 0, 2].set(lam_r)
+    q = q.at[:, 1, 3].set(lam_bad)
+    q = q.at[:, 2, 0].set(mu_a * p_auto)
+    q = q.at[:, 2, 4].set(mu_a * (1.0 - p_auto))
+    q = q.at[:, 3, 0].set(mu_a * p_auto * (1.0 - p_auto_fail))
+    q = q.at[:, 3, 1].set(mu_a * p_auto * p_auto_fail)
+    q = q.at[:, 3, 5].set(mu_a * (1.0 - p_auto))
+    q = q.at[:, 4, 0].set(mu_m)
+    q = q.at[:, 5, 0].set(mu_m * (1.0 - p_man_fail))
+    q = q.at[:, 5, 1].set(mu_m * p_man_fail * (1.0 - p_retire))
+    q = q.at[:, 5, 6].set(mu_m * p_man_fail * p_retire)
+    # Diagonal = -row sum (Retired and the pad lane stay absorbing/zero).
+    row_sum = jnp.sum(q, axis=2)
+    q = q - row_sum[:, :, None] * jnp.eye(STATES, dtype=jnp.float32)[None]
+
+    pi0 = jnp.zeros((b, STATES), dtype=jnp.float32)
+    pi0 = pi0.at[:, 0].set(1.0 - frac_bad)
+    pi0 = pi0.at[:, 1].set(frac_bad)
+    return q, pi0
+
+
+def _norm_sf(z: jax.Array) -> jax.Array:
+    """Standard-normal survival function via the Abramowitz-Stegun 7.1.26
+    erf approximation (|err| < 1.5e-7).
+
+    Not `jax.scipy.stats.norm.sf`: that lowers to an `erf` HLO opcode that
+    xla_extension 0.5.1's text parser rejects.  This polynomial matches the
+    Rust mirror (`sim::dist::normal_cdf`) exactly, keeping the PJRT
+    artifact and the pure-Rust fallback bit-comparable.
+    """
+    x = z / jnp.sqrt(2.0).astype(jnp.float32)
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = ((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736) * t + 0.254829592
+    erf = sign * (1.0 - poly * t * jnp.exp(-ax * ax))
+    return 1.0 - 0.5 * (1.0 + erf)
+
+
+def _expm_uniformized(q: jax.Array, delta: jax.Array, k_terms: int = K_TERMS) -> jax.Array:
+    """A0 = expm(Q * Delta) via the uniformized Taylor series (jnp).
+
+    Kept in plain jnp: it is K small batched matmuls and lowers into the
+    same HLO module as the kernel; the hot spot (the squaring chain) lives
+    in the Pallas kernel.
+    """
+    s = q.shape[1]
+    q_unif = jnp.max(-jnp.diagonal(q, axis1=1, axis2=2), axis=1) * 1.01 + 1e-12
+    p = jnp.eye(s, dtype=q.dtype)[None] + q / q_unif[:, None, None]
+    qt = q_unif * delta
+
+    def body(k, carry):
+        a, pk, w = carry
+        a = a + w[:, None, None] * pk
+        pk = jnp.einsum("bst,btu->bsu", pk, p, preferred_element_type=jnp.float32)
+        w = w * qt / (k + 1.0)
+        return a, pk, w
+
+    a0 = jnp.zeros_like(q)
+    pk0 = jnp.broadcast_to(jnp.eye(s, dtype=q.dtype)[None], q.shape)
+    w0 = jnp.exp(-qt)
+    a, pk, w = jax.lax.fori_loop(0, k_terms, body, (a0, pk0, w0))
+    return a + w[:, None, None] * pk
+
+
+def analytic_metrics(params: jax.Array) -> jax.Array:
+    """The full batched analytical estimator.  params [B,16] -> [B,8]."""
+    lam_r = params[:, 0]
+    lam_s = params[:, 1]
+    recovery = params[:, 3]
+    job_size = params[:, 4]
+    job_len = params[:, 5]
+    warm = params[:, 6]
+    host_sel = params[:, 12]
+    waiting = params[:, 13]
+    working_pool = params[:, 14]
+
+    q, pi0 = build_generator(params)
+    horizon = jnp.maximum(job_len, 1.0)
+    delta = horizon / float(2**M_STEPS)
+    a0 = _expm_uniformized(q, delta)
+
+    # [B, m+1, S]; caps[:, i] = pi(delta * 2^i), caps[:, m] = pi(horizon).
+    caps = dyadic_transients(a0, pi0)
+
+    pi_t = caps[:, -1, :]
+    avail_t = pi_t[:, 0] + pi_t[:, 1]
+    frac_bad_t = pi_t[:, 1] / jnp.maximum(avail_t, 1e-9)
+    pi_retired = pi_t[:, 6]
+
+    # Time-average over [0, horizon] by trapezoid on the dyadic grid
+    # {0, d, 2d, 4d, ..., 2^m d}.  Segment widths: d, d, 2d, 4d, ...
+    m = M_STEPS
+    times = jnp.concatenate(
+        [jnp.zeros((1,)), 2.0 ** jnp.arange(m + 1, dtype=jnp.float32)]
+    )  # in units of delta, length m+2
+    widths = times[1:] - times[:-1]  # [m+1]
+    traj = jnp.concatenate([pi0[:, None, :], caps], axis=1)  # [B, m+2, S]
+    seg_avg = 0.5 * (traj[:, 1:, :] + traj[:, :-1, :])  # [B, m+1, S]
+    pi_avg = jnp.einsum("k,bks->bs", widths, seg_avg) / float(2**m)
+
+    avail_avg = pi_avg[:, 0] + pi_avg[:, 1]
+    # Time-averaged per-server failure (job-interruption) rate.
+    rbar = pi_avg[:, 0] * lam_r + pi_avg[:, 1] * (lam_r + lam_s)
+
+    # Job-level interruption rate: every active server's failure kills the
+    # job (SS II-A: gang semantics).
+    big_r = job_size * rbar
+    # Cost per interruption: recovery, plus host-selection when the warm
+    # standbys are exhausted, plus spare-pool waiting when the working
+    # pool's slack is exhausted.  Both exhaustion probabilities are
+    # approximated from the expected number of concurrently-unavailable
+    # servers U (M/G/inf heuristic: Poisson tail mass above the slack).
+    unavail_frac = 1.0 - avail_avg
+    u = working_pool * unavail_frac
+    slack_ws = jnp.maximum(warm, 1.0)
+    slack_wp = jnp.maximum(working_pool - job_size, 1.0)
+    # Normal approximation to the Poisson tail P(U' > slack).
+    p_hs = _norm_sf((slack_ws - u) / jnp.sqrt(jnp.maximum(u, 1e-6)))
+    p_wait = _norm_sf((slack_wp - u) / jnp.sqrt(jnp.maximum(u, 1e-6)))
+    cost = recovery + p_hs * host_sel + p_wait * waiting
+
+    # Failures only accrue while the job computes (assumption 7), and the
+    # job computes for exactly L minutes in total, so E[failures] = R*L and
+    # the makespan is L plus the per-failure costs: M = L * (1 + R*C).
+    overhead = big_r * cost
+    makespan = job_len * (1.0 + overhead)
+    exp_failures = big_r * job_len
+
+    return jnp.stack(
+        [avail_t, avail_avg, frac_bad_t, rbar,
+         exp_failures, makespan, overhead, pi_retired],
+        axis=1,
+    )
+
+
+def analytic_fn(params: jax.Array) -> tuple[jax.Array]:
+    """AOT entry point: 1-tuple so the Rust side unwraps with to_tuple1."""
+    return (analytic_metrics(params),)

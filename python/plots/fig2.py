@@ -1,0 +1,89 @@
+"""Render the paper's Figure 2 from the bench harnesses' CSV output.
+
+Build-time tooling only (matplotlib); never on the simulation path.
+
+Usage:
+    cargo bench --bench fig2a | python python/plots/fig2.py --out fig2a.png \
+        --xlabel "Recovery time (mins)"
+    # or from a saved CSV:
+    python python/plots/fig2.py --csv fig2a.csv --out fig2a.png
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import sys
+from collections import defaultdict
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+
+def read_rows(text: str):
+    """Extract the CSV block (header starts with a param name and ends with
+    ',max') from mixed bench output."""
+    lines = [l for l in text.splitlines() if l.strip()]
+    start = next(
+        i for i, l in enumerate(lines) if l.endswith(",max") and ",metric," in l
+    )
+    block = [lines[start]]
+    for l in lines[start + 1 :]:
+        if l.count(",") >= block[0].count(","):
+            block.append(l)
+        else:
+            break
+    return list(csv.DictReader(io.StringIO("\n".join(block))))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--csv", help="CSV file (default: read stdin)")
+    ap.add_argument("--out", default="fig2.png")
+    ap.add_argument("--xlabel", default="Parameter value")
+    ap.add_argument("--ylabel", default="Total training time (hours)")
+    args = ap.parse_args()
+
+    text = open(args.csv).read() if args.csv else sys.stdin.read()
+    rows = read_rows(text)
+    if not rows:
+        sys.exit("no CSV rows found")
+
+    # First column = x parameter, second = group (pool size).
+    cols = list(rows[0].keys())
+    xname, gname = cols[0], cols[1]
+    groups = defaultdict(list)  # pool -> [(x, mean, std)]
+    for r in rows:
+        groups[r[gname]].append((float(r[xname]), float(r["mean"]), float(r["std"])))
+
+    fig, ax = plt.subplots(figsize=(7, 4))
+    xs = sorted({float(r[xname]) for r in rows})
+    n_groups = len(groups)
+    width = 0.8 / n_groups
+    for gi, (pool, pts) in enumerate(sorted(groups.items(), key=lambda kv: float(kv[0]))):
+        pts.sort()
+        offs = [xs.index(x) + (gi - n_groups / 2 + 0.5) * width for x, _, _ in pts]
+        ax.bar(
+            offs,
+            [m for _, m, _ in pts],
+            width=width,
+            yerr=[s for _, _, s in pts],
+            capsize=2,
+            label=f"{gname}={pool}",
+        )
+    ax.set_xticks(range(len(xs)))
+    ax.set_xticklabels([f"{x:g}" for x in xs])
+    ax.set_xlabel(args.xlabel)
+    ax.set_ylabel(args.ylabel)
+    ax.legend(fontsize=8)
+    ax.set_title(f"Training time vs ({xname}, {gname})")
+    fig.tight_layout()
+    fig.savefig(args.out, dpi=150)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""AOT lowering smoke: the artifact must be parseable HLO text with the
+contracted interface (one f32[64,16] param, a 1-tuple f32[64,8] result)."""
+
+import jax
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_lowering_produces_hlo_text():
+    text = aot.lower_analytic()
+    assert "HloModule" in text
+    # Entry signature carries the contracted shapes.
+    assert f"f32[{model.BATCH},{model.N_PARAMS}]" in text
+    assert f"f32[{model.BATCH},{model.N_OUTPUTS}]" in text
+    # Pallas must have lowered via interpret=True: no Mosaic custom-calls.
+    assert "mosaic" not in text.lower()
+
+
+def test_lowering_is_deterministic():
+    assert aot.lower_analytic() == aot.lower_analytic()

@@ -1,0 +1,48 @@
+"""Cross-language interface contract: the constants the Rust side mirrors
+(`rust/src/analytical/mod.rs`) must match the Python definitions, and the
+in-graph special functions must match their SciPy references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+import pathlib
+
+RUST_ANALYTICAL = str(
+    pathlib.Path(__file__).resolve().parents[2] / "rust" / "src" / "analytical" / "mod.rs"
+)
+
+
+def test_param_names_mirrored_in_rust():
+    src = open(RUST_ANALYTICAL).read()
+    for name in model.PARAM_NAMES:
+        assert f'"{name}"' in src, f"param {name} missing from Rust mirror"
+    for name in model.OUTPUT_NAMES:
+        assert f'"{name}"' in src, f"output {name} missing from Rust mirror"
+
+
+def test_rust_mirror_constants():
+    src = open(RUST_ANALYTICAL).read()
+    assert f"STATES: usize = {model.analytic_metrics.__globals__['STATES']}" in src
+    assert "M_STEPS: usize = 16" in src
+    assert f"K_TERMS: usize = {model.K_TERMS}" in src
+
+
+def test_norm_sf_matches_scipy():
+    import scipy.stats
+
+    z = jnp.asarray(np.linspace(-6, 6, 101, dtype=np.float32))
+    got = np.asarray(model._norm_sf(z))
+    want = scipy.stats.norm.sf(np.asarray(z, dtype=np.float64))
+    np.testing.assert_allclose(got, want, atol=2e-7)
+
+
+def test_batch_padding_constants():
+    assert model.BATCH % 8 == 0, "batch must tile by BLOCK_B"
+    assert model.N_PARAMS == len(model.PARAM_NAMES)
+    assert model.N_OUTPUTS == len(model.OUTPUT_NAMES)

@@ -1,0 +1,113 @@
+"""Pallas kernel vs pure-jnp oracle -- the core L1 correctness signal.
+
+Hypothesis sweeps batch sizes, tile sizes, squaring depths, and matrix
+contents (stochastic matrices as the kernel sees in production, plus
+general small matrices) and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.uniformization import STATES, dyadic_transients
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_stochastic(rng: np.random.Generator, b: int) -> np.ndarray:
+    """Random row-stochastic [b, S, S] matrices (what production feeds)."""
+    raw = rng.exponential(1.0, size=(b, STATES, STATES)).astype(np.float32)
+    return raw / raw.sum(axis=2, keepdims=True)
+
+
+def random_dist(rng: np.random.Generator, b: int) -> np.ndarray:
+    raw = rng.exponential(1.0, size=(b, STATES)).astype(np.float32)
+    return raw / raw.sum(axis=1, keepdims=True)
+
+
+def test_kernel_matches_ref_defaults():
+    rng = np.random.default_rng(0)
+    a0 = jnp.asarray(random_stochastic(rng, 64))
+    pi0 = jnp.asarray(random_dist(rng, 64))
+    got = dyadic_transients(a0, pi0)
+    want = ref.dyadic_transients_ref(a0, pi0, 16)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_tiles=st.integers(min_value=1, max_value=6),
+    block_b=st.sampled_from([1, 2, 4, 8]),
+    m_steps=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_swept(b_tiles, block_b, m_steps, seed):
+    b = b_tiles * block_b
+    rng = np.random.default_rng(seed)
+    a0 = jnp.asarray(random_stochastic(rng, b))
+    pi0 = jnp.asarray(random_dist(rng, b))
+    got = dyadic_transients(a0, pi0, m_steps=m_steps, block_b=block_b)
+    want = ref.dyadic_transients_ref(a0, pi0, m_steps)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-6)
+
+
+def test_kernel_identity_matrix_fixed_point():
+    """pi0 @ I^(2^i) == pi0 at every capture."""
+    b = 8
+    a0 = jnp.broadcast_to(jnp.eye(STATES, dtype=jnp.float32)[None], (b, STATES, STATES))
+    pi0 = jnp.asarray(random_dist(np.random.default_rng(1), b))
+    caps = dyadic_transients(a0, pi0, m_steps=8, block_b=4)
+    for i in range(9):
+        np.testing.assert_allclose(caps[:, i, :], pi0, rtol=1e-6)
+
+
+def test_kernel_preserves_probability_mass():
+    """Row-stochastic A0 => every capture is a distribution."""
+    rng = np.random.default_rng(2)
+    a0 = jnp.asarray(random_stochastic(rng, 16))
+    pi0 = jnp.asarray(random_dist(rng, 16))
+    caps = dyadic_transients(a0, pi0, m_steps=10, block_b=8)
+    np.testing.assert_allclose(np.sum(np.asarray(caps), axis=2), 1.0, rtol=1e-4)
+    assert np.all(np.asarray(caps) >= -1e-6)
+
+
+def test_kernel_permutation_matrix_cycles():
+    """A cyclic permutation of period 2 alternates under squaring: every
+    capture after the first squaring is the identity action."""
+    perm = np.eye(STATES, dtype=np.float32)
+    # Swap lanes 0 and 1 -> period-2 permutation.
+    perm[[0, 1]] = perm[[1, 0]]
+    a0 = jnp.broadcast_to(jnp.asarray(perm)[None], (8, STATES, STATES))
+    pi0 = jnp.zeros((8, STATES), dtype=jnp.float32).at[:, 0].set(1.0)
+    caps = dyadic_transients(a0, pi0, m_steps=6, block_b=8)
+    # capture 0 = pi0 @ P (swapped); captures i>=1 use P^(2^i) = I.
+    assert np.allclose(caps[:, 0, 1], 1.0)
+    for i in range(1, 7):
+        np.testing.assert_allclose(caps[:, i, 0], 1.0, rtol=1e-6)
+
+
+def test_kernel_rejects_bad_batch():
+    a0 = jnp.zeros((6, STATES, STATES), dtype=jnp.float32)
+    pi0 = jnp.zeros((6, STATES), dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        dyadic_transients(a0, pi0, block_b=4)
+
+
+def test_expm_series_matches_scipy():
+    """Uniformized series (the jnp path the model uses) vs dense expm."""
+    import scipy.linalg
+
+    rng = np.random.default_rng(3)
+    b = 8
+    q = rng.exponential(0.3, size=(b, STATES, STATES)).astype(np.float32)
+    for i in range(b):
+        np.fill_diagonal(q[i], 0.0)
+        q[i] -= np.diag(q[i].sum(axis=1))
+    delta = jnp.asarray(rng.uniform(0.05, 1.5, size=b).astype(np.float32))
+    got = np.asarray(ref.expm_series_ref(jnp.asarray(q), delta, 40))
+    for i in range(b):
+        want = scipy.linalg.expm(q[i].astype(np.float64) * float(delta[i]))
+        np.testing.assert_allclose(got[i], want, rtol=1e-3, atol=1e-5)

@@ -1,0 +1,149 @@
+"""L2 analytical-model sanity: generator structure, limit behaviours,
+monotonicity in the paper's two sensitive knobs (recovery, waiting)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+MIN_PER_DAY = 24.0 * 60.0
+
+
+def table1_defaults(**overrides) -> np.ndarray:
+    """One Table-I default parameter vector (times in minutes)."""
+    p = {
+        "lambda_r": 0.01 / MIN_PER_DAY,
+        "lambda_s": 5 * 0.01 / MIN_PER_DAY,
+        "frac_bad": 0.15,
+        "recovery_time": 20.0,
+        "job_size": 4096.0,
+        "job_len": 256.0 * MIN_PER_DAY,
+        "warm_standbys": 16.0,
+        "p_auto": 0.80,
+        "p_auto_fail": 0.40,
+        "p_man_fail": 0.20,
+        "auto_time": 120.0,
+        "man_time": 2.0 * MIN_PER_DAY,
+        "host_selection_time": 3.0,
+        "waiting_time": 20.0,
+        "working_pool": 4160.0,
+        "p_retire": 0.0,
+    }
+    p.update(overrides)
+    return np.array([p[n] for n in model.PARAM_NAMES], dtype=np.float32)
+
+
+def batch_of(vectors) -> jnp.ndarray:
+    """Pad a list of param vectors to the static artifact batch."""
+    arr = np.stack(vectors)
+    pad = model.BATCH - arr.shape[0]
+    assert pad >= 0
+    if pad:
+        arr = np.concatenate([arr, np.repeat(arr[-1:], pad, axis=0)])
+    return jnp.asarray(arr)
+
+
+def run(vectors) -> np.ndarray:
+    out = model.analytic_metrics(batch_of(vectors))
+    return np.asarray(out)[: len(vectors)]
+
+
+def test_generator_rows_sum_to_zero():
+    q, pi0 = model.build_generator(batch_of([table1_defaults()]))
+    np.testing.assert_allclose(np.asarray(q).sum(axis=2), 0.0, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(pi0).sum(axis=1), 1.0, rtol=1e-6)
+
+
+def test_generator_respects_frac_bad():
+    q, pi0 = model.build_generator(batch_of([table1_defaults(frac_bad=0.25)]))
+    assert np.isclose(pi0[0, 1], 0.25, rtol=1e-6)
+    assert np.isclose(pi0[0, 0], 0.75, rtol=1e-6)
+
+
+def test_pad_lane_unreachable():
+    q, pi0 = model.build_generator(batch_of([table1_defaults()]))
+    q = np.asarray(q)
+    assert np.all(q[:, :, 7] == 0.0) and np.all(q[:, 7, :] == 0.0)
+
+
+def test_zero_failure_rate_is_failure_free():
+    out = run([table1_defaults(lambda_r=0.0, lambda_s=0.0)])
+    idx = {n: i for i, n in enumerate(model.OUTPUT_NAMES)}
+    assert np.isclose(out[0, idx["avail_T"]], 1.0, atol=1e-5)
+    assert np.isclose(out[0, idx["exp_failures"]], 0.0, atol=1e-3)
+    # Makespan == failure-free job length.
+    assert np.isclose(out[0, idx["makespan_est"]], 256.0 * MIN_PER_DAY, rtol=1e-5)
+
+
+def test_makespan_increases_with_recovery_time():
+    """Paper Fig 2(a): training time grows with recovery time."""
+    outs = run([table1_defaults(recovery_time=r) for r in (10.0, 20.0, 30.0)])
+    makespans = outs[:, list(model.OUTPUT_NAMES).index("makespan_est")]
+    assert makespans[0] < makespans[1] < makespans[2]
+
+
+def test_makespan_increases_with_failure_rate():
+    outs = run(
+        [table1_defaults(lambda_r=f / MIN_PER_DAY, lambda_s=5 * f / MIN_PER_DAY)
+         for f in (0.001, 0.002, 0.005, 0.01)]
+    )
+    m = outs[:, list(model.OUTPUT_NAMES).index("makespan_est")]
+    assert np.all(np.diff(m) > 0)
+
+
+def test_makespan_identity():
+    """makespan = job_len * (1 + overhead) exactly (failures accrue only
+    during the L compute minutes, assumption 7)."""
+    out = run([table1_defaults(), table1_defaults(recovery_time=30.0)])
+    idx = {n: i for i, n in enumerate(model.OUTPUT_NAMES)}
+    for row in out:
+        want = 256.0 * MIN_PER_DAY * (1.0 + row[idx["overhead_frac"]])
+        assert np.isclose(row[idx["makespan_est"]], want, rtol=1e-5)
+
+
+def test_waiting_time_effect_strongest_at_min_slack():
+    """Paper Fig 2(b): waiting-time sensitivity concentrates where the
+    working pool has no slack beyond the warm standbys."""
+    idx = list(model.OUTPUT_NAMES).index("makespan_est")
+    tight = run([table1_defaults(working_pool=4112.0, waiting_time=w)
+                 for w in (10.0, 30.0)])
+    loose = run([table1_defaults(working_pool=4192.0, waiting_time=w)
+                 for w in (10.0, 30.0)])
+    d_tight = tight[1, idx] - tight[0, idx]
+    d_loose = loose[1, idx] - loose[0, idx]
+    assert d_tight >= d_loose - 1e-3
+
+
+def test_transients_are_distributions():
+    q, pi0 = model.build_generator(batch_of([table1_defaults()]))
+    horizon = 256.0 * MIN_PER_DAY
+    delta = jnp.full((model.BATCH,), horizon / 2.0**16, dtype=jnp.float32)
+    a0 = ref.expm_series_ref(q, delta, 30)
+    # Row-stochastic base matrix.
+    np.testing.assert_allclose(np.asarray(a0).sum(axis=2)[:, :7], 1.0, rtol=1e-4)
+
+
+def test_retirement_drains_mass():
+    out = run([table1_defaults(p_retire=0.5, p_man_fail=0.5,
+                               lambda_s=50 * 0.01 / MIN_PER_DAY)])
+    idx = {n: i for i, n in enumerate(model.OUTPUT_NAMES)}
+    assert out[0, idx["pi_retired"]] > 0.01
+    out0 = run([table1_defaults(p_retire=0.0)])
+    assert out0[0, idx["pi_retired"]] < 1e-6
+
+
+def test_avail_avg_below_one_with_failures():
+    out = run([table1_defaults()])
+    idx = {n: i for i, n in enumerate(model.OUTPUT_NAMES)}
+    assert 0.9 < out[0, idx["avail_avg"]] < 1.0
+    assert 0.0 < out[0, idx["rbar"]] < 1e-3
+
+
+def test_param_names_match_columns():
+    assert len(model.PARAM_NAMES) == model.N_PARAMS
+    assert len(model.OUTPUT_NAMES) == model.N_OUTPUTS

@@ -1,0 +1,116 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. Retirement policy (§II-B): threshold sweep under systematic pressure
+//!    with unreliable repairs — when does retiring beat re-repairing?
+//! 2. Finite repair-shop capacity (extension knob): queueing effects as
+//!    technician count shrinks.
+//! 3. Host-selection policy: FirstFit (LIFO) vs Random placement.
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+mod common;
+
+use airesim::config::Params;
+use airesim::model::cluster::Simulation;
+use airesim::model::scheduler::SelectionPolicy;
+use airesim::sim::rng::Rng;
+use airesim::stats::Summary;
+use common::{bench_reps, header};
+
+/// High-systematic-pressure base: repairs rarely fix the defect, so bad
+/// servers keep cycling — the regime where retirement should matter.
+fn pressure_params() -> Params {
+    let mut p = Params::table1_defaults();
+    p.systematic_fraction = 0.25;
+    p.systematic_failure_rate = 20.0 * p.random_failure_rate;
+    p.auto_repair_fail_prob = 0.9;
+    p.manual_repair_fail_prob = 0.8;
+    p.job_len = 64.0 * 1440.0; // 64 days: keeps the bench quick
+    p
+}
+
+fn run_mean(p: &Params, reps: usize, f: impl Fn(&airesim::model::RunOutputs) -> f64) -> Summary {
+    let vals: Vec<f64> = (0..reps)
+        .map(|r| f(&Simulation::with_rng(p, Rng::derived(3, &[r as u64])).run()))
+        .collect();
+    Summary::from_values(&vals).unwrap()
+}
+
+fn main() {
+    let reps = bench_reps(5);
+
+    header(&format!("Ablation 1: retirement threshold ({reps} reps)"));
+    println!(
+        "{:>10} {:>14} {:>12} {:>12} {:>12}",
+        "threshold", "makespan(h)", "failures", "retired", "preempts"
+    );
+    for threshold in [0u32, 2, 3, 5, 8] {
+        let mut p = pressure_params();
+        p.retirement_threshold = threshold;
+        p.retirement_window = 14.0 * 1440.0;
+        let mk = run_mean(&p, reps, |o| o.makespan / 60.0);
+        let fl = run_mean(&p, reps, |o| o.failures_total as f64);
+        let rt = run_mean(&p, reps, |o| o.retirements as f64);
+        let pr = run_mean(&p, reps, |o| o.preemptions as f64);
+        println!(
+            "{:>10} {:>14.1} {:>12.0} {:>12.0} {:>12.0}",
+            threshold, mk.mean, fl.mean, rt.mean, pr.mean
+        );
+    }
+    println!(
+        "observed shape: aggressive thresholds (2-3) retire hundreds of servers,\n\
+         exhaust the spare pool, and stall the job to the horizon — the paper's\n\
+         SSII-B caveat (\"reducing the cluster's capacity\") made concrete. A high\n\
+         threshold (5) trims repeat offenders without the capacity collapse;\n\
+         retirement is only safe when the retirement budget fits the spare pool."
+    );
+
+    header(&format!("Ablation 2: manual repair-shop capacity ({reps} reps)"));
+    println!(
+        "{:>10} {:>14} {:>12} {:>12}",
+        "capacity", "makespan(h)", "failures", "stall(min)"
+    );
+    for cap in [0u32, 64, 16, 4, 1] {
+        let mut p = pressure_params();
+        p.manual_repair_capacity = cap;
+        let mk = run_mean(&p, reps, |o| o.makespan / 60.0);
+        let fl = run_mean(&p, reps, |o| o.failures_total as f64);
+        let st = run_mean(&p, reps, |o| o.stall_time);
+        println!(
+            "{:>10} {:>14.1} {:>12.0} {:>12.1}",
+            if cap == 0 { "unlimited".to_string() } else { cap.to_string() },
+            mk.mean,
+            fl.mean,
+            st.mean
+        );
+    }
+    println!(
+        "expected shape: below some technician count, repair queueing starves the\n\
+         working pool and stalls appear."
+    );
+
+    header(&format!("Ablation 3: host-selection policy ({reps} reps)"));
+    for (name, policy) in [
+        ("first-fit (LIFO)", SelectionPolicy::FirstFit),
+        ("random", SelectionPolicy::Random),
+    ] {
+        let p = pressure_params();
+        let vals: Vec<f64> = (0..reps)
+            .map(|r| {
+                Simulation::with_rng(&p, Rng::derived(9, &[r as u64]))
+                    .with_policy(policy)
+                    .run()
+                    .makespan
+                    / 60.0
+            })
+            .collect();
+        let s = Summary::from_values(&vals).unwrap();
+        println!("{name:<18}: {:>10.1} ± {:.1} h", s.mean, s.ci95_halfwidth());
+    }
+    println!(
+        "expected shape: with i.i.d. failure identities the policies tie; random\n\
+         placement only matters once regeneration correlates badness with history."
+    );
+}

@@ -1,0 +1,117 @@
+//! Bench: the analytical baseline (§II-C DES-vs-analytical comparison).
+//!
+//! Measures (1) PJRT artifact batch latency/throughput, (2) the pure-Rust
+//! mirror's latency, (3) a DES run for scale, and (4) ranking agreement
+//! between the analytical screen and the DES on the Fig 2(a) grid — the
+//! property that makes analytical pre-screening of large grids sound.
+//!
+//! ```bash
+//! cargo bench --bench analytic
+//! ```
+
+mod common;
+
+use airesim::analytical;
+use airesim::config::Params;
+use airesim::model::cluster::Simulation;
+use airesim::runtime::{AnalyticModel, BATCH};
+use airesim::sim::rng::Rng;
+use common::{header, median_time, timed};
+
+fn main() {
+    header("Analytical baseline: PJRT artifact vs pure-Rust mirror vs DES");
+
+    // Grid of 64 configs (one artifact batch).
+    let mut configs = Vec::new();
+    for i in 0..BATCH {
+        let mut p = Params::table1_defaults();
+        p.recovery_time = 10.0 + (i % 8) as f64 * 2.5;
+        p.working_pool = 4112 + 16 * (i as u32 / 8 % 8);
+        configs.push(p);
+    }
+
+    // Pure-Rust mirror.
+    let t_rust = median_time(5, || {
+        for p in &configs {
+            std::hint::black_box(analytical::analyze(p));
+        }
+    });
+    println!(
+        "pure-Rust mirror : {:>9.3} ms / 64-config batch ({:.0} configs/s)",
+        t_rust * 1e3,
+        64.0 / t_rust
+    );
+
+    // PJRT artifact.
+    let path = AnalyticModel::default_path();
+    if std::path::Path::new(path).exists() {
+        let (model, t_load) = timed(|| AnalyticModel::load(path).expect("load artifact"));
+        println!("PJRT load+compile: {:>9.1} ms (once per process)", t_load * 1e3);
+        let t_pjrt = median_time(5, || {
+            std::hint::black_box(model.analyze_many(&configs).expect("exec"));
+        });
+        println!(
+            "PJRT artifact    : {:>9.3} ms / 64-config batch ({:.0} configs/s, platform {})",
+            t_pjrt * 1e3,
+            64.0 / t_pjrt,
+            model.platform()
+        );
+
+        // Ranking agreement on the Fig 2(a) grid.
+        let mut grid = Vec::new();
+        for rec in [10.0, 20.0, 30.0] {
+            for wp in [4112u32, 4160, 4192] {
+                let mut p = Params::table1_defaults();
+                p.recovery_time = rec;
+                p.working_pool = wp;
+                grid.push(p);
+            }
+        }
+        let ana = model.analyze_many(&grid).expect("exec");
+        let des: Vec<f64> = grid
+            .iter()
+            .map(|p| {
+                (0..3)
+                    .map(|r| Simulation::with_rng(p, Rng::derived(13, &[r])).run().makespan)
+                    .sum::<f64>()
+                    / 3.0
+            })
+            .collect();
+        let mut rank_ana: Vec<usize> = (0..grid.len()).collect();
+        rank_ana.sort_by(|&a, &b| ana[a].makespan_est.partial_cmp(&ana[b].makespan_est).unwrap());
+        let mut rank_des: Vec<usize> = (0..grid.len()).collect();
+        rank_des.sort_by(|&a, &b| des[a].partial_cmp(&des[b]).unwrap());
+        // Spearman correlation of the two rankings.
+        let n = grid.len() as f64;
+        let mut pos_ana = vec![0usize; grid.len()];
+        let mut pos_des = vec![0usize; grid.len()];
+        for (r, &i) in rank_ana.iter().enumerate() {
+            pos_ana[i] = r;
+        }
+        for (r, &i) in rank_des.iter().enumerate() {
+            pos_des[i] = r;
+        }
+        let d2: f64 = (0..grid.len())
+            .map(|i| {
+                let d = pos_ana[i] as f64 - pos_des[i] as f64;
+                d * d
+            })
+            .sum();
+        let rho = 1.0 - 6.0 * d2 / (n * (n * n - 1.0));
+        println!("DES-vs-analytic rank correlation (Spearman ρ) on Fig 2(a) grid: {rho:.3}");
+    } else {
+        println!("(PJRT artifact missing — run `make artifacts` first)");
+    }
+
+    // One DES run for scale.
+    let p = Params::table1_defaults();
+    let (_, t_des) = timed(|| Simulation::new(&p, 42).run());
+    println!(
+        "one DES run      : {:>9.1} ms (256-day 4096-server job)",
+        t_des * 1e3
+    );
+    println!(
+        "screening speedup: analytical ≈ {:.0}× faster than one DES replication",
+        t_des / (t_rust / 64.0)
+    );
+}

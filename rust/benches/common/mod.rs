@@ -1,0 +1,39 @@
+//! Shared measurement kit for the bench harnesses (criterion is not in
+//! the offline vendor set; these benches are `harness = false` binaries
+//! that print the paper's tables/series plus wall-clock timings).
+
+#![allow(dead_code)] // each bench uses a subset of these helpers
+
+use std::time::Instant;
+
+/// Replications per sweep point (override: AIRESIM_BENCH_REPS).
+pub fn bench_reps(default: usize) -> usize {
+    std::env::var("AIRESIM_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Median-of-N timing for micro-measurements.
+pub fn median_time(n: usize, mut f: impl FnMut()) -> f64 {
+    let mut times: Vec<f64> = (0..n)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[n / 2]
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,93 @@
+//! Bench: DES core throughput — the §Perf numbers for Layer 3.
+//!
+//! * event-queue micro: schedule+pop ops/s at several heap depths
+//! * end-to-end events/s on the Table-I run
+//! * gang fast path vs per-server failure clocks (the headline
+//!   optimization recorded in EXPERIMENTS.md §Perf)
+//!
+//! ```bash
+//! cargo bench --bench engine
+//! ```
+
+mod common;
+
+use airesim::config::Params;
+use airesim::model::cluster::Simulation;
+use airesim::sim::engine::Engine;
+use airesim::sim::rng::Rng;
+use common::{header, median_time, timed};
+
+fn main() {
+    header("Event-queue micro: schedule+pop throughput");
+    for depth in [1_000usize, 10_000, 100_000] {
+        let ops = 1_000_000usize;
+        let t = median_time(3, || {
+            let mut e: Engine<u64> = Engine::with_capacity(depth);
+            let mut rng = Rng::new(1);
+            // Pre-fill to the target depth.
+            for i in 0..depth {
+                e.schedule_at(rng.next_f64() * 1e6, i as u64);
+            }
+            // Steady-state churn: pop one, push one.
+            for i in 0..ops {
+                let (t, _) = e.pop().unwrap();
+                e.schedule_at(t + rng.next_f64() * 1e3, i as u64);
+            }
+        });
+        println!(
+            "depth {depth:>7}: {:>6.1} M ops/s",
+            ops as f64 / t / 1e6
+        );
+    }
+
+    header("End-to-end: Table-I default run");
+    let p = Params::table1_defaults();
+    let (out, secs) = timed(|| Simulation::new(&p, 42).run());
+    println!(
+        "gang fast path   : {:>8.1} ms, {} events ({:.2} M events/s), {} failures",
+        secs * 1e3,
+        out.events_delivered,
+        out.events_delivered as f64 / secs / 1e6,
+        out.failures_total
+    );
+
+    let (out2, secs2) = timed(|| {
+        Simulation::new(&p, 42).with_per_server_clocks().run()
+    });
+    println!(
+        "per-server clocks: {:>8.1} ms, {} events ({:.2} M events/s), {} failures",
+        secs2 * 1e3,
+        out2.events_delivered,
+        out2.events_delivered as f64 / secs2 / 1e6,
+        out2.failures_total
+    );
+    println!(
+        "fast-path speedup: {:.1}× wall-clock, {:.0}× fewer events",
+        secs2 / secs,
+        out2.events_delivered as f64 / out.events_delivered as f64
+    );
+
+    header("Sweep scaling across threads (12-point Fig-2a grid, 2 reps)");
+    use airesim::sweep::{run_sweep, Sweep};
+    let sweep = Sweep::two_way(
+        "scal",
+        "recovery_time",
+        &[10.0, 20.0, 30.0],
+        "working_pool",
+        &[4112.0, 4128.0, 4160.0, 4192.0],
+        2,
+        42,
+    );
+    let mut t1 = 0.0;
+    for threads in [1usize, 2, 4, 8] {
+        let (_, t) = timed(|| run_sweep(&p, &sweep, threads));
+        if threads == 1 {
+            t1 = t;
+        }
+        println!(
+            "threads {threads}: {:>6.2} s  (speedup {:.2}×)",
+            t,
+            t1 / t
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! Bench: regenerate **Figure 2(a)** — total training time (hours) vs
+//! recovery time {10, 20, 30} × working pool {4112, 4128, 4160, 4192},
+//! Table-I defaults otherwise. Prints the paper's series plus timing.
+//!
+//! ```bash
+//! cargo bench --bench fig2a            # 5 replications/point
+//! AIRESIM_BENCH_REPS=30 cargo bench --bench fig2a
+//! ```
+
+mod common;
+
+use airesim::config::Params;
+use airesim::report;
+use airesim::sweep::{run_sweep, Sweep};
+use common::{bench_reps, header, timed};
+
+fn main() {
+    let reps = bench_reps(5);
+    header(&format!("Figure 2(a): recovery time × working pool ({reps} reps/point)"));
+
+    let base = Params::table1_defaults();
+    let sweep = Sweep::two_way(
+        "Fig 2(a)",
+        "recovery_time",
+        &[10.0, 20.0, 30.0],
+        "working_pool",
+        &[4112.0, 4128.0, 4160.0, 4192.0],
+        reps,
+        42,
+    );
+    let (result, secs) = timed(|| run_sweep(&base, &sweep, 0));
+    print!("{}", report::figure_series(&result, "makespan_hours"));
+    print!("{}", report::csv(&result, "makespan_hours"));
+
+    // Paper-shape verdicts.
+    let mean = |i: usize| result.points[i].summary("makespan_hours").unwrap().mean;
+    let rec_avg: Vec<f64> =
+        (0..3).map(|x| (0..4).map(|y| mean(4 * x + y)).sum::<f64>() / 4.0).collect();
+    let monotone = rec_avg[0] < rec_avg[1] && rec_avg[1] < rec_avg[2];
+    println!(
+        "shape: training time rises with recovery time ({:.0} < {:.0} < {:.0} h): {}",
+        rec_avg[0],
+        rec_avg[1],
+        rec_avg[2],
+        if monotone { "OK" } else { "MISMATCH" }
+    );
+    let runs = sweep.points.len() * reps;
+    println!(
+        "timing: {runs} runs of a 256-day 4096-server job in {secs:.1}s ({:.0} ms/run)",
+        secs * 1000.0 / runs as f64
+    );
+}

@@ -1,0 +1,100 @@
+//! Bench: regenerate **Figure 2(b)** — total training time (hours) vs
+//! waiting time {10, 20, 30} × working pool {4112, 4128, 4160, 4192}.
+//!
+//! The paper's claim: the waiting-time effect is weaker than the
+//! recovery-time effect and concentrates where the working pool has zero
+//! slack beyond the warm standbys (pool 4112).
+//!
+//! ```bash
+//! cargo bench --bench fig2b
+//! AIRESIM_BENCH_REPS=30 cargo bench --bench fig2b
+//! ```
+
+mod common;
+
+use airesim::config::Params;
+use airesim::report;
+use airesim::sweep::{run_sweep, Sweep};
+use common::{bench_reps, header, timed};
+// (stress variant below builds its own Params)
+
+fn main() {
+    let reps = bench_reps(5);
+    header(&format!("Figure 2(b): waiting time × working pool ({reps} reps/point)"));
+
+    let base = Params::table1_defaults();
+    let sweep = Sweep::two_way(
+        "Fig 2(b)",
+        "waiting_time",
+        &[10.0, 20.0, 30.0],
+        "working_pool",
+        &[4112.0, 4128.0, 4160.0, 4192.0],
+        reps,
+        42,
+    );
+    let (result, secs) = timed(|| run_sweep(&base, &sweep, 0));
+    print!("{}", report::figure_series(&result, "makespan_hours"));
+    print!("{}", report::csv(&result, "makespan_hours"));
+
+    // Shape verdicts: (1) waiting-time slope at pool 4112 is the largest
+    // of the four pools; (2) the overall waiting spread is much smaller
+    // than Fig 2(a)'s recovery spread.
+    let mean = |x: usize, y: usize| result.points[4 * x + y].summary("makespan_hours").unwrap().mean;
+    let slope = |y: usize| mean(2, y) - mean(0, y); // wait 30 minus wait 10
+    let slopes: Vec<f64> = (0..4).map(slope).collect();
+    println!(
+        "waiting-time slope by pool: 4112:{:+.0}h 4128:{:+.0}h 4160:{:+.0}h 4192:{:+.0}h",
+        slopes[0], slopes[1], slopes[2], slopes[3]
+    );
+    let max_other = slopes[1..].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "shape: effect concentrated at minimum-slack pool 4112: {}",
+        if slopes[0] >= max_other - 1.0 { "OK" } else { "WEAK (noise-dominated at these reps)" }
+    );
+    let runs = sweep.points.len() * reps;
+    println!(
+        "timing: {runs} runs in {secs:.1}s ({:.0} ms/run)",
+        secs * 1000.0 / runs as f64
+    );
+
+    // ---- Stress variant ------------------------------------------------ //
+    // At Table-I defaults, repaired servers rejoin the job within minutes,
+    // so stalls resolve before the preemption wait elapses and the
+    // waiting-time effect sits inside the replication CI. Under repair
+    // pressure (manual-heavy, slow repairs) the spare pool is on the
+    // critical path and the paper's Fig-2(b) concentration appears clearly.
+    header(&format!("Fig 2(b) stress variant: manual-only repairs ({reps} reps/point)"));
+    let mut stress = Params::table1_defaults();
+    stress.auto_repair_prob = 0.0; // everything escalates to manual
+    stress.manual_repair_time = 1440.0; // ~44 servers out on average:
+                                        // above 4112's slack (16), below 4192's (96)
+    let sweep2 = Sweep::two_way(
+        "Fig 2(b) stress",
+        "waiting_time",
+        &[10.0, 30.0],
+        "working_pool",
+        &[4112.0, 4192.0],
+        reps,
+        43,
+    )
+    .with_crn(); // common random numbers: the difference is the signal
+    let (r2, _) = timed(|| run_sweep(&stress, &sweep2, 0));
+    print!("{}", report::figure_series(&r2, "makespan_hours"));
+    let m2 = |x: usize, y: usize| r2.points[2 * x + y].summary("makespan_hours").unwrap().mean;
+    let s_min = m2(1, 0) - m2(0, 0);
+    let s_max = m2(1, 1) - m2(0, 1);
+    let verdict = if s_max.abs() < 2.0 && s_min > s_max {
+        "concentrated at zero slack: OK (slack pool exactly flat)"
+    } else if s_min.abs() < 6.0 && s_max.abs() < 6.0 {
+        "both ≈0: repair returns rescue stalls before the preempt wait binds \
+         (expected effect ~5h ≈ 0.05%, below replication resolution — see \
+         EXPERIMENTS.md Fig 2(b) discussion)"
+    } else if s_min > s_max {
+        "concentrated at zero slack: OK"
+    } else {
+        "MISMATCH"
+    };
+    println!(
+        "stress slopes (wait 10→30): pool 4112 {s_min:+.0} h, pool 4192 {s_max:+.0} h — {verdict}"
+    );
+}

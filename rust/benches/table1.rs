@@ -1,0 +1,65 @@
+//! Bench: regenerate the full **Table I** parameter study — a one-way
+//! sweep over every row's value range (defaults elsewhere), reporting the
+//! mean training time per value and the §IV sensitivity ranking.
+//!
+//! ```bash
+//! cargo bench --bench table1
+//! AIRESIM_BENCH_REPS=10 cargo bench --bench table1
+//! ```
+
+mod common;
+
+use airesim::config::Params;
+use airesim::report;
+use airesim::sweep::{run_sweep, Sweep, SweepResult};
+use common::{bench_reps, header, timed};
+
+fn main() {
+    let reps = bench_reps(3);
+    header(&format!("Table I: one-way sweeps over every parameter ({reps} reps/point)"));
+
+    let base = Params::table1_defaults();
+    // Every row of Table I with its printed value range.
+    let axes: Vec<(&str, Vec<f64>)> = vec![
+        ("random_failure_rate",
+         vec![0.005 / 1440.0, 0.01 / 1440.0, 0.025 / 1440.0, 0.05 / 1440.0]),
+        ("systematic_rate_multiplier", vec![3.0, 5.0, 10.0]),
+        ("systematic_fraction", vec![0.1, 0.15, 0.2]),
+        ("recovery_time", vec![10.0, 20.0, 30.0]),
+        ("warm_standbys", vec![4.0, 8.0, 16.0, 32.0]),
+        ("host_selection_time", vec![1.0, 3.0, 5.0, 10.0]),
+        ("waiting_time", vec![10.0, 20.0, 30.0]),
+        ("auto_repair_prob", vec![0.70, 0.80, 0.90]),
+        ("auto_repair_fail_prob", vec![0.2, 0.4, 0.6]),
+        ("manual_repair_fail_prob", vec![0.1, 0.2, 0.3]),
+        ("auto_repair_time", vec![60.0, 120.0, 180.0]),
+        ("manual_repair_time", vec![1440.0, 2.0 * 1440.0, 3.0 * 1440.0]),
+        ("working_pool", vec![4112.0, 4128.0, 4160.0, 4192.0]),
+        ("spare_pool", vec![200.0, 300.0, 400.0]),
+        ("diagnosis_prob", vec![0.6, 0.8, 1.0]),
+    ];
+
+    let mut results: Vec<(String, SweepResult)> = Vec::new();
+    let mut total_runs = 0usize;
+    let ((), secs) = timed(|| {
+        for (name, values) in &axes {
+            let sweep = Sweep::one_way(name, name, values, reps, 42);
+            total_runs += sweep.points.len() * reps;
+            let r = run_sweep(&base, &sweep, 0);
+            print!("{}", report::text_table(&r, "makespan_hours"));
+            results.push((name.to_string(), r));
+        }
+    });
+
+    header("§IV sensitivity ranking");
+    print!("{}", report::sensitivity(&results, "makespan_hours"));
+    println!(
+        "\npaper's finding: only recovery time (and, at zero pool slack, waiting\n\
+         time) materially moves training time; everything else is flat at the\n\
+         Table I defaults. Check the spread column above against that claim."
+    );
+    println!(
+        "timing: {total_runs} runs in {secs:.1}s ({:.0} ms/run)",
+        secs * 1000.0 / total_runs as f64
+    );
+}

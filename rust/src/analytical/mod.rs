@@ -1,0 +1,385 @@
+//! Pure-Rust analytical CTMC baseline — the same mathematics as the
+//! JAX/Pallas artifact (`python/compile/model.py`), kept bit-comparable so
+//! the PJRT runtime can be cross-validated against it, and usable as a
+//! no-artifact fallback.
+//!
+//! See `model.py`'s module docstring for the state space, the serial
+//! repair pipeline rates, and the output definitions; the two must stay in
+//! lockstep (tests `tests/cross_layer.rs` enforce it numerically).
+
+use crate::config::Params;
+
+/// Number of CTMC states (7 live + 1 pad to match the artifact layout).
+pub const STATES: usize = 8;
+/// Squaring steps: horizon = delta * 2^M_STEPS (matches the kernel).
+pub const M_STEPS: usize = 16;
+/// Taylor terms for the base-step series.
+pub const K_TERMS: usize = 24;
+
+/// Parameter-vector column order — must equal `model.PARAM_NAMES`.
+pub const PARAM_NAMES: [&str; 16] = [
+    "lambda_r", "lambda_s", "frac_bad", "recovery_time",
+    "job_size", "job_len", "warm_standbys", "p_auto",
+    "p_auto_fail", "p_man_fail", "auto_time", "man_time",
+    "host_selection_time", "waiting_time", "working_pool", "p_retire",
+];
+
+/// Output column order — must equal `model.OUTPUT_NAMES`.
+pub const OUTPUT_NAMES: [&str; 8] = [
+    "avail_T", "avail_avg", "frac_bad_T", "rbar",
+    "exp_failures", "makespan_est", "overhead_frac", "pi_retired",
+];
+
+type Mat = [[f64; STATES]; STATES];
+type Vecs = [f64; STATES];
+
+/// Analytical metrics for one configuration.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AnalyticOutputs {
+    pub avail_t: f64,
+    pub avail_avg: f64,
+    pub frac_bad_t: f64,
+    pub rbar: f64,
+    pub exp_failures: f64,
+    pub makespan_est: f64,
+    pub overhead_frac: f64,
+    pub pi_retired: f64,
+}
+
+impl AnalyticOutputs {
+    pub fn to_array(self) -> [f64; 8] {
+        [
+            self.avail_t,
+            self.avail_avg,
+            self.frac_bad_t,
+            self.rbar,
+            self.exp_failures,
+            self.makespan_est,
+            self.overhead_frac,
+            self.pi_retired,
+        ]
+    }
+
+    pub fn from_array(a: &[f64]) -> Self {
+        AnalyticOutputs {
+            avail_t: a[0],
+            avail_avg: a[1],
+            frac_bad_t: a[2],
+            rbar: a[3],
+            exp_failures: a[4],
+            makespan_est: a[5],
+            overhead_frac: a[6],
+            pi_retired: a[7],
+        }
+    }
+}
+
+/// Flatten [`Params`] into the artifact's 16-column parameter vector.
+pub fn param_vector(p: &Params) -> [f64; 16] {
+    [
+        p.random_failure_rate,
+        p.systematic_failure_rate,
+        p.systematic_fraction,
+        p.recovery_time,
+        p.job_size as f64,
+        p.job_len,
+        p.warm_standbys as f64,
+        p.auto_repair_prob,
+        p.auto_repair_fail_prob,
+        p.manual_repair_fail_prob,
+        p.auto_repair_time,
+        p.manual_repair_time,
+        p.host_selection_time,
+        p.waiting_time,
+        p.working_pool as f64,
+        0.0, // p_retire: the threshold policy has no direct CTMC rate
+    ]
+}
+
+/// Build the generator matrix Q and the initial distribution pi0.
+/// Mirrors `model.build_generator` (serial auto→manual pipeline).
+pub fn build_generator(v: &[f64; 16]) -> (Mat, Vecs) {
+    let lam_r = v[0];
+    let lam_s = v[1];
+    let frac_bad = v[2];
+    let p_auto = v[7];
+    let p_auto_fail = v[8];
+    let p_man_fail = v[9];
+    let mu_a = 1.0 / v[10].max(1e-6);
+    let mu_m = 1.0 / v[11].max(1e-6);
+    let p_retire = v[15];
+    let lam_bad = lam_r + lam_s;
+
+    let mut q: Mat = [[0.0; STATES]; STATES];
+    q[0][2] = lam_r;
+    q[1][3] = lam_bad;
+    q[2][0] = mu_a * p_auto;
+    q[2][4] = mu_a * (1.0 - p_auto);
+    q[3][0] = mu_a * p_auto * (1.0 - p_auto_fail);
+    q[3][1] = mu_a * p_auto * p_auto_fail;
+    q[3][5] = mu_a * (1.0 - p_auto);
+    q[4][0] = mu_m;
+    q[5][0] = mu_m * (1.0 - p_man_fail);
+    q[5][1] = mu_m * p_man_fail * (1.0 - p_retire);
+    q[5][6] = mu_m * p_man_fail * p_retire;
+    for i in 0..STATES {
+        let row_sum: f64 = q[i].iter().sum();
+        q[i][i] -= row_sum;
+    }
+
+    let mut pi0: Vecs = [0.0; STATES];
+    pi0[0] = 1.0 - frac_bad;
+    pi0[1] = frac_bad;
+    (q, pi0)
+}
+
+fn mat_mul(a: &Mat, b: &Mat) -> Mat {
+    let mut c: Mat = [[0.0; STATES]; STATES];
+    for i in 0..STATES {
+        for k in 0..STATES {
+            let aik = a[i][k];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..STATES {
+                c[i][j] += aik * b[k][j];
+            }
+        }
+    }
+    c
+}
+
+fn vec_mat(v: &Vecs, m: &Mat) -> Vecs {
+    let mut out: Vecs = [0.0; STATES];
+    for i in 0..STATES {
+        let vi = v[i];
+        if vi == 0.0 {
+            continue;
+        }
+        for j in 0..STATES {
+            out[j] += vi * m[i][j];
+        }
+    }
+    out
+}
+
+/// expm(Q * delta) via the uniformized Taylor series (mirrors
+/// `model._expm_uniformized`).
+pub fn expm_uniformized(q: &Mat, delta: f64) -> Mat {
+    let q_unif = (0..STATES)
+        .map(|i| -q[i][i])
+        .fold(0.0f64, f64::max)
+        * 1.01
+        + 1e-12;
+    let mut p: Mat = [[0.0; STATES]; STATES];
+    for i in 0..STATES {
+        for j in 0..STATES {
+            p[i][j] = q[i][j] / q_unif + if i == j { 1.0 } else { 0.0 };
+        }
+    }
+    let qt = q_unif * delta;
+    let mut a: Mat = [[0.0; STATES]; STATES];
+    let mut pk: Mat = [[0.0; STATES]; STATES];
+    for (i, row) in pk.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    let mut w = (-qt).exp();
+    for k in 0..K_TERMS {
+        for i in 0..STATES {
+            for j in 0..STATES {
+                a[i][j] += w * pk[i][j];
+            }
+        }
+        pk = mat_mul(&pk, &p);
+        w *= qt / (k as f64 + 1.0);
+    }
+    for i in 0..STATES {
+        for j in 0..STATES {
+            a[i][j] += w * pk[i][j];
+        }
+    }
+    a
+}
+
+/// Dyadic transient captures: `caps[i] = pi0 * A^(2^i)` for i = 0..=m
+/// (the Pallas kernel's squaring chain, scalar form).
+pub fn dyadic_transients(a0: &Mat, pi0: &Vecs, m_steps: usize) -> Vec<Vecs> {
+    let mut a = *a0;
+    let mut caps = Vec::with_capacity(m_steps + 1);
+    for _ in 0..m_steps {
+        caps.push(vec_mat(pi0, &a));
+        a = mat_mul(&a, &a);
+    }
+    caps.push(vec_mat(pi0, &a));
+    caps
+}
+
+/// Standard-normal survival function (matches `jax.scipy.stats.norm.sf`).
+fn norm_sf(z: f64) -> f64 {
+    1.0 - crate::sim::dist::normal_cdf(z)
+}
+
+/// The full analytical estimator for one parameter vector — the scalar
+/// mirror of `model.analytic_metrics`.
+pub fn analytic_metrics(v: &[f64; 16]) -> AnalyticOutputs {
+    let lam_r = v[0];
+    let lam_s = v[1];
+    let recovery = v[3];
+    let job_size = v[4];
+    let job_len = v[5];
+    let warm = v[6];
+    let host_sel = v[12];
+    let waiting = v[13];
+    let working_pool = v[14];
+
+    let (q, pi0) = build_generator(v);
+    let horizon = job_len.max(1.0);
+    let delta = horizon / (1u64 << M_STEPS) as f64;
+    let a0 = expm_uniformized(&q, delta);
+    let caps = dyadic_transients(&a0, &pi0, M_STEPS);
+
+    let pi_t = caps[M_STEPS];
+    let avail_t = pi_t[0] + pi_t[1];
+    let frac_bad_t = pi_t[1] / avail_t.max(1e-9);
+    let pi_retired = pi_t[6];
+
+    // Trapezoid time-average over the dyadic grid {0, d, 2d, 4d, ...}.
+    let mut times = vec![0.0f64];
+    for i in 0..=M_STEPS {
+        times.push((1u64 << i) as f64);
+    }
+    let mut traj: Vec<Vecs> = vec![pi0];
+    traj.extend(caps.iter().copied());
+    let mut pi_avg: Vecs = [0.0; STATES];
+    for k in 0..=M_STEPS {
+        let w = times[k + 1] - times[k];
+        for s in 0..STATES {
+            pi_avg[s] += w * 0.5 * (traj[k][s] + traj[k + 1][s]);
+        }
+    }
+    let norm = (1u64 << M_STEPS) as f64;
+    for s in pi_avg.iter_mut() {
+        *s /= norm;
+    }
+
+    let avail_avg = pi_avg[0] + pi_avg[1];
+    let rbar = pi_avg[0] * lam_r + pi_avg[1] * (lam_r + lam_s);
+
+    let big_r = job_size * rbar;
+    let unavail_frac = 1.0 - avail_avg;
+    let u = working_pool * unavail_frac;
+    let slack_ws = warm.max(1.0);
+    let slack_wp = (working_pool - job_size).max(1.0);
+    let p_hs = norm_sf((slack_ws - u) / u.max(1e-6).sqrt());
+    let p_wait = norm_sf((slack_wp - u) / u.max(1e-6).sqrt());
+    let cost = recovery + p_hs * host_sel + p_wait * waiting;
+
+    // Failures only accrue while the job computes (assumption 7), and the
+    // job computes for exactly L minutes in total, so E[failures] = R*L
+    // and the makespan is L plus the per-failure costs: M = L * (1 + R*C).
+    let overhead = big_r * cost;
+    let makespan = job_len * (1.0 + overhead);
+    let exp_failures = big_r * job_len;
+
+    AnalyticOutputs {
+        avail_t,
+        avail_avg,
+        frac_bad_t,
+        rbar,
+        exp_failures,
+        makespan_est: makespan,
+        overhead_frac: overhead,
+        pi_retired,
+    }
+}
+
+/// Convenience: analytical metrics straight from [`Params`].
+pub fn analyze(p: &Params) -> AnalyticOutputs {
+    analytic_metrics(&param_vector(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_rows_sum_to_zero() {
+        let p = Params::table1_defaults();
+        let (q, pi0) = build_generator(&param_vector(&p));
+        for row in &q {
+            let s: f64 = row.iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+        assert!((pi0.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((pi0[1] - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expm_zero_delta_is_identity() {
+        let p = Params::table1_defaults();
+        let (q, _) = build_generator(&param_vector(&p));
+        let a = expm_uniformized(&q, 0.0);
+        for i in 0..STATES {
+            for j in 0..STATES {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((a[i][j] - want).abs() < 1e-9, "a[{i}][{j}]={}", a[i][j]);
+            }
+        }
+    }
+
+    #[test]
+    fn expm_rows_are_stochastic() {
+        let p = Params::table1_defaults();
+        let (q, _) = build_generator(&param_vector(&p));
+        let a = expm_uniformized(&q, 37.0);
+        for i in 0..7 {
+            let s: f64 = a[i].iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "row {i} sums to {s}");
+            for &x in &a[i] {
+                assert!(x >= -1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn transients_preserve_mass() {
+        let p = Params::table1_defaults();
+        let v = param_vector(&p);
+        let (q, pi0) = build_generator(&v);
+        let a0 = expm_uniformized(&q, p.job_len / (1u64 << M_STEPS) as f64);
+        for cap in dyadic_transients(&a0, &pi0, M_STEPS) {
+            let s: f64 = cap.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "mass {s}");
+        }
+    }
+
+    #[test]
+    fn zero_failure_rate_is_failure_free() {
+        let mut p = Params::table1_defaults();
+        p.random_failure_rate = 0.0;
+        p.systematic_failure_rate = 0.0;
+        let o = analyze(&p);
+        assert!((o.avail_t - 1.0).abs() < 1e-9);
+        assert!(o.exp_failures.abs() < 1e-6);
+        assert!((o.makespan_est - p.job_len).abs() / p.job_len < 1e-9);
+    }
+
+    #[test]
+    fn makespan_grows_with_recovery_time() {
+        let mut m = Vec::new();
+        for rec in [10.0, 20.0, 30.0] {
+            let mut p = Params::table1_defaults();
+            p.recovery_time = rec;
+            m.push(analyze(&p).makespan_est);
+        }
+        assert!(m[0] < m[1] && m[1] < m[2], "{m:?}");
+    }
+
+    #[test]
+    fn defaults_give_sane_availability() {
+        let o = analyze(&Params::table1_defaults());
+        assert!(o.avail_avg > 0.9 && o.avail_avg < 1.0, "{o:?}");
+        assert!(o.rbar > 0.0 && o.rbar < 1e-3);
+        assert!(o.makespan_est > Params::table1_defaults().job_len);
+    }
+}

@@ -1,0 +1,8 @@
+//! Configuration: the paper's input-parameter set (§III-B, Table I),
+//! YAML-subset config files, and validation.
+
+pub mod params;
+pub mod validate;
+pub mod yaml;
+
+pub use params::{DistKind, Params};

@@ -1,0 +1,404 @@
+//! The simulation parameter set — a superset of the paper's §III-B inputs
+//! with Table I defaults, plus the extension knobs the paper names in the
+//! text (retirement scoring, bad-server regeneration, preemption cost,
+//! repair-shop capacity).
+//!
+//! All times are in **minutes**, all rates in **1/minute**, matching
+//! Table I (failure rates there are written per-day and divided by 24*60).
+
+use crate::sim::dist::Dist;
+use crate::sim::MIN_PER_DAY;
+
+/// Failure inter-arrival distribution family (assumption 2: Exponential by
+/// default; LogNormal and Weibull also supported).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DistKind {
+    Exponential,
+    /// Weibull with the given shape; the scale is chosen so the mean equals
+    /// the configured 1/rate.
+    Weibull { shape: f64 },
+    /// LogNormal with the given sigma of the underlying normal; mu chosen
+    /// so the mean equals the configured 1/rate.
+    LogNormal { sigma: f64 },
+}
+
+impl DistKind {
+    /// Build a duration distribution with mean `1/rate` in this family.
+    /// `rate == 0` yields a never-firing clock.
+    pub fn with_rate(self, rate: f64) -> Dist {
+        if rate <= 0.0 {
+            return Dist::exp_rate(0.0);
+        }
+        let mean = 1.0 / rate;
+        match self {
+            DistKind::Exponential => Dist::exp_rate(rate),
+            DistKind::Weibull { shape } => {
+                // mean = scale * Gamma(1 + 1/shape)
+                let scale = mean / crate::sim::dist::gamma(1.0 + 1.0 / shape);
+                Dist::Weibull { shape, scale }
+            }
+            DistKind::LogNormal { sigma } => {
+                // mean = exp(mu + sigma^2/2)
+                let mu = mean.ln() - sigma * sigma / 2.0;
+                Dist::LogNormal { mu, sigma }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DistKind::Exponential => "exponential",
+            DistKind::Weibull { .. } => "weibull",
+            DistKind::LogNormal { .. } => "lognormal",
+        }
+    }
+}
+
+/// Full simulation parameter set. Construct via [`Params::table1_defaults`]
+/// and override fields, or load from YAML via [`crate::config::yaml`].
+#[derive(Clone, Debug)]
+pub struct Params {
+    // ---- failure model (inputs 1–2) ----
+    /// Random failure rate per server, 1/min (Table I: 0.01/day).
+    pub random_failure_rate: f64,
+    /// *Additional* systematic failure rate on bad servers, 1/min
+    /// (Table I: 5× the random rate).
+    pub systematic_failure_rate: f64,
+    /// Fraction of servers that are "bad" (systematic-prone), input 2.
+    pub systematic_fraction: f64,
+    /// Failure inter-arrival family (assumption 2).
+    pub failure_dist: DistKind,
+
+    // ---- job (inputs 4–6) ----
+    /// Concurrent identical jobs (assumption 6 lifts to >1; default 1).
+    /// All jobs share the working/spare pools and the repair shop.
+    pub num_jobs: u32,
+    /// Servers each job needs to run (input 4; Table I: 4096).
+    pub job_size: u32,
+    /// Failure-free job length in minutes (input 5; Table I: 256 days).
+    pub job_len: f64,
+    /// Warm standbys allotted on top of `job_size` (input 6; Table I: 16).
+    pub warm_standbys: u32,
+
+    // ---- recovery & scheduling (inputs 3, Table I rows 4/6/7) ----
+    /// Checkpoint-restore recovery time after a failure, minutes (input 3).
+    pub recovery_time: f64,
+    /// Host-selection + job-restart time when standbys are exhausted.
+    pub host_selection_time: f64,
+    /// Spare-pool preemption wait (Table I "Waiting Time").
+    pub waiting_time: f64,
+
+    // ---- pools (inputs 7–8) ----
+    /// Working-pool size (Table I: 4160).
+    pub working_pool: u32,
+    /// Spare-pool size (Table I: 200).
+    pub spare_pool: u32,
+
+    // ---- repair pipeline (inputs 9–11) ----
+    /// P(automated repair resolves it — i.e. no escalation to manual).
+    pub auto_repair_prob: f64,
+    /// P(auto repair silently failed: status says fixed, server stays bad).
+    pub auto_repair_fail_prob: f64,
+    /// P(manual repair silently failed).
+    pub manual_repair_fail_prob: f64,
+    /// Mean automated test+repair time, minutes.
+    pub auto_repair_time: f64,
+    /// Mean manual repair time, minutes.
+    pub manual_repair_time: f64,
+    /// Concurrent automated-repair capacity; 0 = unlimited (extension:
+    /// models a finite repair shop, queueing failed servers).
+    pub auto_repair_capacity: u32,
+    /// Concurrent manual-repair (technician) capacity; 0 = unlimited.
+    pub manual_repair_capacity: u32,
+
+    // ---- diagnosis (inputs 12–13) ----
+    /// P(the failure is diagnosed and *some* server is identified).
+    pub diagnosis_prob: f64,
+    /// P(the identified server is the wrong one | diagnosed).
+    pub diagnosis_uncertainty: f64,
+
+    // ---- retirement policy (§II-B "server retirement") ----
+    /// Retire a server after this many failures inside the window;
+    /// 0 disables retirement (the Table I configuration).
+    pub retirement_threshold: u32,
+    /// Sliding window for the failure score, minutes.
+    pub retirement_window: f64,
+
+    // ---- bad-server regeneration (assumption 1, case 2) ----
+    /// Every this many minutes, new bad servers appear (aging / new
+    /// hardware); 0 disables regeneration.
+    pub bad_regen_interval: f64,
+    /// Expected fraction of the fleet converted good→bad per regeneration.
+    pub bad_regen_fraction: f64,
+
+    // ---- checkpointing (extension; §I "restarting … from a previous
+    // checkpoint") ----
+    /// A checkpoint is committed every this many minutes of useful work;
+    /// progress past the last checkpoint is lost on failure. 0 = the
+    /// paper's continuous asynchronous checkpointing (no loss).
+    pub checkpoint_interval: f64,
+
+    // ---- preemption cost accounting (assumption 7) ----
+    /// Fixed cost, in minutes of other-job work lost, per preempted server.
+    pub preemption_cost: f64,
+
+    // ---- simulation control ----
+    /// Hard horizon: stop (mark incomplete) if the job hasn't finished.
+    pub max_sim_time: f64,
+}
+
+impl Params {
+    /// The paper's Table I default column.
+    pub fn table1_defaults() -> Params {
+        let rnd = 0.01 / MIN_PER_DAY;
+        Params {
+            random_failure_rate: rnd,
+            systematic_failure_rate: 5.0 * rnd,
+            systematic_fraction: 0.15,
+            failure_dist: DistKind::Exponential,
+            num_jobs: 1,
+            job_size: 4096,
+            job_len: 256.0 * MIN_PER_DAY,
+            warm_standbys: 16,
+            recovery_time: 20.0,
+            host_selection_time: 3.0,
+            waiting_time: 20.0,
+            working_pool: 4160,
+            spare_pool: 200,
+            auto_repair_prob: 0.80,
+            auto_repair_fail_prob: 0.40,
+            manual_repair_fail_prob: 0.20,
+            auto_repair_time: 120.0,
+            manual_repair_time: 2.0 * MIN_PER_DAY,
+            auto_repair_capacity: 0,
+            manual_repair_capacity: 0,
+            diagnosis_prob: 0.8,
+            diagnosis_uncertainty: 0.0,
+            retirement_threshold: 0,
+            retirement_window: 7.0 * MIN_PER_DAY,
+            bad_regen_interval: 0.0,
+            bad_regen_fraction: 0.0,
+            checkpoint_interval: 0.0,
+            preemption_cost: 0.0,
+            max_sim_time: 10.0 * 256.0 * MIN_PER_DAY,
+        }
+    }
+
+    /// A small configuration for fast tests: 64-server job, 1-day length.
+    pub fn small_test() -> Params {
+        let rnd = 0.5 / MIN_PER_DAY;
+        Params {
+            random_failure_rate: rnd,
+            systematic_failure_rate: 5.0 * rnd,
+            systematic_fraction: 0.15,
+            failure_dist: DistKind::Exponential,
+            num_jobs: 1,
+            job_size: 64,
+            job_len: 1.0 * MIN_PER_DAY,
+            warm_standbys: 4,
+            recovery_time: 20.0,
+            host_selection_time: 3.0,
+            waiting_time: 20.0,
+            working_pool: 72,
+            spare_pool: 16,
+            auto_repair_prob: 0.80,
+            auto_repair_fail_prob: 0.40,
+            manual_repair_fail_prob: 0.20,
+            auto_repair_time: 120.0,
+            manual_repair_time: 2.0 * MIN_PER_DAY,
+            auto_repair_capacity: 0,
+            manual_repair_capacity: 0,
+            diagnosis_prob: 0.8,
+            diagnosis_uncertainty: 0.0,
+            retirement_threshold: 0,
+            retirement_window: 7.0 * MIN_PER_DAY,
+            bad_regen_interval: 0.0,
+            bad_regen_fraction: 0.0,
+            checkpoint_interval: 0.0,
+            preemption_cost: 0.0,
+            max_sim_time: 100.0 * MIN_PER_DAY,
+        }
+    }
+
+    /// Total fleet size (working + spare pools).
+    pub fn total_servers(&self) -> u32 {
+        self.working_pool + self.spare_pool
+    }
+
+    /// Set a parameter by its sweep name (the strings Table I uses; also
+    /// the names `OneWaySweep`/`TwoWaySweep` accept). Returns false for an
+    /// unknown name.
+    pub fn set_by_name(&mut self, name: &str, value: f64) -> bool {
+        match name {
+            "random_failure_rate" => self.random_failure_rate = value,
+            "systematic_failure_rate" => self.systematic_failure_rate = value,
+            // Convenience: Table I expresses the systematic rate as a
+            // multiple of the random rate.
+            "systematic_rate_multiplier" => {
+                self.systematic_failure_rate = value * self.random_failure_rate
+            }
+            "systematic_fraction" => self.systematic_fraction = value,
+            "num_jobs" => self.num_jobs = value as u32,
+            "job_size" => self.job_size = value as u32,
+            "job_len" => self.job_len = value,
+            "warm_standbys" => self.warm_standbys = value as u32,
+            "recovery_time" => self.recovery_time = value,
+            "host_selection_time" => self.host_selection_time = value,
+            "waiting_time" => self.waiting_time = value,
+            "working_pool" => self.working_pool = value as u32,
+            "spare_pool" => self.spare_pool = value as u32,
+            "auto_repair_prob" => self.auto_repair_prob = value,
+            "auto_repair_fail_prob" => self.auto_repair_fail_prob = value,
+            "manual_repair_fail_prob" => self.manual_repair_fail_prob = value,
+            "auto_repair_time" => self.auto_repair_time = value,
+            "manual_repair_time" => self.manual_repair_time = value,
+            "auto_repair_capacity" => self.auto_repair_capacity = value as u32,
+            "manual_repair_capacity" => self.manual_repair_capacity = value as u32,
+            "diagnosis_prob" => self.diagnosis_prob = value,
+            "diagnosis_uncertainty" => self.diagnosis_uncertainty = value,
+            "retirement_threshold" => self.retirement_threshold = value as u32,
+            "retirement_window" => self.retirement_window = value,
+            "bad_regen_interval" => self.bad_regen_interval = value,
+            "bad_regen_fraction" => self.bad_regen_fraction = value,
+            "checkpoint_interval" => self.checkpoint_interval = value,
+            "preemption_cost" => self.preemption_cost = value,
+            "max_sim_time" => self.max_sim_time = value,
+            _ => return false,
+        }
+        true
+    }
+
+    /// Read a parameter by sweep name (for report labelling).
+    pub fn get_by_name(&self, name: &str) -> Option<f64> {
+        Some(match name {
+            "random_failure_rate" => self.random_failure_rate,
+            "systematic_failure_rate" => self.systematic_failure_rate,
+            "systematic_rate_multiplier" => {
+                self.systematic_failure_rate / self.random_failure_rate
+            }
+            "systematic_fraction" => self.systematic_fraction,
+            "num_jobs" => self.num_jobs as f64,
+            "job_size" => self.job_size as f64,
+            "job_len" => self.job_len,
+            "warm_standbys" => self.warm_standbys as f64,
+            "recovery_time" => self.recovery_time,
+            "host_selection_time" => self.host_selection_time,
+            "waiting_time" => self.waiting_time,
+            "working_pool" => self.working_pool as f64,
+            "spare_pool" => self.spare_pool as f64,
+            "auto_repair_prob" => self.auto_repair_prob,
+            "auto_repair_fail_prob" => self.auto_repair_fail_prob,
+            "manual_repair_fail_prob" => self.manual_repair_fail_prob,
+            "auto_repair_time" => self.auto_repair_time,
+            "manual_repair_time" => self.manual_repair_time,
+            "auto_repair_capacity" => self.auto_repair_capacity as f64,
+            "manual_repair_capacity" => self.manual_repair_capacity as f64,
+            "diagnosis_prob" => self.diagnosis_prob,
+            "diagnosis_uncertainty" => self.diagnosis_uncertainty,
+            "retirement_threshold" => self.retirement_threshold as f64,
+            "retirement_window" => self.retirement_window,
+            "bad_regen_interval" => self.bad_regen_interval,
+            "bad_regen_fraction" => self.bad_regen_fraction,
+            "checkpoint_interval" => self.checkpoint_interval,
+            "preemption_cost" => self.preemption_cost,
+            "max_sim_time" => self.max_sim_time,
+            _ => return None,
+        })
+    }
+
+    /// All sweepable parameter names (drives `--list-params` and docs).
+    pub fn sweepable_names() -> &'static [&'static str] {
+        &[
+            "random_failure_rate",
+            "systematic_failure_rate",
+            "systematic_rate_multiplier",
+            "systematic_fraction",
+            "num_jobs",
+            "job_size",
+            "job_len",
+            "warm_standbys",
+            "recovery_time",
+            "host_selection_time",
+            "waiting_time",
+            "working_pool",
+            "spare_pool",
+            "auto_repair_prob",
+            "auto_repair_fail_prob",
+            "manual_repair_fail_prob",
+            "auto_repair_time",
+            "manual_repair_time",
+            "auto_repair_capacity",
+            "manual_repair_capacity",
+            "diagnosis_prob",
+            "diagnosis_uncertainty",
+            "retirement_threshold",
+            "retirement_window",
+            "bad_regen_interval",
+            "bad_regen_fraction",
+            "checkpoint_interval",
+            "preemption_cost",
+            "max_sim_time",
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults_match_paper() {
+        let p = Params::table1_defaults();
+        assert!((p.random_failure_rate - 0.01 / 1440.0).abs() < 1e-12);
+        assert!((p.systematic_failure_rate - 0.05 / 1440.0).abs() < 1e-12);
+        assert_eq!(p.job_size, 4096);
+        assert_eq!(p.warm_standbys, 16);
+        assert_eq!(p.working_pool, 4160);
+        assert_eq!(p.spare_pool, 200);
+        assert_eq!(p.recovery_time, 20.0);
+        assert_eq!(p.manual_repair_time, 2880.0);
+    }
+
+    #[test]
+    fn set_get_roundtrip_every_name() {
+        for &name in Params::sweepable_names() {
+            let mut p = Params::table1_defaults();
+            assert!(p.set_by_name(name, 7.0), "set {name}");
+            if name == "systematic_rate_multiplier" {
+                assert!((p.get_by_name(name).unwrap() - 7.0).abs() < 1e-9);
+            } else {
+                assert_eq!(p.get_by_name(name), Some(7.0), "get {name}");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_name_rejected() {
+        let mut p = Params::table1_defaults();
+        assert!(!p.set_by_name("nope", 1.0));
+        assert_eq!(p.get_by_name("nope"), None);
+    }
+
+    #[test]
+    fn dist_kind_mean_preserved() {
+        let rate = 0.01 / 1440.0;
+        for kind in [
+            DistKind::Exponential,
+            DistKind::Weibull { shape: 1.7 },
+            DistKind::LogNormal { sigma: 0.8 },
+        ] {
+            let d = kind.with_rate(rate);
+            let mean = d.mean();
+            assert!(
+                (mean - 1.0 / rate).abs() / (1.0 / rate) < 1e-9,
+                "{kind:?} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_rate_never_fires() {
+        let d = DistKind::Weibull { shape: 2.0 }.with_rate(0.0);
+        assert_eq!(d.mean(), f64::INFINITY);
+    }
+}

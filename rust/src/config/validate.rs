@@ -1,0 +1,194 @@
+//! Parameter validation: reject configurations that are ill-formed before
+//! the simulation runs (probabilities outside [0,1], zero-sized jobs,
+//! pools too small to ever start, …) and build [`Params`] from parsed
+//! config files.
+
+use crate::config::params::{DistKind, Params};
+use crate::config::yaml::Value;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ConfigError {
+    #[error("parameter `{0}` = {1} is out of range: {2}")]
+    Range(&'static str, f64, &'static str),
+    #[error("unknown parameter `{0}`")]
+    Unknown(String),
+    #[error("bad value for `{0}`")]
+    BadValue(String),
+    #[error("infeasible: working_pool ({0}) + spare_pool ({1}) < job_size ({2}); the job can never start")]
+    Infeasible(u32, u32, u32),
+    #[error("bad failure_dist `{0}` (expected exponential, weibull:<shape>, lognormal:<sigma>)")]
+    BadDist(String),
+}
+
+/// Validate a parameter set.
+pub fn validate(p: &Params) -> Result<(), ConfigError> {
+    fn prob(name: &'static str, v: f64) -> Result<(), ConfigError> {
+        if !(0.0..=1.0).contains(&v) {
+            return Err(ConfigError::Range(name, v, "must be a probability in [0,1]"));
+        }
+        Ok(())
+    }
+    fn non_neg(name: &'static str, v: f64) -> Result<(), ConfigError> {
+        if !(v >= 0.0) {
+            return Err(ConfigError::Range(name, v, "must be >= 0"));
+        }
+        Ok(())
+    }
+    fn pos(name: &'static str, v: f64) -> Result<(), ConfigError> {
+        if !(v > 0.0) {
+            return Err(ConfigError::Range(name, v, "must be > 0"));
+        }
+        Ok(())
+    }
+
+    non_neg("random_failure_rate", p.random_failure_rate)?;
+    non_neg("systematic_failure_rate", p.systematic_failure_rate)?;
+    prob("systematic_fraction", p.systematic_fraction)?;
+    pos("job_len", p.job_len)?;
+    if p.job_size == 0 {
+        return Err(ConfigError::Range("job_size", 0.0, "must be >= 1"));
+    }
+    if p.num_jobs == 0 {
+        return Err(ConfigError::Range("num_jobs", 0.0, "must be >= 1"));
+    }
+    non_neg("recovery_time", p.recovery_time)?;
+    non_neg("host_selection_time", p.host_selection_time)?;
+    non_neg("waiting_time", p.waiting_time)?;
+    prob("auto_repair_prob", p.auto_repair_prob)?;
+    prob("auto_repair_fail_prob", p.auto_repair_fail_prob)?;
+    prob("manual_repair_fail_prob", p.manual_repair_fail_prob)?;
+    pos("auto_repair_time", p.auto_repair_time)?;
+    pos("manual_repair_time", p.manual_repair_time)?;
+    prob("diagnosis_prob", p.diagnosis_prob)?;
+    prob("diagnosis_uncertainty", p.diagnosis_uncertainty)?;
+    non_neg("retirement_window", p.retirement_window)?;
+    non_neg("bad_regen_interval", p.bad_regen_interval)?;
+    prob("bad_regen_fraction", p.bad_regen_fraction)?;
+    non_neg("checkpoint_interval", p.checkpoint_interval)?;
+    non_neg("preemption_cost", p.preemption_cost)?;
+    pos("max_sim_time", p.max_sim_time)?;
+
+    if let DistKind::Weibull { shape } = p.failure_dist {
+        pos("weibull shape", shape)?;
+    }
+    if let DistKind::LogNormal { sigma } = p.failure_dist {
+        pos("lognormal sigma", sigma)?;
+    }
+
+    if p.working_pool + p.spare_pool < p.job_size {
+        return Err(ConfigError::Infeasible(p.working_pool, p.spare_pool, p.job_size));
+    }
+    Ok(())
+}
+
+/// Parse the dist spec strings the CLI/config accept.
+pub fn parse_dist(s: &str) -> Result<DistKind, ConfigError> {
+    let s = s.trim();
+    if s.eq_ignore_ascii_case("exponential") || s.eq_ignore_ascii_case("exp") {
+        return Ok(DistKind::Exponential);
+    }
+    if let Some(rest) = s.strip_prefix("weibull:") {
+        let shape: f64 =
+            rest.parse().map_err(|_| ConfigError::BadDist(s.to_string()))?;
+        return Ok(DistKind::Weibull { shape });
+    }
+    if let Some(rest) = s.strip_prefix("lognormal:") {
+        let sigma: f64 =
+            rest.parse().map_err(|_| ConfigError::BadDist(s.to_string()))?;
+        return Ok(DistKind::LogNormal { sigma });
+    }
+    Err(ConfigError::BadDist(s.to_string()))
+}
+
+/// Apply a parsed config document's `params:` section onto defaults.
+pub fn params_from_config(doc: &Value) -> Result<Params, ConfigError> {
+    let mut p = Params::table1_defaults();
+    if let Some(params) = doc.get("params") {
+        let map = params
+            .as_map()
+            .ok_or_else(|| ConfigError::BadValue("params".into()))?;
+        for (k, v) in map {
+            if k == "failure_dist" {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| ConfigError::BadValue(k.clone()))?;
+                p.failure_dist = parse_dist(s)?;
+                continue;
+            }
+            let val = v
+                .as_f64()
+                .ok_or_else(|| ConfigError::BadValue(k.clone()))?;
+            if !p.set_by_name(k, val) {
+                return Err(ConfigError::Unknown(k.clone()));
+            }
+        }
+    }
+    validate(&p)?;
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::yaml;
+
+    #[test]
+    fn defaults_validate() {
+        validate(&Params::table1_defaults()).unwrap();
+        validate(&Params::small_test()).unwrap();
+    }
+
+    #[test]
+    fn bad_probability_rejected() {
+        let mut p = Params::table1_defaults();
+        p.auto_repair_prob = 1.5;
+        assert!(validate(&p).is_err());
+        p.auto_repair_prob = -0.1;
+        assert!(validate(&p).is_err());
+    }
+
+    #[test]
+    fn infeasible_pools_rejected() {
+        let mut p = Params::table1_defaults();
+        p.working_pool = 100;
+        p.spare_pool = 10;
+        assert!(matches!(validate(&p), Err(ConfigError::Infeasible(..))));
+    }
+
+    #[test]
+    fn dist_specs() {
+        assert_eq!(parse_dist("exponential").unwrap(), DistKind::Exponential);
+        assert_eq!(parse_dist("exp").unwrap(), DistKind::Exponential);
+        assert_eq!(
+            parse_dist("weibull:1.5").unwrap(),
+            DistKind::Weibull { shape: 1.5 }
+        );
+        assert_eq!(
+            parse_dist("lognormal:0.8").unwrap(),
+            DistKind::LogNormal { sigma: 0.8 }
+        );
+        assert!(parse_dist("cauchy").is_err());
+        assert!(parse_dist("weibull:x").is_err());
+    }
+
+    #[test]
+    fn config_document_roundtrip() {
+        let doc = yaml::parse(
+            "params:\n  recovery_time: 30\n  random_failure_rate: 0.01/(24*60)\n  failure_dist: weibull:1.2\n",
+        )
+        .unwrap();
+        let p = params_from_config(&doc).unwrap();
+        assert_eq!(p.recovery_time, 30.0);
+        assert!((p.random_failure_rate - 0.01 / 1440.0).abs() < 1e-15);
+        assert_eq!(p.failure_dist, DistKind::Weibull { shape: 1.2 });
+        // Untouched fields keep Table I defaults.
+        assert_eq!(p.working_pool, 4160);
+    }
+
+    #[test]
+    fn unknown_param_rejected() {
+        let doc = yaml::parse("params:\n  bogus: 1\n").unwrap();
+        assert!(matches!(params_from_config(&doc), Err(ConfigError::Unknown(_))));
+    }
+}

@@ -1,0 +1,409 @@
+//! Minimal YAML-subset parser for config files (the offline environment
+//! carries no serde). Supports exactly what AIReSim configs need:
+//!
+//! ```yaml
+//! # comment
+//! params:
+//!   recovery_time: 20          # scalar
+//!   manual_repair_time: 2*1440 # arithmetic expressions (+ - * / parens)
+//! sweep:
+//!   kind: two_way
+//!   x: { name: recovery_time, values: [10, 20, 30] }
+//!   y: { name: working_pool, values: [4112, 4128, 4160, 4192] }
+//! replications: 30
+//! seed: 42
+//! ```
+//!
+//! Two-level nesting, scalars, inline lists `[a, b, c]`, inline maps
+//! `{ k: v, ... }`, comments, and arithmetic value expressions — the same
+//! surface the paper's `Params`/`config.yaml` user files use (§III-D).
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+/// Parsed YAML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Scalar(String),
+    List(Vec<Value>),
+    Map(BTreeMap<String, Value>),
+}
+
+#[derive(Debug, Error)]
+pub enum YamlError {
+    #[error("line {0}: bad indentation")]
+    Indent(usize),
+    #[error("line {0}: expected `key: value`")]
+    KeyValue(usize),
+    #[error("line {0}: unterminated inline collection")]
+    Unterminated(usize),
+    #[error("expression error: {0}")]
+    Expr(String),
+}
+
+impl Value {
+    pub fn as_map(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_map()?.get(key)
+    }
+
+    /// Scalar as string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Scalar(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Scalar as f64, evaluating arithmetic expressions (`2*1440`,
+    /// `0.01/(24*60)`).
+    pub fn as_f64(&self) -> Option<f64> {
+        eval_expr(self.as_str()?).ok()
+    }
+
+    /// List of f64s.
+    pub fn as_f64_list(&self) -> Option<Vec<f64>> {
+        self.as_list()?.iter().map(|v| v.as_f64()).collect()
+    }
+}
+
+/// Parse a YAML-subset document into a root map.
+pub fn parse(text: &str) -> Result<Value, YamlError> {
+    let lines: Vec<(usize, usize, String)> = text
+        .lines()
+        .enumerate()
+        .filter_map(|(i, raw)| {
+            let no_comment = strip_comment(raw);
+            let trimmed = no_comment.trim_end();
+            if trimmed.trim().is_empty() {
+                return None;
+            }
+            let indent = trimmed.len() - trimmed.trim_start().len();
+            Some((i + 1, indent, trimmed.trim_start().to_string()))
+        })
+        .collect();
+    let (v, consumed) = parse_block(&lines, 0, 0)?;
+    debug_assert_eq!(consumed, lines.len());
+    Ok(v)
+}
+
+fn strip_comment(line: &str) -> String {
+    // A `#` outside brackets starts a comment.
+    let mut depth = 0i32;
+    let mut out = String::new();
+    for c in line.chars() {
+        match c {
+            '[' | '{' => depth += 1,
+            ']' | '}' => depth -= 1,
+            '#' if depth == 0 => break,
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+fn parse_block(
+    lines: &[(usize, usize, String)],
+    start: usize,
+    indent: usize,
+) -> Result<(Value, usize), YamlError> {
+    let mut map = BTreeMap::new();
+    let mut i = start;
+    while i < lines.len() {
+        let (lineno, ind, ref content) = lines[i];
+        if ind < indent {
+            break;
+        }
+        if ind > indent {
+            return Err(YamlError::Indent(lineno));
+        }
+        let (key, rest) = content
+            .split_once(':')
+            .ok_or(YamlError::KeyValue(lineno))?;
+        let key = key.trim().to_string();
+        let rest = rest.trim();
+        if rest.is_empty() {
+            // Nested block.
+            let child_indent = lines
+                .get(i + 1)
+                .map(|&(_, ci, _)| ci)
+                .filter(|&ci| ci > indent);
+            match child_indent {
+                Some(ci) => {
+                    let (child, consumed) = parse_block(lines, i + 1, ci)?;
+                    map.insert(key, child);
+                    i = consumed;
+                }
+                None => {
+                    map.insert(key, Value::Scalar(String::new()));
+                    i += 1;
+                }
+            }
+        } else {
+            map.insert(key, parse_inline(rest, lineno)?);
+            i += 1;
+        }
+    }
+    Ok((Value::Map(map), i))
+}
+
+fn parse_inline(s: &str, lineno: usize) -> Result<Value, YamlError> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or(YamlError::Unterminated(lineno))?;
+        let items = split_top_level(inner);
+        let vals = items
+            .into_iter()
+            .filter(|x| !x.trim().is_empty())
+            .map(|x| parse_inline(x.trim(), lineno))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::List(vals));
+    }
+    if let Some(inner) = s.strip_prefix('{') {
+        let inner = inner
+            .strip_suffix('}')
+            .ok_or(YamlError::Unterminated(lineno))?;
+        let mut m = BTreeMap::new();
+        for item in split_top_level(inner) {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (k, v) = item.split_once(':').ok_or(YamlError::KeyValue(lineno))?;
+            m.insert(k.trim().to_string(), parse_inline(v.trim(), lineno)?);
+        }
+        return Ok(Value::Map(m));
+    }
+    Ok(Value::Scalar(s.trim_matches('"').trim_matches('\'').to_string()))
+}
+
+/// Split on commas not nested inside brackets.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '[' | '{' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' | '}' => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+// ------------------------------------------------------------------ //
+// Arithmetic expression evaluation (Table I writes values like
+// `0.01/(24*60)` and `2*1440`).
+// ------------------------------------------------------------------ //
+
+/// Evaluate `+ - * /` with parentheses and unary minus.
+pub fn eval_expr(s: &str) -> Result<f64, YamlError> {
+    let tokens = tokenize(s)?;
+    let mut pos = 0;
+    let v = parse_sum(&tokens, &mut pos)?;
+    if pos != tokens.len() {
+        return Err(YamlError::Expr(format!("trailing tokens in `{s}`")));
+    }
+    Ok(v)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Num(f64),
+    Op(char),
+}
+
+fn tokenize(s: &str) -> Result<Vec<Tok>, YamlError> {
+    let mut toks = Vec::new();
+    let chars: Vec<char> = s.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            ' ' | '\t' => i += 1,
+            '+' | '-' | '*' | '/' | '(' | ')' => {
+                toks.push(Tok::Op(c));
+                i += 1;
+            }
+            '0'..='9' | '.' => {
+                let start = i;
+                while i < chars.len()
+                    && (chars[i].is_ascii_digit()
+                        || chars[i] == '.'
+                        || chars[i] == 'e'
+                        || chars[i] == 'E'
+                        || ((chars[i] == '-' || chars[i] == '+')
+                            && i > start
+                            && (chars[i - 1] == 'e' || chars[i - 1] == 'E')))
+                {
+                    i += 1;
+                }
+                let txt: String = chars[start..i].iter().collect();
+                let n = txt
+                    .parse::<f64>()
+                    .map_err(|_| YamlError::Expr(format!("bad number `{txt}`")))?;
+                toks.push(Tok::Num(n));
+            }
+            _ => return Err(YamlError::Expr(format!("bad char `{c}` in `{s}`"))),
+        }
+    }
+    Ok(toks)
+}
+
+fn parse_sum(t: &[Tok], pos: &mut usize) -> Result<f64, YamlError> {
+    let mut v = parse_product(t, pos)?;
+    while let Some(Tok::Op(op @ ('+' | '-'))) = t.get(*pos) {
+        let op = *op;
+        *pos += 1;
+        let rhs = parse_product(t, pos)?;
+        v = if op == '+' { v + rhs } else { v - rhs };
+    }
+    Ok(v)
+}
+
+fn parse_product(t: &[Tok], pos: &mut usize) -> Result<f64, YamlError> {
+    let mut v = parse_atom(t, pos)?;
+    while let Some(Tok::Op(op @ ('*' | '/'))) = t.get(*pos) {
+        let op = *op;
+        *pos += 1;
+        let rhs = parse_atom(t, pos)?;
+        v = if op == '*' { v * rhs } else { v / rhs };
+    }
+    Ok(v)
+}
+
+fn parse_atom(t: &[Tok], pos: &mut usize) -> Result<f64, YamlError> {
+    match t.get(*pos) {
+        Some(Tok::Num(n)) => {
+            *pos += 1;
+            Ok(*n)
+        }
+        Some(Tok::Op('-')) => {
+            *pos += 1;
+            Ok(-parse_atom(t, pos)?)
+        }
+        Some(Tok::Op('(')) => {
+            *pos += 1;
+            let v = parse_sum(t, pos)?;
+            match t.get(*pos) {
+                Some(Tok::Op(')')) => {
+                    *pos += 1;
+                    Ok(v)
+                }
+                _ => Err(YamlError::Expr("missing `)`".into())),
+            }
+        }
+        other => Err(YamlError::Expr(format!("unexpected token {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_nested_config() {
+        let doc = "\
+# AIReSim experiment
+params:
+  recovery_time: 20
+  manual_repair_time: 2*1440
+sweep:
+  kind: two_way
+  x: { name: recovery_time, values: [10, 20, 30] }
+  y: { name: working_pool, values: [4112, 4128, 4160, 4192] }
+replications: 30
+seed: 42
+";
+        let v = parse(doc).unwrap();
+        assert_eq!(
+            v.get("params").unwrap().get("recovery_time").unwrap().as_f64(),
+            Some(20.0)
+        );
+        assert_eq!(
+            v.get("params")
+                .unwrap()
+                .get("manual_repair_time")
+                .unwrap()
+                .as_f64(),
+            Some(2880.0)
+        );
+        let sweep = v.get("sweep").unwrap();
+        assert_eq!(sweep.get("kind").unwrap().as_str(), Some("two_way"));
+        let x = sweep.get("x").unwrap();
+        assert_eq!(x.get("name").unwrap().as_str(), Some("recovery_time"));
+        assert_eq!(x.get("values").unwrap().as_f64_list(), Some(vec![10.0, 20.0, 30.0]));
+        assert_eq!(v.get("replications").unwrap().as_f64(), Some(30.0));
+    }
+
+    #[test]
+    fn table1_rate_expression() {
+        assert!((eval_expr("0.01/(24*60)").unwrap() - 0.01 / 1440.0).abs() < 1e-15);
+        assert_eq!(eval_expr("2 * 1440").unwrap(), 2880.0);
+        assert_eq!(eval_expr("-(3+4)/2").unwrap(), -3.5);
+        assert_eq!(eval_expr("1e-3").unwrap(), 0.001);
+        assert_eq!(eval_expr("2.5e2").unwrap(), 250.0);
+    }
+
+    #[test]
+    fn expr_errors() {
+        assert!(eval_expr("2**3").is_err());
+        assert!(eval_expr("(1+2").is_err());
+        assert!(eval_expr("abc").is_err());
+        assert!(eval_expr("1 2").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let v = parse("a: 1 # inline\n\n# full line\nb: 2\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn hash_inside_brackets_is_not_comment() {
+        // (No realistic config uses this, but the lexer must not split it.)
+        let v = parse("xs: [1, 2, 3]\n").unwrap();
+        assert_eq!(v.get("xs").unwrap().as_f64_list(), Some(vec![1.0, 2.0, 3.0]));
+    }
+
+    #[test]
+    fn bad_indent_rejected() {
+        assert!(parse("a:\n    b: 1\n  c: 2\n").is_err());
+    }
+
+    #[test]
+    fn quoted_strings() {
+        let v = parse("name: \"hello world\"\n").unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("hello world"));
+    }
+}

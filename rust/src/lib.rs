@@ -1,0 +1,44 @@
+//! # AIReSim — AI cluster Reliability Simulator
+//!
+//! A production-grade reproduction of *"AIReSim: A Discrete Event Simulator
+//! for Large-scale AI Cluster Reliability Modeling"* (Pattabiraman, Patel,
+//! Lin — CS.DC 2026).
+//!
+//! The crate is a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a deterministic
+//!   discrete-event simulation of failure / recovery / repair / scheduling /
+//!   pooling in clusters running gang-scheduled AI training jobs, with a
+//!   config + sweep + statistics + reporting stack around it.
+//! * **Layer 2 (`python/compile/model.py`)** — the paper's analytical
+//!   comparator (batched CTMC transient analysis), authored in JAX and
+//!   AOT-compiled to `artifacts/analytic.hlo.txt`.
+//! * **Layer 1 (`python/compile/kernels/uniformization.py`)** — the Pallas
+//!   kernel at the analytical model's hot spot (batched squaring chain).
+//!
+//! Python never runs at simulation time: [`runtime`] loads the HLO artifact
+//! through PJRT (`xla` crate) and [`analytical`] provides a bit-equivalent
+//! pure-Rust fallback used for cross-validation.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use airesim::config::Params;
+//! use airesim::model::cluster::Simulation;
+//!
+//! let params = Params::table1_defaults();
+//! let outputs = Simulation::new(&params, 42).run();
+//! println!("makespan = {:.1} h", outputs.makespan / 60.0);
+//! ```
+
+pub mod analytical;
+pub mod config;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod sweep;
+pub mod testkit;
+pub mod trace;
+pub mod util;

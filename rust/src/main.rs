@@ -1,0 +1,441 @@
+//! AIReSim CLI — the Layer-3 leader entrypoint.
+//!
+//! ```text
+//! airesim run     [--config f.yaml] [--seed N] [--set name=value,...] [--trace]
+//! airesim sweep   [--config f.yaml] [--param name] [--values a,b,c]
+//!                 [--param2 name] [--values2 ...] [--reps N] [--metric m] [--csv]
+//! airesim analytic [--config f.yaml] [--artifact path] [--set name=value,...]
+//! airesim whatif  [--config f.yaml] --param name --factor F [--reps N]
+//! airesim list-params
+//! ```
+
+use airesim::analytical;
+use airesim::config::{validate, yaml, Params};
+use airesim::model::cluster::Simulation;
+use airesim::report;
+use airesim::runtime::AnalyticModel;
+use airesim::sweep::{run_sweep, Sweep};
+use airesim::util::cli::{render_help, Args, OptSpec};
+use anyhow::{anyhow, bail, Context, Result};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match cmd {
+        "run" => cmd_run(rest),
+        "sweep" => cmd_sweep(rest),
+        "analytic" => cmd_analytic(rest),
+        "prescreen" => cmd_prescreen(rest),
+        "whatif" => cmd_whatif(rest),
+        "list-params" => cmd_list_params(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `airesim help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "AIReSim — discrete event simulator for AI cluster reliability\n\n\
+         Subcommands:\n\
+         \x20 run          run one simulation and print its outputs\n\
+         \x20 sweep        one- or two-way parameter sweep with replications\n\
+         \x20 analytic     run the AOT analytical baseline (PJRT artifact)\n\
+         \x20 prescreen    analytically rank a sweep grid, DES the top-k\n\
+         \x20 whatif       scale one parameter by a factor, compare outputs\n\
+         \x20 list-params  show every sweepable parameter name\n\n\
+         Run `airesim <cmd> --help` for per-command options."
+    );
+}
+
+/// Shared option handling: --config + --set name=value[,name=value...].
+fn load_params(args: &Args) -> Result<Params> {
+    let mut p = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            let doc = yaml::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+            validate::params_from_config(&doc).map_err(|e| anyhow!("{path}: {e}"))?
+        }
+        None => Params::table1_defaults(),
+    };
+    if let Some(sets) = args.get("set") {
+        for clause in sets.split(',') {
+            let (name, value) = clause
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--set expects name=value, got `{clause}`"))?;
+            let v = yaml::eval_expr(value).map_err(|e| anyhow!("{name}: {e}"))?;
+            if !p.set_by_name(name.trim(), v) {
+                bail!("unknown parameter `{name}` in --set");
+            }
+        }
+    }
+    validate::validate(&p)?;
+    Ok(p)
+}
+
+fn common_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "config", takes_value: true, help: "YAML config file" },
+        OptSpec {
+            name: "set",
+            takes_value: true,
+            help: "comma-separated name=value overrides (exprs ok: 2*1440)",
+        },
+        OptSpec { name: "help", takes_value: false, help: "show help" },
+    ]
+}
+
+fn cmd_run(argv: &[String]) -> Result<()> {
+    let mut spec = common_spec();
+    spec.extend([
+        OptSpec { name: "seed", takes_value: true, help: "rng seed (default 42)" },
+        OptSpec { name: "trace", takes_value: false, help: "print the event trace" },
+    ]);
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!("{}", render_help("airesim run", "run one simulation", &spec));
+        return Ok(());
+    }
+    let p = load_params(&args)?;
+    let seed = args.get_u64("seed")?.unwrap_or(42);
+
+    let mut sim = Simulation::new(&p, seed);
+    if args.flag("trace") {
+        sim = sim.with_trace();
+    }
+    let (out, trace) = sim.run_traced();
+
+    if args.flag("trace") {
+        print!("{}", trace.render());
+    }
+    println!("== run outputs (seed {seed}) ==");
+    println!(
+        "makespan           {:>14.2} min ({:.2} days)",
+        out.makespan,
+        out.makespan / 1440.0
+    );
+    println!("completed          {:>14}", out.completed);
+    println!(
+        "failures           {:>14} (random {}, systematic {})",
+        out.failures_total, out.failures_random, out.failures_systematic
+    );
+    println!("standby swaps      {:>14}", out.standby_swaps);
+    println!("host selections    {:>14}", out.host_selections);
+    println!("preemptions        {:>14}", out.preemptions);
+    println!(
+        "repairs            {:>14} auto, {} manual",
+        out.repairs_auto, out.repairs_manual
+    );
+    println!("retirements        {:>14}", out.retirements);
+    println!("stall time         {:>14.2} min", out.stall_time);
+    println!("recovery total     {:>14.2} min", out.recovery_total);
+    println!("avg run duration   {:>14.2} min", out.avg_run_duration);
+    println!("utilization        {:>14.4}", out.utilization(p.job_len));
+    println!("events delivered   {:>14}", out.events_delivered);
+    Ok(())
+}
+
+fn parse_values(s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(|x| yaml::eval_expr(x.trim()).map_err(|e| anyhow!("{e}")))
+        .collect()
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let mut spec = common_spec();
+    spec.extend([
+        OptSpec { name: "param", takes_value: true, help: "swept parameter name" },
+        OptSpec { name: "values", takes_value: true, help: "comma-separated values" },
+        OptSpec { name: "param2", takes_value: true, help: "second axis (two-way)" },
+        OptSpec { name: "values2", takes_value: true, help: "second-axis values" },
+        OptSpec { name: "reps", takes_value: true, help: "replications (default 30)" },
+        OptSpec { name: "seed", takes_value: true, help: "master seed (default 42)" },
+        OptSpec { name: "threads", takes_value: true, help: "worker threads (0=auto)" },
+        OptSpec {
+            name: "metric",
+            takes_value: true,
+            help: "metric to report (default makespan_hours)",
+        },
+        OptSpec { name: "csv", takes_value: false, help: "emit CSV instead of a table" },
+        OptSpec { name: "figure", takes_value: false, help: "emit Fig-2-style bar series" },
+    ]);
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!("{}", render_help("airesim sweep", "parameter sweep", &spec));
+        return Ok(());
+    }
+    let base = load_params(&args)?;
+    let reps = args.get_usize("reps")?.unwrap_or(30);
+    let seed = args.get_u64("seed")?.unwrap_or(42);
+    let threads = args.get_usize("threads")?.unwrap_or(0);
+    let metric = args.get("metric").unwrap_or("makespan_hours");
+
+    let sweep = match (args.get("param"), args.get("values")) {
+        (Some(name), Some(values)) => {
+            let xs = parse_values(values)?;
+            match (args.get("param2"), args.get("values2")) {
+                (Some(n2), Some(v2)) => Sweep::two_way(
+                    &format!("{name} x {n2}"),
+                    name,
+                    &xs,
+                    n2,
+                    &parse_values(v2)?,
+                    reps,
+                    seed,
+                ),
+                _ => Sweep::one_way(name, name, &xs, reps, seed),
+            }
+        }
+        _ => sweep_from_config(&args, reps, seed)?,
+    };
+
+    let result = run_sweep(&base, &sweep, threads);
+    if args.flag("csv") {
+        print!("{}", report::csv(&result, metric));
+    } else if args.flag("figure") {
+        print!("{}", report::figure_series(&result, metric));
+    } else {
+        print!("{}", report::text_table(&result, metric));
+    }
+    Ok(())
+}
+
+fn sweep_from_config(args: &Args, reps: usize, seed: u64) -> Result<Sweep> {
+    let path = args.get("config").ok_or_else(|| {
+        anyhow!("sweep needs --param/--values or a config with a sweep: section")
+    })?;
+    let text = std::fs::read_to_string(path)?;
+    let doc = yaml::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    airesim::sweep::sweep_from_doc(&doc, reps, seed).map_err(|e| anyhow!("{path}: {e}"))
+}
+
+fn cmd_analytic(argv: &[String]) -> Result<()> {
+    let mut spec = common_spec();
+    spec.extend([
+        OptSpec { name: "artifact", takes_value: true, help: "HLO artifact path" },
+        OptSpec {
+            name: "rust-only",
+            takes_value: false,
+            help: "skip PJRT, use the pure-Rust mirror",
+        },
+    ]);
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!(
+            "{}",
+            render_help("airesim analytic", "analytical CTMC baseline", &spec)
+        );
+        return Ok(());
+    }
+    let p = load_params(&args)?;
+    let rust_out = analytical::analyze(&p);
+    println!("== analytical baseline (pure rust) ==");
+    print_analytic(&rust_out);
+
+    if !args.flag("rust-only") {
+        let path = args.get("artifact").unwrap_or(AnalyticModel::default_path());
+        let model = AnalyticModel::load(path)?;
+        println!(
+            "\n== analytical baseline (PJRT artifact, platform {}) ==",
+            model.platform()
+        );
+        let pjrt_out = model.analyze_many(std::slice::from_ref(&p))?[0];
+        print_analytic(&pjrt_out);
+        let rel = (pjrt_out.makespan_est - rust_out.makespan_est).abs()
+            / rust_out.makespan_est.max(1.0);
+        println!("\nmakespan_est rust-vs-pjrt relative delta: {rel:.2e}");
+    }
+    Ok(())
+}
+
+fn print_analytic(o: &analytical::AnalyticOutputs) {
+    println!("avail_T        {:>14.6}", o.avail_t);
+    println!("avail_avg      {:>14.6}", o.avail_avg);
+    println!("frac_bad_T     {:>14.6}", o.frac_bad_t);
+    println!("rbar           {:>14.3e} /min", o.rbar);
+    println!("exp_failures   {:>14.2}", o.exp_failures);
+    println!(
+        "makespan_est   {:>14.2} min ({:.2} days)",
+        o.makespan_est,
+        o.makespan_est / 1440.0
+    );
+    println!("overhead_frac  {:>14.4}", o.overhead_frac);
+    println!("pi_retired     {:>14.6}", o.pi_retired);
+}
+
+/// The three-layer workflow in one command: the AOT CTMC artifact screens
+/// the whole sweep grid in one PJRT batch pass, then the DES validates
+/// only the most promising configurations (§II-C: analytical for breadth,
+/// DES for fidelity).
+fn cmd_prescreen(argv: &[String]) -> Result<()> {
+    let mut spec = common_spec();
+    spec.extend([
+        OptSpec { name: "param", takes_value: true, help: "swept parameter name" },
+        OptSpec { name: "values", takes_value: true, help: "comma-separated values" },
+        OptSpec { name: "param2", takes_value: true, help: "second axis (two-way)" },
+        OptSpec { name: "values2", takes_value: true, help: "second-axis values" },
+        OptSpec { name: "top", takes_value: true, help: "DES-validate the best k (default 3)" },
+        OptSpec { name: "reps", takes_value: true, help: "DES replications for the top-k (default 10)" },
+        OptSpec { name: "seed", takes_value: true, help: "master seed (default 42)" },
+        OptSpec { name: "artifact", takes_value: true, help: "HLO artifact path" },
+    ]);
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!(
+            "{}",
+            render_help("airesim prescreen", "analytical screen + DES top-k", &spec)
+        );
+        return Ok(());
+    }
+    let base = load_params(&args)?;
+    let top = args.get_usize("top")?.unwrap_or(3);
+    let reps = args.get_usize("reps")?.unwrap_or(10);
+    let seed = args.get_u64("seed")?.unwrap_or(42);
+
+    // Build the grid (CLI axes or config sweep section).
+    let sweep = match (args.get("param"), args.get("values")) {
+        (Some(name), Some(values)) => {
+            let xs = parse_values(values)?;
+            match (args.get("param2"), args.get("values2")) {
+                (Some(n2), Some(v2)) => Sweep::two_way(
+                    &format!("{name} x {n2}"),
+                    name,
+                    &xs,
+                    n2,
+                    &parse_values(v2)?,
+                    reps,
+                    seed,
+                ),
+                _ => Sweep::one_way(name, name, &xs, reps, seed),
+            }
+        }
+        _ => sweep_from_config(&args, reps, seed)?,
+    };
+    let configs: Vec<Params> = sweep.points.iter().map(|pt| pt.apply(&base)).collect();
+
+    // Layer 2/1 via PJRT: one batched pass over the whole grid.
+    let path = args.get("artifact").unwrap_or(AnalyticModel::default_path());
+    let screened: Vec<airesim::analytical::AnalyticOutputs> =
+        match AnalyticModel::load(path) {
+            Ok(model) => {
+                println!(
+                    "screening {} configurations through the PJRT artifact ({})…",
+                    configs.len(),
+                    model.platform()
+                );
+                model.analyze_many(&configs)?
+            }
+            Err(e) => {
+                eprintln!("note: PJRT artifact unavailable ({e:#}); using the Rust mirror");
+                configs.iter().map(airesim::analytical::analyze).collect()
+            }
+        };
+
+    let mut order: Vec<usize> = (0..configs.len()).collect();
+    order.sort_by(|&a, &b| {
+        screened[a].makespan_est.partial_cmp(&screened[b].makespan_est).unwrap()
+    });
+
+    println!("\nanalytical ranking (best first):");
+    println!("{:<44} {:>16} {:>12}", "point", "CTMC makespan(h)", "exp.failures");
+    for &i in &order {
+        println!(
+            "{:<44} {:>16.1} {:>12.0}",
+            sweep.points[i].label(),
+            screened[i].makespan_est / 60.0,
+            screened[i].exp_failures
+        );
+    }
+
+    // Layer 3: DES-validate the survivors.
+    let k = top.min(order.len());
+    println!("\nDES validation of the top {k} ({reps} replications each):");
+    println!("{:<44} {:>14} {:>10}", "point", "DES makespan(h)", "±95%CI");
+    for &i in order.iter().take(k) {
+        let p = &configs[i];
+        let vals: Vec<f64> = (0..reps)
+            .map(|r| {
+                airesim::model::cluster::Simulation::with_rng(
+                    p,
+                    airesim::sim::rng::Rng::derived(seed, &[i as u64, r as u64]),
+                )
+                .run()
+                .makespan
+                    / 60.0
+            })
+            .collect();
+        let s = airesim::stats::Summary::from_values(&vals).unwrap();
+        println!(
+            "{:<44} {:>14.1} {:>10.1}",
+            sweep.points[i].label(),
+            s.mean,
+            s.ci95_halfwidth()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_whatif(argv: &[String]) -> Result<()> {
+    let mut spec = common_spec();
+    spec.extend([
+        OptSpec { name: "param", takes_value: true, help: "parameter to scale" },
+        OptSpec { name: "factor", takes_value: true, help: "multiplier (e.g. 0.5, 2)" },
+        OptSpec { name: "reps", takes_value: true, help: "replications (default 30)" },
+        OptSpec { name: "seed", takes_value: true, help: "master seed" },
+    ]);
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!("{}", render_help("airesim whatif", "what-if scenario", &spec));
+        return Ok(());
+    }
+    let base = load_params(&args)?;
+    let name = args.get("param").ok_or_else(|| anyhow!("--param required"))?;
+    let factor = args
+        .get_f64("factor")?
+        .ok_or_else(|| anyhow!("--factor required"))?;
+    let reps = args.get_usize("reps")?.unwrap_or(30);
+    let seed = args.get_u64("seed")?.unwrap_or(42);
+
+    let current = base
+        .get_by_name(name)
+        .ok_or_else(|| anyhow!("unknown parameter `{name}`"))?;
+    let scaled = current * factor;
+    let sweep = Sweep::one_way(
+        &format!("what-if: {name} x{factor}"),
+        name,
+        &[current, scaled],
+        reps,
+        seed,
+    );
+    let result = run_sweep(&base, &sweep, 0);
+    print!("{}", report::text_table(&result, "makespan_hours"));
+    let a = result.points[0].summary("makespan_hours").unwrap();
+    let b = result.points[1].summary("makespan_hours").unwrap();
+    println!(
+        "\nscaling {name} by {factor} changes mean training time by {:+.2}% ({:.1}h -> {:.1}h)",
+        (b.mean / a.mean - 1.0) * 100.0,
+        a.mean,
+        b.mean
+    );
+    Ok(())
+}
+
+fn cmd_list_params() -> Result<()> {
+    let p = Params::table1_defaults();
+    println!("{:<28} {:>16}", "parameter", "Table-I default");
+    for name in Params::sweepable_names() {
+        println!("{:<28} {:>16.6}", name, p.get_by_name(name).unwrap());
+    }
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Paper module 2 — **Coordinator**: gang-failure propagation.
+//!
+//! "When a server fails, the coordinator is notified. In turn, it informs
+//! the other servers in the group of the failure, and asks them to stop
+//! executing the job (and initiate a fast recovery)." (§III-C)
+//!
+//! Concretely: pause the job (committing checkpointed progress), stop every
+//! active server's failure clock (generation bump — in-flight `Fail`
+//! events become stale), and accumulate each server's running age so
+//! non-exponential clocks resume age-conditionally.
+
+use crate::model::job::{Job, JobPhase};
+use crate::model::server::{Server, ServerState};
+use crate::sim::Time;
+
+/// Interrupt the running gang at `now`. Returns the length of the running
+/// burst that just ended (for the "average run duration" output).
+pub fn interrupt(job: &mut Job, fleet: &mut [Server], now: Time) -> Time {
+    debug_assert_eq!(job.phase, JobPhase::Running);
+    let burst = job.pause(now);
+    for &id in &job.active {
+        let s = &mut fleet[id as usize];
+        debug_assert_eq!(s.state, ServerState::JobActive);
+        // Invalidate this server's in-flight failure event(s)...
+        s.gen.bump();
+        // ...and bank its running age for age-conditional resampling.
+        s.run_age += now - s.active_since;
+    }
+    burst
+}
+
+/// Arm failure clocks: mark every active server computing from `now`.
+/// The cluster event loop samples and schedules the actual `Fail` events
+/// (it owns the RNG and the engine); this records the bookkeeping side.
+pub fn mark_running(job: &Job, fleet: &mut [Server], now: Time) {
+    for &id in &job.active {
+        let s = &mut fleet[id as usize];
+        debug_assert_eq!(s.state, ServerState::JobActive);
+        s.active_since = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::server::Home;
+
+    fn gang(n: u32) -> (Job, Vec<Server>) {
+        let mut job = Job::new(10_000.0);
+        let mut fleet: Vec<Server> =
+            (0..n).map(|i| Server::new(i, false, Home::Working)).collect();
+        for s in fleet.iter_mut() {
+            s.state = ServerState::JobActive;
+            job.active.push(s.id);
+        }
+        (job, fleet)
+    }
+
+    #[test]
+    fn interrupt_pauses_and_bumps_generations() {
+        let (mut job, mut fleet) = gang(8);
+        job.resume(100.0);
+        mark_running(&job, &mut fleet, 100.0);
+        let gens_before: Vec<u64> = fleet.iter().map(|s| s.gen.0).collect();
+
+        let burst = interrupt(&mut job, &mut fleet, 160.0);
+        assert_eq!(burst, 60.0);
+        assert_eq!(job.remaining, 10_000.0 - 60.0);
+        for (s, g0) in fleet.iter().zip(gens_before) {
+            assert_eq!(s.gen.0, g0 + 1, "server {} gen not bumped", s.id);
+            assert_eq!(s.run_age, 60.0);
+        }
+    }
+
+    #[test]
+    fn ages_accumulate_across_bursts() {
+        let (mut job, mut fleet) = gang(4);
+        job.resume(0.0);
+        mark_running(&job, &mut fleet, 0.0);
+        interrupt(&mut job, &mut fleet, 50.0);
+
+        job.resume(70.0);
+        mark_running(&job, &mut fleet, 70.0);
+        interrupt(&mut job, &mut fleet, 100.0);
+
+        for s in &fleet {
+            assert_eq!(s.run_age, 50.0 + 30.0);
+        }
+        assert_eq!(job.remaining, 10_000.0 - 80.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Diagnosis (inputs 12–13): after a job-killing failure, root-cause
+//! analysis identifies a culprit server — maybe, and maybe the wrong one.
+//!
+//! * With probability `diagnosis_prob` a server is identified at all;
+//!   otherwise the failed server is restarted in place with no repair
+//!   (the failure was never attributed, as happens with e.g. NCCL timeouts
+//!   whose origin is ambiguous).
+//! * Given a diagnosis, with probability `diagnosis_uncertainty` the
+//!   *wrong* server is blamed: an innocent peer is pulled for repair while
+//!   the true culprit keeps running.
+
+use crate::config::Params;
+use crate::model::events::ServerId;
+use crate::sim::rng::Rng;
+
+/// The outcome of diagnosing one failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Diagnosis {
+    /// Nothing identified: restart the failed server in place.
+    Undiagnosed,
+    /// The true culprit was identified and goes to repair.
+    Correct(ServerId),
+    /// An innocent peer was blamed; the culprit stays in service.
+    Wrong { blamed: ServerId, culprit: ServerId },
+}
+
+/// Run the diagnosis policy for a failure of `failed` among `peers`
+/// (the other active servers in the gang).
+pub fn diagnose(
+    p: &Params,
+    failed: ServerId,
+    peers: &[ServerId],
+    rng: &mut Rng,
+) -> Diagnosis {
+    if !rng.bernoulli(p.diagnosis_prob) {
+        return Diagnosis::Undiagnosed;
+    }
+    if p.diagnosis_uncertainty > 0.0
+        && !peers.is_empty()
+        && rng.bernoulli(p.diagnosis_uncertainty)
+    {
+        let blamed = peers[rng.next_below(peers.len() as u64) as usize];
+        debug_assert_ne!(blamed, failed);
+        return Diagnosis::Wrong { blamed, culprit: failed };
+    }
+    Diagnosis::Correct(failed)
+}
+
+/// Allocation-free variant for the hot path: `gang` is the full active
+/// list *including* `failed`; a wrong blame is rejection-sampled directly
+/// from it (no peers vector is materialized).
+pub fn diagnose_in_gang(
+    p: &Params,
+    failed: ServerId,
+    gang: &[ServerId],
+    rng: &mut Rng,
+) -> Diagnosis {
+    if !rng.bernoulli(p.diagnosis_prob) {
+        return Diagnosis::Undiagnosed;
+    }
+    if p.diagnosis_uncertainty > 0.0
+        && gang.len() > 1
+        && rng.bernoulli(p.diagnosis_uncertainty)
+    {
+        // Uniform over gang \ {failed} by rejection (E[draws] ≤ 1 + 1/n).
+        loop {
+            let blamed = gang[rng.next_below(gang.len() as u64) as usize];
+            if blamed != failed {
+                return Diagnosis::Wrong { blamed, culprit: failed };
+            }
+        }
+    }
+    Diagnosis::Correct(failed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn peers() -> Vec<ServerId> {
+        (1..100).collect()
+    }
+
+    #[test]
+    fn always_diagnosed_when_prob_one() {
+        let mut p = Params::small_test();
+        p.diagnosis_prob = 1.0;
+        p.diagnosis_uncertainty = 0.0;
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            assert_eq!(diagnose(&p, 0, &peers(), &mut rng), Diagnosis::Correct(0));
+        }
+    }
+
+    #[test]
+    fn never_diagnosed_when_prob_zero() {
+        let mut p = Params::small_test();
+        p.diagnosis_prob = 0.0;
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            assert_eq!(diagnose(&p, 0, &peers(), &mut rng), Diagnosis::Undiagnosed);
+        }
+    }
+
+    #[test]
+    fn uncertainty_blames_a_peer() {
+        let mut p = Params::small_test();
+        p.diagnosis_prob = 1.0;
+        p.diagnosis_uncertainty = 1.0;
+        let mut rng = Rng::new(3);
+        let ps = peers();
+        for _ in 0..1000 {
+            match diagnose(&p, 0, &ps, &mut rng) {
+                Diagnosis::Wrong { blamed, culprit } => {
+                    assert_eq!(culprit, 0);
+                    assert!(ps.contains(&blamed));
+                }
+                other => panic!("expected Wrong, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn uncertainty_with_no_peers_falls_back_to_correct() {
+        let mut p = Params::small_test();
+        p.diagnosis_prob = 1.0;
+        p.diagnosis_uncertainty = 1.0;
+        let mut rng = Rng::new(4);
+        assert_eq!(diagnose(&p, 7, &[], &mut rng), Diagnosis::Correct(7));
+    }
+
+    #[test]
+    fn rates_match_probabilities() {
+        let mut p = Params::small_test();
+        p.diagnosis_prob = 0.8;
+        p.diagnosis_uncertainty = 0.25;
+        let mut rng = Rng::new(5);
+        let ps = peers();
+        let n = 100_000;
+        let mut undiag = 0;
+        let mut wrong = 0;
+        for _ in 0..n {
+            match diagnose(&p, 0, &ps, &mut rng) {
+                Diagnosis::Undiagnosed => undiag += 1,
+                Diagnosis::Wrong { .. } => wrong += 1,
+                Diagnosis::Correct(_) => {}
+            }
+        }
+        let f_undiag = undiag as f64 / n as f64;
+        let f_wrong = wrong as f64 / n as f64;
+        assert!((f_undiag - 0.2).abs() < 0.01, "undiag={f_undiag}");
+        assert!((f_wrong - 0.8 * 0.25).abs() < 0.01, "wrong={f_wrong}");
+    }
+}

@@ -1,0 +1,50 @@
+//! The simulation's event vocabulary.
+
+/// Server identifier: index into the fleet vector.
+pub type ServerId = u32;
+
+/// What kind of failure fired (determined by which clock won the race).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    Random,
+    Systematic,
+}
+
+/// Which repair stage completed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RepairStage {
+    Automated,
+    Manual,
+}
+
+/// All events the cluster simulation exchanges.
+///
+/// `gen` fields implement lazy cancellation: the handler drops the event if
+/// the carried generation no longer matches the entity's current one (the
+/// coordinator bumps generations when it interrupts the gang).
+#[derive(Clone, Copy, Debug)]
+pub enum Ev {
+    /// A running server's failure clock fired (per-server path; used for
+    /// age-dependent non-exponential distributions).
+    Fail { server: ServerId, gen: u64, kind: FailureKind },
+    /// A gang's *first* failure clock fired (exponential fast path: the
+    /// minimum of N exponential clocks is Exp(sum of rates) and the victim
+    /// is rate-proportional, so one event replaces N). `gang_gen` guards
+    /// staleness across interrupts and composition changes (regen).
+    GangFail { job: u32, gang_gen: u64 },
+    /// The job ran failure-free to completion.
+    JobComplete { job: u32, gen: u64 },
+    /// Checkpoint-restore recovery finished; the job may start running.
+    RecoveryDone { job: u32, gen: u64 },
+    /// Host selection finished; recovery starts next.
+    SelectionDone { job: u32, gen: u64 },
+    /// A preempted spare-pool server arrived in the working pool.
+    PreemptArrive { server: ServerId },
+    /// A repair stage completed for a server.
+    RepairDone { server: ServerId, stage: RepairStage },
+    /// Periodic bad-server regeneration tick (assumption 1, case 2).
+    BadRegen,
+    /// A scripted failure injection (see [`crate::trace::inject`]);
+    /// carries the index into the injection plan.
+    Inject { idx: usize },
+}

@@ -1,0 +1,199 @@
+//! The AI training job: gang semantics, checkpointed progress, phases.
+//!
+//! The paper's §II-A model: the job needs `job_size` servers computing in
+//! task-synchronous parallelism; any active server's failure kills the
+//! whole iteration; asynchronous checkpoints mean work completed *before*
+//! the failure is preserved and only the recovery latency is paid.
+
+use crate::model::events::ServerId;
+use crate::sim::event::Generation;
+use crate::sim::Time;
+
+/// Job lifecycle phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobPhase {
+    /// All `job_size` active servers computing.
+    Running,
+    /// Host selection in progress (standbys were exhausted).
+    Selecting,
+    /// Checkpoint restore in progress (after swap-in or selection).
+    Recovering,
+    /// Not enough servers to reach `job_size`; waiting for arrivals.
+    Stalled,
+    /// Finished.
+    Done,
+}
+
+/// One AI training job. The paper's assumption 6 runs a single job;
+/// `Params::num_jobs` lifts it (the extension the paper names), with all
+/// jobs contending for the same pools and repair shop.
+#[derive(Clone, Debug)]
+pub struct Job {
+    /// Index into the simulation's job table.
+    pub id: u32,
+    pub phase: JobPhase,
+    /// Work remaining, in minutes of failure-free execution.
+    pub remaining: Time,
+    /// When the current running burst started (valid in Running).
+    pub run_start: Time,
+    /// Servers actively computing.
+    pub active: Vec<ServerId>,
+    /// Warm standbys: allotted, powered, not computing.
+    pub standbys: Vec<ServerId>,
+    /// Generation guarding JobComplete / RecoveryDone / SelectionDone.
+    pub gen: Generation,
+    /// When the job entered Stalled (to account stall time).
+    pub stalled_since: Time,
+}
+
+impl Job {
+    pub fn new(job_len: Time) -> Self {
+        Self::with_id(0, job_len)
+    }
+
+    pub fn with_id(id: u32, job_len: Time) -> Self {
+        Job {
+            id,
+            phase: JobPhase::Stalled, // until first host selection completes
+            remaining: job_len,
+            run_start: 0.0,
+            active: Vec::new(),
+            standbys: Vec::new(),
+            gen: Generation::default(),
+            stalled_since: 0.0,
+        }
+    }
+
+    /// Total servers currently allotted to the job.
+    pub fn allotted(&self) -> usize {
+        self.active.len() + self.standbys.len()
+    }
+
+    /// Commit the progress of a running burst that ends now.
+    /// Returns the burst duration.
+    pub fn pause(&mut self, now: Time) -> Time {
+        debug_assert_eq!(self.phase, JobPhase::Running);
+        let ran = now - self.run_start;
+        debug_assert!(ran >= -1e-9, "negative burst {ran}");
+        self.remaining = (self.remaining - ran).max(0.0);
+        ran.max(0.0)
+    }
+
+    /// Enter the running phase at `now`; caller schedules JobComplete.
+    pub fn resume(&mut self, now: Time) {
+        self.phase = JobPhase::Running;
+        self.run_start = now;
+    }
+
+    /// Apply checkpoint-granularity loss after a failure (extension knob):
+    /// with checkpoints committed every `interval` minutes of useful work,
+    /// progress past the last committed checkpoint is lost. Returns the
+    /// work lost. `interval == 0` models the paper's continuous
+    /// asynchronous checkpointing (no loss).
+    pub fn apply_checkpoint_loss(&mut self, interval: Time, job_len: Time) -> Time {
+        if interval <= 0.0 {
+            return 0.0;
+        }
+        let done = job_len - self.remaining;
+        let committed = (done / interval).floor() * interval;
+        let lost = done - committed;
+        self.remaining += lost;
+        lost
+    }
+
+    /// Remove a server from the job's bookkeeping (wherever it sits).
+    /// Returns true if it was part of the job.
+    pub fn remove(&mut self, id: ServerId) -> bool {
+        if let Some(i) = self.active.iter().position(|&s| s == id) {
+            self.active.swap_remove(i);
+            return true;
+        }
+        if let Some(i) = self.standbys.iter().position(|&s| s == id) {
+            self.standbys.swap_remove(i);
+            return true;
+        }
+        false
+    }
+
+    /// Promote one standby to active; returns it.
+    pub fn promote_standby(&mut self) -> Option<ServerId> {
+        let s = self.standbys.pop()?;
+        self.active.push(s);
+        Some(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pause_commits_progress() {
+        let mut j = Job::new(1000.0);
+        j.resume(10.0);
+        let ran = j.pause(110.0);
+        assert_eq!(ran, 100.0);
+        assert_eq!(j.remaining, 900.0);
+    }
+
+    #[test]
+    fn pause_clamps_at_zero() {
+        let mut j = Job::new(50.0);
+        j.resume(0.0);
+        j.pause(80.0);
+        assert_eq!(j.remaining, 0.0);
+    }
+
+    #[test]
+    fn checkpoint_loss_rounds_down_to_interval() {
+        let mut j = Job::new(1000.0);
+        j.resume(0.0);
+        j.pause(100.0); // done = 100
+        // Checkpoints every 30: committed = 90, lose 10.
+        let lost = j.apply_checkpoint_loss(30.0, 1000.0);
+        assert!((lost - 10.0).abs() < 1e-9);
+        assert!((j.remaining - 910.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn checkpoint_loss_zero_interval_is_lossless() {
+        let mut j = Job::new(1000.0);
+        j.resume(0.0);
+        j.pause(123.0);
+        assert_eq!(j.apply_checkpoint_loss(0.0, 1000.0), 0.0);
+        assert_eq!(j.remaining, 877.0);
+    }
+
+    #[test]
+    fn checkpoint_loss_at_exact_boundary_is_zero() {
+        let mut j = Job::new(1000.0);
+        j.resume(0.0);
+        j.pause(90.0);
+        let lost = j.apply_checkpoint_loss(30.0, 1000.0);
+        assert!(lost.abs() < 1e-9);
+    }
+
+    #[test]
+    fn remove_from_active_and_standby() {
+        let mut j = Job::new(10.0);
+        j.active = vec![1, 2, 3];
+        j.standbys = vec![4, 5];
+        assert!(j.remove(2));
+        assert!(j.remove(5));
+        assert!(!j.remove(99));
+        assert_eq!(j.active.len(), 2);
+        assert_eq!(j.standbys.len(), 1);
+        assert_eq!(j.allotted(), 3);
+    }
+
+    #[test]
+    fn promote_standby_moves_server() {
+        let mut j = Job::new(10.0);
+        j.standbys = vec![7];
+        let s = j.promote_standby().unwrap();
+        assert_eq!(s, 7);
+        assert_eq!(j.active, vec![7]);
+        assert!(j.standbys.is_empty());
+        assert!(j.promote_standby().is_none());
+    }
+}

@@ -1,0 +1,32 @@
+//! The AIReSim model: the paper's five modules (§III-C) plus the
+//! supporting subsystems they imply.
+//!
+//! | paper module | here |
+//! |---|---|
+//! | 1. Server       | [`server`] (state machine, failure clocks) |
+//! | 2. Coordinator  | [`coordinator`] (gang interrupt propagation) |
+//! | 3. Scheduler    | [`scheduler`] (host selection, warm standbys) |
+//! | 4. Repairs      | [`repair`] (auto→manual pipeline, capacity) |
+//! | 5. Pool         | [`pool`] (working/spare pools, preemption) |
+//!
+//! plus [`job`] (progress + checkpoint semantics), [`diagnosis`]
+//! (inputs 12–13), [`retirement`] (failure-score retirement, §II-B),
+//! [`regen`] (bad-server regeneration, assumption 1 case 2), and
+//! [`cluster`] — the [`cluster::Simulation`] event loop that composes all
+//! of the above, and [`outputs`] — the measured outputs (§III-B).
+
+pub mod cluster;
+pub mod coordinator;
+pub mod diagnosis;
+pub mod events;
+pub mod job;
+pub mod outputs;
+pub mod pool;
+pub mod regen;
+pub mod repair;
+pub mod retirement;
+pub mod scheduler;
+pub mod server;
+
+pub use cluster::Simulation;
+pub use outputs::RunOutputs;

@@ -1,0 +1,81 @@
+//! Measured outputs of one simulation run (§III-B): total training time,
+//! failure counts by kind, preemptions, repair counts, run durations —
+//! plus the extended accounting the examples and benches report.
+
+use crate::sim::Time;
+
+/// Everything one run measures.
+#[derive(Clone, Debug, Default)]
+pub struct RunOutputs {
+    /// Output 1: total time to train the job (wall-clock minutes).
+    /// With `num_jobs > 1`: the time the *last* job finishes.
+    pub makespan: Time,
+    /// Per-job completion times (length = `num_jobs`; 0.0 if unfinished).
+    pub per_job_makespans: Vec<Time>,
+    /// Did every job finish before `max_sim_time`?
+    pub completed: bool,
+
+    /// Output 2: failures, total and by kind.
+    pub failures_total: u64,
+    pub failures_random: u64,
+    pub failures_systematic: u64,
+
+    /// Output 3: spare-pool preemptions.
+    pub preemptions: u64,
+    /// Preemption cost charged (minutes of other-job work, assumption 7).
+    pub preemption_cost: f64,
+
+    /// Output 4: repairs by stage.
+    pub repairs_auto: u64,
+    pub repairs_manual: u64,
+
+    /// Output 5: mean time between interruptions while running.
+    pub avg_run_duration: Time,
+
+    // ---- extended accounting ----
+    /// Host selections performed (standby-exhausted restarts).
+    pub host_selections: u64,
+    /// Failures absorbed by a warm-standby swap (no host selection).
+    pub standby_swaps: u64,
+    /// Total time the job sat stalled waiting for servers.
+    pub stall_time: Time,
+    /// Total time spent in checkpoint-restore recovery.
+    pub recovery_total: Time,
+    /// Servers permanently retired.
+    pub retirements: u64,
+    /// Failures where no server was identified (restart in place).
+    pub undiagnosed: u64,
+    /// Failures where the wrong server was blamed.
+    pub wrong_diagnoses: u64,
+    /// Servers that turned bad via regeneration ticks.
+    pub regenerated_bad: u64,
+    /// Useful work lost to checkpoint granularity (minutes; 0 under the
+    /// paper's continuous asynchronous checkpointing).
+    pub work_lost: Time,
+    /// Events the engine delivered (perf accounting).
+    pub events_delivered: u64,
+}
+
+impl RunOutputs {
+    /// Effective utilization: failure-free length / makespan.
+    pub fn utilization(&self, job_len: Time) -> f64 {
+        if self.makespan > 0.0 {
+            job_len / self.makespan
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_basic() {
+        let o = RunOutputs { makespan: 2000.0, ..Default::default() };
+        assert!((o.utilization(1000.0) - 0.5).abs() < 1e-12);
+        let z = RunOutputs::default();
+        assert_eq!(z.utilization(1000.0), 0.0);
+    }
+}

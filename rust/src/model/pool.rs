@@ -1,0 +1,188 @@
+//! Paper module 5 — **Pool**: working-pool and spare-pool bookkeeping.
+//!
+//! The working pool holds powered, job-ready servers (idle ones are
+//! immediately allocatable). The spare pool runs other workloads; pulling
+//! a server from it requires preempting that work (`waiting_time`) and is
+//! counted as a preemption with an optional per-server cost (assumption 7).
+//! When pressure subsides, borrowed servers flow back to the spare pool.
+
+use crate::model::events::ServerId;
+use crate::model::server::{Home, Server, ServerState};
+
+/// Index structures over the fleet; the authoritative state lives in each
+/// [`Server`] and the pool keeps the free-lists consistent with it.
+#[derive(Clone, Debug, Default)]
+pub struct Pools {
+    /// Idle servers in the working pool (allocatable now).
+    idle: Vec<ServerId>,
+    /// Servers in the spare pool (preemptable).
+    spares: Vec<ServerId>,
+    /// Servers in flight from spare to working pool.
+    pub in_transit: u32,
+    /// Net count of servers borrowed from the spare pool.
+    pub borrowed: u32,
+    /// Stats: total preemptions performed.
+    pub preemptions: u64,
+    /// Stats: accumulated preemption cost (minutes of other-job work).
+    pub preemption_cost_total: f64,
+}
+
+impl Pools {
+    /// Build from the initial fleet (everyone idle in their home pool).
+    pub fn from_fleet(fleet: &[Server]) -> Pools {
+        let mut p = Pools::default();
+        for s in fleet {
+            match s.state {
+                ServerState::WorkingIdle => p.idle.push(s.id),
+                ServerState::SparePool => p.spares.push(s.id),
+                _ => {}
+            }
+        }
+        p
+    }
+
+    pub fn idle_count(&self) -> usize {
+        self.idle.len()
+    }
+
+    pub fn spare_count(&self) -> usize {
+        self.spares.len()
+    }
+
+    /// Move the idle entry at position `k` to the back of the free-list
+    /// (supports the Random selection policy: swap-then-pop is uniform).
+    pub fn swap_idle_to_back(&mut self, k: usize) {
+        let last = self.idle.len() - 1;
+        self.idle.swap(k, last);
+    }
+
+    /// Take one idle working-pool server (LIFO: cache-warm first).
+    pub fn take_idle(&mut self, fleet: &mut [Server]) -> Option<ServerId> {
+        let id = self.idle.pop()?;
+        debug_assert_eq!(fleet[id as usize].state, ServerState::WorkingIdle);
+        Some(id)
+    }
+
+    /// Return a server to the working pool's idle list.
+    pub fn add_idle(&mut self, fleet: &mut [Server], id: ServerId) {
+        fleet[id as usize].state = ServerState::WorkingIdle;
+        self.idle.push(id);
+    }
+
+    /// Begin preempting one spare-pool server (caller schedules its
+    /// `PreemptArrive` after `waiting_time`). Returns None if the spare
+    /// pool is exhausted.
+    pub fn start_preempt(
+        &mut self,
+        fleet: &mut [Server],
+        cost_per_server: f64,
+    ) -> Option<ServerId> {
+        let id = self.spares.pop()?;
+        let s = &mut fleet[id as usize];
+        debug_assert_eq!(s.state, ServerState::SparePool);
+        s.state = ServerState::SpareTransit;
+        self.in_transit += 1;
+        self.borrowed += 1;
+        self.preemptions += 1;
+        self.preemption_cost_total += cost_per_server;
+        Some(id)
+    }
+
+    /// A preempted server arrived in the working pool (caller routes it).
+    pub fn arrive(&mut self, fleet: &mut [Server], id: ServerId) {
+        debug_assert_eq!(fleet[id as usize].state, ServerState::SpareTransit);
+        debug_assert!(self.in_transit > 0);
+        self.in_transit -= 1;
+    }
+
+    /// Send a server (back) to the spare pool.
+    pub fn add_spare(&mut self, fleet: &mut [Server], id: ServerId) {
+        fleet[id as usize].state = ServerState::SparePool;
+        self.spares.push(id);
+        self.borrowed = self.borrowed.saturating_sub(1);
+    }
+
+    /// Route a server that just became free: borrowed spare-home servers
+    /// drain back to the spare pool once the working pool is whole again;
+    /// everyone else idles in the working pool.
+    pub fn route_freed(&mut self, fleet: &mut [Server], id: ServerId) {
+        if fleet[id as usize].home == Home::Spare && self.borrowed > 0 {
+            self.add_spare(fleet, id);
+        } else {
+            self.add_idle(fleet, id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Params;
+    use crate::model::server::build_fleet;
+    use crate::sim::rng::Rng;
+
+    fn setup() -> (Vec<Server>, Pools) {
+        let p = Params::small_test(); // 72 working, 16 spare
+        let mut rng = Rng::new(1);
+        let fleet = build_fleet(&p, &mut rng);
+        let pools = Pools::from_fleet(&fleet);
+        (fleet, pools)
+    }
+
+    #[test]
+    fn initial_counts() {
+        let (_, pools) = setup();
+        assert_eq!(pools.idle_count(), 72);
+        assert_eq!(pools.spare_count(), 16);
+        assert_eq!(pools.in_transit, 0);
+        assert_eq!(pools.borrowed, 0);
+    }
+
+    #[test]
+    fn take_and_return_idle() {
+        let (mut fleet, mut pools) = setup();
+        let id = pools.take_idle(&mut fleet).unwrap();
+        assert_eq!(pools.idle_count(), 71);
+        pools.add_idle(&mut fleet, id);
+        assert_eq!(pools.idle_count(), 72);
+        assert_eq!(fleet[id as usize].state, ServerState::WorkingIdle);
+    }
+
+    #[test]
+    fn preemption_lifecycle() {
+        let (mut fleet, mut pools) = setup();
+        let id = pools.start_preempt(&mut fleet, 5.0).unwrap();
+        assert_eq!(fleet[id as usize].state, ServerState::SpareTransit);
+        assert_eq!(pools.in_transit, 1);
+        assert_eq!(pools.borrowed, 1);
+        assert_eq!(pools.preemptions, 1);
+        assert_eq!(pools.preemption_cost_total, 5.0);
+
+        pools.arrive(&mut fleet, id);
+        assert_eq!(pools.in_transit, 0);
+
+        // Borrowed spare-home server drains back to the spare pool.
+        pools.route_freed(&mut fleet, id);
+        assert_eq!(pools.spare_count(), 16);
+        assert_eq!(pools.borrowed, 0);
+    }
+
+    #[test]
+    fn exhausted_spare_pool_returns_none() {
+        let (mut fleet, mut pools) = setup();
+        for _ in 0..16 {
+            assert!(pools.start_preempt(&mut fleet, 0.0).is_some());
+        }
+        assert!(pools.start_preempt(&mut fleet, 0.0).is_none());
+    }
+
+    #[test]
+    fn working_home_server_routes_to_idle() {
+        let (mut fleet, mut pools) = setup();
+        let id = pools.take_idle(&mut fleet).unwrap();
+        fleet[id as usize].state = ServerState::JobActive; // pretend it ran
+        pools.route_freed(&mut fleet, id);
+        assert_eq!(fleet[id as usize].state, ServerState::WorkingIdle);
+        assert_eq!(pools.idle_count(), 72);
+    }
+}

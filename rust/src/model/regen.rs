@@ -1,0 +1,71 @@
+//! Bad-server regeneration (assumption 1, case 2): "bad servers are
+//! regenerated periodically (e.g., end of life aging or new hardware
+//! models being integrated into the cluster)".
+//!
+//! Every `bad_regen_interval` minutes, each currently-good, non-retired
+//! server independently turns bad with probability `bad_regen_fraction`
+//! — a fresh cohort of latent systematic defects entering the fleet.
+
+use crate::config::Params;
+use crate::model::server::{Server, ServerState};
+use crate::sim::rng::Rng;
+
+/// Apply one regeneration tick. Returns how many servers turned bad.
+pub fn regenerate(p: &Params, fleet: &mut [Server], rng: &mut Rng) -> usize {
+    let mut converted = 0;
+    for s in fleet.iter_mut() {
+        if !s.is_bad
+            && s.state != ServerState::Retired
+            && rng.bernoulli(p.bad_regen_fraction)
+        {
+            s.is_bad = true;
+            converted += 1;
+        }
+    }
+    converted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::server::build_fleet;
+
+    #[test]
+    fn zero_fraction_converts_nobody() {
+        let mut p = Params::small_test();
+        p.bad_regen_fraction = 0.0;
+        let mut rng = Rng::new(1);
+        let mut fleet = build_fleet(&p, &mut rng);
+        assert_eq!(regenerate(&p, &mut fleet, &mut rng), 0);
+    }
+
+    #[test]
+    fn conversion_rate_close_to_fraction() {
+        let mut p = Params::small_test();
+        p.systematic_fraction = 0.0; // start all-good
+        p.bad_regen_fraction = 0.1;
+        let mut rng = Rng::new(2);
+        let mut total_good = 0usize;
+        let mut total_converted = 0usize;
+        for seed in 0..200 {
+            let mut fleet = build_fleet(&p, &mut Rng::new(seed));
+            total_good += fleet.len();
+            total_converted += regenerate(&p, &mut fleet, &mut rng);
+        }
+        let rate = total_converted as f64 / total_good as f64;
+        assert!((rate - 0.1).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn already_bad_and_retired_untouched() {
+        let mut p = Params::small_test();
+        p.systematic_fraction = 1.0; // everyone bad
+        p.bad_regen_fraction = 1.0;
+        let mut rng = Rng::new(3);
+        let mut fleet = build_fleet(&p, &mut rng);
+        fleet[0].is_bad = false;
+        fleet[0].state = ServerState::Retired;
+        assert_eq!(regenerate(&p, &mut fleet, &mut rng), 0);
+        assert!(!fleet[0].is_bad, "retired server must not be converted");
+    }
+}

@@ -1,0 +1,242 @@
+//! Paper module 4 — **Repairs**: the serial automated→manual pipeline.
+//!
+//! Every failed (diagnosed) server first undergoes automated test & repair;
+//! with probability `1 - auto_repair_prob` the problem is beyond the
+//! automated scope and escalates to manual repair (§II-B). Either stage may
+//! *silently* fail on a bad server (`*_repair_fail_prob`): the status says
+//! repaired but the systematic defect persists, and the server is
+//! reintegrated anyway [Lin et al., DSN-W'18].
+//!
+//! Repair durations are exponentially distributed with the configured
+//! means (assumption 4); repairs are stateless (assumption 5).
+//!
+//! The `RepairShop` additionally models *finite repair capacity* (an
+//! extension knob, 0 = unlimited): at most `auto_repair_capacity`
+//! concurrent automated fixtures and `manual_repair_capacity` technicians,
+//! with FIFO queues in front of each stage.
+
+use crate::config::Params;
+use crate::model::events::{RepairStage, ServerId};
+use crate::sim::dist::Dist;
+use crate::sim::rng::Rng;
+use crate::sim::Time;
+use std::collections::VecDeque;
+
+/// What happens when an automated repair completes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AutoResult {
+    /// Resolved at the automated stage; if the server was bad,
+    /// `fixed` says whether the defect was actually cured.
+    Resolved { fixed: bool },
+    /// Beyond automated scope: escalate to manual repair.
+    Escalate,
+}
+
+/// Sample the outcome of a completed automated repair.
+pub fn auto_outcome(p: &Params, rng: &mut Rng) -> AutoResult {
+    if rng.bernoulli(p.auto_repair_prob) {
+        AutoResult::Resolved { fixed: !rng.bernoulli(p.auto_repair_fail_prob) }
+    } else {
+        AutoResult::Escalate
+    }
+}
+
+/// Sample whether a completed manual repair actually fixed a bad server.
+pub fn manual_fixed(p: &Params, rng: &mut Rng) -> bool {
+    !rng.bernoulli(p.manual_repair_fail_prob)
+}
+
+/// Sample a repair duration for the given stage (assumption 4).
+pub fn duration(p: &Params, stage: RepairStage, rng: &mut Rng) -> Time {
+    let mean = match stage {
+        RepairStage::Automated => p.auto_repair_time,
+        RepairStage::Manual => p.manual_repair_time,
+    };
+    Dist::exp_mean(mean).sample(rng)
+}
+
+/// Admission decision from the shop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Start immediately; caller schedules RepairDone after the duration.
+    Start,
+    /// Capacity exhausted; the server waits in the stage's FIFO queue.
+    Queued,
+}
+
+/// Finite-capacity repair shop (capacity 0 = unlimited).
+#[derive(Clone, Debug, Default)]
+pub struct RepairShop {
+    in_auto: u32,
+    in_manual: u32,
+    queue_auto: VecDeque<ServerId>,
+    queue_manual: VecDeque<ServerId>,
+    /// Stats: completed repairs per stage.
+    pub completed_auto: u64,
+    pub completed_manual: u64,
+    /// Stats: total queueing delay experienced (minutes · servers).
+    pub max_queue_auto: usize,
+    pub max_queue_manual: usize,
+}
+
+impl RepairShop {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn cap(p: &Params, stage: RepairStage) -> u32 {
+        match stage {
+            RepairStage::Automated => p.auto_repair_capacity,
+            RepairStage::Manual => p.manual_repair_capacity,
+        }
+    }
+
+    /// Try to admit `server` into `stage`.
+    pub fn admit(&mut self, p: &Params, stage: RepairStage, server: ServerId) -> Admission {
+        let cap = Self::cap(p, stage);
+        let (busy, queue) = match stage {
+            RepairStage::Automated => (&mut self.in_auto, &mut self.queue_auto),
+            RepairStage::Manual => (&mut self.in_manual, &mut self.queue_manual),
+        };
+        if cap == 0 || *busy < cap {
+            *busy += 1;
+            Admission::Start
+        } else {
+            queue.push_back(server);
+            match stage {
+                RepairStage::Automated => {
+                    self.max_queue_auto = self.max_queue_auto.max(queue.len())
+                }
+                RepairStage::Manual => {
+                    self.max_queue_manual = self.max_queue_manual.max(queue.len())
+                }
+            }
+            Admission::Queued
+        }
+    }
+
+    /// A repair of `stage` completed: free the slot and return the next
+    /// queued server (if any), which the caller must now start.
+    pub fn complete(&mut self, stage: RepairStage) -> Option<ServerId> {
+        match stage {
+            RepairStage::Automated => {
+                debug_assert!(self.in_auto > 0);
+                self.in_auto -= 1;
+                self.completed_auto += 1;
+                let next = self.queue_auto.pop_front();
+                if next.is_some() {
+                    self.in_auto += 1;
+                }
+                next
+            }
+            RepairStage::Manual => {
+                debug_assert!(self.in_manual > 0);
+                self.in_manual -= 1;
+                self.completed_manual += 1;
+                let next = self.queue_manual.pop_front();
+                if next.is_some() {
+                    self.in_manual += 1;
+                }
+                next
+            }
+        }
+    }
+
+    /// Servers currently inside the shop (busy + queued) — used by the
+    /// conservation property tests.
+    pub fn population(&self) -> usize {
+        (self.in_auto + self.in_manual) as usize
+            + self.queue_auto.len()
+            + self.queue_manual.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_capacity_always_starts() {
+        let p = Params::small_test(); // capacities 0
+        let mut shop = RepairShop::new();
+        for id in 0..1000 {
+            assert_eq!(shop.admit(&p, RepairStage::Automated, id), Admission::Start);
+        }
+        assert_eq!(shop.population(), 1000);
+    }
+
+    #[test]
+    fn finite_capacity_queues() {
+        let mut p = Params::small_test();
+        p.auto_repair_capacity = 2;
+        let mut shop = RepairShop::new();
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 0), Admission::Start);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 1), Admission::Start);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 2), Admission::Queued);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 3), Admission::Queued);
+        // Completion hands the slot to the FIFO head.
+        assert_eq!(shop.complete(RepairStage::Automated), Some(2));
+        assert_eq!(shop.complete(RepairStage::Automated), Some(3));
+        assert_eq!(shop.complete(RepairStage::Automated), None);
+        assert_eq!(shop.complete(RepairStage::Automated), None);
+        assert_eq!(shop.population(), 0);
+        assert_eq!(shop.completed_auto, 4);
+    }
+
+    #[test]
+    fn stages_have_independent_capacity() {
+        let mut p = Params::small_test();
+        p.auto_repair_capacity = 1;
+        p.manual_repair_capacity = 1;
+        let mut shop = RepairShop::new();
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 0), Admission::Start);
+        assert_eq!(shop.admit(&p, RepairStage::Manual, 1), Admission::Start);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 2), Admission::Queued);
+        assert_eq!(shop.admit(&p, RepairStage::Manual, 3), Admission::Queued);
+    }
+
+    #[test]
+    fn outcome_rates_match_probabilities() {
+        let mut p = Params::small_test();
+        p.auto_repair_prob = 0.8;
+        p.auto_repair_fail_prob = 0.4;
+        p.manual_repair_fail_prob = 0.2;
+        let mut rng = Rng::new(1);
+        let n = 200_000;
+        let mut escalated = 0;
+        let mut fixed = 0;
+        let mut resolved = 0;
+        for _ in 0..n {
+            match auto_outcome(&p, &mut rng) {
+                AutoResult::Escalate => escalated += 1,
+                AutoResult::Resolved { fixed: f } => {
+                    resolved += 1;
+                    if f {
+                        fixed += 1;
+                    }
+                }
+            }
+        }
+        assert!((escalated as f64 / n as f64 - 0.2).abs() < 0.01);
+        assert!((fixed as f64 / resolved as f64 - 0.6).abs() < 0.01);
+        let man_fixed = (0..n).filter(|_| manual_fixed(&p, &mut rng)).count();
+        assert!((man_fixed as f64 / n as f64 - 0.8).abs() < 0.01);
+    }
+
+    #[test]
+    fn durations_have_configured_means() {
+        let p = Params::small_test();
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let auto: f64 = (0..n)
+            .map(|_| duration(&p, RepairStage::Automated, &mut rng))
+            .sum::<f64>()
+            / n as f64;
+        assert!((auto - p.auto_repair_time).abs() / p.auto_repair_time < 0.02);
+        let man: f64 = (0..n)
+            .map(|_| duration(&p, RepairStage::Manual, &mut rng))
+            .sum::<f64>()
+            / n as f64;
+        assert!((man - p.manual_repair_time).abs() / p.manual_repair_time < 0.02);
+    }
+}

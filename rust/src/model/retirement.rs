@@ -1,0 +1,84 @@
+//! Server retirement (§II-B): "maintain a score for each server that keeps
+//! track of how often it has failed in a given time period, and remove
+//! servers that exhibit a number of failures exceeding a certain threshold
+//! (within that time period)".
+//!
+//! Disabled at Table I defaults (`retirement_threshold == 0`); the
+//! ablation bench sweeps it.
+
+use crate::config::Params;
+use crate::model::server::Server;
+use crate::sim::Time;
+
+/// Record a failure at `now` against `server`'s sliding-window score and
+/// decide whether the policy retires it.
+pub fn record_and_decide(p: &Params, server: &mut Server, now: Time) -> bool {
+    server.total_failures += 1;
+    if p.retirement_threshold == 0 {
+        return false;
+    }
+    // Maintain the sliding window.
+    let cutoff = now - p.retirement_window;
+    server.failure_times.retain(|&t| t > cutoff);
+    server.failure_times.push(now);
+    server.failure_times.len() >= p.retirement_threshold as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::server::Home;
+
+    fn server() -> Server {
+        Server::new(0, true, Home::Working)
+    }
+
+    #[test]
+    fn disabled_when_threshold_zero() {
+        let p = Params::small_test(); // threshold 0
+        let mut s = server();
+        for i in 0..100 {
+            assert!(!record_and_decide(&p, &mut s, i as f64));
+        }
+        assert_eq!(s.total_failures, 100);
+        // No window bookkeeping when disabled.
+        assert!(s.failure_times.is_empty());
+    }
+
+    #[test]
+    fn retires_at_threshold_within_window() {
+        let mut p = Params::small_test();
+        p.retirement_threshold = 3;
+        p.retirement_window = 100.0;
+        let mut s = server();
+        assert!(!record_and_decide(&p, &mut s, 10.0));
+        assert!(!record_and_decide(&p, &mut s, 20.0));
+        assert!(record_and_decide(&p, &mut s, 30.0));
+    }
+
+    #[test]
+    fn old_failures_age_out() {
+        let mut p = Params::small_test();
+        p.retirement_threshold = 3;
+        p.retirement_window = 100.0;
+        let mut s = server();
+        assert!(!record_and_decide(&p, &mut s, 0.0));
+        assert!(!record_and_decide(&p, &mut s, 50.0));
+        // t=0 falls out of the (t-100, t] window by t=150.
+        assert!(!record_and_decide(&p, &mut s, 150.0));
+        // Window now holds {50?, 150}: 50 is out too at 151+100... check:
+        // at t=150 window is (50,150] -> {150, 50 excluded}. One more
+        // failure soon after should still not trip (2 < 3)...
+        assert!(!record_and_decide(&p, &mut s, 160.0));
+        // ...but a third inside the window does.
+        assert!(record_and_decide(&p, &mut s, 170.0));
+    }
+
+    #[test]
+    fn threshold_one_retires_immediately() {
+        let mut p = Params::small_test();
+        p.retirement_threshold = 1;
+        let mut s = server();
+        assert!(record_and_decide(&p, &mut s, 5.0));
+    }
+}

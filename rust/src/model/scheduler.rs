@@ -1,0 +1,204 @@
+//! Paper module 3 — **Scheduler**: host selection and warm standbys.
+//!
+//! Implements the allocation step of Figure 1: gather the job's surviving
+//! allotment, top it up to `job_size + warm_standbys` from working-pool
+//! idle servers, and if the *active* requirement still cannot be met,
+//! request spare-pool preemptions (the pool charges `waiting_time` before
+//! those arrive). The job can start as soon as `job_size` servers are on
+//! hand — standbys trickle in later.
+//!
+//! Pluggable [`SelectionPolicy`] decides *which* idle servers are taken
+//! (the paper: "implements different methods of choosing servers").
+
+use crate::config::Params;
+use crate::model::events::ServerId;
+use crate::model::job::Job;
+use crate::model::pool::Pools;
+use crate::model::server::{Server, ServerState};
+use crate::sim::rng::Rng;
+
+/// Host-selection policy over the working pool's idle list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SelectionPolicy {
+    /// Take idle servers in LIFO order (cheapest; default).
+    #[default]
+    FirstFit,
+    /// Sample idle servers uniformly (spreads load over the fleet —
+    /// relevant with retirement/regeneration, where placement history
+    /// correlates with badness).
+    Random,
+}
+
+/// Result of one allocation attempt.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllocOutcome {
+    /// Servers to preempt from the spare pool (already marked in transit;
+    /// the caller schedules their `PreemptArrive` events).
+    pub preempted: Vec<ServerId>,
+    /// True if the job now has at least `job_size` servers allotted and
+    /// can proceed to host selection / recovery.
+    pub can_start: bool,
+}
+
+/// Top the job's allotment up toward `job_size + warm_standbys`.
+///
+/// Every taken server enters the job as a *standby*; the caller promotes
+/// standbys to active at start-of-run. Preempted spares join on arrival.
+pub fn allocate(
+    p: &Params,
+    policy: SelectionPolicy,
+    job: &mut Job,
+    pools: &mut Pools,
+    fleet: &mut [Server],
+    rng: &mut Rng,
+) -> AllocOutcome {
+    let target = (p.job_size + p.warm_standbys) as usize;
+
+    // 1. Working-pool idle servers.
+    while job.allotted() < target {
+        let taken = match policy {
+            SelectionPolicy::FirstFit => pools.take_idle(fleet),
+            SelectionPolicy::Random => take_idle_random(pools, fleet, rng),
+        };
+        match taken {
+            Some(id) => {
+                let s = &mut fleet[id as usize];
+                s.state = ServerState::JobStandby;
+                s.assigned_job = Some(job.id);
+                job.standbys.push(id);
+            }
+            None => break,
+        }
+    }
+
+    // 2. Spare-pool preemptions for the remaining shortfall (incl. what is
+    //    already in transit toward us).
+    // (`start_preempt` marks each one in-transit, so `in_transit` already
+    // covers both earlier requests and the ones issued in this loop.)
+    let mut preempted = Vec::new();
+    while job.allotted() + (pools.in_transit as usize) < target {
+        match pools.start_preempt(fleet, p.preemption_cost) {
+            Some(id) => preempted.push(id),
+            None => break, // spare pool exhausted: run degraded
+        }
+    }
+
+    let can_start = job.allotted() >= p.job_size as usize;
+    AllocOutcome { preempted, can_start }
+}
+
+fn take_idle_random(
+    pools: &mut Pools,
+    fleet: &mut [Server],
+    rng: &mut Rng,
+) -> Option<ServerId> {
+    // Uniform choice = swap a random element to the back, then pop.
+    let n = pools.idle_count();
+    if n == 0 {
+        return None;
+    }
+    let k = rng.next_below(n as u64) as usize;
+    pools.swap_idle_to_back(k);
+    pools.take_idle(fleet)
+}
+
+/// Promote standbys until `job_size` servers are active (start-of-run).
+/// Returns false if there were not enough.
+pub fn activate(p: &Params, job: &mut Job, fleet: &mut [Server]) -> bool {
+    while job.active.len() < p.job_size as usize {
+        match job.promote_standby() {
+            Some(id) => fleet[id as usize].state = ServerState::JobActive,
+            None => return false,
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::server::build_fleet;
+
+    fn setup(p: &Params) -> (Job, Pools, Vec<Server>, Rng) {
+        let mut rng = Rng::new(42);
+        let fleet = build_fleet(p, &mut rng);
+        let pools = Pools::from_fleet(&fleet);
+        (Job::new(p.job_len), pools, fleet, rng)
+    }
+
+    #[test]
+    fn initial_allocation_fills_from_working_pool() {
+        let p = Params::small_test(); // job 64 + 4 standby, pool 72
+        let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
+        let out = allocate(&p, SelectionPolicy::FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        assert!(out.can_start);
+        assert!(out.preempted.is_empty());
+        assert_eq!(job.allotted(), 68);
+        assert_eq!(pools.idle_count(), 72 - 68);
+        for &id in &job.standbys {
+            assert_eq!(fleet[id as usize].state, ServerState::JobStandby);
+            assert_eq!(fleet[id as usize].assigned_job, Some(0));
+        }
+    }
+
+    #[test]
+    fn shortfall_triggers_preemption() {
+        let mut p = Params::small_test();
+        p.working_pool = 60; // less than job_size=64
+        p.spare_pool = 16;
+        let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
+        let out = allocate(&p, SelectionPolicy::FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        // 60 idle taken, 8 preemptions requested (target 68), can't start
+        // yet: only 60 on hand < 64.
+        assert!(!out.can_start);
+        assert_eq!(out.preempted.len(), 8);
+        assert_eq!(pools.preemptions, 8);
+        assert_eq!(job.allotted(), 60);
+    }
+
+    #[test]
+    fn degraded_when_everything_exhausted() {
+        let mut p = Params::small_test();
+        p.working_pool = 50;
+        p.spare_pool = 4;
+        let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
+        let out = allocate(&p, SelectionPolicy::FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        assert!(!out.can_start);
+        assert_eq!(out.preempted.len(), 4); // all spares taken
+        assert_eq!(pools.spare_count(), 0);
+    }
+
+    #[test]
+    fn no_double_preempt_for_in_transit() {
+        let mut p = Params::small_test();
+        p.working_pool = 60;
+        let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
+        let first = allocate(&p, SelectionPolicy::FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        assert_eq!(first.preempted.len(), 8);
+        // Re-running allocation while 8 are in transit must not preempt more.
+        let second = allocate(&p, SelectionPolicy::FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        assert!(second.preempted.is_empty());
+    }
+
+    #[test]
+    fn activate_promotes_to_job_size() {
+        let p = Params::small_test();
+        let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
+        allocate(&p, SelectionPolicy::FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        assert!(activate(&p, &mut job, &mut fleet));
+        assert_eq!(job.active.len(), 64);
+        assert_eq!(job.standbys.len(), 4);
+        for &id in &job.active {
+            assert_eq!(fleet[id as usize].state, ServerState::JobActive);
+        }
+    }
+
+    #[test]
+    fn random_policy_allocates_same_count() {
+        let p = Params::small_test();
+        let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
+        let out = allocate(&p, SelectionPolicy::Random, &mut job, &mut pools, &mut fleet, &mut rng);
+        assert!(out.can_start);
+        assert_eq!(job.allotted(), 68);
+    }
+}

@@ -1,0 +1,250 @@
+//! Paper module 1 — **Server**: per-server identity, state machine, and
+//! failure clocks.
+//!
+//! A server is either *good* (random failures only) or *bad*
+//! (additional systematic failure process, assumption 1); which one it is
+//! is hidden from every policy — only the failure events reveal it, which
+//! is exactly the paper's observability model.
+
+use crate::config::Params;
+use crate::model::events::{FailureKind, ServerId};
+use crate::sim::event::Generation;
+use crate::sim::rng::Rng;
+use crate::sim::Time;
+
+/// Where a server lives when it is not doing anything for the job.
+/// Repaired servers are routed back to their home pool when the job does
+/// not reclaim them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Home {
+    Working,
+    Spare,
+}
+
+/// The server state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerState {
+    /// In the working pool, idle, immediately allocatable.
+    WorkingIdle,
+    /// Allocated to the job and actively computing (failure clocks armed).
+    JobActive,
+    /// Allocated to the job as a warm standby (powered, not computing —
+    /// assumption 7: no failure clocks).
+    JobStandby,
+    /// In the spare pool, running other (unmodeled) workloads.
+    SparePool,
+    /// Being preempted from the spare pool; arrives after `waiting_time`.
+    SpareTransit,
+    /// Undergoing automated test & repair.
+    AutoRepair,
+    /// Undergoing manual repair.
+    ManualRepair,
+    /// Queued for a repair stage (finite repair-shop capacity extension).
+    RepairQueued,
+    /// Permanently removed from the cluster (§II-B retirement).
+    Retired,
+}
+
+/// One server in the fleet.
+#[derive(Clone, Debug)]
+pub struct Server {
+    pub id: ServerId,
+    /// Hidden systematic-failure-prone identity.
+    pub is_bad: bool,
+    pub state: ServerState,
+    pub home: Home,
+    /// Generation for lazy cancellation of in-flight failure events.
+    pub gen: Generation,
+    /// The job this server is allotted to (active or standby), if any;
+    /// repaired servers return to *their* job without host selection
+    /// (§II-B "a server is returned to the job after repair if it was
+    /// originally assigned to the same job").
+    pub assigned_job: Option<u32>,
+    /// Accumulated *running* age since the last repair/renewal — drives
+    /// age-conditional sampling for non-exponential failure clocks.
+    pub run_age: Time,
+    /// When the server last transitioned to JobActive (to accumulate age).
+    pub active_since: Time,
+    /// Failure timestamps inside the retirement window (module
+    /// `retirement` maintains it).
+    pub failure_times: Vec<Time>,
+    /// Lifetime failure count (stats).
+    pub total_failures: u32,
+}
+
+impl Server {
+    pub fn new(id: ServerId, is_bad: bool, home: Home) -> Self {
+        let state = match home {
+            Home::Working => ServerState::WorkingIdle,
+            Home::Spare => ServerState::SparePool,
+        };
+        Server {
+            id,
+            is_bad,
+            state,
+            home,
+            gen: Generation::default(),
+            assigned_job: None,
+            run_age: 0.0,
+            active_since: 0.0,
+            failure_times: Vec::new(),
+            total_failures: 0,
+        }
+    }
+
+    /// Sample the time-to-next-failure and its kind for a server that just
+    /// started computing: the race between the random clock (all servers)
+    /// and the systematic clock (bad servers only).
+    ///
+    /// For non-exponential families the draw is conditioned on the
+    /// accumulated running age (renewal at repair).
+    pub fn sample_failure(&self, p: &Params, rng: &mut Rng) -> (Time, FailureKind) {
+        let d_rand = p.failure_dist.with_rate(p.random_failure_rate);
+        let t_rand = d_rand.sample_remaining(rng, self.run_age);
+        if self.is_bad {
+            let d_sys = p.failure_dist.with_rate(p.systematic_failure_rate);
+            let t_sys = d_sys.sample_remaining(rng, self.run_age);
+            if t_sys < t_rand {
+                return (t_sys, FailureKind::Systematic);
+            }
+        }
+        (t_rand, FailureKind::Random)
+    }
+
+    /// Is the server currently armed with failure clocks?
+    pub fn is_computing(&self) -> bool {
+        self.state == ServerState::JobActive
+    }
+
+    /// Renewal after a completed repair: age resets (tests/repairs restore
+    /// the server to a known-fresh condition at the abstraction level of
+    /// assumption 3).
+    pub fn renew(&mut self) {
+        self.run_age = 0.0;
+    }
+}
+
+/// Build the initial fleet: `working_pool` servers homed Working plus
+/// `spare_pool` homed Spare, with `systematic_fraction` of the whole fleet
+/// marked bad, chosen uniformly at random (hidden identity).
+pub fn build_fleet(p: &Params, rng: &mut Rng) -> Vec<Server> {
+    let total = p.total_servers() as usize;
+    let n_bad = ((total as f64) * p.systematic_fraction).round() as usize;
+    // Choose the bad set by shuffling ids.
+    let mut ids: Vec<u32> = (0..total as u32).collect();
+    rng.shuffle(&mut ids);
+    let mut is_bad = vec![false; total];
+    for &id in ids.iter().take(n_bad) {
+        is_bad[id as usize] = true;
+    }
+    (0..total as u32)
+        .map(|id| {
+            let home = if id < p.working_pool { Home::Working } else { Home::Spare };
+            Server::new(id, is_bad[id as usize], home)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_sizes_and_homes() {
+        let p = Params::small_test();
+        let mut rng = Rng::new(1);
+        let fleet = build_fleet(&p, &mut rng);
+        assert_eq!(fleet.len(), p.total_servers() as usize);
+        let working = fleet.iter().filter(|s| s.home == Home::Working).count();
+        let spare = fleet.iter().filter(|s| s.home == Home::Spare).count();
+        assert_eq!(working, p.working_pool as usize);
+        assert_eq!(spare, p.spare_pool as usize);
+        for s in &fleet {
+            match s.home {
+                Home::Working => assert_eq!(s.state, ServerState::WorkingIdle),
+                Home::Spare => assert_eq!(s.state, ServerState::SparePool),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_fraction_is_exact_count() {
+        let mut p = Params::small_test();
+        p.systematic_fraction = 0.25;
+        let mut rng = Rng::new(2);
+        let fleet = build_fleet(&p, &mut rng);
+        let bad = fleet.iter().filter(|s| s.is_bad).count();
+        let want = ((p.total_servers() as f64) * 0.25).round() as usize;
+        assert_eq!(bad, want);
+    }
+
+    #[test]
+    fn bad_set_varies_with_seed() {
+        let mut p = Params::small_test();
+        p.systematic_fraction = 0.3;
+        let f1 = build_fleet(&p, &mut Rng::new(1));
+        let f2 = build_fleet(&p, &mut Rng::new(2));
+        let b1: Vec<u32> = f1.iter().filter(|s| s.is_bad).map(|s| s.id).collect();
+        let b2: Vec<u32> = f2.iter().filter(|s| s.is_bad).map(|s| s.id).collect();
+        assert_ne!(b1, b2);
+    }
+
+    #[test]
+    fn good_servers_never_fail_systematically() {
+        let p = Params::small_test();
+        let s = Server::new(0, false, Home::Working);
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let (_, kind) = s.sample_failure(&p, &mut rng);
+            assert_eq!(kind, FailureKind::Random);
+        }
+    }
+
+    #[test]
+    fn bad_servers_fail_mostly_systematically() {
+        let p = Params::small_test(); // systematic rate = 5x random
+        let s = Server::new(0, true, Home::Working);
+        let mut rng = Rng::new(4);
+        let n = 10_000;
+        let sys = (0..n)
+            .filter(|_| {
+                matches!(s.sample_failure(&p, &mut rng).1, FailureKind::Systematic)
+            })
+            .count();
+        // Race of Exp(r) vs Exp(5r): P(systematic wins) = 5/6.
+        let frac = sys as f64 / n as f64;
+        assert!((frac - 5.0 / 6.0).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn failure_race_mean_rate() {
+        // Bad server: min of the two exponential clocks ~ Exp(r_r + r_s).
+        let p = Params::small_test();
+        let s = Server::new(0, true, Home::Working);
+        let mut rng = Rng::new(5);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| s.sample_failure(&p, &mut rng).0).sum::<f64>() / n as f64;
+        let want = 1.0 / (p.random_failure_rate + p.systematic_failure_rate);
+        assert!((mean - want).abs() / want < 0.03, "mean={mean} want={want}");
+    }
+
+    #[test]
+    fn zero_rates_never_fire() {
+        let mut p = Params::small_test();
+        p.random_failure_rate = 0.0;
+        p.systematic_failure_rate = 0.0;
+        let s = Server::new(0, true, Home::Working);
+        let mut rng = Rng::new(6);
+        let (t, _) = s.sample_failure(&p, &mut rng);
+        assert_eq!(t, f64::INFINITY);
+    }
+
+    #[test]
+    fn renew_resets_age() {
+        let mut s = Server::new(0, false, Home::Working);
+        s.run_age = 500.0;
+        s.renew();
+        assert_eq!(s.run_age, 0.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Report emitters: render sweep results as aligned text tables, CSV, and
+//! the paper's figure series (Fig 2's grouped columns), plus the
+//! sensitivity ranking the §IV analysis performs.
+
+use crate::stats::Summary;
+use crate::sweep::SweepResult;
+
+/// Render a sweep as an aligned text table of one metric's summary.
+pub fn text_table(result: &SweepResult, metric: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {} — {} ==\n", result.title, metric));
+    out.push_str(&format!(
+        "{:<44} {:>6} {:>14} {:>12} {:>14} {:>14} {:>14}\n",
+        "point", "n", "mean", "std", "median", "p95", "max"
+    ));
+    for pr in &result.points {
+        match pr.summary(metric) {
+            Some(s) => out.push_str(&format!(
+                "{:<44} {:>6} {:>14.3} {:>12.3} {:>14.3} {:>14.3} {:>14.3}\n",
+                pr.point.label(),
+                s.n,
+                s.mean,
+                s.std,
+                s.median,
+                s.p95,
+                s.max
+            )),
+            None => out.push_str(&format!("{:<44} (no data)\n", pr.point.label())),
+        }
+    }
+    out
+}
+
+/// Render a sweep as CSV (all points × one metric's full summary).
+pub fn csv(result: &SweepResult, metric: &str) -> String {
+    let mut out = String::new();
+    // Header: the override parameter names of the first point.
+    let param_names: Vec<&str> = result
+        .points
+        .first()
+        .map(|p| p.point.overrides.iter().map(|(n, _)| n.as_str()).collect())
+        .unwrap_or_default();
+    out.push_str(&param_names.join(","));
+    out.push_str(",metric,n,mean,std,min,p25,median,p75,p95,p99,max\n");
+    for pr in &result.points {
+        let vals: Vec<String> =
+            pr.point.overrides.iter().map(|(_, v)| format!("{v}")).collect();
+        let s = match pr.summary(metric) {
+            Some(s) => s,
+            None => continue,
+        };
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            vals.join(","),
+            metric,
+            s.n,
+            s.mean,
+            s.std,
+            s.min,
+            s.p25,
+            s.median,
+            s.p75,
+            s.p95,
+            s.p99,
+            s.max
+        ));
+    }
+    out
+}
+
+/// Figure-2-style series: for a two-way sweep with overrides
+/// `[(x, vx), (y, vy)]`, print one labelled `(x, y)` column per point with
+/// the metric's mean — the same "(waiting time, working pool size)" axis
+/// labels the paper's bar charts use.
+pub fn figure_series(result: &SweepResult, metric: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {} — {} (mean) ==\n", result.title, metric));
+    let max_mean = result
+        .points
+        .iter()
+        .filter_map(|p| p.summary(metric))
+        .map(|s| s.mean)
+        .fold(0.0f64, f64::max);
+    for pr in &result.points {
+        let label: Vec<String> =
+            pr.point.overrides.iter().map(|(_, v)| format!("{v}")).collect();
+        if let Some(s) = pr.summary(metric) {
+            let bar_len = if max_mean > 0.0 {
+                ((s.mean / max_mean) * 48.0).round() as usize
+            } else {
+                0
+            };
+            out.push_str(&format!(
+                "({:<20}) {:>14.2} ± {:<10.2} {}\n",
+                label.join(", "),
+                s.mean,
+                s.ci95_halfwidth(),
+                "#".repeat(bar_len)
+            ));
+        }
+    }
+    out
+}
+
+/// Sensitivity ranking (the §IV analysis: which knobs matter): for each
+/// one-way sweep result, the relative spread of the metric's mean across
+/// the swept values.
+pub fn sensitivity(results: &[(String, SweepResult)], metric: &str) -> String {
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    for (name, res) in results {
+        let means: Vec<f64> = res
+            .points
+            .iter()
+            .filter_map(|p| p.summary(metric))
+            .map(|s| s.mean)
+            .collect();
+        if means.is_empty() {
+            continue;
+        }
+        let lo = means.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = means.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let spread = if lo > 0.0 { (hi - lo) / lo } else { 0.0 };
+        rows.push((name.clone(), lo, hi, spread));
+    }
+    rows.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap());
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<32} {:>14} {:>14} {:>10}\n",
+        "parameter", "min mean", "max mean", "spread"
+    ));
+    for (name, lo, hi, spread) in rows {
+        out.push_str(&format!(
+            "{:<32} {:>14.2} {:>14.2} {:>9.1}%\n",
+            name,
+            lo,
+            hi,
+            spread * 100.0
+        ));
+    }
+    out
+}
+
+/// One-line render of a summary (CLI output).
+pub fn summary_line(name: &str, s: &Summary) -> String {
+    format!(
+        "{:<22} n={:<4} mean={:<12.3} std={:<10.3} p50={:<12.3} p95={:<12.3}",
+        name, s.n, s.mean, s.std, s.median, s.p95
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Params;
+    use crate::sweep::{run_sweep, Sweep};
+
+    fn tiny_result() -> SweepResult {
+        let base = Params::small_test();
+        let sweep = Sweep::one_way("test", "recovery_time", &[10.0, 30.0], 3, 1);
+        run_sweep(&base, &sweep, 2)
+    }
+
+    #[test]
+    fn text_table_renders_all_points() {
+        let r = tiny_result();
+        let t = text_table(&r, "makespan");
+        assert!(t.contains("recovery_time=10"));
+        assert!(t.contains("recovery_time=30"));
+        assert!(t.contains("mean"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let r = tiny_result();
+        let c = csv(&r, "failures_total");
+        let lines: Vec<&str> = c.trim().lines().collect();
+        assert_eq!(lines.len(), 3); // header + 2 points
+        assert!(lines[0].starts_with("recovery_time,metric,n,mean"));
+        assert!(lines[1].starts_with("10,failures_total,3,"));
+    }
+
+    #[test]
+    fn figure_series_renders_bars() {
+        let r = tiny_result();
+        let f = figure_series(&r, "makespan");
+        assert!(f.contains('#'));
+        assert!(f.contains('±'));
+    }
+
+    #[test]
+    fn sensitivity_ranks_by_spread() {
+        let base = Params::small_test();
+        let s1 = run_sweep(
+            &base,
+            &Sweep::one_way("a", "recovery_time", &[5.0, 240.0], 4, 1),
+            2,
+        );
+        let s2 = run_sweep(
+            &base,
+            &Sweep::one_way("b", "diagnosis_prob", &[0.79, 0.8], 4, 1),
+            2,
+        );
+        let table = sensitivity(
+            &[("recovery_time".into(), s1), ("diagnosis_prob".into(), s2)],
+            "makespan",
+        );
+        // recovery_time's spread should rank first.
+        let lines: Vec<&str> = table.trim().lines().collect();
+        assert!(lines[1].starts_with("recovery_time"), "got: {table}");
+    }
+}

@@ -1,0 +1,367 @@
+//! Duration distributions for failure inter-arrivals and repair times.
+//!
+//! The paper assumes Exponential arrivals (assumption 2) but explicitly
+//! supports LogNormal and Weibull and "user-specified distributions"; all
+//! four are provided here, plus Deterministic (useful in tests) and
+//! Empirical (resampling from a trace).
+//!
+//! Non-exponential failure clocks need *age-conditional* sampling: when a
+//! job is interrupted and later resumed, the server's remaining lifetime
+//! must be drawn conditional on having survived its accumulated run age —
+//! [`Dist::sample_remaining`] implements the conditional inverse-CDF for
+//! each family (for Exponential it degenerates to memoryless resampling).
+
+use crate::sim::rng::Rng;
+use crate::sim::Time;
+
+/// A positive-duration distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dist {
+    /// `rate` events per minute; mean = 1/rate. `rate == 0` means "never".
+    Exponential { rate: f64 },
+    /// Weibull with `shape` k and `scale` λ (mean = λ·Γ(1+1/k)).
+    Weibull { shape: f64, scale: f64 },
+    /// LogNormal with the *underlying normal's* `mu` and `sigma`.
+    LogNormal { mu: f64, sigma: f64 },
+    /// Always exactly `value` (tests, fixed service times).
+    Deterministic { value: f64 },
+    /// Resample uniformly from an observed trace of durations.
+    Empirical { samples: Vec<f64> },
+}
+
+impl Dist {
+    /// Exponential with the given **mean** duration (minutes).
+    pub fn exp_mean(mean: f64) -> Dist {
+        assert!(mean > 0.0, "exp_mean requires mean > 0, got {mean}");
+        Dist::Exponential { rate: 1.0 / mean }
+    }
+
+    /// Exponential with the given **rate** (per minute); 0 = never fires.
+    pub fn exp_rate(rate: f64) -> Dist {
+        assert!(rate >= 0.0, "rate must be non-negative, got {rate}");
+        Dist::Exponential { rate }
+    }
+
+    /// Mean of the distribution (used by the analytical cross-check).
+    pub fn mean(&self) -> f64 {
+        match self {
+            Dist::Exponential { rate } => {
+                if *rate == 0.0 {
+                    f64::INFINITY
+                } else {
+                    1.0 / rate
+                }
+            }
+            Dist::Weibull { shape, scale } => scale * gamma(1.0 + 1.0 / shape),
+            Dist::LogNormal { mu, sigma } => (mu + sigma * sigma / 2.0).exp(),
+            Dist::Deterministic { value } => *value,
+            Dist::Empirical { samples } => {
+                samples.iter().sum::<f64>() / samples.len().max(1) as f64
+            }
+        }
+    }
+
+    /// Draw a fresh duration.
+    pub fn sample(&self, rng: &mut Rng) -> Time {
+        self.sample_remaining(rng, 0.0)
+    }
+
+    /// Draw a remaining duration *conditional on having survived `age`*:
+    /// `P(X - age > t | X > age)` via the conditional inverse CDF.
+    pub fn sample_remaining(&self, rng: &mut Rng, age: f64) -> Time {
+        debug_assert!(age >= 0.0);
+        match self {
+            Dist::Exponential { rate } => {
+                if *rate == 0.0 {
+                    f64::INFINITY
+                } else {
+                    // Memoryless: age is irrelevant.
+                    -rng.next_open_f64().ln() / rate
+                }
+            }
+            Dist::Weibull { shape, scale } => {
+                // Survival S(x) = exp(-(x/λ)^k). Conditional inverse:
+                // x = λ·((age/λ)^k - ln U)^(1/k) - age, U ~ (0,1).
+                let u = rng.next_open_f64();
+                let a = (age / scale).powf(*shape);
+                scale * (a - u.ln()).powf(1.0 / shape) - age
+            }
+            Dist::LogNormal { mu, sigma } => {
+                if age == 0.0 {
+                    (mu + sigma * rng.next_normal()).exp()
+                } else {
+                    // Conditional inverse CDF via the normal quantile:
+                    // X = exp(mu + sigma·Φ⁻¹(Φ(z_age) + U·(1-Φ(z_age)))).
+                    let z_age = (age.ln() - mu) / sigma;
+                    let p_age = normal_cdf(z_age);
+                    let u = p_age + rng.next_f64() * (1.0 - p_age);
+                    let x = (mu + sigma * normal_quantile(u.clamp(1e-15, 1.0 - 1e-15))).exp();
+                    (x - age).max(0.0)
+                }
+            }
+            Dist::Deterministic { value } => (value - age).max(0.0),
+            Dist::Empirical { samples } => {
+                assert!(!samples.is_empty(), "Empirical dist needs samples");
+                // Conditional resampling: draw among samples exceeding age,
+                // falling back to an unconditional draw if none do.
+                let over: Vec<f64> =
+                    samples.iter().copied().filter(|&s| s > age).collect();
+                if over.is_empty() {
+                    samples[rng.next_below(samples.len() as u64) as usize]
+                } else {
+                    over[rng.next_below(over.len() as u64) as usize] - age
+                }
+            }
+        }
+    }
+}
+
+/// Lanczos approximation of the Gamma function (for Weibull means).
+pub fn gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        std::f64::consts::PI / ((std::f64::consts::PI * x).sin() * gamma(1.0 - x))
+    } else {
+        let x = x - 1.0;
+        let mut a = G[0];
+        let t = x + 7.5;
+        for (i, &g) in G.iter().enumerate().skip(1) {
+            a += g / (x + i as f64);
+        }
+        (2.0 * std::f64::consts::PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
+    }
+}
+
+/// Standard normal CDF via erf (Abramowitz–Stegun 7.1.26, |err| < 1.5e-7).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let y = 1.0
+        - (((((1.061_405_429 * t - 1.453_152_027) * t) + 1.421_413_741) * t
+            - 0.284_496_736)
+            * t
+            + 0.254_829_592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Acklam's inverse-normal-CDF approximation (|rel err| < 1.15e-9).
+pub fn normal_quantile(p: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&p));
+    const A: [f64; 6] = [
+        -3.969_683_028_665_376e1,
+        2.209_460_984_245_205e2,
+        -2.759_285_104_469_687e2,
+        1.383_577_518_672_69e2,
+        -3.066_479_806_614_716e1,
+        2.506_628_277_459_239,
+    ];
+    const B: [f64; 5] = [
+        -5.447_609_879_822_406e1,
+        1.615_858_368_580_409e2,
+        -1.556_989_798_598_866e2,
+        6.680_131_188_771_972e1,
+        -1.328_068_155_288_572e1,
+    ];
+    const C: [f64; 6] = [
+        -7.784_894_002_430_293e-3,
+        -3.223_964_580_411_365e-1,
+        -2.400_758_277_161_838,
+        -2.549_732_539_343_734,
+        4.374_664_141_464_968,
+        2.938_163_982_698_783,
+    ];
+    const D: [f64; 4] = [
+        7.784_695_709_041_462e-3,
+        3.224_671_290_700_398e-1,
+        2.445_134_137_142_996,
+        3.754_408_661_907_416,
+    ];
+    const P_LOW: f64 = 0.024_25;
+
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -normal_quantile(1.0 - p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_mean(d: &Dist, n: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let d = Dist::exp_mean(30.0);
+        let m = sample_mean(&d, 200_000, 1);
+        assert!((m - 30.0).abs() / 30.0 < 0.02, "m={m}");
+    }
+
+    #[test]
+    fn exponential_zero_rate_never_fires() {
+        let d = Dist::exp_rate(0.0);
+        let mut rng = Rng::new(2);
+        assert_eq!(d.sample(&mut rng), f64::INFINITY);
+        assert_eq!(d.mean(), f64::INFINITY);
+    }
+
+    #[test]
+    fn exponential_memoryless() {
+        // Conditional sampling with any age has the same distribution.
+        let d = Dist::exp_mean(10.0);
+        let mut rng = Rng::new(3);
+        let n = 100_000;
+        let m: f64 = (0..n)
+            .map(|_| d.sample_remaining(&mut rng, 123.0))
+            .sum::<f64>()
+            / n as f64;
+        assert!((m - 10.0).abs() / 10.0 < 0.02, "m={m}");
+    }
+
+    #[test]
+    fn weibull_mean_matches_gamma_formula() {
+        let d = Dist::Weibull { shape: 1.5, scale: 20.0 };
+        let m = sample_mean(&d, 200_000, 4);
+        let want = d.mean(); // 20·Γ(1+2/3)
+        assert!((m - want).abs() / want < 0.02, "m={m} want={want}");
+    }
+
+    #[test]
+    fn weibull_shape_one_is_exponential() {
+        let w = Dist::Weibull { shape: 1.0, scale: 15.0 };
+        let m = sample_mean(&w, 200_000, 5);
+        assert!((m - 15.0).abs() / 15.0 < 0.02, "m={m}");
+    }
+
+    #[test]
+    fn weibull_conditional_consistency() {
+        // E[X - a | X > a] computed two ways: direct conditional draws vs
+        // rejection sampling of fresh draws.
+        let d = Dist::Weibull { shape: 2.0, scale: 50.0 };
+        let age = 30.0;
+        let mut rng = Rng::new(6);
+        let n = 200_000;
+        let cond: f64 = (0..n)
+            .map(|_| d.sample_remaining(&mut rng, age))
+            .sum::<f64>()
+            / n as f64;
+        let mut rej_sum = 0.0;
+        let mut rej_n = 0usize;
+        while rej_n < n {
+            let x = d.sample(&mut rng);
+            if x > age {
+                rej_sum += x - age;
+                rej_n += 1;
+            }
+        }
+        let rej = rej_sum / rej_n as f64;
+        assert!((cond - rej).abs() / rej < 0.03, "cond={cond} rej={rej}");
+    }
+
+    #[test]
+    fn lognormal_mean() {
+        let d = Dist::LogNormal { mu: 3.0, sigma: 0.5 };
+        let m = sample_mean(&d, 300_000, 7);
+        let want = d.mean();
+        assert!((m - want).abs() / want < 0.02, "m={m} want={want}");
+    }
+
+    #[test]
+    fn lognormal_conditional_consistency() {
+        let d = Dist::LogNormal { mu: 3.0, sigma: 0.6 };
+        let age = 15.0;
+        let mut rng = Rng::new(8);
+        let n = 200_000;
+        let cond: f64 = (0..n)
+            .map(|_| d.sample_remaining(&mut rng, age))
+            .sum::<f64>()
+            / n as f64;
+        let mut rej_sum = 0.0;
+        let mut rej_n = 0usize;
+        while rej_n < n {
+            let x = d.sample(&mut rng);
+            if x > age {
+                rej_sum += x - age;
+                rej_n += 1;
+            }
+        }
+        let rej = rej_sum / rej_n as f64;
+        assert!((cond - rej).abs() / rej < 0.03, "cond={cond} rej={rej}");
+    }
+
+    #[test]
+    fn deterministic_and_empirical() {
+        let mut rng = Rng::new(9);
+        let d = Dist::Deterministic { value: 42.0 };
+        assert_eq!(d.sample(&mut rng), 42.0);
+        assert_eq!(d.sample_remaining(&mut rng, 10.0), 32.0);
+
+        let e = Dist::Empirical { samples: vec![1.0, 2.0, 3.0] };
+        for _ in 0..100 {
+            let s = e.sample(&mut rng);
+            assert!([1.0, 2.0, 3.0].contains(&s));
+        }
+        assert!((e.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_known_values() {
+        assert!((gamma(1.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(2.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(5.0) - 24.0).abs() < 1e-8);
+        assert!((gamma(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn normal_cdf_quantile_roundtrip() {
+        for &p in &[0.001, 0.01, 0.2, 0.5, 0.8, 0.99, 0.999] {
+            let z = normal_quantile(p);
+            let back = normal_cdf(z);
+            assert!((back - p).abs() < 1e-6, "p={p} back={back}");
+        }
+    }
+
+    #[test]
+    fn samples_always_non_negative() {
+        let mut rng = Rng::new(10);
+        let dists = [
+            Dist::exp_mean(5.0),
+            Dist::Weibull { shape: 0.8, scale: 10.0 },
+            Dist::LogNormal { mu: 1.0, sigma: 1.0 },
+        ];
+        for d in &dists {
+            for _ in 0..10_000 {
+                assert!(d.sample(&mut rng) >= 0.0);
+                assert!(d.sample_remaining(&mut rng, 7.0) >= 0.0);
+            }
+        }
+    }
+}

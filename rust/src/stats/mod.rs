@@ -1,0 +1,181 @@
+//! Output statistics (§III-B): "common statistics such as mean, median,
+//! standard deviation and order percentiles for each of the outputs."
+
+use std::collections::BTreeMap;
+
+/// Summary statistics of one output across replications.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns None for an empty sample.
+    pub fn from_values(values: &[f64]) -> Option<Summary> {
+        if values.is_empty() {
+            return None;
+        }
+        let n = values.len();
+        let mut sorted: Vec<f64> = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        // Sample standard deviation (n-1), 0 for a single observation.
+        let std = if n > 1 {
+            (sorted.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+                / (n - 1) as f64)
+                .sqrt()
+        } else {
+            0.0
+        };
+        Some(Summary {
+            n,
+            mean,
+            std,
+            min: sorted[0],
+            p25: percentile(&sorted, 0.25),
+            median: percentile(&sorted, 0.50),
+            p75: percentile(&sorted, 0.75),
+            p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
+            max: sorted[n - 1],
+        })
+    }
+
+    /// 95% confidence half-width of the mean (normal approximation).
+    pub fn ci95_halfwidth(&self) -> f64 {
+        if self.n > 1 {
+            1.96 * self.std / (self.n as f64).sqrt()
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Linear-interpolated order percentile over a pre-sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&q));
+    debug_assert!(!sorted.is_empty());
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Collects named metric samples across replications and summarizes them.
+#[derive(Clone, Debug, Default)]
+pub struct Collector {
+    series: BTreeMap<String, Vec<f64>>,
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, metric: &str, value: f64) {
+        self.series.entry(metric.to_string()).or_default().push(value);
+    }
+
+    pub fn values(&self, metric: &str) -> Option<&[f64]> {
+        self.series.get(metric).map(|v| v.as_slice())
+    }
+
+    pub fn summary(&self, metric: &str) -> Option<Summary> {
+        self.series.get(metric).and_then(|v| Summary::from_values(v))
+    }
+
+    /// All metric names, sorted (BTreeMap order → stable reports).
+    pub fn metrics(&self) -> Vec<&str> {
+        self.series.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_values() {
+        let s = Summary::from_values(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]).unwrap();
+        assert_eq!(s.n, 8);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        // Sample std of this classic set is sqrt(32/7).
+        assert!((s.std - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+        assert!((s.median - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_sample_is_none() {
+        assert!(Summary::from_values(&[]).is_none());
+    }
+
+    #[test]
+    fn single_value() {
+        let s = Summary::from_values(&[3.0]).unwrap();
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.p99, 3.0);
+        assert_eq!(s.ci95_halfwidth(), f64::INFINITY);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let sorted = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&sorted, 0.0), 1.0);
+        assert_eq!(percentile(&sorted, 1.0), 5.0);
+        assert_eq!(percentile(&sorted, 0.5), 3.0);
+        assert!((percentile(&sorted, 0.25) - 2.0).abs() < 1e-12);
+        assert!((percentile(&sorted, 0.1) - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_are_monotone() {
+        let mut vals: Vec<f64> = (0..101).map(|i| ((i * 37) % 101) as f64).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut last = f64::NEG_INFINITY;
+        for i in 0..=100 {
+            let p = percentile(&vals, i as f64 / 100.0);
+            assert!(p >= last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn collector_accumulates() {
+        let mut c = Collector::new();
+        for i in 0..10 {
+            c.push("makespan", i as f64);
+            c.push("failures", (i * 2) as f64);
+        }
+        assert_eq!(c.metrics(), vec!["failures", "makespan"]);
+        let s = c.summary("makespan").unwrap();
+        assert_eq!(s.n, 10);
+        assert!((s.mean - 4.5).abs() < 1e-12);
+        assert!(c.summary("nope").is_none());
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a = Summary::from_values(&vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let many: Vec<f64> = (0..400).map(|i| 1.0 + (i % 4) as f64).collect();
+        let b = Summary::from_values(&many).unwrap();
+        assert!(b.ci95_halfwidth() < a.ci95_halfwidth());
+    }
+}

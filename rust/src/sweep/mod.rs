@@ -1,0 +1,361 @@
+//! Parameter sweeps (§III-D): one-way and two-way sweeps with replications,
+//! run in parallel across OS threads.
+//!
+//! Seed discipline: replication `r` of point `i` uses
+//! `Rng::derived(master_seed, &[i, r])`, so changing the swept values or
+//! the replication count of one axis never perturbs another point's
+//! random stream. [`Sweep::with_crn`] switches to common random numbers
+//! (same stream at every point for a given `r`) — the classic variance-
+//! reduction technique for estimating point-to-point *differences*.
+
+use crate::config::Params;
+use crate::model::cluster::Simulation;
+use crate::model::RunOutputs;
+use crate::sim::rng::Rng;
+use crate::stats::{Collector, Summary};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One point of a sweep: the overridden parameter values and its label.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// (parameter name, value) overrides applied to the base params.
+    pub overrides: Vec<(String, f64)>,
+}
+
+impl SweepPoint {
+    pub fn label(&self) -> String {
+        self.overrides
+            .iter()
+            .map(|(n, v)| format!("{n}={v}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    pub fn apply(&self, base: &Params) -> Params {
+        let mut p = base.clone();
+        for (name, value) in &self.overrides {
+            let ok = p.set_by_name(name, *value);
+            assert!(ok, "unknown sweep parameter `{name}`");
+        }
+        p
+    }
+}
+
+/// A sweep specification (§III-D: `OneWaySweep` / `TwoWaySweep`).
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    /// Human-readable experiment title.
+    pub title: String,
+    pub points: Vec<SweepPoint>,
+    pub replications: usize,
+    pub master_seed: u64,
+    /// Common random numbers: replication `r` uses the *same* stream at
+    /// every point (variance reduction for point-to-point differences).
+    /// Off by default: independent streams per (point, replication).
+    pub crn: bool,
+}
+
+impl Sweep {
+    /// Vary one parameter (the paper's
+    /// `OneWaySweep("...", "name", [v...])`).
+    pub fn one_way(
+        title: &str,
+        name: &str,
+        values: &[f64],
+        replications: usize,
+        master_seed: u64,
+    ) -> Sweep {
+        Sweep {
+            title: title.to_string(),
+            points: values
+                .iter()
+                .map(|&v| SweepPoint { overrides: vec![(name.to_string(), v)] })
+                .collect(),
+            replications,
+            master_seed,
+            crn: false,
+        }
+    }
+
+    /// Enable common random numbers across points.
+    pub fn with_crn(mut self) -> Self {
+        self.crn = true;
+        self
+    }
+
+    /// Vary two parameters over their cross product (x-major order).
+    pub fn two_way(
+        title: &str,
+        x_name: &str,
+        x_values: &[f64],
+        y_name: &str,
+        y_values: &[f64],
+        replications: usize,
+        master_seed: u64,
+    ) -> Sweep {
+        let mut points = Vec::new();
+        for &x in x_values {
+            for &y in y_values {
+                points.push(SweepPoint {
+                    overrides: vec![
+                        (x_name.to_string(), x),
+                        (y_name.to_string(), y),
+                    ],
+                });
+            }
+        }
+        Sweep {
+            title: title.to_string(),
+            points,
+            replications,
+            master_seed,
+            crn: false,
+        }
+    }
+}
+
+/// Build a sweep from a parsed config document's `sweep:` section
+/// (§III-D's experiment files):
+///
+/// ```yaml
+/// sweep:
+///   kind: two_way            # or one_way
+///   x: { name: recovery_time, values: [10, 20, 30] }
+///   y: { name: working_pool, values: [4112, 4128, 4160, 4192] }
+/// replications: 30
+/// seed: 42
+/// ```
+pub fn sweep_from_doc(
+    doc: &crate::config::yaml::Value,
+    default_reps: usize,
+    default_seed: u64,
+) -> Result<Sweep, String> {
+    let sweep = doc.get("sweep").ok_or("no `sweep:` section")?;
+    let reps = doc
+        .get("replications")
+        .and_then(|v| v.as_f64())
+        .map(|v| v as usize)
+        .unwrap_or(default_reps);
+    let seed = doc
+        .get("seed")
+        .and_then(|v| v.as_f64())
+        .map(|v| v as u64)
+        .unwrap_or(default_seed);
+    let axis = |key: &str| -> Result<(String, Vec<f64>), String> {
+        let a = sweep.get(key).ok_or_else(|| format!("sweep.{key} missing"))?;
+        let name = a
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("sweep.{key}.name missing"))?;
+        let values = a
+            .get("values")
+            .and_then(|v| v.as_f64_list())
+            .ok_or_else(|| format!("sweep.{key}.values missing"))?;
+        Ok((name.to_string(), values))
+    };
+    let kind = sweep.get("kind").and_then(|v| v.as_str()).unwrap_or("one_way");
+    match kind {
+        "one_way" => {
+            let (name, values) = axis("x")?;
+            Ok(Sweep::one_way(&name.clone(), &name, &values, reps, seed))
+        }
+        "two_way" => {
+            let (xn, xv) = axis("x")?;
+            let (yn, yv) = axis("y")?;
+            Ok(Sweep::two_way(
+                &format!("{xn} x {yn}"),
+                &xn,
+                &xv,
+                &yn,
+                &yv,
+                reps,
+                seed,
+            ))
+        }
+        other => Err(format!("unknown sweep kind `{other}`")),
+    }
+}
+
+/// Results of one sweep point across replications.
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    pub point: SweepPoint,
+    pub collector: Collector,
+}
+
+impl PointResult {
+    pub fn summary(&self, metric: &str) -> Option<Summary> {
+        self.collector.summary(metric)
+    }
+}
+
+/// Full sweep results, in point order.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub title: String,
+    pub points: Vec<PointResult>,
+}
+
+/// Push one run's outputs into a metric collector.
+pub fn collect_outputs(c: &mut Collector, p: &Params, o: &RunOutputs) {
+    c.push("makespan", o.makespan);
+    c.push("makespan_hours", o.makespan / 60.0);
+    c.push("completed", if o.completed { 1.0 } else { 0.0 });
+    c.push("failures_total", o.failures_total as f64);
+    c.push("failures_random", o.failures_random as f64);
+    c.push("failures_systematic", o.failures_systematic as f64);
+    c.push("preemptions", o.preemptions as f64);
+    c.push("preemption_cost", o.preemption_cost);
+    c.push("repairs_auto", o.repairs_auto as f64);
+    c.push("repairs_manual", o.repairs_manual as f64);
+    c.push("avg_run_duration", o.avg_run_duration);
+    c.push("host_selections", o.host_selections as f64);
+    c.push("standby_swaps", o.standby_swaps as f64);
+    c.push("stall_time", o.stall_time);
+    c.push("recovery_total", o.recovery_total);
+    c.push("retirements", o.retirements as f64);
+    c.push("undiagnosed", o.undiagnosed as f64);
+    c.push("wrong_diagnoses", o.wrong_diagnoses as f64);
+    c.push("work_lost", o.work_lost);
+    c.push("utilization", o.utilization(p.job_len));
+    c.push("events_delivered", o.events_delivered as f64);
+}
+
+/// Run one replication of one point.
+fn run_one(
+    base: &Params,
+    point: &SweepPoint,
+    point_idx: usize,
+    rep: usize,
+    seed: u64,
+    crn: bool,
+) -> (Params, RunOutputs) {
+    let p = point.apply(base);
+    // CRN: drop the point index from the stream path so every point sees
+    // the same draws at replication `rep`.
+    let rng = if crn {
+        Rng::derived(seed, &[u64::MAX, rep as u64])
+    } else {
+        Rng::derived(seed, &[point_idx as u64, rep as u64])
+    };
+    let out = Simulation::with_rng(&p, rng).run();
+    (p, out)
+}
+
+/// Execute a sweep, parallelizing (point, replication) tasks over
+/// `threads` OS threads (0 = available parallelism).
+pub fn run_sweep(base: &Params, sweep: &Sweep, threads: usize) -> SweepResult {
+    let n_points = sweep.points.len();
+    let reps = sweep.replications.max(1);
+    let total = n_points * reps;
+
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        threads
+    }
+    .min(total.max(1));
+
+    // Work queue: flat task index -> (point, replication).
+    let next = AtomicUsize::new(0);
+    let collectors: Vec<Mutex<Collector>> =
+        (0..n_points).map(|_| Mutex::new(Collector::new())).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let task = next.fetch_add(1, Ordering::Relaxed);
+                if task >= total {
+                    break;
+                }
+                let point_idx = task / reps;
+                let rep = task % reps;
+                let (p, out) = run_one(
+                    base,
+                    &sweep.points[point_idx],
+                    point_idx,
+                    rep,
+                    sweep.master_seed,
+                    sweep.crn,
+                );
+                let mut c = collectors[point_idx].lock().unwrap();
+                collect_outputs(&mut c, &p, &out);
+            });
+        }
+    });
+
+    SweepResult {
+        title: sweep.title.clone(),
+        points: sweep
+            .points
+            .iter()
+            .cloned()
+            .zip(collectors)
+            .map(|(point, c)| PointResult { point, collector: c.into_inner().unwrap() })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_way_points() {
+        let s = Sweep::one_way("t", "recovery_time", &[10.0, 20.0, 30.0], 5, 1);
+        assert_eq!(s.points.len(), 3);
+        assert_eq!(s.points[1].overrides, vec![("recovery_time".into(), 20.0)]);
+        assert_eq!(s.points[1].label(), "recovery_time=20");
+    }
+
+    #[test]
+    fn two_way_cross_product() {
+        let s = Sweep::two_way("t", "a_x", &[1.0, 2.0], "warm_standbys", &[4.0, 8.0, 16.0], 1, 1);
+        assert_eq!(s.points.len(), 6);
+        // x-major order.
+        assert_eq!(s.points[0].overrides[0].1, 1.0);
+        assert_eq!(s.points[0].overrides[1].1, 4.0);
+        assert_eq!(s.points[2].overrides[1].1, 16.0);
+        assert_eq!(s.points[3].overrides[0].1, 2.0);
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let base = Params::small_test();
+        let point = SweepPoint {
+            overrides: vec![("recovery_time".into(), 99.0), ("warm_standbys".into(), 2.0)],
+        };
+        let p = point.apply(&base);
+        assert_eq!(p.recovery_time, 99.0);
+        assert_eq!(p.warm_standbys, 2);
+        assert_eq!(base.recovery_time, 20.0, "base untouched");
+    }
+
+    #[test]
+    fn sweep_runs_and_is_deterministic() {
+        let base = Params::small_test();
+        let sweep = Sweep::one_way("det", "recovery_time", &[10.0, 30.0], 4, 7);
+        let r1 = run_sweep(&base, &sweep, 2);
+        let r2 = run_sweep(&base, &sweep, 4); // thread count must not matter
+        assert_eq!(r1.points.len(), 2);
+        for (a, b) in r1.points.iter().zip(&r2.points) {
+            let sa = a.summary("makespan").unwrap();
+            let sb = b.summary("makespan").unwrap();
+            assert_eq!(sa.n, 4);
+            assert_eq!(sa.mean, sb.mean, "determinism across thread counts");
+            assert_eq!(sa.std, sb.std);
+        }
+    }
+
+    #[test]
+    fn recovery_time_monotone_in_small_config() {
+        // The paper's Fig 2(a) shape on the small test config.
+        let base = Params::small_test();
+        let sweep = Sweep::one_way("fig2a-small", "recovery_time", &[5.0, 120.0], 8, 11);
+        let r = run_sweep(&base, &sweep, 0);
+        let lo = r.points[0].summary("makespan").unwrap().mean;
+        let hi = r.points[1].summary("makespan").unwrap().mean;
+        assert!(hi > lo, "makespan should grow with recovery time: {lo} vs {hi}");
+    }
+}

@@ -1,0 +1,66 @@
+//! Failure injection: force failures at exact times, independent of the
+//! stochastic clocks. Used by integration tests to walk the Figure-1
+//! flowchart branch-by-branch, and by the `whatif` CLI to replay observed
+//! incident timelines.
+
+use crate::model::events::FailureKind;
+use crate::sim::Time;
+
+/// A scripted failure: at time `at`, the active server with gang index
+/// `victim_index` (position in the job's active list, mod its length)
+/// fails with the given kind.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Injection {
+    pub at: Time,
+    pub victim_index: usize,
+    pub kind: FailureKind,
+}
+
+/// An injection schedule, consumed in time order.
+#[derive(Clone, Debug, Default)]
+pub struct InjectionPlan {
+    ordered: Vec<Injection>,
+    next: usize,
+}
+
+impl InjectionPlan {
+    pub fn new(mut injections: Vec<Injection>) -> Self {
+        injections.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+        InjectionPlan { ordered: injections, next: 0 }
+    }
+
+    /// The next injection not yet consumed, if any.
+    pub fn peek(&self) -> Option<&Injection> {
+        self.ordered.get(self.next)
+    }
+
+    /// Consume and return the next injection.
+    pub fn pop(&mut self) -> Option<Injection> {
+        let i = self.ordered.get(self.next).copied();
+        if i.is_some() {
+            self.next += 1;
+        }
+        i
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.ordered.len() - self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_orders_by_time() {
+        let mut plan = InjectionPlan::new(vec![
+            Injection { at: 30.0, victim_index: 0, kind: FailureKind::Random },
+            Injection { at: 10.0, victim_index: 1, kind: FailureKind::Systematic },
+        ]);
+        assert_eq!(plan.remaining(), 2);
+        assert_eq!(plan.pop().unwrap().at, 10.0);
+        assert_eq!(plan.pop().unwrap().at, 30.0);
+        assert!(plan.pop().is_none());
+    }
+}

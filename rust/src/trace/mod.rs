@@ -1,0 +1,90 @@
+//! Structured event tracing + failure injection.
+//!
+//! Tracing is opt-in (`Simulation::with_trace`): the hot path pays one
+//! branch when disabled. Traces power the determinism/replay tests and
+//! the `--trace` CLI flag; [`inject`] lets tests force failures at exact
+//! times regardless of the stochastic clocks.
+
+pub mod inject;
+
+use crate::sim::Time;
+
+/// One traced state transition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    pub at: Time,
+    pub kind: TraceKind,
+}
+
+/// The traced event vocabulary (mirrors the simulation's decision points).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceKind {
+    JobStarted,
+    Failure { server: u32, systematic: bool },
+    StandbySwap { failed: u32, replacement: u32 },
+    HostSelection { allotted: usize },
+    Stalled { allotted: usize },
+    Unstalled { waited: Time },
+    RecoveryDone,
+    RepairStart { server: u32, manual: bool },
+    RepairDone { server: u32, manual: bool, fixed: bool },
+    Preempted { server: u32 },
+    PreemptArrived { server: u32 },
+    Retired { server: u32 },
+    Regenerated { converted: usize },
+    JobCompleted { makespan: Time },
+    Horizon,
+}
+
+/// An in-memory trace of one run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub records: Vec<TraceRecord>,
+}
+
+impl Trace {
+    pub fn push(&mut self, at: Time, kind: TraceKind) {
+        self.records.push(TraceRecord { at, kind });
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Count records matching a predicate.
+    pub fn count(&self, f: impl Fn(&TraceKind) -> bool) -> usize {
+        self.records.iter().filter(|r| f(&r.kind)).count()
+    }
+
+    /// Render as a text log (CLI `--trace` output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for r in &self.records {
+            s.push_str(&format!("{:>14.3}  {:?}\n", r.at, r.kind));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_count_render() {
+        let mut t = Trace::default();
+        assert!(t.is_empty());
+        t.push(1.0, TraceKind::JobStarted);
+        t.push(5.0, TraceKind::Failure { server: 3, systematic: true });
+        t.push(9.0, TraceKind::JobCompleted { makespan: 9.0 });
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.count(|k| matches!(k, TraceKind::Failure { .. })), 1);
+        let rendered = t.render();
+        assert!(rendered.contains("JobStarted"));
+        assert!(rendered.contains("server: 3"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Hand-rolled argument parsing (no clap offline): subcommands, `--flag`,
+//! `--key value` / `--key=value`, positionals, and generated help.
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum CliError {
+    #[error("unknown option `{0}` (see --help)")]
+    Unknown(String),
+    #[error("option `{0}` expects a value")]
+    MissingValue(String),
+    #[error("bad value for `{0}`: {1}")]
+    BadValue(String, String),
+}
+
+/// Parsed arguments: flags, key→value options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+/// Declarative spec for one accepted option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    /// true: `--name value`; false: boolean `--name`.
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse `argv` against a spec.
+    pub fn parse(argv: &[String], spec: &[OptSpec]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value form.
+                if let Some((k, v)) = name.split_once('=') {
+                    let s = spec
+                        .iter()
+                        .find(|s| s.name == k)
+                        .ok_or_else(|| CliError::Unknown(a.clone()))?;
+                    if !s.takes_value {
+                        return Err(CliError::BadValue(
+                            k.to_string(),
+                            "flag does not take a value".into(),
+                        ));
+                    }
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    let s = spec
+                        .iter()
+                        .find(|s| s.name == name)
+                        .ok_or_else(|| CliError::Unknown(a.clone()))?;
+                    if s.takes_value {
+                        i += 1;
+                        let v = argv
+                            .get(i)
+                            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+                        args.options.insert(name.to_string(), v.clone());
+                    } else {
+                        args.flags.push(name.to_string());
+                    }
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(v) => crate::config::yaml::eval_expr(v)
+                .map(Some)
+                .map_err(|e| CliError::BadValue(name.to_string(), e.to_string())),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|e| CliError::BadValue(name.to_string(), e.to_string())),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|e| CliError::BadValue(name.to_string(), e.to_string())),
+        }
+    }
+}
+
+/// Render generated help text for a subcommand.
+pub fn render_help(cmd: &str, about: &str, spec: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\nOptions:\n");
+    for o in spec {
+        let left = if o.takes_value {
+            format!("--{} <value>", o.name)
+        } else {
+            format!("--{}", o.name)
+        };
+        s.push_str(&format!("  {left:<28} {}\n", o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "seed", takes_value: true, help: "rng seed" },
+            OptSpec { name: "trace", takes_value: false, help: "trace" },
+            OptSpec { name: "set", takes_value: true, help: "override" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = Args::parse(&sv(&["run", "--seed", "42", "--trace", "cfg.yaml"]), &spec())
+            .unwrap();
+        assert_eq!(a.positional, vec!["run", "cfg.yaml"]);
+        assert_eq!(a.get_u64("seed").unwrap(), Some(42));
+        assert!(a.flag("trace"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = Args::parse(&sv(&["--seed=7"]), &spec()).unwrap();
+        assert_eq!(a.get("seed"), Some("7"));
+    }
+
+    #[test]
+    fn expression_values() {
+        let a = Args::parse(&sv(&["--set", "2*1440"]), &spec()).unwrap();
+        assert_eq!(a.get_f64("set").unwrap(), Some(2880.0));
+    }
+
+    #[test]
+    fn unknown_and_missing() {
+        assert!(Args::parse(&sv(&["--bogus"]), &spec()).is_err());
+        assert!(Args::parse(&sv(&["--seed"]), &spec()).is_err());
+        assert!(Args::parse(&sv(&["--trace=1"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = render_help("run", "run one sim", &spec());
+        assert!(h.contains("--seed <value>"));
+        assert!(h.contains("--trace"));
+    }
+}

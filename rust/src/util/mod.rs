@@ -1,0 +1,3 @@
+//! Small substrates the offline environment lacks crates for.
+
+pub mod cli;

@@ -1,0 +1,112 @@
+//! The shipped `configs/*.yaml` files must parse, validate, and drive real
+//! (scaled-down) sweeps — executable documentation stays correct.
+
+use airesim::config::{validate, yaml};
+use airesim::sweep::{run_sweep, sweep_from_doc};
+
+fn load(path: &str) -> yaml::Value {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    yaml::parse(&text).unwrap_or_else(|e| panic!("{path}: {e}"))
+}
+
+#[test]
+fn table1_defaults_yaml_equals_builtin() {
+    let doc = load("configs/table1_defaults.yaml");
+    let p = validate::params_from_config(&doc).expect("valid");
+    let builtin = airesim::config::Params::table1_defaults();
+    for name in airesim::config::Params::sweepable_names() {
+        let a = p.get_by_name(name).unwrap();
+        let b = builtin.get_by_name(name).unwrap();
+        assert!(
+            (a - b).abs() <= 1e-12 * b.abs().max(1.0),
+            "{name}: yaml {a} != builtin {b}"
+        );
+    }
+}
+
+#[test]
+fn fig2a_yaml_builds_the_paper_grid() {
+    let doc = load("configs/fig2a.yaml");
+    validate::params_from_config(&doc).expect("params valid");
+    let sweep = sweep_from_doc(&doc, 1, 1).expect("sweep");
+    assert_eq!(sweep.points.len(), 12);
+    assert_eq!(sweep.replications, 30);
+    assert_eq!(sweep.master_seed, 42);
+    assert_eq!(sweep.points[0].overrides[0], ("recovery_time".into(), 10.0));
+    assert_eq!(sweep.points[0].overrides[1], ("working_pool".into(), 4112.0));
+    assert_eq!(sweep.points[11].overrides[0], ("recovery_time".into(), 30.0));
+    assert_eq!(sweep.points[11].overrides[1], ("working_pool".into(), 4192.0));
+}
+
+#[test]
+fn fig2b_yaml_builds_the_paper_grid() {
+    let doc = load("configs/fig2b.yaml");
+    let sweep = sweep_from_doc(&doc, 1, 1).expect("sweep");
+    assert_eq!(sweep.points.len(), 12);
+    assert_eq!(sweep.points[0].overrides[0].0, "waiting_time");
+}
+
+#[test]
+fn aging_fleet_yaml_runs_scaled_down() {
+    let doc = load("configs/aging_fleet.yaml");
+    let mut p = validate::params_from_config(&doc).expect("params valid");
+    assert_eq!(p.retirement_threshold, 3);
+    assert!(p.bad_regen_interval > 0.0);
+    assert!(matches!(
+        p.failure_dist,
+        airesim::config::DistKind::Weibull { .. }
+    ));
+    // Scale the cluster down so the test is fast, keep the mechanics.
+    p.job_size = 32;
+    p.warm_standbys = 4;
+    p.working_pool = 40;
+    p.spare_pool = 8;
+    p.job_len = 2.0 * 1440.0;
+    p.bad_regen_interval = 300.0;
+    p.bad_regen_fraction = 0.05;
+    p.random_failure_rate = 1.0 / 1440.0;
+    p.systematic_failure_rate = 10.0 / 1440.0;
+    p.max_sim_time = 1e7;
+
+    let mut sweep = sweep_from_doc(&doc, 1, 1).expect("sweep");
+    sweep.replications = 2;
+    let result = run_sweep(&p, &sweep, 0);
+    assert_eq!(result.points.len(), 4); // thresholds [0, 2, 3, 5]
+    for pr in &result.points {
+        let s = pr.summary("completed").unwrap();
+        assert_eq!(s.n, 2);
+    }
+    // Threshold 0 never retires; low thresholds retire more than high.
+    let retirements: Vec<f64> = result
+        .points
+        .iter()
+        .map(|p| p.summary("retirements").unwrap().mean)
+        .collect();
+    assert_eq!(retirements[0], 0.0, "threshold 0 must not retire");
+    assert!(
+        retirements[1] >= retirements[3],
+        "threshold 2 should retire at least as many as threshold 5: {retirements:?}"
+    );
+}
+
+#[test]
+fn artifact_contract_matches_rust_mirror() {
+    // The AOT step writes artifacts/analytic.hlo.json describing the
+    // parameter/output columns; the Rust mirror must agree. (Gated on the
+    // artifact having been built.)
+    let path = "artifacts/analytic.hlo.json";
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: {path} not built (run `make artifacts`)");
+        return;
+    }
+    let text = std::fs::read_to_string(path).unwrap();
+    for name in airesim::analytical::PARAM_NAMES {
+        assert!(text.contains(&format!("\"{name}\"")), "param {name} missing from contract");
+    }
+    for name in airesim::analytical::OUTPUT_NAMES {
+        assert!(text.contains(&format!("\"{name}\"")), "output {name} missing from contract");
+    }
+    assert!(text.contains("\"batch\": 64"));
+    assert!(text.contains("\"n_params\": 16"));
+    assert!(text.contains("\"n_outputs\": 8"));
+}

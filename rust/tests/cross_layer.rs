@@ -1,0 +1,118 @@
+//! Cross-layer validation: the pure-Rust analytical mirror vs the DES, and
+//! (when the artifact exists) the PJRT-compiled JAX/Pallas model vs the
+//! pure-Rust mirror.
+
+use airesim::analytical;
+use airesim::config::Params;
+use airesim::model::cluster::Simulation;
+use airesim::runtime::AnalyticModel;
+use airesim::sim::rng::Rng;
+
+/// DES mean makespan over a few replications.
+fn des_mean_makespan(p: &Params, reps: u64) -> f64 {
+    (0..reps)
+        .map(|r| Simulation::with_rng(p, Rng::derived(5, &[r])).run().makespan)
+        .sum::<f64>()
+        / reps as f64
+}
+
+fn mid_params() -> Params {
+    // A mid-sized configuration the analytical model should track well:
+    // plenty of slack (no stalls), exponential clocks.
+    let mut p = Params::small_test();
+    p.job_size = 128;
+    p.warm_standbys = 8;
+    p.working_pool = 160;
+    p.spare_pool = 32;
+    p.job_len = 10.0 * 1440.0;
+    p.random_failure_rate = 0.2 / 1440.0;
+    p.systematic_failure_rate = 1.0 / 1440.0;
+    p.max_sim_time = 1e9;
+    p
+}
+
+#[test]
+fn analytic_tracks_des_makespan() {
+    let p = mid_params();
+    let des = des_mean_makespan(&p, 12);
+    let ana = analytical::analyze(&p).makespan_est;
+    let rel = (des - ana).abs() / des;
+    assert!(
+        rel < 0.15,
+        "analytic {ana:.0} vs DES {des:.0} diverge by {:.1}%",
+        rel * 100.0
+    );
+}
+
+#[test]
+fn analytic_tracks_des_failure_count() {
+    let p = mid_params();
+    let reps = 12u64;
+    let des: f64 = (0..reps)
+        .map(|r| {
+            Simulation::with_rng(&p, Rng::derived(6, &[r])).run().failures_total as f64
+        })
+        .sum::<f64>()
+        / reps as f64;
+    let ana = analytical::analyze(&p).exp_failures;
+    let rel = (des - ana).abs() / des.max(1.0);
+    assert!(
+        rel < 0.2,
+        "analytic {ana:.1} vs DES {des:.1} failures diverge by {:.1}%",
+        rel * 100.0
+    );
+}
+
+#[test]
+fn analytic_and_des_rank_recovery_times_identically() {
+    // The decision a capacity planner makes — which knob value is better —
+    // must agree between the fast analytical screen and the DES.
+    let mut makespans_ana = Vec::new();
+    let mut makespans_des = Vec::new();
+    for rec in [5.0, 30.0, 120.0] {
+        let mut p = mid_params();
+        p.recovery_time = rec;
+        makespans_ana.push(analytical::analyze(&p).makespan_est);
+        makespans_des.push(des_mean_makespan(&p, 8));
+    }
+    assert!(makespans_ana[0] < makespans_ana[1] && makespans_ana[1] < makespans_ana[2]);
+    assert!(makespans_des[0] < makespans_des[1] && makespans_des[1] < makespans_des[2]);
+}
+
+#[test]
+fn pjrt_artifact_matches_rust_mirror() {
+    // Gated: needs `make artifacts` to have produced the HLO text.
+    let path = AnalyticModel::default_path();
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: {path} not built (run `make artifacts`)");
+        return;
+    }
+    let model = AnalyticModel::load(path).expect("artifact should load");
+
+    // A batch of varied configurations.
+    let mut configs = Vec::new();
+    for rec in [10.0, 20.0, 30.0] {
+        for wp in [4112u32, 4128, 4160, 4192] {
+            let mut p = Params::table1_defaults();
+            p.recovery_time = rec;
+            p.working_pool = wp;
+            configs.push(p);
+        }
+    }
+    let pjrt = model.analyze_many(&configs).expect("batch execution");
+    for (p, out) in configs.iter().zip(&pjrt) {
+        let rust = analytical::analyze(p);
+        let rel = (out.makespan_est - rust.makespan_est).abs()
+            / rust.makespan_est.max(1.0);
+        assert!(
+            rel < 1e-2,
+            "pjrt {} vs rust {} (rel {rel:.2e}) at rec={} wp={}",
+            out.makespan_est,
+            rust.makespan_est,
+            p.recovery_time,
+            p.working_pool
+        );
+        // Availability columns agree tightly too (pure f32 vs f64 noise).
+        assert!((out.avail_avg - rust.avail_avg).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,86 @@
+//! Determinism / replay guarantees: a simulation is a pure function of
+//! (params, seed).
+
+use airesim::config::Params;
+use airesim::model::cluster::Simulation;
+use airesim::sim::rng::Rng;
+use airesim::sweep::{run_sweep, Sweep};
+
+fn outputs_fingerprint(p: &Params, seed: u64) -> (f64, u64, u64, u64, u64) {
+    let o = Simulation::new(p, seed).run();
+    (o.makespan, o.failures_total, o.preemptions, o.repairs_auto, o.repairs_manual)
+}
+
+#[test]
+fn same_seed_same_everything() {
+    let p = Params::small_test();
+    for seed in [1, 7, 42, 1234] {
+        assert_eq!(outputs_fingerprint(&p, seed), outputs_fingerprint(&p, seed));
+    }
+}
+
+#[test]
+fn same_seed_same_trace() {
+    let p = Params::small_test();
+    let (_, t1) = Simulation::new(&p, 9).with_trace().run_traced();
+    let (_, t2) = Simulation::new(&p, 9).with_trace().run_traced();
+    assert_eq!(t1.records, t2.records);
+    assert!(!t1.is_empty());
+}
+
+#[test]
+fn different_seeds_differ() {
+    let p = Params::small_test();
+    let a = outputs_fingerprint(&p, 1);
+    let b = outputs_fingerprint(&p, 2);
+    assert_ne!(a, b, "two seeds gave identical runs (astronomically unlikely)");
+}
+
+#[test]
+fn derived_streams_reproduce_sweep_points() {
+    // Replication (i, r) only depends on (seed, i, r): re-running a single
+    // point standalone reproduces the sweep's value for that point.
+    let p = Params::small_test();
+    let sweep = Sweep::one_way("d", "recovery_time", &[10.0, 20.0, 30.0], 3, 99);
+    let result = run_sweep(&p, &sweep, 0);
+
+    let mut p1 = p.clone();
+    p1.recovery_time = 20.0;
+    let standalone =
+        Simulation::with_rng(&p1, Rng::derived(99, &[1, 2])).run().makespan;
+    let from_sweep = result.points[1].collector.values("makespan").unwrap();
+    assert!(
+        from_sweep.contains(&standalone),
+        "sweep values {from_sweep:?} missing standalone {standalone}"
+    );
+}
+
+#[test]
+fn per_server_and_gang_paths_agree_statistically() {
+    // The exponential gang fast path must match the per-server clock path
+    // in distribution: compare mean makespan over replications.
+    let mut p = Params::small_test();
+    p.job_size = 32;
+    p.working_pool = 40;
+    p.warm_standbys = 4;
+    p.spare_pool = 8;
+    p.job_len = 2880.0;
+    let reps = 60;
+    let mean = |fast: bool| -> f64 {
+        (0..reps)
+            .map(|r| {
+                let sim = Simulation::with_rng(&p, Rng::derived(7, &[fast as u64, r]));
+                let sim = if fast { sim } else { sim.with_per_server_clocks() };
+                sim.run().makespan
+            })
+            .sum::<f64>()
+            / reps as f64
+    };
+    let m_fast = mean(true);
+    let m_slow = mean(false);
+    let rel = (m_fast - m_slow).abs() / m_slow;
+    assert!(
+        rel < 0.05,
+        "gang vs per-server makespan means diverge: {m_fast} vs {m_slow} ({rel:.3})"
+    );
+}

@@ -1,0 +1,201 @@
+//! End-to-end scenario tests against analytically-known expectations.
+
+use airesim::config::{DistKind, Params};
+use airesim::model::cluster::Simulation;
+use airesim::sim::rng::Rng;
+
+fn mean_over(p: &Params, reps: u64, f: impl Fn(&airesim::model::RunOutputs) -> f64) -> f64 {
+    (0..reps)
+        .map(|r| f(&Simulation::with_rng(p, Rng::derived(11, &[r])).run()))
+        .sum::<f64>()
+        / reps as f64
+}
+
+#[test]
+fn failure_count_matches_rate_when_repairs_instant() {
+    // With instant, always-successful repairs and all-good servers, the
+    // gang always computes at job_size servers: E[failures] ≈ N * λ * L.
+    let mut p = Params::small_test();
+    p.systematic_fraction = 0.0;
+    p.systematic_failure_rate = 0.0;
+    p.random_failure_rate = 1.0 / 1440.0; // 1/day/server
+    p.job_size = 50;
+    p.warm_standbys = 5;
+    p.working_pool = 60;
+    p.spare_pool = 20;
+    p.job_len = 5.0 * 1440.0;
+    p.recovery_time = 0.0;
+    p.host_selection_time = 0.0;
+    p.auto_repair_time = 1e-3;
+    p.auto_repair_prob = 1.0;
+    p.auto_repair_fail_prob = 0.0;
+    p.diagnosis_prob = 1.0;
+    p.max_sim_time = 1e9;
+
+    let want = 50.0 * (1.0 / 1440.0) * p.job_len; // = 250
+    let got = mean_over(&p, 20, |o| o.failures_total as f64);
+    let rel = (got - want).abs() / want;
+    assert!(rel < 0.1, "failures {got:.1} vs expected {want:.1}");
+}
+
+#[test]
+fn makespan_decomposition_zero_cost_recovery() {
+    // With recovery/selection zero-cost, makespan == job_len (+ stalls,
+    // which can't happen with instant repairs).
+    let mut p = Params::small_test();
+    p.recovery_time = 0.0;
+    p.host_selection_time = 0.0;
+    p.waiting_time = 0.0;
+    p.auto_repair_time = 1e-3;
+    p.auto_repair_prob = 1.0;
+    p.auto_repair_fail_prob = 0.0;
+    p.max_sim_time = 1e9;
+    let got = mean_over(&p, 10, |o| o.makespan);
+    assert!(
+        (got - p.job_len).abs() < 1.0,
+        "zero-cost failures must not stretch the job: {got} vs {}",
+        p.job_len
+    );
+}
+
+#[test]
+fn bad_servers_drive_failure_mix() {
+    // With a strong systematic rate, most failures should be systematic
+    // early on; over long horizons repairs convert bad→good and the mix
+    // shifts — here we only assert the presence of both kinds.
+    let mut p = Params::small_test();
+    p.systematic_fraction = 0.3;
+    p.systematic_failure_rate = 20.0 / 1440.0;
+    p.random_failure_rate = 0.5 / 1440.0;
+    p.max_sim_time = 1e9;
+    let o = Simulation::new(&p, 3).run();
+    assert!(o.failures_systematic > 0);
+    assert!(o.failures_random > 0);
+    assert!(
+        o.failures_systematic > o.failures_random,
+        "systematic {} should dominate random {}",
+        o.failures_systematic,
+        o.failures_random
+    );
+}
+
+#[test]
+fn repairs_reduce_systematic_pressure_over_time() {
+    // Compare total failures with repairs that always fix vs never fix:
+    // fixing must yield fewer systematic failures.
+    let mut base = Params::small_test();
+    base.systematic_fraction = 0.3;
+    base.systematic_failure_rate = 10.0 / 1440.0;
+    base.job_len = 10.0 * 1440.0;
+    base.max_sim_time = 1e9;
+
+    let mut fixing = base.clone();
+    fixing.auto_repair_fail_prob = 0.0;
+    fixing.manual_repair_fail_prob = 0.0;
+
+    let mut broken = base.clone();
+    broken.auto_repair_fail_prob = 1.0;
+    broken.manual_repair_fail_prob = 1.0;
+
+    let f = mean_over(&fixing, 10, |o| o.failures_systematic as f64);
+    let b = mean_over(&broken, 10, |o| o.failures_systematic as f64);
+    assert!(
+        f < b,
+        "fixing repairs should reduce systematic failures: {f} !< {b}"
+    );
+}
+
+#[test]
+fn weibull_and_lognormal_families_run_to_completion() {
+    for dist in [
+        DistKind::Weibull { shape: 1.5 },
+        DistKind::LogNormal { sigma: 0.8 },
+    ] {
+        let mut p = Params::small_test();
+        p.failure_dist = dist;
+        p.max_sim_time = 1e9;
+        let o = Simulation::new(&p, 4).run();
+        assert!(o.completed, "{dist:?} run did not complete");
+        assert!(o.failures_total > 0, "{dist:?} produced no failures");
+    }
+}
+
+#[test]
+fn warm_standbys_reduce_host_selections() {
+    let mut none = Params::small_test();
+    none.warm_standbys = 0;
+    let mut many = Params::small_test();
+    many.warm_standbys = 8;
+    many.working_pool = none.working_pool; // same pool, different allotment
+    let hs_none = mean_over(&none, 10, |o| o.host_selections as f64);
+    let hs_many = mean_over(&many, 10, |o| o.host_selections as f64);
+    assert!(
+        hs_many < hs_none,
+        "standbys should absorb failures: {hs_many} !< {hs_none}"
+    );
+}
+
+#[test]
+fn bad_regen_increases_failures() {
+    let mut base = Params::small_test();
+    base.systematic_fraction = 0.0; // start clean
+    base.job_len = 5.0 * 1440.0;
+    base.max_sim_time = 1e9;
+    let mut regen = base.clone();
+    regen.bad_regen_interval = 1440.0;
+    regen.bad_regen_fraction = 0.05;
+
+    let f_base = mean_over(&base, 10, |o| o.failures_total as f64);
+    let f_regen = mean_over(&regen, 10, |o| o.failures_total as f64);
+    assert!(
+        f_regen > f_base,
+        "regeneration should add systematic failures: {f_regen} !> {f_base}"
+    );
+}
+
+#[test]
+fn checkpoint_interval_lengthens_jobs() {
+    let mut cont = Params::small_test();
+    cont.checkpoint_interval = 0.0;
+    let mut coarse = cont.clone();
+    coarse.checkpoint_interval = 120.0; // 2h checkpoints
+    coarse.max_sim_time = 1e9;
+
+    let m_cont = mean_over(&cont, 10, |o| o.makespan);
+    let m_coarse = mean_over(&coarse, 10, |o| o.makespan);
+    let lost = mean_over(&coarse, 10, |o| o.work_lost);
+    assert!(lost > 0.0, "coarse checkpoints must lose work");
+    assert!(
+        m_coarse > m_cont,
+        "losing work must lengthen the job: {m_coarse} !> {m_cont}"
+    );
+    // Continuous checkpointing loses nothing.
+    assert_eq!(mean_over(&cont, 5, |o| o.work_lost), 0.0);
+}
+
+#[test]
+fn horizon_stops_unfinishable_job() {
+    let mut p = Params::small_test();
+    p.working_pool = 64;
+    p.warm_standbys = 0;
+    p.spare_pool = 0;
+    p.auto_repair_time = 1e12; // repairs never return
+    p.manual_repair_time = 1e12;
+    p.random_failure_rate = 10.0 / 1440.0; // fail fast
+    p.max_sim_time = 30.0 * 1440.0;
+    let o = Simulation::new(&p, 5).run();
+    assert!(!o.completed);
+    assert_eq!(o.makespan, p.max_sim_time);
+    assert!(o.stall_time > 0.0, "job should die stalled");
+}
+
+#[test]
+fn preemption_cost_accounted() {
+    let mut p = Params::small_test();
+    p.working_pool = 60; // below job_size: forces preemptions at t=0
+    p.spare_pool = 16;
+    p.preemption_cost = 7.5;
+    let o = Simulation::new(&p, 6).run();
+    assert!(o.preemptions >= 8);
+    assert!((o.preemption_cost - o.preemptions as f64 * 7.5).abs() < 1e-9);
+}

@@ -1,0 +1,184 @@
+//! Property-based invariants over randomized configurations (testkit is
+//! the in-repo proptest substitute; failures print a reproducing seed).
+
+use airesim::config::{validate, DistKind, Params};
+use airesim::model::cluster::Simulation;
+use airesim::testkit::{check, Gen};
+
+/// Draw a random-but-valid small configuration.
+fn random_params(g: &mut Gen) -> Params {
+    let mut p = Params::small_test();
+    p.job_size = g.usize_in(8, 64) as u32;
+    p.warm_standbys = g.usize_in(0, 8) as u32;
+    p.working_pool = p.job_size + g.usize_in(0, 16) as u32;
+    p.spare_pool = g.usize_in(0, 16) as u32;
+    // Keep feasible: pools must at least cover the job.
+    if p.working_pool + p.spare_pool < p.job_size {
+        p.spare_pool = p.job_size - p.working_pool;
+    }
+    p.random_failure_rate = g.f64_in(0.0, 2.0) / (24.0 * 60.0);
+    p.systematic_failure_rate = g.f64_in(0.0, 10.0) / (24.0 * 60.0);
+    p.systematic_fraction = g.f64_in(0.0, 0.4);
+    p.job_len = g.f64_in(60.0, 3.0 * 1440.0);
+    p.recovery_time = g.f64_in(1.0, 60.0);
+    p.host_selection_time = g.f64_in(0.0, 15.0);
+    p.waiting_time = g.f64_in(0.0, 60.0);
+    p.auto_repair_prob = g.prob();
+    p.auto_repair_fail_prob = g.prob();
+    p.manual_repair_fail_prob = g.prob();
+    p.auto_repair_time = g.f64_in(5.0, 600.0);
+    p.manual_repair_time = g.f64_in(60.0, 5.0 * 1440.0);
+    p.diagnosis_prob = g.prob();
+    p.diagnosis_uncertainty = g.prob() * 0.5;
+    p.retirement_threshold = g.usize_in(0, 4) as u32;
+    p.retirement_window = g.f64_in(100.0, 1e5);
+    if g.bool() {
+        p.bad_regen_interval = g.f64_in(100.0, 2000.0);
+        p.bad_regen_fraction = g.prob() * 0.05;
+    }
+    p.max_sim_time = 60.0 * 1440.0;
+    match g.usize_in(0, 2) {
+        0 => p.failure_dist = DistKind::Exponential,
+        1 => p.failure_dist = DistKind::Weibull { shape: g.f64_in(0.5, 3.0) },
+        _ => p.failure_dist = DistKind::LogNormal { sigma: g.f64_in(0.2, 1.5) },
+    }
+    validate::validate(&p).expect("generated params must validate");
+    p
+}
+
+#[test]
+fn conservation_holds_at_every_event() {
+    check("server conservation", 40, |g| {
+        let p = random_params(g);
+        let mut sim = Simulation::new(&p, g.seed());
+        sim.prime();
+        assert!(sim.conservation_ok(), "violated at t=0");
+        let mut steps = 0;
+        while sim.step() {
+            steps += 1;
+            if steps % 16 == 0 {
+                assert!(
+                    sim.conservation_ok(),
+                    "violated at t={} after {steps} events",
+                    sim.now()
+                );
+            }
+            if steps > 200_000 {
+                break;
+            }
+        }
+        assert!(sim.conservation_ok(), "violated at end");
+    });
+}
+
+#[test]
+fn clock_is_monotone_and_job_progress_bounded() {
+    check("monotone clock, bounded progress", 40, |g| {
+        let p = random_params(g);
+        let mut sim = Simulation::new(&p, g.seed());
+        sim.prime();
+        let mut last = 0.0;
+        let mut steps = 0;
+        loop {
+            let rem = sim.job().remaining;
+            assert!(
+                rem >= -1e-9 && rem <= p.job_len + 1e-9,
+                "remaining {rem} outside [0, {}]",
+                p.job_len
+            );
+            let now = sim.now();
+            assert!(now >= last, "clock went backwards: {now} < {last}");
+            last = now;
+            steps += 1;
+            if steps > 200_000 || !sim.step() {
+                break;
+            }
+        }
+    });
+}
+
+#[test]
+fn outputs_are_internally_consistent() {
+    check("output consistency", 60, |g| {
+        let p = random_params(g);
+        let o = Simulation::new(&p, g.seed()).run();
+        assert_eq!(o.failures_total, o.failures_random + o.failures_systematic);
+        assert!(o.makespan >= 0.0 && o.makespan <= p.max_sim_time + 1e-6);
+        if o.completed {
+            // A finished job spent at least its failure-free length.
+            assert!(
+                o.makespan + 1e-6 >= p.job_len,
+                "makespan {} < job_len {}",
+                o.makespan,
+                p.job_len
+            );
+        }
+        // Every failure is resolved one way: swap, selection, or in-place.
+        assert_eq!(
+            o.failures_total,
+            o.standby_swaps + o.host_selections + o.undiagnosed,
+            "failure resolutions don't add up"
+        );
+        // Recovery accounting: one recovery per failure, plus possibly one
+        // per selection-restart (standby path + selection path both pay).
+        assert!(o.recovery_total <= (o.failures_total as f64 + 1.0) * p.recovery_time + 1e-6);
+        assert!(o.stall_time >= 0.0);
+        assert!(o.preemption_cost >= 0.0);
+        if p.retirement_threshold == 0 {
+            assert_eq!(o.retirements, 0);
+        }
+        if p.diagnosis_uncertainty == 0.0 {
+            assert_eq!(o.wrong_diagnoses, 0);
+        }
+    });
+}
+
+#[test]
+fn zero_failure_rates_always_complete_exactly() {
+    check("zero-rate exactness", 30, |g| {
+        let mut p = random_params(g);
+        p.random_failure_rate = 0.0;
+        p.systematic_failure_rate = 0.0;
+        p.bad_regen_interval = 0.0;
+        let o = Simulation::new(&p, g.seed()).run();
+        assert!(o.completed);
+        assert_eq!(o.failures_total, 0);
+        assert!((o.makespan - (p.host_selection_time + p.job_len)).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn more_failures_never_shorten_the_job() {
+    // Stochastic monotonicity in the failure rate (checked on means over
+    // a few replications to damp noise).
+    check("rate monotonicity", 8, |g| {
+        let mut p = random_params(g);
+        p.bad_regen_interval = 0.0;
+        p.failure_dist = DistKind::Exponential;
+        p.max_sim_time = 1e7;
+        let reps = 10;
+        let mean = |rate_scale: f64, seed: u64| -> f64 {
+            let mut q = p.clone();
+            q.random_failure_rate *= rate_scale;
+            q.systematic_failure_rate *= rate_scale;
+            (0..reps)
+                .map(|r| {
+                    Simulation::with_rng(
+                        &q,
+                        airesim::sim::rng::Rng::derived(seed, &[r]),
+                    )
+                    .run()
+                    .makespan
+                })
+                .sum::<f64>()
+                / reps as f64
+        };
+        let seed = g.seed();
+        let lo = mean(0.2, seed);
+        let hi = mean(5.0, seed);
+        assert!(
+            hi + 1e-6 >= lo,
+            "5x failure rate shortened the job: {hi} < {lo}"
+        );
+    });
+}

@@ -1,0 +1,142 @@
+//! Multi-job extension (assumption 6 lifted): N identical jobs contending
+//! for the same working/spare pools and repair shop.
+
+use airesim::config::{validate, Params};
+use airesim::model::cluster::Simulation;
+use airesim::model::job::JobPhase;
+use airesim::sim::rng::Rng;
+
+/// Pools sized for exactly `k` concurrent small jobs.
+fn params_for_jobs(k: u32, pool_per_job: u32) -> Params {
+    let mut p = Params::small_test();
+    p.num_jobs = k;
+    p.job_size = 32;
+    p.warm_standbys = 4;
+    p.working_pool = pool_per_job * k.max(1);
+    p.spare_pool = 8;
+    p.job_len = 1440.0;
+    p.max_sim_time = 1e7;
+    p
+}
+
+#[test]
+fn two_jobs_with_ample_pools_both_complete() {
+    let p = params_for_jobs(2, 40); // 80 working servers for 2×(32+4)
+    let out = Simulation::new(&p, 1).run();
+    assert!(out.completed);
+    assert_eq!(out.per_job_makespans.len(), 2);
+    for (j, &m) in out.per_job_makespans.iter().enumerate() {
+        assert!(m >= p.job_len, "job {j} finished impossibly fast: {m}");
+    }
+    assert!((out.makespan
+        - out.per_job_makespans.iter().cloned().fold(0.0f64, f64::max))
+    .abs()
+        < 1e-9);
+}
+
+#[test]
+fn single_job_behaviour_unchanged() {
+    // num_jobs=1 must reproduce the pre-extension outputs exactly.
+    let mut p = Params::small_test();
+    p.num_jobs = 1;
+    let a = Simulation::new(&p, 7).run();
+    let b = Simulation::new(&Params::small_test(), 7).run();
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.failures_total, b.failures_total);
+    assert_eq!(a.per_job_makespans.len(), 1);
+}
+
+#[test]
+fn insufficient_pools_serialize_jobs() {
+    // Pools fit one job at a time: job 1 must queue behind job 0 and both
+    // finish — sequentially.
+    let mut p = params_for_jobs(2, 20); // 40 working total, one job needs 32
+    p.spare_pool = 0;
+    p.random_failure_rate = 0.0; // failure-free: exact timing
+    p.systematic_failure_rate = 0.0;
+    let out = Simulation::new(&p, 2).run();
+    assert!(out.completed);
+    let (m0, m1) = (out.per_job_makespans[0], out.per_job_makespans[1]);
+    // Job 0 runs immediately; job 1 starts only after job 0 releases.
+    assert!((m0 - (p.host_selection_time + p.job_len)).abs() < 1e-6);
+    assert!(
+        m1 >= m0 + p.job_len,
+        "job 1 ({m1}) should run after job 0 ({m0})"
+    );
+    // Stall accounting covers job 1's wait.
+    assert!(out.stall_time >= p.job_len - 1e-6);
+}
+
+#[test]
+fn contention_conservation_holds() {
+    let mut p = params_for_jobs(3, 24); // deliberately tight: 72 for 3×36
+    p.spare_pool = 12;
+    p.random_failure_rate = 1.0 / 1440.0;
+    p.systematic_failure_rate = 5.0 / 1440.0;
+    let mut sim = Simulation::new(&p, 5);
+    sim.prime();
+    let mut steps = 0;
+    while sim.step() {
+        steps += 1;
+        if steps % 8 == 0 {
+            assert!(sim.conservation_ok(), "violated at event {steps}");
+        }
+        if steps > 300_000 {
+            break;
+        }
+    }
+    assert!(sim.conservation_ok());
+}
+
+#[test]
+fn jobs_do_not_share_servers() {
+    let p = params_for_jobs(2, 40);
+    let mut sim = Simulation::new(&p, 3);
+    sim.prime();
+    for _ in 0..5000 {
+        if !sim.step() {
+            break;
+        }
+        let a: Vec<u32> = sim.jobs()[0]
+            .active
+            .iter()
+            .chain(&sim.jobs()[0].standbys)
+            .copied()
+            .collect();
+        for id in sim.jobs()[1].active.iter().chain(&sim.jobs()[1].standbys) {
+            assert!(!a.contains(id), "server {id} in both jobs");
+        }
+        if sim.jobs().iter().all(|j| j.phase == JobPhase::Done) {
+            break;
+        }
+    }
+}
+
+#[test]
+fn more_jobs_mean_more_failures() {
+    let mean_failures = |k: u32| -> f64 {
+        let p = params_for_jobs(k, 40);
+        (0..8)
+            .map(|r| {
+                Simulation::with_rng(&p, Rng::derived(11, &[k as u64, r]))
+                    .run()
+                    .failures_total as f64
+            })
+            .sum::<f64>()
+            / 8.0
+    };
+    let f1 = mean_failures(1);
+    let f3 = mean_failures(3);
+    assert!(
+        f3 > 2.0 * f1,
+        "3 jobs should see ~3x the failures: {f3} vs {f1}"
+    );
+}
+
+#[test]
+fn num_jobs_is_sweepable_and_validated() {
+    let mut p = Params::table1_defaults();
+    assert!(p.set_by_name("num_jobs", 2.0));
+    assert_eq!(p.get_by_name("num_jobs"), Some(2.0));
+    validate::validate(&p).unwrap();
+}
