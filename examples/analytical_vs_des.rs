@@ -31,10 +31,11 @@ fn main() {
         }
     }
 
-    // Analytical pass: PJRT artifact if present, pure-Rust mirror if not.
+    // Analytical pass: PJRT artifact if compiled in and present,
+    // pure-Rust mirror otherwise.
     let artifact = AnalyticModel::default_path();
     let (source, analytic): (&str, Vec<analytical::AnalyticOutputs>) =
-        match std::path::Path::new(artifact).exists() {
+        match cfg!(feature = "pjrt") && std::path::Path::new(artifact).exists() {
             true => {
                 let model = AnalyticModel::load(artifact).expect("artifact load");
                 let outs = model.analyze_many(&configs).expect("batch execute");

@@ -1,0 +1,83 @@
+//! Policy shootout: the new sweepable axes in action — compare host
+//! selection, repair queue discipline, and checkpoint policies on one
+//! pressured cluster, each combination under common random numbers.
+//!
+//! ```bash
+//! cargo run --release --example policy_shootout
+//! ```
+
+use airesim::config::Params;
+use airesim::model::cluster::ReplicationRunner;
+use airesim::model::PolicySpec;
+use airesim::sim::rng::Rng;
+use airesim::stats::Summary;
+
+/// A cluster under enough failure pressure that policy choices matter:
+/// strong systematic rates, unreliable repairs, one technician team.
+fn pressured() -> Params {
+    let mut p = Params::small_test();
+    p.job_size = 64;
+    p.warm_standbys = 4;
+    p.working_pool = 72;
+    p.spare_pool = 16;
+    p.job_len = 4.0 * 1440.0;
+    p.random_failure_rate = 1.0 / 1440.0;
+    p.systematic_failure_rate = 10.0 / 1440.0;
+    p.systematic_fraction = 0.25;
+    p.auto_repair_fail_prob = 0.8;
+    p.manual_repair_capacity = 2;
+    p.checkpoint_interval = 60.0; // hourly checkpoints: failures lose work
+    p.max_sim_time = 1e9;
+    p
+}
+
+fn main() {
+    let p = pressured();
+    let reps = 10u64;
+
+    println!("policy shootout — {} reps per combination, CRN seeds\n", reps);
+    println!(
+        "{:<12} {:<10} {:<11} | {:>12} {:>10} {:>10}",
+        "selection", "repair", "checkpoint", "makespan(h)", "±95%CI", "lost(min)"
+    );
+
+    let mut runner = ReplicationRunner::new();
+    for selection in ["first_fit", "random", "locality"] {
+        for repair in ["fifo", "job_first"] {
+            for checkpoint in ["continuous", "periodic"] {
+                let spec = PolicySpec {
+                    selection: selection.into(),
+                    repair: repair.into(),
+                    checkpoint: checkpoint.into(),
+                    failure: "auto".into(),
+                };
+                let mut makespans = Vec::new();
+                let mut lost = 0.0;
+                for r in 0..reps {
+                    // Common random numbers: the same stream for every
+                    // combination at replication r isolates policy effects.
+                    let out = runner.run(&p, &spec, Rng::derived(404, &[r]));
+                    makespans.push(out.makespan / 60.0);
+                    lost += out.work_lost / reps as f64;
+                }
+                let s = Summary::from_values(&makespans).unwrap();
+                println!(
+                    "{:<12} {:<10} {:<11} | {:>12.1} {:>10.1} {:>10.1}",
+                    selection,
+                    repair,
+                    checkpoint,
+                    s.mean,
+                    s.ci95_halfwidth(),
+                    lost
+                );
+            }
+        }
+    }
+
+    println!(
+        "\nReading the table: `periodic` checkpointing pays for itself in lost\n\
+         work; `job_first` repair shortens stalls once the two technicians\n\
+         saturate; selection policies tie until regeneration correlates\n\
+         badness with placement history (see configs/aging_fleet.yaml)."
+    );
+}

@@ -42,9 +42,10 @@ fn main() {
         64.0 / t_rust
     );
 
-    // PJRT artifact.
+    // PJRT artifact (needs both the `pjrt` feature and a built artifact;
+    // the default build's stub loader always errors).
     let path = AnalyticModel::default_path();
-    if std::path::Path::new(path).exists() {
+    if cfg!(feature = "pjrt") && std::path::Path::new(path).exists() {
         let (model, t_load) = timed(|| AnalyticModel::load(path).expect("load artifact"));
         println!("PJRT load+compile: {:>9.1} ms (once per process)", t_load * 1e3);
         let t_pjrt = median_time(5, || {

@@ -5,21 +5,40 @@
 
 use crate::config::params::{DistKind, Params};
 use crate::config::yaml::Value;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("parameter `{0}` = {1} is out of range: {2}")]
     Range(&'static str, f64, &'static str),
-    #[error("unknown parameter `{0}`")]
     Unknown(String),
-    #[error("bad value for `{0}`")]
     BadValue(String),
-    #[error("infeasible: working_pool ({0}) + spare_pool ({1}) < job_size ({2}); the job can never start")]
     Infeasible(u32, u32, u32),
-    #[error("bad failure_dist `{0}` (expected exponential, weibull:<shape>, lognormal:<sigma>)")]
     BadDist(String),
 }
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Range(name, v, why) => {
+                write!(f, "parameter `{name}` = {v} is out of range: {why}")
+            }
+            ConfigError::Unknown(name) => write!(f, "unknown parameter `{name}`"),
+            ConfigError::BadValue(name) => write!(f, "bad value for `{name}`"),
+            ConfigError::Infeasible(w, s, j) => write!(
+                f,
+                "infeasible: working_pool ({w}) + spare_pool ({s}) < job_size ({j}); \
+                 the job can never start"
+            ),
+            ConfigError::BadDist(s) => write!(
+                f,
+                "bad failure_dist `{s}` (expected exponential, weibull:<shape>, \
+                 lognormal:<sigma>)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// Validate a parameter set.
 pub fn validate(p: &Params) -> Result<(), ConfigError> {

@@ -19,7 +19,7 @@
 //! surface the paper's `Params`/`config.yaml` user files use (§III-D).
 
 use std::collections::BTreeMap;
-use thiserror::Error;
+use std::fmt;
 
 /// Parsed YAML-subset value.
 #[derive(Clone, Debug, PartialEq)]
@@ -29,17 +29,28 @@ pub enum Value {
     Map(BTreeMap<String, Value>),
 }
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum YamlError {
-    #[error("line {0}: bad indentation")]
     Indent(usize),
-    #[error("line {0}: expected `key: value`")]
     KeyValue(usize),
-    #[error("line {0}: unterminated inline collection")]
     Unterminated(usize),
-    #[error("expression error: {0}")]
     Expr(String),
 }
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            YamlError::Indent(l) => write!(f, "line {l}: bad indentation"),
+            YamlError::KeyValue(l) => write!(f, "line {l}: expected `key: value`"),
+            YamlError::Unterminated(l) => {
+                write!(f, "line {l}: unterminated inline collection")
+            }
+            YamlError::Expr(e) => write!(f, "expression error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for YamlError {}
 
 impl Value {
     pub fn as_map(&self) -> Option<&BTreeMap<String, Value>> {

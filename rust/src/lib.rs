@@ -8,8 +8,13 @@
 //!
 //! * **Layer 3 (this crate)** — the paper's contribution: a deterministic
 //!   discrete-event simulation of failure / recovery / repair / scheduling /
-//!   pooling in clusters running gang-scheduled AI training jobs, with a
-//!   config + sweep + statistics + reporting stack around it.
+//!   pooling in clusters running gang-scheduled AI training jobs. The
+//!   simulation core is decomposed into pluggable policy subsystems
+//!   (host [`model::selection`], repair queueing [`model::repair`],
+//!   checkpointing [`model::checkpoint`], failure clocks
+//!   [`model::failure`]) over a shared [`model::ctx::SimCtx`], with a
+//!   declarative [`scenario`] layer, a batched-replication [`sweep`]
+//!   runner, and a config + statistics + reporting stack around it.
 //! * **Layer 2 (`python/compile/model.py`)** — the paper's analytical
 //!   comparator (batched CTMC transient analysis), authored in JAX and
 //!   AOT-compiled to `artifacts/analytic.hlo.txt`.
@@ -36,6 +41,7 @@ pub mod config;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod stats;
 pub mod sweep;

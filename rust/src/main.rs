@@ -1,22 +1,31 @@
 //! AIReSim CLI — the Layer-3 leader entrypoint.
 //!
 //! ```text
-//! airesim run     [--config f.yaml] [--seed N] [--set name=value,...] [--trace]
-//! airesim sweep   [--config f.yaml] [--param name] [--values a,b,c]
-//!                 [--param2 name] [--values2 ...] [--reps N] [--metric m] [--csv]
+//! airesim run      [--config f.yaml] [--seed N] [--set name=value,...]
+//!                  [--policy axis=name,...] [--trace]
+//! airesim sweep    [--config f.yaml] [--param name] [--values a,b,c]
+//!                  [--param2 name] [--values2 ...] [--reps N] [--metric m]
+//!                  [--policy axis=name,...] [--csv]
+//! airesim scenario --config scenario.yaml [--seed N] [--threads N]
+//!                  [--set ...] [--policy ...]
 //! airesim analytic [--config f.yaml] [--artifact path] [--set name=value,...]
-//! airesim whatif  [--config f.yaml] --param name --factor F [--reps N]
-//! airesim list-params
+//! airesim whatif   [--config f.yaml] --param name --factor F [--reps N]
+//! airesim list-params | list-policies
 //! ```
 
 use airesim::analytical;
 use airesim::config::{validate, yaml, Params};
 use airesim::model::cluster::Simulation;
+use airesim::model::policy::{
+    PolicySpec, CHECKPOINT_NAMES, FAILURE_NAMES, REPAIR_NAMES, SELECTION_NAMES,
+};
 use airesim::report;
 use airesim::runtime::AnalyticModel;
+use airesim::scenario::Scenario;
 use airesim::sweep::{run_sweep, Sweep};
 use airesim::util::cli::{render_help, Args, OptSpec};
-use anyhow::{anyhow, bail, Context, Result};
+use airesim::util::err::{Context, Result};
+use airesim::{anyhow, bail};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -32,10 +41,12 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd {
         "run" => cmd_run(rest),
         "sweep" => cmd_sweep(rest),
+        "scenario" => cmd_scenario(rest),
         "analytic" => cmd_analytic(rest),
         "prescreen" => cmd_prescreen(rest),
         "whatif" => cmd_whatif(rest),
         "list-params" => cmd_list_params(),
+        "list-policies" => cmd_list_policies(),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -48,40 +59,91 @@ fn print_usage() {
     println!(
         "AIReSim — discrete event simulator for AI cluster reliability\n\n\
          Subcommands:\n\
-         \x20 run          run one simulation and print its outputs\n\
-         \x20 sweep        one- or two-way parameter sweep with replications\n\
-         \x20 analytic     run the AOT analytical baseline (PJRT artifact)\n\
-         \x20 prescreen    analytically rank a sweep grid, DES the top-k\n\
-         \x20 whatif       scale one parameter by a factor, compare outputs\n\
-         \x20 list-params  show every sweepable parameter name\n\n\
+         \x20 run            run one simulation and print its outputs\n\
+         \x20 sweep          one- or two-way parameter sweep with replications\n\
+         \x20 scenario       run a declarative scenario file (single/sweep/\n\
+         \x20                whatif/inject/compare, policies by name)\n\
+         \x20 analytic       run the AOT analytical baseline (PJRT artifact)\n\
+         \x20 prescreen      analytically rank a sweep grid, DES the top-k\n\
+         \x20 whatif         scale one parameter by a factor, compare outputs\n\
+         \x20 list-params    show every sweepable parameter name\n\
+         \x20 list-policies  show every named policy per subsystem\n\n\
          Run `airesim <cmd> --help` for per-command options."
     );
 }
 
-/// Shared option handling: --config + --set name=value[,name=value...].
-fn load_params(args: &Args) -> Result<Params> {
-    let mut p = match args.get("config") {
+/// A `--config` file, read and parsed exactly once per invocation
+/// (params, policies, and the sweep section all come from this one doc).
+struct ConfigDoc {
+    path: String,
+    doc: yaml::Value,
+}
+
+fn load_doc(args: &Args) -> Result<Option<ConfigDoc>> {
+    match args.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("reading config {path}"))?;
             let doc = yaml::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
-            validate::params_from_config(&doc).map_err(|e| anyhow!("{path}: {e}"))?
+            Ok(Some(ConfigDoc { path: path.to_string(), doc }))
         }
+        None => Ok(None),
+    }
+}
+
+/// Apply `--set name=value[,name=value...]` clauses onto params.
+fn apply_set_clauses(p: &mut Params, clauses: &str) -> Result<()> {
+    for clause in clauses.split(',') {
+        let (name, value) = clause
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--set expects name=value, got `{clause}`"))?;
+        let v = yaml::eval_expr(value).map_err(|e| anyhow!("{name}: {e}"))?;
+        if !p.set_by_name(name.trim(), v) {
+            bail!("unknown parameter `{name}` in --set");
+        }
+    }
+    Ok(())
+}
+
+/// Apply `--policy axis=name[,axis=name...]` clauses onto a spec.
+fn apply_policy_clauses(spec: &mut PolicySpec, clauses: &str) -> Result<()> {
+    for clause in clauses.split(',') {
+        let (axis, name) = clause
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--policy expects axis=name, got `{clause}`"))?;
+        spec.set(axis.trim(), name.trim()).map_err(|e| anyhow!("{e}"))?;
+    }
+    Ok(())
+}
+
+/// Shared option handling: config `params:` + --set name=value[,...].
+fn load_params(doc: Option<&ConfigDoc>, args: &Args) -> Result<Params> {
+    let mut p = match doc {
+        Some(c) => validate::params_from_config(&c.doc)
+            .map_err(|e| anyhow!("{}: {e}", c.path))?,
         None => Params::table1_defaults(),
     };
     if let Some(sets) = args.get("set") {
-        for clause in sets.split(',') {
-            let (name, value) = clause
-                .split_once('=')
-                .ok_or_else(|| anyhow!("--set expects name=value, got `{clause}`"))?;
-            let v = yaml::eval_expr(value).map_err(|e| anyhow!("{name}: {e}"))?;
-            if !p.set_by_name(name.trim(), v) {
-                bail!("unknown parameter `{name}` in --set");
-            }
-        }
+        apply_set_clauses(&mut p, sets)?;
     }
     validate::validate(&p)?;
     Ok(p)
+}
+
+/// Config `policies:` section + `--policy` overrides, validated to build
+/// against `p` (so an incompatible combo — e.g. `failure=gang` with
+/// Weibull clocks — is a clean CLI error, not a worker-thread panic).
+fn load_policies(doc: Option<&ConfigDoc>, args: &Args, p: &Params) -> Result<PolicySpec> {
+    let mut spec = match doc {
+        Some(c) => airesim::sweep::policies_from_doc(&c.doc)
+            .map_err(|e| anyhow!("{}: {e}", c.path))?,
+        None => PolicySpec::default(),
+    };
+    if let Some(clauses) = args.get("policy") {
+        apply_policy_clauses(&mut spec, clauses)?;
+    }
+    spec.build(p).map_err(|e| anyhow!("{e}"))?;
+    Ok(spec)
 }
 
 fn common_spec() -> Vec<OptSpec> {
@@ -91,6 +153,11 @@ fn common_spec() -> Vec<OptSpec> {
             name: "set",
             takes_value: true,
             help: "comma-separated name=value overrides (exprs ok: 2*1440)",
+        },
+        OptSpec {
+            name: "policy",
+            takes_value: true,
+            help: "policy overrides: axis=name,... (see list-policies)",
         },
         OptSpec { name: "help", takes_value: false, help: "show help" },
     ]
@@ -107,10 +174,13 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         print!("{}", render_help("airesim run", "run one simulation", &spec));
         return Ok(());
     }
-    let p = load_params(&args)?;
+    let doc = load_doc(&args)?;
+    let p = load_params(doc.as_ref(), &args)?;
+    let policies = load_policies(doc.as_ref(), &args, &p)?;
     let seed = args.get_u64("seed")?.unwrap_or(42);
 
-    let mut sim = Simulation::new(&p, seed);
+    let mut sim = Simulation::from_spec(&p, &policies, airesim::sim::rng::Rng::new(seed))
+        .map_err(|e| anyhow!("{e}"))?;
     if args.flag("trace") {
         sim = sim.with_trace();
     }
@@ -175,7 +245,8 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         print!("{}", render_help("airesim sweep", "parameter sweep", &spec));
         return Ok(());
     }
-    let base = load_params(&args)?;
+    let doc = load_doc(&args)?;
+    let base = load_params(doc.as_ref(), &args)?;
     let reps = args.get_usize("reps")?.unwrap_or(30);
     let seed = args.get_u64("seed")?.unwrap_or(42);
     let threads = args.get_usize("threads")?.unwrap_or(0);
@@ -197,8 +268,9 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
                 _ => Sweep::one_way(name, name, &xs, reps, seed),
             }
         }
-        _ => sweep_from_config(&args, reps, seed)?,
-    };
+        _ => sweep_from_config(doc.as_ref(), reps, seed)?,
+    }
+    .with_policies(load_policies(doc.as_ref(), &args, &base)?);
 
     let result = run_sweep(&base, &sweep, threads);
     if args.flag("csv") {
@@ -211,13 +283,69 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn sweep_from_config(args: &Args, reps: usize, seed: u64) -> Result<Sweep> {
-    let path = args.get("config").ok_or_else(|| {
+/// Run a declarative scenario file: single runs, sweeps, what-ifs,
+/// scripted injections, and analytic-vs-DES comparisons in one spec.
+fn cmd_scenario(argv: &[String]) -> Result<()> {
+    let mut spec = common_spec();
+    spec.extend([
+        OptSpec { name: "seed", takes_value: true, help: "override the file's seed" },
+        OptSpec { name: "threads", takes_value: true, help: "worker threads (0=auto)" },
+    ]);
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!(
+            "{}",
+            render_help("airesim scenario", "run a declarative scenario file", &spec)
+        );
+        return Ok(());
+    }
+    let path = args
+        .get("config")
+        .ok_or_else(|| anyhow!("scenario needs --config <file.yaml>"))?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading scenario {path}"))?;
+    let mut scenario = Scenario::from_yaml(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+
+    // CLI overrides on top of the file.
+    if let Some(sets) = args.get("set") {
+        apply_set_clauses(&mut scenario.params, sets)?;
+        validate::validate(&scenario.params)?;
+    }
+    if let Some(clauses) = args.get("policy") {
+        apply_policy_clauses(&mut scenario.policies, clauses)?;
+        scenario.policies.build(&scenario.params).map_err(|e| anyhow!("{e}"))?;
+    }
+    if let Some(seed) = args.get_u64("seed")? {
+        scenario.seed = seed;
+    }
+    if let Some(threads) = args.get_usize("threads")? {
+        scenario.threads = threads;
+    }
+
+    let outcome = scenario.run().map_err(|e| anyhow!("{e}"))?;
+    print!("{}", scenario.render(&outcome));
+    Ok(())
+}
+
+fn cmd_list_policies() -> Result<()> {
+    println!("{:<12} {}", "axis", "named policies (first is default)");
+    println!("{:<12} {}", "selection", SELECTION_NAMES.join(", "));
+    println!("{:<12} {}", "repair", REPAIR_NAMES.join(", "));
+    println!("{:<12} {}", "checkpoint", CHECKPOINT_NAMES.join(", "));
+    println!("{:<12} {}", "failure", FAILURE_NAMES.join(", "));
+    println!(
+        "\nselect per-axis with `--policy axis=name,...` or a config's \
+         `policies:` section"
+    );
+    Ok(())
+}
+
+fn sweep_from_config(doc: Option<&ConfigDoc>, reps: usize, seed: u64) -> Result<Sweep> {
+    let c = doc.ok_or_else(|| {
         anyhow!("sweep needs --param/--values or a config with a sweep: section")
     })?;
-    let text = std::fs::read_to_string(path)?;
-    let doc = yaml::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
-    airesim::sweep::sweep_from_doc(&doc, reps, seed).map_err(|e| anyhow!("{path}: {e}"))
+    airesim::sweep::sweep_from_doc(&c.doc, reps, seed)
+        .map_err(|e| anyhow!("{}: {e}", c.path))
 }
 
 fn cmd_analytic(argv: &[String]) -> Result<()> {
@@ -238,23 +366,32 @@ fn cmd_analytic(argv: &[String]) -> Result<()> {
         );
         return Ok(());
     }
-    let p = load_params(&args)?;
+    let doc = load_doc(&args)?;
+    let p = load_params(doc.as_ref(), &args)?;
     let rust_out = analytical::analyze(&p);
     println!("== analytical baseline (pure rust) ==");
     print_analytic(&rust_out);
 
     if !args.flag("rust-only") {
         let path = args.get("artifact").unwrap_or(AnalyticModel::default_path());
-        let model = AnalyticModel::load(path)?;
-        println!(
-            "\n== analytical baseline (PJRT artifact, platform {}) ==",
-            model.platform()
-        );
-        let pjrt_out = model.analyze_many(std::slice::from_ref(&p))?[0];
-        print_analytic(&pjrt_out);
-        let rel = (pjrt_out.makespan_est - rust_out.makespan_est).abs()
-            / rust_out.makespan_est.max(1.0);
-        println!("\nmakespan_est rust-vs-pjrt relative delta: {rel:.2e}");
+        // Degrade, don't die: without the `pjrt` feature (or artifact)
+        // the pure-Rust mirror above is the answer.
+        match AnalyticModel::load(path) {
+            Ok(model) => {
+                println!(
+                    "\n== analytical baseline (PJRT artifact, platform {}) ==",
+                    model.platform()
+                );
+                let pjrt_out = model.analyze_many(std::slice::from_ref(&p))?[0];
+                print_analytic(&pjrt_out);
+                let rel = (pjrt_out.makespan_est - rust_out.makespan_est).abs()
+                    / rust_out.makespan_est.max(1.0);
+                println!("\nmakespan_est rust-vs-pjrt relative delta: {rel:.2e}");
+            }
+            Err(e) => {
+                eprintln!("note: PJRT path unavailable ({e:#}); the pure-Rust mirror above stands");
+            }
+        }
     }
     Ok(())
 }
@@ -298,7 +435,9 @@ fn cmd_prescreen(argv: &[String]) -> Result<()> {
         );
         return Ok(());
     }
-    let base = load_params(&args)?;
+    let doc = load_doc(&args)?;
+    let base = load_params(doc.as_ref(), &args)?;
+    let policies = load_policies(doc.as_ref(), &args, &base)?;
     let top = args.get_usize("top")?.unwrap_or(3);
     let reps = args.get_usize("reps")?.unwrap_or(10);
     let seed = args.get_u64("seed")?.unwrap_or(42);
@@ -320,9 +459,15 @@ fn cmd_prescreen(argv: &[String]) -> Result<()> {
                 _ => Sweep::one_way(name, name, &xs, reps, seed),
             }
         }
-        _ => sweep_from_config(&args, reps, seed)?,
+        _ => sweep_from_config(doc.as_ref(), reps, seed)?,
     };
     let configs: Vec<Params> = sweep.points.iter().map(|pt| pt.apply(&base)).collect();
+    if policies != PolicySpec::default() {
+        println!(
+            "note: the CTMC screen is policy-blind; the selected policies apply \
+             to the DES validation only"
+        );
+    }
 
     // Layer 2/1 via PJRT: one batched pass over the whole grid.
     let path = args.get("artifact").unwrap_or(AnalyticModel::default_path());
@@ -364,17 +509,17 @@ fn cmd_prescreen(argv: &[String]) -> Result<()> {
     println!("{:<44} {:>14} {:>10}", "point", "DES makespan(h)", "±95%CI");
     for &i in order.iter().take(k) {
         let p = &configs[i];
-        let vals: Vec<f64> = (0..reps)
-            .map(|r| {
-                airesim::model::cluster::Simulation::with_rng(
-                    p,
-                    airesim::sim::rng::Rng::derived(seed, &[i as u64, r as u64]),
-                )
-                .run()
-                .makespan
-                    / 60.0
-            })
-            .collect();
+        let mut vals = Vec::with_capacity(reps);
+        for r in 0..reps {
+            let out = Simulation::from_spec(
+                p,
+                &policies,
+                airesim::sim::rng::Rng::derived(seed, &[i as u64, r as u64]),
+            )
+            .map_err(|e| anyhow!("{e}"))?
+            .run();
+            vals.push(out.makespan / 60.0);
+        }
         let s = airesim::stats::Summary::from_values(&vals).unwrap();
         println!(
             "{:<44} {:>14.1} {:>10.1}",
@@ -399,7 +544,8 @@ fn cmd_whatif(argv: &[String]) -> Result<()> {
         print!("{}", render_help("airesim whatif", "what-if scenario", &spec));
         return Ok(());
     }
-    let base = load_params(&args)?;
+    let doc = load_doc(&args)?;
+    let base = load_params(doc.as_ref(), &args)?;
     let name = args.get("param").ok_or_else(|| anyhow!("--param required"))?;
     let factor = args
         .get_f64("factor")?
@@ -417,7 +563,8 @@ fn cmd_whatif(argv: &[String]) -> Result<()> {
         &[current, scaled],
         reps,
         seed,
-    );
+    )
+    .with_policies(load_policies(doc.as_ref(), &args, &base)?);
     let result = run_sweep(&base, &sweep, 0);
     print!("{}", report::text_table(&result, "makespan_hours"));
     let a = result.points[0].summary("makespan_hours").unwrap();

@@ -1,0 +1,97 @@
+//! Checkpoint policies: what a failure costs in lost work and restart
+//! latency (§I "restarting … from a previous checkpoint").
+//!
+//! | name | policy |
+//! |---|---|
+//! | `continuous` | [`Continuous`] — async checkpointing, no work lost (paper default) |
+//! | `periodic`   | [`Periodic`] — commit every `checkpoint_interval` minutes of work |
+//! | `auto`       | `periodic` when `checkpoint_interval > 0`, else `continuous` |
+
+use crate::sim::Time;
+
+/// Checkpoint semantics: lost work on interrupt + restore latency.
+pub trait CheckpointPolicy {
+    /// Stable policy name (the YAML/CLI selector).
+    fn name(&self) -> &'static str;
+
+    /// Useful work lost when a failure interrupts a job that has
+    /// completed `done` minutes of work since start.
+    fn work_lost(&self, done: Time) -> Time;
+
+    /// Checkpoint-restore latency charged per recovery.
+    fn restart_cost(&self) -> Time;
+}
+
+/// The paper's continuous asynchronous checkpointing: all committed work
+/// survives a failure; only the constant restore latency is paid.
+#[derive(Clone, Copy, Debug)]
+pub struct Continuous {
+    pub recovery_time: Time,
+}
+
+impl CheckpointPolicy for Continuous {
+    fn name(&self) -> &'static str {
+        "continuous"
+    }
+
+    fn work_lost(&self, _done: Time) -> Time {
+        0.0
+    }
+
+    fn restart_cost(&self) -> Time {
+        self.recovery_time
+    }
+}
+
+/// Checkpoints are committed every `interval` minutes of useful work;
+/// progress past the last committed checkpoint is lost on failure.
+/// `interval <= 0` degenerates to [`Continuous`].
+#[derive(Clone, Copy, Debug)]
+pub struct Periodic {
+    pub interval: Time,
+    pub recovery_time: Time,
+}
+
+impl CheckpointPolicy for Periodic {
+    fn name(&self) -> &'static str {
+        "periodic"
+    }
+
+    fn work_lost(&self, done: Time) -> Time {
+        if self.interval <= 0.0 {
+            return 0.0;
+        }
+        let committed = (done / self.interval).floor() * self.interval;
+        done - committed
+    }
+
+    fn restart_cost(&self) -> Time {
+        self.recovery_time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn continuous_loses_nothing() {
+        let c = Continuous { recovery_time: 20.0 };
+        assert_eq!(c.work_lost(123.4), 0.0);
+        assert_eq!(c.restart_cost(), 20.0);
+    }
+
+    #[test]
+    fn periodic_loses_past_last_commit() {
+        let p = Periodic { interval: 30.0, recovery_time: 20.0 };
+        assert!((p.work_lost(100.0) - 10.0).abs() < 1e-9);
+        assert!(p.work_lost(90.0).abs() < 1e-9, "exact boundary loses nothing");
+        assert!((p.work_lost(29.9) - 29.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn periodic_zero_interval_degenerates_to_continuous() {
+        let p = Periodic { interval: 0.0, recovery_time: 20.0 };
+        assert_eq!(p.work_lost(500.0), 0.0);
+    }
+}

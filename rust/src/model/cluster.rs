@@ -1,787 +1,213 @@
-//! The cluster simulation: the event loop composing all five modules.
+//! The cluster simulation: the event loop and dispatch glue.
 //!
-//! This is the executable form of the paper's Figure 1 flowchart. One
-//! [`Simulation`] = one cluster with one seed running `Params::num_jobs`
-//! identical gang-scheduled jobs (assumption 6's single job by default;
-//! the multi-job extension the paper names is first-class — all jobs
-//! contend for the same working/spare pools and repair shop).
-//! [`crate::sweep`] runs many simulations.
+//! This is the executable form of the paper's Figure 1 flowchart, reduced
+//! to *mechanism*: [`Simulation`] pops events and routes each one to the
+//! right flow ([`crate::model::lifecycle`] for the job lifecycle,
+//! [`crate::model::repair_flow`] for the repair pipeline). All *policy*
+//! lives behind the four trait objects in [`PolicySet`] — host selection,
+//! repair queueing, checkpoint semantics, and failure clocks — and all
+//! shared state in [`SimCtx`].
+//!
+//! One [`Simulation`] = one cluster with one seed running
+//! `Params::num_jobs` gang-scheduled jobs (all jobs contend for the same
+//! working/spare pools and repair shop). [`crate::sweep`] runs many,
+//! through the buffer-reusing [`ReplicationRunner`].
 
 use crate::config::Params;
-use crate::model::coordinator;
-use crate::model::diagnosis::{self, Diagnosis};
-use crate::model::events::{Ev, FailureKind, RepairStage, ServerId};
-use crate::model::job::{Job, JobPhase};
+use crate::model::ctx::SimCtx;
+use crate::model::events::Ev;
+use crate::model::failure::PerServerClocks;
+use crate::model::job::Job;
+use crate::model::lifecycle as flow;
 use crate::model::outputs::RunOutputs;
-use crate::model::pool::Pools;
-use crate::model::regen;
-use crate::model::repair::{self, Admission, AutoResult, RepairShop};
-use crate::model::retirement;
-use crate::model::scheduler::{self, SelectionPolicy};
-use crate::model::server::{build_fleet, Server, ServerState};
-use crate::sim::engine::Engine;
+use crate::model::policy::{PolicySet, PolicySpec};
+use crate::model::repair_flow;
+use crate::model::selection::SelectionPolicy;
+use crate::model::server::Server;
 use crate::sim::rng::Rng;
 use crate::sim::Time;
 use crate::trace::inject::{Injection, InjectionPlan};
-use crate::trace::{Trace, TraceKind};
+use crate::trace::Trace;
 
-/// One simulation run in progress.
+/// One simulation run in progress: the shared state ([`SimCtx`]) plus the
+/// pluggable policy subsystems ([`PolicySet`]) and the injection script.
 pub struct Simulation {
-    p: Params,
-    policy: SelectionPolicy,
-    engine: Engine<Ev>,
-    rng: Rng,
-    fleet: Vec<Server>,
-    pools: Pools,
-    jobs: Vec<Job>,
-    shop: RepairShop,
-    out: RunOutputs,
-    burst_sum: Time,
-    burst_count: u64,
-    trace: Option<Trace>,
+    ctx: SimCtx,
+    policies: PolicySet,
     injections: InjectionPlan,
-    /// Injections indexed by their `Ev::Inject` payload (target: job 0).
+    /// Injections indexed by their `Ev::Inject { idx }` payload.
     injection_buf: Vec<Injection>,
-    /// Per-job guard for `GangFail` events (bumped on every interrupt and
-    /// on every gang-composition change).
-    gang_gens: Vec<u64>,
-    /// Per-job cached count of bad servers among the active gang (fast
-    /// path only; maintained incrementally on swaps, recomputed on
-    /// selection/regen).
-    gang_n_bads: Vec<usize>,
-    /// Use the single-event exponential gang clock instead of per-server
-    /// clocks (valid only for the memoryless Exponential family).
-    gang_fast_path: bool,
 }
 
 impl Simulation {
-    /// Build a simulation from parameters and a seed.
+    /// Build a simulation from parameters and a seed, with the paper's
+    /// default policies.
     pub fn new(p: &Params, seed: u64) -> Simulation {
         Self::with_rng(p, Rng::new(seed))
     }
 
     /// Build with a pre-derived RNG stream (sweeps use
     /// `Rng::derived(master, &[point, replication])`).
-    pub fn with_rng(p: &Params, mut rng: Rng) -> Simulation {
-        let fleet = build_fleet(p, &mut rng);
-        let pools = Pools::from_fleet(&fleet);
-        let n_jobs = p.num_jobs.max(1) as usize;
-        let jobs = (0..n_jobs).map(|j| Job::with_id(j as u32, p.job_len)).collect();
-        Simulation {
-            p: p.clone(),
-            policy: SelectionPolicy::default(),
-            engine: Engine::with_capacity(p.job_size as usize + 64),
-            rng,
-            fleet,
-            pools,
-            jobs,
-            shop: RepairShop::new(),
-            out: RunOutputs::default(),
-            burst_sum: 0.0,
-            burst_count: 0,
-            trace: None,
-            injections: InjectionPlan::default(),
-            injection_buf: Vec::new(),
-            gang_gens: vec![0; n_jobs],
-            gang_n_bads: vec![0; n_jobs],
-            gang_fast_path: matches!(
-                p.failure_dist,
-                crate::config::DistKind::Exponential
-            ),
-        }
+    pub fn with_rng(p: &Params, rng: Rng) -> Simulation {
+        Self::from_spec(p, &PolicySpec::default(), rng)
+            .expect("default policy spec always builds")
     }
 
-    /// Force the per-server failure-clock path even for exponential
-    /// distributions (perf A/B testing; results are distribution-identical
-    /// but not draw-identical to the gang fast path).
+    /// Build with named policies (the Scenario/sweep entry point).
+    pub fn from_spec(p: &Params, spec: &PolicySpec, rng: Rng) -> Result<Simulation, String> {
+        Ok(Simulation {
+            ctx: SimCtx::new(p, rng),
+            policies: spec.build(p)?,
+            injections: InjectionPlan::default(),
+            injection_buf: Vec::new(),
+        })
+    }
+
+    /// Force per-server failure clocks even for exponential distributions
+    /// (perf A/B testing; results are distribution-identical but not
+    /// draw-identical to the gang fast path).
     pub fn with_per_server_clocks(mut self) -> Self {
-        self.gang_fast_path = false;
+        self.policies.failure = Box::new(PerServerClocks);
         self
     }
 
-    /// Use a non-default host-selection policy.
-    pub fn with_policy(mut self, policy: SelectionPolicy) -> Self {
-        self.policy = policy;
+    /// Use a non-default host-selection policy object.
+    pub fn with_selection(mut self, policy: Box<dyn SelectionPolicy>) -> Self {
+        self.policies.selection = policy;
         self
     }
 
     /// Record a structured trace of the run.
     pub fn with_trace(mut self) -> Self {
-        self.trace = Some(Trace::default());
+        self.ctx.trace = Some(Trace::default());
         self
     }
 
-    /// Script failure injections against job 0 (see [`crate::trace::inject`]).
+    /// Script failure injections (see [`crate::trace::inject`]); each
+    /// injection names its target job.
     pub fn with_injections(mut self, plan: InjectionPlan) -> Self {
         self.injections = plan;
         self
     }
 
-    #[inline]
-    fn tr(&mut self, kind: TraceKind) {
-        if let Some(t) = &mut self.trace {
-            t.push(self.engine.now(), kind);
-        }
-    }
-
-    fn all_done(&self) -> bool {
-        self.jobs.iter().all(|j| j.phase == JobPhase::Done)
+    /// Re-initialize in place for a new run, reusing the previous run's
+    /// allocations (the [`ReplicationRunner`] path).
+    fn reset(&mut self, p: &Params, spec: &PolicySpec, rng: Rng) -> Result<(), String> {
+        self.ctx.reset(p, rng);
+        self.policies = spec.build(p)?;
+        self.injections = InjectionPlan::default();
+        self.injection_buf.clear();
+        Ok(())
     }
 
     /// Run to completion (or the `max_sim_time` horizon) and return the
     /// measured outputs.
-    pub fn run(self) -> RunOutputs {
-        let (out, _) = self.run_traced();
-        out
+    pub fn run(mut self) -> RunOutputs {
+        self.run_in_place()
     }
 
     /// Run and also return the trace (empty unless `with_trace`).
     pub fn run_traced(mut self) -> (RunOutputs, Trace) {
+        let out = self.run_in_place();
+        let trace = self.ctx.trace.take().unwrap_or_default();
+        (out, trace)
+    }
+
+    /// The event loop (both the consuming and the buffer-reusing entry
+    /// points land here).
+    fn run_in_place(&mut self) -> RunOutputs {
         // Schedule scripted injections.
         let mut k = 0usize;
         while let Some(inj) = self.injections.pop() {
-            self.engine.schedule_at(inj.at, Ev::Inject { idx: k });
+            self.ctx.engine.schedule_at(inj.at, Ev::Inject { idx: k });
             self.injection_buf.push(inj);
             k += 1;
         }
         // Periodic bad-server regeneration.
-        if self.p.bad_regen_interval > 0.0 {
-            self.engine.schedule_in(self.p.bad_regen_interval, Ev::BadRegen);
+        if self.ctx.p.bad_regen_interval > 0.0 {
+            self.ctx.engine.schedule_in(self.ctx.p.bad_regen_interval, Ev::BadRegen);
         }
         // Initial host selection for every job (in id order: earlier jobs
         // get first pick of the pools).
-        self.out.per_job_makespans = vec![0.0; self.jobs.len()];
-        for j in 0..self.jobs.len() {
-            self.attempt_start(j);
+        self.ctx.out.per_job_makespans = vec![0.0; self.ctx.jobs.len()];
+        for j in 0..self.ctx.jobs.len() {
+            flow::attempt_start(&mut self.ctx, &mut self.policies, j);
         }
 
-        while let Some((now, ev)) = self.engine.pop() {
-            if now > self.p.max_sim_time {
+        while let Some((now, ev)) = self.ctx.engine.pop() {
+            if now > self.ctx.p.max_sim_time {
                 break;
             }
             self.dispatch(ev);
-            if self.all_done() {
+            if self.ctx.all_done() {
                 break;
             }
         }
 
-        self.finish();
-        let trace = self.trace.take().unwrap_or_default();
-        (self.out, trace)
+        self.ctx.finalize();
+        std::mem::take(&mut self.ctx.out)
     }
 
-    fn finish(&mut self) {
-        if self.all_done() {
-            self.out.completed = true;
-            self.out.makespan = self
-                .out
-                .per_job_makespans
-                .iter()
-                .cloned()
-                .fold(0.0f64, f64::max);
-        } else {
-            // Horizon hit with at least one job unfinished.
-            self.out.completed = false;
-            self.out.makespan = self.p.max_sim_time;
-            for j in &self.jobs {
-                if j.phase == JobPhase::Stalled {
-                    self.out.stall_time += self.p.max_sim_time - j.stalled_since;
-                }
-            }
-            self.tr(TraceKind::Horizon);
-        }
-        self.out.preemptions = self.pools.preemptions;
-        self.out.preemption_cost = self.pools.preemption_cost_total;
-        self.out.repairs_auto = self.shop.completed_auto;
-        self.out.repairs_manual = self.shop.completed_manual;
-        self.out.avg_run_duration = if self.burst_count > 0 {
-            self.burst_sum / self.burst_count as f64
-        } else {
-            0.0
-        };
-        self.out.events_delivered = self.engine.delivered();
-    }
-
-    // ---------------------------------------------------------------- //
-    // Event dispatch
-    // ---------------------------------------------------------------- //
-
+    /// Route one event to its flow handler.
     fn dispatch(&mut self, ev: Ev) {
+        let ctx = &mut self.ctx;
+        let pol = &mut self.policies;
         match ev {
-            Ev::Fail { server, gen, kind } => self.on_fail(server, gen, kind),
-            Ev::GangFail { job, gang_gen } => self.on_gang_fail(job as usize, gang_gen),
-            Ev::JobComplete { job, gen } => self.on_job_complete(job as usize, gen),
-            Ev::RecoveryDone { job, gen } => self.on_recovery_done(job as usize, gen),
-            Ev::SelectionDone { job, gen } => self.on_selection_done(job as usize, gen),
-            Ev::PreemptArrive { server } => self.on_preempt_arrive(server),
-            Ev::RepairDone { server, stage } => self.on_repair_done(server, stage),
-            Ev::BadRegen => self.on_bad_regen(),
-            Ev::Inject { idx } => self.on_inject(idx),
-        }
-    }
-
-    fn on_fail(&mut self, server: ServerId, gen: u64, kind: FailureKind) {
-        let s = &self.fleet[server as usize];
-        // Lazy cancellation: stale clock, or server no longer computing.
-        if s.gen.0 != gen || s.state != ServerState::JobActive {
-            return;
-        }
-        let Some(j) = s.assigned_job.map(|j| j as usize) else {
-            return;
-        };
-        if self.jobs[j].phase != JobPhase::Running {
-            return;
-        }
-        self.handle_failure(j, server, kind);
-    }
-
-    fn on_inject(&mut self, idx: usize) {
-        // Scripted failure against job 0: resolve the victim now; drop if
-        // the job is not running (the injection missed its window).
-        if self.jobs[0].phase != JobPhase::Running || self.jobs[0].active.is_empty() {
-            return;
-        }
-        let inj = self.injection_buf[idx];
-        let victim = self.jobs[0].active[inj.victim_index % self.jobs[0].active.len()];
-        self.handle_failure(0, victim, inj.kind);
-    }
-
-    /// Common failure path (stochastic clock or injection) for job `j`.
-    fn handle_failure(&mut self, j: usize, server: ServerId, kind: FailureKind) {
-        let now = self.engine.now();
-
-        // Count the failure.
-        self.out.failures_total += 1;
-        match kind {
-            FailureKind::Random => self.out.failures_random += 1,
-            FailureKind::Systematic => self.out.failures_systematic += 1,
-        }
-        self.tr(TraceKind::Failure {
-            server,
-            systematic: kind == FailureKind::Systematic,
-        });
-
-        // Module 2 (coordinator): stop the gang, commit progress.
-        // Fast path: per-server gen bumps / age banking are dead work when
-        // no per-server failure clocks exist (exponential gang clock).
-        let burst = if self.gang_fast_path {
-            self.jobs[j].pause(now)
-        } else {
-            coordinator::interrupt(&mut self.jobs[j], &mut self.fleet, now)
-        };
-        self.burst_sum += burst;
-        self.burst_count += 1;
-        // Checkpoint granularity (extension): lose uncommitted work.
-        let lost = self.jobs[j]
-            .apply_checkpoint_loss(self.p.checkpoint_interval, self.p.job_len);
-        self.out.work_lost += lost;
-        self.jobs[j].gen.bump(); // invalidate JobComplete / stale phase events
-
-        // Diagnosis (inputs 12–13) — allocation-free over the active list
-        // (which still contains the failed server at this point).
-        let diag = diagnosis::diagnose_in_gang(
-            &self.p,
-            server,
-            &self.jobs[j].active,
-            &mut self.rng,
-        );
-
-        let to_repair: Option<ServerId> = match diag {
-            Diagnosis::Undiagnosed => {
-                self.out.undiagnosed += 1;
-                None
+            Ev::Fail { server, gen, kind } => flow::on_fail(ctx, pol, server, gen, kind),
+            Ev::GangFail { job, gang_gen } => {
+                flow::on_gang_fail(ctx, pol, job as usize, gang_gen)
             }
-            Diagnosis::Correct(id) => Some(id),
-            Diagnosis::Wrong { blamed, .. } => {
-                self.out.wrong_diagnoses += 1;
-                Some(blamed)
+            Ev::JobComplete { job, gen } => {
+                flow::on_job_complete(ctx, pol, job as usize, gen)
             }
-        };
-
-        match to_repair {
-            None => {
-                // Restart in place after recovery: nobody leaves the gang.
-                self.begin_recovery(j);
+            Ev::RecoveryDone { job, gen } => {
+                flow::on_recovery_done(ctx, pol, job as usize, gen)
             }
-            Some(blamed) => {
-                // The blamed server leaves the job.
-                if self.fleet[blamed as usize].is_bad {
-                    self.gang_n_bads[j] -= 1;
-                }
-                let removed = self.jobs[j].remove(blamed);
-                debug_assert!(removed, "blamed server {blamed} not in job {j}");
-
-                // Retirement policy (§II-B): score before repairing.
-                let retire = retirement::record_and_decide(
-                    &self.p,
-                    &mut self.fleet[blamed as usize],
-                    now,
-                );
-                if retire {
-                    let sv = &mut self.fleet[blamed as usize];
-                    sv.state = ServerState::Retired;
-                    sv.assigned_job = None;
-                    self.out.retirements += 1;
-                    self.tr(TraceKind::Retired { server: blamed });
-                } else {
-                    self.start_repair(blamed);
-                }
-
-                // Replacement: warm standby if available, else selection.
-                if let Some(promoted) = self.jobs[j].promote_standby() {
-                    if self.fleet[promoted as usize].is_bad {
-                        self.gang_n_bads[j] += 1;
-                    }
-                    self.fleet[promoted as usize].state = ServerState::JobActive;
-                    self.out.standby_swaps += 1;
-                    self.tr(TraceKind::StandbySwap {
-                        failed: blamed,
-                        replacement: promoted,
-                    });
-                    self.begin_recovery(j);
-                } else {
-                    self.out.host_selections += 1;
-                    self.attempt_start(j);
-                }
+            Ev::SelectionDone { job, gen } => {
+                flow::on_selection_done(ctx, pol, job as usize, gen)
             }
-        }
-    }
-
-    /// Enter checkpoint-restore recovery (the constant `recovery_time`).
-    fn begin_recovery(&mut self, j: usize) {
-        self.jobs[j].phase = JobPhase::Recovering;
-        self.out.recovery_total += self.p.recovery_time;
-        self.engine.schedule_in(
-            self.p.recovery_time,
-            Ev::RecoveryDone { job: j as u32, gen: self.jobs[j].gen.0 },
-        );
-    }
-
-    /// (Re-)allocation: Figure 1's host-selection / stall decision.
-    fn attempt_start(&mut self, j: usize) {
-        let was_stalled = self.jobs[j].phase == JobPhase::Stalled;
-        let alloc = scheduler::allocate(
-            &self.p,
-            self.policy,
-            &mut self.jobs[j],
-            &mut self.pools,
-            &mut self.fleet,
-            &mut self.rng,
-        );
-        for &id in &alloc.preempted {
-            self.tr(TraceKind::Preempted { server: id });
-            self.engine
-                .schedule_in(self.p.waiting_time, Ev::PreemptArrive { server: id });
-        }
-        if alloc.can_start {
-            if was_stalled {
-                let waited = self.engine.now() - self.jobs[j].stalled_since;
-                self.out.stall_time += waited;
-                self.tr(TraceKind::Unstalled { waited });
+            Ev::PreemptArrive { server } => flow::on_preempt_arrive(ctx, pol, server),
+            Ev::RepairDone { server, stage } => {
+                repair_flow::on_repair_done(ctx, pol, server, stage)
             }
-            self.jobs[j].phase = JobPhase::Selecting;
-            self.tr(TraceKind::HostSelection { allotted: self.jobs[j].allotted() });
-            self.engine.schedule_in(
-                self.p.host_selection_time,
-                Ev::SelectionDone { job: j as u32, gen: self.jobs[j].gen.0 },
-            );
-        } else {
-            if !was_stalled {
-                self.jobs[j].stalled_since = self.engine.now();
-            }
-            self.jobs[j].phase = JobPhase::Stalled;
-            self.tr(TraceKind::Stalled { allotted: self.jobs[j].allotted() });
+            Ev::BadRegen => flow::on_bad_regen(ctx, pol),
+            Ev::Inject { idx } => flow::on_inject(ctx, pol, self.injection_buf[idx]),
         }
-    }
-
-    /// Give every stalled job another allocation attempt (a server just
-    /// became available somewhere).
-    fn retry_stalled(&mut self) {
-        for j in 0..self.jobs.len() {
-            if self.jobs[j].phase == JobPhase::Stalled {
-                self.attempt_start(j);
-            }
-        }
-    }
-
-    fn on_selection_done(&mut self, j: usize, gen: u64) {
-        if self.jobs[j].gen.0 != gen || self.jobs[j].phase != JobPhase::Selecting {
-            return;
-        }
-        let ok = scheduler::activate(&self.p, &mut self.jobs[j], &mut self.fleet);
-        debug_assert!(ok, "selection completed without enough servers");
-        self.recount_gang_bad(j);
-        if self.jobs[j].remaining < self.p.job_len {
-            // There is a checkpoint to restore.
-            self.begin_recovery(j);
-        } else {
-            self.start_running(j);
-        }
-    }
-
-    fn on_recovery_done(&mut self, j: usize, gen: u64) {
-        if self.jobs[j].gen.0 != gen || self.jobs[j].phase != JobPhase::Recovering {
-            return;
-        }
-        self.tr(TraceKind::RecoveryDone);
-        // Standbys may have arrived while recovering; top the gang up.
-        let before = self.jobs[j].active.len();
-        let ok = scheduler::activate(&self.p, &mut self.jobs[j], &mut self.fleet);
-        debug_assert!(ok, "recovery completed without enough servers");
-        if self.jobs[j].active.len() != before {
-            self.recount_gang_bad(j); // rare: arrivals promoted mid-recovery
-        }
-        self.start_running(j);
-    }
-
-    /// Arm the gang and let job `j` run.
-    fn start_running(&mut self, j: usize) {
-        let now = self.engine.now();
-        debug_assert!(self.jobs[j].active.len() >= self.p.job_size as usize);
-        self.jobs[j].resume(now);
-        if !self.gang_fast_path {
-            // Per-server bookkeeping only matters for age-dependent clocks.
-            coordinator::mark_running(&self.jobs[j], &mut self.fleet, now);
-        }
-        if self.jobs[j].remaining >= self.p.job_len {
-            self.tr(TraceKind::JobStarted);
-        }
-        // Completion clock first (FIFO tie-break: completion wins a tie
-        // against a failure at the exact same instant).
-        self.engine.schedule_in(
-            self.jobs[j].remaining,
-            Ev::JobComplete { job: j as u32, gen: self.jobs[j].gen.0 },
-        );
-        // Failure clocks (module 1).
-        if self.gang_fast_path {
-            self.schedule_gang_clock(j);
-        } else {
-            for i in 0..self.jobs[j].active.len() {
-                let id = self.jobs[j].active[i];
-                let s = &self.fleet[id as usize];
-                let (dt, kind) = s.sample_failure(&self.p, &mut self.rng);
-                self.engine
-                    .schedule_in(dt, Ev::Fail { server: id, gen: s.gen.0, kind });
-            }
-        }
-    }
-
-    /// Exponential fast path: one clock for the whole gang.
-    /// min over N Exp clocks = Exp(total rate); the victim and kind are
-    /// resolved rate-proportionally when the clock fires.
-    fn schedule_gang_clock(&mut self, j: usize) {
-        self.gang_gens[j] += 1;
-        let n_active = self.jobs[j].active.len();
-        let n_bad = self.gang_n_bads[j];
-        debug_assert_eq!(n_bad, self.gang_composition(j).1, "gang_n_bad drifted");
-        let total_rate = n_active as f64 * self.p.random_failure_rate
-            + n_bad as f64 * self.p.systematic_failure_rate;
-        if total_rate <= 0.0 {
-            return; // failure-free configuration
-        }
-        let dt = -self.rng.next_open_f64().ln() / total_rate;
-        self.engine.schedule_in(
-            dt,
-            Ev::GangFail { job: j as u32, gang_gen: self.gang_gens[j] },
-        );
-    }
-
-    fn gang_composition(&self, j: usize) -> (usize, usize) {
-        let n_active = self.jobs[j].active.len();
-        let n_bad = self.jobs[j]
-            .active
-            .iter()
-            .filter(|&&id| self.fleet[id as usize].is_bad)
-            .count();
-        (n_active, n_bad)
-    }
-
-    /// Re-derive the cached bad-active count (selection / regen paths —
-    /// the standby-swap hot path maintains it incrementally).
-    fn recount_gang_bad(&mut self, j: usize) {
-        self.gang_n_bads[j] = self.gang_composition(j).1;
-    }
-
-    fn on_gang_fail(&mut self, j: usize, gang_gen: u64) {
-        if gang_gen != self.gang_gens[j] || self.jobs[j].phase != JobPhase::Running {
-            return;
-        }
-        // Resolve victim + kind rate-proportionally.
-        let n_active = self.jobs[j].active.len();
-        let n_bad = self.gang_n_bads[j];
-        let rate_random = n_active as f64 * self.p.random_failure_rate;
-        let rate_sys = n_bad as f64 * self.p.systematic_failure_rate;
-        let total = rate_random + rate_sys;
-        debug_assert!(total > 0.0);
-        let (victim, kind) = if self.rng.next_f64() * total < rate_random {
-            // A random clock fired: uniform victim over all active.
-            let k = self.rng.next_below(n_active as u64) as usize;
-            (self.jobs[j].active[k], FailureKind::Random)
-        } else {
-            // A systematic clock fired: uniform victim over bad actives.
-            let k = self.rng.next_below(n_bad as u64) as usize;
-            let victim = self.jobs[j]
-                .active
-                .iter()
-                .copied()
-                .filter(|&id| self.fleet[id as usize].is_bad)
-                .nth(k)
-                .expect("bad-active count changed under us");
-            (victim, FailureKind::Systematic)
-        };
-        self.gang_gens[j] += 1; // retire this clock before the interrupt
-        self.handle_failure(j, victim, kind);
-    }
-
-    fn on_job_complete(&mut self, j: usize, gen: u64) {
-        if self.jobs[j].gen.0 != gen || self.jobs[j].phase != JobPhase::Running {
-            return;
-        }
-        let now = self.engine.now();
-        let burst = self.jobs[j].pause(now);
-        self.burst_sum += burst;
-        self.burst_count += 1;
-        debug_assert!(self.jobs[j].remaining <= 1e-6);
-        self.jobs[j].phase = JobPhase::Done;
-        self.out.per_job_makespans[j] = now;
-        self.tr(TraceKind::JobCompleted { makespan: now });
-
-        // Release the job's servers back to the pools (other jobs may be
-        // waiting on them).
-        let mut released: Vec<ServerId> = self.jobs[j].active.drain(..).collect();
-        released.extend(self.jobs[j].standbys.drain(..));
-        for id in released {
-            let s = &mut self.fleet[id as usize];
-            s.gen.bump(); // retire any in-flight per-server clocks
-            s.assigned_job = None;
-            self.pools.route_freed(&mut self.fleet, id);
-        }
-        self.gang_n_bads[j] = 0;
-        self.retry_stalled();
-    }
-
-    fn on_preempt_arrive(&mut self, server: ServerId) {
-        self.pools.arrive(&mut self.fleet, server);
-        self.tr(TraceKind::PreemptArrived { server });
-        let target = (self.p.job_size + self.p.warm_standbys) as usize;
-        // Offer the arrival to the neediest job (stalled first, then any
-        // under-allotted one), in id order.
-        let pick = (0..self.jobs.len())
-            .filter(|&j| {
-                self.jobs[j].phase != JobPhase::Done && self.jobs[j].allotted() < target
-            })
-            .min_by_key(|&j| (self.jobs[j].phase != JobPhase::Stalled, j));
-        match pick {
-            Some(j) => {
-                let s = &mut self.fleet[server as usize];
-                s.state = ServerState::JobStandby;
-                s.assigned_job = Some(j as u32);
-                self.jobs[j].standbys.push(server);
-                if self.jobs[j].phase == JobPhase::Stalled {
-                    self.attempt_start(j);
-                }
-            }
-            None => {
-                // No longer needed: drain back.
-                self.pools.route_freed(&mut self.fleet, server);
-                self.retry_stalled();
-            }
-        }
-    }
-
-    // ---------------------------------------------------------------- //
-    // Repair pipeline (module 4)
-    // ---------------------------------------------------------------- //
-
-    /// Admission into a repair stage (possibly queueing on capacity).
-    fn enter_stage(&mut self, server: ServerId, stage: RepairStage) {
-        match self.shop.admit(&self.p, stage, server) {
-            Admission::Start => self.start_stage(server, stage),
-            Admission::Queued => {
-                self.fleet[server as usize].state = ServerState::RepairQueued;
-            }
-        }
-    }
-
-    fn start_stage(&mut self, server: ServerId, stage: RepairStage) {
-        let s = &mut self.fleet[server as usize];
-        s.state = match stage {
-            RepairStage::Automated => ServerState::AutoRepair,
-            RepairStage::Manual => ServerState::ManualRepair,
-        };
-        let d = repair::duration(&self.p, stage, &mut self.rng);
-        self.tr(TraceKind::RepairStart {
-            server,
-            manual: stage == RepairStage::Manual,
-        });
-        self.engine.schedule_in(d, Ev::RepairDone { server, stage });
-    }
-
-    fn start_repair(&mut self, server: ServerId) {
-        // Every failure goes to automated testing first (assumption 3).
-        self.enter_stage(server, RepairStage::Automated);
-    }
-
-    fn on_repair_done(&mut self, server: ServerId, stage: RepairStage) {
-        // Free the shop slot; the FIFO head (if any) starts its repair.
-        if let Some(next) = self.shop.complete(stage) {
-            self.start_stage(next, stage);
-        }
-
-        match stage {
-            RepairStage::Automated => match repair::auto_outcome(&self.p, &mut self.rng) {
-                AutoResult::Escalate => {
-                    self.enter_stage(server, RepairStage::Manual);
-                }
-                AutoResult::Resolved { fixed } => {
-                    self.reintegrate(server, false, fixed);
-                }
-            },
-            RepairStage::Manual => {
-                let fixed = repair::manual_fixed(&self.p, &mut self.rng);
-                self.reintegrate(server, true, fixed);
-            }
-        }
-    }
-
-    /// Return a repaired server to service (assumption 5: a successful
-    /// repair turns a bad server good; a silent failure leaves it bad).
-    fn reintegrate(&mut self, server: ServerId, manual: bool, fixed: bool) {
-        {
-            let s = &mut self.fleet[server as usize];
-            if fixed && s.is_bad {
-                s.is_bad = false;
-            }
-            s.renew();
-        }
-        self.tr(TraceKind::RepairDone { server, manual, fixed });
-
-        let target = (self.p.job_size + self.p.warm_standbys) as usize;
-        let assigned = self.fleet[server as usize]
-            .assigned_job
-            .map(|j| j as usize)
-            .filter(|&j| {
-                self.jobs[j].phase != JobPhase::Done && self.jobs[j].allotted() < target
-            });
-        match assigned {
-            Some(j) => {
-                // §II-B: returns to *its* job without host selection.
-                self.fleet[server as usize].state = ServerState::JobStandby;
-                self.jobs[j].standbys.push(server);
-                if self.jobs[j].phase == JobPhase::Stalled {
-                    self.attempt_start(j);
-                }
-            }
-            None => {
-                self.fleet[server as usize].assigned_job = None;
-                self.pools.route_freed(&mut self.fleet, server);
-                self.retry_stalled();
-            }
-        }
-    }
-
-    fn on_bad_regen(&mut self) {
-        let converted = regen::regenerate(&self.p, &mut self.fleet, &mut self.rng);
-        self.out.regenerated_bad += converted as u64;
-        self.tr(TraceKind::Regenerated { converted });
-        if converted > 0 {
-            for j in 0..self.jobs.len() {
-                // Conversions may touch active servers regardless of phase.
-                self.recount_gang_bad(j);
-                // Newly-bad computing servers get a systematic clock now.
-                if self.jobs[j].phase != JobPhase::Running {
-                    continue;
-                }
-                if self.gang_fast_path {
-                    // Memoryless: re-draw the gang clock against the new
-                    // composition (the old one is retired by the gen bump).
-                    self.schedule_gang_clock(j);
-                } else {
-                    let now = self.engine.now();
-                    for i in 0..self.jobs[j].active.len() {
-                        let id = self.jobs[j].active[i];
-                        let s = &self.fleet[id as usize];
-                        if s.is_bad {
-                            let age = s.run_age + (now - s.active_since);
-                            let d = self
-                                .p
-                                .failure_dist
-                                .with_rate(self.p.systematic_failure_rate);
-                            let dt = d.sample_remaining(&mut self.rng, age);
-                            self.engine.schedule_in(
-                                dt,
-                                Ev::Fail {
-                                    server: id,
-                                    gen: s.gen.0,
-                                    kind: FailureKind::Systematic,
-                                },
-                            );
-                        }
-                    }
-                }
-            }
-        }
-        self.engine.schedule_in(self.p.bad_regen_interval, Ev::BadRegen);
     }
 
     // ---------------------------------------------------------------- //
     // Introspection (tests, property checks)
     // ---------------------------------------------------------------- //
 
-    /// Server-conservation invariant: every server is in exactly one
-    /// logical place and the counts add up to the fleet size.
+    /// Server-conservation invariant (see [`SimCtx::conservation_ok`]).
     pub fn conservation_ok(&self) -> bool {
-        let mut counts = [0usize; 9];
-        for s in &self.fleet {
-            let i = match s.state {
-                ServerState::WorkingIdle => 0,
-                ServerState::JobActive => 1,
-                ServerState::JobStandby => 2,
-                ServerState::SparePool => 3,
-                ServerState::SpareTransit => 4,
-                ServerState::AutoRepair => 5,
-                ServerState::ManualRepair => 6,
-                ServerState::RepairQueued => 7,
-                ServerState::Retired => 8,
-            };
-            counts[i] += 1;
-        }
-        let total: usize = counts.iter().sum();
-        let active: usize = self.jobs.iter().map(|j| j.active.len()).sum();
-        let standby: usize = self.jobs.iter().map(|j| j.standbys.len()).sum();
-        total == self.fleet.len()
-            && counts[0] == self.pools.idle_count()
-            && counts[3] == self.pools.spare_count()
-            && counts[4] == self.pools.in_transit as usize
-            && counts[1] == active
-            && counts[2] == standby
-            && counts[5] + counts[6] + counts[7] == self.shop.population()
+        self.ctx.conservation_ok()
     }
 
     /// Current simulation time (test hook).
     pub fn now(&self) -> Time {
-        self.engine.now()
+        self.ctx.now()
     }
 
     /// Immutable view of job 0 (test hook; single-job configurations).
     pub fn job(&self) -> &Job {
-        &self.jobs[0]
+        &self.ctx.jobs[0]
     }
 
     /// Immutable view of all jobs (test hook).
     pub fn jobs(&self) -> &[Job] {
-        &self.jobs
+        &self.ctx.jobs
     }
 
     /// Immutable view of the fleet (test hook).
     pub fn fleet(&self) -> &[Server] {
-        &self.fleet
+        &self.ctx.fleet
     }
 
     /// Step the simulation by exactly one event (test hook). Returns false
     /// when no events remain.
     pub fn step(&mut self) -> bool {
-        match self.engine.pop() {
+        match self.ctx.engine.pop() {
             Some((_, ev)) => {
                 self.dispatch(ev);
                 true
@@ -793,12 +219,46 @@ impl Simulation {
     /// Initialize scheduling as `run()` does, without consuming events
     /// (test hook for step-wise execution).
     pub fn prime(&mut self) {
-        if self.p.bad_regen_interval > 0.0 {
-            self.engine.schedule_in(self.p.bad_regen_interval, Ev::BadRegen);
+        if self.ctx.p.bad_regen_interval > 0.0 {
+            self.ctx.engine.schedule_in(self.ctx.p.bad_regen_interval, Ev::BadRegen);
         }
-        self.out.per_job_makespans = vec![0.0; self.jobs.len()];
-        for j in 0..self.jobs.len() {
-            self.attempt_start(j);
+        self.ctx.out.per_job_makespans = vec![0.0; self.ctx.jobs.len()];
+        for j in 0..self.ctx.jobs.len() {
+            flow::attempt_start(&mut self.ctx, &mut self.policies, j);
         }
+    }
+}
+
+/// Batched replication runner: reuses one [`Simulation`]'s buffers (event
+/// heap, fleet vector, pool free-lists, job server-lists, repair queues)
+/// across many replications instead of reallocating per run. Sweep worker
+/// threads each own one.
+///
+/// Byte-equivalence with fresh construction is guaranteed (and tested):
+/// `runner.run(p, spec, rng)` produces the same [`RunOutputs`] as
+/// `Simulation::from_spec(p, spec, rng).run()`.
+#[derive(Default)]
+pub struct ReplicationRunner {
+    sim: Option<Simulation>,
+}
+
+impl ReplicationRunner {
+    pub fn new() -> ReplicationRunner {
+        ReplicationRunner { sim: None }
+    }
+
+    /// Run one replication, reusing buffers from previous runs.
+    ///
+    /// Panics if `spec` cannot be built for `p` (validate specs up front;
+    /// numeric sweeps never change policy validity).
+    pub fn run(&mut self, p: &Params, spec: &PolicySpec, rng: Rng) -> RunOutputs {
+        const MSG: &str = "policy spec must build for swept params";
+        match &mut self.sim {
+            Some(sim) => sim.reset(p, spec, rng).expect(MSG),
+            slot @ None => {
+                *slot = Some(Simulation::from_spec(p, spec, rng).expect(MSG));
+            }
+        }
+        self.sim.as_mut().expect("initialized above").run_in_place()
     }
 }

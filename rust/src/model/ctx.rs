@@ -1,0 +1,224 @@
+//! [`SimCtx`] — the shared simulation state every policy subsystem
+//! operates through.
+//!
+//! The context owns the *mechanism* (engine, fleet, pools, jobs, repair
+//! shop, RNG, outputs, trace); the *policy* lives in the trait objects of
+//! [`crate::model::policy::PolicySet`]. Keeping the two in separate
+//! structs is what lets a `&mut dyn` policy borrow the whole context
+//! mutably while the event loop in [`crate::model::cluster`] stays thin.
+//!
+//! `SimCtx::reset` re-initializes a context *in place*, reusing the
+//! event-heap, fleet, pool free-list, and job allocations — the batched
+//! replication runner ([`crate::model::cluster::ReplicationRunner`])
+//! leans on this to amortize allocations across thousands of sweep
+//! replications.
+
+use crate::config::Params;
+use crate::model::events::Ev;
+use crate::model::job::{Job, JobPhase};
+use crate::model::outputs::RunOutputs;
+use crate::model::pool::Pools;
+use crate::model::repair::RepairShop;
+use crate::model::server::{build_fleet_into, Server, ServerState};
+use crate::sim::engine::Engine;
+use crate::sim::rng::Rng;
+use crate::sim::Time;
+use crate::trace::{Trace, TraceKind};
+
+/// Shared mutable state of one simulation run.
+pub struct SimCtx {
+    pub p: Params,
+    pub engine: Engine<Ev>,
+    pub rng: Rng,
+    pub fleet: Vec<Server>,
+    pub pools: Pools,
+    pub jobs: Vec<Job>,
+    pub shop: RepairShop,
+    pub out: RunOutputs,
+    pub trace: Option<Trace>,
+    /// Sum of running-burst lengths (drives `avg_run_duration`).
+    pub burst_sum: Time,
+    /// Number of running bursts observed.
+    pub burst_count: u64,
+    /// Scratch id buffer reused by fleet construction.
+    pub scratch_ids: Vec<u32>,
+}
+
+impl SimCtx {
+    /// Build a fresh context for `p`, seeded with `rng`.
+    pub fn new(p: &Params, rng: Rng) -> SimCtx {
+        let mut ctx = SimCtx {
+            p: p.clone(),
+            engine: Engine::new(),
+            rng: Rng::new(0),
+            fleet: Vec::new(),
+            pools: Pools::default(),
+            jobs: Vec::new(),
+            shop: RepairShop::new(),
+            out: RunOutputs::default(),
+            trace: None,
+            burst_sum: 0.0,
+            burst_count: 0,
+            scratch_ids: Vec::new(),
+        };
+        ctx.reset(p, rng);
+        ctx
+    }
+
+    /// Re-initialize in place for a new run, reusing every allocation the
+    /// previous run left behind (event heap, fleet vector, pool
+    /// free-lists, job server-lists, repair queues).
+    pub fn reset(&mut self, p: &Params, mut rng: Rng) {
+        // Same draw order as a fresh construction: the fleet's bad-set
+        // shuffle consumes the stream first.
+        build_fleet_into(p, &mut rng, &mut self.fleet, &mut self.scratch_ids);
+        self.pools.rebuild(&self.fleet);
+        let n_jobs = p.num_jobs.max(1) as usize;
+        self.jobs.truncate(n_jobs);
+        for (j, job) in self.jobs.iter_mut().enumerate() {
+            job.reset(j as u32, p.job_len);
+        }
+        for j in self.jobs.len()..n_jobs {
+            self.jobs.push(Job::with_id(j as u32, p.job_len));
+        }
+        self.engine.reset(p.job_size as usize + 64);
+        self.shop.reset();
+        self.out = RunOutputs::default();
+        self.trace = None;
+        self.burst_sum = 0.0;
+        self.burst_count = 0;
+        self.rng = rng;
+        self.p = p.clone();
+    }
+
+    /// Append a trace record at the current simulation time (no-op when
+    /// tracing is off — one branch on the hot path).
+    #[inline]
+    pub fn tr(&mut self, kind: TraceKind) {
+        if let Some(t) = &mut self.trace {
+            t.push(self.engine.now(), kind);
+        }
+    }
+
+    /// Current simulation time.
+    #[inline]
+    pub fn now(&self) -> Time {
+        self.engine.now()
+    }
+
+    /// Have all jobs finished?
+    pub fn all_done(&self) -> bool {
+        self.jobs.iter().all(|j| j.phase == JobPhase::Done)
+    }
+
+    /// Fill the derived output fields at end of run.
+    pub fn finalize(&mut self) {
+        if self.all_done() {
+            self.out.completed = true;
+            self.out.makespan = self
+                .out
+                .per_job_makespans
+                .iter()
+                .cloned()
+                .fold(0.0f64, f64::max);
+        } else {
+            // Horizon hit with at least one job unfinished.
+            self.out.completed = false;
+            self.out.makespan = self.p.max_sim_time;
+            for j in &self.jobs {
+                if j.phase == JobPhase::Stalled {
+                    self.out.stall_time += self.p.max_sim_time - j.stalled_since;
+                }
+            }
+            self.tr(TraceKind::Horizon);
+        }
+        self.out.preemptions = self.pools.preemptions;
+        self.out.preemption_cost = self.pools.preemption_cost_total;
+        self.out.repairs_auto = self.shop.completed_auto;
+        self.out.repairs_manual = self.shop.completed_manual;
+        self.out.avg_run_duration = if self.burst_count > 0 {
+            self.burst_sum / self.burst_count as f64
+        } else {
+            0.0
+        };
+        self.out.events_delivered = self.engine.delivered();
+    }
+
+    /// Server-conservation invariant: every server is in exactly one
+    /// logical place and the counts add up to the fleet size.
+    pub fn conservation_ok(&self) -> bool {
+        let mut counts = [0usize; 9];
+        for s in &self.fleet {
+            let i = match s.state {
+                ServerState::WorkingIdle => 0,
+                ServerState::JobActive => 1,
+                ServerState::JobStandby => 2,
+                ServerState::SparePool => 3,
+                ServerState::SpareTransit => 4,
+                ServerState::AutoRepair => 5,
+                ServerState::ManualRepair => 6,
+                ServerState::RepairQueued => 7,
+                ServerState::Retired => 8,
+            };
+            counts[i] += 1;
+        }
+        let total: usize = counts.iter().sum();
+        let active: usize = self.jobs.iter().map(|j| j.active.len()).sum();
+        let standby: usize = self.jobs.iter().map(|j| j.standbys.len()).sum();
+        total == self.fleet.len()
+            && counts[0] == self.pools.idle_count()
+            && counts[3] == self.pools.spare_count()
+            && counts[4] == self.pools.in_transit as usize
+            && counts[1] == active
+            && counts[2] == standby
+            && counts[5] + counts[6] + counts[7] == self.shop.population()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_is_equivalent_to_fresh_construction() {
+        let p = Params::small_test();
+        let fresh = SimCtx::new(&p, Rng::new(9));
+
+        // Dirty a context with a different configuration, then reset.
+        let mut q = Params::small_test();
+        q.working_pool = 100;
+        q.num_jobs = 3;
+        let mut reused = SimCtx::new(&q, Rng::new(1));
+        reused.burst_sum = 123.0;
+        reused.burst_count = 5;
+        reused.reset(&p, Rng::new(9));
+
+        assert_eq!(reused.fleet.len(), fresh.fleet.len());
+        for (a, b) in reused.fleet.iter().zip(&fresh.fleet) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.is_bad, b.is_bad, "bad set differs at {}", a.id);
+            assert_eq!(a.state, b.state);
+            assert_eq!(a.home, b.home);
+        }
+        assert_eq!(reused.jobs.len(), fresh.jobs.len());
+        assert_eq!(reused.pools.idle_count(), fresh.pools.idle_count());
+        assert_eq!(reused.pools.spare_count(), fresh.pools.spare_count());
+        assert_eq!(reused.burst_count, 0);
+        assert_eq!(reused.engine.delivered(), 0);
+        assert_eq!(reused.engine.pending(), 0);
+        // The reset stream continues identically to the fresh one.
+        let mut a = reused.rng.clone();
+        let mut b = fresh.rng.clone();
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn conservation_holds_at_rest() {
+        let p = Params::small_test();
+        let ctx = SimCtx::new(&p, Rng::new(3));
+        assert!(ctx.conservation_ok());
+        assert!(!ctx.all_done());
+    }
+}

@@ -1,0 +1,366 @@
+//! Failure models (paper module 1's clocks): *how* failure events are
+//! generated for a running gang.
+//!
+//! | name | model |
+//! |---|---|
+//! | `gang`       | [`GangExponential`] — one aggregate clock per gang (exponential only) |
+//! | `per_server` | [`PerServerClocks`] — one clock per active server (any distribution) |
+//! | `auto`       | `gang` when the failure family is exponential, else `per_server` |
+//!
+//! [`GangExponential`] exploits memorylessness: the minimum of N
+//! exponential clocks is `Exp(sum of rates)`, so one event replaces N and
+//! the victim is resolved rate-proportionally when the clock fires — the
+//! headline event-count optimization. [`PerServerClocks`] arms every
+//! active server individually with age-conditional sampling, which is
+//! what non-exponential families (Weibull, LogNormal) require.
+//!
+//! Both models implement [`FailureModel`] and are draw-for-draw
+//! deterministic: the dispatch refactor preserves the exact RNG
+//! consumption order of the pre-refactor `Simulation`.
+
+use crate::model::coordinator;
+use crate::model::ctx::SimCtx;
+use crate::model::events::{Ev, FailureKind, ServerId};
+use crate::sim::Time;
+
+/// Stochastic failure-clock subsystem for the running gangs.
+pub trait FailureModel {
+    /// Stable policy name (the YAML/CLI selector).
+    fn name(&self) -> &'static str;
+
+    /// Stop job `j`'s running gang at `now`: commit progress and retire
+    /// whatever clocks the model keeps. Returns the interrupted burst
+    /// length.
+    fn interrupt(&mut self, ctx: &mut SimCtx, j: usize, now: Time) -> Time;
+
+    /// Bookkeeping when job `j` (re-)enters Running at `now` (per-server
+    /// models stamp `active_since`; aggregate models need nothing).
+    fn mark_running(&mut self, ctx: &mut SimCtx, j: usize, now: Time);
+
+    /// Arm the failure clocks for job `j`, which just entered Running.
+    fn arm(&mut self, ctx: &mut SimCtx, j: usize);
+
+    /// Resolve an [`Ev::GangFail`] for job `j`: `Some((victim, kind))` if
+    /// the clock is current, `None` if stale (lazy cancellation) or the
+    /// model does not use aggregate clocks.
+    fn resolve_gang_fail(
+        &mut self,
+        ctx: &mut SimCtx,
+        j: usize,
+        gang_gen: u64,
+    ) -> Option<(ServerId, FailureKind)>;
+
+    /// The blamed server just left job `j`'s gang (standby-swap hot path
+    /// maintains cached composition incrementally).
+    fn note_removed(&mut self, j: usize, was_bad: bool);
+
+    /// A standby was just promoted into job `j`'s gang.
+    fn note_promoted(&mut self, j: usize, is_bad: bool);
+
+    /// Recount cached gang composition from scratch (selection, regen,
+    /// and completion paths).
+    fn recount(&mut self, ctx: &SimCtx, j: usize);
+
+    /// Re-arm after a regeneration tick converted servers while job `j`
+    /// is Running.
+    fn regen_rearm(&mut self, ctx: &mut SimCtx, j: usize);
+}
+
+/// Count of bad servers among job `j`'s active gang.
+fn count_bad_active(ctx: &SimCtx, j: usize) -> usize {
+    ctx.jobs[j]
+        .active
+        .iter()
+        .filter(|&&id| ctx.fleet[id as usize].is_bad)
+        .count()
+}
+
+/// Exponential fast path: one clock for the whole gang.
+///
+/// Valid only for the memoryless Exponential family; results are
+/// distribution-identical but not draw-identical to [`PerServerClocks`].
+#[derive(Clone, Debug, Default)]
+pub struct GangExponential {
+    /// Per-job clock generation (bumped on every interrupt and on every
+    /// gang-composition change).
+    gens: Vec<u64>,
+    /// Per-job cached count of bad servers among the active gang.
+    n_bads: Vec<usize>,
+}
+
+impl GangExponential {
+    pub fn new(n_jobs: usize) -> Self {
+        GangExponential { gens: vec![0; n_jobs], n_bads: vec![0; n_jobs] }
+    }
+
+    /// Draw and schedule the aggregate clock for job `j` (retiring any
+    /// in-flight one via the generation bump).
+    fn schedule_clock(&mut self, ctx: &mut SimCtx, j: usize) {
+        self.gens[j] += 1;
+        let n_active = ctx.jobs[j].active.len();
+        let n_bad = self.n_bads[j];
+        debug_assert_eq!(n_bad, count_bad_active(ctx, j), "gang n_bad drifted");
+        let total_rate = n_active as f64 * ctx.p.random_failure_rate
+            + n_bad as f64 * ctx.p.systematic_failure_rate;
+        if total_rate <= 0.0 {
+            return; // failure-free configuration
+        }
+        let dt = -ctx.rng.next_open_f64().ln() / total_rate;
+        ctx.engine
+            .schedule_in(dt, Ev::GangFail { job: j as u32, gang_gen: self.gens[j] });
+    }
+}
+
+impl FailureModel for GangExponential {
+    fn name(&self) -> &'static str {
+        "gang"
+    }
+
+    fn interrupt(&mut self, ctx: &mut SimCtx, j: usize, now: Time) -> Time {
+        // No per-server clocks exist: per-server gen bumps / age banking
+        // would be dead work. Pausing the job is enough; the aggregate
+        // clock is retired by the next generation bump.
+        ctx.jobs[j].pause(now)
+    }
+
+    fn mark_running(&mut self, _ctx: &mut SimCtx, _j: usize, _now: Time) {}
+
+    fn arm(&mut self, ctx: &mut SimCtx, j: usize) {
+        self.schedule_clock(ctx, j);
+    }
+
+    fn resolve_gang_fail(
+        &mut self,
+        ctx: &mut SimCtx,
+        j: usize,
+        gang_gen: u64,
+    ) -> Option<(ServerId, FailureKind)> {
+        if gang_gen != self.gens[j] {
+            return None; // stale clock (lazy cancellation)
+        }
+        // Resolve victim + kind rate-proportionally.
+        let n_active = ctx.jobs[j].active.len();
+        let n_bad = self.n_bads[j];
+        let rate_random = n_active as f64 * ctx.p.random_failure_rate;
+        let rate_sys = n_bad as f64 * ctx.p.systematic_failure_rate;
+        let total = rate_random + rate_sys;
+        debug_assert!(total > 0.0);
+        let (victim, kind) = if ctx.rng.next_f64() * total < rate_random {
+            // A random clock fired: uniform victim over all active.
+            let k = ctx.rng.next_below(n_active as u64) as usize;
+            (ctx.jobs[j].active[k], FailureKind::Random)
+        } else {
+            // A systematic clock fired: uniform victim over bad actives.
+            let k = ctx.rng.next_below(n_bad as u64) as usize;
+            let victim = ctx.jobs[j]
+                .active
+                .iter()
+                .copied()
+                .filter(|&id| ctx.fleet[id as usize].is_bad)
+                .nth(k)
+                .expect("bad-active count changed under us");
+            (victim, FailureKind::Systematic)
+        };
+        self.gens[j] += 1; // retire this clock before the interrupt
+        Some((victim, kind))
+    }
+
+    fn note_removed(&mut self, j: usize, was_bad: bool) {
+        if was_bad {
+            self.n_bads[j] -= 1;
+        }
+    }
+
+    fn note_promoted(&mut self, j: usize, is_bad: bool) {
+        if is_bad {
+            self.n_bads[j] += 1;
+        }
+    }
+
+    fn recount(&mut self, ctx: &SimCtx, j: usize) {
+        self.n_bads[j] = count_bad_active(ctx, j);
+    }
+
+    fn regen_rearm(&mut self, ctx: &mut SimCtx, j: usize) {
+        // Memoryless: re-draw the aggregate clock against the new
+        // composition (the old one is retired by the gen bump).
+        self.schedule_clock(ctx, j);
+    }
+}
+
+/// General per-server clocks: every active server is armed individually,
+/// with age-conditional sampling for non-exponential families (renewal at
+/// repair).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PerServerClocks;
+
+impl FailureModel for PerServerClocks {
+    fn name(&self) -> &'static str {
+        "per_server"
+    }
+
+    fn interrupt(&mut self, ctx: &mut SimCtx, j: usize, now: Time) -> Time {
+        let SimCtx { jobs, fleet, .. } = ctx;
+        coordinator::interrupt(&mut jobs[j], fleet, now)
+    }
+
+    fn mark_running(&mut self, ctx: &mut SimCtx, j: usize, now: Time) {
+        let SimCtx { jobs, fleet, .. } = ctx;
+        coordinator::mark_running(&jobs[j], fleet, now);
+    }
+
+    fn arm(&mut self, ctx: &mut SimCtx, j: usize) {
+        // Indexed loop: the body needs `ctx` mutably (rng + engine), so we
+        // cannot hold an iterator over `ctx.jobs[j].active`.
+        let n_active = ctx.jobs[j].active.len();
+        for i in 0..n_active {
+            let id = ctx.jobs[j].active[i];
+            let (dt, kind, gen) = {
+                let s = &ctx.fleet[id as usize];
+                let (dt, kind) = s.sample_failure(&ctx.p, &mut ctx.rng);
+                (dt, kind, s.gen.0)
+            };
+            ctx.engine.schedule_in(dt, Ev::Fail { server: id, gen, kind });
+        }
+    }
+
+    fn resolve_gang_fail(
+        &mut self,
+        _ctx: &mut SimCtx,
+        _j: usize,
+        _gang_gen: u64,
+    ) -> Option<(ServerId, FailureKind)> {
+        debug_assert!(false, "per-server model never schedules GangFail");
+        None
+    }
+
+    fn note_removed(&mut self, _j: usize, _was_bad: bool) {}
+
+    fn note_promoted(&mut self, _j: usize, _is_bad: bool) {}
+
+    fn recount(&mut self, _ctx: &SimCtx, _j: usize) {}
+
+    fn regen_rearm(&mut self, ctx: &mut SimCtx, j: usize) {
+        // Newly-bad computing servers get a systematic clock now.
+        let now = ctx.engine.now();
+        let n_active = ctx.jobs[j].active.len();
+        for i in 0..n_active {
+            let id = ctx.jobs[j].active[i];
+            let (schedule, dt, gen) = {
+                let s = &ctx.fleet[id as usize];
+                if s.is_bad {
+                    let age = s.run_age + (now - s.active_since);
+                    let d = ctx
+                        .p
+                        .failure_dist
+                        .with_rate(ctx.p.systematic_failure_rate);
+                    (true, d.sample_remaining(&mut ctx.rng, age), s.gen.0)
+                } else {
+                    (false, 0.0, 0)
+                }
+            };
+            if schedule {
+                ctx.engine.schedule_in(
+                    dt,
+                    Ev::Fail { server: id, gen, kind: FailureKind::Systematic },
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Params;
+    use crate::model::job::JobPhase;
+    use crate::model::server::ServerState;
+    use crate::sim::rng::Rng;
+
+    /// Context with job 0 running on the first `job_size` servers.
+    fn running_ctx(p: &Params, seed: u64) -> SimCtx {
+        let mut ctx = SimCtx::new(p, Rng::new(seed));
+        for _ in 0..p.job_size {
+            let id = ctx.pools.take_idle(&mut ctx.fleet).unwrap();
+            ctx.fleet[id as usize].state = ServerState::JobActive;
+            ctx.fleet[id as usize].assigned_job = Some(0);
+            ctx.jobs[0].active.push(id);
+        }
+        ctx.jobs[0].resume(0.0);
+        assert_eq!(ctx.jobs[0].phase, JobPhase::Running);
+        ctx
+    }
+
+    #[test]
+    fn gang_schedules_one_event_per_arm() {
+        let p = Params::small_test();
+        let mut ctx = running_ctx(&p, 1);
+        let mut fm = GangExponential::new(1);
+        fm.recount(&ctx, 0);
+        fm.arm(&mut ctx, 0);
+        assert_eq!(ctx.engine.pending(), 1, "one aggregate clock");
+    }
+
+    #[test]
+    fn per_server_schedules_one_event_per_active() {
+        let p = Params::small_test();
+        let mut ctx = running_ctx(&p, 1);
+        let mut fm = PerServerClocks;
+        fm.arm(&mut ctx, 0);
+        assert_eq!(ctx.engine.pending(), p.job_size as usize);
+    }
+
+    #[test]
+    fn gang_zero_rates_never_fire() {
+        let mut p = Params::small_test();
+        p.random_failure_rate = 0.0;
+        p.systematic_failure_rate = 0.0;
+        let mut ctx = running_ctx(&p, 2);
+        let mut fm = GangExponential::new(1);
+        fm.recount(&ctx, 0);
+        fm.arm(&mut ctx, 0);
+        assert_eq!(ctx.engine.pending(), 0);
+    }
+
+    #[test]
+    fn stale_gang_gen_is_dropped_without_draws() {
+        let p = Params::small_test();
+        let mut ctx = running_ctx(&p, 3);
+        let mut fm = GangExponential::new(1);
+        fm.recount(&ctx, 0);
+        fm.arm(&mut ctx, 0);
+        let rng_before = ctx.rng.clone();
+        // Generation 0 is stale (arm bumped to 1).
+        assert!(fm.resolve_gang_fail(&mut ctx, 0, 0).is_none());
+        let mut a = rng_before;
+        let mut b = ctx.rng.clone();
+        assert_eq!(a.next_u64(), b.next_u64(), "stale resolution must not draw");
+    }
+
+    #[test]
+    fn current_gang_gen_resolves_a_victim() {
+        let p = Params::small_test();
+        let mut ctx = running_ctx(&p, 4);
+        let mut fm = GangExponential::new(1);
+        fm.recount(&ctx, 0);
+        fm.arm(&mut ctx, 0);
+        let (victim, _kind) = fm.resolve_gang_fail(&mut ctx, 0, 1).expect("current gen");
+        assert!(ctx.jobs[0].active.contains(&victim));
+        // The resolution retired the clock: the same gen is now stale.
+        assert!(fm.resolve_gang_fail(&mut ctx, 0, 1).is_none());
+    }
+
+    #[test]
+    fn incremental_bad_count_tracks_recount() {
+        let p = Params::small_test();
+        let mut ctx = running_ctx(&p, 5);
+        let mut fm = GangExponential::new(1);
+        fm.recount(&ctx, 0);
+        let before = fm.n_bads[0];
+        fm.note_promoted(0, true);
+        fm.note_removed(0, true);
+        assert_eq!(fm.n_bads[0], before);
+        fm.recount(&ctx, 0);
+        assert_eq!(fm.n_bads[0], count_bad_active(&ctx, 0));
+    }
+}

@@ -5,6 +5,7 @@
 //! whole iteration; asynchronous checkpoints mean work completed *before*
 //! the failure is preserved and only the recovery latency is paid.
 
+use crate::config::Params;
 use crate::model::events::ServerId;
 use crate::sim::event::Generation;
 use crate::sim::Time;
@@ -64,9 +65,31 @@ impl Job {
         }
     }
 
+    /// Re-initialize in place for a new run, keeping the server-list
+    /// allocations (the batched replication runner resets jobs this way).
+    pub fn reset(&mut self, id: u32, job_len: Time) {
+        self.id = id;
+        self.phase = JobPhase::Stalled;
+        self.remaining = job_len;
+        self.run_start = 0.0;
+        self.active.clear();
+        self.standbys.clear();
+        self.gen = Generation::default();
+        self.stalled_since = 0.0;
+    }
+
     /// Total servers currently allotted to the job.
     pub fn allotted(&self) -> usize {
         self.active.len() + self.standbys.len()
+    }
+
+    /// Is the job live and under its full allotment (`job_size +
+    /// warm_standbys`)? The single source of truth for "this job would
+    /// take another server": repair reintegration, preemption-arrival
+    /// routing, and the `job_first` repair priority all key on it.
+    pub fn wants_more(&self, p: &Params) -> bool {
+        self.phase != JobPhase::Done
+            && self.allotted() < (p.job_size + p.warm_standbys) as usize
     }
 
     /// Commit the progress of a running burst that ends now.
@@ -83,22 +106,6 @@ impl Job {
     pub fn resume(&mut self, now: Time) {
         self.phase = JobPhase::Running;
         self.run_start = now;
-    }
-
-    /// Apply checkpoint-granularity loss after a failure (extension knob):
-    /// with checkpoints committed every `interval` minutes of useful work,
-    /// progress past the last committed checkpoint is lost. Returns the
-    /// work lost. `interval == 0` models the paper's continuous
-    /// asynchronous checkpointing (no loss).
-    pub fn apply_checkpoint_loss(&mut self, interval: Time, job_len: Time) -> Time {
-        if interval <= 0.0 {
-            return 0.0;
-        }
-        let done = job_len - self.remaining;
-        let committed = (done / interval).floor() * interval;
-        let lost = done - committed;
-        self.remaining += lost;
-        lost
     }
 
     /// Remove a server from the job's bookkeeping (wherever it sits).
@@ -145,32 +152,19 @@ mod tests {
     }
 
     #[test]
-    fn checkpoint_loss_rounds_down_to_interval() {
-        let mut j = Job::new(1000.0);
-        j.resume(0.0);
-        j.pause(100.0); // done = 100
-        // Checkpoints every 30: committed = 90, lose 10.
-        let lost = j.apply_checkpoint_loss(30.0, 1000.0);
-        assert!((lost - 10.0).abs() < 1e-9);
-        assert!((j.remaining - 910.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn checkpoint_loss_zero_interval_is_lossless() {
-        let mut j = Job::new(1000.0);
-        j.resume(0.0);
-        j.pause(123.0);
-        assert_eq!(j.apply_checkpoint_loss(0.0, 1000.0), 0.0);
-        assert_eq!(j.remaining, 877.0);
-    }
-
-    #[test]
-    fn checkpoint_loss_at_exact_boundary_is_zero() {
-        let mut j = Job::new(1000.0);
-        j.resume(0.0);
-        j.pause(90.0);
-        let lost = j.apply_checkpoint_loss(30.0, 1000.0);
-        assert!(lost.abs() < 1e-9);
+    fn reset_reuses_allocations() {
+        let mut j = Job::with_id(3, 500.0);
+        j.active = vec![1, 2, 3];
+        j.standbys = vec![4];
+        j.resume(10.0);
+        j.pause(60.0);
+        j.gen.bump();
+        j.reset(0, 1000.0);
+        assert_eq!(j.id, 0);
+        assert_eq!(j.phase, JobPhase::Stalled);
+        assert_eq!(j.remaining, 1000.0);
+        assert!(j.active.is_empty() && j.standbys.is_empty());
+        assert_eq!(j.gen.0, 0);
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! The job lifecycle flow of Figure 1: failure handling, allocation,
+//! recovery, running, completion, and preemption arrivals.
+//!
+//! Every function here is dispatch glue over the shared [`SimCtx`] and
+//! the pluggable [`PolicySet`]: the *decisions* (which server to take,
+//! what a failure costs, when clocks fire) are delegated to the policy
+//! traits; this module sequences them.
+
+use crate::model::ctx::SimCtx;
+use crate::model::diagnosis::{self, Diagnosis};
+use crate::model::events::{Ev, FailureKind, ServerId};
+use crate::model::job::JobPhase;
+use crate::model::policy::PolicySet;
+use crate::model::regen;
+use crate::model::repair_flow;
+use crate::model::scheduler;
+use crate::model::server::ServerState;
+use crate::trace::inject::Injection;
+use crate::trace::TraceKind;
+
+pub(crate) fn on_fail(
+    ctx: &mut SimCtx,
+    pol: &mut PolicySet,
+    server: ServerId,
+    gen: u64,
+    kind: FailureKind,
+) {
+    let s = &ctx.fleet[server as usize];
+    // Lazy cancellation: stale clock, or server no longer computing.
+    if s.gen.0 != gen || s.state != ServerState::JobActive {
+        return;
+    }
+    let Some(j) = s.assigned_job.map(|j| j as usize) else {
+        return;
+    };
+    if ctx.jobs[j].phase != JobPhase::Running {
+        return;
+    }
+    handle_failure(ctx, pol, j, server, kind);
+}
+
+pub(crate) fn on_gang_fail(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize, gang_gen: u64) {
+    if ctx.jobs[j].phase != JobPhase::Running {
+        return;
+    }
+    if let Some((victim, kind)) = pol.failure.resolve_gang_fail(ctx, j, gang_gen) {
+        handle_failure(ctx, pol, j, victim, kind);
+    }
+}
+
+/// A scripted failure fires: resolve the victim now; drop cleanly if the
+/// target job does not exist or is not running (the injection missed its
+/// window).
+pub(crate) fn on_inject(ctx: &mut SimCtx, pol: &mut PolicySet, inj: Injection) {
+    let j = inj.job as usize;
+    if j >= ctx.jobs.len() {
+        return;
+    }
+    if ctx.jobs[j].phase != JobPhase::Running || ctx.jobs[j].active.is_empty() {
+        return;
+    }
+    let victim = ctx.jobs[j].active[inj.victim_index % ctx.jobs[j].active.len()];
+    handle_failure(ctx, pol, j, victim, inj.kind);
+}
+
+/// Common failure path (stochastic clock or injection) for job `j`.
+pub(crate) fn handle_failure(
+    ctx: &mut SimCtx,
+    pol: &mut PolicySet,
+    j: usize,
+    server: ServerId,
+    kind: FailureKind,
+) {
+    let now = ctx.now();
+
+    // Count the failure.
+    ctx.out.failures_total += 1;
+    match kind {
+        FailureKind::Random => ctx.out.failures_random += 1,
+        FailureKind::Systematic => ctx.out.failures_systematic += 1,
+    }
+    ctx.tr(TraceKind::Failure { server, systematic: kind == FailureKind::Systematic });
+
+    // Module 2 (coordinator): stop the gang, commit progress. The failure
+    // model owns the per-server vs aggregate clock split.
+    let burst = pol.failure.interrupt(ctx, j, now);
+    ctx.burst_sum += burst;
+    ctx.burst_count += 1;
+    // Checkpoint policy: lose work past the last committed checkpoint.
+    let done = ctx.p.job_len - ctx.jobs[j].remaining;
+    let lost = pol.checkpoint.work_lost(done);
+    ctx.jobs[j].remaining += lost;
+    ctx.out.work_lost += lost;
+    ctx.jobs[j].gen.bump(); // invalidate JobComplete / stale phase events
+
+    // Diagnosis (inputs 12–13) — allocation-free over the active list
+    // (which still contains the failed server at this point).
+    let diag =
+        diagnosis::diagnose_in_gang(&ctx.p, server, &ctx.jobs[j].active, &mut ctx.rng);
+
+    let to_repair: Option<ServerId> = match diag {
+        Diagnosis::Undiagnosed => {
+            ctx.out.undiagnosed += 1;
+            None
+        }
+        Diagnosis::Correct(id) => Some(id),
+        Diagnosis::Wrong { blamed, .. } => {
+            ctx.out.wrong_diagnoses += 1;
+            Some(blamed)
+        }
+    };
+
+    match to_repair {
+        None => {
+            // Restart in place after recovery: nobody leaves the gang.
+            begin_recovery(ctx, pol, j);
+        }
+        Some(blamed) => {
+            // The blamed server leaves the job.
+            let was_bad = ctx.fleet[blamed as usize].is_bad;
+            pol.failure.note_removed(j, was_bad);
+            let removed = ctx.jobs[j].remove(blamed);
+            debug_assert!(removed, "blamed server {blamed} not in job {j}");
+
+            repair_flow::retire_or_repair(ctx, pol, blamed, now);
+
+            // Replacement: warm standby if available, else selection.
+            if let Some(promoted) = ctx.jobs[j].promote_standby() {
+                let is_bad = ctx.fleet[promoted as usize].is_bad;
+                pol.failure.note_promoted(j, is_bad);
+                ctx.fleet[promoted as usize].state = ServerState::JobActive;
+                ctx.out.standby_swaps += 1;
+                ctx.tr(TraceKind::StandbySwap { failed: blamed, replacement: promoted });
+                begin_recovery(ctx, pol, j);
+            } else {
+                ctx.out.host_selections += 1;
+                attempt_start(ctx, pol, j);
+            }
+        }
+    }
+}
+
+/// Enter checkpoint-restore recovery (cost set by the checkpoint policy).
+pub(crate) fn begin_recovery(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
+    ctx.jobs[j].phase = JobPhase::Recovering;
+    let cost = pol.checkpoint.restart_cost();
+    ctx.out.recovery_total += cost;
+    let gen = ctx.jobs[j].gen.0;
+    ctx.engine.schedule_in(cost, Ev::RecoveryDone { job: j as u32, gen });
+}
+
+/// (Re-)allocation: Figure 1's host-selection / stall decision.
+pub(crate) fn attempt_start(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
+    let was_stalled = ctx.jobs[j].phase == JobPhase::Stalled;
+    let alloc = scheduler::allocate(
+        &ctx.p,
+        pol.selection.as_mut(),
+        &mut ctx.jobs[j],
+        &mut ctx.pools,
+        &mut ctx.fleet,
+        &mut ctx.rng,
+    );
+    for &id in &alloc.preempted {
+        ctx.tr(TraceKind::Preempted { server: id });
+        ctx.engine.schedule_in(ctx.p.waiting_time, Ev::PreemptArrive { server: id });
+    }
+    if alloc.can_start {
+        if was_stalled {
+            let waited = ctx.now() - ctx.jobs[j].stalled_since;
+            ctx.out.stall_time += waited;
+            ctx.tr(TraceKind::Unstalled { waited });
+        }
+        ctx.jobs[j].phase = JobPhase::Selecting;
+        let allotted = ctx.jobs[j].allotted();
+        ctx.tr(TraceKind::HostSelection { allotted });
+        let gen = ctx.jobs[j].gen.0;
+        ctx.engine
+            .schedule_in(ctx.p.host_selection_time, Ev::SelectionDone { job: j as u32, gen });
+    } else {
+        if !was_stalled {
+            ctx.jobs[j].stalled_since = ctx.now();
+        }
+        ctx.jobs[j].phase = JobPhase::Stalled;
+        let allotted = ctx.jobs[j].allotted();
+        ctx.tr(TraceKind::Stalled { allotted });
+    }
+}
+
+/// Give every stalled job another allocation attempt (a server just
+/// became available somewhere).
+pub(crate) fn retry_stalled(ctx: &mut SimCtx, pol: &mut PolicySet) {
+    for j in 0..ctx.jobs.len() {
+        if ctx.jobs[j].phase == JobPhase::Stalled {
+            attempt_start(ctx, pol, j);
+        }
+    }
+}
+
+pub(crate) fn on_selection_done(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize, gen: u64) {
+    if ctx.jobs[j].gen.0 != gen || ctx.jobs[j].phase != JobPhase::Selecting {
+        return;
+    }
+    let ok = scheduler::activate(&ctx.p, &mut ctx.jobs[j], &mut ctx.fleet);
+    debug_assert!(ok, "selection completed without enough servers");
+    pol.failure.recount(ctx, j);
+    if ctx.jobs[j].remaining < ctx.p.job_len {
+        // There is a checkpoint to restore.
+        begin_recovery(ctx, pol, j);
+    } else {
+        start_running(ctx, pol, j);
+    }
+}
+
+pub(crate) fn on_recovery_done(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize, gen: u64) {
+    if ctx.jobs[j].gen.0 != gen || ctx.jobs[j].phase != JobPhase::Recovering {
+        return;
+    }
+    ctx.tr(TraceKind::RecoveryDone);
+    // Standbys may have arrived while recovering; top the gang up.
+    let before = ctx.jobs[j].active.len();
+    let ok = scheduler::activate(&ctx.p, &mut ctx.jobs[j], &mut ctx.fleet);
+    debug_assert!(ok, "recovery completed without enough servers");
+    if ctx.jobs[j].active.len() != before {
+        pol.failure.recount(ctx, j); // rare: arrivals promoted mid-recovery
+    }
+    start_running(ctx, pol, j);
+}
+
+/// Arm the gang and let job `j` run.
+pub(crate) fn start_running(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
+    let now = ctx.now();
+    debug_assert!(ctx.jobs[j].active.len() >= ctx.p.job_size as usize);
+    ctx.jobs[j].resume(now);
+    pol.failure.mark_running(ctx, j, now);
+    if ctx.jobs[j].remaining >= ctx.p.job_len {
+        ctx.tr(TraceKind::JobStarted);
+    }
+    // Completion clock first (FIFO tie-break: completion wins a tie
+    // against a failure at the exact same instant).
+    let gen = ctx.jobs[j].gen.0;
+    let remaining = ctx.jobs[j].remaining;
+    ctx.engine.schedule_in(remaining, Ev::JobComplete { job: j as u32, gen });
+    // Failure clocks (module 1), per the failure model.
+    pol.failure.arm(ctx, j);
+}
+
+pub(crate) fn on_job_complete(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize, gen: u64) {
+    if ctx.jobs[j].gen.0 != gen || ctx.jobs[j].phase != JobPhase::Running {
+        return;
+    }
+    let now = ctx.now();
+    let burst = ctx.jobs[j].pause(now);
+    ctx.burst_sum += burst;
+    ctx.burst_count += 1;
+    debug_assert!(ctx.jobs[j].remaining <= 1e-6);
+    ctx.jobs[j].phase = JobPhase::Done;
+    ctx.out.per_job_makespans[j] = now;
+    ctx.tr(TraceKind::JobCompleted { makespan: now });
+
+    // Release the job's servers back to the pools (other jobs may be
+    // waiting on them).
+    let mut released: Vec<ServerId> = ctx.jobs[j].active.drain(..).collect();
+    released.extend(ctx.jobs[j].standbys.drain(..));
+    for id in released {
+        let s = &mut ctx.fleet[id as usize];
+        s.gen.bump(); // retire any in-flight per-server clocks
+        s.assigned_job = None;
+        ctx.pools.route_freed(&mut ctx.fleet, id);
+    }
+    pol.failure.recount(ctx, j); // active drained: zero
+    retry_stalled(ctx, pol);
+}
+
+pub(crate) fn on_preempt_arrive(ctx: &mut SimCtx, pol: &mut PolicySet, server: ServerId) {
+    ctx.pools.arrive(&mut ctx.fleet, server);
+    ctx.tr(TraceKind::PreemptArrived { server });
+    // Offer the arrival to the neediest job (stalled first, then any
+    // under-allotted one), in id order.
+    let jobs = &ctx.jobs;
+    let pick = (0..jobs.len())
+        .filter(|&j| jobs[j].wants_more(&ctx.p))
+        .min_by_key(|&j| (jobs[j].phase != JobPhase::Stalled, j));
+    match pick {
+        Some(j) => {
+            let s = &mut ctx.fleet[server as usize];
+            s.state = ServerState::JobStandby;
+            s.assigned_job = Some(j as u32);
+            ctx.jobs[j].standbys.push(server);
+            if ctx.jobs[j].phase == JobPhase::Stalled {
+                attempt_start(ctx, pol, j);
+            }
+        }
+        None => {
+            // No longer needed: drain back.
+            ctx.pools.route_freed(&mut ctx.fleet, server);
+            retry_stalled(ctx, pol);
+        }
+    }
+}
+
+pub(crate) fn on_bad_regen(ctx: &mut SimCtx, pol: &mut PolicySet) {
+    let converted = regen::regenerate(&ctx.p, &mut ctx.fleet, &mut ctx.rng);
+    ctx.out.regenerated_bad += converted as u64;
+    ctx.tr(TraceKind::Regenerated { converted });
+    if converted > 0 {
+        for j in 0..ctx.jobs.len() {
+            // Conversions may touch active servers regardless of phase.
+            pol.failure.recount(ctx, j);
+            // Running gangs get their clocks re-armed against the new
+            // composition.
+            if ctx.jobs[j].phase != JobPhase::Running {
+                continue;
+            }
+            pol.failure.regen_rearm(ctx, j);
+        }
+    }
+    ctx.engine.schedule_in(ctx.p.bad_regen_interval, Ev::BadRegen);
+}

@@ -1,32 +1,45 @@
-//! The AIReSim model: the paper's five modules (§III-C) plus the
-//! supporting subsystems they imply.
+//! The AIReSim model: the paper's five modules (§III-C) decomposed into
+//! pluggable policy subsystems over a shared simulation context.
 //!
-//! | paper module | here |
-//! |---|---|
-//! | 1. Server       | [`server`] (state machine, failure clocks) |
-//! | 2. Coordinator  | [`coordinator`] (gang interrupt propagation) |
-//! | 3. Scheduler    | [`scheduler`] (host selection, warm standbys) |
-//! | 4. Repairs      | [`repair`] (auto→manual pipeline, capacity) |
-//! | 5. Pool         | [`pool`] (working/spare pools, preemption) |
+//! | paper module | mechanism | pluggable policy |
+//! |---|---|---|
+//! | 1. Server       | [`server`] (state machine) | [`failure`] — clock models (`gang`, `per_server`) |
+//! | 2. Coordinator  | [`coordinator`] (gang interrupt) | — |
+//! | 3. Scheduler    | [`scheduler`] (allotment top-up) | [`selection`] — host choice (`first_fit`, `random`, `locality`) |
+//! | 4. Repairs      | [`repair`] (auto→manual, capacity) | [`repair`] — queue discipline (`fifo`, `lifo`, `job_first`) |
+//! | 5. Pool         | [`pool`] (working/spare pools) | — |
 //!
-//! plus [`job`] (progress + checkpoint semantics), [`diagnosis`]
-//! (inputs 12–13), [`retirement`] (failure-score retirement, §II-B),
-//! [`regen`] (bad-server regeneration, assumption 1 case 2), and
-//! [`cluster`] — the [`cluster::Simulation`] event loop that composes all
-//! of the above, and [`outputs`] — the measured outputs (§III-B).
+//! plus [`checkpoint`] (work-loss/restart policies: `continuous`,
+//! `periodic`), [`job`] (progress semantics), [`diagnosis`] (inputs
+//! 12–13), [`retirement`] (failure-score retirement, §II-B), [`regen`]
+//! (bad-server regeneration), and [`outputs`] (measured outputs, §III-B).
+//!
+//! The composition layer: [`ctx::SimCtx`] holds the shared state,
+//! [`policy::PolicySet`]/[`policy::PolicySpec`] select implementations by
+//! name, [`lifecycle`]/[`repair_flow`] sequence the Figure-1 flows, and
+//! [`cluster::Simulation`] is the event loop. [`cluster::ReplicationRunner`]
+//! reuses one simulation's buffers across batched replications.
 
+pub mod checkpoint;
 pub mod cluster;
 pub mod coordinator;
+pub mod ctx;
 pub mod diagnosis;
 pub mod events;
+pub mod failure;
 pub mod job;
+pub mod lifecycle;
 pub mod outputs;
+pub mod policy;
 pub mod pool;
 pub mod regen;
 pub mod repair;
+pub mod repair_flow;
 pub mod retirement;
 pub mod scheduler;
+pub mod selection;
 pub mod server;
 
-pub use cluster::Simulation;
+pub use cluster::{ReplicationRunner, Simulation};
 pub use outputs::RunOutputs;
+pub use policy::{PolicySet, PolicySpec};

@@ -5,7 +5,11 @@
 use crate::sim::Time;
 
 /// Everything one run measures.
-#[derive(Clone, Debug, Default)]
+///
+/// `PartialEq` supports the refactor-equivalence suite: two code paths
+/// (fresh construction vs batched reuse, any thread count) must produce
+/// **byte-identical** outputs for the same `(params, seed)`.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct RunOutputs {
     /// Output 1: total time to train the job (wall-clock minutes).
     /// With `num_jobs > 1`: the time the *last* job finishes.

@@ -1,0 +1,215 @@
+//! Policy plumbing: the [`PolicySet`] of trait objects a simulation runs
+//! with, and the name-based [`PolicySpec`] that YAML scenarios, sweeps,
+//! and the CLI use to select implementations.
+//!
+//! ```yaml
+//! policies:
+//!   selection: locality      # first_fit | random | locality
+//!   repair: job_first        # fifo | lifo | job_first
+//!   checkpoint: periodic     # auto | continuous | periodic
+//!   failure: auto            # auto | gang | per_server
+//! ```
+
+use crate::config::{DistKind, Params};
+use crate::model::checkpoint::{CheckpointPolicy, Continuous, Periodic};
+use crate::model::failure::{FailureModel, GangExponential, PerServerClocks};
+use crate::model::repair::{Fifo, JobFirst, Lifo, RepairPolicy};
+use crate::model::selection::{FirstFit, Locality, Random, SelectionPolicy};
+
+/// The four policy subsystems of one simulation run.
+pub struct PolicySet {
+    pub selection: Box<dyn SelectionPolicy>,
+    pub repair: Box<dyn RepairPolicy>,
+    pub checkpoint: Box<dyn CheckpointPolicy>,
+    pub failure: Box<dyn FailureModel>,
+}
+
+impl PolicySet {
+    /// The paper's default policies for `p` (first-fit selection, FIFO
+    /// repair, interval-driven checkpointing, auto failure clocks).
+    pub fn defaults(p: &Params) -> PolicySet {
+        PolicySpec::default().build(p).expect("default spec always builds")
+    }
+}
+
+/// Name-based policy selection — `Clone + Sync`, cheap to ship across
+/// sweep threads and to parse from YAML/CLI.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PolicySpec {
+    pub selection: String,
+    pub repair: String,
+    pub checkpoint: String,
+    pub failure: String,
+}
+
+impl Default for PolicySpec {
+    fn default() -> Self {
+        PolicySpec {
+            selection: "first_fit".into(),
+            repair: "fifo".into(),
+            checkpoint: "auto".into(),
+            failure: "auto".into(),
+        }
+    }
+}
+
+/// Valid selection-policy names.
+pub const SELECTION_NAMES: &[&str] = &["first_fit", "random", "locality"];
+/// Valid repair-policy names.
+pub const REPAIR_NAMES: &[&str] = &["fifo", "lifo", "job_first"];
+/// Valid checkpoint-policy names.
+pub const CHECKPOINT_NAMES: &[&str] = &["auto", "continuous", "periodic"];
+/// Valid failure-model names.
+pub const FAILURE_NAMES: &[&str] = &["auto", "gang", "per_server"];
+
+impl PolicySpec {
+    /// Set one axis by name (`selection`, `repair`, `checkpoint`,
+    /// `failure`), validating the value against the registry.
+    pub fn set(&mut self, axis: &str, value: &str) -> Result<(), String> {
+        let (names, slot): (&[&str], &mut String) = match axis {
+            "selection" => (SELECTION_NAMES, &mut self.selection),
+            "repair" => (REPAIR_NAMES, &mut self.repair),
+            "checkpoint" => (CHECKPOINT_NAMES, &mut self.checkpoint),
+            "failure" => (FAILURE_NAMES, &mut self.failure),
+            other => {
+                return Err(format!(
+                    "unknown policy axis `{other}` (expected selection, repair, \
+                     checkpoint, or failure)"
+                ))
+            }
+        };
+        if !names.contains(&value) {
+            return Err(format!(
+                "unknown {axis} policy `{value}` (expected one of {})",
+                names.join(", ")
+            ));
+        }
+        *slot = value.to_string();
+        Ok(())
+    }
+
+    /// Instantiate the policy set for a concrete parameter set (the
+    /// `auto` names resolve against `p`).
+    pub fn build(&self, p: &Params) -> Result<PolicySet, String> {
+        let n_jobs = p.num_jobs.max(1) as usize;
+        let selection: Box<dyn SelectionPolicy> = match self.selection.as_str() {
+            "first_fit" => Box::new(FirstFit),
+            "random" => Box::new(Random),
+            "locality" => Box::new(Locality),
+            other => return Err(format!("unknown selection policy `{other}`")),
+        };
+        let repair: Box<dyn RepairPolicy> = match self.repair.as_str() {
+            "fifo" => Box::new(Fifo),
+            "lifo" => Box::new(Lifo),
+            "job_first" => Box::new(JobFirst),
+            other => return Err(format!("unknown repair policy `{other}`")),
+        };
+        let checkpoint: Box<dyn CheckpointPolicy> = match self.checkpoint.as_str() {
+            "continuous" => Box::new(Continuous { recovery_time: p.recovery_time }),
+            "periodic" => Box::new(Periodic {
+                interval: p.checkpoint_interval,
+                recovery_time: p.recovery_time,
+            }),
+            // The pre-refactor behavior: periodic loss when an interval is
+            // configured, lossless continuous checkpointing otherwise.
+            "auto" => {
+                if p.checkpoint_interval > 0.0 {
+                    Box::new(Periodic {
+                        interval: p.checkpoint_interval,
+                        recovery_time: p.recovery_time,
+                    })
+                } else {
+                    Box::new(Continuous { recovery_time: p.recovery_time })
+                }
+            }
+            other => return Err(format!("unknown checkpoint policy `{other}`")),
+        };
+        let exponential = matches!(p.failure_dist, DistKind::Exponential);
+        let failure: Box<dyn FailureModel> = match self.failure.as_str() {
+            "gang" => {
+                if !exponential {
+                    return Err(format!(
+                        "failure model `gang` requires exponential clocks, got {}",
+                        p.failure_dist.name()
+                    ));
+                }
+                Box::new(GangExponential::new(n_jobs))
+            }
+            "per_server" => Box::new(PerServerClocks),
+            "auto" => {
+                if exponential {
+                    Box::new(GangExponential::new(n_jobs))
+                } else {
+                    Box::new(PerServerClocks)
+                }
+            }
+            other => return Err(format!("unknown failure model `{other}`")),
+        };
+        Ok(PolicySet { selection, repair, checkpoint, failure })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_builds_paper_policies() {
+        let p = Params::small_test(); // exponential, no checkpoint interval
+        let set = PolicySpec::default().build(&p).unwrap();
+        assert_eq!(set.selection.name(), "first_fit");
+        assert_eq!(set.repair.name(), "fifo");
+        assert_eq!(set.checkpoint.name(), "continuous");
+        assert_eq!(set.failure.name(), "gang");
+    }
+
+    #[test]
+    fn auto_resolves_against_params() {
+        let mut p = Params::small_test();
+        p.checkpoint_interval = 60.0;
+        p.failure_dist = DistKind::Weibull { shape: 1.5 };
+        let set = PolicySpec::default().build(&p).unwrap();
+        assert_eq!(set.checkpoint.name(), "periodic");
+        assert_eq!(set.failure.name(), "per_server");
+    }
+
+    #[test]
+    fn set_validates_names() {
+        let mut spec = PolicySpec::default();
+        spec.set("selection", "locality").unwrap();
+        spec.set("repair", "job_first").unwrap();
+        assert_eq!(spec.selection, "locality");
+        assert!(spec.set("selection", "bogus").is_err());
+        assert!(spec.set("bogus_axis", "fifo").is_err());
+    }
+
+    #[test]
+    fn gang_rejects_non_exponential() {
+        let mut p = Params::small_test();
+        p.failure_dist = DistKind::LogNormal { sigma: 0.5 };
+        let mut spec = PolicySpec::default();
+        spec.set("failure", "gang").unwrap();
+        let err = spec.build(&p).unwrap_err();
+        assert!(err.contains("exponential"), "{err}");
+    }
+
+    #[test]
+    fn every_registered_name_builds() {
+        let p = Params::small_test();
+        for &s in SELECTION_NAMES {
+            for &r in REPAIR_NAMES {
+                for &c in CHECKPOINT_NAMES {
+                    for &f in FAILURE_NAMES {
+                        let spec = PolicySpec {
+                            selection: s.into(),
+                            repair: r.into(),
+                            checkpoint: c.into(),
+                            failure: f.into(),
+                        };
+                        spec.build(&p).unwrap_or_else(|e| panic!("{s}/{r}/{c}/{f}: {e}"));
+                    }
+                }
+            }
+        }
+    }
+}

@@ -31,18 +31,35 @@ impl Pools {
     /// Build from the initial fleet (everyone idle in their home pool).
     pub fn from_fleet(fleet: &[Server]) -> Pools {
         let mut p = Pools::default();
+        p.rebuild(fleet);
+        p
+    }
+
+    /// Re-index an initial fleet in place, reusing the free-list
+    /// allocations (the batched replication runner resets pools this way).
+    pub fn rebuild(&mut self, fleet: &[Server]) {
+        self.idle.clear();
+        self.spares.clear();
         for s in fleet {
             match s.state {
-                ServerState::WorkingIdle => p.idle.push(s.id),
-                ServerState::SparePool => p.spares.push(s.id),
+                ServerState::WorkingIdle => self.idle.push(s.id),
+                ServerState::SparePool => self.spares.push(s.id),
                 _ => {}
             }
         }
-        p
+        self.in_transit = 0;
+        self.borrowed = 0;
+        self.preemptions = 0;
+        self.preemption_cost_total = 0.0;
     }
 
     pub fn idle_count(&self) -> usize {
         self.idle.len()
+    }
+
+    /// The idle free-list (selection policies scan it; order is LIFO).
+    pub fn idle_ids(&self) -> &[ServerId] {
+        &self.idle
     }
 
     pub fn spare_count(&self) -> usize {

@@ -17,10 +17,114 @@
 
 use crate::config::Params;
 use crate::model::events::{RepairStage, ServerId};
+use crate::model::job::Job;
+use crate::model::server::Server;
 use crate::sim::dist::Dist;
 use crate::sim::rng::Rng;
 use crate::sim::Time;
 use std::collections::VecDeque;
+
+/// Queue discipline for a repair stage: which queued server starts when a
+/// slot frees up. Selected by name (see [`crate::model::policy`]):
+///
+/// | name | policy |
+/// |---|---|
+/// | `fifo`      | [`Fifo`] — arrival order (default) |
+/// | `lifo`      | [`Lifo`] — most recent arrival first |
+/// | `job_first` | [`JobFirst`] — servers a live job is waiting on jump the queue |
+pub trait RepairPolicy {
+    /// Stable policy name (the YAML/CLI selector).
+    fn name(&self) -> &'static str;
+
+    /// Remove and return the next server to repair from `queue`.
+    fn pick_next(
+        &self,
+        queue: &mut VecDeque<ServerId>,
+        fleet: &[Server],
+        jobs: &[Job],
+        p: &Params,
+    ) -> Option<ServerId>;
+}
+
+/// First-in-first-out (the paper's implicit discipline).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fifo;
+
+impl RepairPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick_next(
+        &self,
+        queue: &mut VecDeque<ServerId>,
+        _fleet: &[Server],
+        _jobs: &[Job],
+        _p: &Params,
+    ) -> Option<ServerId> {
+        queue.pop_front()
+    }
+}
+
+/// Last-in-first-out: freshest failure first (stack discipline — useful
+/// as a worst-case fairness baseline).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Lifo;
+
+impl RepairPolicy for Lifo {
+    fn name(&self) -> &'static str {
+        "lifo"
+    }
+
+    fn pick_next(
+        &self,
+        queue: &mut VecDeque<ServerId>,
+        _fleet: &[Server],
+        _jobs: &[Job],
+        _p: &Params,
+    ) -> Option<ServerId> {
+        queue.pop_back()
+    }
+}
+
+/// Would a repaired `server` return directly to a job right now (§II-B
+/// reintegration: its assigned job is live and under-allotted)? This is
+/// the discriminator [`JobFirst`] prioritizes on — note that *every*
+/// server entering the shop still carries `assigned_job`, so the job's
+/// phase/allotment ([`Job::wants_more`]) is what distinguishes urgent
+/// repairs from ones that would just drain back to the pools.
+fn job_is_waiting(server: ServerId, fleet: &[Server], jobs: &[Job], p: &Params) -> bool {
+    fleet[server as usize]
+        .assigned_job
+        .is_some_and(|j| jobs[j as usize].wants_more(p))
+}
+
+/// Priority discipline: servers whose job is live and under-allotted
+/// (i.e. the repair directly restores lost gang capacity, §II-B) jump
+/// ahead of servers that would only drain back to the pools; FIFO within
+/// each class.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobFirst;
+
+impl RepairPolicy for JobFirst {
+    fn name(&self) -> &'static str {
+        "job_first"
+    }
+
+    fn pick_next(
+        &self,
+        queue: &mut VecDeque<ServerId>,
+        fleet: &[Server],
+        jobs: &[Job],
+        p: &Params,
+    ) -> Option<ServerId> {
+        let idx = queue
+            .iter()
+            .position(|&id| job_is_waiting(id, fleet, jobs, p))
+            .unwrap_or(0);
+        queue.remove(idx)
+    }
+}
 
 /// What happens when an automated repair completes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,6 +188,19 @@ impl RepairShop {
         Self::default()
     }
 
+    /// Clear all state for a new run, retaining queue allocations (the
+    /// batched replication runner reuses the shop).
+    pub fn reset(&mut self) {
+        self.in_auto = 0;
+        self.in_manual = 0;
+        self.queue_auto.clear();
+        self.queue_manual.clear();
+        self.completed_auto = 0;
+        self.completed_manual = 0;
+        self.max_queue_auto = 0;
+        self.max_queue_manual = 0;
+    }
+
     fn cap(p: &Params, stage: RepairStage) -> u32 {
         match stage {
             RepairStage::Automated => p.auto_repair_capacity,
@@ -116,30 +233,32 @@ impl RepairShop {
     }
 
     /// A repair of `stage` completed: free the slot and return the next
-    /// queued server (if any), which the caller must now start.
-    pub fn complete(&mut self, stage: RepairStage) -> Option<ServerId> {
-        match stage {
+    /// queued server per the queue discipline (if any), which the caller
+    /// must now start.
+    pub fn complete(
+        &mut self,
+        p: &Params,
+        stage: RepairStage,
+        policy: &dyn RepairPolicy,
+        fleet: &[Server],
+        jobs: &[Job],
+    ) -> Option<ServerId> {
+        let (busy, queue, completed) = match stage {
             RepairStage::Automated => {
-                debug_assert!(self.in_auto > 0);
-                self.in_auto -= 1;
-                self.completed_auto += 1;
-                let next = self.queue_auto.pop_front();
-                if next.is_some() {
-                    self.in_auto += 1;
-                }
-                next
+                (&mut self.in_auto, &mut self.queue_auto, &mut self.completed_auto)
             }
             RepairStage::Manual => {
-                debug_assert!(self.in_manual > 0);
-                self.in_manual -= 1;
-                self.completed_manual += 1;
-                let next = self.queue_manual.pop_front();
-                if next.is_some() {
-                    self.in_manual += 1;
-                }
-                next
+                (&mut self.in_manual, &mut self.queue_manual, &mut self.completed_manual)
             }
+        };
+        debug_assert!(*busy > 0);
+        *busy -= 1;
+        *completed += 1;
+        let next = policy.pick_next(queue, fleet, jobs, p);
+        if next.is_some() {
+            *busy += 1;
         }
+        next
     }
 
     /// Servers currently inside the shop (busy + queued) — used by the
@@ -154,6 +273,17 @@ impl RepairShop {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::job::JobPhase;
+    use crate::model::server::Home;
+
+    fn test_fleet(n: u32) -> Vec<Server> {
+        (0..n).map(|i| Server::new(i, false, Home::Working)).collect()
+    }
+
+    /// One pending job that still wants servers (job 0, empty allotment).
+    fn waiting_job(p: &Params) -> Vec<Job> {
+        vec![Job::new(p.job_len)]
+    }
 
     #[test]
     fn unlimited_capacity_always_starts() {
@@ -169,16 +299,21 @@ mod tests {
     fn finite_capacity_queues() {
         let mut p = Params::small_test();
         p.auto_repair_capacity = 2;
+        let fleet = test_fleet(4);
+        let jobs = waiting_job(&p);
         let mut shop = RepairShop::new();
         assert_eq!(shop.admit(&p, RepairStage::Automated, 0), Admission::Start);
         assert_eq!(shop.admit(&p, RepairStage::Automated, 1), Admission::Start);
         assert_eq!(shop.admit(&p, RepairStage::Automated, 2), Admission::Queued);
         assert_eq!(shop.admit(&p, RepairStage::Automated, 3), Admission::Queued);
         // Completion hands the slot to the FIFO head.
-        assert_eq!(shop.complete(RepairStage::Automated), Some(2));
-        assert_eq!(shop.complete(RepairStage::Automated), Some(3));
-        assert_eq!(shop.complete(RepairStage::Automated), None);
-        assert_eq!(shop.complete(RepairStage::Automated), None);
+        let next = |shop: &mut RepairShop| {
+            shop.complete(&p, RepairStage::Automated, &Fifo, &fleet, &jobs)
+        };
+        assert_eq!(next(&mut shop), Some(2));
+        assert_eq!(next(&mut shop), Some(3));
+        assert_eq!(next(&mut shop), None);
+        assert_eq!(next(&mut shop), None);
         assert_eq!(shop.population(), 0);
         assert_eq!(shop.completed_auto, 4);
     }
@@ -193,6 +328,80 @@ mod tests {
         assert_eq!(shop.admit(&p, RepairStage::Manual, 1), Admission::Start);
         assert_eq!(shop.admit(&p, RepairStage::Automated, 2), Admission::Queued);
         assert_eq!(shop.admit(&p, RepairStage::Manual, 3), Admission::Queued);
+    }
+
+    #[test]
+    fn lifo_pops_freshest_arrival() {
+        let p = Params::small_test();
+        let fleet = test_fleet(4);
+        let jobs = waiting_job(&p);
+        let mut q: VecDeque<ServerId> = [0, 1, 2].into_iter().collect();
+        assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p), Some(2));
+        assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p), Some(1));
+        assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p), Some(0));
+        assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p), None);
+    }
+
+    #[test]
+    fn job_first_jumps_servers_a_live_job_waits_on() {
+        // All four servers carry `assigned_job` (every server in a real
+        // shop does); what discriminates is the *job's* state. Job 0 is
+        // done, job 1 is under-allotted and waiting.
+        let p = Params::small_test();
+        let mut fleet = test_fleet(4);
+        let mut done = Job::with_id(0, p.job_len);
+        done.phase = JobPhase::Done;
+        let waiting = Job::with_id(1, p.job_len);
+        let jobs = vec![done, waiting];
+        for s in fleet.iter_mut() {
+            s.assigned_job = Some(0); // their job finished without them
+        }
+        fleet[2].assigned_job = Some(1); // job 1 wants this one back
+        let mut q: VecDeque<ServerId> = [0, 1, 2, 3].into_iter().collect();
+        // Server 2 jumps ahead of 0 and 1.
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(2));
+        // Nobody else is awaited: FIFO order resumes.
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(0));
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(1));
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(3));
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), None);
+    }
+
+    #[test]
+    fn job_first_ignores_fully_allotted_jobs() {
+        // A running, fully-allotted job is not waiting on its repaired
+        // server (reintegration would route it back to the pools), so
+        // job_first must not reorder for it.
+        let mut p = Params::small_test();
+        p.job_size = 2;
+        p.warm_standbys = 0;
+        let mut fleet = test_fleet(4);
+        let mut job = Job::with_id(0, p.job_len);
+        job.phase = JobPhase::Running;
+        job.active = vec![0, 1]; // allotted == target
+        let jobs = vec![job];
+        for s in fleet.iter_mut() {
+            s.assigned_job = Some(0);
+        }
+        let mut q: VecDeque<ServerId> = [2, 3].into_iter().collect();
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(2), "plain FIFO");
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut p = Params::small_test();
+        p.auto_repair_capacity = 1;
+        let fleet = test_fleet(4);
+        let jobs = waiting_job(&p);
+        let mut shop = RepairShop::new();
+        shop.admit(&p, RepairStage::Automated, 0);
+        shop.admit(&p, RepairStage::Automated, 1);
+        let _ = shop.complete(&p, RepairStage::Automated, &Fifo, &fleet, &jobs);
+        assert!(shop.population() > 0 || shop.completed_auto > 0);
+        shop.reset();
+        assert_eq!(shop.population(), 0);
+        assert_eq!(shop.completed_auto, 0);
+        assert_eq!(shop.max_queue_auto, 0);
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! The repair pipeline flow (module 4): retirement scoring, shop
+//! admission, stage completion, and reintegration.
+//!
+//! Like [`crate::model::lifecycle`], this is dispatch glue: capacity and
+//! silent-failure mechanics live in [`crate::model::repair`], the queue
+//! discipline behind the pluggable `RepairPolicy` trait object.
+
+use crate::model::ctx::SimCtx;
+use crate::model::events::{Ev, RepairStage, ServerId};
+use crate::model::job::JobPhase;
+use crate::model::lifecycle;
+use crate::model::policy::PolicySet;
+use crate::model::repair::{self, Admission, AutoResult};
+use crate::model::retirement;
+use crate::model::server::ServerState;
+use crate::sim::Time;
+use crate::trace::TraceKind;
+
+/// Retirement policy (§II-B): score the blamed server's failure and
+/// either retire it permanently or send it to the repair pipeline.
+pub(crate) fn retire_or_repair(
+    ctx: &mut SimCtx,
+    pol: &mut PolicySet,
+    server: ServerId,
+    now: Time,
+) {
+    let retire =
+        retirement::record_and_decide(&ctx.p, &mut ctx.fleet[server as usize], now);
+    if retire {
+        let sv = &mut ctx.fleet[server as usize];
+        sv.state = ServerState::Retired;
+        sv.assigned_job = None;
+        ctx.out.retirements += 1;
+        ctx.tr(TraceKind::Retired { server });
+    } else {
+        start_repair(ctx, pol, server);
+    }
+}
+
+/// Every failure goes to automated testing first (assumption 3).
+pub(crate) fn start_repair(ctx: &mut SimCtx, pol: &mut PolicySet, server: ServerId) {
+    enter_stage(ctx, pol, server, RepairStage::Automated);
+}
+
+/// Admission into a repair stage (possibly queueing on capacity).
+fn enter_stage(ctx: &mut SimCtx, pol: &mut PolicySet, server: ServerId, stage: RepairStage) {
+    match ctx.shop.admit(&ctx.p, stage, server) {
+        Admission::Start => start_stage(ctx, pol, server, stage),
+        Admission::Queued => {
+            ctx.fleet[server as usize].state = ServerState::RepairQueued;
+        }
+    }
+}
+
+fn start_stage(ctx: &mut SimCtx, _pol: &mut PolicySet, server: ServerId, stage: RepairStage) {
+    ctx.fleet[server as usize].state = match stage {
+        RepairStage::Automated => ServerState::AutoRepair,
+        RepairStage::Manual => ServerState::ManualRepair,
+    };
+    let d = repair::duration(&ctx.p, stage, &mut ctx.rng);
+    ctx.tr(TraceKind::RepairStart { server, manual: stage == RepairStage::Manual });
+    ctx.engine.schedule_in(d, Ev::RepairDone { server, stage });
+}
+
+pub(crate) fn on_repair_done(
+    ctx: &mut SimCtx,
+    pol: &mut PolicySet,
+    server: ServerId,
+    stage: RepairStage,
+) {
+    // Free the shop slot; the repair policy picks who starts next.
+    let next =
+        ctx.shop
+            .complete(&ctx.p, stage, pol.repair.as_ref(), &ctx.fleet, &ctx.jobs);
+    if let Some(next) = next {
+        start_stage(ctx, pol, next, stage);
+    }
+
+    match stage {
+        RepairStage::Automated => match repair::auto_outcome(&ctx.p, &mut ctx.rng) {
+            AutoResult::Escalate => {
+                enter_stage(ctx, pol, server, RepairStage::Manual);
+            }
+            AutoResult::Resolved { fixed } => {
+                reintegrate(ctx, pol, server, false, fixed);
+            }
+        },
+        RepairStage::Manual => {
+            let fixed = repair::manual_fixed(&ctx.p, &mut ctx.rng);
+            reintegrate(ctx, pol, server, true, fixed);
+        }
+    }
+}
+
+/// Return a repaired server to service (assumption 5: a successful repair
+/// turns a bad server good; a silent failure leaves it bad).
+fn reintegrate(ctx: &mut SimCtx, pol: &mut PolicySet, server: ServerId, manual: bool, fixed: bool) {
+    {
+        let s = &mut ctx.fleet[server as usize];
+        if fixed && s.is_bad {
+            s.is_bad = false;
+        }
+        s.renew();
+    }
+    ctx.tr(TraceKind::RepairDone { server, manual, fixed });
+
+    let jobs = &ctx.jobs;
+    let assigned = ctx.fleet[server as usize]
+        .assigned_job
+        .map(|j| j as usize)
+        .filter(|&j| jobs[j].wants_more(&ctx.p));
+    match assigned {
+        Some(j) => {
+            // §II-B: returns to *its* job without host selection.
+            ctx.fleet[server as usize].state = ServerState::JobStandby;
+            ctx.jobs[j].standbys.push(server);
+            if ctx.jobs[j].phase == JobPhase::Stalled {
+                lifecycle::attempt_start(ctx, pol, j);
+            }
+        }
+        None => {
+            ctx.fleet[server as usize].assigned_job = None;
+            ctx.pools.route_freed(&mut ctx.fleet, server);
+            lifecycle::retry_stalled(ctx, pol);
+        }
+    }
+}

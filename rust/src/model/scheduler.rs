@@ -7,27 +7,17 @@
 //! those arrive). The job can start as soon as `job_size` servers are on
 //! hand — standbys trickle in later.
 //!
-//! Pluggable [`SelectionPolicy`] decides *which* idle servers are taken
+//! *Which* idle servers are taken is delegated to the pluggable
+//! [`SelectionPolicy`](crate::model::selection::SelectionPolicy)
 //! (the paper: "implements different methods of choosing servers").
 
 use crate::config::Params;
 use crate::model::events::ServerId;
 use crate::model::job::Job;
 use crate::model::pool::Pools;
+use crate::model::selection::SelectionPolicy;
 use crate::model::server::{Server, ServerState};
 use crate::sim::rng::Rng;
-
-/// Host-selection policy over the working pool's idle list.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
-pub enum SelectionPolicy {
-    /// Take idle servers in LIFO order (cheapest; default).
-    #[default]
-    FirstFit,
-    /// Sample idle servers uniformly (spreads load over the fleet —
-    /// relevant with retirement/regeneration, where placement history
-    /// correlates with badness).
-    Random,
-}
 
 /// Result of one allocation attempt.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -46,7 +36,7 @@ pub struct AllocOutcome {
 /// standbys to active at start-of-run. Preempted spares join on arrival.
 pub fn allocate(
     p: &Params,
-    policy: SelectionPolicy,
+    policy: &mut dyn SelectionPolicy,
     job: &mut Job,
     pools: &mut Pools,
     fleet: &mut [Server],
@@ -54,13 +44,9 @@ pub fn allocate(
 ) -> AllocOutcome {
     let target = (p.job_size + p.warm_standbys) as usize;
 
-    // 1. Working-pool idle servers.
+    // 1. Working-pool idle servers, chosen by the selection policy.
     while job.allotted() < target {
-        let taken = match policy {
-            SelectionPolicy::FirstFit => pools.take_idle(fleet),
-            SelectionPolicy::Random => take_idle_random(pools, fleet, rng),
-        };
-        match taken {
+        match policy.take_idle(job, pools, fleet, rng) {
             Some(id) => {
                 let s = &mut fleet[id as usize];
                 s.state = ServerState::JobStandby;
@@ -87,21 +73,6 @@ pub fn allocate(
     AllocOutcome { preempted, can_start }
 }
 
-fn take_idle_random(
-    pools: &mut Pools,
-    fleet: &mut [Server],
-    rng: &mut Rng,
-) -> Option<ServerId> {
-    // Uniform choice = swap a random element to the back, then pop.
-    let n = pools.idle_count();
-    if n == 0 {
-        return None;
-    }
-    let k = rng.next_below(n as u64) as usize;
-    pools.swap_idle_to_back(k);
-    pools.take_idle(fleet)
-}
-
 /// Promote standbys until `job_size` servers are active (start-of-run).
 /// Returns false if there were not enough.
 pub fn activate(p: &Params, job: &mut Job, fleet: &mut [Server]) -> bool {
@@ -117,6 +88,7 @@ pub fn activate(p: &Params, job: &mut Job, fleet: &mut [Server]) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::selection::{FirstFit, Random};
     use crate::model::server::build_fleet;
 
     fn setup(p: &Params) -> (Job, Pools, Vec<Server>, Rng) {
@@ -130,7 +102,8 @@ mod tests {
     fn initial_allocation_fills_from_working_pool() {
         let p = Params::small_test(); // job 64 + 4 standby, pool 72
         let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
-        let out = allocate(&p, SelectionPolicy::FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        let out =
+            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
         assert!(out.can_start);
         assert!(out.preempted.is_empty());
         assert_eq!(job.allotted(), 68);
@@ -147,7 +120,8 @@ mod tests {
         p.working_pool = 60; // less than job_size=64
         p.spare_pool = 16;
         let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
-        let out = allocate(&p, SelectionPolicy::FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        let out =
+            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
         // 60 idle taken, 8 preemptions requested (target 68), can't start
         // yet: only 60 on hand < 64.
         assert!(!out.can_start);
@@ -162,7 +136,8 @@ mod tests {
         p.working_pool = 50;
         p.spare_pool = 4;
         let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
-        let out = allocate(&p, SelectionPolicy::FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        let out =
+            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
         assert!(!out.can_start);
         assert_eq!(out.preempted.len(), 4); // all spares taken
         assert_eq!(pools.spare_count(), 0);
@@ -173,10 +148,12 @@ mod tests {
         let mut p = Params::small_test();
         p.working_pool = 60;
         let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
-        let first = allocate(&p, SelectionPolicy::FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        let first =
+            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
         assert_eq!(first.preempted.len(), 8);
         // Re-running allocation while 8 are in transit must not preempt more.
-        let second = allocate(&p, SelectionPolicy::FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        let second =
+            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
         assert!(second.preempted.is_empty());
     }
 
@@ -184,7 +161,7 @@ mod tests {
     fn activate_promotes_to_job_size() {
         let p = Params::small_test();
         let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
-        allocate(&p, SelectionPolicy::FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
         assert!(activate(&p, &mut job, &mut fleet));
         assert_eq!(job.active.len(), 64);
         assert_eq!(job.standbys.len(), 4);
@@ -197,7 +174,7 @@ mod tests {
     fn random_policy_allocates_same_count() {
         let p = Params::small_test();
         let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
-        let out = allocate(&p, SelectionPolicy::Random, &mut job, &mut pools, &mut fleet, &mut rng);
+        let out = allocate(&p, &mut Random, &mut job, &mut pools, &mut fleet, &mut rng);
         assert!(out.can_start);
         assert_eq!(job.allotted(), 68);
     }

@@ -1,0 +1,198 @@
+//! Host-selection policies ("implements different methods of choosing
+//! servers", paper module 3).
+//!
+//! A [`SelectionPolicy`] decides *which* idle working-pool server the
+//! scheduler takes next when topping a job's allotment up. Policies are
+//! selected by name ([`crate::model::policy`]) so scenarios and sweeps
+//! can compare them without code changes:
+//!
+//! | name | policy |
+//! |---|---|
+//! | `first_fit` | [`FirstFit`] — LIFO free-list (cache-warm, default) |
+//! | `random`    | [`Random`] — uniform over the idle list |
+//! | `locality`  | [`Locality`] — nearest id to the job's gang (rack proxy) |
+
+use crate::model::events::ServerId;
+use crate::model::job::Job;
+use crate::model::pool::Pools;
+use crate::model::server::Server;
+use crate::sim::rng::Rng;
+
+/// Pick-one-idle-server policy over the working pool's free-list.
+pub trait SelectionPolicy {
+    /// Stable policy name (the YAML/CLI selector).
+    fn name(&self) -> &'static str;
+
+    /// Pick and remove one idle working-pool server for `job`.
+    /// Returns `None` when the idle list is empty.
+    fn take_idle(
+        &mut self,
+        job: &Job,
+        pools: &mut Pools,
+        fleet: &mut [Server],
+        rng: &mut Rng,
+    ) -> Option<ServerId>;
+}
+
+/// Take idle servers in LIFO order (cheapest; the default). The most
+/// recently freed server is the most likely to still be cache/NCCL-warm.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FirstFit;
+
+impl SelectionPolicy for FirstFit {
+    fn name(&self) -> &'static str {
+        "first_fit"
+    }
+
+    fn take_idle(
+        &mut self,
+        _job: &Job,
+        pools: &mut Pools,
+        fleet: &mut [Server],
+        _rng: &mut Rng,
+    ) -> Option<ServerId> {
+        pools.take_idle(fleet)
+    }
+}
+
+/// Sample idle servers uniformly (spreads load over the fleet — relevant
+/// with retirement/regeneration, where placement history correlates with
+/// badness).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Random;
+
+impl SelectionPolicy for Random {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn take_idle(
+        &mut self,
+        _job: &Job,
+        pools: &mut Pools,
+        fleet: &mut [Server],
+        rng: &mut Rng,
+    ) -> Option<ServerId> {
+        // Uniform choice = swap a random element to the back, then pop.
+        let n = pools.idle_count();
+        if n == 0 {
+            return None;
+        }
+        let k = rng.next_below(n as u64) as usize;
+        pools.swap_idle_to_back(k);
+        pools.take_idle(fleet)
+    }
+}
+
+/// Prefer the idle server whose id is numerically closest to the job's
+/// existing gang. Server ids are assigned rack-contiguously at fleet
+/// construction, so id distance is a locality proxy: a tight id range
+/// approximates fewer network hops for the gang's collectives.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Locality;
+
+impl SelectionPolicy for Locality {
+    fn name(&self) -> &'static str {
+        "locality"
+    }
+
+    fn take_idle(
+        &mut self,
+        job: &Job,
+        pools: &mut Pools,
+        fleet: &mut [Server],
+        _rng: &mut Rng,
+    ) -> Option<ServerId> {
+        // Anchor on the job's first allotted server; with no allotment yet
+        // fall back to LIFO (the first pick seeds the neighborhood).
+        let anchor = match job.active.first().or_else(|| job.standbys.first()) {
+            Some(&id) => id,
+            None => return pools.take_idle(fleet),
+        };
+        let idle = pools.idle_ids();
+        if idle.is_empty() {
+            return None;
+        }
+        let mut best = 0usize;
+        let mut best_d = u32::MAX;
+        for (k, &id) in idle.iter().enumerate() {
+            let d = id.abs_diff(anchor);
+            if d < best_d {
+                best = k;
+                best_d = d;
+            }
+        }
+        pools.swap_idle_to_back(best);
+        pools.take_idle(fleet)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Params;
+    use crate::model::server::build_fleet;
+
+    fn setup() -> (Job, Pools, Vec<Server>, Rng) {
+        let p = Params::small_test();
+        let mut rng = Rng::new(42);
+        let fleet = build_fleet(&p, &mut rng);
+        let pools = Pools::from_fleet(&fleet);
+        (Job::new(p.job_len), pools, fleet, rng)
+    }
+
+    #[test]
+    fn first_fit_takes_lifo() {
+        let (job, mut pools, mut fleet, mut rng) = setup();
+        let top = *pools.idle_ids().last().unwrap();
+        let got = FirstFit.take_idle(&job, &mut pools, &mut fleet, &mut rng);
+        assert_eq!(got, Some(top));
+    }
+
+    #[test]
+    fn random_takes_every_server_eventually() {
+        let (job, mut pools, mut fleet, mut rng) = setup();
+        let n = pools.idle_count();
+        let mut seen = Vec::new();
+        let mut pol = Random;
+        while let Some(id) = pol.take_idle(&job, &mut pools, &mut fleet, &mut rng) {
+            seen.push(id);
+        }
+        assert_eq!(seen.len(), n);
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), n, "a server was taken twice");
+    }
+
+    #[test]
+    fn locality_prefers_nearest_id() {
+        let (mut job, mut pools, mut fleet, mut rng) = setup();
+        // Seed the gang with server 30: the nearest idle id must be next.
+        let mut pol = Locality;
+        job.active.push(30);
+        // Remove 30 from the idle list so distances are well-defined.
+        let k = pools.idle_ids().iter().position(|&id| id == 30).unwrap();
+        pools.swap_idle_to_back(k);
+        assert_eq!(pools.take_idle(&mut fleet), Some(30));
+
+        let got = pol.take_idle(&job, &mut pools, &mut fleet, &mut rng).unwrap();
+        assert!(got == 29 || got == 31, "nearest to 30, got {got}");
+    }
+
+    #[test]
+    fn locality_without_anchor_falls_back_to_lifo() {
+        let (job, mut pools, mut fleet, mut rng) = setup();
+        let top = *pools.idle_ids().last().unwrap();
+        let got = Locality.take_idle(&job, &mut pools, &mut fleet, &mut rng);
+        assert_eq!(got, Some(top));
+    }
+
+    #[test]
+    fn exhausted_pool_returns_none() {
+        let (job, mut pools, mut fleet, mut rng) = setup();
+        while pools.take_idle(&mut fleet).is_some() {}
+        assert!(FirstFit.take_idle(&job, &mut pools, &mut fleet, &mut rng).is_none());
+        assert!(Random.take_idle(&job, &mut pools, &mut fleet, &mut rng).is_none());
+        assert!(Locality.take_idle(&job, &mut pools, &mut fleet, &mut rng).is_none());
+    }
+}

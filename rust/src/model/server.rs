@@ -128,21 +128,36 @@ impl Server {
 /// `spare_pool` homed Spare, with `systematic_fraction` of the whole fleet
 /// marked bad, chosen uniformly at random (hidden identity).
 pub fn build_fleet(p: &Params, rng: &mut Rng) -> Vec<Server> {
+    let mut fleet = Vec::new();
+    let mut scratch = Vec::new();
+    build_fleet_into(p, rng, &mut fleet, &mut scratch);
+    fleet
+}
+
+/// [`build_fleet`] into caller-owned buffers: `fleet` is cleared and
+/// refilled, `scratch` is the id buffer for the bad-set shuffle. The
+/// batched replication runner reuses both across runs; the RNG draw
+/// order is identical to [`build_fleet`].
+pub fn build_fleet_into(
+    p: &Params,
+    rng: &mut Rng,
+    fleet: &mut Vec<Server>,
+    scratch: &mut Vec<u32>,
+) {
     let total = p.total_servers() as usize;
     let n_bad = ((total as f64) * p.systematic_fraction).round() as usize;
     // Choose the bad set by shuffling ids.
-    let mut ids: Vec<u32> = (0..total as u32).collect();
-    rng.shuffle(&mut ids);
-    let mut is_bad = vec![false; total];
-    for &id in ids.iter().take(n_bad) {
-        is_bad[id as usize] = true;
+    scratch.clear();
+    scratch.extend(0..total as u32);
+    rng.shuffle(scratch);
+    fleet.clear();
+    fleet.extend((0..total as u32).map(|id| {
+        let home = if id < p.working_pool { Home::Working } else { Home::Spare };
+        Server::new(id, false, home)
+    }));
+    for &id in scratch.iter().take(n_bad) {
+        fleet[id as usize].is_bad = true;
     }
-    (0..total as u32)
-        .map(|id| {
-            let home = if id < p.working_pool { Home::Working } else { Home::Spare };
-            Server::new(id, is_bad[id as usize], home)
-        })
-        .collect()
 }
 
 #[cfg(test)]

@@ -5,10 +5,12 @@
 //! Pattern follows /opt/xla-example/load_hlo: HLO **text** →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `PjRtClient::compile` once → `execute` per batch.
-
-use crate::analytical::{param_vector, AnalyticOutputs};
-use crate::config::Params;
-use anyhow::{bail, Context, Result};
+//!
+//! The `xla` bindings are heavyweight and not part of the offline vendor
+//! set, so the whole PJRT path is gated behind the `pjrt` cargo feature.
+//! Without it, [`AnalyticModel::load`] reports itself unavailable and
+//! every caller (CLI `analytic`/`prescreen`, the cross-layer tests, the
+//! examples) degrades to the pure-Rust mirror in [`crate::analytical`].
 
 /// Static batch size of the artifact (must match `model.BATCH`).
 pub const BATCH: usize = 64;
@@ -17,95 +19,163 @@ pub const N_PARAMS: usize = 16;
 /// Output columns (must match `model.N_OUTPUTS`).
 pub const N_OUTPUTS: usize = 8;
 
-/// A loaded, compiled analytical estimator.
-pub struct AnalyticModel {
-    exe: xla::PjRtLoadedExecutable,
-    platform: String,
-}
-
 impl AnalyticModel {
-    /// Load and compile `artifacts/analytic.hlo.txt` on the CPU PJRT
-    /// client. Compilation happens once; `run_batch` is then pure execute.
-    pub fn load(path: &str) -> Result<AnalyticModel> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let platform = client.platform_name();
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text at {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compiling analytic module")?;
-        Ok(AnalyticModel { exe, platform })
-    }
-
     /// Default artifact location relative to the repo root.
     pub fn default_path() -> &'static str {
         "artifacts/analytic.hlo.txt"
     }
+}
 
-    pub fn platform(&self) -> &str {
-        &self.platform
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::AnalyticModel;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::AnalyticModel;
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::{BATCH, N_OUTPUTS, N_PARAMS};
+    use crate::analytical::{param_vector, AnalyticOutputs};
+    use crate::bail;
+    use crate::config::Params;
+    use crate::util::err::{Context, Result};
+
+    /// A loaded, compiled analytical estimator.
+    pub struct AnalyticModel {
+        exe: xla::PjRtLoadedExecutable,
+        platform: String,
     }
 
-    /// Execute one batch: `params_rows` is up to [`BATCH`] rows of
-    /// [`N_PARAMS`] f32 columns; short batches are padded by repeating the
-    /// last row. Returns one [`AnalyticOutputs`] per input row.
-    pub fn run_batch(&self, params_rows: &[[f32; N_PARAMS]]) -> Result<Vec<AnalyticOutputs>> {
-        if params_rows.is_empty() {
-            return Ok(Vec::new());
+    impl AnalyticModel {
+        /// Load and compile `artifacts/analytic.hlo.txt` on the CPU PJRT
+        /// client. Compilation happens once; `run_batch` is then pure
+        /// execute.
+        pub fn load(path: &str) -> Result<AnalyticModel> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let platform = client.platform_name();
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text at {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).context("compiling analytic module")?;
+            Ok(AnalyticModel { exe, platform })
         }
-        if params_rows.len() > BATCH {
-            bail!("batch too large: {} > {}", params_rows.len(), BATCH);
-        }
-        let mut flat = Vec::with_capacity(BATCH * N_PARAMS);
-        for row in params_rows {
-            flat.extend_from_slice(row);
-        }
-        let last = *params_rows.last().unwrap();
-        for _ in params_rows.len()..BATCH {
-            flat.extend_from_slice(&last);
-        }
-        let input = xla::Literal::vec1(&flat)
-            .reshape(&[BATCH as i64, N_PARAMS as i64])
-            .context("reshaping input literal")?;
-        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // Lowered with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        let values = out.to_vec::<f32>().context("reading result values")?;
-        if values.len() != BATCH * N_OUTPUTS {
-            bail!("unexpected output size {} != {}", values.len(), BATCH * N_OUTPUTS);
-        }
-        Ok(params_rows
-            .iter()
-            .enumerate()
-            .map(|(i, _)| {
-                let row: Vec<f64> = values[i * N_OUTPUTS..(i + 1) * N_OUTPUTS]
-                    .iter()
-                    .map(|&v| v as f64)
-                    .collect();
-                AnalyticOutputs::from_array(&row)
-            })
-            .collect())
-    }
 
-    /// Analyze a slice of [`Params`] configurations, splitting into
-    /// batches as needed.
-    pub fn analyze_many(&self, configs: &[Params]) -> Result<Vec<AnalyticOutputs>> {
-        let mut out = Vec::with_capacity(configs.len());
-        for chunk in configs.chunks(BATCH) {
-            let rows: Vec<[f32; N_PARAMS]> = chunk
+        pub fn platform(&self) -> &str {
+            &self.platform
+        }
+
+        /// Execute one batch: `params_rows` is up to [`BATCH`] rows of
+        /// [`N_PARAMS`] f32 columns; short batches are padded by repeating
+        /// the last row. Returns one [`AnalyticOutputs`] per input row.
+        pub fn run_batch(
+            &self,
+            params_rows: &[[f32; N_PARAMS]],
+        ) -> Result<Vec<AnalyticOutputs>> {
+            if params_rows.is_empty() {
+                return Ok(Vec::new());
+            }
+            if params_rows.len() > BATCH {
+                bail!("batch too large: {} > {}", params_rows.len(), BATCH);
+            }
+            let mut flat = Vec::with_capacity(BATCH * N_PARAMS);
+            for row in params_rows {
+                flat.extend_from_slice(row);
+            }
+            let last = *params_rows.last().unwrap();
+            for _ in params_rows.len()..BATCH {
+                flat.extend_from_slice(&last);
+            }
+            let input = xla::Literal::vec1(&flat)
+                .reshape(&[BATCH as i64, N_PARAMS as i64])
+                .context("reshaping input literal")?;
+            let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            // Lowered with return_tuple=True: unwrap the 1-tuple.
+            let out = result.to_tuple1().context("unwrapping result tuple")?;
+            let values = out.to_vec::<f32>().context("reading result values")?;
+            if values.len() != BATCH * N_OUTPUTS {
+                bail!(
+                    "unexpected output size {} != {}",
+                    values.len(),
+                    BATCH * N_OUTPUTS
+                );
+            }
+            Ok(params_rows
                 .iter()
-                .map(|p| {
-                    let v = param_vector(p);
-                    let mut row = [0f32; N_PARAMS];
-                    for (d, s) in row.iter_mut().zip(v.iter()) {
-                        *d = *s as f32;
-                    }
-                    row
+                .enumerate()
+                .map(|(i, _)| {
+                    let row: Vec<f64> = values[i * N_OUTPUTS..(i + 1) * N_OUTPUTS]
+                        .iter()
+                        .map(|&v| v as f64)
+                        .collect();
+                    AnalyticOutputs::from_array(&row)
                 })
-                .collect();
-            out.extend(self.run_batch(&rows)?);
+                .collect())
         }
-        Ok(out)
+
+        /// Analyze a slice of [`Params`] configurations, splitting into
+        /// batches as needed.
+        pub fn analyze_many(&self, configs: &[Params]) -> Result<Vec<AnalyticOutputs>> {
+            let mut out = Vec::with_capacity(configs.len());
+            for chunk in configs.chunks(BATCH) {
+                let rows: Vec<[f32; N_PARAMS]> = chunk
+                    .iter()
+                    .map(|p| {
+                        let v = param_vector(p);
+                        let mut row = [0f32; N_PARAMS];
+                        for (d, s) in row.iter_mut().zip(v.iter()) {
+                            *d = *s as f32;
+                        }
+                        row
+                    })
+                    .collect();
+                out.extend(self.run_batch(&rows)?);
+            }
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use super::N_PARAMS;
+    use crate::analytical::AnalyticOutputs;
+    use crate::bail;
+    use crate::config::Params;
+    use crate::util::err::Result;
+
+    /// Stub used when the crate is built without the `pjrt` feature: it
+    /// can never be constructed, so the methods besides [`load`] exist
+    /// only to keep call sites compiling.
+    ///
+    /// [`load`]: AnalyticModel::load
+    pub struct AnalyticModel {
+        never: std::convert::Infallible,
+    }
+
+    impl AnalyticModel {
+        /// Always fails: the PJRT runtime was not compiled in.
+        pub fn load(path: &str) -> Result<AnalyticModel> {
+            bail!(
+                "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+                 (artifact {path} not loaded); use the pure-Rust analytical mirror"
+            );
+        }
+
+        pub fn platform(&self) -> &str {
+            match self.never {}
+        }
+
+        pub fn run_batch(
+            &self,
+            _params_rows: &[[f32; N_PARAMS]],
+        ) -> Result<Vec<AnalyticOutputs>> {
+            match self.never {}
+        }
+
+        pub fn analyze_many(&self, _configs: &[Params]) -> Result<Vec<AnalyticOutputs>> {
+            match self.never {}
+        }
     }
 }

@@ -1,0 +1,518 @@
+//! The Scenario layer: one declarative spec for every experiment shape
+//! the simulator supports — single runs, parameter sweeps, what-if
+//! scalings, scripted failure injections, and analytic-vs-DES
+//! comparisons — with policies selected by name.
+//!
+//! A scenario file is the YAML subset [`crate::config::yaml`] parses:
+//!
+//! ```yaml
+//! scenario: sweep            # single | sweep | whatif | inject | compare
+//! title: recovery-time sensitivity
+//! seed: 42
+//! replications: 30
+//! params:
+//!   job_size: 64
+//!   working_pool: 72
+//! policies:
+//!   selection: locality      # first_fit | random | locality
+//!   repair: job_first        # fifo | lifo | job_first
+//! sweep:
+//!   kind: one_way
+//!   x: { name: recovery_time, values: [10, 20, 30] }
+//! whatif: { param: recovery_time, factor: 2 }      # whatif only
+//! inject:                                          # inject only
+//!   failures: [ { at: 100, job: 0, victim: 3, kind: systematic } ]
+//! ```
+//!
+//! `Scenario::run` executes the spec (sweeps through the batched
+//! [`crate::model::ReplicationRunner`] worker pool) and returns a typed
+//! [`ScenarioOutcome`]; `render` turns the outcome into the CLI's text
+//! report.
+
+use crate::analytical::{self, AnalyticOutputs};
+use crate::config::{validate, yaml, Params};
+use crate::model::cluster::{ReplicationRunner, Simulation};
+use crate::model::events::FailureKind;
+use crate::model::{PolicySpec, RunOutputs};
+use crate::report;
+use crate::sim::rng::Rng;
+use crate::stats::Summary;
+use crate::sweep::{policies_from_doc, run_sweep, sweep_from_doc, Sweep, SweepResult};
+use crate::trace::inject::{Injection, InjectionPlan};
+use crate::trace::Trace;
+
+/// What kind of experiment a scenario describes.
+#[derive(Clone, Debug)]
+pub enum ScenarioKind {
+    /// One simulation run (optionally traced).
+    Single { trace: bool },
+    /// A one- or two-way parameter sweep with replications.
+    Sweep(Sweep),
+    /// Scale one parameter by a factor and compare against the baseline.
+    WhatIf { param: String, factor: f64, replications: usize },
+    /// A single run with scripted failure injections (incident replay).
+    Inject { failures: Vec<Injection>, trace: bool },
+    /// The analytical CTMC estimate vs the DES mean over replications.
+    Compare { replications: usize },
+}
+
+/// A declarative experiment: parameters + named policies + kind.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub title: String,
+    pub params: Params,
+    pub policies: PolicySpec,
+    pub seed: u64,
+    pub threads: usize,
+    pub kind: ScenarioKind,
+}
+
+/// The typed result of running a scenario.
+pub enum ScenarioOutcome {
+    Single { outputs: RunOutputs, trace: Trace },
+    Sweep(SweepResult),
+    WhatIf { result: SweepResult, param: String, factor: f64 },
+    Inject { outputs: RunOutputs, trace: Trace },
+    Compare { analytic: AnalyticOutputs, des_makespan: Summary, replications: usize },
+}
+
+impl Scenario {
+    /// A single-run scenario at the given parameters (builder entry for
+    /// programmatic use; YAML files go through [`Scenario::from_yaml`]).
+    pub fn single(params: Params) -> Scenario {
+        Scenario {
+            title: "single run".into(),
+            params,
+            policies: PolicySpec::default(),
+            seed: 42,
+            threads: 0,
+            kind: ScenarioKind::Single { trace: false },
+        }
+    }
+
+    pub fn with_policies(mut self, policies: PolicySpec) -> Self {
+        self.policies = policies;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_kind(mut self, kind: ScenarioKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Parse a scenario file (see the module docs for the format).
+    pub fn from_yaml(text: &str) -> Result<Scenario, String> {
+        let doc = yaml::parse(text).map_err(|e| e.to_string())?;
+        Scenario::from_doc(&doc)
+    }
+
+    /// Build a scenario from a parsed config document.
+    pub fn from_doc(doc: &yaml::Value) -> Result<Scenario, String> {
+        let params = validate::params_from_config(doc).map_err(|e| e.to_string())?;
+        let policies = policies_from_doc(doc)?;
+        // The policy spec must build against these params (e.g. `gang`
+        // needs exponential clocks) — fail at parse time, not mid-run.
+        policies.build(&params)?;
+        let seed = doc.get("seed").and_then(|v| v.as_f64()).map(|v| v as u64).unwrap_or(42);
+        let reps = doc
+            .get("replications")
+            .and_then(|v| v.as_f64())
+            .map(|v| v as usize)
+            .unwrap_or(30);
+        let threads = doc
+            .get("threads")
+            .and_then(|v| v.as_f64())
+            .map(|v| v as usize)
+            .unwrap_or(0);
+        let trace = doc
+            .get("trace")
+            .and_then(|v| v.as_str())
+            .map(|s| s == "true" || s == "1")
+            .unwrap_or(false);
+
+        // Back-compat inference for plain config files without a
+        // `scenario:` key: a sweep section means sweep, else single run.
+        let kind_name = match doc.get("scenario").and_then(|v| v.as_str()) {
+            Some(k) => k,
+            None if doc.get("sweep").is_some() => "sweep",
+            None => "single",
+        };
+        let kind = match kind_name {
+            "single" => ScenarioKind::Single { trace },
+            "sweep" => ScenarioKind::Sweep(sweep_from_doc(doc, reps, seed)?),
+            "whatif" => {
+                let w = doc.get("whatif").ok_or("whatif scenario needs a `whatif:` map")?;
+                let param = w
+                    .get("param")
+                    .and_then(|v| v.as_str())
+                    .ok_or("whatif.param missing")?
+                    .to_string();
+                if params.get_by_name(&param).is_none() {
+                    return Err(format!("whatif.param `{param}` is not a parameter"));
+                }
+                let factor = w
+                    .get("factor")
+                    .and_then(|v| v.as_f64())
+                    .ok_or("whatif.factor missing")?;
+                ScenarioKind::WhatIf { param, factor, replications: reps }
+            }
+            "inject" => {
+                let section =
+                    doc.get("inject").ok_or("inject scenario needs an `inject:` map")?;
+                let list = section
+                    .get("failures")
+                    .and_then(|v| v.as_list())
+                    .ok_or("inject.failures must be a list")?;
+                let mut failures = Vec::with_capacity(list.len());
+                for item in list {
+                    failures.push(parse_injection(item)?);
+                }
+                ScenarioKind::Inject { failures, trace }
+            }
+            "compare" => ScenarioKind::Compare { replications: reps },
+            other => {
+                return Err(format!(
+                    "unknown scenario kind `{other}` (expected single, sweep, whatif, \
+                     inject, or compare)"
+                ))
+            }
+        };
+
+        let title = doc
+            .get("title")
+            .and_then(|v| v.as_str())
+            .unwrap_or(kind_name)
+            .to_string();
+        Ok(Scenario { title, params, policies, seed, threads, kind })
+    }
+
+    /// Execute the scenario.
+    pub fn run(&self) -> Result<ScenarioOutcome, String> {
+        match &self.kind {
+            ScenarioKind::Single { trace } => {
+                let mut sim =
+                    Simulation::from_spec(&self.params, &self.policies, Rng::new(self.seed))?;
+                if *trace {
+                    sim = sim.with_trace();
+                }
+                let (outputs, trace) = sim.run_traced();
+                Ok(ScenarioOutcome::Single { outputs, trace })
+            }
+            ScenarioKind::Sweep(sweep) => {
+                let mut sweep = sweep.clone().with_policies(self.policies.clone());
+                // `--seed` overrides arrive after parse time; keep the
+                // sweep's master seed in lockstep with the scenario's.
+                sweep.master_seed = self.seed;
+                Ok(ScenarioOutcome::Sweep(run_sweep(&self.params, &sweep, self.threads)))
+            }
+            ScenarioKind::WhatIf { param, factor, replications } => {
+                let current = self
+                    .params
+                    .get_by_name(param)
+                    .ok_or_else(|| format!("unknown parameter `{param}`"))?;
+                let sweep = Sweep::one_way(
+                    &format!("what-if: {param} x{factor}"),
+                    param,
+                    &[current, current * factor],
+                    *replications,
+                    self.seed,
+                )
+                .with_policies(self.policies.clone());
+                let result = run_sweep(&self.params, &sweep, self.threads);
+                Ok(ScenarioOutcome::WhatIf {
+                    result,
+                    param: param.clone(),
+                    factor: *factor,
+                })
+            }
+            ScenarioKind::Inject { failures, trace } => {
+                let mut sim =
+                    Simulation::from_spec(&self.params, &self.policies, Rng::new(self.seed))?
+                        .with_injections(InjectionPlan::new(failures.clone()));
+                if *trace {
+                    sim = sim.with_trace();
+                }
+                let (outputs, trace) = sim.run_traced();
+                Ok(ScenarioOutcome::Inject { outputs, trace })
+            }
+            ScenarioKind::Compare { replications } => {
+                let analytic = analytical::analyze(&self.params);
+                let mut runner = ReplicationRunner::new();
+                let makespans: Vec<f64> = (0..*replications)
+                    .map(|r| {
+                        runner
+                            .run(
+                                &self.params,
+                                &self.policies,
+                                Rng::derived(self.seed, &[r as u64]),
+                            )
+                            .makespan
+                    })
+                    .collect();
+                let des_makespan = Summary::from_values(&makespans)
+                    .ok_or("compare needs at least one replication")?;
+                Ok(ScenarioOutcome::Compare {
+                    analytic,
+                    des_makespan,
+                    replications: *replications,
+                })
+            }
+        }
+    }
+
+    /// Render an outcome as the CLI's text report.
+    pub fn render(&self, outcome: &ScenarioOutcome) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "== scenario: {} [{}] ==\npolicies: selection={} repair={} checkpoint={} failure={}\n",
+            self.title,
+            kind_name(&self.kind),
+            self.policies.selection,
+            self.policies.repair,
+            self.policies.checkpoint,
+            self.policies.failure,
+        ));
+        match outcome {
+            ScenarioOutcome::Single { outputs, trace }
+            | ScenarioOutcome::Inject { outputs, trace } => {
+                if !trace.is_empty() {
+                    s.push_str(&trace.render());
+                }
+                s.push_str(&render_outputs(outputs, &self.params));
+            }
+            ScenarioOutcome::Sweep(result) => {
+                s.push_str(&report::text_table(result, "makespan_hours"));
+            }
+            ScenarioOutcome::WhatIf { result, param, factor } => {
+                s.push_str(&report::text_table(result, "makespan_hours"));
+                if let (Some(a), Some(b)) = (
+                    result.points[0].summary("makespan_hours"),
+                    result.points[1].summary("makespan_hours"),
+                ) {
+                    s.push_str(&format!(
+                        "\nscaling {param} by {factor} changes mean training time by \
+                         {:+.2}% ({:.1}h -> {:.1}h)\n",
+                        (b.mean / a.mean - 1.0) * 100.0,
+                        a.mean,
+                        b.mean
+                    ));
+                }
+            }
+            ScenarioOutcome::Compare { analytic, des_makespan, replications } => {
+                let rel = (analytic.makespan_est - des_makespan.mean).abs()
+                    / des_makespan.mean.max(1.0);
+                s.push_str(&format!(
+                    "CTMC makespan_est  {:>14.1} min\n\
+                     DES  mean makespan {:>14.1} min (±{:.1} 95% CI, {} reps)\n\
+                     relative delta     {:>14.2}%\n",
+                    analytic.makespan_est,
+                    des_makespan.mean,
+                    des_makespan.ci95_halfwidth(),
+                    replications,
+                    rel * 100.0
+                ));
+            }
+        }
+        s
+    }
+}
+
+fn kind_name(kind: &ScenarioKind) -> &'static str {
+    match kind {
+        ScenarioKind::Single { .. } => "single",
+        ScenarioKind::Sweep(_) => "sweep",
+        ScenarioKind::WhatIf { .. } => "whatif",
+        ScenarioKind::Inject { .. } => "inject",
+        ScenarioKind::Compare { .. } => "compare",
+    }
+}
+
+/// Parse one `inject.failures` entry:
+/// `{ at: 100, job: 0, victim: 3, kind: systematic }`.
+fn parse_injection(item: &yaml::Value) -> Result<Injection, String> {
+    let at = item
+        .get("at")
+        .and_then(|v| v.as_f64())
+        .ok_or("injection needs `at:` (minutes)")?;
+    let job = item.get("job").and_then(|v| v.as_f64()).map(|v| v as u32).unwrap_or(0);
+    let victim = item
+        .get("victim")
+        .and_then(|v| v.as_f64())
+        .map(|v| v as usize)
+        .unwrap_or(0);
+    let kind = match item.get("kind").and_then(|v| v.as_str()).unwrap_or("random") {
+        "random" => FailureKind::Random,
+        "systematic" => FailureKind::Systematic,
+        other => return Err(format!("unknown failure kind `{other}`")),
+    };
+    Ok(Injection::for_job(job, at, victim, kind))
+}
+
+fn render_outputs(out: &RunOutputs, p: &Params) -> String {
+    format!(
+        "makespan           {:>14.2} min ({:.2} days)\n\
+         completed          {:>14}\n\
+         failures           {:>14} (random {}, systematic {})\n\
+         standby swaps      {:>14}\n\
+         host selections    {:>14}\n\
+         preemptions        {:>14}\n\
+         repairs            {:>14} auto, {} manual\n\
+         stall time         {:>14.2} min\n\
+         utilization        {:>14.4}\n",
+        out.makespan,
+        out.makespan / 1440.0,
+        out.completed,
+        out.failures_total,
+        out.failures_random,
+        out.failures_systematic,
+        out.standby_swaps,
+        out.host_selections,
+        out.preemptions,
+        out.repairs_auto,
+        out.repairs_manual,
+        out.stall_time,
+        out.utilization(p.job_len)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SMALL: &str = "params:\n  job_size: 32\n  working_pool: 40\n  spare_pool: 8\n  warm_standbys: 4\n  job_len: 1440\n  random_failure_rate: 0.5/1440\n  systematic_failure_rate: 2.5/1440\n";
+
+    #[test]
+    fn single_scenario_runs() {
+        let text = format!("scenario: single\nseed: 7\n{SMALL}");
+        let sc = Scenario::from_yaml(&text).unwrap();
+        match sc.run().unwrap() {
+            ScenarioOutcome::Single { outputs, .. } => {
+                assert!(outputs.completed);
+                assert!(outputs.makespan >= 1440.0);
+            }
+            _ => panic!("expected Single outcome"),
+        }
+    }
+
+    #[test]
+    fn single_matches_direct_simulation() {
+        let text = format!("scenario: single\nseed: 9\n{SMALL}");
+        let sc = Scenario::from_yaml(&text).unwrap();
+        let via_scenario = match sc.run().unwrap() {
+            ScenarioOutcome::Single { outputs, .. } => outputs,
+            _ => unreachable!(),
+        };
+        let direct = Simulation::new(&sc.params, 9).run();
+        assert_eq!(via_scenario, direct, "scenario layer must not perturb runs");
+    }
+
+    #[test]
+    fn sweep_scenario_runs_with_policies() {
+        let text = format!(
+            "scenario: sweep\nseed: 3\nreplications: 2\n{SMALL}\
+             policies:\n  selection: random\n\
+             sweep:\n  kind: one_way\n  x: {{ name: recovery_time, values: [10, 30] }}\n"
+        );
+        let sc = Scenario::from_yaml(&text).unwrap();
+        assert_eq!(sc.policies.selection, "random");
+        match sc.run().unwrap() {
+            ScenarioOutcome::Sweep(result) => {
+                assert_eq!(result.points.len(), 2);
+                assert_eq!(result.points[0].summary("makespan").unwrap().n, 2);
+            }
+            _ => panic!("expected Sweep outcome"),
+        }
+    }
+
+    #[test]
+    fn sweep_scenario_honors_seed_override() {
+        let text = format!(
+            "scenario: sweep\nseed: 3\nreplications: 2\n{SMALL}\
+             sweep:\n  kind: one_way\n  x: {{ name: recovery_time, values: [10] }}\n"
+        );
+        let mut sc = Scenario::from_yaml(&text).unwrap();
+        let mean = |sc: &Scenario| match sc.run().unwrap() {
+            ScenarioOutcome::Sweep(r) => r.points[0].summary("makespan").unwrap().mean,
+            _ => unreachable!(),
+        };
+        let a = mean(&sc);
+        sc.seed = 999; // post-parse override (the CLI's --seed path)
+        let b = mean(&sc);
+        assert_ne!(a, b, "seed override must reach the sweep's master seed");
+    }
+
+    #[test]
+    fn whatif_scenario_compares_factor() {
+        let text = format!(
+            "scenario: whatif\nseed: 4\nreplications: 3\n{SMALL}\
+             whatif: {{ param: recovery_time, factor: 4 }}\n"
+        );
+        let sc = Scenario::from_yaml(&text).unwrap();
+        match sc.run().unwrap() {
+            ScenarioOutcome::WhatIf { result, param, factor } => {
+                assert_eq!(param, "recovery_time");
+                assert_eq!(factor, 4.0);
+                assert_eq!(result.points.len(), 2);
+            }
+            _ => panic!("expected WhatIf outcome"),
+        }
+    }
+
+    #[test]
+    fn inject_scenario_targets_any_job() {
+        let text = "scenario: inject\nseed: 5\n\
+                    params:\n  num_jobs: 2\n  job_size: 16\n  warm_standbys: 2\n  working_pool: 40\n  spare_pool: 4\n  job_len: 1440\n  random_failure_rate: 0\n  systematic_failure_rate: 0\n  systematic_fraction: 0\n\
+                    inject:\n  failures: [ { at: 100, job: 1, victim: 0, kind: random }, { at: 200, job: 7, victim: 0, kind: random } ]\n";
+        let sc = Scenario::from_yaml(text).unwrap();
+        match sc.run().unwrap() {
+            ScenarioOutcome::Inject { outputs, .. } => {
+                // Job 7 does not exist: that injection drops cleanly; the
+                // job-1 injection lands.
+                assert!(outputs.completed);
+                assert_eq!(outputs.failures_total, 1);
+            }
+            _ => panic!("expected Inject outcome"),
+        }
+    }
+
+    #[test]
+    fn compare_scenario_reports_both_layers() {
+        let text = format!("scenario: compare\nseed: 6\nreplications: 3\n{SMALL}");
+        let sc = Scenario::from_yaml(&text).unwrap();
+        match sc.run().unwrap() {
+            ScenarioOutcome::Compare { analytic, des_makespan, .. } => {
+                assert!(analytic.makespan_est > 0.0);
+                assert_eq!(des_makespan.n, 3);
+                assert!(des_makespan.mean >= 1440.0);
+            }
+            _ => panic!("expected Compare outcome"),
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_at_parse_time() {
+        assert!(Scenario::from_yaml("scenario: frobnicate\n").is_err());
+        // gang + weibull is incompatible: caught before running.
+        let text = "scenario: single\nparams:\n  failure_dist: weibull:1.5\n\
+                    policies:\n  failure: gang\n";
+        assert!(Scenario::from_yaml(text).is_err());
+        // whatif against a non-parameter.
+        let text = "scenario: whatif\nwhatif: { param: bogus, factor: 2 }\n";
+        assert!(Scenario::from_yaml(text).is_err());
+    }
+
+    #[test]
+    fn render_mentions_policies_and_outcome() {
+        let text = format!("scenario: single\nseed: 7\n{SMALL}");
+        let sc = Scenario::from_yaml(&text).unwrap();
+        let outcome = sc.run().unwrap();
+        let rendered = sc.render(&outcome);
+        assert!(rendered.contains("selection=first_fit"));
+        assert!(rendered.contains("makespan"));
+    }
+}

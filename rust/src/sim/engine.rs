@@ -41,6 +41,19 @@ impl<E> Engine<E> {
         }
     }
 
+    /// Clear all state for a new run, retaining (and growing to at least
+    /// `capacity`) the heap allocation — the batched replication runner
+    /// resets engines instead of rebuilding them.
+    pub fn reset(&mut self, capacity: usize) {
+        self.heap.clear();
+        if self.heap.capacity() < capacity {
+            self.heap.reserve(capacity);
+        }
+        self.now = 0.0;
+        self.seq = 0;
+        self.delivered = 0;
+    }
+
     /// Current simulation time (minutes).
     #[inline]
     pub fn now(&self) -> Time {

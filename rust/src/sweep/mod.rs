@@ -9,8 +9,8 @@
 //! reduction technique for estimating point-to-point *differences*.
 
 use crate::config::Params;
-use crate::model::cluster::Simulation;
-use crate::model::RunOutputs;
+use crate::model::cluster::ReplicationRunner;
+use crate::model::{PolicySpec, RunOutputs};
 use crate::sim::rng::Rng;
 use crate::stats::{Collector, Summary};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -54,6 +54,9 @@ pub struct Sweep {
     /// every point (variance reduction for point-to-point differences).
     /// Off by default: independent streams per (point, replication).
     pub crn: bool,
+    /// Named policy selection applied at every point (defaults to the
+    /// paper's policies). Policy axes sweep alongside numeric ones.
+    pub policies: PolicySpec,
 }
 
 impl Sweep {
@@ -75,12 +78,19 @@ impl Sweep {
             replications,
             master_seed,
             crn: false,
+            policies: PolicySpec::default(),
         }
     }
 
     /// Enable common random numbers across points.
     pub fn with_crn(mut self) -> Self {
         self.crn = true;
+        self
+    }
+
+    /// Run every point under the given named policies.
+    pub fn with_policies(mut self, policies: PolicySpec) -> Self {
+        self.policies = policies;
         self
     }
 
@@ -111,8 +121,30 @@ impl Sweep {
             replications,
             master_seed,
             crn: false,
+            policies: PolicySpec::default(),
         }
     }
+}
+
+/// Parse a config document's optional `policies:` section into a spec:
+///
+/// ```yaml
+/// policies:
+///   selection: locality
+///   repair: job_first
+/// ```
+pub fn policies_from_doc(doc: &crate::config::yaml::Value) -> Result<PolicySpec, String> {
+    let mut spec = PolicySpec::default();
+    if let Some(section) = doc.get("policies") {
+        let map = section.as_map().ok_or("`policies:` must be a map")?;
+        for (axis, v) in map {
+            let value = v
+                .as_str()
+                .ok_or_else(|| format!("policies.{axis} must be a name"))?;
+            spec.set(axis, value)?;
+        }
+    }
+    Ok(spec)
 }
 
 /// Build a sweep from a parsed config document's `sweep:` section
@@ -154,6 +186,10 @@ pub fn sweep_from_doc(
             .ok_or_else(|| format!("sweep.{key}.values missing"))?;
         Ok((name.to_string(), values))
     };
+    // NOTE: the doc's `policies:` section is deliberately NOT attached
+    // here — policy resolution (doc section + CLI overrides + build
+    // validation) has one owner per entry point, which then calls
+    // [`Sweep::with_policies`]. See `policies_from_doc`.
     let kind = sweep.get("kind").and_then(|v| v.as_str()).unwrap_or("one_way");
     match kind {
         "one_way" => {
@@ -163,15 +199,7 @@ pub fn sweep_from_doc(
         "two_way" => {
             let (xn, xv) = axis("x")?;
             let (yn, yv) = axis("y")?;
-            Ok(Sweep::two_way(
-                &format!("{xn} x {yn}"),
-                &xn,
-                &xv,
-                &yn,
-                &yv,
-                reps,
-                seed,
-            ))
+            Ok(Sweep::two_way(&format!("{xn} x {yn}"), &xn, &xv, &yn, &yv, reps, seed))
         }
         other => Err(format!("unknown sweep kind `{other}`")),
     }
@@ -222,29 +250,30 @@ pub fn collect_outputs(c: &mut Collector, p: &Params, o: &RunOutputs) {
     c.push("events_delivered", o.events_delivered as f64);
 }
 
-/// Run one replication of one point.
+/// Run one replication of one point on a (reusable) runner.
 fn run_one(
+    runner: &mut ReplicationRunner,
     base: &Params,
-    point: &SweepPoint,
+    sweep: &Sweep,
     point_idx: usize,
     rep: usize,
-    seed: u64,
-    crn: bool,
 ) -> (Params, RunOutputs) {
-    let p = point.apply(base);
+    let p = sweep.points[point_idx].apply(base);
     // CRN: drop the point index from the stream path so every point sees
     // the same draws at replication `rep`.
-    let rng = if crn {
-        Rng::derived(seed, &[u64::MAX, rep as u64])
+    let rng = if sweep.crn {
+        Rng::derived(sweep.master_seed, &[u64::MAX, rep as u64])
     } else {
-        Rng::derived(seed, &[point_idx as u64, rep as u64])
+        Rng::derived(sweep.master_seed, &[point_idx as u64, rep as u64])
     };
-    let out = Simulation::with_rng(&p, rng).run();
+    let out = runner.run(&p, &sweep.policies, rng);
     (p, out)
 }
 
 /// Execute a sweep, parallelizing (point, replication) tasks over
-/// `threads` OS threads (0 = available parallelism).
+/// `threads` OS threads (0 = available parallelism). Each worker owns one
+/// [`ReplicationRunner`], so simulation state is reset — not reallocated —
+/// between that worker's replications.
 pub fn run_sweep(base: &Params, sweep: &Sweep, threads: usize) -> SweepResult {
     let n_points = sweep.points.len();
     let reps = sweep.replications.max(1);
@@ -264,23 +293,19 @@ pub fn run_sweep(base: &Params, sweep: &Sweep, threads: usize) -> SweepResult {
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let task = next.fetch_add(1, Ordering::Relaxed);
-                if task >= total {
-                    break;
+            scope.spawn(|| {
+                let mut runner = ReplicationRunner::new();
+                loop {
+                    let task = next.fetch_add(1, Ordering::Relaxed);
+                    if task >= total {
+                        break;
+                    }
+                    let point_idx = task / reps;
+                    let rep = task % reps;
+                    let (p, out) = run_one(&mut runner, base, sweep, point_idx, rep);
+                    let mut c = collectors[point_idx].lock().unwrap();
+                    collect_outputs(&mut c, &p, &out);
                 }
-                let point_idx = task / reps;
-                let rep = task % reps;
-                let (p, out) = run_one(
-                    base,
-                    &sweep.points[point_idx],
-                    point_idx,
-                    rep,
-                    sweep.master_seed,
-                    sweep.crn,
-                );
-                let mut c = collectors[point_idx].lock().unwrap();
-                collect_outputs(&mut c, &p, &out);
             });
         }
     });
@@ -345,6 +370,44 @@ mod tests {
             assert_eq!(sa.n, 4);
             assert_eq!(sa.mean, sb.mean, "determinism across thread counts");
             assert_eq!(sa.std, sb.std);
+        }
+    }
+
+    #[test]
+    fn policies_section_parses() {
+        let doc = crate::config::yaml::parse(
+            "policies:\n  selection: locality\n  repair: job_first\n",
+        )
+        .unwrap();
+        let spec = policies_from_doc(&doc).unwrap();
+        assert_eq!(spec.selection, "locality");
+        assert_eq!(spec.repair, "job_first");
+        // No section: defaults.
+        let empty = crate::config::yaml::parse("seed: 1\n").unwrap();
+        assert_eq!(policies_from_doc(&empty).unwrap(), PolicySpec::default());
+        // Bad name: rejected.
+        let bad = crate::config::yaml::parse("policies:\n  selection: bogus\n").unwrap();
+        assert!(policies_from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn non_default_policies_sweep_deterministically() {
+        let base = Params::small_test();
+        let spec = PolicySpec {
+            selection: "locality".into(),
+            repair: "job_first".into(),
+            checkpoint: "auto".into(),
+            failure: "per_server".into(),
+        };
+        let sweep = Sweep::one_way("pol", "recovery_time", &[10.0, 30.0], 3, 5)
+            .with_policies(spec);
+        let r1 = run_sweep(&base, &sweep, 1);
+        let r2 = run_sweep(&base, &sweep, 3);
+        for (a, b) in r1.points.iter().zip(&r2.points) {
+            let sa = a.summary("makespan").unwrap();
+            let sb = b.summary("makespan").unwrap();
+            assert_eq!(sa.n, 3);
+            assert_eq!(sa.mean, sb.mean);
         }
     }
 

@@ -1,19 +1,34 @@
 //! Failure injection: force failures at exact times, independent of the
 //! stochastic clocks. Used by integration tests to walk the Figure-1
-//! flowchart branch-by-branch, and by the `whatif` CLI to replay observed
-//! incident timelines.
+//! flowchart branch-by-branch, by `Scenario::inject` what-if specs, and
+//! by the CLI to replay observed incident timelines.
 
 use crate::model::events::FailureKind;
 use crate::sim::Time;
 
-/// A scripted failure: at time `at`, the active server with gang index
-/// `victim_index` (position in the job's active list, mod its length)
-/// fails with the given kind.
+/// A scripted failure: at time `at`, the active server of job `job` with
+/// gang index `victim_index` (position in that job's active list, mod its
+/// length) fails with the given kind. If the target job is not running at
+/// `at` (or does not exist), the injection is dropped cleanly.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Injection {
     pub at: Time,
+    /// Target job id (index into the simulation's job table).
+    pub job: u32,
     pub victim_index: usize,
     pub kind: FailureKind,
+}
+
+impl Injection {
+    /// An injection against job 0 (the single-job default).
+    pub fn new(at: Time, victim_index: usize, kind: FailureKind) -> Injection {
+        Injection { at, job: 0, victim_index, kind }
+    }
+
+    /// An injection against an arbitrary job.
+    pub fn for_job(job: u32, at: Time, victim_index: usize, kind: FailureKind) -> Injection {
+        Injection { at, job, victim_index, kind }
+    }
 }
 
 /// An injection schedule, consumed in time order.
@@ -55,12 +70,20 @@ mod tests {
     #[test]
     fn plan_orders_by_time() {
         let mut plan = InjectionPlan::new(vec![
-            Injection { at: 30.0, victim_index: 0, kind: FailureKind::Random },
-            Injection { at: 10.0, victim_index: 1, kind: FailureKind::Systematic },
+            Injection::new(30.0, 0, FailureKind::Random),
+            Injection::new(10.0, 1, FailureKind::Systematic),
         ]);
         assert_eq!(plan.remaining(), 2);
         assert_eq!(plan.pop().unwrap().at, 10.0);
         assert_eq!(plan.pop().unwrap().at, 30.0);
         assert!(plan.pop().is_none());
+    }
+
+    #[test]
+    fn constructors_set_target_job() {
+        assert_eq!(Injection::new(5.0, 2, FailureKind::Random).job, 0);
+        let i = Injection::for_job(3, 5.0, 2, FailureKind::Systematic);
+        assert_eq!(i.job, 3);
+        assert_eq!(i.victim_index, 2);
     }
 }

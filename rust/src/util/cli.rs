@@ -2,17 +2,26 @@
 //! `--key value` / `--key=value`, positionals, and generated help.
 
 use std::collections::BTreeMap;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option `{0}` (see --help)")]
     Unknown(String),
-    #[error("option `{0}` expects a value")]
     MissingValue(String),
-    #[error("bad value for `{0}`: {1}")]
     BadValue(String, String),
 }
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::Unknown(o) => write!(f, "unknown option `{o}` (see --help)"),
+            CliError::MissingValue(o) => write!(f, "option `{o}` expects a value"),
+            CliError::BadValue(o, v) => write!(f, "bad value for `{o}`: {v}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Parsed arguments: flags, key→value options, and positionals.
 #[derive(Debug, Default, Clone)]

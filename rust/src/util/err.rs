@@ -1,0 +1,140 @@
+//! Minimal error plumbing (the offline vendor set carries neither
+//! `anyhow` nor `thiserror`): a boxed dynamic error alias, a `Context`
+//! extension trait, and `anyhow!`/`bail!`-shaped macros exported at the
+//! crate root.
+//!
+//! ```
+//! use airesim::util::err::{Context, Result};
+//! use airesim::{anyhow, bail};
+//!
+//! fn parse(s: &str) -> Result<u32> {
+//!     if s.is_empty() {
+//!         bail!("empty input");
+//!     }
+//!     s.parse::<u32>().context("parsing count")
+//! }
+//! assert!(parse("").is_err());
+//! assert_eq!(parse("7").unwrap(), 7);
+//! ```
+
+use std::fmt::Display;
+
+/// The crate-wide dynamic error type.
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// The crate-wide result alias (error defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a message (the `anyhow!` macro's back end).
+pub fn msg(m: String) -> Error {
+    m.into()
+}
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| {
+            let e = e.into();
+            msg(format!("{ctx}: {e}"))
+        })
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let e = e.into();
+            msg(format!("{}: {e}", f()))
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| msg(ctx.to_string()))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`](crate::util::err::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::err::msg(::std::fmt::format(::std::format_args!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted [`Error`](crate::util::err::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Boom;
+    impl std::fmt::Display for Boom {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "boom")
+        }
+    }
+    impl std::error::Error for Boom {}
+
+    fn io_fail() -> Result<(), Boom> {
+        Err(Boom)
+    }
+
+    #[test]
+    fn context_wraps_any_error() {
+        let e = io_fail().context("reading config").unwrap_err();
+        let s = e.to_string();
+        assert!(s.contains("reading config"), "{s}");
+        assert!(s.contains("boom"), "{s}");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, Boom> = Ok(5);
+        let v = ok
+            .with_context(|| -> String { panic!("must not be called on Ok") })
+            .unwrap();
+        assert_eq!(v, 5);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+    }
+
+    #[test]
+    fn macros_produce_errors() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 3);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap_err().to_string(), "failed with code 3");
+        assert_eq!(f(false).unwrap(), 1);
+        let e: Error = anyhow!("x = {}", 9);
+        assert_eq!(e.to_string(), "x = 9");
+    }
+}

@@ -1,3 +1,4 @@
 //! Small substrates the offline environment lacks crates for.
 
 pub mod cli;
+pub mod err;

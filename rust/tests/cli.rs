@@ -126,6 +126,52 @@ fn analytic_rust_only() {
 }
 
 #[test]
+fn list_policies_covers_every_axis() {
+    let (out, _, ok) = airesim(&["list-policies"]);
+    assert!(ok);
+    for name in ["selection", "repair", "checkpoint", "failure", "locality", "job_first"] {
+        assert!(out.contains(name), "list-policies missing {name}");
+    }
+}
+
+#[test]
+fn run_accepts_policy_overrides() {
+    let (out, err, ok) = airesim(&[
+        "run",
+        "--seed",
+        "7",
+        "--set",
+        SMALL,
+        "--policy",
+        "selection=locality,repair=job_first",
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("makespan"));
+
+    let (_, err, ok) = airesim(&["run", "--set", SMALL, "--policy", "selection=bogus"]);
+    assert!(!ok);
+    assert!(err.contains("unknown selection policy"), "stderr: {err}");
+}
+
+#[test]
+fn scenario_whatif_from_file() {
+    let (out, err, ok) =
+        airesim(&["scenario", "--config", "configs/scenario_recovery_whatif.yaml"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("selection=locality"), "{out}");
+    assert!(out.contains("scaling recovery_time"), "{out}");
+}
+
+#[test]
+fn scenario_inject_from_file() {
+    let (out, err, ok) =
+        airesim(&["scenario", "--config", "configs/scenario_incident_replay.yaml"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("StandbySwap"), "trace should show the swap: {out}");
+    assert!(out.contains("failures"), "{out}");
+}
+
+#[test]
 fn bad_input_is_rejected_cleanly() {
     let (_, err, ok) = airesim(&["run", "--set", "bogus_param=1"]);
     assert!(!ok);

@@ -27,7 +27,7 @@ fn inject_at(times: &[f64]) -> InjectionPlan {
     InjectionPlan::new(
         times
             .iter()
-            .map(|&at| Injection { at, victim_index: 0, kind: FailureKind::Random })
+            .map(|&at| Injection::new(at, 0, FailureKind::Random))
             .collect(),
     )
 }
@@ -198,9 +198,9 @@ fn retirement_threshold_removes_server() {
     // victim_index 0 targets the same (returning) server each time only if
     // it rotates back to position 0; instead target whatever is active.
     let plan = InjectionPlan::new(vec![
-        Injection { at: 100.0, victim_index: 3, kind: FailureKind::Systematic },
-        Injection { at: 200.0, victim_index: 3, kind: FailureKind::Systematic },
-        Injection { at: 300.0, victim_index: 3, kind: FailureKind::Systematic },
+        Injection::new(100.0, 3, FailureKind::Systematic),
+        Injection::new(200.0, 3, FailureKind::Systematic),
+        Injection::new(300.0, 3, FailureKind::Systematic),
     ]);
     let (out, trace) = Simulation::new(&p, 1)
         .with_trace()

@@ -1,0 +1,104 @@
+//! Scenario-layer integration: the shipped scenario files parse and run,
+//! and injections target arbitrary jobs with clean drops.
+
+use airesim::config::Params;
+use airesim::model::cluster::Simulation;
+use airesim::model::events::FailureKind;
+use airesim::scenario::{Scenario, ScenarioOutcome};
+use airesim::trace::inject::{Injection, InjectionPlan};
+
+fn load(path: &str) -> Scenario {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    Scenario::from_yaml(&text).unwrap_or_else(|e| panic!("{path}: {e}"))
+}
+
+#[test]
+fn shipped_whatif_scenario_runs() {
+    let sc = load("configs/scenario_recovery_whatif.yaml");
+    assert_eq!(sc.policies.selection, "locality");
+    match sc.run().unwrap() {
+        ScenarioOutcome::WhatIf { result, param, factor } => {
+            assert_eq!(param, "recovery_time");
+            assert_eq!(factor, 2.0);
+            assert_eq!(result.points.len(), 2);
+            let rendered = sc.render(&ScenarioOutcome::WhatIf { result, param, factor });
+            assert!(rendered.contains("selection=locality"), "{rendered}");
+            assert!(rendered.contains("scaling recovery_time"), "{rendered}");
+        }
+        _ => panic!("expected WhatIf outcome"),
+    }
+}
+
+#[test]
+fn shipped_inject_scenario_replays_incident() {
+    let sc = load("configs/scenario_incident_replay.yaml");
+    match sc.run().unwrap() {
+        ScenarioOutcome::Inject { outputs, trace } => {
+            // Three scripted failures land on the (only) running job.
+            assert_eq!(outputs.failures_total, 3);
+            assert!(outputs.completed);
+            assert!(!trace.is_empty(), "inject scenarios trace by default");
+        }
+        _ => panic!("expected Inject outcome"),
+    }
+}
+
+/// Two quiet jobs; one scripted failure against job 1 only.
+fn two_quiet_jobs() -> Params {
+    let mut p = Params::small_test();
+    p.num_jobs = 2;
+    p.job_size = 16;
+    p.warm_standbys = 2;
+    p.working_pool = 40;
+    p.spare_pool = 4;
+    p.random_failure_rate = 0.0;
+    p.systematic_failure_rate = 0.0;
+    p.systematic_fraction = 0.0;
+    p.diagnosis_prob = 1.0;
+    p.diagnosis_uncertainty = 0.0;
+    p.auto_repair_time = 1e7; // failed server does not return in-job
+    p.manual_repair_time = 1e7;
+    p
+}
+
+#[test]
+fn injection_targets_the_named_job_only() {
+    let p = two_quiet_jobs();
+    let plan = InjectionPlan::new(vec![Injection::for_job(
+        1,
+        100.0,
+        0,
+        FailureKind::Random,
+    )]);
+    let out = Simulation::new(&p, 1).with_injections(plan).run();
+    assert!(out.completed);
+    assert_eq!(out.failures_total, 1);
+    // Job 0 never failed: exactly selection + length. Job 1 paid one
+    // standby-swap recovery on top.
+    let want0 = p.host_selection_time + p.job_len;
+    let want1 = p.host_selection_time + p.job_len + p.recovery_time;
+    assert!(
+        (out.per_job_makespans[0] - want0).abs() < 1e-6,
+        "job 0 perturbed: {} vs {want0}",
+        out.per_job_makespans[0]
+    );
+    assert!(
+        (out.per_job_makespans[1] - want1).abs() < 1e-6,
+        "job 1 missed its injection: {} vs {want1}",
+        out.per_job_makespans[1]
+    );
+}
+
+#[test]
+fn injection_against_missing_or_idle_job_drops_cleanly() {
+    let p = two_quiet_jobs();
+    let plan = InjectionPlan::new(vec![
+        // No such job: dropped.
+        Injection::for_job(9, 100.0, 0, FailureKind::Random),
+        // After both jobs are done: dropped (not running).
+        Injection::for_job(0, p.job_len + 1e6, 0, FailureKind::Random),
+    ]);
+    let out = Simulation::new(&p, 2).with_injections(plan).run();
+    assert!(out.completed);
+    assert_eq!(out.failures_total, 0, "both injections must drop cleanly");
+}
