@@ -1,16 +1,17 @@
-//! Policy shootout: the new sweepable axes in action — compare host
-//! selection, repair queue discipline, and checkpoint policies on one
-//! pressured cluster, each combination under common random numbers.
+//! Policy shootout: sweepable *policy axes* in action — cross-product
+//! host selection × repair discipline × checkpoint policy on one
+//! pressured cluster, under common random numbers, and emit the results
+//! through the structured record/sink API.
 //!
 //! ```bash
 //! cargo run --release --example policy_shootout
+//! cargo run --release --example policy_shootout -- --format csv
+//! cargo run --release --example policy_shootout -- --format ndjson | head -3
 //! ```
 
 use airesim::config::Params;
-use airesim::model::cluster::ReplicationRunner;
-use airesim::model::PolicySpec;
-use airesim::sim::rng::Rng;
-use airesim::stats::Summary;
+use airesim::report::{Format, Sink, SweepRecord};
+use airesim::sweep::{run_sweep, AxisValue, Sweep};
 
 /// A cluster under enough failure pressure that policy choices matter:
 /// strong systematic rates, unreliable repairs, one technician team.
@@ -31,53 +32,51 @@ fn pressured() -> Params {
     p
 }
 
+fn names(xs: &[&str]) -> Vec<AxisValue> {
+    xs.iter().map(|&s| s.into()).collect()
+}
+
 fn main() {
-    let p = pressured();
-    let reps = 10u64;
-
-    println!("policy shootout — {} reps per combination, CRN seeds\n", reps);
-    println!(
-        "{:<12} {:<10} {:<11} | {:>12} {:>10} {:>10}",
-        "selection", "repair", "checkpoint", "makespan(h)", "±95%CI", "lost(min)"
-    );
-
-    let mut runner = ReplicationRunner::new();
-    for selection in ["first_fit", "random", "locality"] {
-        for repair in ["fifo", "job_first"] {
-            for checkpoint in ["continuous", "periodic"] {
-                let spec = PolicySpec {
-                    selection: selection.into(),
-                    repair: repair.into(),
-                    checkpoint: checkpoint.into(),
-                    failure: "auto".into(),
-                };
-                let mut makespans = Vec::new();
-                let mut lost = 0.0;
-                for r in 0..reps {
-                    // Common random numbers: the same stream for every
-                    // combination at replication r isolates policy effects.
-                    let out = runner.run(&p, &spec, Rng::derived(404, &[r]));
-                    makespans.push(out.makespan / 60.0);
-                    lost += out.work_lost / reps as f64;
-                }
-                let s = Summary::from_values(&makespans).unwrap();
-                println!(
-                    "{:<12} {:<10} {:<11} | {:>12.1} {:>10.1} {:>10.1}",
-                    selection,
-                    repair,
-                    checkpoint,
-                    s.mean,
-                    s.ci95_halfwidth(),
-                    lost
-                );
+    // `--format {text|json|csv|ndjson}` (default text).
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let format = match argv.iter().position(|a| a == "--format") {
+        Some(i) => match argv.get(i + 1).map(|s| Format::parse(s)) {
+            Some(Ok(f)) => f,
+            _ => {
+                eprintln!("usage: policy_shootout [--format text|json|csv|ndjson]");
+                std::process::exit(2);
             }
-        }
-    }
+        },
+        None => Format::Text,
+    };
 
-    println!(
-        "\nReading the table: `periodic` checkpointing pays for itself in lost\n\
-         work; `job_first` repair shortens stalls once the two technicians\n\
-         saturate; selection policies tie until regeneration correlates\n\
-         badness with placement history (see configs/aging_fleet.yaml)."
-    );
+    let p = pressured();
+    let sweep = Sweep::from_axes(
+        "policy shootout (10 CRN reps per combination)",
+        &[
+            ("policies.selection".to_string(), names(&["first_fit", "random", "locality"])),
+            ("policies.repair".to_string(), names(&["fifo", "job_first"])),
+            ("policies.checkpoint".to_string(), names(&["continuous", "periodic"])),
+        ],
+        10,
+        404,
+    )
+    // Common random numbers: every combination sees the same streams at
+    // replication r, isolating the policy effect.
+    .with_crn();
+    sweep.validate(&p).expect("all combinations build");
+
+    let result = run_sweep(&p, &sweep, 0);
+    let record = SweepRecord::new(result, "makespan_hours");
+    print!("{}", format.sink().sweep(&record));
+
+    if format == Format::Text {
+        println!(
+            "\nReading the table: `periodic` checkpointing pays for itself in lost\n\
+             work (see the work_lost metric via --format json); `job_first` repair\n\
+             shortens stalls once the two technicians saturate; selection policies\n\
+             tie until regeneration correlates badness with placement history\n\
+             (see configs/aging_fleet.yaml)."
+        );
+    }
 }

@@ -2,15 +2,17 @@
 //!
 //! ```text
 //! airesim run      [--config f.yaml] [--seed N] [--set name=value,...]
-//!                  [--policy axis=name,...] [--trace]
+//!                  [--policy axis=name,...] [--trace] [--trace-out f]
+//!                  [--format text|json|csv|ndjson]
 //! airesim sweep    [--config f.yaml] [--param name] [--values a,b,c]
 //!                  [--param2 name] [--values2 ...] [--reps N] [--metric m]
-//!                  [--policy axis=name,...] [--csv]
+//!                  [--policy axis=name,...] [--csv] [--format ...]
 //! airesim scenario --config scenario.yaml [--seed N] [--threads N]
-//!                  [--set ...] [--policy ...]
+//!                  [--set ...] [--policy ...] [--format ...] [--trace-out f]
 //! airesim analytic [--config f.yaml] [--artifact path] [--set name=value,...]
 //! airesim whatif   [--config f.yaml] --param name --factor F [--reps N]
-//! airesim list-params | list-policies
+//!                  [--format ...]
+//! airesim list-params | list-policies | list-metrics
 //! ```
 
 use airesim::analytical;
@@ -19,13 +21,17 @@ use airesim::model::cluster::Simulation;
 use airesim::model::policy::{
     PolicySpec, CHECKPOINT_NAMES, FAILURE_NAMES, REPAIR_NAMES, SELECTION_NAMES,
 };
-use airesim::report;
+use airesim::report::{self, Format, RunRecord, Sink, SweepRecord, WhatIfRecord};
 use airesim::runtime::AnalyticModel;
-use airesim::scenario::Scenario;
+use airesim::scenario::{Scenario, ScenarioKind, ScenarioOutcome};
+use airesim::stats::metrics;
 use airesim::sweep::{run_sweep, Sweep};
+use airesim::trace::{Shared, Trace};
 use airesim::util::cli::{render_help, Args, OptSpec};
 use airesim::util::err::{Context, Result};
 use airesim::{anyhow, bail};
+use std::cell::RefCell;
+use std::rc::Rc;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -47,6 +53,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "whatif" => cmd_whatif(rest),
         "list-params" => cmd_list_params(),
         "list-policies" => cmd_list_policies(),
+        "list-metrics" => cmd_list_metrics(),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -67,7 +74,9 @@ fn print_usage() {
          \x20 prescreen      analytically rank a sweep grid, DES the top-k\n\
          \x20 whatif         scale one parameter by a factor, compare outputs\n\
          \x20 list-params    show every sweepable parameter name\n\
-         \x20 list-policies  show every named policy per subsystem\n\n\
+         \x20 list-policies  show every named policy per subsystem\n\
+         \x20 list-metrics   show every reported output metric (name, unit)\n\n\
+         run, sweep, whatif, and scenario accept `--format {{text|json|csv|ndjson}}`.\n\
          Run `airesim <cmd> --help` for per-command options."
     );
 }
@@ -163,16 +172,71 @@ fn common_spec() -> Vec<OptSpec> {
     ]
 }
 
+fn format_opt() -> OptSpec {
+    OptSpec {
+        name: "format",
+        takes_value: true,
+        help: "output format: text|json|csv|ndjson (default text)",
+    }
+}
+
+fn trace_out_opt() -> OptSpec {
+    OptSpec {
+        name: "trace-out",
+        takes_value: true,
+        help: "write the event timeline as NDJSON to a file (- = stdout)",
+    }
+}
+
+/// Resolve `--format` (default: the legacy text tables).
+fn parse_format(args: &Args) -> Result<Format> {
+    match args.get("format") {
+        Some(s) => Format::parse(s).map_err(|e| anyhow!("{e}")),
+        None => Ok(Format::Text),
+    }
+}
+
+/// Resolve `--metric` against the registry (typos become a clean error
+/// naming every valid metric instead of an empty table).
+fn parse_metric(args: &Args) -> Result<&str> {
+    let name = args.get("metric").unwrap_or(metrics::DEFAULT_METRIC);
+    metrics::resolve(name).map_err(|e| anyhow!("{e}"))?;
+    Ok(name)
+}
+
+/// Dump an NDJSON event timeline to `path` (`-` = stdout).
+fn write_trace_out(path: &str, ndjson: &str) -> Result<()> {
+    if path == "-" {
+        print!("{ndjson}");
+        Ok(())
+    } else {
+        std::fs::write(path, ndjson).with_context(|| format!("writing trace to {path}"))
+    }
+}
+
 fn cmd_run(argv: &[String]) -> Result<()> {
     let mut spec = common_spec();
     spec.extend([
         OptSpec { name: "seed", takes_value: true, help: "rng seed (default 42)" },
         OptSpec { name: "trace", takes_value: false, help: "print the event trace" },
+        trace_out_opt(),
+        format_opt(),
     ]);
     let args = Args::parse(argv, &spec)?;
     if args.flag("help") {
         print!("{}", render_help("airesim run", "run one simulation", &spec));
         return Ok(());
+    }
+    let format = parse_format(&args)?;
+    // `--trace-out -` shares stdout with the report: fine for text (the
+    // legacy --trace shape) and ndjson (one object per line), but it
+    // would corrupt a json document or csv table.
+    if args.get("trace-out") == Some("-") && matches!(format, Format::Json | Format::Csv) {
+        bail!(
+            "--trace-out - mixes event lines into --format {} output; \
+             write the trace to a file instead",
+            format.name()
+        );
     }
     let doc = load_doc(&args)?;
     let p = load_params(doc.as_ref(), &args)?;
@@ -184,35 +248,28 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     if args.flag("trace") {
         sim = sim.with_trace();
     }
-    let (out, trace) = sim.run_traced();
+    // `--trace-out` goes through the Observer API: an event log shared
+    // with the simulation streams the timeline regardless of `--trace`.
+    let event_log = if args.get("trace-out").is_some() {
+        let log = Rc::new(RefCell::new(Trace::default()));
+        sim = sim.with_observer(Box::new(Shared(log.clone())));
+        Some(log)
+    } else {
+        None
+    };
+    let (out, mut trace) = sim.run_traced();
 
-    if args.flag("trace") {
-        print!("{}", trace.render());
+    if let (Some(path), Some(log)) = (args.get("trace-out"), event_log) {
+        write_trace_out(path, &log.borrow().to_ndjson())?;
+        if path == "-" && format == Format::Ndjson {
+            // The timeline is already on stdout in the sink's own event
+            // schema; emitting it again from the record would double
+            // every event for downstream `jq` aggregations.
+            trace = Trace::default();
+        }
     }
-    println!("== run outputs (seed {seed}) ==");
-    println!(
-        "makespan           {:>14.2} min ({:.2} days)",
-        out.makespan,
-        out.makespan / 1440.0
-    );
-    println!("completed          {:>14}", out.completed);
-    println!(
-        "failures           {:>14} (random {}, systematic {})",
-        out.failures_total, out.failures_random, out.failures_systematic
-    );
-    println!("standby swaps      {:>14}", out.standby_swaps);
-    println!("host selections    {:>14}", out.host_selections);
-    println!("preemptions        {:>14}", out.preemptions);
-    println!(
-        "repairs            {:>14} auto, {} manual",
-        out.repairs_auto, out.repairs_manual
-    );
-    println!("retirements        {:>14}", out.retirements);
-    println!("stall time         {:>14.2} min", out.stall_time);
-    println!("recovery total     {:>14.2} min", out.recovery_total);
-    println!("avg run duration   {:>14.2} min", out.avg_run_duration);
-    println!("utilization        {:>14.4}", out.utilization(p.job_len));
-    println!("events delivered   {:>14}", out.events_delivered);
+    let record = RunRecord { seed, params: p, policies, outputs: out, trace };
+    print!("{}", format.sink().run(&record));
     Ok(())
 }
 
@@ -237,20 +294,30 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
             takes_value: true,
             help: "metric to report (default makespan_hours)",
         },
-        OptSpec { name: "csv", takes_value: false, help: "emit CSV instead of a table" },
+        OptSpec { name: "csv", takes_value: false, help: "legacy CSV flag (equivalent: --format csv)" },
         OptSpec { name: "figure", takes_value: false, help: "emit Fig-2-style bar series" },
+        format_opt(),
     ]);
     let args = Args::parse(argv, &spec)?;
     if args.flag("help") {
         print!("{}", render_help("airesim sweep", "parameter sweep", &spec));
         return Ok(());
     }
+    // Validate the cheap flags before any simulation work: a mistyped
+    // `--format`/`--metric` must not cost a full multi-replication sweep.
+    let format = match args.get("format") {
+        Some(s) => Some(Format::parse(s).map_err(|e| anyhow!("{e}"))?),
+        None => None,
+    };
+    if format.is_some() && (args.flag("figure") || args.flag("csv")) {
+        bail!("--format is mutually exclusive with the legacy --csv/--figure flags");
+    }
     let doc = load_doc(&args)?;
     let base = load_params(doc.as_ref(), &args)?;
     let reps = args.get_usize("reps")?.unwrap_or(30);
     let seed = args.get_u64("seed")?.unwrap_or(42);
     let threads = args.get_usize("threads")?.unwrap_or(0);
-    let metric = args.get("metric").unwrap_or("makespan_hours");
+    let metric = parse_metric(&args)?;
 
     let sweep = match (args.get("param"), args.get("values")) {
         (Some(name), Some(values)) => {
@@ -271,14 +338,17 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         _ => sweep_from_config(doc.as_ref(), reps, seed)?,
     }
     .with_policies(load_policies(doc.as_ref(), &args, &base)?);
+    // Policy axes (and any bad point) fail here, not in a worker thread.
+    sweep.validate(&base).map_err(|e| anyhow!("{e}"))?;
 
     let result = run_sweep(&base, &sweep, threads);
-    if args.flag("csv") {
-        print!("{}", report::csv(&result, metric));
-    } else if args.flag("figure") {
-        print!("{}", report::figure_series(&result, metric));
-    } else {
-        print!("{}", report::text_table(&result, metric));
+    match format {
+        Some(f) => print!("{}", f.sink().sweep(&SweepRecord::new(result, metric))),
+        None if args.flag("csv") => print!("{}", report::csv(&result, metric)),
+        None if args.flag("figure") => {
+            print!("{}", report::figure_series(&result, metric))
+        }
+        None => print!("{}", report::text_table(&result, metric)),
     }
     Ok(())
 }
@@ -290,6 +360,8 @@ fn cmd_scenario(argv: &[String]) -> Result<()> {
     spec.extend([
         OptSpec { name: "seed", takes_value: true, help: "override the file's seed" },
         OptSpec { name: "threads", takes_value: true, help: "worker threads (0=auto)" },
+        trace_out_opt(),
+        format_opt(),
     ]);
     let args = Args::parse(argv, &spec)?;
     if args.flag("help") {
@@ -299,6 +371,7 @@ fn cmd_scenario(argv: &[String]) -> Result<()> {
         );
         return Ok(());
     }
+    let format = parse_format(&args)?;
     let path = args
         .get("config")
         .ok_or_else(|| anyhow!("scenario needs --config <file.yaml>"))?;
@@ -321,9 +394,56 @@ fn cmd_scenario(argv: &[String]) -> Result<()> {
     if let Some(threads) = args.get_usize("threads")? {
         scenario.threads = threads;
     }
+    // `--trace-out` needs the event timeline captured; remember whether
+    // the file asked for a printed trace itself, so the stdout report
+    // stays byte-identical when it did not.
+    let mut forced_trace = false;
+    if let Some(out_path) = args.get("trace-out") {
+        // Same stdout-corruption guard as `airesim run`.
+        if out_path == "-" && matches!(format, Format::Json | Format::Csv) {
+            bail!(
+                "--trace-out - mixes event lines into --format {} output; \
+                 write the trace to a file instead",
+                format.name()
+            );
+        }
+        match &mut scenario.kind {
+            ScenarioKind::Single { trace } | ScenarioKind::Inject { trace, .. } => {
+                forced_trace = !*trace;
+                *trace = true;
+            }
+            _ => bail!("--trace-out applies to single/inject scenarios (event timelines)"),
+        }
+    }
 
-    let outcome = scenario.run().map_err(|e| anyhow!("{e}"))?;
-    print!("{}", scenario.render(&outcome));
+    let mut outcome = scenario.run().map_err(|e| anyhow!("{e}"))?;
+    if let Some(out_path) = args.get("trace-out") {
+        let (ScenarioOutcome::Single { trace, .. } | ScenarioOutcome::Inject { trace, .. }) =
+            &mut outcome
+        else {
+            unreachable!("guarded above");
+        };
+        write_trace_out(out_path, &trace.to_ndjson())?;
+        if forced_trace || (out_path == "-" && format == Format::Ndjson) {
+            // Either the trace existed only to feed the timeline file,
+            // or the timeline is already on stdout in the same schema —
+            // keep the report single-copy.
+            *trace = Trace::default();
+        }
+    }
+    print!("{}", format.sink().scenario(&scenario.record_owned(outcome)));
+    Ok(())
+}
+
+fn cmd_list_metrics() -> Result<()> {
+    println!("{:<20} {:<6} {}", "metric", "unit", "description");
+    for m in metrics::REGISTRY {
+        println!("{:<20} {:<6} {}", m.name, m.unit, m.doc);
+    }
+    println!(
+        "\nselect a table's metric with `--metric <name>`; the json/ndjson \
+         sinks emit every metric"
+    );
     Ok(())
 }
 
@@ -461,6 +581,20 @@ fn cmd_prescreen(argv: &[String]) -> Result<()> {
         }
         _ => sweep_from_config(doc.as_ref(), reps, seed)?,
     };
+    // The CTMC screen cannot see policies: a `policies.*` axis would
+    // rank identically-parameterized points under distinct policy labels
+    // — silently wrong. Refuse instead of misinforming.
+    if sweep
+        .points
+        .iter()
+        .any(|pt| pt.overrides.iter().any(|(name, _)| name.starts_with("policies.")))
+    {
+        bail!(
+            "prescreen's analytical screen is policy-blind and cannot rank \
+             `policies.*` sweep axes; run them through `airesim sweep` or \
+             `airesim scenario` instead"
+        );
+    }
     let configs: Vec<Params> = sweep.points.iter().map(|pt| pt.apply(&base)).collect();
     if policies != PolicySpec::default() {
         println!(
@@ -538,12 +672,14 @@ fn cmd_whatif(argv: &[String]) -> Result<()> {
         OptSpec { name: "factor", takes_value: true, help: "multiplier (e.g. 0.5, 2)" },
         OptSpec { name: "reps", takes_value: true, help: "replications (default 30)" },
         OptSpec { name: "seed", takes_value: true, help: "master seed" },
+        format_opt(),
     ]);
     let args = Args::parse(argv, &spec)?;
     if args.flag("help") {
         print!("{}", render_help("airesim whatif", "what-if scenario", &spec));
         return Ok(());
     }
+    let format = parse_format(&args)?;
     let doc = load_doc(&args)?;
     let base = load_params(doc.as_ref(), &args)?;
     let name = args.get("param").ok_or_else(|| anyhow!("--param required"))?;
@@ -566,15 +702,13 @@ fn cmd_whatif(argv: &[String]) -> Result<()> {
     )
     .with_policies(load_policies(doc.as_ref(), &args, &base)?);
     let result = run_sweep(&base, &sweep, 0);
-    print!("{}", report::text_table(&result, "makespan_hours"));
-    let a = result.points[0].summary("makespan_hours").unwrap();
-    let b = result.points[1].summary("makespan_hours").unwrap();
-    println!(
-        "\nscaling {name} by {factor} changes mean training time by {:+.2}% ({:.1}h -> {:.1}h)",
-        (b.mean / a.mean - 1.0) * 100.0,
-        a.mean,
-        b.mean
-    );
+    let record = WhatIfRecord {
+        result,
+        param: name.to_string(),
+        factor,
+        metric: metrics::DEFAULT_METRIC.to_string(),
+    };
+    print!("{}", format.sink().whatif(&record));
     Ok(())
 }
 

@@ -27,7 +27,7 @@ use crate::model::server::Server;
 use crate::sim::rng::Rng;
 use crate::sim::Time;
 use crate::trace::inject::{Injection, InjectionPlan};
-use crate::trace::Trace;
+use crate::trace::{Observer, Trace};
 
 /// One simulation run in progress: the shared state ([`SimCtx`]) plus the
 /// pluggable policy subsystems ([`PolicySet`]) and the injection script.
@@ -80,6 +80,16 @@ impl Simulation {
     /// Record a structured trace of the run.
     pub fn with_trace(mut self) -> Self {
         self.ctx.trace = Some(Trace::default());
+        self
+    }
+
+    /// Install an event observer ([`crate::trace::Observer`]): it sees
+    /// every traced decision point — failures, repairs, preemptions,
+    /// stalls — as the run executes. Use [`crate::trace::Shared`] to keep
+    /// a handle on the data afterwards. Observers never affect the run
+    /// (no draws, no event-order changes).
+    pub fn with_observer(mut self, observer: Box<dyn Observer>) -> Self {
+        self.ctx.observer = Some(observer);
         self
     }
 

@@ -23,7 +23,7 @@ use crate::model::server::{build_fleet_into, Server, ServerState};
 use crate::sim::engine::Engine;
 use crate::sim::rng::Rng;
 use crate::sim::Time;
-use crate::trace::{Trace, TraceKind};
+use crate::trace::{Observer, Trace, TraceKind};
 
 /// Shared mutable state of one simulation run.
 pub struct SimCtx {
@@ -36,6 +36,10 @@ pub struct SimCtx {
     pub shop: RepairShop,
     pub out: RunOutputs,
     pub trace: Option<Trace>,
+    /// Pluggable event observer ([`crate::trace::Observer`]): sees every
+    /// traced decision point as it happens. `None` by default — the hot
+    /// path pays one branch, no allocation, no draw-order impact.
+    pub observer: Option<Box<dyn Observer>>,
     /// Sum of running-burst lengths (drives `avg_run_duration`).
     pub burst_sum: Time,
     /// Number of running bursts observed.
@@ -57,6 +61,7 @@ impl SimCtx {
             shop: RepairShop::new(),
             out: RunOutputs::default(),
             trace: None,
+            observer: None,
             burst_sum: 0.0,
             burst_count: 0,
             scratch_ids: Vec::new(),
@@ -85,18 +90,27 @@ impl SimCtx {
         self.shop.reset();
         self.out = RunOutputs::default();
         self.trace = None;
+        self.observer = None;
         self.burst_sum = 0.0;
         self.burst_count = 0;
         self.rng = rng;
         self.p = p.clone();
     }
 
-    /// Append a trace record at the current simulation time (no-op when
-    /// tracing is off — one branch on the hot path).
+    /// Emit one traced decision point at the current simulation time to
+    /// the trace buffer and/or the installed observer (no-op when both
+    /// are off — two branches on the hot path, nothing else).
     #[inline]
     pub fn tr(&mut self, kind: TraceKind) {
+        if self.trace.is_none() && self.observer.is_none() {
+            return;
+        }
+        let at = self.engine.now();
+        if let Some(o) = &mut self.observer {
+            o.observe(at, &kind);
+        }
         if let Some(t) = &mut self.trace {
-            t.push(self.engine.now(), kind);
+            t.push(at, kind);
         }
     }
 

@@ -144,6 +144,7 @@ pub(crate) fn handle_failure(
 pub(crate) fn begin_recovery(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
     ctx.jobs[j].phase = JobPhase::Recovering;
     let cost = pol.checkpoint.restart_cost();
+    ctx.tr(TraceKind::RecoveryStart { cost });
     ctx.out.recovery_total += cost;
     let gen = ctx.jobs[j].gen.0;
     ctx.engine.schedule_in(cost, Ev::RecoveryDone { job: j as u32, gen });

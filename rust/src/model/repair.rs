@@ -13,7 +13,10 @@
 //! The `RepairShop` additionally models *finite repair capacity* (an
 //! extension knob, 0 = unlimited): at most `auto_repair_capacity`
 //! concurrent automated fixtures and `manual_repair_capacity` technicians,
-//! with FIFO queues in front of each stage.
+//! with a [`RepairQueue`] in front of each stage. The queue keeps a
+//! per-job index alongside arrival order, so the `job_first` discipline
+//! finds "the earliest-queued server a live job is waiting on" in
+//! O(num_jobs) instead of the old O(n) scan + `VecDeque::remove` shift.
 
 use crate::config::Params;
 use crate::model::events::{RepairStage, ServerId};
@@ -22,7 +25,144 @@ use crate::model::server::Server;
 use crate::sim::dist::Dist;
 use crate::sim::rng::Rng;
 use crate::sim::Time;
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
+
+/// Order-preserving repair queue with a per-job index.
+///
+/// Every assigned entry lives in two places: the global arrival deque
+/// (FIFO/LIFO pops) and its job's bucket (the `job_first` index), tied
+/// together by a unique arrival sequence number. FIFO/LIFO pops remove
+/// the bucket twin eagerly (it is always at that bucket's front/back —
+/// buckets hold live entries only), so those disciplines allocate
+/// nothing extra; a `job_first` bucket pick tombstones its global twin,
+/// which later global pops reclaim lazily. Memory is O(live entries +
+/// unreclaimed tombstones), never O(all admissions of the run).
+#[derive(Clone, Debug, Default)]
+pub struct RepairQueue {
+    /// Global arrival order: `(seq, server, assigned job)`.
+    fifo: VecDeque<(u64, ServerId, Option<u32>)>,
+    /// Live entries per assigned job (index = job id), in arrival order.
+    /// Servers with no assigned job live only in `fifo`.
+    by_job: Vec<VecDeque<(u64, ServerId)>>,
+    /// Seqs picked via a job bucket whose `fifo` copy is not yet
+    /// reclaimed (lazy deletion).
+    dead: HashSet<u64>,
+    next_seq: u64,
+    len: usize,
+}
+
+impl RepairQueue {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Clear all entries, retaining allocations (replication reuse).
+    pub fn clear(&mut self) {
+        self.fifo.clear();
+        for q in &mut self.by_job {
+            q.clear();
+        }
+        self.dead.clear();
+        self.next_seq = 0;
+        self.len = 0;
+    }
+
+    /// Enqueue `server`, indexed under its assigned `job` (if any). The
+    /// assignment must not change while the server is queued — true in
+    /// the simulation, where a shop-bound server belongs to no pool or
+    /// gang list.
+    pub fn push(&mut self, server: ServerId, job: Option<u32>) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.fifo.push_back((seq, server, job));
+        if let Some(j) = job {
+            let j = j as usize;
+            if j >= self.by_job.len() {
+                self.by_job.resize_with(j + 1, VecDeque::new);
+            }
+            self.by_job[j].push_back((seq, server));
+        }
+        self.len += 1;
+    }
+
+    /// Oldest entry (FIFO discipline).
+    pub fn pop_front(&mut self) -> Option<ServerId> {
+        while let Some((seq, server, job)) = self.fifo.pop_front() {
+            if self.dead.remove(&seq) {
+                continue; // already taken via the job index
+            }
+            if let Some(j) = job {
+                // The oldest live entry overall is the oldest live entry
+                // of its job: the twin sits at that bucket's front.
+                let q = &mut self.by_job[j as usize];
+                debug_assert_eq!(q.front().map(|&(s, _)| s), Some(seq));
+                q.pop_front();
+            }
+            self.len -= 1;
+            return Some(server);
+        }
+        None
+    }
+
+    /// Newest entry (LIFO discipline).
+    pub fn pop_back(&mut self) -> Option<ServerId> {
+        while let Some((seq, server, job)) = self.fifo.pop_back() {
+            if self.dead.remove(&seq) {
+                continue;
+            }
+            if let Some(j) = job {
+                // Symmetric to pop_front: the newest live entry overall
+                // is the newest live entry of its job.
+                let q = &mut self.by_job[j as usize];
+                debug_assert_eq!(q.back().map(|&(s, _)| s), Some(seq));
+                q.pop_back();
+            }
+            self.len -= 1;
+            return Some(server);
+        }
+        None
+    }
+
+    /// The earliest-queued server whose assigned job satisfies `waiting`
+    /// (evaluated now — job state is time-varying); falls back to the
+    /// overall front when no job is waiting. This is `job_first` in
+    /// O(jobs) comparisons: buckets hold live entries in arrival order,
+    /// so comparing bucket heads finds the global earliest.
+    pub fn pop_first_waiting(&mut self, waiting: impl Fn(usize) -> bool) -> Option<ServerId> {
+        let mut best: Option<(u64, usize)> = None;
+        for (j, q) in self.by_job.iter().enumerate() {
+            let Some(&(seq, _)) = q.front() else { continue };
+            if !waiting(j) {
+                continue;
+            }
+            if best.is_none_or(|(b, _)| seq < b) {
+                best = Some((seq, j));
+            }
+        }
+        match best {
+            Some((_, j)) => {
+                let (seq, server) = self.by_job[j].pop_front().expect("head checked");
+                self.dead.insert(seq); // the fifo copy becomes a tombstone
+                // Reclaim any tombstones this pick exposed at the front.
+                while self
+                    .fifo
+                    .front()
+                    .is_some_and(|(s, _, _)| self.dead.contains(s))
+                {
+                    let (s, _, _) = self.fifo.pop_front().expect("front checked");
+                    self.dead.remove(&s);
+                }
+                self.len -= 1;
+                Some(server)
+            }
+            None => self.pop_front(),
+        }
+    }
+}
 
 /// Queue discipline for a repair stage: which queued server starts when a
 /// slot frees up. Selected by name (see [`crate::model::policy`]):
@@ -39,7 +179,7 @@ pub trait RepairPolicy {
     /// Remove and return the next server to repair from `queue`.
     fn pick_next(
         &self,
-        queue: &mut VecDeque<ServerId>,
+        queue: &mut RepairQueue,
         fleet: &[Server],
         jobs: &[Job],
         p: &Params,
@@ -57,7 +197,7 @@ impl RepairPolicy for Fifo {
 
     fn pick_next(
         &self,
-        queue: &mut VecDeque<ServerId>,
+        queue: &mut RepairQueue,
         _fleet: &[Server],
         _jobs: &[Job],
         _p: &Params,
@@ -78,7 +218,7 @@ impl RepairPolicy for Lifo {
 
     fn pick_next(
         &self,
-        queue: &mut VecDeque<ServerId>,
+        queue: &mut RepairQueue,
         _fleet: &[Server],
         _jobs: &[Job],
         _p: &Params,
@@ -87,22 +227,13 @@ impl RepairPolicy for Lifo {
     }
 }
 
-/// Would a repaired `server` return directly to a job right now (§II-B
-/// reintegration: its assigned job is live and under-allotted)? This is
-/// the discriminator [`JobFirst`] prioritizes on — note that *every*
-/// server entering the shop still carries `assigned_job`, so the job's
-/// phase/allotment ([`Job::wants_more`]) is what distinguishes urgent
-/// repairs from ones that would just drain back to the pools.
-fn job_is_waiting(server: ServerId, fleet: &[Server], jobs: &[Job], p: &Params) -> bool {
-    fleet[server as usize]
-        .assigned_job
-        .is_some_and(|j| jobs[j as usize].wants_more(p))
-}
-
 /// Priority discipline: servers whose job is live and under-allotted
 /// (i.e. the repair directly restores lost gang capacity, §II-B) jump
 /// ahead of servers that would only drain back to the pools; FIFO within
-/// each class.
+/// each class. Note that *every* server entering the shop still carries
+/// `assigned_job`, so the job's phase/allotment ([`Job::wants_more`]) is
+/// what distinguishes urgent repairs from ones that would just drain
+/// back — evaluated at pick time via the queue's per-job index.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct JobFirst;
 
@@ -113,16 +244,12 @@ impl RepairPolicy for JobFirst {
 
     fn pick_next(
         &self,
-        queue: &mut VecDeque<ServerId>,
-        fleet: &[Server],
+        queue: &mut RepairQueue,
+        _fleet: &[Server],
         jobs: &[Job],
         p: &Params,
     ) -> Option<ServerId> {
-        let idx = queue
-            .iter()
-            .position(|&id| job_is_waiting(id, fleet, jobs, p))
-            .unwrap_or(0);
-        queue.remove(idx)
+        queue.pop_first_waiting(|j| jobs[j].wants_more(p))
     }
 }
 
@@ -164,7 +291,7 @@ pub fn duration(p: &Params, stage: RepairStage, rng: &mut Rng) -> Time {
 pub enum Admission {
     /// Start immediately; caller schedules RepairDone after the duration.
     Start,
-    /// Capacity exhausted; the server waits in the stage's FIFO queue.
+    /// Capacity exhausted; the server waits in the stage's queue.
     Queued,
 }
 
@@ -173,12 +300,12 @@ pub enum Admission {
 pub struct RepairShop {
     in_auto: u32,
     in_manual: u32,
-    queue_auto: VecDeque<ServerId>,
-    queue_manual: VecDeque<ServerId>,
+    queue_auto: RepairQueue,
+    queue_manual: RepairQueue,
     /// Stats: completed repairs per stage.
     pub completed_auto: u64,
     pub completed_manual: u64,
-    /// Stats: total queueing delay experienced (minutes · servers).
+    /// Stats: peak queue lengths per stage.
     pub max_queue_auto: usize,
     pub max_queue_manual: usize,
 }
@@ -208,8 +335,15 @@ impl RepairShop {
         }
     }
 
-    /// Try to admit `server` into `stage`.
-    pub fn admit(&mut self, p: &Params, stage: RepairStage, server: ServerId) -> Admission {
+    /// Try to admit `server` into `stage`; `job` is the server's assigned
+    /// job (the queue's index key for `job_first`).
+    pub fn admit(
+        &mut self,
+        p: &Params,
+        stage: RepairStage,
+        server: ServerId,
+        job: Option<u32>,
+    ) -> Admission {
         let cap = Self::cap(p, stage);
         let (busy, queue) = match stage {
             RepairStage::Automated => (&mut self.in_auto, &mut self.queue_auto),
@@ -219,7 +353,7 @@ impl RepairShop {
             *busy += 1;
             Admission::Start
         } else {
-            queue.push_back(server);
+            queue.push(server, job);
             match stage {
                 RepairStage::Automated => {
                     self.max_queue_auto = self.max_queue_auto.max(queue.len())
@@ -285,12 +419,21 @@ mod tests {
         vec![Job::new(p.job_len)]
     }
 
+    /// Build a queue from (server, job) pairs in arrival order.
+    fn queue_of(entries: &[(ServerId, Option<u32>)]) -> RepairQueue {
+        let mut q = RepairQueue::default();
+        for &(s, j) in entries {
+            q.push(s, j);
+        }
+        q
+    }
+
     #[test]
     fn unlimited_capacity_always_starts() {
         let p = Params::small_test(); // capacities 0
         let mut shop = RepairShop::new();
         for id in 0..1000 {
-            assert_eq!(shop.admit(&p, RepairStage::Automated, id), Admission::Start);
+            assert_eq!(shop.admit(&p, RepairStage::Automated, id, Some(0)), Admission::Start);
         }
         assert_eq!(shop.population(), 1000);
     }
@@ -302,10 +445,10 @@ mod tests {
         let fleet = test_fleet(4);
         let jobs = waiting_job(&p);
         let mut shop = RepairShop::new();
-        assert_eq!(shop.admit(&p, RepairStage::Automated, 0), Admission::Start);
-        assert_eq!(shop.admit(&p, RepairStage::Automated, 1), Admission::Start);
-        assert_eq!(shop.admit(&p, RepairStage::Automated, 2), Admission::Queued);
-        assert_eq!(shop.admit(&p, RepairStage::Automated, 3), Admission::Queued);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 0, Some(0)), Admission::Start);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 1, Some(0)), Admission::Start);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 2, Some(0)), Admission::Queued);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 3, Some(0)), Admission::Queued);
         // Completion hands the slot to the FIFO head.
         let next = |shop: &mut RepairShop| {
             shop.complete(&p, RepairStage::Automated, &Fifo, &fleet, &jobs)
@@ -324,10 +467,10 @@ mod tests {
         p.auto_repair_capacity = 1;
         p.manual_repair_capacity = 1;
         let mut shop = RepairShop::new();
-        assert_eq!(shop.admit(&p, RepairStage::Automated, 0), Admission::Start);
-        assert_eq!(shop.admit(&p, RepairStage::Manual, 1), Admission::Start);
-        assert_eq!(shop.admit(&p, RepairStage::Automated, 2), Admission::Queued);
-        assert_eq!(shop.admit(&p, RepairStage::Manual, 3), Admission::Queued);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 0, None), Admission::Start);
+        assert_eq!(shop.admit(&p, RepairStage::Manual, 1, None), Admission::Start);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 2, None), Admission::Queued);
+        assert_eq!(shop.admit(&p, RepairStage::Manual, 3, None), Admission::Queued);
     }
 
     #[test]
@@ -335,7 +478,7 @@ mod tests {
         let p = Params::small_test();
         let fleet = test_fleet(4);
         let jobs = waiting_job(&p);
-        let mut q: VecDeque<ServerId> = [0, 1, 2].into_iter().collect();
+        let mut q = queue_of(&[(0, Some(0)), (1, Some(0)), (2, Some(0))]);
         assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p), Some(2));
         assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p), Some(1));
         assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p), Some(0));
@@ -348,16 +491,14 @@ mod tests {
         // shop does); what discriminates is the *job's* state. Job 0 is
         // done, job 1 is under-allotted and waiting.
         let p = Params::small_test();
-        let mut fleet = test_fleet(4);
+        let fleet = test_fleet(4);
         let mut done = Job::with_id(0, p.job_len);
         done.phase = JobPhase::Done;
         let waiting = Job::with_id(1, p.job_len);
         let jobs = vec![done, waiting];
-        for s in fleet.iter_mut() {
-            s.assigned_job = Some(0); // their job finished without them
-        }
-        fleet[2].assigned_job = Some(1); // job 1 wants this one back
-        let mut q: VecDeque<ServerId> = [0, 1, 2, 3].into_iter().collect();
+        // Arrival order 0, 1, 2, 3; only server 2 belongs to job 1.
+        let mut q =
+            queue_of(&[(0, Some(0)), (1, Some(0)), (2, Some(1)), (3, Some(0))]);
         // Server 2 jumps ahead of 0 and 1.
         assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(2));
         // Nobody else is awaited: FIFO order resumes.
@@ -375,16 +516,82 @@ mod tests {
         let mut p = Params::small_test();
         p.job_size = 2;
         p.warm_standbys = 0;
-        let mut fleet = test_fleet(4);
+        let fleet = test_fleet(4);
         let mut job = Job::with_id(0, p.job_len);
         job.phase = JobPhase::Running;
         job.active = vec![0, 1]; // allotted == target
         let jobs = vec![job];
-        for s in fleet.iter_mut() {
-            s.assigned_job = Some(0);
-        }
-        let mut q: VecDeque<ServerId> = [2, 3].into_iter().collect();
+        let mut q = queue_of(&[(2, Some(0)), (3, Some(0))]);
         assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(2), "plain FIFO");
+    }
+
+    #[test]
+    fn job_first_prefers_earliest_arrival_across_waiting_jobs() {
+        // Two waiting jobs: the earliest-queued awaited server wins, not
+        // the lowest job id.
+        let p = Params::small_test();
+        let fleet = test_fleet(4);
+        let jobs = vec![Job::with_id(0, p.job_len), Job::with_id(1, p.job_len)];
+        let mut q = queue_of(&[(3, Some(1)), (0, Some(0)), (1, None)]);
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(3));
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(0));
+        // Unassigned server only via the FIFO fallback.
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(1));
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), None);
+    }
+
+    #[test]
+    fn mixed_pop_orders_stay_consistent() {
+        // Interleaving disciplines on one queue must never duplicate or
+        // lose a server (the tombstone bookkeeping).
+        let p = Params::small_test();
+        let fleet = test_fleet(6);
+        let jobs = vec![Job::with_id(0, p.job_len)];
+        let mut q = queue_of(&[
+            (0, Some(0)),
+            (1, None),
+            (2, Some(0)),
+            (3, None),
+            (4, Some(0)),
+            (5, None),
+        ]);
+        let mut got = Vec::new();
+        got.push(JobFirst.pick_next(&mut q, &fleet, &jobs, &p).unwrap()); // 0
+        got.push(Lifo.pick_next(&mut q, &fleet, &jobs, &p).unwrap()); // 5
+        got.push(JobFirst.pick_next(&mut q, &fleet, &jobs, &p).unwrap()); // 2
+        got.push(Fifo.pick_next(&mut q, &fleet, &jobs, &p).unwrap()); // 1
+        got.push(JobFirst.pick_next(&mut q, &fleet, &jobs, &p).unwrap()); // 4
+        got.push(Fifo.pick_next(&mut q, &fleet, &jobs, &p).unwrap()); // 3
+        assert_eq!(got, vec![0, 5, 2, 1, 4, 3]);
+        assert!(q.is_empty());
+        assert_eq!(Fifo.pick_next(&mut q, &fleet, &jobs, &p), None);
+    }
+
+    #[test]
+    fn plain_disciplines_leave_no_residue() {
+        // FIFO/LIFO pops remove bucket twins eagerly and job_first
+        // tombstones are reclaimed — internal storage must drain back to
+        // empty, not accumulate per admission (a long-run memory leak).
+        let p = Params::small_test();
+        let fleet = test_fleet(8);
+        let jobs = vec![Job::with_id(0, p.job_len)];
+        let mut q = RepairQueue::default();
+        for round in 0..50u32 {
+            for s in 0..8 {
+                q.push(s, if s % 3 == 0 { None } else { Some(0) });
+            }
+            for _ in 0..4 {
+                assert!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p).is_some());
+            }
+            for _ in 0..2 {
+                assert!(Lifo.pick_next(&mut q, &fleet, &jobs, &p).is_some());
+            }
+            while Fifo.pick_next(&mut q, &fleet, &jobs, &p).is_some() {}
+            assert!(q.is_empty(), "round {round}");
+            assert!(q.fifo.is_empty(), "fifo residue at round {round}");
+            assert!(q.dead.is_empty(), "tombstone residue at round {round}");
+            assert!(q.by_job.iter().all(|b| b.is_empty()), "bucket residue at round {round}");
+        }
     }
 
     #[test]
@@ -394,8 +601,8 @@ mod tests {
         let fleet = test_fleet(4);
         let jobs = waiting_job(&p);
         let mut shop = RepairShop::new();
-        shop.admit(&p, RepairStage::Automated, 0);
-        shop.admit(&p, RepairStage::Automated, 1);
+        shop.admit(&p, RepairStage::Automated, 0, Some(0));
+        shop.admit(&p, RepairStage::Automated, 1, Some(0));
         let _ = shop.complete(&p, RepairStage::Automated, &Fifo, &fleet, &jobs);
         assert!(shop.population() > 0 || shop.completed_auto > 0);
         shop.reset();

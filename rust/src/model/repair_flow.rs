@@ -44,10 +44,17 @@ pub(crate) fn start_repair(ctx: &mut SimCtx, pol: &mut PolicySet, server: Server
 
 /// Admission into a repair stage (possibly queueing on capacity).
 fn enter_stage(ctx: &mut SimCtx, pol: &mut PolicySet, server: ServerId, stage: RepairStage) {
-    match ctx.shop.admit(&ctx.p, stage, server) {
+    // The queue index keys on the server's assigned job (stable while it
+    // sits in the shop) so `job_first` picks without scanning.
+    let job = ctx.fleet[server as usize].assigned_job;
+    match ctx.shop.admit(&ctx.p, stage, server, job) {
         Admission::Start => start_stage(ctx, pol, server, stage),
         Admission::Queued => {
             ctx.fleet[server as usize].state = ServerState::RepairQueued;
+            ctx.tr(TraceKind::RepairQueued {
+                server,
+                manual: stage == RepairStage::Manual,
+            });
         }
     }
 }

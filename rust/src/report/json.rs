@@ -1,0 +1,179 @@
+//! Hand-rolled JSON writer (the offline environment carries no serde).
+//!
+//! [`Json`] is an ordered document model — objects keep insertion order,
+//! so rendered output is deterministic and diffs stay readable. Emission
+//! covers exactly what the sinks need: RFC 8259-valid escaping, and
+//! numbers that round-trip (non-finite values — e.g. the ±∞ a one-sample
+//! confidence interval produces — render as `null`, the only valid JSON
+//! spelling for them).
+
+use std::fmt::Write as _;
+
+/// One JSON value. Objects preserve insertion order (a `Vec`, not a map).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Convenience: a string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Convenience: an object from (key, value) pairs.
+    pub fn obj<K, I>(fields: I) -> Json
+    where
+        K: Into<String>,
+        I: IntoIterator<Item = (K, Json)>,
+    {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// Render as compact JSON text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => write_num(*v, out),
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::Num(v)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::str(s)
+    }
+}
+
+fn write_num(v: f64, out: &mut String) {
+    if !v.is_finite() {
+        // JSON has no NaN/Infinity; null is the lossless-enough spelling.
+        out.push_str("null");
+    } else if v == v.trunc() && v.abs() < 9.007_199_254_740_992e15 {
+        // Exact integers print without a fraction ("3", not "3.0"),
+        // within the f64-exact range.
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        // Rust's f64 Display is the shortest decimal that round-trips —
+        // always a valid JSON number.
+        let _ = write!(out, "{v}");
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_render() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::Num(3.0).render(), "3");
+        assert_eq!(Json::Num(3.5).render(), "3.5");
+        assert_eq!(Json::Num(-0.25).render(), "-0.25");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::str("hi").render(), "\"hi\"");
+    }
+
+    #[test]
+    fn strings_escape() {
+        assert_eq!(Json::str("a\"b\\c\nd").render(), r#""a\"b\\c\nd""#);
+        assert_eq!(Json::str("\u{1}").render(), "\"\\u0001\"");
+        assert_eq!(Json::str("μs").render(), "\"μs\"");
+    }
+
+    #[test]
+    fn collections_preserve_order() {
+        let j = Json::obj([
+            ("z", Json::Num(1.0)),
+            ("a", Json::Arr(vec![Json::Num(1.0), Json::str("two")])),
+        ]);
+        assert_eq!(j.render(), r#"{"z":1,"a":[1,"two"]}"#);
+    }
+
+    #[test]
+    fn large_integers_stay_exact() {
+        assert_eq!(Json::Num(9007199254740991.0).render(), "9007199254740991");
+        // Beyond 2^53 falls back to float display (still valid JSON).
+        let big = Json::Num(1.0e300).render();
+        assert!(big.parse::<f64>().is_ok() || big.starts_with('1'));
+    }
+}

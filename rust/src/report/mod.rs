@@ -1,6 +1,20 @@
-//! Report emitters: render sweep results as aligned text tables, CSV, and
-//! the paper's figure series (Fig 2's grouped columns), plus the
-//! sensitivity ranking the §IV analysis performs.
+//! Reporting: the structured output API plus the legacy text emitters.
+//!
+//! The structured path is records + sinks: every CLI command builds one
+//! typed record ([`record`]) and any `--format` sink ([`sink`]) renders
+//! it — text (byte-identical to the pre-redesign tables), JSON
+//! (hand-rolled, zero-dep: [`json`]), CSV, or NDJSON. The free functions
+//! below ([`text_table`], [`csv`], [`figure_series`], [`sensitivity`])
+//! are the text/CSV table primitives the sinks delegate to.
+
+pub mod json;
+pub mod record;
+pub mod sink;
+
+pub use record::{
+    CompareRecord, RecordBody, RunRecord, ScenarioRecord, SweepRecord, WhatIfRecord,
+};
+pub use sink::{Format, Sink};
 
 use crate::stats::Summary;
 use crate::sweep::SweepResult;

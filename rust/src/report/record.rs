@@ -1,0 +1,295 @@
+//! The typed record layer: every CLI command produces one of these
+//! records, and any [`crate::report::sink::Sink`] renders it. Records own
+//! their data (params, policies, outputs, summaries) so sinks are pure
+//! `record -> String` functions with no access to live simulation state.
+
+use crate::analytical::AnalyticOutputs;
+use crate::config::Params;
+use crate::model::{PolicySpec, RunOutputs};
+use crate::report::json::Json;
+use crate::stats::{metrics, Summary};
+use crate::sweep::{AxisValue, PointResult, SweepResult};
+use crate::trace::{event_json, Trace};
+
+/// One simulation run: `airesim run`, and `single`/`inject` scenarios.
+pub struct RunRecord {
+    pub seed: u64,
+    pub params: Params,
+    pub policies: PolicySpec,
+    pub outputs: RunOutputs,
+    /// Empty unless the run was traced.
+    pub trace: Trace,
+}
+
+impl RunRecord {
+    /// Every registry metric evaluated against this run, in registry
+    /// order.
+    pub fn metric_values(&self) -> impl Iterator<Item = (&'static metrics::Metric, f64)> + '_ {
+        metrics::REGISTRY.iter().map(|m| (m, (m.extract)(&self.params, &self.outputs)))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let metrics_obj = Json::Obj(
+            self.metric_values()
+                .map(|(m, v)| {
+                    (
+                        m.name.to_string(),
+                        Json::obj([("value", Json::Num(v)), ("unit", Json::str(m.unit))]),
+                    )
+                })
+                .collect(),
+        );
+        let mut fields = vec![
+            ("kind".to_string(), Json::str("run")),
+            ("seed".to_string(), self.seed.into()),
+            ("policies".to_string(), policies_json(&self.policies)),
+            ("metrics".to_string(), metrics_obj),
+        ];
+        if !self.trace.is_empty() {
+            fields.push((
+                "trace".to_string(),
+                Json::Arr(
+                    self.trace
+                        .records
+                        .iter()
+                        .map(|r| event_json(r.at, &r.kind))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::Obj(fields)
+    }
+}
+
+/// A sweep's results plus the headline metric text/CSV tables report.
+pub struct SweepRecord {
+    pub result: SweepResult,
+    pub metric: String,
+}
+
+impl SweepRecord {
+    pub fn new(result: SweepResult, metric: &str) -> SweepRecord {
+        SweepRecord { result, metric: metric.to_string() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("kind", Json::str("sweep")),
+            ("title", Json::str(&self.result.title)),
+            ("metric", Json::str(&self.metric)),
+            (
+                "points",
+                Json::Arr(self.result.points.iter().map(point_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// A what-if comparison: baseline vs scaled parameter.
+pub struct WhatIfRecord {
+    pub result: SweepResult,
+    pub param: String,
+    pub factor: f64,
+    pub metric: String,
+}
+
+impl WhatIfRecord {
+    /// (baseline mean, scaled mean, percent change) of the headline
+    /// metric, when both points have data.
+    pub fn delta(&self) -> Option<(f64, f64, f64)> {
+        let a = self.result.points.first()?.summary(&self.metric)?;
+        let b = self.result.points.get(1)?.summary(&self.metric)?;
+        Some((a.mean, b.mean, (b.mean / a.mean - 1.0) * 100.0))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("kind".to_string(), Json::str("whatif")),
+            ("param".to_string(), Json::str(&self.param)),
+            ("factor".to_string(), Json::Num(self.factor)),
+            ("metric".to_string(), Json::str(&self.metric)),
+        ];
+        if let Some((base, scaled, pct)) = self.delta() {
+            fields.push(("baseline_mean".to_string(), Json::Num(base)));
+            fields.push(("scaled_mean".to_string(), Json::Num(scaled)));
+            fields.push(("delta_pct".to_string(), Json::Num(pct)));
+        }
+        fields.push((
+            "points".to_string(),
+            Json::Arr(self.result.points.iter().map(point_json).collect()),
+        ));
+        Json::Obj(fields)
+    }
+}
+
+/// The analytical CTMC estimate vs the DES mean (`compare` scenarios).
+pub struct CompareRecord {
+    pub analytic: AnalyticOutputs,
+    pub des_makespan: Summary,
+    pub replications: usize,
+}
+
+impl CompareRecord {
+    /// |CTMC − DES| / DES, the headline agreement number.
+    pub fn relative_delta(&self) -> f64 {
+        (self.analytic.makespan_est - self.des_makespan.mean).abs()
+            / self.des_makespan.mean.max(1.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let a = &self.analytic;
+        Json::obj([
+            ("kind", Json::str("compare")),
+            ("replications", self.replications.into()),
+            (
+                "analytic",
+                Json::obj([
+                    ("avail_t", Json::Num(a.avail_t)),
+                    ("avail_avg", Json::Num(a.avail_avg)),
+                    ("frac_bad_t", Json::Num(a.frac_bad_t)),
+                    ("rbar", Json::Num(a.rbar)),
+                    ("exp_failures", Json::Num(a.exp_failures)),
+                    ("makespan_est", Json::Num(a.makespan_est)),
+                    ("overhead_frac", Json::Num(a.overhead_frac)),
+                    ("pi_retired", Json::Num(a.pi_retired)),
+                ]),
+            ),
+            ("des_makespan", summary_json(&self.des_makespan)),
+            ("relative_delta", Json::Num(self.relative_delta())),
+        ])
+    }
+}
+
+/// What a scenario produced, wrapped with the scenario's metadata.
+pub enum RecordBody {
+    Run(RunRecord),
+    Sweep(SweepRecord),
+    WhatIf(WhatIfRecord),
+    Compare(CompareRecord),
+}
+
+/// A scenario outcome: metadata + the kind-specific body record.
+pub struct ScenarioRecord {
+    pub title: String,
+    /// `single | sweep | whatif | inject | compare`.
+    pub kind: &'static str,
+    pub seed: u64,
+    pub policies: PolicySpec,
+    pub body: RecordBody,
+}
+
+impl ScenarioRecord {
+    pub fn to_json(&self) -> Json {
+        let body = match &self.body {
+            RecordBody::Run(r) => r.to_json(),
+            RecordBody::Sweep(r) => r.to_json(),
+            RecordBody::WhatIf(r) => r.to_json(),
+            RecordBody::Compare(r) => r.to_json(),
+        };
+        Json::obj([
+            ("kind", Json::str("scenario")),
+            ("scenario", Json::str(self.kind)),
+            ("title", Json::str(&self.title)),
+            ("seed", self.seed.into()),
+            ("policies", policies_json(&self.policies)),
+            ("result", body),
+        ])
+    }
+}
+
+/// `{selection, repair, checkpoint, failure}` by name.
+pub fn policies_json(spec: &PolicySpec) -> Json {
+    Json::obj([
+        ("selection", Json::str(&spec.selection)),
+        ("repair", Json::str(&spec.repair)),
+        ("checkpoint", Json::str(&spec.checkpoint)),
+        ("failure", Json::str(&spec.failure)),
+    ])
+}
+
+/// Full summary statistics of one metric.
+pub fn summary_json(s: &Summary) -> Json {
+    Json::obj([
+        ("n", s.n.into()),
+        ("mean", Json::Num(s.mean)),
+        ("std", Json::Num(s.std)),
+        ("min", Json::Num(s.min)),
+        ("p25", Json::Num(s.p25)),
+        ("median", Json::Num(s.median)),
+        ("p75", Json::Num(s.p75)),
+        ("p95", Json::Num(s.p95)),
+        ("p99", Json::Num(s.p99)),
+        ("max", Json::Num(s.max)),
+        ("ci95", Json::Num(s.ci95_halfwidth())),
+    ])
+}
+
+/// One sweep point: its label, typed axis overrides, and the summary of
+/// **every** registry metric at that point.
+pub fn point_json(pr: &PointResult) -> Json {
+    let overrides = Json::Obj(
+        pr.point
+            .overrides
+            .iter()
+            .map(|(n, v)| {
+                let jv = match v {
+                    AxisValue::Num(x) => Json::Num(*x),
+                    AxisValue::Name(s) => Json::str(s),
+                };
+                (n.clone(), jv)
+            })
+            .collect(),
+    );
+    let metrics_obj = Json::Obj(
+        metrics::REGISTRY
+            .iter()
+            .filter_map(|m| pr.summary(m.name).map(|s| (m.name.to_string(), summary_json(&s))))
+            .collect(),
+    );
+    Json::obj([
+        ("label", Json::str(pr.point.label())),
+        ("overrides", overrides),
+        ("metrics", metrics_obj),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::{run_sweep, Sweep};
+
+    #[test]
+    fn run_record_covers_every_metric() {
+        let p = Params::small_test();
+        let outputs = crate::model::cluster::Simulation::new(&p, 7).run();
+        let rec = RunRecord {
+            seed: 7,
+            params: p,
+            policies: PolicySpec::default(),
+            outputs,
+            trace: Trace::default(),
+        };
+        let names: Vec<&str> = rec.metric_values().map(|(m, _)| m.name).collect();
+        assert_eq!(names.len(), metrics::REGISTRY.len());
+        let rendered = rec.to_json().render();
+        for m in metrics::REGISTRY {
+            assert!(rendered.contains(&format!("\"{}\"", m.name)), "missing {}", m.name);
+        }
+        assert!(!rendered.contains("\"trace\""), "no trace key when untraced");
+    }
+
+    #[test]
+    fn point_json_labels_policy_axes() {
+        let base = Params::small_test();
+        let s = Sweep::from_axes(
+            "t",
+            &[("policies.selection".to_string(), vec!["locality".into()])],
+            1,
+            3,
+        );
+        let r = run_sweep(&base, &s, 1);
+        let j = point_json(&r.points[0]).render();
+        assert!(j.contains(r#""policies.selection":"locality""#), "{j}");
+        assert!(j.contains(r#""label":"policies.selection=locality""#), "{j}");
+    }
+}

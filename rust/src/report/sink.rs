@@ -1,0 +1,393 @@
+//! Output sinks: one [`Sink`] per `--format`, each rendering the whole
+//! record family ([`RunRecord`], [`SweepRecord`], [`WhatIfRecord`],
+//! [`CompareRecord`], [`ScenarioRecord`]).
+//!
+//! The text sink reproduces the pre-redesign CLI tables **byte for
+//! byte** (pinned by `tests/output_api.rs` against literal copies of the
+//! legacy format strings); the JSON/CSV/NDJSON sinks emit the machine
+//! form — every metric in the registry, with units, parseable without a
+//! schema.
+
+use crate::report::json::Json;
+use crate::report::record::{
+    CompareRecord, RecordBody, RunRecord, ScenarioRecord, SweepRecord, WhatIfRecord,
+};
+use crate::report::{csv, text_table};
+
+/// A selected output format (`--format {text|json|csv|ndjson}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    Text,
+    Json,
+    Csv,
+    Ndjson,
+}
+
+impl Format {
+    pub fn parse(s: &str) -> Result<Format, String> {
+        match s {
+            "text" => Ok(Format::Text),
+            "json" => Ok(Format::Json),
+            "csv" => Ok(Format::Csv),
+            "ndjson" => Ok(Format::Ndjson),
+            other => Err(format!(
+                "unknown format `{other}` (expected text, json, csv, or ndjson)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::Text => "text",
+            Format::Json => "json",
+            Format::Csv => "csv",
+            Format::Ndjson => "ndjson",
+        }
+    }
+
+    /// The sink implementing this format.
+    pub fn sink(self) -> &'static dyn Sink {
+        match self {
+            Format::Text => &TextSink,
+            Format::Json => &JsonSink,
+            Format::Csv => &CsvSink,
+            Format::Ndjson => &NdjsonSink,
+        }
+    }
+}
+
+/// Render any record of the output data model. Every method returns the
+/// complete output text (callers `print!` it verbatim).
+pub trait Sink {
+    fn run(&self, r: &RunRecord) -> String;
+    fn sweep(&self, r: &SweepRecord) -> String;
+    fn whatif(&self, r: &WhatIfRecord) -> String;
+    fn compare(&self, r: &CompareRecord) -> String;
+    fn scenario(&self, r: &ScenarioRecord) -> String;
+}
+
+// ------------------------------------------------------------------ //
+// Text: the legacy human tables, byte-identical.
+// ------------------------------------------------------------------ //
+
+pub struct TextSink;
+
+/// The `airesim run` output block (trace first, as the legacy CLI
+/// printed it).
+fn run_outputs_text(r: &RunRecord) -> String {
+    let out = &r.outputs;
+    let mut s = String::new();
+    if !r.trace.is_empty() {
+        s.push_str(&r.trace.render());
+    }
+    s.push_str(&format!("== run outputs (seed {}) ==\n", r.seed));
+    s.push_str(&format!(
+        "makespan           {:>14.2} min ({:.2} days)\n",
+        out.makespan,
+        out.makespan / 1440.0
+    ));
+    s.push_str(&format!("completed          {:>14}\n", out.completed));
+    s.push_str(&format!(
+        "failures           {:>14} (random {}, systematic {})\n",
+        out.failures_total, out.failures_random, out.failures_systematic
+    ));
+    s.push_str(&format!("standby swaps      {:>14}\n", out.standby_swaps));
+    s.push_str(&format!("host selections    {:>14}\n", out.host_selections));
+    s.push_str(&format!("preemptions        {:>14}\n", out.preemptions));
+    s.push_str(&format!(
+        "repairs            {:>14} auto, {} manual\n",
+        out.repairs_auto, out.repairs_manual
+    ));
+    s.push_str(&format!("retirements        {:>14}\n", out.retirements));
+    s.push_str(&format!("stall time         {:>14.2} min\n", out.stall_time));
+    s.push_str(&format!("recovery total     {:>14.2} min\n", out.recovery_total));
+    s.push_str(&format!("avg run duration   {:>14.2} min\n", out.avg_run_duration));
+    s.push_str(&format!(
+        "utilization        {:>14.4}\n",
+        out.utilization(r.params.job_len)
+    ));
+    s.push_str(&format!("events delivered   {:>14}\n", out.events_delivered));
+    s
+}
+
+/// The scenario-report output block (shorter than `airesim run`'s; the
+/// legacy `Scenario::render` format).
+fn scenario_outputs_text(r: &RunRecord) -> String {
+    let out = &r.outputs;
+    format!(
+        "makespan           {:>14.2} min ({:.2} days)\n\
+         completed          {:>14}\n\
+         failures           {:>14} (random {}, systematic {})\n\
+         standby swaps      {:>14}\n\
+         host selections    {:>14}\n\
+         preemptions        {:>14}\n\
+         repairs            {:>14} auto, {} manual\n\
+         stall time         {:>14.2} min\n\
+         utilization        {:>14.4}\n",
+        out.makespan,
+        out.makespan / 1440.0,
+        out.completed,
+        out.failures_total,
+        out.failures_random,
+        out.failures_systematic,
+        out.standby_swaps,
+        out.host_selections,
+        out.preemptions,
+        out.repairs_auto,
+        out.repairs_manual,
+        out.stall_time,
+        out.utilization(r.params.job_len)
+    )
+}
+
+fn whatif_delta_text(r: &WhatIfRecord) -> String {
+    match r.delta() {
+        Some((base, scaled, pct)) => format!(
+            "\nscaling {} by {} changes mean training time by {:+.2}% ({:.1}h -> {:.1}h)\n",
+            r.param, r.factor, pct, base, scaled
+        ),
+        None => String::new(),
+    }
+}
+
+impl Sink for TextSink {
+    fn run(&self, r: &RunRecord) -> String {
+        run_outputs_text(r)
+    }
+
+    fn sweep(&self, r: &SweepRecord) -> String {
+        text_table(&r.result, &r.metric)
+    }
+
+    fn whatif(&self, r: &WhatIfRecord) -> String {
+        format!("{}{}", text_table(&r.result, &r.metric), whatif_delta_text(r))
+    }
+
+    fn compare(&self, r: &CompareRecord) -> String {
+        format!(
+            "CTMC makespan_est  {:>14.1} min\n\
+             DES  mean makespan {:>14.1} min (±{:.1} 95% CI, {} reps)\n\
+             relative delta     {:>14.2}%\n",
+            r.analytic.makespan_est,
+            r.des_makespan.mean,
+            r.des_makespan.ci95_halfwidth(),
+            r.replications,
+            r.relative_delta() * 100.0
+        )
+    }
+
+    fn scenario(&self, r: &ScenarioRecord) -> String {
+        let mut s = format!(
+            "== scenario: {} [{}] ==\npolicies: selection={} repair={} checkpoint={} failure={}\n",
+            r.title,
+            r.kind,
+            r.policies.selection,
+            r.policies.repair,
+            r.policies.checkpoint,
+            r.policies.failure,
+        );
+        match &r.body {
+            RecordBody::Run(rr) => {
+                if !rr.trace.is_empty() {
+                    s.push_str(&rr.trace.render());
+                }
+                s.push_str(&scenario_outputs_text(rr));
+            }
+            RecordBody::Sweep(sr) => s.push_str(&self.sweep(sr)),
+            RecordBody::WhatIf(wr) => s.push_str(&self.whatif(wr)),
+            RecordBody::Compare(cr) => s.push_str(&self.compare(cr)),
+        }
+        s
+    }
+}
+
+// ------------------------------------------------------------------ //
+// JSON: one document per invocation.
+// ------------------------------------------------------------------ //
+
+pub struct JsonSink;
+
+impl Sink for JsonSink {
+    fn run(&self, r: &RunRecord) -> String {
+        r.to_json().render() + "\n"
+    }
+
+    fn sweep(&self, r: &SweepRecord) -> String {
+        r.to_json().render() + "\n"
+    }
+
+    fn whatif(&self, r: &WhatIfRecord) -> String {
+        r.to_json().render() + "\n"
+    }
+
+    fn compare(&self, r: &CompareRecord) -> String {
+        r.to_json().render() + "\n"
+    }
+
+    fn scenario(&self, r: &ScenarioRecord) -> String {
+        r.to_json().render() + "\n"
+    }
+}
+
+// ------------------------------------------------------------------ //
+// CSV: flat tables (the sweep form is the legacy `--csv` output).
+// ------------------------------------------------------------------ //
+
+pub struct CsvSink;
+
+impl Sink for CsvSink {
+    fn run(&self, r: &RunRecord) -> String {
+        let mut s = String::from("metric,unit,value\n");
+        for (m, v) in r.metric_values() {
+            s.push_str(&format!("{},{},{v}\n", m.name, m.unit));
+        }
+        s
+    }
+
+    fn sweep(&self, r: &SweepRecord) -> String {
+        csv(&r.result, &r.metric)
+    }
+
+    fn whatif(&self, r: &WhatIfRecord) -> String {
+        csv(&r.result, &r.metric)
+    }
+
+    fn compare(&self, r: &CompareRecord) -> String {
+        let a = &r.analytic;
+        let mut s = String::from("quantity,value\n");
+        s.push_str(&format!("ctmc_makespan_est,{}\n", a.makespan_est));
+        s.push_str(&format!("ctmc_exp_failures,{}\n", a.exp_failures));
+        s.push_str(&format!("des_mean_makespan,{}\n", r.des_makespan.mean));
+        s.push_str(&format!("des_ci95_halfwidth,{}\n", r.des_makespan.ci95_halfwidth()));
+        s.push_str(&format!("replications,{}\n", r.replications));
+        s.push_str(&format!("relative_delta,{}\n", r.relative_delta()));
+        s
+    }
+
+    fn scenario(&self, r: &ScenarioRecord) -> String {
+        match &r.body {
+            RecordBody::Run(rr) => self.run(rr),
+            RecordBody::Sweep(sr) => self.sweep(sr),
+            RecordBody::WhatIf(wr) => self.whatif(wr),
+            RecordBody::Compare(cr) => self.compare(cr),
+        }
+    }
+}
+
+// ------------------------------------------------------------------ //
+// NDJSON: one self-describing JSON object per line (`jq`-friendly).
+// ------------------------------------------------------------------ //
+
+pub struct NdjsonSink;
+
+fn ndjson_line(mut fields: Vec<(String, Json)>, type_name: &str) -> String {
+    fields.insert(0, ("type".to_string(), Json::str(type_name)));
+    Json::Obj(fields).render() + "\n"
+}
+
+/// One `{"type":"point",...}` line per sweep point.
+fn point_lines(result: &crate::sweep::SweepResult) -> String {
+    let mut s = String::new();
+    for (i, pr) in result.points.iter().enumerate() {
+        match crate::report::record::point_json(pr) {
+            Json::Obj(mut fields) => {
+                fields.insert(0, ("index".to_string(), i.into()));
+                s.push_str(&ndjson_line(fields, "point"));
+            }
+            other => s.push_str(&(other.render() + "\n")),
+        }
+    }
+    s
+}
+
+impl Sink for NdjsonSink {
+    fn run(&self, r: &RunRecord) -> String {
+        // Event lines share `Trace::to_ndjson`'s schema exactly, so a
+        // `--trace-out` file and a traced `--format ndjson` stream are
+        // filterable by the same `jq` program.
+        let mut s = r.trace.to_ndjson();
+        for (m, v) in r.metric_values() {
+            s.push_str(&ndjson_line(
+                vec![
+                    ("name".to_string(), Json::str(m.name)),
+                    ("unit".to_string(), Json::str(m.unit)),
+                    ("value".to_string(), Json::Num(v)),
+                ],
+                "metric",
+            ));
+        }
+        s
+    }
+
+    fn sweep(&self, r: &SweepRecord) -> String {
+        point_lines(&r.result)
+    }
+
+    fn whatif(&self, r: &WhatIfRecord) -> String {
+        let mut s = point_lines(&r.result);
+        let mut fields = vec![
+            ("param".to_string(), Json::str(&r.param)),
+            ("factor".to_string(), Json::Num(r.factor)),
+            ("metric".to_string(), Json::str(&r.metric)),
+        ];
+        if let Some((base, scaled, pct)) = r.delta() {
+            fields.push(("baseline_mean".to_string(), Json::Num(base)));
+            fields.push(("scaled_mean".to_string(), Json::Num(scaled)));
+            fields.push(("delta_pct".to_string(), Json::Num(pct)));
+        }
+        s.push_str(&ndjson_line(fields, "whatif"));
+        s
+    }
+
+    fn compare(&self, r: &CompareRecord) -> String {
+        match r.to_json() {
+            Json::Obj(fields) => ndjson_line(
+                fields.into_iter().filter(|(k, _)| k != "kind").collect(),
+                "compare",
+            ),
+            other => other.render() + "\n",
+        }
+    }
+
+    fn scenario(&self, r: &ScenarioRecord) -> String {
+        let meta = ndjson_line(
+            vec![
+                ("scenario".to_string(), Json::str(r.kind)),
+                ("title".to_string(), Json::str(&r.title)),
+                ("seed".to_string(), r.seed.into()),
+                (
+                    "policies".to_string(),
+                    crate::report::record::policies_json(&r.policies),
+                ),
+            ],
+            "scenario",
+        );
+        let body = match &r.body {
+            RecordBody::Run(rr) => self.run(rr),
+            RecordBody::Sweep(sr) => self.sweep(sr),
+            RecordBody::WhatIf(wr) => self.whatif(wr),
+            RecordBody::Compare(cr) => self.compare(cr),
+        };
+        meta + &body
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_parses_and_names() {
+        for (s, f) in [
+            ("text", Format::Text),
+            ("json", Format::Json),
+            ("csv", Format::Csv),
+            ("ndjson", Format::Ndjson),
+        ] {
+            assert_eq!(Format::parse(s).unwrap(), f);
+            assert_eq!(f.name(), s);
+        }
+        let err = Format::parse("xml").unwrap_err();
+        assert!(err.contains("ndjson"), "{err}");
+    }
+}

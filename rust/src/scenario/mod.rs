@@ -26,17 +26,21 @@
 //!
 //! `Scenario::run` executes the spec (sweeps through the batched
 //! [`crate::model::ReplicationRunner`] worker pool) and returns a typed
-//! [`ScenarioOutcome`]; `render` turns the outcome into the CLI's text
-//! report.
+//! [`ScenarioOutcome`]; [`Scenario::record`] wraps the outcome in the
+//! structured-report data model so any `--format` sink can render it
+//! (`render` is the text-sink shorthand).
 
 use crate::analytical::{self, AnalyticOutputs};
 use crate::config::{validate, yaml, Params};
 use crate::model::cluster::{ReplicationRunner, Simulation};
 use crate::model::events::FailureKind;
 use crate::model::{PolicySpec, RunOutputs};
-use crate::report;
+use crate::report::{
+    CompareRecord, Format, RecordBody, RunRecord, ScenarioRecord, Sink, SweepRecord,
+    WhatIfRecord,
+};
 use crate::sim::rng::Rng;
-use crate::stats::Summary;
+use crate::stats::{metrics, Summary};
 use crate::sweep::{policies_from_doc, run_sweep, sweep_from_doc, Sweep, SweepResult};
 use crate::trace::inject::{Injection, InjectionPlan};
 use crate::trace::Trace;
@@ -68,6 +72,7 @@ pub struct Scenario {
 }
 
 /// The typed result of running a scenario.
+#[derive(Clone)]
 pub enum ScenarioOutcome {
     Single { outputs: RunOutputs, trace: Trace },
     Sweep(SweepResult),
@@ -208,6 +213,9 @@ impl Scenario {
                 // `--seed` overrides arrive after parse time; keep the
                 // sweep's master seed in lockstep with the scenario's.
                 sweep.master_seed = self.seed;
+                // Policy axes may interact with the params (e.g. `gang`
+                // needs exponential clocks): fail here, not in a worker.
+                sweep.validate(&self.params)?;
                 Ok(ScenarioOutcome::Sweep(run_sweep(&self.params, &sweep, self.threads)))
             }
             ScenarioKind::WhatIf { param, factor, replications } => {
@@ -265,60 +273,54 @@ impl Scenario {
         }
     }
 
-    /// Render an outcome as the CLI's text report.
-    pub fn render(&self, outcome: &ScenarioOutcome) -> String {
-        let mut s = String::new();
-        s.push_str(&format!(
-            "== scenario: {} [{}] ==\npolicies: selection={} repair={} checkpoint={} failure={}\n",
-            self.title,
-            kind_name(&self.kind),
-            self.policies.selection,
-            self.policies.repair,
-            self.policies.checkpoint,
-            self.policies.failure,
-        ));
-        match outcome {
+    /// Wrap an owned outcome in the structured-report data model (no
+    /// copies — a long trace moves straight into the record): any
+    /// [`Sink`] renders the returned record (`--format`).
+    pub fn record_owned(&self, outcome: ScenarioOutcome) -> ScenarioRecord {
+        let body = match outcome {
             ScenarioOutcome::Single { outputs, trace }
-            | ScenarioOutcome::Inject { outputs, trace } => {
-                if !trace.is_empty() {
-                    s.push_str(&trace.render());
-                }
-                s.push_str(&render_outputs(outputs, &self.params));
-            }
+            | ScenarioOutcome::Inject { outputs, trace } => RecordBody::Run(RunRecord {
+                seed: self.seed,
+                params: self.params.clone(),
+                policies: self.policies.clone(),
+                outputs,
+                trace,
+            }),
             ScenarioOutcome::Sweep(result) => {
-                s.push_str(&report::text_table(result, "makespan_hours"));
+                RecordBody::Sweep(SweepRecord::new(result, metrics::DEFAULT_METRIC))
             }
             ScenarioOutcome::WhatIf { result, param, factor } => {
-                s.push_str(&report::text_table(result, "makespan_hours"));
-                if let (Some(a), Some(b)) = (
-                    result.points[0].summary("makespan_hours"),
-                    result.points[1].summary("makespan_hours"),
-                ) {
-                    s.push_str(&format!(
-                        "\nscaling {param} by {factor} changes mean training time by \
-                         {:+.2}% ({:.1}h -> {:.1}h)\n",
-                        (b.mean / a.mean - 1.0) * 100.0,
-                        a.mean,
-                        b.mean
-                    ));
-                }
+                RecordBody::WhatIf(WhatIfRecord {
+                    result,
+                    param,
+                    factor,
+                    metric: metrics::DEFAULT_METRIC.to_string(),
+                })
             }
             ScenarioOutcome::Compare { analytic, des_makespan, replications } => {
-                let rel = (analytic.makespan_est - des_makespan.mean).abs()
-                    / des_makespan.mean.max(1.0);
-                s.push_str(&format!(
-                    "CTMC makespan_est  {:>14.1} min\n\
-                     DES  mean makespan {:>14.1} min (±{:.1} 95% CI, {} reps)\n\
-                     relative delta     {:>14.2}%\n",
-                    analytic.makespan_est,
-                    des_makespan.mean,
-                    des_makespan.ci95_halfwidth(),
-                    replications,
-                    rel * 100.0
-                ));
+                RecordBody::Compare(CompareRecord { analytic, des_makespan, replications })
             }
+        };
+        ScenarioRecord {
+            title: self.title.clone(),
+            kind: kind_name(&self.kind),
+            seed: self.seed,
+            policies: self.policies.clone(),
+            body,
         }
-        s
+    }
+
+    /// Borrowing convenience over [`Scenario::record_owned`] (clones the
+    /// outcome; prefer `record_owned` when the outcome is no longer
+    /// needed).
+    pub fn record(&self, outcome: &ScenarioOutcome) -> ScenarioRecord {
+        self.record_owned(outcome.clone())
+    }
+
+    /// Render an outcome as the CLI's text report (the text sink over
+    /// [`Scenario::record`] — byte-identical to the pre-redesign report).
+    pub fn render(&self, outcome: &ScenarioOutcome) -> String {
+        Format::Text.sink().scenario(&self.record(outcome))
     }
 }
 
@@ -351,33 +353,6 @@ fn parse_injection(item: &yaml::Value) -> Result<Injection, String> {
         other => return Err(format!("unknown failure kind `{other}`")),
     };
     Ok(Injection::for_job(job, at, victim, kind))
-}
-
-fn render_outputs(out: &RunOutputs, p: &Params) -> String {
-    format!(
-        "makespan           {:>14.2} min ({:.2} days)\n\
-         completed          {:>14}\n\
-         failures           {:>14} (random {}, systematic {})\n\
-         standby swaps      {:>14}\n\
-         host selections    {:>14}\n\
-         preemptions        {:>14}\n\
-         repairs            {:>14} auto, {} manual\n\
-         stall time         {:>14.2} min\n\
-         utilization        {:>14.4}\n",
-        out.makespan,
-        out.makespan / 1440.0,
-        out.completed,
-        out.failures_total,
-        out.failures_random,
-        out.failures_systematic,
-        out.standby_swaps,
-        out.host_selections,
-        out.preemptions,
-        out.repairs_auto,
-        out.repairs_manual,
-        out.stall_time,
-        out.utilization(p.job_len)
-    )
 }
 
 #[cfg(test)]

@@ -1,0 +1,234 @@
+//! The metric registry: one central table describing every output metric
+//! the simulator reports.
+//!
+//! Before this registry, metric names were free-floating strings — the
+//! sweep collector pushed one hand-written line per metric, the CLI
+//! accepted any `--metric` and silently produced "(no data)" on a typo,
+//! and nothing recorded units or meaning. Every consumer now resolves
+//! names through [`REGISTRY`]:
+//!
+//! * [`crate::sweep::collect_outputs`] iterates it to populate the
+//!   per-point [`crate::stats::Collector`];
+//! * the JSON/CSV/NDJSON sinks in [`crate::report`] emit exactly the
+//!   registry's metrics, with units;
+//! * `airesim list-metrics` prints it;
+//! * the CLI validates `--metric` against [`find`] and fails with the
+//!   full name list instead of producing an empty table.
+//!
+//! Adding a metric is one [`Metric`] entry here — collectors, sinks, and
+//! the CLI pick it up automatically.
+
+use crate::config::Params;
+use crate::model::outputs::RunOutputs;
+
+/// One registered output metric.
+pub struct Metric {
+    /// Stable name (the `--metric` / collector / JSON key).
+    pub name: &'static str,
+    /// Unit label (`min`, `h`, `count`, `ratio`, `bool`).
+    pub unit: &'static str,
+    /// One-line meaning, shown by `list-metrics`.
+    pub doc: &'static str,
+    /// Pure extractor from one run's outputs.
+    pub extract: fn(&Params, &RunOutputs) -> f64,
+}
+
+/// The default headline metric for sweep tables and what-if reports.
+pub const DEFAULT_METRIC: &str = "makespan_hours";
+
+/// Every metric the simulator reports, in presentation order.
+pub const REGISTRY: &[Metric] = &[
+    Metric {
+        name: "makespan",
+        unit: "min",
+        doc: "total time to train all jobs (the last job's finish time)",
+        extract: |_, o| o.makespan,
+    },
+    Metric {
+        name: "makespan_hours",
+        unit: "h",
+        doc: "makespan in hours",
+        extract: |_, o| o.makespan / 60.0,
+    },
+    Metric {
+        name: "completed",
+        unit: "bool",
+        doc: "1 if every job finished before max_sim_time, else 0",
+        extract: |_, o| if o.completed { 1.0 } else { 0.0 },
+    },
+    Metric {
+        name: "failures_total",
+        unit: "count",
+        doc: "failures of both kinds across all jobs",
+        extract: |_, o| o.failures_total as f64,
+    },
+    Metric {
+        name: "failures_random",
+        unit: "count",
+        doc: "random (transient) failures",
+        extract: |_, o| o.failures_random as f64,
+    },
+    Metric {
+        name: "failures_systematic",
+        unit: "count",
+        doc: "systematic failures caused by bad servers",
+        extract: |_, o| o.failures_systematic as f64,
+    },
+    Metric {
+        name: "preemptions",
+        unit: "count",
+        doc: "spare-pool preemptions of other jobs' servers",
+        extract: |_, o| o.preemptions as f64,
+    },
+    Metric {
+        name: "preemption_cost",
+        unit: "min",
+        doc: "other-job work destroyed by preemptions (assumption 7)",
+        extract: |_, o| o.preemption_cost,
+    },
+    Metric {
+        name: "repairs_auto",
+        unit: "count",
+        doc: "repairs resolved at the automated stage",
+        extract: |_, o| o.repairs_auto as f64,
+    },
+    Metric {
+        name: "repairs_manual",
+        unit: "count",
+        doc: "repairs escalated to and completed by technicians",
+        extract: |_, o| o.repairs_manual as f64,
+    },
+    Metric {
+        name: "avg_run_duration",
+        unit: "min",
+        doc: "mean uninterrupted running burst between failures",
+        extract: |_, o| o.avg_run_duration,
+    },
+    Metric {
+        name: "host_selections",
+        unit: "count",
+        doc: "full host selections (standbys exhausted)",
+        extract: |_, o| o.host_selections as f64,
+    },
+    Metric {
+        name: "standby_swaps",
+        unit: "count",
+        doc: "failures absorbed by a warm-standby swap",
+        extract: |_, o| o.standby_swaps as f64,
+    },
+    Metric {
+        name: "stall_time",
+        unit: "min",
+        doc: "total time jobs sat stalled waiting for servers",
+        extract: |_, o| o.stall_time,
+    },
+    Metric {
+        name: "recovery_total",
+        unit: "min",
+        doc: "total time in checkpoint-restore recovery",
+        extract: |_, o| o.recovery_total,
+    },
+    Metric {
+        name: "retirements",
+        unit: "count",
+        doc: "servers permanently retired by the failure score",
+        extract: |_, o| o.retirements as f64,
+    },
+    Metric {
+        name: "undiagnosed",
+        unit: "count",
+        doc: "failures where no server could be blamed",
+        extract: |_, o| o.undiagnosed as f64,
+    },
+    Metric {
+        name: "wrong_diagnoses",
+        unit: "count",
+        doc: "failures where a healthy server was blamed",
+        extract: |_, o| o.wrong_diagnoses as f64,
+    },
+    Metric {
+        name: "regenerated_bad",
+        unit: "count",
+        doc: "servers turned bad by regeneration ticks",
+        extract: |_, o| o.regenerated_bad as f64,
+    },
+    Metric {
+        name: "work_lost",
+        unit: "min",
+        doc: "useful work lost to checkpoint granularity",
+        extract: |_, o| o.work_lost,
+    },
+    Metric {
+        name: "utilization",
+        unit: "ratio",
+        doc: "failure-free job length / makespan",
+        extract: |p, o| o.utilization(p.job_len),
+    },
+    Metric {
+        name: "events_delivered",
+        unit: "count",
+        doc: "events the engine delivered (perf accounting)",
+        extract: |_, o| o.events_delivered as f64,
+    },
+];
+
+/// Look a metric up by name.
+pub fn find(name: &str) -> Option<&'static Metric> {
+    REGISTRY.iter().find(|m| m.name == name)
+}
+
+/// All registered metric names, in registry order.
+pub fn names() -> impl Iterator<Item = &'static str> {
+    REGISTRY.iter().map(|m| m.name)
+}
+
+/// Resolve `--metric` input: the metric, or an error naming every
+/// valid choice (replaces the old silent "(no data)" table on a typo).
+pub fn resolve(name: &str) -> Result<&'static Metric, String> {
+    find(name).ok_or_else(|| {
+        format!(
+            "unknown metric `{name}` (see `airesim list-metrics`; expected one of {})",
+            names().collect::<Vec<_>>().join(", ")
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for m in REGISTRY {
+            assert!(seen.insert(m.name), "duplicate metric {}", m.name);
+            assert!(!m.unit.is_empty() && !m.doc.is_empty(), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn find_and_resolve() {
+        assert_eq!(find("makespan").unwrap().unit, "min");
+        assert!(find("bogus").is_none());
+        assert!(resolve(DEFAULT_METRIC).is_ok());
+        let err = resolve("makespam").unwrap_err();
+        assert!(err.contains("list-metrics") && err.contains("makespan"), "{err}");
+    }
+
+    #[test]
+    fn extractors_cover_outputs() {
+        let p = Params::small_test();
+        let o = RunOutputs {
+            makespan: 120.0,
+            completed: true,
+            failures_total: 3,
+            ..Default::default()
+        };
+        let get = |n: &str| (find(n).unwrap().extract)(&p, &o);
+        assert_eq!(get("makespan"), 120.0);
+        assert_eq!(get("makespan_hours"), 2.0);
+        assert_eq!(get("completed"), 1.0);
+        assert_eq!(get("failures_total"), 3.0);
+        assert_eq!(get("utilization"), o.utilization(p.job_len));
+    }
+}

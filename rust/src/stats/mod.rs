@@ -1,5 +1,11 @@
 //! Output statistics (§III-B): "common statistics such as mean, median,
 //! standard deviation and order percentiles for each of the outputs."
+//!
+//! [`metrics`] holds the central registry naming every reported output;
+//! the [`Collector`]/[`Summary`] machinery here reduces registry metrics
+//! across replications.
+
+pub mod metrics;
 
 use std::collections::BTreeMap;
 

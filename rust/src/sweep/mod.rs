@@ -1,5 +1,11 @@
-//! Parameter sweeps (§III-D): one-way and two-way sweeps with replications,
-//! run in parallel across OS threads.
+//! Parameter sweeps (§III-D): one- or multi-axis sweeps with
+//! replications, run in parallel across OS threads.
+//!
+//! Axes are **typed**: a sweep point's overrides hold [`AxisValue`]s — a
+//! number for the Table-I knobs, or a *name* for policy axes. A `sweep:`
+//! spec can therefore cross-product `policies.selection` alongside
+//! `recovery_time`, and the record/report layer labels both in the same
+//! tables.
 //!
 //! Seed discipline: replication `r` of point `i` uses
 //! `Rng::derived(master_seed, &[i, r])`, so changing the swept values or
@@ -12,15 +18,47 @@ use crate::config::Params;
 use crate::model::cluster::ReplicationRunner;
 use crate::model::{PolicySpec, RunOutputs};
 use crate::sim::rng::Rng;
-use crate::stats::{Collector, Summary};
+use crate::stats::{metrics, Collector, Summary};
+use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// One point of a sweep: the overridden parameter values and its label.
+/// One value of one sweep axis: a numeric parameter value, or a policy
+/// (or other registry) name for `policies.*` axes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AxisValue {
+    Num(f64),
+    Name(String),
+}
+
+impl fmt::Display for AxisValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AxisValue::Num(v) => write!(f, "{v}"),
+            AxisValue::Name(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl From<f64> for AxisValue {
+    fn from(v: f64) -> Self {
+        AxisValue::Num(v)
+    }
+}
+
+impl From<&str> for AxisValue {
+    fn from(s: &str) -> Self {
+        AxisValue::Name(s.to_string())
+    }
+}
+
+/// One point of a sweep: the overridden axis values and its label.
+/// Numeric names address [`Params`] fields; `policies.<axis>` names
+/// address [`PolicySpec`] axes.
 #[derive(Clone, Debug)]
 pub struct SweepPoint {
-    /// (parameter name, value) overrides applied to the base params.
-    pub overrides: Vec<(String, f64)>,
+    /// (axis name, value) overrides applied to the base params/policies.
+    pub overrides: Vec<(String, AxisValue)>,
 }
 
 impl SweepPoint {
@@ -32,17 +70,55 @@ impl SweepPoint {
             .join(", ")
     }
 
+    /// Apply the *numeric* overrides to a parameter set (policy axes are
+    /// skipped — the analytic prescreen layer is policy-blind).
     pub fn apply(&self, base: &Params) -> Params {
         let mut p = base.clone();
         for (name, value) in &self.overrides {
-            let ok = p.set_by_name(name, *value);
-            assert!(ok, "unknown sweep parameter `{name}`");
+            if let AxisValue::Num(v) = value {
+                let ok = p.set_by_name(name, *v);
+                assert!(ok, "unknown sweep parameter `{name}`");
+            }
         }
         p
     }
+
+    /// Apply every override: numeric axes onto `base`, `policies.*` axes
+    /// onto `policies`. This is the sweep workers' entry point; validate
+    /// with [`Sweep::validate`] first so workers never see an error.
+    pub fn apply_full(
+        &self,
+        base: &Params,
+        policies: &PolicySpec,
+    ) -> Result<(Params, PolicySpec), String> {
+        let mut p = base.clone();
+        let mut spec = policies.clone();
+        for (name, value) in &self.overrides {
+            match (name.strip_prefix("policies."), value) {
+                (Some(axis), AxisValue::Name(v)) => spec.set(axis, v)?,
+                (Some(_), AxisValue::Num(v)) => {
+                    return Err(format!(
+                        "policy axis `{name}` needs a policy name, got `{v}`"
+                    ))
+                }
+                (None, AxisValue::Num(v)) => {
+                    if !p.set_by_name(name, *v) {
+                        return Err(format!("unknown sweep parameter `{name}`"));
+                    }
+                }
+                (None, AxisValue::Name(v)) => {
+                    return Err(format!(
+                        "parameter `{name}` needs a numeric value, got `{v}`"
+                    ))
+                }
+            }
+        }
+        Ok((p, spec))
+    }
 }
 
-/// A sweep specification (§III-D: `OneWaySweep` / `TwoWaySweep`).
+/// A sweep specification (§III-D: `OneWaySweep` / `TwoWaySweep`, plus
+/// policy axes).
 #[derive(Clone, Debug)]
 pub struct Sweep {
     /// Human-readable experiment title.
@@ -55,12 +131,12 @@ pub struct Sweep {
     /// Off by default: independent streams per (point, replication).
     pub crn: bool,
     /// Named policy selection applied at every point (defaults to the
-    /// paper's policies). Policy axes sweep alongside numeric ones.
+    /// paper's policies); `policies.*` axes override per point.
     pub policies: PolicySpec,
 }
 
 impl Sweep {
-    /// Vary one parameter (the paper's
+    /// Vary one numeric parameter (the paper's
     /// `OneWaySweep("...", "name", [v...])`).
     pub fn one_way(
         title: &str,
@@ -69,12 +145,55 @@ impl Sweep {
         replications: usize,
         master_seed: u64,
     ) -> Sweep {
+        let axis: Vec<AxisValue> = values.iter().map(|&v| v.into()).collect();
+        Sweep::from_axes(title, &[(name.to_string(), axis)], replications, master_seed)
+    }
+
+    /// Vary two numeric parameters over their cross product (x-major
+    /// order).
+    pub fn two_way(
+        title: &str,
+        x_name: &str,
+        x_values: &[f64],
+        y_name: &str,
+        y_values: &[f64],
+        replications: usize,
+        master_seed: u64,
+    ) -> Sweep {
+        let x: Vec<AxisValue> = x_values.iter().map(|&v| v.into()).collect();
+        let y: Vec<AxisValue> = y_values.iter().map(|&v| v.into()).collect();
+        Sweep::from_axes(
+            title,
+            &[(x_name.to_string(), x), (y_name.to_string(), y)],
+            replications,
+            master_seed,
+        )
+    }
+
+    /// Cross-product any number of typed axes (first axis outermost —
+    /// matches [`Sweep::two_way`]'s x-major order). Numeric and
+    /// `policies.*` axes mix freely.
+    pub fn from_axes(
+        title: &str,
+        axes: &[(String, Vec<AxisValue>)],
+        replications: usize,
+        master_seed: u64,
+    ) -> Sweep {
+        let mut points = vec![SweepPoint { overrides: Vec::new() }];
+        for (name, values) in axes {
+            let mut next = Vec::with_capacity(points.len() * values.len().max(1));
+            for stem in &points {
+                for v in values {
+                    let mut overrides = stem.overrides.clone();
+                    overrides.push((name.clone(), v.clone()));
+                    next.push(SweepPoint { overrides });
+                }
+            }
+            points = next;
+        }
         Sweep {
             title: title.to_string(),
-            points: values
-                .iter()
-                .map(|&v| SweepPoint { overrides: vec![(name.to_string(), v)] })
-                .collect(),
+            points,
             replications,
             master_seed,
             crn: false,
@@ -88,41 +207,26 @@ impl Sweep {
         self
     }
 
-    /// Run every point under the given named policies.
+    /// Run every point under the given named policies (per-point
+    /// `policies.*` axes override individual axes on top).
     pub fn with_policies(mut self, policies: PolicySpec) -> Self {
         self.policies = policies;
         self
     }
 
-    /// Vary two parameters over their cross product (x-major order).
-    pub fn two_way(
-        title: &str,
-        x_name: &str,
-        x_values: &[f64],
-        y_name: &str,
-        y_values: &[f64],
-        replications: usize,
-        master_seed: u64,
-    ) -> Sweep {
-        let mut points = Vec::new();
-        for &x in x_values {
-            for &y in y_values {
-                points.push(SweepPoint {
-                    overrides: vec![
-                        (x_name.to_string(), x),
-                        (y_name.to_string(), y),
-                    ],
-                });
-            }
+    /// Check every point up front: unknown parameter names, mistyped
+    /// axis values, and policy specs that cannot build against the swept
+    /// params (e.g. `failure=gang` with Weibull clocks) become one clean
+    /// error here instead of a worker-thread panic mid-sweep.
+    pub fn validate(&self, base: &Params) -> Result<(), String> {
+        for pt in &self.points {
+            let (p, spec) = pt
+                .apply_full(base, &self.policies)
+                .map_err(|e| format!("sweep point `{}`: {e}", pt.label()))?;
+            spec.build(&p)
+                .map_err(|e| format!("sweep point `{}`: {e}", pt.label()))?;
         }
-        Sweep {
-            title: title.to_string(),
-            points,
-            replications,
-            master_seed,
-            crn: false,
-            policies: PolicySpec::default(),
-        }
+        Ok(())
     }
 }
 
@@ -148,12 +252,13 @@ pub fn policies_from_doc(doc: &crate::config::yaml::Value) -> Result<PolicySpec,
 }
 
 /// Build a sweep from a parsed config document's `sweep:` section
-/// (§III-D's experiment files):
+/// (§III-D's experiment files). Axes are numeric parameters or
+/// `policies.<axis>` names:
 ///
 /// ```yaml
 /// sweep:
 ///   kind: two_way            # or one_way
-///   x: { name: recovery_time, values: [10, 20, 30] }
+///   x: { name: policies.selection, values: [first_fit, locality] }
 ///   y: { name: working_pool, values: [4112, 4128, 4160, 4192] }
 /// replications: 30
 /// seed: 42
@@ -174,16 +279,41 @@ pub fn sweep_from_doc(
         .and_then(|v| v.as_f64())
         .map(|v| v as u64)
         .unwrap_or(default_seed);
-    let axis = |key: &str| -> Result<(String, Vec<f64>), String> {
+    let axis = |key: &str| -> Result<(String, Vec<AxisValue>), String> {
         let a = sweep.get(key).ok_or_else(|| format!("sweep.{key} missing"))?;
         let name = a
             .get("name")
             .and_then(|v| v.as_str())
             .ok_or_else(|| format!("sweep.{key}.name missing"))?;
-        let values = a
+        let raw = a
             .get("values")
-            .and_then(|v| v.as_f64_list())
             .ok_or_else(|| format!("sweep.{key}.values missing"))?;
+        let values = match name.strip_prefix("policies.") {
+            // Policy axis: a list of names, each validated against the
+            // policy registry at parse time.
+            Some(axis_name) => {
+                let list = raw
+                    .as_list()
+                    .ok_or_else(|| format!("sweep.{key}.values must be a list"))?;
+                let mut out = Vec::with_capacity(list.len());
+                for v in list {
+                    let s = v.as_str().ok_or_else(|| {
+                        format!("sweep.{key}.values: expected policy names")
+                    })?;
+                    PolicySpec::default()
+                        .set(axis_name, s)
+                        .map_err(|e| format!("sweep.{key}: {e}"))?;
+                    out.push(AxisValue::Name(s.to_string()));
+                }
+                out
+            }
+            None => raw
+                .as_f64_list()
+                .ok_or_else(|| format!("sweep.{key}.values missing"))?
+                .into_iter()
+                .map(AxisValue::Num)
+                .collect(),
+        };
         Ok((name.to_string(), values))
     };
     // NOTE: the doc's `policies:` section is deliberately NOT attached
@@ -194,12 +324,18 @@ pub fn sweep_from_doc(
     match kind {
         "one_way" => {
             let (name, values) = axis("x")?;
-            Ok(Sweep::one_way(&name.clone(), &name, &values, reps, seed))
+            let title = name.clone();
+            Ok(Sweep::from_axes(&title, &[(name, values)], reps, seed))
         }
         "two_way" => {
             let (xn, xv) = axis("x")?;
             let (yn, yv) = axis("y")?;
-            Ok(Sweep::two_way(&format!("{xn} x {yn}"), &xn, &xv, &yn, &yv, reps, seed))
+            Ok(Sweep::from_axes(
+                &format!("{xn} x {yn}"),
+                &[(xn, xv), (yn, yv)],
+                reps,
+                seed,
+            ))
         }
         other => Err(format!("unknown sweep kind `{other}`")),
     }
@@ -225,29 +361,12 @@ pub struct SweepResult {
     pub points: Vec<PointResult>,
 }
 
-/// Push one run's outputs into a metric collector.
+/// Push one run's outputs into a metric collector — every metric in the
+/// central registry ([`crate::stats::metrics::REGISTRY`]), nothing else.
 pub fn collect_outputs(c: &mut Collector, p: &Params, o: &RunOutputs) {
-    c.push("makespan", o.makespan);
-    c.push("makespan_hours", o.makespan / 60.0);
-    c.push("completed", if o.completed { 1.0 } else { 0.0 });
-    c.push("failures_total", o.failures_total as f64);
-    c.push("failures_random", o.failures_random as f64);
-    c.push("failures_systematic", o.failures_systematic as f64);
-    c.push("preemptions", o.preemptions as f64);
-    c.push("preemption_cost", o.preemption_cost);
-    c.push("repairs_auto", o.repairs_auto as f64);
-    c.push("repairs_manual", o.repairs_manual as f64);
-    c.push("avg_run_duration", o.avg_run_duration);
-    c.push("host_selections", o.host_selections as f64);
-    c.push("standby_swaps", o.standby_swaps as f64);
-    c.push("stall_time", o.stall_time);
-    c.push("recovery_total", o.recovery_total);
-    c.push("retirements", o.retirements as f64);
-    c.push("undiagnosed", o.undiagnosed as f64);
-    c.push("wrong_diagnoses", o.wrong_diagnoses as f64);
-    c.push("work_lost", o.work_lost);
-    c.push("utilization", o.utilization(p.job_len));
-    c.push("events_delivered", o.events_delivered as f64);
+    for m in metrics::REGISTRY {
+        c.push(m.name, (m.extract)(p, o));
+    }
 }
 
 /// Run one replication of one point on a (reusable) runner.
@@ -258,7 +377,9 @@ fn run_one(
     point_idx: usize,
     rep: usize,
 ) -> (Params, RunOutputs) {
-    let p = sweep.points[point_idx].apply(base);
+    let (p, spec) = sweep.points[point_idx]
+        .apply_full(base, &sweep.policies)
+        .expect("sweep validated before running");
     // CRN: drop the point index from the stream path so every point sees
     // the same draws at replication `rep`.
     let rng = if sweep.crn {
@@ -266,7 +387,7 @@ fn run_one(
     } else {
         Rng::derived(sweep.master_seed, &[point_idx as u64, rep as u64])
     };
-    let out = runner.run(&p, &sweep.policies, rng);
+    let out = runner.run(&p, &spec, rng);
     (p, out)
 }
 
@@ -330,7 +451,10 @@ mod tests {
     fn one_way_points() {
         let s = Sweep::one_way("t", "recovery_time", &[10.0, 20.0, 30.0], 5, 1);
         assert_eq!(s.points.len(), 3);
-        assert_eq!(s.points[1].overrides, vec![("recovery_time".into(), 20.0)]);
+        assert_eq!(
+            s.points[1].overrides,
+            vec![("recovery_time".to_string(), AxisValue::Num(20.0))]
+        );
         assert_eq!(s.points[1].label(), "recovery_time=20");
     }
 
@@ -339,22 +463,108 @@ mod tests {
         let s = Sweep::two_way("t", "a_x", &[1.0, 2.0], "warm_standbys", &[4.0, 8.0, 16.0], 1, 1);
         assert_eq!(s.points.len(), 6);
         // x-major order.
-        assert_eq!(s.points[0].overrides[0].1, 1.0);
-        assert_eq!(s.points[0].overrides[1].1, 4.0);
-        assert_eq!(s.points[2].overrides[1].1, 16.0);
-        assert_eq!(s.points[3].overrides[0].1, 2.0);
+        assert_eq!(s.points[0].overrides[0].1, AxisValue::Num(1.0));
+        assert_eq!(s.points[0].overrides[1].1, AxisValue::Num(4.0));
+        assert_eq!(s.points[2].overrides[1].1, AxisValue::Num(16.0));
+        assert_eq!(s.points[3].overrides[0].1, AxisValue::Num(2.0));
     }
 
     #[test]
     fn apply_overrides() {
         let base = Params::small_test();
         let point = SweepPoint {
-            overrides: vec![("recovery_time".into(), 99.0), ("warm_standbys".into(), 2.0)],
+            overrides: vec![
+                ("recovery_time".into(), 99.0.into()),
+                ("warm_standbys".into(), 2.0.into()),
+            ],
         };
         let p = point.apply(&base);
         assert_eq!(p.recovery_time, 99.0);
         assert_eq!(p.warm_standbys, 2);
         assert_eq!(base.recovery_time, 20.0, "base untouched");
+    }
+
+    #[test]
+    fn apply_full_routes_policy_axes() {
+        let base = Params::small_test();
+        let point = SweepPoint {
+            overrides: vec![
+                ("policies.selection".into(), "locality".into()),
+                ("recovery_time".into(), 40.0.into()),
+            ],
+        };
+        let (p, spec) = point.apply_full(&base, &PolicySpec::default()).unwrap();
+        assert_eq!(p.recovery_time, 40.0);
+        assert_eq!(spec.selection, "locality");
+        assert_eq!(spec.repair, "fifo", "other axes untouched");
+        assert_eq!(point.label(), "policies.selection=locality, recovery_time=40");
+
+        // Mistyped values are errors, not panics.
+        let bad = SweepPoint {
+            overrides: vec![("policies.selection".into(), 3.0.into())],
+        };
+        assert!(bad.apply_full(&base, &PolicySpec::default()).is_err());
+        let bad = SweepPoint {
+            overrides: vec![("recovery_time".into(), "locality".into())],
+        };
+        assert!(bad.apply_full(&base, &PolicySpec::default()).is_err());
+    }
+
+    #[test]
+    fn policy_axis_sweep_from_doc() {
+        let doc = crate::config::yaml::parse(
+            "sweep:\n  kind: two_way\n  x: { name: policies.selection, values: [first_fit, locality] }\n  y: { name: recovery_time, values: [10, 30] }\n",
+        )
+        .unwrap();
+        let s = sweep_from_doc(&doc, 2, 1).unwrap();
+        assert_eq!(s.points.len(), 4);
+        assert_eq!(s.points[0].label(), "policies.selection=first_fit, recovery_time=10");
+        assert_eq!(s.points[3].label(), "policies.selection=locality, recovery_time=30");
+        s.validate(&Params::small_test()).unwrap();
+
+        // Bad policy names are parse-time errors.
+        let bad = crate::config::yaml::parse(
+            "sweep:\n  kind: one_way\n  x: { name: policies.selection, values: [bogus] }\n",
+        )
+        .unwrap();
+        assert!(sweep_from_doc(&bad, 2, 1).is_err());
+    }
+
+    #[test]
+    fn validate_catches_incompatible_policy_points() {
+        use crate::config::DistKind;
+        let mut base = Params::small_test();
+        base.failure_dist = DistKind::Weibull { shape: 1.5 };
+        let s = Sweep::from_axes(
+            "t",
+            &[("policies.failure".to_string(), vec!["per_server".into(), "gang".into()])],
+            1,
+            1,
+        );
+        let err = s.validate(&base).unwrap_err();
+        assert!(err.contains("gang"), "{err}");
+    }
+
+    #[test]
+    fn policy_axis_sweep_runs_end_to_end() {
+        let base = Params::small_test();
+        let s = Sweep::from_axes(
+            "sel",
+            &[(
+                "policies.selection".to_string(),
+                vec!["first_fit".into(), "locality".into()],
+            )],
+            2,
+            9,
+        );
+        s.validate(&base).unwrap();
+        let r = run_sweep(&base, &s, 2);
+        assert_eq!(r.points.len(), 2);
+        assert_eq!(r.points[0].point.label(), "policies.selection=first_fit");
+        assert_eq!(r.points[1].point.label(), "policies.selection=locality");
+        for pr in &r.points {
+            assert_eq!(pr.summary("makespan").unwrap().n, 2);
+        }
     }
 
     #[test]
@@ -408,6 +618,18 @@ mod tests {
             let sb = b.summary("makespan").unwrap();
             assert_eq!(sa.n, 3);
             assert_eq!(sa.mean, sb.mean);
+        }
+    }
+
+    #[test]
+    fn collector_holds_every_registry_metric() {
+        let base = Params::small_test();
+        let sweep = Sweep::one_way("m", "recovery_time", &[10.0], 2, 3);
+        let r = run_sweep(&base, &sweep, 1);
+        for m in crate::stats::metrics::REGISTRY {
+            let s = r.points[0].summary(m.name);
+            assert!(s.is_some(), "metric {} missing from collector", m.name);
+            assert_eq!(s.unwrap().n, 2);
         }
     }
 

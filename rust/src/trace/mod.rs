@@ -1,12 +1,24 @@
-//! Structured event tracing + failure injection.
+//! Structured event tracing, the observer API, and failure injection.
 //!
-//! Tracing is opt-in (`Simulation::with_trace`): the hot path pays one
-//! branch when disabled. Traces power the determinism/replay tests and
-//! the `--trace` CLI flag; [`inject`] lets tests force failures at exact
+//! Three layers:
+//!
+//! * [`TraceKind`] — the traced event vocabulary (every decision point of
+//!   the simulation: failures, repairs, preemptions, stalls, recovery).
+//! * [`Observer`] — the pluggable hook [`crate::model::ctx::SimCtx`]
+//!   drives: implement it to stream per-event timelines out of a run
+//!   (`Simulation::with_observer`). No observer installed = one `None`
+//!   check on the hot path, zero allocation, zero draw-order impact.
+//! * [`Trace`] — the built-in in-memory observer behind
+//!   `Simulation::with_trace`, rendering text (`--trace`) or an NDJSON
+//!   event log ([`Trace::to_ndjson`], `--trace-out`) for incident replay
+//!   and capacity-planning plots.
+//!
+//! [`inject`] lets tests and `inject:` scenarios force failures at exact
 //! times regardless of the stochastic clocks.
 
 pub mod inject;
 
+use crate::report::json::Json;
 use crate::sim::Time;
 
 /// One traced state transition.
@@ -25,8 +37,10 @@ pub enum TraceKind {
     HostSelection { allotted: usize },
     Stalled { allotted: usize },
     Unstalled { waited: Time },
+    RecoveryStart { cost: Time },
     RecoveryDone,
     RepairStart { server: u32, manual: bool },
+    RepairQueued { server: u32, manual: bool },
     RepairDone { server: u32, manual: bool, fixed: bool },
     Preempted { server: u32 },
     PreemptArrived { server: u32 },
@@ -34,6 +48,105 @@ pub enum TraceKind {
     Regenerated { converted: usize },
     JobCompleted { makespan: Time },
     Horizon,
+}
+
+impl TraceKind {
+    /// Stable event name (the NDJSON `event` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::JobStarted => "job_started",
+            TraceKind::Failure { .. } => "failure",
+            TraceKind::StandbySwap { .. } => "standby_swap",
+            TraceKind::HostSelection { .. } => "host_selection",
+            TraceKind::Stalled { .. } => "stalled",
+            TraceKind::Unstalled { .. } => "unstalled",
+            TraceKind::RecoveryStart { .. } => "recovery_start",
+            TraceKind::RecoveryDone => "recovery_done",
+            TraceKind::RepairStart { .. } => "repair_start",
+            TraceKind::RepairQueued { .. } => "repair_queued",
+            TraceKind::RepairDone { .. } => "repair_done",
+            TraceKind::Preempted { .. } => "preempted",
+            TraceKind::PreemptArrived { .. } => "preempt_arrived",
+            TraceKind::Retired { .. } => "retired",
+            TraceKind::Regenerated { .. } => "regenerated",
+            TraceKind::JobCompleted { .. } => "job_completed",
+            TraceKind::Horizon => "horizon",
+        }
+    }
+}
+
+/// One traced event as a JSON object: `{"at": t, "event": name, ...}`
+/// with the kind's payload fields inlined.
+pub fn event_json(at: Time, kind: &TraceKind) -> Json {
+    let mut fields: Vec<(String, Json)> =
+        vec![("at".into(), Json::Num(at)), ("event".into(), Json::str(kind.name()))];
+    let mut add = |k: &str, v: Json| fields.push((k.to_string(), v));
+    match kind {
+        TraceKind::JobStarted | TraceKind::RecoveryDone | TraceKind::Horizon => {}
+        TraceKind::Failure { server, systematic } => {
+            add("server", (*server as u64).into());
+            add("systematic", (*systematic).into());
+        }
+        TraceKind::StandbySwap { failed, replacement } => {
+            add("failed", (*failed as u64).into());
+            add("replacement", (*replacement as u64).into());
+        }
+        TraceKind::HostSelection { allotted } | TraceKind::Stalled { allotted } => {
+            add("allotted", (*allotted).into());
+        }
+        TraceKind::Unstalled { waited } => add("waited", (*waited).into()),
+        TraceKind::RecoveryStart { cost } => add("cost", (*cost).into()),
+        TraceKind::RepairStart { server, manual }
+        | TraceKind::RepairQueued { server, manual } => {
+            add("server", (*server as u64).into());
+            add("manual", (*manual).into());
+        }
+        TraceKind::RepairDone { server, manual, fixed } => {
+            add("server", (*server as u64).into());
+            add("manual", (*manual).into());
+            add("fixed", (*fixed).into());
+        }
+        TraceKind::Preempted { server }
+        | TraceKind::PreemptArrived { server }
+        | TraceKind::Retired { server } => add("server", (*server as u64).into()),
+        TraceKind::Regenerated { converted } => add("converted", (*converted).into()),
+        TraceKind::JobCompleted { makespan } => add("makespan", (*makespan).into()),
+    }
+    Json::Obj(fields)
+}
+
+/// The observer hook: called once per traced decision point, in event
+/// order, with the simulation clock. Implementations must not assume
+/// they see every *engine* event — only the semantic ones above.
+pub trait Observer {
+    fn observe(&mut self, at: Time, kind: &TraceKind);
+}
+
+impl Observer for Trace {
+    fn observe(&mut self, at: Time, kind: &TraceKind) {
+        self.push(at, kind.clone());
+    }
+}
+
+/// Adapter sharing one observer between the simulation (which owns its
+/// observer box) and the caller (who wants the data back afterwards):
+///
+/// ```no_run
+/// # use airesim::trace::{Shared, Trace};
+/// # use airesim::config::Params;
+/// # use airesim::model::cluster::Simulation;
+/// use std::{cell::RefCell, rc::Rc};
+/// let log = Rc::new(RefCell::new(Trace::default()));
+/// let p = Params::small_test();
+/// Simulation::new(&p, 42).with_observer(Box::new(Shared(log.clone()))).run();
+/// println!("{}", log.borrow().to_ndjson());
+/// ```
+pub struct Shared<T: Observer>(pub std::rc::Rc<std::cell::RefCell<T>>);
+
+impl<T: Observer> Observer for Shared<T> {
+    fn observe(&mut self, at: Time, kind: &TraceKind) {
+        self.0.borrow_mut().observe(at, kind);
+    }
 }
 
 /// An in-memory trace of one run.
@@ -68,6 +181,25 @@ impl Trace {
         }
         s
     }
+
+    /// Render as NDJSON — one `{"type":"event",...}` object per line
+    /// (`--trace-out`; pipe into `jq` for incident replay and timeline
+    /// plots). The schema is identical to the event lines of
+    /// `--format ndjson`, so one `jq` filter serves both streams.
+    pub fn to_ndjson(&self) -> String {
+        let mut s = String::new();
+        for r in &self.records {
+            match event_json(r.at, &r.kind) {
+                Json::Obj(mut fields) => {
+                    fields.insert(0, ("type".to_string(), Json::str("event")));
+                    s.push_str(&Json::Obj(fields).render());
+                }
+                other => s.push_str(&other.render()),
+            }
+            s.push('\n');
+        }
+        s
+    }
 }
 
 #[cfg(test)]
@@ -86,5 +218,35 @@ mod tests {
         let rendered = t.render();
         assert!(rendered.contains("JobStarted"));
         assert!(rendered.contains("server: 3"));
+    }
+
+    #[test]
+    fn event_json_carries_payload() {
+        let j = event_json(5.0, &TraceKind::Failure { server: 3, systematic: true });
+        assert_eq!(j.render(), r#"{"at":5,"event":"failure","server":3,"systematic":true}"#);
+        let j = event_json(0.5, &TraceKind::RecoveryStart { cost: 20.0 });
+        assert_eq!(j.render(), r#"{"at":0.5,"event":"recovery_start","cost":20}"#);
+    }
+
+    #[test]
+    fn ndjson_is_one_line_per_record() {
+        let mut t = Trace::default();
+        t.push(1.0, TraceKind::JobStarted);
+        t.push(2.0, TraceKind::Retired { server: 7 });
+        let s = t.to_ndjson();
+        let lines: Vec<&str> = s.trim_end().lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with(r#"{"type":"event","at":"#), "{}", lines[0]);
+        assert!(lines[1].contains("\"retired\""));
+    }
+
+    #[test]
+    fn shared_observer_collects() {
+        use std::{cell::RefCell, rc::Rc};
+        let log = Rc::new(RefCell::new(Trace::default()));
+        let mut shared = Shared(log.clone());
+        shared.observe(1.0, &TraceKind::JobStarted);
+        shared.observe(2.0, &TraceKind::Horizon);
+        assert_eq!(log.borrow().len(), 2);
     }
 }

@@ -1,6 +1,8 @@
 //! CLI end-to-end tests: drive the `airesim` binary the way a user would.
 //! (`CARGO_BIN_EXE_airesim` is provided by cargo for integration tests.)
 
+use airesim::report::json::Json;
+use airesim::testkit::parse_json;
 use std::process::Command;
 
 fn airesim(args: &[&str]) -> (String, String, bool) {
@@ -169,6 +171,181 @@ fn scenario_inject_from_file() {
     assert!(ok, "stderr: {err}");
     assert!(out.contains("StandbySwap"), "trace should show the swap: {out}");
     assert!(out.contains("failures"), "{out}");
+}
+
+#[test]
+fn list_metrics_covers_the_registry() {
+    let (out, _, ok) = airesim(&["list-metrics"]);
+    assert!(ok);
+    for m in ["makespan_hours", "failures_total", "utilization", "events_delivered"] {
+        assert!(out.contains(m), "list-metrics missing {m}");
+    }
+    assert!(out.contains("unit"), "header missing: {out}");
+}
+
+#[test]
+fn format_text_is_the_default_byte_for_byte() {
+    let (plain, _, ok1) = airesim(&["run", "--seed", "7", "--set", SMALL]);
+    let (explicit, _, ok2) =
+        airesim(&["run", "--seed", "7", "--set", SMALL, "--format", "text"]);
+    assert!(ok1 && ok2);
+    assert_eq!(plain, explicit);
+}
+
+#[test]
+fn run_format_json_parses_and_lists_metrics() {
+    let (out, err, ok) =
+        airesim(&["run", "--seed", "7", "--set", SMALL, "--format", "json"]);
+    assert!(ok, "stderr: {err}");
+    let doc = parse_json(out.trim_end()).unwrap_or_else(|e| panic!("{e}: {out}"));
+    let Json::Obj(fields) = &doc else { panic!("expected object") };
+    let metrics = &fields.iter().find(|(k, _)| k == "metrics").expect("metrics").1;
+    let Json::Obj(m) = metrics else { panic!("metrics must be an object") };
+    assert!(m.iter().any(|(k, _)| k == "makespan_hours"));
+    assert!(m.iter().any(|(k, _)| k == "utilization"));
+}
+
+#[test]
+fn sweep_format_csv_equals_legacy_csv_flag() {
+    let base = [
+        "sweep", "--param", "recovery_time", "--values", "10,30", "--reps", "2",
+        "--seed", "5", "--set", SMALL,
+    ];
+    let mut with_flag = base.to_vec();
+    with_flag.push("--csv");
+    let mut with_format = base.to_vec();
+    with_format.extend(["--format", "csv"]);
+    let (a, _, ok1) = airesim(&with_flag);
+    let (b, _, ok2) = airesim(&with_format);
+    assert!(ok1 && ok2);
+    assert_eq!(a, b, "--format csv must match the legacy --csv output");
+}
+
+#[test]
+fn whatif_format_ndjson_lines_parse() {
+    let (out, err, ok) = airesim(&[
+        "whatif", "--param", "recovery_time", "--factor", "2", "--reps", "2",
+        "--set", SMALL, "--format", "ndjson",
+    ]);
+    assert!(ok, "stderr: {err}");
+    let lines: Vec<&str> = out.trim_end().lines().collect();
+    assert_eq!(lines.len(), 3, "2 points + whatif summary: {out}");
+    for line in &lines {
+        parse_json(line).unwrap_or_else(|e| panic!("{e}: {line}"));
+    }
+    assert!(lines[2].contains("\"delta_pct\""), "{out}");
+}
+
+#[test]
+fn scenario_format_json_parses() {
+    let (out, err, ok) = airesim(&[
+        "scenario", "--config", "configs/scenario_recovery_whatif.yaml",
+        "--format", "json",
+    ]);
+    assert!(ok, "stderr: {err}");
+    let doc = parse_json(out.trim_end()).unwrap_or_else(|e| panic!("{e}: {out}"));
+    let Json::Obj(fields) = &doc else { panic!("expected object") };
+    assert!(fields.iter().any(|(k, _)| k == "policies"));
+    assert!(fields.iter().any(|(k, _)| k == "result"));
+}
+
+#[test]
+fn scenario_policy_axis_sweep_labels_by_policy() {
+    let (out, err, ok) =
+        airesim(&["scenario", "--config", "configs/scenario_policy_axes.yaml"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("policies.selection=first_fit"), "{out}");
+    assert!(out.contains("policies.selection=locality"), "{out}");
+}
+
+#[test]
+fn run_trace_out_writes_ndjson_events() {
+    let path = std::env::temp_dir().join("airesim_trace_out_test.ndjson");
+    let path_s = path.to_str().unwrap();
+    let (_, err, ok) = airesim(&[
+        "run", "--seed", "7", "--set", SMALL, "--trace-out", path_s,
+    ]);
+    assert!(ok, "stderr: {err}");
+    let content = std::fs::read_to_string(&path).expect("trace file written");
+    let _ = std::fs::remove_file(&path);
+    let mut saw_completion = false;
+    for line in content.trim_end().lines() {
+        let doc = parse_json(line).unwrap_or_else(|e| panic!("{e}: {line}"));
+        let Json::Obj(fields) = &doc else { panic!("event must be an object") };
+        assert!(fields.iter().any(|(k, _)| k == "at"));
+        if fields.iter().any(|(k, v)| k == "event" && *v == Json::str("job_completed")) {
+            saw_completion = true;
+        }
+    }
+    assert!(saw_completion, "timeline must include job_completed: {content}");
+}
+
+#[test]
+fn prescreen_rejects_policy_axes() {
+    // The CTMC screen is policy-blind: a policies.* axis would rank
+    // identical configs under different labels. Must refuse, not mislead.
+    let (_, err, ok) = airesim(&[
+        "prescreen", "--config", "configs/scenario_policy_axes.yaml",
+        "--top", "1", "--reps", "1",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("policy-blind"), "stderr: {err}");
+}
+
+#[test]
+fn scenario_trace_out_does_not_change_stdout() {
+    // A scenario that does NOT ask for a printed trace must produce the
+    // same stdout with and without --trace-out (the timeline goes to the
+    // file only).
+    let cfg = std::env::temp_dir().join("airesim_single_no_trace.yaml");
+    std::fs::write(
+        &cfg,
+        "scenario: single\nseed: 7\nparams:\n  job_size: 32\n  working_pool: 40\n  spare_pool: 8\n  warm_standbys: 4\n  job_len: 1440\n  random_failure_rate: 0.5/1440\n  systematic_failure_rate: 2.5/1440\n",
+    )
+    .unwrap();
+    let out_path = std::env::temp_dir().join("airesim_scenario_trace.ndjson");
+    let cfg_s = cfg.to_str().unwrap();
+    let (plain, _, ok1) = airesim(&["scenario", "--config", cfg_s]);
+    let (with_trace_out, err, ok2) = airesim(&[
+        "scenario", "--config", cfg_s, "--trace-out", out_path.to_str().unwrap(),
+    ]);
+    assert!(ok1 && ok2, "stderr: {err}");
+    assert_eq!(plain, with_trace_out, "--trace-out must not leak into stdout");
+    let timeline = std::fs::read_to_string(&out_path).expect("timeline written");
+    let _ = std::fs::remove_file(&cfg);
+    let _ = std::fs::remove_file(&out_path);
+    assert!(!timeline.trim().is_empty());
+    for line in timeline.trim_end().lines() {
+        parse_json(line).unwrap_or_else(|e| panic!("{e}: {line}"));
+    }
+}
+
+#[test]
+fn bad_format_and_metric_are_rejected_cleanly() {
+    let (_, err, ok) = airesim(&["run", "--set", SMALL, "--format", "xml"]);
+    assert!(!ok);
+    assert!(err.contains("unknown format"), "stderr: {err}");
+
+    let (_, err, ok) = airesim(&[
+        "sweep", "--param", "recovery_time", "--values", "10", "--reps", "1",
+        "--set", SMALL, "--metric", "makespam",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("unknown metric"), "stderr: {err}");
+
+    // Bad or conflicting sweep flags must fail before any simulation runs.
+    let (_, err, ok) = airesim(&[
+        "sweep", "--param", "recovery_time", "--values", "10", "--reps", "1",
+        "--set", SMALL, "--format", "jsn",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("unknown format"), "stderr: {err}");
+    let (_, err, ok) = airesim(&[
+        "sweep", "--param", "recovery_time", "--values", "10", "--reps", "1",
+        "--set", SMALL, "--csv", "--format", "json",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("mutually exclusive"), "stderr: {err}");
 }
 
 #[test]

@@ -2,7 +2,7 @@
 //! (scaled-down) sweeps — executable documentation stays correct.
 
 use airesim::config::{validate, yaml};
-use airesim::sweep::{run_sweep, sweep_from_doc};
+use airesim::sweep::{run_sweep, sweep_from_doc, AxisValue};
 
 fn load(path: &str) -> yaml::Value {
     let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{path}: {e}"));
@@ -32,10 +32,11 @@ fn fig2a_yaml_builds_the_paper_grid() {
     assert_eq!(sweep.points.len(), 12);
     assert_eq!(sweep.replications, 30);
     assert_eq!(sweep.master_seed, 42);
-    assert_eq!(sweep.points[0].overrides[0], ("recovery_time".into(), 10.0));
-    assert_eq!(sweep.points[0].overrides[1], ("working_pool".into(), 4112.0));
-    assert_eq!(sweep.points[11].overrides[0], ("recovery_time".into(), 30.0));
-    assert_eq!(sweep.points[11].overrides[1], ("working_pool".into(), 4192.0));
+    let num = |name: &str, v: f64| (name.to_string(), AxisValue::Num(v));
+    assert_eq!(sweep.points[0].overrides[0], num("recovery_time", 10.0));
+    assert_eq!(sweep.points[0].overrides[1], num("working_pool", 4112.0));
+    assert_eq!(sweep.points[11].overrides[0], num("recovery_time", 30.0));
+    assert_eq!(sweep.points[11].overrides[1], num("working_pool", 4192.0));
 }
 
 #[test]

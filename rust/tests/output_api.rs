@@ -1,0 +1,416 @@
+//! Acceptance suite for the structured observability API.
+//!
+//! * the **text** sink is byte-identical to the pre-redesign CLI output
+//!   (the oracles below are literal copies of the legacy format strings,
+//!   NOT calls into the sink code — divergence fails the test);
+//! * the **json/ndjson** sinks emit valid JSON that round-trips every
+//!   metric in the registry (parsed with `testkit::parse_json`, an
+//!   independent reader);
+//! * the **csv** sink's sweep table is the legacy `--csv` output;
+//! * policy-axis sweeps label their points by policy name end-to-end;
+//! * the Observer hook sees the exact event stream without perturbing
+//!   the run.
+
+use airesim::config::Params;
+use airesim::model::cluster::Simulation;
+use airesim::model::{PolicySpec, RunOutputs};
+use airesim::report::json::Json;
+use airesim::report::{Format, RunRecord, Sink, SweepRecord, WhatIfRecord};
+use airesim::scenario::{Scenario, ScenarioOutcome};
+use airesim::stats::metrics;
+use airesim::sweep::{run_sweep, Sweep};
+use airesim::testkit::parse_json;
+use airesim::trace::{Observer, Shared, Trace, TraceKind};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn small_run(seed: u64) -> RunRecord {
+    let p = Params::small_test();
+    let outputs = Simulation::new(&p, seed).run();
+    RunRecord {
+        seed,
+        params: p,
+        policies: PolicySpec::default(),
+        outputs,
+        trace: Trace::default(),
+    }
+}
+
+fn small_sweep() -> SweepRecord {
+    let base = Params::small_test();
+    let sweep = Sweep::one_way("t", "recovery_time", &[10.0, 30.0], 3, 7);
+    SweepRecord::new(run_sweep(&base, &sweep, 2), "makespan_hours")
+}
+
+fn obj_get<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    match j {
+        Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+        _ => None,
+    }
+}
+
+fn obj_keys(j: &Json) -> Vec<&str> {
+    match j {
+        Json::Obj(fields) => fields.iter().map(|(k, _)| k.as_str()).collect(),
+        _ => Vec::new(),
+    }
+}
+
+// ------------------------------------------------------------------ //
+// Text byte-identity (literal legacy oracles)
+// ------------------------------------------------------------------ //
+
+/// Literal copy of the pre-redesign `cmd_run` println! sequence.
+fn legacy_run_text(seed: u64, p: &Params, out: &RunOutputs) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("== run outputs (seed {seed}) ==\n"));
+    s.push_str(&format!(
+        "makespan           {:>14.2} min ({:.2} days)\n",
+        out.makespan,
+        out.makespan / 1440.0
+    ));
+    s.push_str(&format!("completed          {:>14}\n", out.completed));
+    s.push_str(&format!(
+        "failures           {:>14} (random {}, systematic {})\n",
+        out.failures_total, out.failures_random, out.failures_systematic
+    ));
+    s.push_str(&format!("standby swaps      {:>14}\n", out.standby_swaps));
+    s.push_str(&format!("host selections    {:>14}\n", out.host_selections));
+    s.push_str(&format!("preemptions        {:>14}\n", out.preemptions));
+    s.push_str(&format!(
+        "repairs            {:>14} auto, {} manual\n",
+        out.repairs_auto, out.repairs_manual
+    ));
+    s.push_str(&format!("retirements        {:>14}\n", out.retirements));
+    s.push_str(&format!("stall time         {:>14.2} min\n", out.stall_time));
+    s.push_str(&format!("recovery total     {:>14.2} min\n", out.recovery_total));
+    s.push_str(&format!("avg run duration   {:>14.2} min\n", out.avg_run_duration));
+    s.push_str(&format!("utilization        {:>14.4}\n", out.utilization(p.job_len)));
+    s.push_str(&format!("events delivered   {:>14}\n", out.events_delivered));
+    s
+}
+
+/// Literal copy of the pre-redesign `Scenario::render` for single runs.
+fn legacy_scenario_single_text(sc: &Scenario, out: &RunOutputs) -> String {
+    let mut s = format!(
+        "== scenario: {} [single] ==\npolicies: selection={} repair={} checkpoint={} failure={}\n",
+        sc.title, sc.policies.selection, sc.policies.repair, sc.policies.checkpoint,
+        sc.policies.failure,
+    );
+    s.push_str(&format!(
+        "makespan           {:>14.2} min ({:.2} days)\n\
+         completed          {:>14}\n\
+         failures           {:>14} (random {}, systematic {})\n\
+         standby swaps      {:>14}\n\
+         host selections    {:>14}\n\
+         preemptions        {:>14}\n\
+         repairs            {:>14} auto, {} manual\n\
+         stall time         {:>14.2} min\n\
+         utilization        {:>14.4}\n",
+        out.makespan,
+        out.makespan / 1440.0,
+        out.completed,
+        out.failures_total,
+        out.failures_random,
+        out.failures_systematic,
+        out.standby_swaps,
+        out.host_selections,
+        out.preemptions,
+        out.repairs_auto,
+        out.repairs_manual,
+        out.stall_time,
+        out.utilization(sc.params.job_len)
+    ));
+    s
+}
+
+#[test]
+fn text_sink_run_is_byte_identical_to_legacy_cli() {
+    let rec = small_run(7);
+    let got = Format::Text.sink().run(&rec);
+    let want = legacy_run_text(7, &rec.params, &rec.outputs);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn text_sink_scenario_single_is_byte_identical_to_legacy_render() {
+    let text = "scenario: single\nseed: 9\nparams:\n  job_size: 32\n  working_pool: 40\n  spare_pool: 8\n  warm_standbys: 4\n  job_len: 1440\n  random_failure_rate: 0.5/1440\n  systematic_failure_rate: 2.5/1440\n";
+    let sc = Scenario::from_yaml(text).unwrap();
+    let outcome = sc.run().unwrap();
+    let ScenarioOutcome::Single { outputs, .. } = &outcome else { panic!() };
+    let got = sc.render(&outcome);
+    assert_eq!(got, legacy_scenario_single_text(&sc, outputs));
+}
+
+#[test]
+fn text_sink_whatif_is_byte_identical_to_legacy() {
+    let base = Params::small_test();
+    let sweep = Sweep::one_way("what-if: recovery_time x2", "recovery_time", &[20.0, 40.0], 3, 5);
+    let result = run_sweep(&base, &sweep, 1);
+    // Legacy: text_table + the scaling line built from the two summaries.
+    let a = result.points[0].summary("makespan_hours").unwrap();
+    let b = result.points[1].summary("makespan_hours").unwrap();
+    let want = format!(
+        "{}\nscaling recovery_time by 2 changes mean training time by {:+.2}% ({:.1}h -> {:.1}h)\n",
+        airesim::report::text_table(&result, "makespan_hours"),
+        (b.mean / a.mean - 1.0) * 100.0,
+        a.mean,
+        b.mean
+    );
+    let rec = WhatIfRecord {
+        result,
+        param: "recovery_time".into(),
+        factor: 2.0,
+        metric: "makespan_hours".into(),
+    };
+    assert_eq!(Format::Text.sink().whatif(&rec), want);
+}
+
+#[test]
+fn csv_sink_sweep_is_the_legacy_csv() {
+    let rec = small_sweep();
+    let got = Format::Csv.sink().sweep(&rec);
+    assert_eq!(got, airesim::report::csv(&rec.result, &rec.metric));
+    let lines: Vec<&str> = got.trim_end().lines().collect();
+    assert_eq!(lines.len(), 3);
+    assert!(lines[0].starts_with("recovery_time,metric,n,mean"));
+    assert!(lines[1].starts_with("10,makespan_hours,3,"));
+}
+
+// ------------------------------------------------------------------ //
+// JSON / NDJSON round-trips
+// ------------------------------------------------------------------ //
+
+#[test]
+fn json_run_round_trips_every_registry_metric() {
+    let rec = small_run(11);
+    let doc = parse_json(Format::Json.sink().run(&rec).trim_end()).unwrap();
+    let metrics_obj = obj_get(&doc, "metrics").expect("metrics key");
+    let keys = obj_keys(metrics_obj);
+    let want: Vec<&str> = metrics::names().collect();
+    assert_eq!(keys, want, "JSON must carry every registry metric, in order");
+    for (m, v) in rec.metric_values() {
+        let entry = obj_get(metrics_obj, m.name).unwrap();
+        let Some(Json::Num(got)) = obj_get(entry, "value") else {
+            panic!("{} has no numeric value", m.name)
+        };
+        assert_eq!(*got, v, "{} round-trip", m.name);
+        assert_eq!(obj_get(entry, "unit"), Some(&Json::str(m.unit)));
+    }
+    let policies = obj_get(&doc, "policies").unwrap();
+    assert_eq!(obj_get(policies, "selection"), Some(&Json::str("first_fit")));
+}
+
+#[test]
+fn json_sweep_carries_full_summaries_for_every_metric() {
+    let rec = small_sweep();
+    let doc = parse_json(Format::Json.sink().sweep(&rec).trim_end()).unwrap();
+    let Some(Json::Arr(points)) = obj_get(&doc, "points") else { panic!("points") };
+    assert_eq!(points.len(), 2);
+    for (i, point) in points.iter().enumerate() {
+        let metrics_obj = obj_get(point, "metrics").unwrap();
+        assert_eq!(obj_keys(metrics_obj), metrics::names().collect::<Vec<_>>());
+        let s = rec.result.points[i].summary("makespan").unwrap();
+        let ms = obj_get(metrics_obj, "makespan").unwrap();
+        assert_eq!(obj_get(ms, "n"), Some(&Json::Num(s.n as f64)));
+        assert_eq!(obj_get(ms, "mean"), Some(&Json::Num(s.mean)));
+        assert_eq!(obj_get(ms, "p95"), Some(&Json::Num(s.p95)));
+    }
+}
+
+#[test]
+fn ndjson_run_lines_each_parse() {
+    let p = Params::small_test();
+    let (outputs, trace) = Simulation::new(&p, 13).with_trace().run_traced();
+    let rec = RunRecord {
+        seed: 13,
+        params: p,
+        policies: PolicySpec::default(),
+        outputs,
+        trace,
+    };
+    let out = Format::Ndjson.sink().run(&rec);
+    let mut events = 0;
+    let mut metric_lines = 0;
+    for line in out.trim_end().lines() {
+        let doc = parse_json(line).unwrap_or_else(|e| panic!("bad line `{line}`: {e}"));
+        match obj_get(&doc, "type") {
+            Some(Json::Str(t)) if t == "event" => events += 1,
+            Some(Json::Str(t)) if t == "metric" => metric_lines += 1,
+            other => panic!("unexpected type {other:?}"),
+        }
+    }
+    assert_eq!(metric_lines, metrics::REGISTRY.len());
+    assert_eq!(events, rec.trace.len());
+    assert!(events > 0, "a traced run must produce event lines");
+}
+
+#[test]
+fn ndjson_and_json_agree_on_scenario_sweeps() {
+    let text = "scenario: sweep\nseed: 3\nreplications: 2\n\
+                params:\n  job_size: 32\n  working_pool: 40\n  spare_pool: 8\n  warm_standbys: 4\n  job_len: 1440\n  random_failure_rate: 0.5/1440\n  systematic_failure_rate: 2.5/1440\n\
+                sweep:\n  kind: one_way\n  x: { name: recovery_time, values: [10, 30] }\n";
+    let sc = Scenario::from_yaml(text).unwrap();
+    let outcome = sc.run().unwrap();
+    let record = sc.record(&outcome);
+
+    let json_doc = parse_json(Format::Json.sink().scenario(&record).trim_end()).unwrap();
+    assert_eq!(obj_get(&json_doc, "scenario"), Some(&Json::str("sweep")));
+    let result = obj_get(&json_doc, "result").unwrap();
+    let Some(Json::Arr(points)) = obj_get(result, "points") else { panic!() };
+    assert_eq!(points.len(), 2);
+
+    let nd = Format::Ndjson.sink().scenario(&record);
+    let lines: Vec<&str> = nd.trim_end().lines().collect();
+    assert_eq!(lines.len(), 3, "meta line + 2 points: {nd}");
+    let meta = parse_json(lines[0]).unwrap();
+    assert_eq!(obj_get(&meta, "type"), Some(&Json::str("scenario")));
+    for line in &lines[1..] {
+        let doc = parse_json(line).unwrap();
+        assert_eq!(obj_get(&doc, "type"), Some(&Json::str("point")));
+    }
+}
+
+#[test]
+fn compare_scenario_renders_in_all_formats() {
+    let text = "scenario: compare\nseed: 6\nreplications: 3\n\
+                params:\n  job_size: 32\n  working_pool: 40\n  spare_pool: 8\n  warm_standbys: 4\n  job_len: 1440\n  random_failure_rate: 0.5/1440\n  systematic_failure_rate: 2.5/1440\n";
+    let sc = Scenario::from_yaml(text).unwrap();
+    let outcome = sc.run().unwrap();
+    let record = sc.record(&outcome);
+    let doc = parse_json(Format::Json.sink().scenario(&record).trim_end()).unwrap();
+    let result = obj_get(&doc, "result").unwrap();
+    assert!(obj_get(result, "analytic").is_some());
+    assert!(obj_get(result, "des_makespan").is_some());
+    let text_out = Format::Text.sink().scenario(&record);
+    assert!(text_out.contains("CTMC makespan_est"));
+    let csv_out = Format::Csv.sink().scenario(&record);
+    assert!(csv_out.starts_with("quantity,value\n"));
+    for line in Format::Ndjson.sink().scenario(&record).trim_end().lines() {
+        parse_json(line).unwrap();
+    }
+}
+
+// ------------------------------------------------------------------ //
+// Policy axes end-to-end
+// ------------------------------------------------------------------ //
+
+#[test]
+fn policy_axis_scenario_sweep_labels_points_by_policy() {
+    let text = "scenario: sweep\nseed: 5\nreplications: 2\ntitle: selection shootout\n\
+                params:\n  job_size: 32\n  working_pool: 40\n  spare_pool: 8\n  warm_standbys: 4\n  job_len: 1440\n  random_failure_rate: 0.5/1440\n  systematic_failure_rate: 2.5/1440\n\
+                sweep:\n  kind: two_way\n  x: { name: policies.selection, values: [first_fit, locality] }\n  y: { name: recovery_time, values: [10, 30] }\n";
+    let sc = Scenario::from_yaml(text).unwrap();
+    let outcome = sc.run().unwrap();
+    let ScenarioOutcome::Sweep(result) = &outcome else { panic!("expected sweep") };
+    assert_eq!(result.points.len(), 4);
+    let labels: Vec<String> = result.points.iter().map(|p| p.point.label()).collect();
+    assert_eq!(
+        labels,
+        vec![
+            "policies.selection=first_fit, recovery_time=10",
+            "policies.selection=first_fit, recovery_time=30",
+            "policies.selection=locality, recovery_time=10",
+            "policies.selection=locality, recovery_time=30",
+        ]
+    );
+    for pr in &result.points {
+        assert_eq!(pr.summary("makespan").unwrap().n, 2, "every point ran");
+    }
+    // The text table and CSV both carry the policy labels.
+    let rendered = sc.render(&outcome);
+    assert!(rendered.contains("policies.selection=locality, recovery_time=30"), "{rendered}");
+    let csv = Format::Csv.sink().scenario(&sc.record(&outcome));
+    assert!(csv.lines().next().unwrap().starts_with("policies.selection,recovery_time,"), "{csv}");
+    assert!(csv.contains("\nlocality,30,"), "{csv}");
+}
+
+#[test]
+fn policy_axis_point_equals_fixed_policy_run() {
+    // A policy-axis point must behave exactly like the same policy set
+    // passed via `with_policies` (same derived streams, same outputs).
+    let base = Params::small_test();
+    let axis = Sweep::from_axes(
+        "axis",
+        &[("policies.selection".to_string(), vec!["locality".into()])],
+        3,
+        17,
+    );
+    let fixed = Sweep::one_way("fixed", "recovery_time", &[base.recovery_time], 3, 17)
+        .with_policies(PolicySpec {
+            selection: "locality".into(),
+            ..PolicySpec::default()
+        });
+    let ra = run_sweep(&base, &axis, 1);
+    let rf = run_sweep(&base, &fixed, 1);
+    for metric in ["makespan", "failures_total", "events_delivered"] {
+        assert_eq!(
+            ra.points[0].summary(metric).unwrap(),
+            rf.points[0].summary(metric).unwrap(),
+            "{metric} diverged between axis and fixed policy"
+        );
+    }
+}
+
+// ------------------------------------------------------------------ //
+// Observer hook
+// ------------------------------------------------------------------ //
+
+struct Counter {
+    events: usize,
+    failures: usize,
+}
+
+impl Observer for Counter {
+    fn observe(&mut self, _at: f64, kind: &TraceKind) {
+        self.events += 1;
+        if matches!(kind, TraceKind::Failure { .. }) {
+            self.failures += 1;
+        }
+    }
+}
+
+#[test]
+fn observer_sees_the_exact_trace_without_perturbing_the_run() {
+    let p = Params::small_test();
+    let baseline = Simulation::new(&p, 21).run();
+
+    // Observer + trace together: the observer must see exactly the
+    // trace's records, and the outputs must match the unobserved run.
+    let counter = Rc::new(RefCell::new(Counter { events: 0, failures: 0 }));
+    let (outputs, trace) = Simulation::new(&p, 21)
+        .with_trace()
+        .with_observer(Box::new(Shared(counter.clone())))
+        .run_traced();
+    assert_eq!(outputs, baseline, "observer must not perturb the run");
+    assert_eq!(counter.borrow().events, trace.len());
+    assert_eq!(
+        counter.borrow().failures as u64,
+        outputs.failures_total,
+        "failure events mirror the failure count"
+    );
+
+    // Observer alone (no trace buffer): same stream, same outputs.
+    let solo = Rc::new(RefCell::new(Counter { events: 0, failures: 0 }));
+    let alone = Simulation::new(&p, 21)
+        .with_observer(Box::new(Shared(solo.clone())))
+        .run();
+    assert_eq!(alone, baseline);
+    assert_eq!(solo.borrow().events, trace.len());
+}
+
+#[test]
+fn event_log_ndjson_matches_trace_ndjson() {
+    let p = Params::small_test();
+    let log = Rc::new(RefCell::new(Trace::default()));
+    let (_, trace) = Simulation::new(&p, 23)
+        .with_trace()
+        .with_observer(Box::new(Shared(log.clone())))
+        .run_traced();
+    assert_eq!(log.borrow().to_ndjson(), trace.to_ndjson());
+    for line in log.borrow().to_ndjson().trim_end().lines() {
+        let doc = parse_json(line).unwrap();
+        assert!(obj_get(&doc, "at").is_some());
+        assert!(obj_get(&doc, "event").is_some());
+    }
+}
