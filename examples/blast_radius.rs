@@ -1,0 +1,105 @@
+//! Blast radius: how much does failure-domain *size* cost? A CRN sweep
+//! over `servers_per_rack` with the per-server outage exposure held
+//! constant — every server's rack still dies at the same rate, but a
+//! bigger rack means one outage takes more of the job down at once.
+//!
+//! Replication `r` uses the same derived stream at every point (common
+//! random numbers), so differences between rows are the topology's, not
+//! the sampler's. Watch `domain_max_blast` scale with the rack size and
+//! `makespan_hours` pay for it.
+//!
+//! ```bash
+//! cargo run --release --example blast_radius
+//! cargo run --release --example blast_radius -- --format csv
+//! cargo run --release --example blast_radius -- --format ndjson | head -2
+//! ```
+
+use airesim::config::{Params, TopologyLevelSpec, TopologySpec};
+use airesim::model::cluster::ReplicationRunner;
+use airesim::model::PolicySpec;
+use airesim::report::{Format, Sink, SweepRecord};
+use airesim::sim::rng::Rng;
+use airesim::stats::Collector;
+use airesim::sweep::{collect_outputs, AxisValue, PointResult, SweepPoint, SweepResult};
+
+/// A cluster where rack outages are the dominant hazard: base failure
+/// rates are mild, racks die about twice a week each.
+fn base() -> Params {
+    let mut p = Params::small_test();
+    p.job_size = 24;
+    p.warm_standbys = 12;
+    p.working_pool = 96;
+    p.spare_pool = 16;
+    p.job_len = 4.0 * 1440.0;
+    p.random_failure_rate = 0.1 / 1440.0;
+    p.systematic_failure_rate = 0.5 / 1440.0;
+    p.auto_repair_time = 60.0;
+    p.max_sim_time = 1e9;
+    p
+}
+
+fn main() {
+    // `--format {text|json|csv|ndjson}` (default text).
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let format = match argv.iter().position(|a| a == "--format") {
+        Some(i) => match argv.get(i + 1).map(|s| Format::parse(s)) {
+            Some(Ok(f)) => f,
+            _ => {
+                eprintln!("usage: blast_radius [--format text|json|csv|ndjson]");
+                std::process::exit(2);
+            }
+        },
+        None => Format::Text,
+    };
+
+    const RACK_OUTAGE_RATE: f64 = 0.3 / 1440.0; // per rack, ~1 per 3.3 days
+    let reps = 8usize;
+    let spec = PolicySpec { selection: "locality".into(), ..PolicySpec::default() };
+    let mut runner = ReplicationRunner::new();
+
+    let mut points = Vec::new();
+    for &servers_per_rack in &[2u32, 4, 8, 16] {
+        let mut p = base();
+        p.topology = Some(TopologySpec {
+            levels: vec![TopologyLevelSpec {
+                name: "rack".into(),
+                size: servers_per_rack,
+                outage_rate: RACK_OUTAGE_RATE,
+            }],
+        });
+        let mut collector = Collector::new();
+        for r in 0..reps {
+            // CRN: the stream depends on the replication only, never the
+            // point — every rack size faces the same draws.
+            let out = runner.run(&p, &spec, Rng::derived(4242, &[r as u64]));
+            collect_outputs(&mut collector, &p, &out);
+        }
+        points.push(PointResult {
+            point: SweepPoint {
+                overrides: vec![(
+                    "servers_per_rack".to_string(),
+                    AxisValue::Num(servers_per_rack as f64),
+                )],
+            },
+            collector,
+        });
+    }
+
+    let result = SweepResult {
+        title: format!("blast radius: rack size, {reps} CRN reps, locality packing"),
+        points,
+    };
+    let record = SweepRecord::new(result, "makespan_hours");
+    print!("{}", format.sink().sweep(&record));
+
+    if format == Format::Text {
+        println!(
+            "\nReading the table: every server's rack dies at the same rate, so the\n\
+             expected number of server-downings is constant across rows — only the\n\
+             *correlation* grows. Bigger racks concentrate the damage (see\n\
+             domain_max_blast and domain_job_interruptions via --format json):\n\
+             once one outage exceeds the 12 warm standbys, the job pays a full\n\
+             host selection instead of a swap, and makespan_hours climbs."
+        );
+    }
+}

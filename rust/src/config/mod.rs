@@ -5,4 +5,4 @@ pub mod params;
 pub mod validate;
 pub mod yaml;
 
-pub use params::{DistKind, Params};
+pub use params::{DistKind, Params, TopologyLevelSpec, TopologySpec};

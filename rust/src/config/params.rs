@@ -54,6 +54,41 @@ impl DistKind {
     }
 }
 
+/// One failure-domain level of the cluster topology (declarative form).
+///
+/// `size` counts *units of the previous level* per domain — servers for
+/// the first level, previous-level domains for every level above it. A
+/// fleet whose size does not divide evenly gets a trailing partial
+/// domain at every level.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopologyLevelSpec {
+    /// Level name (`rack`, `switch`, `pod`, …) — labels trace events.
+    pub name: String,
+    /// Units of the previous level per domain (>= 1).
+    pub size: u32,
+    /// Outage rate of *one* domain at this level, 1/min (0 = never).
+    pub outage_rate: f64,
+}
+
+/// Declarative failure-domain hierarchy over the fleet (the `topology:`
+/// config block). Server ids are assigned domain-contiguously, so every
+/// domain is a contiguous id range; [`crate::model::topology::Topology`]
+/// is the concrete per-fleet form. `None` on [`Params`] keeps every
+/// legacy behavior byte-identical.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct TopologySpec {
+    /// Innermost level first (e.g. rack, then switch).
+    pub levels: Vec<TopologyLevelSpec>,
+}
+
+impl TopologySpec {
+    /// Does any level carry a positive outage rate? (Drives the `auto`
+    /// failure-model resolution: outage rates imply correlated clocks.)
+    pub fn has_outages(&self) -> bool {
+        self.levels.iter().any(|l| l.outage_rate > 0.0)
+    }
+}
+
 /// Full simulation parameter set. Construct via [`Params::table1_defaults`]
 /// and override fields, or load from YAML via [`crate::config::yaml`].
 #[derive(Clone, Debug)]
@@ -145,6 +180,12 @@ pub struct Params {
     // ---- simulation control ----
     /// Hard horizon: stop (mark incomplete) if the job hasn't finished.
     pub max_sim_time: f64,
+
+    // ---- topology (failure domains; `topology:` config block) ----
+    /// Failure-domain hierarchy over the fleet. `None` (the default, and
+    /// the paper's configuration) keeps servers topologically anonymous
+    /// and every output byte-identical to the pre-topology simulator.
+    pub topology: Option<TopologySpec>,
 }
 
 impl Params {
@@ -181,6 +222,7 @@ impl Params {
             checkpoint_interval: 0.0,
             preemption_cost: 0.0,
             max_sim_time: 10.0 * 256.0 * MIN_PER_DAY,
+            topology: None,
         }
     }
 
@@ -217,6 +259,7 @@ impl Params {
             checkpoint_interval: 0.0,
             preemption_cost: 0.0,
             max_sim_time: 100.0 * MIN_PER_DAY,
+            topology: None,
         }
     }
 

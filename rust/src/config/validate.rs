@@ -3,7 +3,7 @@
 //! pools too small to ever start, …) and build [`Params`] from parsed
 //! config files.
 
-use crate::config::params::{DistKind, Params};
+use crate::config::params::{DistKind, Params, TopologyLevelSpec, TopologySpec};
 use crate::config::yaml::Value;
 use std::fmt;
 
@@ -14,6 +14,7 @@ pub enum ConfigError {
     BadValue(String),
     Infeasible(u32, u32, u32),
     BadDist(String),
+    Topology(String),
 }
 
 impl fmt::Display for ConfigError {
@@ -34,6 +35,7 @@ impl fmt::Display for ConfigError {
                 "bad failure_dist `{s}` (expected exponential, weibull:<shape>, \
                  lognormal:<sigma>)"
             ),
+            ConfigError::Topology(s) => write!(f, "bad topology: {s}"),
         }
     }
 }
@@ -120,6 +122,164 @@ pub fn parse_dist(s: &str) -> Result<DistKind, ConfigError> {
     Err(ConfigError::BadDist(s.to_string()))
 }
 
+/// Validate a topology spec: at least one level, no zero-sized domains,
+/// non-negative outage rates, unique level names. (A fleet size that does
+/// not divide a level's stride is fine — it yields a trailing partial
+/// domain, see [`crate::model::topology::Topology`].)
+pub fn validate_topology(spec: &TopologySpec) -> Result<(), ConfigError> {
+    if spec.levels.is_empty() {
+        return Err(ConfigError::Topology("needs at least one level".into()));
+    }
+    let mut seen = Vec::new();
+    for l in &spec.levels {
+        if l.name.is_empty() {
+            return Err(ConfigError::Topology("level names must be non-empty".into()));
+        }
+        if seen.contains(&l.name.as_str()) {
+            return Err(ConfigError::Topology(format!("duplicate level `{}`", l.name)));
+        }
+        seen.push(&l.name);
+        if l.size == 0 {
+            return Err(ConfigError::Topology(format!(
+                "level `{}` has size 0 (zero-sized domains)",
+                l.name
+            )));
+        }
+        if !(l.outage_rate >= 0.0) {
+            return Err(ConfigError::Topology(format!(
+                "level `{}` outage_rate {} must be >= 0",
+                l.name, l.outage_rate
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Parse the `topology:` config block. Two forms:
+///
+/// ```yaml
+/// topology:                     # shorthand: rack (+ optional switch)
+///   servers_per_rack: 8
+///   racks_per_switch: 4
+///   rack_outage_rate: 0.02/1440
+///   switch_outage_rate: 0.01/1440
+/// ```
+///
+/// ```yaml
+/// topology:                     # general: arbitrary levels, inner first
+///   levels: [ { name: rack, size: 8, outage_rate: 0.02/1440 },
+///             { name: switch, size: 4, outage_rate: 0.01/1440 } ]
+/// ```
+pub fn topology_from_config(doc: &Value) -> Result<Option<TopologySpec>, ConfigError> {
+    let Some(section) = doc.get("topology") else {
+        return Ok(None);
+    };
+    let map = section
+        .as_map()
+        .ok_or_else(|| ConfigError::Topology("`topology:` must be a map".into()))?;
+    let get_rate = |key: &str| -> Result<f64, ConfigError> {
+        match map.get(key) {
+            Some(v) => v.as_f64().ok_or_else(|| ConfigError::BadValue(key.into())),
+            None => Ok(0.0),
+        }
+    };
+    // Domain sizes must be exact non-negative integers — a silent `as`
+    // cast would truncate `8.5` to 8 and saturate `-4` to 0, running a
+    // topology that differs from what was written.
+    let as_size = |key: &str, v: f64| -> Result<u32, ConfigError> {
+        if v.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&v) {
+            return Err(ConfigError::Topology(format!(
+                "`{key}` = {v} must be a non-negative integer"
+            )));
+        }
+        Ok(v as u32)
+    };
+    let spec = if let Some(levels) = map.get("levels") {
+        for key in map.keys() {
+            if key.as_str() != "levels" {
+                return Err(ConfigError::Topology(format!(
+                    "`{key}` cannot be combined with `levels:`"
+                )));
+            }
+        }
+        let list = levels
+            .as_list()
+            .ok_or_else(|| ConfigError::Topology("`levels:` must be a list".into()))?;
+        let mut out = Vec::with_capacity(list.len());
+        for item in list {
+            if let Some(m) = item.as_map() {
+                for key in m.keys() {
+                    if !["name", "size", "outage_rate"].contains(&key.as_str()) {
+                        return Err(ConfigError::Topology(format!(
+                            "unknown level key `{key}` (expected name, size, outage_rate)"
+                        )));
+                    }
+                }
+            }
+            let name = item
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| ConfigError::Topology("every level needs `name:`".into()))?
+                .to_string();
+            let size = item
+                .get("size")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| ConfigError::Topology(format!("level `{name}` needs `size:`")))?;
+            let size = as_size(&format!("{name}.size"), size)?;
+            let outage_rate = match item.get("outage_rate") {
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| ConfigError::BadValue(format!("{name}.outage_rate")))?,
+                None => 0.0,
+            };
+            out.push(TopologyLevelSpec { name, size, outage_rate });
+        }
+        TopologySpec { levels: out }
+    } else {
+        const KNOWN: &[&str] = &[
+            "servers_per_rack",
+            "racks_per_switch",
+            "rack_outage_rate",
+            "switch_outage_rate",
+        ];
+        for key in map.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(ConfigError::Topology(format!(
+                    "unknown key `{key}` (expected levels: or {})",
+                    KNOWN.join(", ")
+                )));
+            }
+        }
+        let spr = map
+            .get("servers_per_rack")
+            .ok_or_else(|| ConfigError::Topology("needs `servers_per_rack` (or `levels:`)".into()))?
+            .as_f64()
+            .ok_or_else(|| ConfigError::BadValue("servers_per_rack".into()))?;
+        let mut levels = vec![TopologyLevelSpec {
+            name: "rack".into(),
+            size: as_size("servers_per_rack", spr)?,
+            outage_rate: get_rate("rack_outage_rate")?,
+        }];
+        if let Some(rps) = map.get("racks_per_switch") {
+            let rps = rps
+                .as_f64()
+                .ok_or_else(|| ConfigError::BadValue("racks_per_switch".into()))?;
+            levels.push(TopologyLevelSpec {
+                name: "switch".into(),
+                size: as_size("racks_per_switch", rps)?,
+                outage_rate: get_rate("switch_outage_rate")?,
+            });
+        } else if map.contains_key("switch_outage_rate") {
+            return Err(ConfigError::Topology(
+                "switch_outage_rate needs racks_per_switch".into(),
+            ));
+        }
+        TopologySpec { levels }
+    };
+    validate_topology(&spec)?;
+    Ok(Some(spec))
+}
+
 /// Apply a parsed config document's `params:` section onto defaults.
 pub fn params_from_config(doc: &Value) -> Result<Params, ConfigError> {
     let mut p = Params::table1_defaults();
@@ -143,6 +303,7 @@ pub fn params_from_config(doc: &Value) -> Result<Params, ConfigError> {
             }
         }
     }
+    p.topology = topology_from_config(doc)?;
     validate(&p)?;
     Ok(p)
 }
@@ -209,5 +370,98 @@ mod tests {
     fn unknown_param_rejected() {
         let doc = yaml::parse("params:\n  bogus: 1\n").unwrap();
         assert!(matches!(params_from_config(&doc), Err(ConfigError::Unknown(_))));
+    }
+
+    #[test]
+    fn topology_shorthand_parses() {
+        let doc = yaml::parse(
+            "topology:\n  servers_per_rack: 8\n  racks_per_switch: 4\n  switch_outage_rate: 0.01/1440\n",
+        )
+        .unwrap();
+        let p = params_from_config(&doc).unwrap();
+        let t = p.topology.expect("topology parsed");
+        assert_eq!(t.levels.len(), 2);
+        assert_eq!(
+            t.levels[0],
+            TopologyLevelSpec { name: "rack".into(), size: 8, outage_rate: 0.0 }
+        );
+        assert_eq!(t.levels[1].name, "switch");
+        assert_eq!(t.levels[1].size, 4);
+        assert!((t.levels[1].outage_rate - 0.01 / 1440.0).abs() < 1e-15);
+        assert!(t.has_outages());
+    }
+
+    #[test]
+    fn topology_levels_form_parses() {
+        let doc = yaml::parse(
+            "topology:\n  levels: [ { name: rack, size: 8 }, { name: pod, size: 16, outage_rate: 1e-5 } ]\n",
+        )
+        .unwrap();
+        let t = topology_from_config(&doc).unwrap().unwrap();
+        assert_eq!(t.levels.len(), 2);
+        assert_eq!(t.levels[0].outage_rate, 0.0);
+        assert_eq!(t.levels[1].name, "pod");
+        assert_eq!(t.levels[1].outage_rate, 1e-5);
+    }
+
+    #[test]
+    fn topology_zero_sized_domains_rejected() {
+        let doc = yaml::parse("topology:\n  servers_per_rack: 0\n").unwrap();
+        assert!(matches!(topology_from_config(&doc), Err(ConfigError::Topology(_))));
+        let doc =
+            yaml::parse("topology:\n  levels: [ { name: rack, size: 0 } ]\n").unwrap();
+        assert!(matches!(topology_from_config(&doc), Err(ConfigError::Topology(_))));
+    }
+
+    #[test]
+    fn topology_bad_shapes_rejected() {
+        // Unknown shorthand key.
+        let doc = yaml::parse("topology:\n  servers_per_pod: 8\n").unwrap();
+        assert!(topology_from_config(&doc).is_err());
+        // levels + shorthand mixed.
+        let doc = yaml::parse(
+            "topology:\n  servers_per_rack: 8\n  levels: [ { name: rack, size: 8 } ]\n",
+        )
+        .unwrap();
+        assert!(topology_from_config(&doc).is_err());
+        // Switch rate without a switch level.
+        let doc = yaml::parse(
+            "topology:\n  servers_per_rack: 8\n  switch_outage_rate: 0.1\n",
+        )
+        .unwrap();
+        assert!(topology_from_config(&doc).is_err());
+        // Duplicate level names.
+        let doc = yaml::parse(
+            "topology:\n  levels: [ { name: rack, size: 8 }, { name: rack, size: 4 } ]\n",
+        )
+        .unwrap();
+        assert!(topology_from_config(&doc).is_err());
+        // Negative rate.
+        let doc = yaml::parse(
+            "topology:\n  servers_per_rack: 8\n  rack_outage_rate: -1\n",
+        )
+        .unwrap();
+        assert!(topology_from_config(&doc).is_err());
+        // Typoed level key (a silent default here would disarm outages).
+        let doc = yaml::parse(
+            "topology:\n  levels: [ { name: rack, size: 8, outage_rte: 0.1 } ]\n",
+        )
+        .unwrap();
+        assert!(topology_from_config(&doc).is_err());
+        // Fractional / negative sizes are rejected, not truncated.
+        let doc = yaml::parse("topology:\n  servers_per_rack: 17/2\n").unwrap();
+        assert!(topology_from_config(&doc).is_err());
+        let doc = yaml::parse(
+            "topology:\n  servers_per_rack: 8\n  racks_per_switch: -4\n",
+        )
+        .unwrap();
+        assert!(topology_from_config(&doc).is_err());
+    }
+
+    #[test]
+    fn no_topology_block_stays_none() {
+        let doc = yaml::parse("params:\n  recovery_time: 30\n").unwrap();
+        let p = params_from_config(&doc).unwrap();
+        assert!(p.topology.is_none());
     }
 }

@@ -76,7 +76,8 @@ fn print_usage() {
          \x20 list-params    show every sweepable parameter name\n\
          \x20 list-policies  show every named policy per subsystem\n\
          \x20 list-metrics   show every reported output metric (name, unit)\n\n\
-         run, sweep, whatif, and scenario accept `--format {{text|json|csv|ndjson}}`.\n\
+         run, sweep, whatif, and scenario accept `--format {{text|json|csv|ndjson}}`;\n\
+         prescreen accepts `--format {{text|json}}`.\n\
          Run `airesim <cmd> --help` for per-command options."
     );
 }
@@ -546,6 +547,11 @@ fn cmd_prescreen(argv: &[String]) -> Result<()> {
         OptSpec { name: "reps", takes_value: true, help: "DES replications for the top-k (default 10)" },
         OptSpec { name: "seed", takes_value: true, help: "master seed (default 42)" },
         OptSpec { name: "artifact", takes_value: true, help: "HLO artifact path" },
+        OptSpec {
+            name: "format",
+            takes_value: true,
+            help: "output format: text|json (default text)",
+        },
     ]);
     let args = Args::parse(argv, &spec)?;
     if args.flag("help") {
@@ -555,6 +561,20 @@ fn cmd_prescreen(argv: &[String]) -> Result<()> {
         );
         return Ok(());
     }
+    // Validate before any simulation work (as the other commands do).
+    let format = parse_format(&args)?;
+    if !matches!(format, Format::Text | Format::Json) {
+        bail!("prescreen supports --format text or json");
+    }
+    // In json mode every progress/diagnostic line moves to stderr so
+    // stdout stays one parseable document; text output is unchanged.
+    let note = |line: &str| {
+        if format == Format::Json {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
+    };
     let doc = load_doc(&args)?;
     let base = load_params(doc.as_ref(), &args)?;
     let policies = load_policies(doc.as_ref(), &args, &base)?;
@@ -597,9 +617,9 @@ fn cmd_prescreen(argv: &[String]) -> Result<()> {
     }
     let configs: Vec<Params> = sweep.points.iter().map(|pt| pt.apply(&base)).collect();
     if policies != PolicySpec::default() {
-        println!(
+        note(
             "note: the CTMC screen is policy-blind; the selected policies apply \
-             to the DES validation only"
+             to the DES validation only",
         );
     }
 
@@ -608,11 +628,11 @@ fn cmd_prescreen(argv: &[String]) -> Result<()> {
     let screened: Vec<airesim::analytical::AnalyticOutputs> =
         match AnalyticModel::load(path) {
             Ok(model) => {
-                println!(
+                note(&format!(
                     "screening {} configurations through the PJRT artifact ({})…",
                     configs.len(),
                     model.platform()
-                );
+                ));
                 model.analyze_many(&configs)?
             }
             Err(e) => {
@@ -626,21 +646,18 @@ fn cmd_prescreen(argv: &[String]) -> Result<()> {
         screened[a].makespan_est.partial_cmp(&screened[b].makespan_est).unwrap()
     });
 
-    println!("\nanalytical ranking (best first):");
-    println!("{:<44} {:>16} {:>12}", "point", "CTMC makespan(h)", "exp.failures");
-    for &i in &order {
-        println!(
-            "{:<44} {:>16.1} {:>12.0}",
-            sweep.points[i].label(),
-            screened[i].makespan_est / 60.0,
-            screened[i].exp_failures
-        );
+    // Stream the ranking before the DES stage (text mode): a failing
+    // replication must not discard the screening work already done.
+    let ranking: Vec<(String, airesim::analytical::AnalyticOutputs)> =
+        order.iter().map(|&i| (sweep.points[i].label(), screened[i])).collect();
+    if format == Format::Text {
+        print!("{}", report::PrescreenRecord::ranking_text(&ranking));
     }
 
-    // Layer 3: DES-validate the survivors.
+    // Layer 3: DES-validate the survivors, then render the rest (text =
+    // the legacy tables, byte-identical).
     let k = top.min(order.len());
-    println!("\nDES validation of the top {k} ({reps} replications each):");
-    println!("{:<44} {:>14} {:>10}", "point", "DES makespan(h)", "±95%CI");
+    let mut validated = Vec::with_capacity(k);
     for &i in order.iter().take(k) {
         let p = &configs[i];
         let mut vals = Vec::with_capacity(reps);
@@ -655,12 +672,12 @@ fn cmd_prescreen(argv: &[String]) -> Result<()> {
             vals.push(out.makespan / 60.0);
         }
         let s = airesim::stats::Summary::from_values(&vals).unwrap();
-        println!(
-            "{:<44} {:>14.1} {:>10.1}",
-            sweep.points[i].label(),
-            s.mean,
-            s.ci95_halfwidth()
-        );
+        validated.push((sweep.points[i].label(), s));
+    }
+    let record = report::PrescreenRecord { ranking, validated, reps };
+    match format {
+        Format::Json => print!("{}", record.to_json().render() + "\n"),
+        _ => print!("{}", record.validation_text()),
     }
     Ok(())
 }

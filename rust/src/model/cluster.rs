@@ -137,6 +137,9 @@ impl Simulation {
         if self.ctx.p.bad_regen_interval > 0.0 {
             self.ctx.engine.schedule_in(self.ctx.p.bad_regen_interval, Ev::BadRegen);
         }
+        // Global failure clocks (correlated domain outages; no-op — and
+        // no draw — for the plain models).
+        self.policies.failure.on_sim_start(&mut self.ctx);
         // Initial host selection for every job (in id order: earlier jobs
         // get first pick of the pools).
         self.ctx.out.per_job_makespans = vec![0.0; self.ctx.jobs.len()];
@@ -181,6 +184,7 @@ impl Simulation {
                 repair_flow::on_repair_done(ctx, pol, server, stage)
             }
             Ev::BadRegen => flow::on_bad_regen(ctx, pol),
+            Ev::DomainOutage => flow::on_domain_outage(ctx, pol),
             Ev::Inject { idx } => flow::on_inject(ctx, pol, self.injection_buf[idx]),
         }
     }
@@ -232,6 +236,7 @@ impl Simulation {
         if self.ctx.p.bad_regen_interval > 0.0 {
             self.ctx.engine.schedule_in(self.ctx.p.bad_regen_interval, Ev::BadRegen);
         }
+        self.policies.failure.on_sim_start(&mut self.ctx);
         self.ctx.out.per_job_makespans = vec![0.0; self.ctx.jobs.len()];
         for j in 0..self.ctx.jobs.len() {
             flow::attempt_start(&mut self.ctx, &mut self.policies, j);

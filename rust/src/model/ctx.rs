@@ -20,6 +20,7 @@ use crate::model::outputs::RunOutputs;
 use crate::model::pool::Pools;
 use crate::model::repair::RepairShop;
 use crate::model::server::{build_fleet_into, Server, ServerState};
+use crate::model::topology::Topology;
 use crate::sim::engine::Engine;
 use crate::sim::rng::Rng;
 use crate::sim::Time;
@@ -35,6 +36,10 @@ pub struct SimCtx {
     pub jobs: Vec<Job>,
     pub shop: RepairShop,
     pub out: RunOutputs,
+    /// The fleet's failure-domain hierarchy, when `params.topology` is
+    /// configured (consumed by topology-aware selection policies and the
+    /// correlated failure model). `None` = topologically anonymous fleet.
+    pub topo: Option<Topology>,
     pub trace: Option<Trace>,
     /// Pluggable event observer ([`crate::trace::Observer`]): sees every
     /// traced decision point as it happens. `None` by default — the hot
@@ -60,6 +65,7 @@ impl SimCtx {
             jobs: Vec::new(),
             shop: RepairShop::new(),
             out: RunOutputs::default(),
+            topo: None,
             trace: None,
             observer: None,
             burst_sum: 0.0,
@@ -88,6 +94,7 @@ impl SimCtx {
         }
         self.engine.reset(p.job_size as usize + 64);
         self.shop.reset();
+        self.topo = p.topology.as_ref().map(|s| Topology::build(s, p.total_servers()));
         self.out = RunOutputs::default();
         self.trace = None;
         self.observer = None;
@@ -142,6 +149,10 @@ impl SimCtx {
             for j in &self.jobs {
                 if j.phase == JobPhase::Stalled {
                     self.out.stall_time += self.p.max_sim_time - j.stalled_since;
+                }
+                // Still down from a correlated outage at the horizon.
+                if let Some(t) = j.domain_down_since {
+                    self.out.domain_downtime += self.p.max_sim_time - t;
                 }
             }
             self.tr(TraceKind::Horizon);

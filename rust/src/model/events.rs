@@ -44,6 +44,12 @@ pub enum Ev {
     RepairDone { server: ServerId, stage: RepairStage },
     /// Periodic bad-server regeneration tick (assumption 1, case 2).
     BadRegen,
+    /// The aggregate domain-outage clock fired (correlated failure model:
+    /// the superposition of every domain's exponential outage process is
+    /// one clock; the struck level/domain is resolved rate-proportionally
+    /// at delivery, mirroring the `GangFail` fast path). Always current —
+    /// domains never change composition, so no generation guard.
+    DomainOutage,
     /// A scripted failure injection (see [`crate::trace::inject`]);
     /// carries the index into the injection plan.
     Inject { idx: usize },

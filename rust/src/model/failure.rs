@@ -5,7 +5,8 @@
 //! |---|---|
 //! | `gang`       | [`GangExponential`] — one aggregate clock per gang (exponential only) |
 //! | `per_server` | [`PerServerClocks`] — one clock per active server (any distribution) |
-//! | `auto`       | `gang` when the failure family is exponential, else `per_server` |
+//! | `correlated` | [`CorrelatedFailures`] — per-server/gang clocks *plus* domain-outage clocks |
+//! | `auto`       | `gang`/`per_server` by family, wrapped `correlated` when the topology carries outage rates |
 //!
 //! [`GangExponential`] exploits memorylessness: the minimum of N
 //! exponential clocks is `Exp(sum of rates)`, so one event replaces N and
@@ -64,6 +65,20 @@ pub trait FailureModel {
     /// Re-arm after a regeneration tick converted servers while job `j`
     /// is Running.
     fn regen_rearm(&mut self, ctx: &mut SimCtx, j: usize);
+
+    /// One-time hook before the initial host selection: models with
+    /// *global* clocks (correlated domain outages) arm them here. The
+    /// default is a no-op and draws nothing, so plain models keep every
+    /// legacy stream byte-identical.
+    fn on_sim_start(&mut self, _ctx: &mut SimCtx) {}
+
+    /// Resolve an [`Ev::DomainOutage`]: pick the struck (level index,
+    /// domain id) and re-arm the aggregate outage clock. `None` for
+    /// models without domain clocks (which never schedule the event).
+    fn resolve_domain_outage(&mut self, _ctx: &mut SimCtx) -> Option<(usize, u32)> {
+        debug_assert!(false, "model without domain clocks got a DomainOutage");
+        None
+    }
 }
 
 /// Count of bad servers among job `j`'s active gang.
@@ -269,10 +284,127 @@ impl FailureModel for PerServerClocks {
     }
 }
 
+/// Correlated domain outages layered over a base clock model.
+///
+/// The per-gang machinery (interrupt semantics, aggregate or per-server
+/// clocks) delegates verbatim to the wrapped model; on top, every domain
+/// of every topology level runs an exponential outage clock. Their
+/// superposition is one aggregate clock of rate
+/// [`Topology::total_outage_rate`](crate::model::topology::Topology::total_outage_rate)
+/// — the same minimum-of-exponentials trick as [`GangExponential`] — and
+/// the struck level/domain resolves rate-proportionally at delivery.
+/// Domain populations never change, so the clock is always current (no
+/// generation guard); non-exponential families can thin against the same
+/// aggregate envelope later.
+///
+/// What an outage *does* to the fleet lives in
+/// [`crate::model::lifecycle`]'s domain-outage flow; this model only owns
+/// the clocks.
+pub struct CorrelatedFailures {
+    inner: Box<dyn FailureModel>,
+}
+
+impl CorrelatedFailures {
+    pub fn new(inner: Box<dyn FailureModel>) -> CorrelatedFailures {
+        CorrelatedFailures { inner }
+    }
+
+    /// Draw and schedule the next aggregate domain-outage arrival.
+    fn schedule_clock(ctx: &mut SimCtx) {
+        let Some(t) = &ctx.topo else { return };
+        let rate = t.total_outage_rate();
+        if rate <= 0.0 {
+            return; // outage-free topology: the wrapper is inert
+        }
+        let dt = -ctx.rng.next_open_f64().ln() / rate;
+        ctx.engine.schedule_in(dt, Ev::DomainOutage);
+    }
+}
+
+impl FailureModel for CorrelatedFailures {
+    fn name(&self) -> &'static str {
+        "correlated"
+    }
+
+    fn interrupt(&mut self, ctx: &mut SimCtx, j: usize, now: Time) -> Time {
+        self.inner.interrupt(ctx, j, now)
+    }
+
+    fn mark_running(&mut self, ctx: &mut SimCtx, j: usize, now: Time) {
+        self.inner.mark_running(ctx, j, now)
+    }
+
+    fn arm(&mut self, ctx: &mut SimCtx, j: usize) {
+        self.inner.arm(ctx, j)
+    }
+
+    fn resolve_gang_fail(
+        &mut self,
+        ctx: &mut SimCtx,
+        j: usize,
+        gang_gen: u64,
+    ) -> Option<(ServerId, FailureKind)> {
+        self.inner.resolve_gang_fail(ctx, j, gang_gen)
+    }
+
+    fn note_removed(&mut self, j: usize, was_bad: bool) {
+        self.inner.note_removed(j, was_bad)
+    }
+
+    fn note_promoted(&mut self, j: usize, is_bad: bool) {
+        self.inner.note_promoted(j, is_bad)
+    }
+
+    fn recount(&mut self, ctx: &SimCtx, j: usize) {
+        self.inner.recount(ctx, j)
+    }
+
+    fn regen_rearm(&mut self, ctx: &mut SimCtx, j: usize) {
+        self.inner.regen_rearm(ctx, j)
+    }
+
+    fn on_sim_start(&mut self, ctx: &mut SimCtx) {
+        // Stay a transparent decorator: the inner model initializes
+        // first (a no-op and zero draws for today's models).
+        self.inner.on_sim_start(ctx);
+        Self::schedule_clock(ctx);
+    }
+
+    fn resolve_domain_outage(&mut self, ctx: &mut SimCtx) -> Option<(usize, u32)> {
+        let (level, domain) = {
+            let SimCtx { topo, rng, .. } = ctx;
+            let t = topo.as_ref().expect("correlated model requires a topology");
+            let total = t.total_outage_rate();
+            debug_assert!(total > 0.0, "outage fired with zero rate");
+            // Level rate-proportionally (one draw), then the domain
+            // uniformly within the level — the superposed processes are
+            // homogeneous per level.
+            let u = rng.next_f64() * total;
+            let mut level = 0usize;
+            let mut acc = 0.0;
+            for (l, lv) in t.levels().iter().enumerate() {
+                let r = lv.n_domains as f64 * lv.outage_rate;
+                if r <= 0.0 {
+                    continue;
+                }
+                level = l; // last positive-rate level absorbs float edges
+                acc += r;
+                if u < acc {
+                    break;
+                }
+            }
+            let domain = rng.next_below(t.levels()[level].n_domains as u64) as u32;
+            (level, domain)
+        };
+        Self::schedule_clock(ctx);
+        Some((level, domain))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Params;
+    use crate::config::{Params, TopologyLevelSpec, TopologySpec};
     use crate::model::job::JobPhase;
     use crate::model::server::ServerState;
     use crate::sim::rng::Rng;
@@ -348,6 +480,87 @@ mod tests {
         assert!(ctx.jobs[0].active.contains(&victim));
         // The resolution retired the clock: the same gen is now stale.
         assert!(fm.resolve_gang_fail(&mut ctx, 0, 1).is_none());
+    }
+
+    /// Params with a rack/switch topology carrying the given rates.
+    fn topo_params(rack_rate: f64, switch_rate: f64) -> Params {
+        let mut p = Params::small_test();
+        p.topology = Some(TopologySpec {
+            levels: vec![
+                TopologyLevelSpec { name: "rack".into(), size: 4, outage_rate: rack_rate },
+                TopologyLevelSpec {
+                    name: "switch".into(),
+                    size: 2,
+                    outage_rate: switch_rate,
+                },
+            ],
+        });
+        p
+    }
+
+    #[test]
+    fn correlated_arms_one_outage_clock_at_start() {
+        let p = topo_params(0.001, 0.0005);
+        let mut ctx = SimCtx::new(&p, Rng::new(1));
+        let mut fm = CorrelatedFailures::new(Box::new(GangExponential::new(1)));
+        fm.on_sim_start(&mut ctx);
+        assert_eq!(ctx.engine.pending(), 1, "one aggregate outage clock");
+    }
+
+    #[test]
+    fn correlated_without_rates_is_inert() {
+        let p = topo_params(0.0, 0.0);
+        let mut ctx = SimCtx::new(&p, Rng::new(2));
+        let rng_before = ctx.rng.clone();
+        let mut fm = CorrelatedFailures::new(Box::new(GangExponential::new(1)));
+        fm.on_sim_start(&mut ctx);
+        assert_eq!(ctx.engine.pending(), 0);
+        let mut a = rng_before;
+        let mut b = ctx.rng.clone();
+        assert_eq!(a.next_u64(), b.next_u64(), "no rates, no draws");
+    }
+
+    #[test]
+    fn correlated_resolution_picks_a_valid_domain_and_rearms() {
+        let p = topo_params(0.001, 0.0005);
+        let mut ctx = SimCtx::new(&p, Rng::new(3));
+        let mut fm = CorrelatedFailures::new(Box::new(GangExponential::new(1)));
+        fm.on_sim_start(&mut ctx);
+        for _ in 0..200 {
+            let before = ctx.engine.pending();
+            let (level, domain) = fm.resolve_domain_outage(&mut ctx).expect("resolves");
+            let t = ctx.topo.as_ref().unwrap();
+            assert!(level < t.n_levels());
+            assert!(domain < t.levels()[level].n_domains);
+            assert_eq!(ctx.engine.pending(), before + 1, "clock re-armed");
+        }
+    }
+
+    #[test]
+    fn correlated_level_pick_is_rate_proportional() {
+        // rack: 22 domains x 0.003, switch: 11 domains x 0.006 ->
+        // P(rack) = 0.5 exactly. 2000 resolutions keep the split tight.
+        let p = topo_params(0.003, 0.006);
+        let mut ctx = SimCtx::new(&p, Rng::new(4));
+        let mut fm = CorrelatedFailures::new(Box::new(GangExponential::new(1)));
+        let n = 2000;
+        let racks = (0..n)
+            .filter(|_| fm.resolve_domain_outage(&mut ctx).unwrap().0 == 0)
+            .count();
+        let frac = racks as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "rack fraction {frac}");
+    }
+
+    #[test]
+    fn correlated_delegates_gang_machinery() {
+        let p = topo_params(0.001, 0.0);
+        let mut ctx = running_ctx(&p, 5);
+        let mut fm = CorrelatedFailures::new(Box::new(GangExponential::new(1)));
+        fm.recount(&ctx, 0);
+        fm.arm(&mut ctx, 0);
+        assert_eq!(ctx.engine.pending(), 1, "inner gang clock armed");
+        let (victim, _) = fm.resolve_gang_fail(&mut ctx, 0, 1).expect("current gen");
+        assert!(ctx.jobs[0].active.contains(&victim));
     }
 
     #[test]

@@ -45,6 +45,9 @@ pub struct Job {
     pub gen: Generation,
     /// When the job entered Stalled (to account stall time).
     pub stalled_since: Time,
+    /// When a correlated domain outage last stopped this job, if it has
+    /// not resumed running since (attributes downtime to domain events).
+    pub domain_down_since: Option<Time>,
 }
 
 impl Job {
@@ -62,6 +65,7 @@ impl Job {
             standbys: Vec::new(),
             gen: Generation::default(),
             stalled_since: 0.0,
+            domain_down_since: None,
         }
     }
 
@@ -76,6 +80,7 @@ impl Job {
         self.standbys.clear();
         self.gen = Generation::default();
         self.stalled_since = 0.0;
+        self.domain_down_since = None;
     }
 
     /// Total servers currently allotted to the job.

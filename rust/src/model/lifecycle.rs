@@ -159,6 +159,7 @@ pub(crate) fn attempt_start(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
         &mut ctx.jobs[j],
         &mut ctx.pools,
         &mut ctx.fleet,
+        ctx.topo.as_ref(),
         &mut ctx.rng,
     );
     for &id in &alloc.preempted {
@@ -231,6 +232,10 @@ pub(crate) fn on_recovery_done(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize, 
 pub(crate) fn start_running(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
     let now = ctx.now();
     debug_assert!(ctx.jobs[j].active.len() >= ctx.p.job_size as usize);
+    // Close out downtime attributed to a correlated domain outage.
+    if let Some(t) = ctx.jobs[j].domain_down_since.take() {
+        ctx.out.domain_downtime += now - t;
+    }
     ctx.jobs[j].resume(now);
     pol.failure.mark_running(ctx, j, now);
     if ctx.jobs[j].remaining >= ctx.p.job_len {
@@ -295,6 +300,167 @@ pub(crate) fn on_preempt_arrive(ctx: &mut SimCtx, pol: &mut PolicySet, server: S
             // No longer needed: drain back.
             ctx.pools.route_freed(&mut ctx.fleet, server);
             retry_stalled(ctx, pol);
+        }
+    }
+}
+
+/// A correlated domain outage: the failure model resolves *which* domain
+/// was struck (and re-arms its clock); this flow takes every up-server in
+/// that domain down as one event.
+///
+/// Scope of the blast: servers currently computing (`JobActive`), warm
+/// standbys, and idle working-pool servers — everything on the struck
+/// fabric. Servers already in the repair pipeline, in spare-pool transit,
+/// or retired are unaffected; the spare pool itself runs off-fabric
+/// (other workloads, other network), so `SparePool` servers are exempt.
+/// Victims go through the normal repair pipeline but do *not* accrue
+/// retirement/failure-history score — the outage is exogenous to the
+/// server (a switch died, not the host).
+pub(crate) fn on_domain_outage(ctx: &mut SimCtx, pol: &mut PolicySet) {
+    let Some((level, domain)) = pol.failure.resolve_domain_outage(ctx) else {
+        return;
+    };
+    let now = ctx.now();
+    let range = ctx
+        .topo
+        .as_ref()
+        .expect("domain outage without a topology")
+        .servers_of(level, domain);
+    // Collect the blast in id order (deterministic processing order).
+    let mut hit: Vec<ServerId> = Vec::new();
+    for id in range {
+        if matches!(
+            ctx.fleet[id as usize].state,
+            ServerState::JobActive | ServerState::JobStandby | ServerState::WorkingIdle
+        ) {
+            hit.push(id);
+        }
+    }
+    ctx.out.domain_failures += 1;
+    ctx.out.domain_servers_lost += hit.len() as u64;
+    ctx.out.domain_max_blast = ctx.out.domain_max_blast.max(hit.len() as u64);
+    ctx.tr(TraceKind::DomainFailure {
+        level: level as u32,
+        domain_id: domain,
+        servers_hit: hit.len(),
+    });
+    if hit.is_empty() {
+        return;
+    }
+
+    // Pause every running job that lost an active server, *before*
+    // detaching anyone: progress and per-server ages must be committed
+    // against the pre-blast gang. `hit_actives` remembers each job's
+    // fallen active servers in id order, to pair standby swaps with
+    // their victims in the trace.
+    let mut interrupted: Vec<usize> = Vec::new(); // ascending job ids
+    let mut hit_actives: Vec<(usize, ServerId)> = Vec::new();
+    for &id in &hit {
+        if ctx.fleet[id as usize].state == ServerState::JobActive {
+            let j = ctx.fleet[id as usize].assigned_job.expect("active implies assigned")
+                as usize;
+            hit_actives.push((j, id));
+            if ctx.jobs[j].phase == JobPhase::Running && !interrupted.contains(&j) {
+                interrupted.push(j);
+            }
+        }
+    }
+    for &j in &interrupted {
+        let burst = pol.failure.interrupt(ctx, j, now);
+        ctx.burst_sum += burst;
+        ctx.burst_count += 1;
+        let done = ctx.p.job_len - ctx.jobs[j].remaining;
+        let lost = pol.checkpoint.work_lost(done);
+        ctx.jobs[j].remaining += lost;
+        ctx.out.work_lost += lost;
+        ctx.jobs[j].gen.bump(); // invalidate JobComplete
+        ctx.jobs[j].domain_down_since = Some(now);
+    }
+
+    // Detach the victims and send them through the repair pipeline. No
+    // diagnosis draw (the struck domain is self-evident) and no
+    // retirement score; `assigned_job` stays set so job servers return
+    // to their job after repair, exactly like a blamed failure (§II-B).
+    let mut touched: Vec<usize> = Vec::new(); // jobs that lost any server
+    for &id in &hit {
+        let state = ctx.fleet[id as usize].state;
+        ctx.fleet[id as usize].gen.bump(); // retire in-flight per-server clocks
+        match state {
+            ServerState::WorkingIdle => {
+                let removed = ctx.pools.remove_idle(id);
+                debug_assert!(removed, "idle server {id} missing from the free-list");
+            }
+            ServerState::JobActive | ServerState::JobStandby => {
+                let j = ctx.fleet[id as usize]
+                    .assigned_job
+                    .expect("allotted implies assigned") as usize;
+                if state == ServerState::JobActive {
+                    pol.failure.note_removed(j, ctx.fleet[id as usize].is_bad);
+                }
+                let removed = ctx.jobs[j].remove(id);
+                debug_assert!(removed, "server {id} not in job {j}");
+                if !touched.contains(&j) {
+                    touched.push(j);
+                }
+            }
+            _ => unreachable!("only up states are collected"),
+        }
+        repair_flow::start_repair(ctx, pol, id);
+    }
+
+    // Let every interrupted job continue: refill from warm standbys when
+    // the blast fits, else the whole-job interruption `anti_affinity`
+    // placement exists to avoid — a full host selection.
+    for &j in &interrupted {
+        // Pair each promotion with one of this job's fallen actives (id
+        // order), so the trace's swap events name their victims exactly
+        // as the single-failure path does.
+        let mut victims = hit_actives.iter().filter(|&&(job, _)| job == j);
+        while ctx.jobs[j].active.len() < ctx.p.job_size as usize {
+            match ctx.jobs[j].promote_standby() {
+                Some(s) => {
+                    let is_bad = ctx.fleet[s as usize].is_bad;
+                    pol.failure.note_promoted(j, is_bad);
+                    ctx.fleet[s as usize].state = ServerState::JobActive;
+                    ctx.out.standby_swaps += 1;
+                    let &(_, failed) =
+                        victims.next().expect("one fallen active per promotion");
+                    ctx.tr(TraceKind::StandbySwap { failed, replacement: s });
+                }
+                None => break,
+            }
+        }
+        if ctx.jobs[j].active.len() >= ctx.p.job_size as usize {
+            begin_recovery(ctx, pol, j);
+        } else {
+            ctx.out.domain_job_interruptions += 1;
+            ctx.out.host_selections += 1;
+            attempt_start(ctx, pol, j);
+        }
+    }
+
+    // Jobs disrupted outside Running (standby theft, or servers stolen
+    // mid-recovery/selection): when the surviving allotment can no longer
+    // cover `job_size`, invalidate the pending phase event and re-select
+    // — a RecoveryDone/SelectionDone must never find the gang short.
+    for j in touched {
+        if interrupted.contains(&j) {
+            continue;
+        }
+        match ctx.jobs[j].phase {
+            JobPhase::Recovering | JobPhase::Selecting
+                if ctx.jobs[j].allotted() < ctx.p.job_size as usize =>
+            {
+                ctx.jobs[j].gen.bump();
+                ctx.jobs[j].domain_down_since.get_or_insert(now);
+                ctx.out.domain_job_interruptions += 1;
+                ctx.out.host_selections += 1;
+                attempt_start(ctx, pol, j);
+            }
+            // Running (lost standbys only), Stalled (no pending event,
+            // repairs will re-trigger it), or still-covered phases: the
+            // normal flow absorbs the loss.
+            _ => {}
         }
     }
 }

@@ -12,7 +12,10 @@
 //! plus [`checkpoint`] (work-loss/restart policies: `continuous`,
 //! `periodic`), [`job`] (progress semantics), [`diagnosis`] (inputs
 //! 12–13), [`retirement`] (failure-score retirement, §II-B), [`regen`]
-//! (bad-server regeneration), and [`outputs`] (measured outputs, §III-B).
+//! (bad-server regeneration), [`topology`] (failure-domain hierarchy:
+//! feeds the `correlated` failure model and the `anti_affinity`/domain
+//! `locality` selection policies), and [`outputs`] (measured outputs,
+//! §III-B).
 //!
 //! The composition layer: [`ctx::SimCtx`] holds the shared state,
 //! [`policy::PolicySet`]/[`policy::PolicySpec`] select implementations by
@@ -39,6 +42,7 @@ pub mod retirement;
 pub mod scheduler;
 pub mod selection;
 pub mod server;
+pub mod topology;
 
 pub use cluster::{ReplicationRunner, Simulation};
 pub use outputs::RunOutputs;

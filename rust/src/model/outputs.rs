@@ -56,6 +56,22 @@ pub struct RunOutputs {
     /// Useful work lost to checkpoint granularity (minutes; 0 under the
     /// paper's continuous asynchronous checkpointing).
     pub work_lost: Time,
+
+    // ---- correlated domain outages (topology subsystem; all zero when
+    // no `topology:` is configured) ----
+    /// Domain-outage events delivered (rack/switch/... level clocks).
+    pub domain_failures: u64,
+    /// Up-servers taken down by domain outages, summed over events.
+    pub domain_servers_lost: u64,
+    /// Most up-servers lost to a single domain outage (blast radius).
+    pub domain_max_blast: u64,
+    /// Whole-job interruptions: domain outages a job could not absorb
+    /// with warm standbys (forced back into host selection or a stall).
+    pub domain_job_interruptions: u64,
+    /// Job downtime attributable to correlated domain outages (minutes
+    /// from each domain-caused stop until the job runs again).
+    pub domain_downtime: Time,
+
     /// Events the engine delivered (perf accounting).
     pub events_delivered: u64,
 }

@@ -4,17 +4,27 @@
 //!
 //! ```yaml
 //! policies:
-//!   selection: locality      # first_fit | random | locality
+//!   selection: locality      # first_fit | random | locality | anti_affinity | power_of_two_choices
 //!   repair: job_first        # fifo | lifo | job_first
 //!   checkpoint: periodic     # auto | continuous | periodic
-//!   failure: auto            # auto | gang | per_server
+//!   failure: auto            # auto | gang | per_server | correlated
 //! ```
+//!
+//! `anti_affinity` and `correlated` require a configured `topology:`
+//! block (rejected at build time otherwise); `auto` failure clocks wrap
+//! themselves in [`CorrelatedFailures`] whenever the topology carries
+//! outage rates, so topology configs get domain outages without naming a
+//! model.
 
 use crate::config::{DistKind, Params};
 use crate::model::checkpoint::{CheckpointPolicy, Continuous, Periodic};
-use crate::model::failure::{FailureModel, GangExponential, PerServerClocks};
+use crate::model::failure::{
+    CorrelatedFailures, FailureModel, GangExponential, PerServerClocks,
+};
 use crate::model::repair::{Fifo, JobFirst, Lifo, RepairPolicy};
-use crate::model::selection::{FirstFit, Locality, Random, SelectionPolicy};
+use crate::model::selection::{
+    AntiAffinity, FirstFit, Locality, PowerOfTwoChoices, Random, SelectionPolicy,
+};
 
 /// The four policy subsystems of one simulation run.
 pub struct PolicySet {
@@ -54,13 +64,14 @@ impl Default for PolicySpec {
 }
 
 /// Valid selection-policy names.
-pub const SELECTION_NAMES: &[&str] = &["first_fit", "random", "locality"];
+pub const SELECTION_NAMES: &[&str] =
+    &["first_fit", "random", "locality", "anti_affinity", "power_of_two_choices"];
 /// Valid repair-policy names.
 pub const REPAIR_NAMES: &[&str] = &["fifo", "lifo", "job_first"];
 /// Valid checkpoint-policy names.
 pub const CHECKPOINT_NAMES: &[&str] = &["auto", "continuous", "periodic"];
 /// Valid failure-model names.
-pub const FAILURE_NAMES: &[&str] = &["auto", "gang", "per_server"];
+pub const FAILURE_NAMES: &[&str] = &["auto", "gang", "per_server", "correlated"];
 
 impl PolicySpec {
     /// Set one axis by name (`selection`, `repair`, `checkpoint`,
@@ -96,6 +107,17 @@ impl PolicySpec {
             "first_fit" => Box::new(FirstFit),
             "random" => Box::new(Random),
             "locality" => Box::new(Locality),
+            "anti_affinity" => {
+                if p.topology.is_none() {
+                    return Err(
+                        "selection policy `anti_affinity` requires a `topology:` block \
+                         (it spreads gangs across failure domains)"
+                            .into(),
+                    );
+                }
+                Box::new(AntiAffinity)
+            }
+            "power_of_two_choices" => Box::new(PowerOfTwoChoices),
             other => return Err(format!("unknown selection policy `{other}`")),
         };
         let repair: Box<dyn RepairPolicy> = match self.repair.as_str() {
@@ -125,6 +147,28 @@ impl PolicySpec {
             other => return Err(format!("unknown checkpoint policy `{other}`")),
         };
         let exponential = matches!(p.failure_dist, DistKind::Exponential);
+        let outage_rates = p.topology.as_ref().is_some_and(|t| t.has_outages());
+        // A plain clock model named against a topology that carries
+        // outage rates would silently drop those rates — domain metrics
+        // all zero, no signal. Refuse; set the rates to 0 to compare
+        // without correlated outages.
+        let plain_vs_rates = |name: &str| -> Result<(), String> {
+            if outage_rates {
+                return Err(format!(
+                    "failure model `{name}` would ignore the topology's outage \
+                     rates; use `correlated` (or `auto`), or set the rates to 0"
+                ));
+            }
+            Ok(())
+        };
+        // The family-appropriate per-gang clock model (`auto` resolution).
+        let auto_inner = |n_jobs: usize| -> Box<dyn FailureModel> {
+            if exponential {
+                Box::new(GangExponential::new(n_jobs))
+            } else {
+                Box::new(PerServerClocks)
+            }
+        };
         let failure: Box<dyn FailureModel> = match self.failure.as_str() {
             "gang" => {
                 if !exponential {
@@ -133,14 +177,32 @@ impl PolicySpec {
                         p.failure_dist.name()
                     ));
                 }
+                plain_vs_rates("gang")?;
                 Box::new(GangExponential::new(n_jobs))
             }
-            "per_server" => Box::new(PerServerClocks),
+            "per_server" => {
+                plain_vs_rates("per_server")?;
+                Box::new(PerServerClocks)
+            }
+            "correlated" => {
+                if p.topology.is_none() {
+                    return Err(
+                        "failure model `correlated` requires a `topology:` block \
+                         (its outage clocks are per failure domain)"
+                            .into(),
+                    );
+                }
+                Box::new(CorrelatedFailures::new(auto_inner(n_jobs)))
+            }
+            // `auto` resolves by clock family — and wraps correlated
+            // domain-outage clocks on top whenever the topology carries
+            // outage rates (a topology config gets them without naming a
+            // model; no topology keeps the legacy models untouched).
             "auto" => {
-                if exponential {
-                    Box::new(GangExponential::new(n_jobs))
+                if outage_rates {
+                    Box::new(CorrelatedFailures::new(auto_inner(n_jobs)))
                 } else {
-                    Box::new(PerServerClocks)
+                    auto_inner(n_jobs)
                 }
             }
             other => return Err(format!("unknown failure model `{other}`")),
@@ -193,9 +255,25 @@ mod tests {
         assert!(err.contains("exponential"), "{err}");
     }
 
+    /// Params with a minimal one-level topology at the given per-domain
+    /// outage rate.
+    fn topo_params(outage_rate: f64) -> Params {
+        let mut p = Params::small_test();
+        p.topology = Some(crate::config::TopologySpec {
+            levels: vec![crate::config::TopologyLevelSpec {
+                name: "rack".into(),
+                size: 8,
+                outage_rate,
+            }],
+        });
+        p
+    }
+
     #[test]
     fn every_registered_name_builds() {
-        let p = Params::small_test();
+        // Rate 0: plain models are legal alongside the topology (with
+        // rates they refuse — see plain_models_refuse_configured_rates).
+        let p = topo_params(0.0);
         for &s in SELECTION_NAMES {
             for &r in REPAIR_NAMES {
                 for &c in CHECKPOINT_NAMES {
@@ -210,6 +288,65 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn topology_policies_require_a_topology() {
+        let p = Params::small_test(); // no topology
+        let mut spec = PolicySpec::default();
+        spec.set("selection", "anti_affinity").unwrap();
+        let err = spec.build(&p).unwrap_err();
+        assert!(err.contains("topology"), "{err}");
+
+        let mut spec = PolicySpec::default();
+        spec.set("failure", "correlated").unwrap();
+        let err = spec.build(&p).unwrap_err();
+        assert!(err.contains("topology"), "{err}");
+
+        // With a topology both build.
+        let p = topo_params(0.001);
+        let mut spec = PolicySpec::default();
+        spec.set("selection", "anti_affinity").unwrap();
+        spec.set("failure", "correlated").unwrap();
+        let set = spec.build(&p).unwrap();
+        assert_eq!(set.selection.name(), "anti_affinity");
+        assert_eq!(set.failure.name(), "correlated");
+    }
+
+    #[test]
+    fn auto_failure_wraps_correlated_only_with_outage_rates() {
+        // Outage rates configured: auto = correlated over the family model.
+        let p = topo_params(0.001);
+        let set = PolicySpec::default().build(&p).unwrap();
+        assert_eq!(set.failure.name(), "correlated");
+
+        // Topology without rates: auto stays the plain family model.
+        let set = PolicySpec::default().build(&topo_params(0.0)).unwrap();
+        assert_eq!(set.failure.name(), "gang");
+
+        // No topology at all: unchanged legacy resolution.
+        let set = PolicySpec::default().build(&Params::small_test()).unwrap();
+        assert_eq!(set.failure.name(), "gang");
+    }
+
+    #[test]
+    fn plain_models_refuse_configured_outage_rates() {
+        // Naming `gang`/`per_server` against a rated topology would
+        // silently drop the configured outages — hard error instead.
+        let p = topo_params(0.001);
+        for name in ["gang", "per_server"] {
+            let mut spec = PolicySpec::default();
+            spec.set("failure", name).unwrap();
+            let err = spec.build(&p).unwrap_err();
+            assert!(err.contains("outage"), "{name}: {err}");
+        }
+        // With the rates at 0 both are fine again.
+        let quiet = topo_params(0.0);
+        for name in ["gang", "per_server"] {
+            let mut spec = PolicySpec::default();
+            spec.set("failure", name).unwrap();
+            spec.build(&quiet).unwrap();
         }
     }
 }

@@ -73,6 +73,20 @@ impl Pools {
         self.idle.swap(k, last);
     }
 
+    /// Remove a *specific* server from the idle free-list (a domain
+    /// outage takes idle servers down in place). Returns false if the
+    /// server was not idle. O(n) scan, O(1) removal — outage events are
+    /// rare next to allocations.
+    pub fn remove_idle(&mut self, id: ServerId) -> bool {
+        match self.idle.iter().position(|&x| x == id) {
+            Some(i) => {
+                self.idle.swap_remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Take one idle working-pool server (LIFO: cache-warm first).
     pub fn take_idle(&mut self, fleet: &mut [Server]) -> Option<ServerId> {
         let id = self.idle.pop()?;
@@ -191,6 +205,16 @@ mod tests {
             assert!(pools.start_preempt(&mut fleet, 0.0).is_some());
         }
         assert!(pools.start_preempt(&mut fleet, 0.0).is_none());
+    }
+
+    #[test]
+    fn remove_idle_takes_a_specific_server() {
+        let (_, mut pools) = setup();
+        assert!(pools.remove_idle(30));
+        assert_eq!(pools.idle_count(), 71);
+        assert!(!pools.idle_ids().contains(&30));
+        assert!(!pools.remove_idle(30), "already removed");
+        assert!(!pools.remove_idle(999), "never existed");
     }
 
     #[test]

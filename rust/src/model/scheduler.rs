@@ -17,6 +17,7 @@ use crate::model::job::Job;
 use crate::model::pool::Pools;
 use crate::model::selection::SelectionPolicy;
 use crate::model::server::{Server, ServerState};
+use crate::model::topology::Topology;
 use crate::sim::rng::Rng;
 
 /// Result of one allocation attempt.
@@ -40,13 +41,14 @@ pub fn allocate(
     job: &mut Job,
     pools: &mut Pools,
     fleet: &mut [Server],
+    topo: Option<&Topology>,
     rng: &mut Rng,
 ) -> AllocOutcome {
     let target = (p.job_size + p.warm_standbys) as usize;
 
     // 1. Working-pool idle servers, chosen by the selection policy.
     while job.allotted() < target {
-        match policy.take_idle(job, pools, fleet, rng) {
+        match policy.take_idle(job, pools, fleet, topo, rng) {
             Some(id) => {
                 let s = &mut fleet[id as usize];
                 s.state = ServerState::JobStandby;
@@ -103,7 +105,7 @@ mod tests {
         let p = Params::small_test(); // job 64 + 4 standby, pool 72
         let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
         let out =
-            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, None, &mut rng);
         assert!(out.can_start);
         assert!(out.preempted.is_empty());
         assert_eq!(job.allotted(), 68);
@@ -121,7 +123,7 @@ mod tests {
         p.spare_pool = 16;
         let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
         let out =
-            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, None, &mut rng);
         // 60 idle taken, 8 preemptions requested (target 68), can't start
         // yet: only 60 on hand < 64.
         assert!(!out.can_start);
@@ -137,7 +139,7 @@ mod tests {
         p.spare_pool = 4;
         let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
         let out =
-            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, None, &mut rng);
         assert!(!out.can_start);
         assert_eq!(out.preempted.len(), 4); // all spares taken
         assert_eq!(pools.spare_count(), 0);
@@ -149,11 +151,11 @@ mod tests {
         p.working_pool = 60;
         let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
         let first =
-            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, None, &mut rng);
         assert_eq!(first.preempted.len(), 8);
         // Re-running allocation while 8 are in transit must not preempt more.
         let second =
-            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+            allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, None, &mut rng);
         assert!(second.preempted.is_empty());
     }
 
@@ -161,7 +163,7 @@ mod tests {
     fn activate_promotes_to_job_size() {
         let p = Params::small_test();
         let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
-        allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, &mut rng);
+        allocate(&p, &mut FirstFit, &mut job, &mut pools, &mut fleet, None, &mut rng);
         assert!(activate(&p, &mut job, &mut fleet));
         assert_eq!(job.active.len(), 64);
         assert_eq!(job.standbys.len(), 4);
@@ -174,7 +176,7 @@ mod tests {
     fn random_policy_allocates_same_count() {
         let p = Params::small_test();
         let (mut job, mut pools, mut fleet, mut rng) = setup(&p);
-        let out = allocate(&p, &mut Random, &mut job, &mut pools, &mut fleet, &mut rng);
+        let out = allocate(&p, &mut Random, &mut job, &mut pools, &mut fleet, None, &mut rng);
         assert!(out.can_start);
         assert_eq!(job.allotted(), 68);
     }

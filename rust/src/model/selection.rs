@@ -10,12 +10,21 @@
 //! |---|---|
 //! | `first_fit` | [`FirstFit`] — LIFO free-list (cache-warm, default) |
 //! | `random`    | [`Random`] — uniform over the idle list |
-//! | `locality`  | [`Locality`] — nearest id to the job's gang (rack proxy) |
+//! | `locality`  | [`Locality`] — pack within failure domains (id proximity when no topology) |
+//! | `anti_affinity` | [`AntiAffinity`] — spread the gang across failure domains |
+//! | `power_of_two_choices` | [`PowerOfTwoChoices`] — sample 2, keep the less failure-prone |
+//!
+//! Topology-aware policies read the fleet's failure-domain hierarchy
+//! ([`crate::model::topology::Topology`], threaded through from
+//! [`crate::model::ctx::SimCtx`]); with no `topology:` configured they
+//! degrade exactly to their pre-topology behavior (`locality`) or are
+//! rejected at build time (`anti_affinity`).
 
 use crate::model::events::ServerId;
 use crate::model::job::Job;
 use crate::model::pool::Pools;
 use crate::model::server::Server;
+use crate::model::topology::Topology;
 use crate::sim::rng::Rng;
 
 /// Pick-one-idle-server policy over the working pool's free-list.
@@ -30,6 +39,7 @@ pub trait SelectionPolicy {
         job: &Job,
         pools: &mut Pools,
         fleet: &mut [Server],
+        topo: Option<&Topology>,
         rng: &mut Rng,
     ) -> Option<ServerId>;
 }
@@ -49,6 +59,7 @@ impl SelectionPolicy for FirstFit {
         _job: &Job,
         pools: &mut Pools,
         fleet: &mut [Server],
+        _topo: Option<&Topology>,
         _rng: &mut Rng,
     ) -> Option<ServerId> {
         pools.take_idle(fleet)
@@ -71,6 +82,7 @@ impl SelectionPolicy for Random {
         _job: &Job,
         pools: &mut Pools,
         fleet: &mut [Server],
+        _topo: Option<&Topology>,
         rng: &mut Rng,
     ) -> Option<ServerId> {
         // Uniform choice = swap a random element to the back, then pop.
@@ -84,10 +96,16 @@ impl SelectionPolicy for Random {
     }
 }
 
-/// Prefer the idle server whose id is numerically closest to the job's
-/// existing gang. Server ids are assigned rack-contiguously at fleet
-/// construction, so id distance is a locality proxy: a tight id range
-/// approximates fewer network hops for the gang's collectives.
+/// Pack the gang: prefer the idle server topologically closest to the
+/// job's existing allotment — same rack first, then same switch, and so
+/// on up the domain hierarchy (ties broken by id proximity). Tight
+/// packing means fewer network hops for the gang's collectives — and the
+/// maximum exposure to a single domain outage (the comparison
+/// `anti_affinity` exists to make).
+///
+/// With no `topology:` configured this is exactly the pre-topology
+/// id-proximity policy (server ids are assigned domain-contiguously, so
+/// id distance was always a domain proxy): byte-identical picks.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Locality;
 
@@ -101,6 +119,7 @@ impl SelectionPolicy for Locality {
         job: &Job,
         pools: &mut Pools,
         fleet: &mut [Server],
+        topo: Option<&Topology>,
         _rng: &mut Rng,
     ) -> Option<ServerId> {
         // Anchor on the job's first allotted server; with no allotment yet
@@ -113,13 +132,17 @@ impl SelectionPolicy for Locality {
         if idle.is_empty() {
             return None;
         }
+        // Minimize (domain distance, id distance); first minimum wins.
+        // Without a topology every domain distance is 0 and the key
+        // reduces to the legacy id-proximity scan.
         let mut best = 0usize;
-        let mut best_d = u32::MAX;
+        let mut best_key = (usize::MAX, u32::MAX);
         for (k, &id) in idle.iter().enumerate() {
-            let d = id.abs_diff(anchor);
-            if d < best_d {
+            let dist = topo.map_or(0, |t| t.distance(id, anchor));
+            let key = (dist, id.abs_diff(anchor));
+            if key < best_key {
                 best = k;
-                best_d = d;
+                best_key = key;
             }
         }
         pools.swap_idle_to_back(best);
@@ -127,10 +150,121 @@ impl SelectionPolicy for Locality {
     }
 }
 
+/// Spread the gang: prefer the idle server whose failure domains hold the
+/// fewest of the job's current allotment, comparing the *largest* blast
+/// radius first (topmost level, e.g. switch) and descending to racks on
+/// ties. Decorrelates the gang from single-domain outages: a struck
+/// domain hits few enough of the job's servers that warm standbys absorb
+/// the blast. Requires a configured `topology:` (enforced at policy
+/// build); ties break in idle-list order, so picks stay deterministic.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AntiAffinity;
+
+impl SelectionPolicy for AntiAffinity {
+    fn name(&self) -> &'static str {
+        "anti_affinity"
+    }
+
+    fn take_idle(
+        &mut self,
+        job: &Job,
+        pools: &mut Pools,
+        fleet: &mut [Server],
+        topo: Option<&Topology>,
+        _rng: &mut Rng,
+    ) -> Option<ServerId> {
+        let Some(t) = topo else {
+            // Unreachable via the policy registry (build requires a
+            // topology); LIFO keeps direct construction total.
+            return pools.take_idle(fleet);
+        };
+        let idle = pools.idle_ids();
+        if idle.is_empty() {
+            return None;
+        }
+        // Per-level occupancy of the job's current allotment (active +
+        // standbys), computed once per pick: O(gang × levels + idle).
+        let counts: Vec<Vec<u32>> = t
+            .levels()
+            .iter()
+            .enumerate()
+            .map(|(l, level)| {
+                let mut c = vec![0u32; level.n_domains as usize];
+                for &id in job.active.iter().chain(job.standbys.iter()) {
+                    c[t.domain_of(l, id) as usize] += 1;
+                }
+                c
+            })
+            .collect();
+        // Least-loaded domain chain, compared top level down; the first
+        // strictly-better candidate in idle-list order wins.
+        let strictly_better = |a: ServerId, b: ServerId| -> bool {
+            for l in (0..t.n_levels()).rev() {
+                let ca = counts[l][t.domain_of(l, a) as usize];
+                let cb = counts[l][t.domain_of(l, b) as usize];
+                if ca != cb {
+                    return ca < cb;
+                }
+            }
+            false
+        };
+        let mut best = 0usize;
+        for (k, &id) in idle.iter().enumerate().skip(1) {
+            if strictly_better(id, idle[best]) {
+                best = k;
+            }
+        }
+        pools.swap_idle_to_back(best);
+        pools.take_idle(fleet)
+    }
+}
+
+/// Power of two choices: sample two idle servers uniformly and keep the
+/// one with fewer lifetime failures (ties keep the first sample). The
+/// classic load-balancing trick applied to reliability — most of
+/// `random`'s spreading, plus a cheap bias away from failure-prone
+/// hardware (pairs with retirement and regeneration, where failure
+/// history predicts badness). Always consumes exactly two draws, so the
+/// stream stays aligned regardless of the pick.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PowerOfTwoChoices;
+
+impl SelectionPolicy for PowerOfTwoChoices {
+    fn name(&self) -> &'static str {
+        "power_of_two_choices"
+    }
+
+    fn take_idle(
+        &mut self,
+        _job: &Job,
+        pools: &mut Pools,
+        fleet: &mut [Server],
+        _topo: Option<&Topology>,
+        rng: &mut Rng,
+    ) -> Option<ServerId> {
+        let n = pools.idle_count();
+        if n == 0 {
+            return None;
+        }
+        let k1 = rng.next_below(n as u64) as usize;
+        let k2 = rng.next_below(n as u64) as usize;
+        let idle = pools.idle_ids();
+        let pick = if fleet[idle[k2] as usize].total_failures
+            < fleet[idle[k1] as usize].total_failures
+        {
+            k2
+        } else {
+            k1
+        };
+        pools.swap_idle_to_back(pick);
+        pools.take_idle(fleet)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Params;
+    use crate::config::{Params, TopologyLevelSpec, TopologySpec};
     use crate::model::server::build_fleet;
 
     fn setup() -> (Job, Pools, Vec<Server>, Rng) {
@@ -141,11 +275,21 @@ mod tests {
         (Job::new(p.job_len), pools, fleet, rng)
     }
 
+    fn rack_switch_topo(total: u32) -> Topology {
+        let spec = TopologySpec {
+            levels: vec![
+                TopologyLevelSpec { name: "rack".into(), size: 4, outage_rate: 0.0 },
+                TopologyLevelSpec { name: "switch".into(), size: 2, outage_rate: 0.0 },
+            ],
+        };
+        Topology::build(&spec, total)
+    }
+
     #[test]
     fn first_fit_takes_lifo() {
         let (job, mut pools, mut fleet, mut rng) = setup();
         let top = *pools.idle_ids().last().unwrap();
-        let got = FirstFit.take_idle(&job, &mut pools, &mut fleet, &mut rng);
+        let got = FirstFit.take_idle(&job, &mut pools, &mut fleet, None, &mut rng);
         assert_eq!(got, Some(top));
     }
 
@@ -155,7 +299,7 @@ mod tests {
         let n = pools.idle_count();
         let mut seen = Vec::new();
         let mut pol = Random;
-        while let Some(id) = pol.take_idle(&job, &mut pools, &mut fleet, &mut rng) {
+        while let Some(id) = pol.take_idle(&job, &mut pools, &mut fleet, None, &mut rng) {
             seen.push(id);
         }
         assert_eq!(seen.len(), n);
@@ -175,24 +319,152 @@ mod tests {
         pools.swap_idle_to_back(k);
         assert_eq!(pools.take_idle(&mut fleet), Some(30));
 
-        let got = pol.take_idle(&job, &mut pools, &mut fleet, &mut rng).unwrap();
+        let got = pol.take_idle(&job, &mut pools, &mut fleet, None, &mut rng).unwrap();
         assert!(got == 29 || got == 31, "nearest to 30, got {got}");
+    }
+
+    #[test]
+    fn locality_with_topology_prefers_same_rack_over_nearer_id() {
+        let (mut job, mut pools, mut fleet, mut rng) = setup();
+        let topo = rack_switch_topo(fleet.len() as u32);
+        // Anchor in rack 1 (ids 4..8). Leave exactly ids 3 and 7 idle:
+        // id 3 is numerically closer to the anchor 4, but id 7 shares the
+        // rack — the domain-true policy must take 7.
+        let mut pol = Locality;
+        job.active.push(4);
+        let keep = [3u32, 7u32];
+        let all: Vec<ServerId> = pools.idle_ids().to_vec();
+        for id in all {
+            if !keep.contains(&id) {
+                assert!(pools.remove_idle(id));
+            }
+        }
+        let got =
+            pol.take_idle(&job, &mut pools, &mut fleet, Some(&topo), &mut rng).unwrap();
+        assert_eq!(got, 7, "same-rack beats nearer id");
+        // Without the topology, the same layout picks the nearer id 3.
+        let (mut job2, mut pools2, mut fleet2, mut rng2) = setup();
+        job2.active.push(4);
+        let all: Vec<ServerId> = pools2.idle_ids().to_vec();
+        for id in all {
+            if !keep.contains(&id) {
+                assert!(pools2.remove_idle(id));
+            }
+        }
+        let got = pol.take_idle(&job2, &mut pools2, &mut fleet2, None, &mut rng2).unwrap();
+        assert_eq!(got, 3, "legacy id proximity without topology");
     }
 
     #[test]
     fn locality_without_anchor_falls_back_to_lifo() {
         let (job, mut pools, mut fleet, mut rng) = setup();
         let top = *pools.idle_ids().last().unwrap();
-        let got = Locality.take_idle(&job, &mut pools, &mut fleet, &mut rng);
+        let got = Locality.take_idle(&job, &mut pools, &mut fleet, None, &mut rng);
         assert_eq!(got, Some(top));
+    }
+
+    #[test]
+    fn anti_affinity_spreads_across_top_domains() {
+        let (mut job, mut pools, mut fleet, mut rng) = setup();
+        let topo = rack_switch_topo(fleet.len() as u32);
+        let mut pol = AntiAffinity;
+        // Successive picks must land in distinct switch domains until
+        // every domain with an idle server is occupied once (spare-pool
+        // servers are not idle, so count reachable domains, not all).
+        let mut reachable: Vec<u32> =
+            pools.idle_ids().iter().map(|&id| topo.domain_of(1, id)).collect();
+        reachable.sort_unstable();
+        reachable.dedup();
+        let mut seen_domains = Vec::new();
+        for _ in 0..reachable.len() {
+            let id = pol
+                .take_idle(&job, &mut pools, &mut fleet, Some(&topo), &mut rng)
+                .unwrap();
+            let dom = topo.domain_of(1, id);
+            assert!(
+                !seen_domains.contains(&dom),
+                "pick {id} revisited switch domain {dom} before spreading"
+            );
+            seen_domains.push(dom);
+            job.standbys.push(id);
+        }
+        // One more pick wraps around to an already-used domain, but the
+        // least-occupied one at the rack level.
+        let id = pol
+            .take_idle(&job, &mut pools, &mut fleet, Some(&topo), &mut rng)
+            .unwrap();
+        assert_eq!(
+            job.standbys
+                .iter()
+                .filter(|&&s| topo.domain_of(1, s) == topo.domain_of(1, id))
+                .count(),
+            1,
+            "wrap-around joins a singly-occupied domain"
+        );
+    }
+
+    #[test]
+    fn power_of_two_choices_prefers_fewer_failures() {
+        // Two idle servers, one failure-free: the clean one wins unless
+        // both samples land on the failed one, so P(clean first) = 3/4
+        // against 1/2 for uniform random. 200 trials put the two far
+        // apart (>5 sigma) for any seed.
+        let (job, _, mut fleet, mut rng) = setup();
+        let (clean, failed) = (3u32, 20u32);
+        fleet[failed as usize].total_failures = 10;
+        let mut pol = PowerOfTwoChoices;
+        let mut clean_first = 0;
+        for _ in 0..200 {
+            let mut pools = Pools::from_fleet(&fleet);
+            let all: Vec<ServerId> = pools.idle_ids().to_vec();
+            for id in all {
+                if id != clean && id != failed {
+                    assert!(pools.remove_idle(id));
+                }
+            }
+            let first =
+                pol.take_idle(&job, &mut pools, &mut fleet, None, &mut rng).unwrap();
+            if first == clean {
+                clean_first += 1;
+            }
+        }
+        assert!(
+            clean_first > 120,
+            "clean server first in {clean_first}/200 trials (uniform would be ~100)"
+        );
+    }
+
+    #[test]
+    fn power_of_two_choices_ties_keep_the_first_sample() {
+        // Equal failure counts: the pick must be the first sample, i.e.
+        // exactly `random`'s distribution — and always two draws, so the
+        // downstream stream position is pick-independent.
+        let (job, mut pools, mut fleet, _) = setup();
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let k1 = a.next_below(pools.idle_count() as u64) as usize;
+        let _k2 = a.next_below(pools.idle_count() as u64);
+        let expect = pools.idle_ids()[k1];
+        let got = PowerOfTwoChoices
+            .take_idle(&job, &mut pools, &mut fleet, None, &mut b)
+            .unwrap();
+        assert_eq!(got, expect);
+        assert_eq!(a.next_u64(), b.next_u64(), "stream stays aligned");
     }
 
     #[test]
     fn exhausted_pool_returns_none() {
         let (job, mut pools, mut fleet, mut rng) = setup();
+        let topo = rack_switch_topo(fleet.len() as u32);
         while pools.take_idle(&mut fleet).is_some() {}
-        assert!(FirstFit.take_idle(&job, &mut pools, &mut fleet, &mut rng).is_none());
-        assert!(Random.take_idle(&job, &mut pools, &mut fleet, &mut rng).is_none());
-        assert!(Locality.take_idle(&job, &mut pools, &mut fleet, &mut rng).is_none());
+        assert!(FirstFit.take_idle(&job, &mut pools, &mut fleet, None, &mut rng).is_none());
+        assert!(Random.take_idle(&job, &mut pools, &mut fleet, None, &mut rng).is_none());
+        assert!(Locality.take_idle(&job, &mut pools, &mut fleet, None, &mut rng).is_none());
+        assert!(AntiAffinity
+            .take_idle(&job, &mut pools, &mut fleet, Some(&topo), &mut rng)
+            .is_none());
+        assert!(PowerOfTwoChoices
+            .take_idle(&job, &mut pools, &mut fleet, None, &mut rng)
+            .is_none());
     }
 }

@@ -1,0 +1,168 @@
+//! The cluster topology: a hierarchy of failure domains over the fleet.
+//!
+//! Server ids are assigned domain-contiguously at fleet construction (the
+//! convention the old id-proximity `locality` policy already leaned on),
+//! so a domain is a contiguous id range and membership is pure
+//! arithmetic: server `s` belongs to domain `s / stride` of a level,
+//! where `stride` is the cumulative product of the level sizes below it.
+//! A fleet whose size does not divide a stride gets a trailing *partial*
+//! domain — smaller blast radius, same failure behavior.
+//!
+//! Built once per run from the declarative
+//! [`TopologySpec`](crate::config::TopologySpec) (`topology:` config
+//! block) and exposed through [`crate::model::ctx::SimCtx::topo`]; the
+//! consumers are the `anti_affinity`/`locality` selection policies
+//! ([`crate::model::selection`]), the `correlated` failure model
+//! ([`crate::model::failure::CorrelatedFailures`]), and the domain-outage
+//! flow ([`crate::model::lifecycle`]).
+
+use crate::config::TopologySpec;
+use crate::model::events::ServerId;
+use std::ops::Range;
+
+/// One concrete failure-domain level.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopoLevel {
+    /// Level name (labels trace events and reports).
+    pub name: String,
+    /// Servers per domain at this level (cumulative product of the spec's
+    /// per-level sizes; the trailing domain may hold fewer).
+    pub stride: u32,
+    /// Number of domains covering the fleet (includes a trailing partial
+    /// domain when the fleet size does not divide the stride).
+    pub n_domains: u32,
+    /// Outage rate of one domain at this level, 1/min.
+    pub outage_rate: f64,
+}
+
+/// The fleet's failure-domain hierarchy, innermost level first.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    levels: Vec<TopoLevel>,
+    total_servers: u32,
+}
+
+impl Topology {
+    /// Materialize a spec for a concrete fleet size.
+    pub fn build(spec: &TopologySpec, total_servers: u32) -> Topology {
+        let mut levels = Vec::with_capacity(spec.levels.len());
+        let mut stride = 1u32;
+        for l in &spec.levels {
+            stride = stride.saturating_mul(l.size.max(1));
+            levels.push(TopoLevel {
+                name: l.name.clone(),
+                stride,
+                n_domains: total_servers.div_ceil(stride).max(1),
+                outage_rate: l.outage_rate,
+            });
+        }
+        Topology { levels, total_servers }
+    }
+
+    pub fn levels(&self) -> &[TopoLevel] {
+        &self.levels
+    }
+
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn total_servers(&self) -> u32 {
+        self.total_servers
+    }
+
+    /// Which domain of `level` holds `server`.
+    #[inline]
+    pub fn domain_of(&self, level: usize, server: ServerId) -> u32 {
+        server / self.levels[level].stride
+    }
+
+    /// The id range of one domain (the trailing domain is clipped to the
+    /// fleet).
+    pub fn servers_of(&self, level: usize, domain: u32) -> Range<ServerId> {
+        let stride = self.levels[level].stride;
+        let start = domain * stride;
+        start..(start.saturating_add(stride)).min(self.total_servers)
+    }
+
+    /// Topological distance between two servers: the index of the first
+    /// (innermost) level whose domains contain both, or `n_levels()` when
+    /// no level does. 0 = same rack; lower = closer.
+    #[inline]
+    pub fn distance(&self, a: ServerId, b: ServerId) -> usize {
+        for (l, level) in self.levels.iter().enumerate() {
+            if a / level.stride == b / level.stride {
+                return l;
+            }
+        }
+        self.levels.len()
+    }
+
+    /// Aggregate outage rate over every domain of every level (the rate
+    /// of the superposed domain-outage process, 1/min).
+    pub fn total_outage_rate(&self) -> f64 {
+        self.levels
+            .iter()
+            .map(|l| l.n_domains as f64 * l.outage_rate)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyLevelSpec;
+
+    fn spec(levels: &[(&str, u32, f64)]) -> TopologySpec {
+        TopologySpec {
+            levels: levels
+                .iter()
+                .map(|&(name, size, outage_rate)| TopologyLevelSpec {
+                    name: name.into(),
+                    size,
+                    outage_rate,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn strides_multiply_up_the_hierarchy() {
+        let t = Topology::build(&spec(&[("rack", 8, 0.0), ("switch", 4, 0.0)]), 64);
+        assert_eq!(t.levels()[0].stride, 8);
+        assert_eq!(t.levels()[1].stride, 32);
+        assert_eq!(t.levels()[0].n_domains, 8);
+        assert_eq!(t.levels()[1].n_domains, 2);
+        assert_eq!(t.domain_of(0, 7), 0);
+        assert_eq!(t.domain_of(0, 8), 1);
+        assert_eq!(t.domain_of(1, 31), 0);
+        assert_eq!(t.domain_of(1, 32), 1);
+    }
+
+    #[test]
+    fn non_dividing_fleet_gets_trailing_partial_domain() {
+        let t = Topology::build(&spec(&[("rack", 4, 0.0)]), 10);
+        assert_eq!(t.levels()[0].n_domains, 3);
+        assert_eq!(t.servers_of(0, 0), 0..4);
+        assert_eq!(t.servers_of(0, 2), 8..10, "partial trailing domain");
+        assert_eq!(t.domain_of(0, 9), 2);
+    }
+
+    #[test]
+    fn distance_ascends_levels() {
+        let t = Topology::build(&spec(&[("rack", 4, 0.0), ("switch", 2, 0.0)]), 32);
+        assert_eq!(t.distance(0, 3), 0, "same rack");
+        assert_eq!(t.distance(0, 4), 1, "same switch, different rack");
+        assert_eq!(t.distance(0, 8), 2, "different switch");
+        assert_eq!(t.distance(5, 5), 0);
+    }
+
+    #[test]
+    fn total_outage_rate_sums_domains() {
+        let t = Topology::build(&spec(&[("rack", 4, 0.5), ("switch", 2, 0.25)]), 32);
+        // 8 racks * 0.5 + 4 switches * 0.25 = 5.0
+        assert!((t.total_outage_rate() - 5.0).abs() < 1e-12);
+        let quiet = Topology::build(&spec(&[("rack", 4, 0.0)]), 32);
+        assert_eq!(quiet.total_outage_rate(), 0.0);
+    }
+}

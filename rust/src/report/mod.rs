@@ -12,7 +12,8 @@ pub mod record;
 pub mod sink;
 
 pub use record::{
-    CompareRecord, RecordBody, RunRecord, ScenarioRecord, SweepRecord, WhatIfRecord,
+    CompareRecord, PrescreenRecord, RecordBody, RunRecord, ScenarioRecord, SweepRecord,
+    WhatIfRecord,
 };
 pub use sink::{Format, Sink};
 

@@ -160,6 +160,108 @@ impl CompareRecord {
     }
 }
 
+/// The `prescreen` workflow: the full grid ranked by the analytical CTMC
+/// screen, plus DES validation of the top-k survivors.
+pub struct PrescreenRecord {
+    /// Every grid point with its analytical outputs, best-ranked first.
+    pub ranking: Vec<(String, AnalyticOutputs)>,
+    /// (label, makespan-hours summary) of the DES-validated top-k, in
+    /// ranking order.
+    pub validated: Vec<(String, Summary)>,
+    /// DES replications per validated point.
+    pub reps: usize,
+}
+
+impl PrescreenRecord {
+    /// The legacy ranking table, byte for byte. An associated function
+    /// over the bare ranking so the CLI can stream it *before* the DES
+    /// stage runs (a DES failure must not cost the screening output).
+    pub fn ranking_text(ranking: &[(String, AnalyticOutputs)]) -> String {
+        let mut s = String::new();
+        s.push_str("\nanalytical ranking (best first):\n");
+        s.push_str(&format!(
+            "{:<44} {:>16} {:>12}\n",
+            "point", "CTMC makespan(h)", "exp.failures"
+        ));
+        for (label, a) in ranking {
+            s.push_str(&format!(
+                "{:<44} {:>16.1} {:>12.0}\n",
+                label,
+                a.makespan_est / 60.0,
+                a.exp_failures
+            ));
+        }
+        s
+    }
+
+    /// The legacy DES-validation table, byte for byte.
+    pub fn validation_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "\nDES validation of the top {} ({} replications each):\n",
+            self.validated.len(),
+            self.reps
+        ));
+        s.push_str(&format!(
+            "{:<44} {:>14} {:>10}\n",
+            "point", "DES makespan(h)", "±95%CI"
+        ));
+        for (label, summary) in &self.validated {
+            s.push_str(&format!(
+                "{:<44} {:>14.1} {:>10.1}\n",
+                label,
+                summary.mean,
+                summary.ci95_halfwidth()
+            ));
+        }
+        s
+    }
+
+    /// Both legacy tables (the full text report).
+    pub fn render_text(&self) -> String {
+        Self::ranking_text(&self.ranking) + &self.validation_text()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("kind", Json::str("prescreen")),
+            ("reps", self.reps.into()),
+            (
+                "ranking",
+                Json::Arr(
+                    self.ranking
+                        .iter()
+                        .map(|(label, a)| {
+                            Json::obj([
+                                ("label", Json::str(label)),
+                                ("ctmc_makespan_est", Json::Num(a.makespan_est)),
+                                ("ctmc_makespan_hours", Json::Num(a.makespan_est / 60.0)),
+                                ("exp_failures", Json::Num(a.exp_failures)),
+                                ("avail_avg", Json::Num(a.avail_avg)),
+                                ("overhead_frac", Json::Num(a.overhead_frac)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "validated",
+                Json::Arr(
+                    self.validated
+                        .iter()
+                        .map(|(label, s)| {
+                            Json::obj([
+                                ("label", Json::str(label)),
+                                ("des_makespan_hours", summary_json(s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// What a scenario produced, wrapped with the scenario's metadata.
 pub enum RecordBody {
     Run(RunRecord),

@@ -159,6 +159,36 @@ pub const REGISTRY: &[Metric] = &[
         extract: |_, o| o.work_lost,
     },
     Metric {
+        name: "domain_failures",
+        unit: "count",
+        doc: "correlated domain outages delivered (topology levels)",
+        extract: |_, o| o.domain_failures as f64,
+    },
+    Metric {
+        name: "domain_servers_lost",
+        unit: "count",
+        doc: "up-servers taken down by domain outages",
+        extract: |_, o| o.domain_servers_lost as f64,
+    },
+    Metric {
+        name: "domain_max_blast",
+        unit: "count",
+        doc: "most servers lost to a single domain outage",
+        extract: |_, o| o.domain_max_blast as f64,
+    },
+    Metric {
+        name: "domain_job_interruptions",
+        unit: "count",
+        doc: "whole-job interruptions: domain outages exceeding the standby stock",
+        extract: |_, o| o.domain_job_interruptions as f64,
+    },
+    Metric {
+        name: "domain_downtime",
+        unit: "min",
+        doc: "job downtime attributable to correlated domain outages",
+        extract: |_, o| o.domain_downtime,
+    },
+    Metric {
         name: "utilization",
         unit: "ratio",
         doc: "failure-free job length / makespan",

@@ -45,6 +45,9 @@ pub enum TraceKind {
     Preempted { server: u32 },
     PreemptArrived { server: u32 },
     Retired { server: u32 },
+    /// A correlated domain outage (topology level index + domain id)
+    /// took `servers_hit` up-servers down as one event.
+    DomainFailure { level: u32, domain_id: u32, servers_hit: usize },
     Regenerated { converted: usize },
     JobCompleted { makespan: Time },
     Horizon,
@@ -68,6 +71,7 @@ impl TraceKind {
             TraceKind::Preempted { .. } => "preempted",
             TraceKind::PreemptArrived { .. } => "preempt_arrived",
             TraceKind::Retired { .. } => "retired",
+            TraceKind::DomainFailure { .. } => "domain_failure",
             TraceKind::Regenerated { .. } => "regenerated",
             TraceKind::JobCompleted { .. } => "job_completed",
             TraceKind::Horizon => "horizon",
@@ -109,6 +113,11 @@ pub fn event_json(at: Time, kind: &TraceKind) -> Json {
         TraceKind::Preempted { server }
         | TraceKind::PreemptArrived { server }
         | TraceKind::Retired { server } => add("server", (*server as u64).into()),
+        TraceKind::DomainFailure { level, domain_id, servers_hit } => {
+            add("level", (*level as u64).into());
+            add("domain_id", (*domain_id as u64).into());
+            add("servers_hit", (*servers_hit).into());
+        }
         TraceKind::Regenerated { converted } => add("converted", (*converted).into()),
         TraceKind::JobCompleted { makespan } => add("makespan", (*makespan).into()),
     }

@@ -131,7 +131,17 @@ fn analytic_rust_only() {
 fn list_policies_covers_every_axis() {
     let (out, _, ok) = airesim(&["list-policies"]);
     assert!(ok);
-    for name in ["selection", "repair", "checkpoint", "failure", "locality", "job_first"] {
+    for name in [
+        "selection",
+        "repair",
+        "checkpoint",
+        "failure",
+        "locality",
+        "job_first",
+        "anti_affinity",
+        "power_of_two_choices",
+        "correlated",
+    ] {
         assert!(out.contains(name), "list-policies missing {name}");
     }
 }
@@ -177,7 +187,16 @@ fn scenario_inject_from_file() {
 fn list_metrics_covers_the_registry() {
     let (out, _, ok) = airesim(&["list-metrics"]);
     assert!(ok);
-    for m in ["makespan_hours", "failures_total", "utilization", "events_delivered"] {
+    for m in [
+        "makespan_hours",
+        "failures_total",
+        "utilization",
+        "events_delivered",
+        "domain_failures",
+        "domain_max_blast",
+        "domain_job_interruptions",
+        "domain_downtime",
+    ] {
         assert!(out.contains(m), "list-metrics missing {m}");
     }
     assert!(out.contains("unit"), "header missing: {out}");
@@ -290,6 +309,80 @@ fn prescreen_rejects_policy_axes() {
     ]);
     assert!(!ok);
     assert!(err.contains("policy-blind"), "stderr: {err}");
+}
+
+#[test]
+fn scenario_topology_runs_and_labels_policies() {
+    // Scale the shipped config down (fewer reps, shorter job) via a temp
+    // copy — `replications:` is scenario metadata, not a `--set` param.
+    let cfg = std::env::temp_dir().join("airesim_topo_scenario.yaml");
+    let text = std::fs::read_to_string("configs/scenario_topology.yaml")
+        .unwrap()
+        .replace("replications: 8", "replications: 2")
+        .replace("job_len: 4*1440", "job_len: 1440");
+    std::fs::write(&cfg, text).unwrap();
+    let (out, err, ok) = airesim(&["scenario", "--config", cfg.to_str().unwrap()]);
+    let _ = std::fs::remove_file(&cfg);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("policies.selection=locality"), "{out}");
+    assert!(out.contains("policies.selection=anti_affinity"), "{out}");
+}
+
+#[test]
+fn run_trace_out_carries_domain_failure_events() {
+    let path = std::env::temp_dir().join("airesim_domain_trace.ndjson");
+    // The shipped topology config's params (4-day job, ~14 expected
+    // switch outages) through plain `run`: the sweep: section is ignored
+    // by this command, the topology: block is not.
+    let (_, err, ok) = airesim(&[
+        "run", "--seed", "7",
+        "--config", "configs/scenario_topology.yaml",
+        "--trace-out", path.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {err}");
+    let content = std::fs::read_to_string(&path).expect("trace written");
+    let _ = std::fs::remove_file(&path);
+    let mut saw_domain = false;
+    for line in content.trim_end().lines() {
+        let doc = parse_json(line).unwrap_or_else(|e| panic!("{e}: {line}"));
+        let Json::Obj(fields) = &doc else { panic!("object per line") };
+        if fields.iter().any(|(k, v)| k == "event" && *v == Json::str("domain_failure")) {
+            saw_domain = true;
+            for key in ["level", "domain_id", "servers_hit"] {
+                assert!(fields.iter().any(|(k, _)| k == key), "missing {key}: {line}");
+            }
+        }
+    }
+    assert!(saw_domain, "timeline must carry domain_failure events: {content}");
+}
+
+#[test]
+fn prescreen_format_json_parses_and_text_is_default() {
+    let base = [
+        "prescreen", "--param", "recovery_time", "--values", "10,30",
+        "--top", "1", "--reps", "2", "--set", SMALL,
+    ];
+    let (text_out, err, ok) = airesim(&base);
+    assert!(ok, "stderr: {err}");
+    assert!(text_out.contains("analytical ranking (best first):"), "{text_out}");
+    assert!(text_out.contains("DES validation of the top 1"), "{text_out}");
+
+    let mut with_json = base.to_vec();
+    with_json.extend(["--format", "json"]);
+    let (out, err, ok) = airesim(&with_json);
+    assert!(ok, "stderr: {err}");
+    let doc = parse_json(out.trim_end()).unwrap_or_else(|e| panic!("{e}: {out}"));
+    let Json::Obj(fields) = &doc else { panic!("expected object") };
+    assert!(fields.iter().any(|(k, v)| k == "kind" && *v == Json::str("prescreen")));
+    assert!(fields.iter().any(|(k, _)| k == "ranking"));
+    assert!(fields.iter().any(|(k, _)| k == "validated"));
+
+    // csv/ndjson are not prescreen formats: clean refusal.
+    let mut with_csv = base.to_vec();
+    with_csv.extend(["--format", "csv"]);
+    let (_, err, ok) = airesim(&with_csv);
+    assert!(!ok);
+    assert!(err.contains("text or json"), "stderr: {err}");
 }
 
 #[test]

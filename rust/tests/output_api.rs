@@ -291,6 +291,42 @@ fn compare_scenario_renders_in_all_formats() {
     }
 }
 
+/// The topology subsystem added five `domain_*` registry metrics; the
+/// pinned legacy text tables must not grow them. A run WITH a topology
+/// still renders the exact legacy oracle (text reports a fixed hand-made
+/// block, never the registry), and a run WITHOUT one is bit-for-bit the
+/// pre-topology output by construction (`Params::small_test` carries no
+/// topology — every oracle test above already pins that path).
+#[test]
+fn topology_runs_render_the_same_legacy_text_block() {
+    let mut p = Params::small_test();
+    p.topology = Some(airesim::config::TopologySpec {
+        levels: vec![airesim::config::TopologyLevelSpec {
+            name: "rack".into(),
+            size: 8,
+            outage_rate: 0.002 / 1440.0,
+        }],
+    });
+    let outputs = Simulation::from_spec(&p, &PolicySpec::default(), airesim::sim::rng::Rng::new(7))
+        .unwrap()
+        .run();
+    let rec = RunRecord {
+        seed: 7,
+        params: p,
+        policies: PolicySpec::default(),
+        outputs,
+        trace: Trace::default(),
+    };
+    let got = Format::Text.sink().run(&rec);
+    assert_eq!(got, legacy_run_text(7, &rec.params, &rec.outputs));
+    assert!(!got.contains("domain"), "domain metrics stay out of the legacy table");
+    // The machine sinks DO carry them, with units.
+    let json = Format::Json.sink().run(&rec);
+    for m in ["domain_failures", "domain_max_blast", "domain_downtime"] {
+        assert!(json.contains(&format!("\"{m}\"")), "json missing {m}");
+    }
+}
+
 // ------------------------------------------------------------------ //
 // Policy axes end-to-end
 // ------------------------------------------------------------------ //

@@ -1,0 +1,257 @@
+//! Topology-subsystem acceptance suite.
+//!
+//! * the headline result: under switch-level correlated outages,
+//!   `anti_affinity` placement suffers strictly fewer whole-job
+//!   interruptions than `locality` on the same master streams (CRN);
+//! * correlated outages flow end-to-end: trace events, per-domain
+//!   metrics, repairs of idle victims, conservation invariants;
+//! * the batched runner stays byte-identical to fresh construction with
+//!   a topology configured;
+//! * no `topology:` block = byte-identical legacy behavior (the `auto`
+//!   failure model must not wrap, and no domain event may ever fire).
+
+use airesim::config::{Params, TopologyLevelSpec, TopologySpec};
+use airesim::model::cluster::{ReplicationRunner, Simulation};
+use airesim::model::PolicySpec;
+use airesim::scenario::Scenario;
+use airesim::sim::rng::Rng;
+use airesim::trace::TraceKind;
+
+fn topo(levels: &[(&str, u32, f64)]) -> TopologySpec {
+    TopologySpec {
+        levels: levels
+            .iter()
+            .map(|&(name, size, outage_rate)| TopologyLevelSpec {
+                name: name.into(),
+                size,
+                outage_rate,
+            })
+            .collect(),
+    }
+}
+
+/// The scenario_topology.yaml cluster, rates stripped to isolate domain
+/// outages: 96 working + 16 spare in racks of 4, switches of 16 servers;
+/// only the switch level carries an outage rate. Base failure clocks are
+/// off, repairs are fast and reliable — every disruption in a run comes
+/// from a domain event.
+fn switch_cluster() -> Params {
+    let mut p = Params::small_test();
+    p.job_size = 24;
+    p.warm_standbys = 12;
+    p.working_pool = 96;
+    p.spare_pool = 16;
+    p.job_len = 4.0 * 1440.0;
+    p.random_failure_rate = 0.0;
+    p.systematic_failure_rate = 0.0;
+    p.systematic_fraction = 0.0;
+    p.auto_repair_prob = 1.0;
+    p.auto_repair_fail_prob = 0.0;
+    p.auto_repair_time = 60.0;
+    p.max_sim_time = 1e9;
+    p.topology = Some(topo(&[("rack", 4, 0.0), ("switch", 4, 0.5 / 1440.0)]));
+    p
+}
+
+fn with_selection(sel: &str) -> PolicySpec {
+    PolicySpec { selection: sel.into(), ..PolicySpec::default() }
+}
+
+/// The acceptance headline: anti-affinity spreads each gang thin enough
+/// that warm standbys absorb a switch blast, while locality concentrates
+/// the gang into one or two switch domains and eats whole-job
+/// interruptions — strictly fewer for anti-affinity on the same master
+/// streams.
+#[test]
+fn anti_affinity_takes_strictly_fewer_whole_job_interruptions_than_locality() {
+    let p = switch_cluster();
+    let mut runner = ReplicationRunner::new();
+    let (mut loc_interruptions, mut anti_interruptions) = (0u64, 0u64);
+    let (mut loc_outages, mut anti_outages) = (0u64, 0u64);
+    for seed in 1..=5u64 {
+        let loc = runner.run(&p, &with_selection("locality"), Rng::new(seed));
+        let anti = runner.run(&p, &with_selection("anti_affinity"), Rng::new(seed));
+        assert!(loc.completed && anti.completed, "seed {seed}: both must finish");
+        loc_interruptions += loc.domain_job_interruptions;
+        anti_interruptions += anti.domain_job_interruptions;
+        loc_outages += loc.domain_failures;
+        anti_outages += anti.domain_failures;
+    }
+    assert!(loc_outages > 0 && anti_outages > 0, "outages must actually fire");
+    assert!(
+        anti_interruptions < loc_interruptions,
+        "anti-affinity must take strictly fewer whole-job interruptions: \
+         anti {anti_interruptions} vs locality {loc_interruptions} \
+         (outages: {anti_outages} vs {loc_outages})"
+    );
+}
+
+#[test]
+fn domain_outages_produce_trace_events_and_metrics() {
+    let p = switch_cluster();
+    let (out, trace) = Simulation::from_spec(&p, &with_selection("locality"), Rng::new(7))
+        .unwrap()
+        .with_trace()
+        .run_traced();
+    assert!(out.domain_failures > 0, "outages fired");
+    let traced = trace.count(|k| matches!(k, TraceKind::DomainFailure { .. }));
+    assert_eq!(traced as u64, out.domain_failures, "one trace event per outage");
+    // Event payloads stay inside the topology.
+    for r in &trace.records {
+        if let TraceKind::DomainFailure { level, domain_id, servers_hit } = r.kind {
+            assert!(level < 2);
+            assert!(domain_id < 28, "28 rack / 7 switch domains over 112 servers");
+            assert!(servers_hit <= 16, "switch blast radius is 16");
+        }
+    }
+    // The NDJSON schema carries the ISSUE's field names.
+    let nd = trace.to_ndjson();
+    assert!(nd.contains(r#""event":"domain_failure""#), "{nd}");
+    assert!(nd.contains(r#""domain_id":"#) && nd.contains(r#""servers_hit":"#), "{nd}");
+    // Blast accounting is consistent.
+    assert!(out.domain_max_blast <= 16);
+    assert!(out.domain_servers_lost >= out.domain_max_blast);
+    // With base clocks off, every repair stems from a domain outage.
+    assert!(out.repairs_auto > 0, "victims go through the repair pipeline");
+    assert_eq!(out.failures_total, 0, "no per-server clock ever fired");
+}
+
+#[test]
+fn idle_servers_fall_with_their_domain() {
+    // A 1-server job on a 96-server fabric: almost every outage victim is
+    // an idle server, and they must cycle through repair cleanly.
+    let mut p = switch_cluster();
+    p.job_size = 1;
+    p.warm_standbys = 0;
+    let out = Simulation::from_spec(&p, &PolicySpec::default(), Rng::new(3))
+        .unwrap()
+        .run();
+    assert!(out.completed);
+    assert!(out.domain_failures > 0);
+    assert!(out.domain_servers_lost > 0);
+    assert!(out.repairs_auto > 0, "idle victims repaired");
+}
+
+#[test]
+fn conservation_holds_through_domain_outages() {
+    for sel in ["locality", "anti_affinity", "first_fit"] {
+        let p = switch_cluster();
+        let mut sim =
+            Simulation::from_spec(&p, &with_selection(sel), Rng::new(11)).unwrap();
+        sim.prime();
+        let mut steps = 0usize;
+        while sim.step() && steps < 20_000 {
+            steps += 1;
+            assert!(sim.conservation_ok(), "{sel}: conservation broke at step {steps}");
+        }
+    }
+}
+
+#[test]
+fn batched_runner_matches_fresh_with_topology() {
+    let p = switch_cluster();
+    for sel in ["locality", "anti_affinity", "power_of_two_choices"] {
+        let spec = with_selection(sel);
+        let mut runner = ReplicationRunner::new();
+        for seed in [5u64, 21] {
+            let batched = runner.run(&p, &spec, Rng::new(seed));
+            let fresh = Simulation::from_spec(&p, &spec, Rng::new(seed)).unwrap().run();
+            assert_eq!(batched, fresh, "{sel} seed {seed}: runner reuse diverged");
+        }
+    }
+}
+
+#[test]
+fn no_topology_keeps_legacy_models_and_outputs() {
+    let p = Params::small_test();
+    assert!(p.topology.is_none());
+    // `auto` must resolve to the plain gang model (no correlated wrapper),
+    // byte-identical to naming it explicitly.
+    let auto = Simulation::from_spec(&p, &PolicySpec::default(), Rng::new(42))
+        .unwrap()
+        .run();
+    let gang_spec = PolicySpec { failure: "gang".into(), ..PolicySpec::default() };
+    let gang = Simulation::from_spec(&p, &gang_spec, Rng::new(42)).unwrap().run();
+    assert_eq!(auto, gang, "auto must not wrap without a topology");
+    // And no domain accounting can ever move.
+    assert_eq!(auto.domain_failures, 0);
+    assert_eq!(auto.domain_servers_lost, 0);
+    assert_eq!(auto.domain_job_interruptions, 0);
+    assert_eq!(auto.domain_downtime, 0.0);
+}
+
+#[test]
+fn scenario_yaml_carries_the_topology_block() {
+    let text = "scenario: single\nseed: 3\n\
+                params:\n  job_size: 24\n  warm_standbys: 12\n  working_pool: 96\n  spare_pool: 16\n  job_len: 1440\n  random_failure_rate: 0\n  systematic_failure_rate: 0\n  systematic_fraction: 0\n  max_sim_time: 1e9\n\
+                topology:\n  servers_per_rack: 4\n  racks_per_switch: 4\n  switch_outage_rate: 0.5/1440\n";
+    let sc = Scenario::from_yaml(text).unwrap();
+    let t = sc.params.topology.as_ref().expect("topology parsed into params");
+    assert_eq!(t.levels.len(), 2);
+    assert_eq!(t.levels[1].name, "switch");
+    match sc.run().unwrap() {
+        airesim::scenario::ScenarioOutcome::Single { outputs, .. } => {
+            assert!(outputs.completed);
+            assert!(outputs.domain_failures > 0, "scenario runs with domain outages");
+        }
+        _ => panic!("expected Single outcome"),
+    }
+}
+
+#[test]
+fn policy_axis_sweep_supports_the_new_selection_policies() {
+    let text = "scenario: sweep\nseed: 42\nreplications: 2\n\
+                params:\n  job_size: 24\n  warm_standbys: 12\n  working_pool: 96\n  spare_pool: 16\n  job_len: 1440\n  random_failure_rate: 0\n  systematic_failure_rate: 0\n  systematic_fraction: 0\n  max_sim_time: 1e9\n\
+                topology:\n  servers_per_rack: 4\n  racks_per_switch: 4\n  switch_outage_rate: 0.5/1440\n\
+                sweep:\n  kind: one_way\n  x: { name: policies.selection, values: [locality, anti_affinity, power_of_two_choices] }\n";
+    let sc = Scenario::from_yaml(text).unwrap();
+    match sc.run().unwrap() {
+        airesim::scenario::ScenarioOutcome::Sweep(result) => {
+            assert_eq!(result.points.len(), 3);
+            assert_eq!(
+                result.points[1].point.label(),
+                "policies.selection=anti_affinity"
+            );
+            for pr in &result.points {
+                assert_eq!(pr.summary("domain_failures").unwrap().n, 2);
+            }
+        }
+        _ => panic!("expected Sweep outcome"),
+    }
+}
+
+#[test]
+fn anti_affinity_without_topology_is_rejected_at_parse_time() {
+    let text = "scenario: single\npolicies:\n  selection: anti_affinity\n";
+    let err = Scenario::from_yaml(text).unwrap_err();
+    assert!(err.contains("topology"), "{err}");
+    // Same for a sweep axis hitting the policy (validate pre-flights).
+    let text = "scenario: sweep\nreplications: 1\n\
+                sweep:\n  kind: one_way\n  x: { name: policies.selection, values: [anti_affinity] }\n";
+    let sc = Scenario::from_yaml(text).unwrap();
+    let err = sc.run().unwrap_err();
+    assert!(err.contains("topology"), "{err}");
+}
+
+#[test]
+fn shipped_topology_scenario_config_runs() {
+    let text = std::fs::read_to_string("configs/scenario_topology.yaml").unwrap();
+    let sc = Scenario::from_yaml(&text).unwrap();
+    let t = sc.params.topology.as_ref().expect("topology block");
+    assert!(t.has_outages());
+    // Scaled-down execution: fewer replications, same mechanics.
+    let mut sc = sc;
+    match &mut sc.kind {
+        airesim::scenario::ScenarioKind::Sweep(sweep) => sweep.replications = 2,
+        _ => panic!("scenario_topology.yaml must be a sweep"),
+    }
+    match sc.run().unwrap() {
+        airesim::scenario::ScenarioOutcome::Sweep(result) => {
+            assert_eq!(result.points.len(), 2);
+            for pr in &result.points {
+                assert!(pr.summary("makespan").unwrap().mean > 0.0);
+            }
+        }
+        _ => panic!("expected Sweep outcome"),
+    }
+}
