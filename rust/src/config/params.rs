@@ -172,6 +172,20 @@ pub struct Params {
     /// progress past the last checkpoint is lost on failure. 0 = the
     /// paper's continuous asynchronous checkpointing (no loss).
     pub checkpoint_interval: f64,
+    /// Wall-clock cost, in minutes, of committing one checkpoint: the
+    /// gang stalls this long at every commit. 0 = the legacy free-commit
+    /// model (all outputs byte-identical to it). Also the `C` in the
+    /// `young_daly`/`adaptive` interval √(2·C·MTBF).
+    pub checkpoint_cost: f64,
+    /// `checkpoint: tiered` only — interval of the expensive-rare commit
+    /// tier, minutes of useful work (the cheap-frequent tier runs on
+    /// `checkpoint_interval`/`checkpoint_cost`).
+    pub checkpoint_tier2_interval: f64,
+    /// Commit cost of the expensive tier, minutes per commit.
+    pub checkpoint_tier2_cost: f64,
+    /// Restore latency from an expensive-tier checkpoint; <= 0 falls
+    /// back to `recovery_time` (which the cheap tier always restores at).
+    pub checkpoint_tier2_restore: f64,
 
     // ---- preemption cost accounting (assumption 7) ----
     /// Fixed cost, in minutes of other-job work lost, per preempted server.
@@ -220,6 +234,10 @@ impl Params {
             bad_regen_interval: 0.0,
             bad_regen_fraction: 0.0,
             checkpoint_interval: 0.0,
+            checkpoint_cost: 0.0,
+            checkpoint_tier2_interval: 0.0,
+            checkpoint_tier2_cost: 0.0,
+            checkpoint_tier2_restore: 0.0,
             preemption_cost: 0.0,
             max_sim_time: 10.0 * 256.0 * MIN_PER_DAY,
             topology: None,
@@ -257,6 +275,10 @@ impl Params {
             bad_regen_interval: 0.0,
             bad_regen_fraction: 0.0,
             checkpoint_interval: 0.0,
+            checkpoint_cost: 0.0,
+            checkpoint_tier2_interval: 0.0,
+            checkpoint_tier2_cost: 0.0,
+            checkpoint_tier2_restore: 0.0,
             preemption_cost: 0.0,
             max_sim_time: 100.0 * MIN_PER_DAY,
             topology: None,
@@ -304,6 +326,10 @@ impl Params {
             "bad_regen_interval" => self.bad_regen_interval = value,
             "bad_regen_fraction" => self.bad_regen_fraction = value,
             "checkpoint_interval" => self.checkpoint_interval = value,
+            "checkpoint_cost" => self.checkpoint_cost = value,
+            "checkpoint_tier2_interval" => self.checkpoint_tier2_interval = value,
+            "checkpoint_tier2_cost" => self.checkpoint_tier2_cost = value,
+            "checkpoint_tier2_restore" => self.checkpoint_tier2_restore = value,
             "preemption_cost" => self.preemption_cost = value,
             "max_sim_time" => self.max_sim_time = value,
             _ => return false,
@@ -343,6 +369,10 @@ impl Params {
             "bad_regen_interval" => self.bad_regen_interval,
             "bad_regen_fraction" => self.bad_regen_fraction,
             "checkpoint_interval" => self.checkpoint_interval,
+            "checkpoint_cost" => self.checkpoint_cost,
+            "checkpoint_tier2_interval" => self.checkpoint_tier2_interval,
+            "checkpoint_tier2_cost" => self.checkpoint_tier2_cost,
+            "checkpoint_tier2_restore" => self.checkpoint_tier2_restore,
             "preemption_cost" => self.preemption_cost,
             "max_sim_time" => self.max_sim_time,
             _ => return None,
@@ -379,6 +409,10 @@ impl Params {
             "bad_regen_interval",
             "bad_regen_fraction",
             "checkpoint_interval",
+            "checkpoint_cost",
+            "checkpoint_tier2_interval",
+            "checkpoint_tier2_cost",
+            "checkpoint_tier2_restore",
             "preemption_cost",
             "max_sim_time",
         ]

@@ -87,6 +87,10 @@ pub fn validate(p: &Params) -> Result<(), ConfigError> {
     non_neg("bad_regen_interval", p.bad_regen_interval)?;
     prob("bad_regen_fraction", p.bad_regen_fraction)?;
     non_neg("checkpoint_interval", p.checkpoint_interval)?;
+    non_neg("checkpoint_cost", p.checkpoint_cost)?;
+    non_neg("checkpoint_tier2_interval", p.checkpoint_tier2_interval)?;
+    non_neg("checkpoint_tier2_cost", p.checkpoint_tier2_cost)?;
+    non_neg("checkpoint_tier2_restore", p.checkpoint_tier2_restore)?;
     non_neg("preemption_cost", p.preemption_cost)?;
     pos("max_sim_time", p.max_sim_time)?;
 

@@ -140,10 +140,12 @@ fn load_params(doc: Option<&ConfigDoc>, args: &Args) -> Result<Params> {
     Ok(p)
 }
 
-/// Config `policies:` section + `--policy` overrides, validated to build
-/// against `p` (so an incompatible combo — e.g. `failure=gang` with
-/// Weibull clocks — is a clean CLI error, not a worker-thread panic).
-fn load_policies(doc: Option<&ConfigDoc>, args: &Args, p: &Params) -> Result<PolicySpec> {
+/// Config `policies:` section + `--policy` overrides, names validated
+/// but NOT built against any params — the sweep path checks every point
+/// with its overrides applied (`Sweep::validate`), where a point may
+/// supply the knob a policy needs (e.g. sweeping `checkpoint_interval`
+/// under `checkpoint: periodic`).
+fn load_policy_names(doc: Option<&ConfigDoc>, args: &Args) -> Result<PolicySpec> {
     let mut spec = match doc {
         Some(c) => airesim::sweep::policies_from_doc(&c.doc)
             .map_err(|e| anyhow!("{}: {e}", c.path))?,
@@ -152,6 +154,14 @@ fn load_policies(doc: Option<&ConfigDoc>, args: &Args, p: &Params) -> Result<Pol
     if let Some(clauses) = args.get("policy") {
         apply_policy_clauses(&mut spec, clauses)?;
     }
+    Ok(spec)
+}
+
+/// Config `policies:` section + `--policy` overrides, validated to build
+/// against `p` (so an incompatible combo — e.g. `failure=gang` with
+/// Weibull clocks — is a clean CLI error, not a worker-thread panic).
+fn load_policies(doc: Option<&ConfigDoc>, args: &Args, p: &Params) -> Result<PolicySpec> {
+    let spec = load_policy_names(doc, args)?;
     spec.build(p).map_err(|e| anyhow!("{e}"))?;
     Ok(spec)
 }
@@ -338,8 +348,10 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         }
         _ => sweep_from_config(doc.as_ref(), reps, seed)?,
     }
-    .with_policies(load_policies(doc.as_ref(), &args, &base)?);
-    // Policy axes (and any bad point) fail here, not in a worker thread.
+    .with_policies(load_policy_names(doc.as_ref(), &args)?);
+    // Policy axes (and any bad point) fail here, not in a worker thread —
+    // every point is built with its overrides applied, so a swept knob
+    // can satisfy a policy the bare base params would not.
     sweep.validate(&base).map_err(|e| anyhow!("{e}"))?;
 
     let result = run_sweep(&base, &sweep, threads);
@@ -387,7 +399,12 @@ fn cmd_scenario(argv: &[String]) -> Result<()> {
     }
     if let Some(clauses) = args.get("policy") {
         apply_policy_clauses(&mut scenario.policies, clauses)?;
-        scenario.policies.build(&scenario.params).map_err(|e| anyhow!("{e}"))?;
+        // Sweep scenarios validate per point (`Sweep::validate`, with
+        // overrides applied); everything else runs the base params
+        // verbatim and must build against them now.
+        if !matches!(scenario.kind, ScenarioKind::Sweep(_)) {
+            scenario.policies.build(&scenario.params).map_err(|e| anyhow!("{e}"))?;
+        }
     }
     if let Some(seed) = args.get_u64("seed")? {
         scenario.seed = seed;

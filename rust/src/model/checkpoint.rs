@@ -1,29 +1,260 @@
-//! Checkpoint policies: what a failure costs in lost work and restart
-//! latency (§I "restarting … from a previous checkpoint").
+//! Checkpoint policies: what committing a checkpoint costs in wall-clock
+//! time, what a failure costs in lost work, and what a restore costs in
+//! restart latency (§I "restarting … from a previous checkpoint").
 //!
 //! | name | policy |
 //! |---|---|
-//! | `continuous` | [`Continuous`] — async checkpointing, no work lost (paper default) |
-//! | `periodic`   | [`Periodic`] — commit every `checkpoint_interval` minutes of work |
+//! | `continuous` | [`Continuous`] — async checkpointing, no loss, no commit cost (paper default) |
+//! | `periodic`   | [`Periodic`] — commit every `checkpoint_interval` minutes of work, each commit stalls the gang `checkpoint_cost` minutes |
+//! | `young_daly` | [`YoungDaly`] — interval = √(2·C·MTBF_gang) from the configured rates and the live gang composition |
+//! | `adaptive`   | [`Adaptive`] — online Young/Daly from a sliding window of observed interrupt inter-arrivals |
+//! | `tiered`     | [`Tiered`] — cheap-frequent + expensive-rare commit tiers with distinct restore costs |
 //! | `auto`       | `periodic` when `checkpoint_interval > 0`, else `continuous` |
+//!
+//! ## The commit-cost model
+//!
+//! A running burst alternates useful work and commit stalls: after every
+//! `interval` minutes of work the snapshot is taken **atomically at the
+//! work boundary** and the gang then stalls `cost` wall minutes while it
+//! is written. A failure during the write window therefore loses nothing
+//! past the boundary (the snapshot is already durable), but only the
+//! overhead actually elapsed is accounted. Failure clocks keep running
+//! through commit stalls — servers can die mid-write.
+//!
+//! The model adds **zero events**: commit overhead is folded into the
+//! `JobComplete` schedule via [`CheckpointPolicy::wall_for_work`] and
+//! recovered at burst end via [`CheckpointPolicy::account_burst`]. With
+//! `checkpoint_cost = 0` every code path short-circuits to the exact
+//! legacy arithmetic, so all outputs stay byte-identical.
 
+use crate::config::Params;
+use crate::model::ctx::SimCtx;
 use crate::sim::Time;
 
-/// Checkpoint semantics: lost work on interrupt + restore latency.
+/// Relative slack for commit-boundary arithmetic: after a loss, `done` is
+/// restored to a committed multiple only up to FP rounding, so boundary
+/// comparisons treat values within one part in 10⁹ as exact. Without it a
+/// failure landing on a commit boundary can floor one interval low and
+/// re-lose already-committed work.
+const BOUNDARY_EPS: f64 = 1e-9;
+
+/// What one running burst produced, in useful-work terms.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BurstAccount {
+    /// Useful work completed during the burst (wall minus commit stalls).
+    pub work: Time,
+    /// Checkpoints committed during the burst (all tiers).
+    pub commits: u64,
+    /// Wall-clock spent writing checkpoints (partial for a write cut
+    /// short by the interrupt — only elapsed stall time is charged).
+    pub overhead: Time,
+}
+
+impl BurstAccount {
+    /// The cost-free account: every wall minute was useful work.
+    fn passthrough(wall: Time) -> BurstAccount {
+        BurstAccount { work: wall, commits: 0, overhead: 0.0 }
+    }
+}
+
+/// Checkpoint semantics: commit overhead, lost work on interrupt, and
+/// restore latency. Methods take the job index so stateful policies
+/// (Young/Daly intervals, tier bookkeeping) can track per-job state.
 pub trait CheckpointPolicy {
     /// Stable policy name (the YAML/CLI selector).
     fn name(&self) -> &'static str;
 
-    /// Useful work lost when a failure interrupts a job that has
-    /// completed `done` minutes of work since start.
-    fn work_lost(&self, done: Time) -> Time;
+    /// Useful work lost when a failure interrupts job `job` after `done`
+    /// minutes of committed-plus-uncommitted work. Called once per
+    /// interrupt, *after* [`CheckpointPolicy::account_burst`].
+    fn work_lost(&mut self, job: usize, done: Time) -> Time;
 
-    /// Checkpoint-restore latency charged per recovery.
-    fn restart_cost(&self) -> Time;
+    /// Checkpoint-restore latency charged for job `job`'s next recovery.
+    fn restart_cost(&self, job: usize) -> Time;
+
+    /// Wall-clock needed to complete `work` useful minutes starting from
+    /// `done0` minutes already done (commit stalls included). Schedules
+    /// `JobComplete`; a commit coinciding with completion is skipped.
+    fn wall_for_work(&self, _job: usize, _done0: Time, work: Time) -> Time {
+        work
+    }
+
+    /// End-of-burst accounting: invert `wall` elapsed minutes of a burst
+    /// that started at `done0` into useful work, commits, and overhead.
+    /// `interrupted` distinguishes a failure (a commit starting at the
+    /// exact interrupt instant counts — the snapshot is atomic) from
+    /// completion (a commit coinciding with the finish is skipped).
+    fn account_burst(
+        &mut self,
+        _job: usize,
+        _done0: Time,
+        wall: Time,
+        _interrupted: bool,
+    ) -> BurstAccount {
+        BurstAccount::passthrough(wall)
+    }
+
+    /// Job `job` (re-)entered Running: self-optimizing policies recompute
+    /// their interval here against the live gang composition. Must not
+    /// draw from the RNG. The interval then holds for the whole burst
+    /// (the pending `JobComplete` was scheduled against it).
+    fn on_start_running(&mut self, _ctx: &SimCtx, _job: usize) {}
 }
 
+// ------------------------------------------------------------------ //
+// The single-tier commit schedule (shared by periodic / young_daly /
+// adaptive)
+// ------------------------------------------------------------------ //
+
+/// One tier's commit schedule within a burst that starts at a committed
+/// checkpoint: `interval` minutes of work, then a `cost`-minute write
+/// stall, repeating. Closed-form in both directions.
+#[derive(Clone, Copy, Debug)]
+struct CommitClock {
+    interval: Time,
+    cost: Time,
+}
+
+impl CommitClock {
+    /// Commits strictly inside `work` useful minutes (one per full
+    /// interval; none at the completion point itself).
+    fn commits_within(&self, work: Time) -> u64 {
+        if self.interval <= 0.0 || !self.interval.is_finite() || work <= 0.0 {
+            return 0;
+        }
+        let n = (work / self.interval - BOUNDARY_EPS).ceil() - 1.0;
+        if n > 0.0 {
+            n as u64
+        } else {
+            0
+        }
+    }
+
+    fn wall_for_work(&self, work: Time) -> Time {
+        if self.cost <= 0.0 {
+            return work; // exact passthrough: cost 0 stays byte-identical
+        }
+        work + self.commits_within(work) as f64 * self.cost
+    }
+
+    fn account(&self, wall: Time, interrupted: bool) -> BurstAccount {
+        if self.interval <= 0.0 || !self.interval.is_finite() || wall <= 0.0 {
+            return BurstAccount::passthrough(wall);
+        }
+        if self.cost <= 0.0 {
+            // Free commits: progress equals wall time; only the commit
+            // count is tracked (boundary-inclusive on interrupts — the
+            // snapshot at the boundary is atomic — exclusive at
+            // completion).
+            let commits = if interrupted {
+                (wall / self.interval + BOUNDARY_EPS).floor() as u64
+            } else {
+                self.commits_within(wall)
+            };
+            return BurstAccount { work: wall, commits, overhead: 0.0 };
+        }
+        // Commit k (k >= 1) starts at wall offset k·interval + (k-1)·cost
+        // and is durable the instant it starts; its write window ends at
+        // k·(interval + cost).
+        let period = self.interval + self.cost;
+        let ratio = (wall + self.cost) / period;
+        let raw = if interrupted {
+            (ratio + BOUNDARY_EPS).floor()
+        } else {
+            (ratio - BOUNDARY_EPS).ceil() - 1.0
+        };
+        let n = raw.max(0.0);
+        let commits = n as u64;
+        let end = n * period;
+        if wall >= end {
+            BurstAccount {
+                work: n * self.interval + (wall - end),
+                commits,
+                overhead: n * self.cost,
+            }
+        } else {
+            // Interrupted inside commit n's write window: the boundary is
+            // committed; charge only the stall time actually elapsed.
+            BurstAccount {
+                work: n * self.interval,
+                commits,
+                overhead: (n * self.cost - (end - wall)).max(0.0),
+            }
+        }
+    }
+}
+
+/// Young's optimal interval √(2·C·MTBF) for commit cost `C` and gang
+/// failure rate `rate` (1/min). A rate of 0 yields an infinite interval:
+/// no failures, no commits needed.
+fn young_daly_interval(cost: Time, rate: f64) -> Time {
+    if rate <= 0.0 {
+        return f64::INFINITY;
+    }
+    (2.0 * cost / rate).sqrt()
+}
+
+/// The configured-rate gang interrupt estimate used before any
+/// composition or observation is available: `job_size` random clocks
+/// plus the expected bad fraction's systematic clocks, plus — when a
+/// topology carries outage rates — the domain-outage exposure of a
+/// packed gang (one outage clock per distinct domain it would span).
+/// Without the outage term, a cluster whose only interrupt source is
+/// correlated outages would derive an infinite interval and never
+/// commit.
+fn configured_gang_rate(p: &Params) -> f64 {
+    let mut rate = p.job_size as f64
+        * (p.random_failure_rate + p.systematic_fraction * p.systematic_failure_rate);
+    if let Some(topo) = &p.topology {
+        let total = p.total_servers() as u64;
+        let mut stride: u64 = 1;
+        for level in &topo.levels {
+            stride = stride.saturating_mul(level.size.max(1) as u64);
+            if level.outage_rate <= 0.0 {
+                continue;
+            }
+            let n_domains = total.div_ceil(stride).max(1);
+            let spans = (p.job_size as u64).div_ceil(stride).max(1).min(n_domains);
+            rate += spans as f64 * level.outage_rate;
+        }
+    }
+    rate
+}
+
+/// The live gang interrupt rate of job `job`: the same composition
+/// arithmetic as the `gang` failure model (one random clock per active
+/// server, one extra systematic clock per bad active) plus, when a
+/// topology carries outage rates, one outage clock per distinct domain
+/// the gang actually touches — so an anti-affinity placement that spans
+/// more domains checkpoints more often, exactly matching its exposure.
+fn live_gang_rate(ctx: &SimCtx, job: usize) -> f64 {
+    let active = &ctx.jobs[job].active;
+    let n_bad = active.iter().filter(|&&id| ctx.fleet[id as usize].is_bad).count();
+    let mut rate = active.len() as f64 * ctx.p.random_failure_rate
+        + n_bad as f64 * ctx.p.systematic_failure_rate;
+    if let Some(t) = &ctx.topo {
+        let mut domains: Vec<u32> = Vec::new();
+        for (l, lv) in t.levels().iter().enumerate() {
+            if lv.outage_rate <= 0.0 {
+                continue;
+            }
+            domains.clear();
+            domains.extend(active.iter().map(|&id| t.domain_of(l, id)));
+            domains.sort_unstable();
+            domains.dedup();
+            rate += domains.len() as f64 * lv.outage_rate;
+        }
+    }
+    rate
+}
+
+// ------------------------------------------------------------------ //
+// Continuous
+// ------------------------------------------------------------------ //
+
 /// The paper's continuous asynchronous checkpointing: all committed work
-/// survives a failure; only the constant restore latency is paid.
+/// survives a failure; only the constant restore latency is paid and
+/// commits cost nothing.
 #[derive(Clone, Copy, Debug)]
 pub struct Continuous {
     pub recovery_time: Time,
@@ -34,22 +265,35 @@ impl CheckpointPolicy for Continuous {
         "continuous"
     }
 
-    fn work_lost(&self, _done: Time) -> Time {
+    fn work_lost(&mut self, _job: usize, _done: Time) -> Time {
         0.0
     }
 
-    fn restart_cost(&self) -> Time {
+    fn restart_cost(&self, _job: usize) -> Time {
         self.recovery_time
     }
 }
 
-/// Checkpoints are committed every `interval` minutes of useful work;
-/// progress past the last committed checkpoint is lost on failure.
-/// `interval <= 0` degenerates to [`Continuous`].
+// ------------------------------------------------------------------ //
+// Periodic
+// ------------------------------------------------------------------ //
+
+/// Checkpoints are committed every `interval` minutes of useful work, at
+/// `cost` wall minutes per commit; progress past the last committed
+/// checkpoint is lost on failure. `interval <= 0` degenerates to
+/// [`Continuous`] (only reachable via `auto`; naming `periodic`
+/// explicitly with a zero interval is a build error).
 #[derive(Clone, Copy, Debug)]
 pub struct Periodic {
     pub interval: Time,
+    pub cost: Time,
     pub recovery_time: Time,
+}
+
+impl Periodic {
+    fn clock(&self) -> CommitClock {
+        CommitClock { interval: self.interval, cost: self.cost }
+    }
 }
 
 impl CheckpointPolicy for Periodic {
@@ -57,16 +301,372 @@ impl CheckpointPolicy for Periodic {
         "periodic"
     }
 
-    fn work_lost(&self, done: Time) -> Time {
+    fn work_lost(&mut self, _job: usize, done: Time) -> Time {
         if self.interval <= 0.0 {
             return 0.0;
         }
-        let committed = (done / self.interval).floor() * self.interval;
-        done - committed
+        // Epsilon-tolerant floor: `done` sits on a committed multiple
+        // only up to FP error after a restore; without the slack the
+        // next failure can floor one interval low and re-lose committed
+        // work.
+        let committed = (done / self.interval + BOUNDARY_EPS).floor() * self.interval;
+        (done - committed).max(0.0)
     }
 
-    fn restart_cost(&self) -> Time {
+    fn restart_cost(&self, _job: usize) -> Time {
         self.recovery_time
+    }
+
+    fn wall_for_work(&self, _job: usize, _done0: Time, work: Time) -> Time {
+        self.clock().wall_for_work(work)
+    }
+
+    fn account_burst(
+        &mut self,
+        _job: usize,
+        _done0: Time,
+        wall: Time,
+        interrupted: bool,
+    ) -> BurstAccount {
+        // Bursts always start at a committed checkpoint (losses restore
+        // to one), so the schedule relative to the burst start is the
+        // absolute multiple schedule `work_lost` floors against.
+        self.clock().account(wall, interrupted)
+    }
+}
+
+// ------------------------------------------------------------------ //
+// Young/Daly
+// ------------------------------------------------------------------ //
+
+/// Self-optimizing interval: √(2·C·MTBF_gang), recomputed from the live
+/// gang composition every time the job (re-)enters Running — a gang that
+/// accumulates bad servers checkpoints more often. Commits move with the
+/// interval, so the last committed point is tracked per job instead of
+/// floored from a fixed grid.
+#[derive(Clone, Debug)]
+pub struct YoungDaly {
+    cost: Time,
+    recovery_time: Time,
+    /// Current interval per job (configured-rate estimate until the
+    /// first burst).
+    interval: Vec<Time>,
+    /// Absolute work point of the newest committed checkpoint per job.
+    last_committed: Vec<Time>,
+}
+
+impl YoungDaly {
+    pub fn new(n_jobs: usize, p: &Params) -> YoungDaly {
+        let initial = young_daly_interval(p.checkpoint_cost, configured_gang_rate(p));
+        YoungDaly {
+            cost: p.checkpoint_cost,
+            recovery_time: p.recovery_time,
+            interval: vec![initial; n_jobs],
+            last_committed: vec![0.0; n_jobs],
+        }
+    }
+
+    /// The interval currently in force for `job` (test hook).
+    pub fn interval(&self, job: usize) -> Time {
+        self.interval[job]
+    }
+
+    fn clock(&self, job: usize) -> CommitClock {
+        CommitClock { interval: self.interval[job], cost: self.cost }
+    }
+}
+
+impl CheckpointPolicy for YoungDaly {
+    fn name(&self) -> &'static str {
+        "young_daly"
+    }
+
+    fn work_lost(&mut self, job: usize, done: Time) -> Time {
+        (done - self.last_committed[job]).max(0.0)
+    }
+
+    fn restart_cost(&self, _job: usize) -> Time {
+        self.recovery_time
+    }
+
+    fn wall_for_work(&self, job: usize, _done0: Time, work: Time) -> Time {
+        self.clock(job).wall_for_work(work)
+    }
+
+    fn account_burst(
+        &mut self,
+        job: usize,
+        done0: Time,
+        wall: Time,
+        interrupted: bool,
+    ) -> BurstAccount {
+        let acct = self.clock(job).account(wall, interrupted);
+        if acct.commits > 0 {
+            // Milestones are relative to the burst start (itself the last
+            // committed point), so intervals can change between bursts
+            // without stranding the committed grid.
+            self.last_committed[job] = done0 + acct.commits as f64 * self.interval[job];
+        }
+        acct
+    }
+
+    fn on_start_running(&mut self, ctx: &SimCtx, job: usize) {
+        self.interval[job] = young_daly_interval(self.cost, live_gang_rate(ctx, job));
+    }
+}
+
+// ------------------------------------------------------------------ //
+// Adaptive (online Young/Daly)
+// ------------------------------------------------------------------ //
+
+/// Sliding window of observed interrupt inter-arrivals per job.
+const ADAPTIVE_WINDOW: usize = 16;
+
+/// Online Young/Daly: instead of trusting the configured rates, estimate
+/// MTBF from a sliding window of observed interrupt inter-arrivals
+/// (running-burst lengths) and recompute √(2·C·MTBF) at every burst
+/// start. Falls back to the configured-rate estimate until the first
+/// interrupt is observed.
+#[derive(Clone, Debug)]
+pub struct Adaptive {
+    cost: Time,
+    recovery_time: Time,
+    /// Configured-rate MTBF estimate (the cold-start fallback).
+    fallback_mtbf: Time,
+    /// Per-job sliding window of observed running-burst lengths that
+    /// ended in an interrupt.
+    window: Vec<Vec<Time>>,
+    interval: Vec<Time>,
+    last_committed: Vec<Time>,
+}
+
+impl Adaptive {
+    pub fn new(n_jobs: usize, p: &Params) -> Adaptive {
+        let rate = configured_gang_rate(p);
+        let fallback_mtbf = if rate > 0.0 { 1.0 / rate } else { f64::INFINITY };
+        let initial = young_daly_interval(p.checkpoint_cost, rate);
+        Adaptive {
+            cost: p.checkpoint_cost,
+            recovery_time: p.recovery_time,
+            fallback_mtbf,
+            window: vec![Vec::new(); n_jobs],
+            interval: vec![initial; n_jobs],
+            last_committed: vec![0.0; n_jobs],
+        }
+    }
+
+    /// The interval currently in force for `job` (test hook).
+    pub fn interval(&self, job: usize) -> Time {
+        self.interval[job]
+    }
+
+    fn clock(&self, job: usize) -> CommitClock {
+        CommitClock { interval: self.interval[job], cost: self.cost }
+    }
+
+    fn observed_mtbf(&self, job: usize) -> Time {
+        let w = &self.window[job];
+        if w.is_empty() {
+            return self.fallback_mtbf;
+        }
+        w.iter().sum::<Time>() / w.len() as f64
+    }
+}
+
+impl CheckpointPolicy for Adaptive {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn work_lost(&mut self, job: usize, done: Time) -> Time {
+        (done - self.last_committed[job]).max(0.0)
+    }
+
+    fn restart_cost(&self, _job: usize) -> Time {
+        self.recovery_time
+    }
+
+    fn wall_for_work(&self, job: usize, _done0: Time, work: Time) -> Time {
+        self.clock(job).wall_for_work(work)
+    }
+
+    fn account_burst(
+        &mut self,
+        job: usize,
+        done0: Time,
+        wall: Time,
+        interrupted: bool,
+    ) -> BurstAccount {
+        let acct = self.clock(job).account(wall, interrupted);
+        if acct.commits > 0 {
+            self.last_committed[job] = done0 + acct.commits as f64 * self.interval[job];
+        }
+        if interrupted {
+            let w = &mut self.window[job];
+            if w.len() == ADAPTIVE_WINDOW {
+                w.remove(0);
+            }
+            w.push(wall);
+        }
+        acct
+    }
+
+    fn on_start_running(&mut self, _ctx: &SimCtx, job: usize) {
+        let mtbf = self.observed_mtbf(job);
+        // One formula, one site: the observed MTBF feeds the same
+        // Young/Daly helper the configured-rate policy uses.
+        let rate = if mtbf.is_finite() { 1.0 / mtbf } else { 0.0 };
+        self.interval[job] = young_daly_interval(self.cost, rate);
+    }
+}
+
+// ------------------------------------------------------------------ //
+// Tiered
+// ------------------------------------------------------------------ //
+
+/// Two commit tiers on fixed absolute grids: a cheap-frequent tier
+/// (`checkpoint_interval` / `checkpoint_cost`, restored at
+/// `recovery_time`) and an expensive-rare tier
+/// (`checkpoint_tier2_interval` / `checkpoint_tier2_cost`, restored at
+/// `checkpoint_tier2_restore`). A failure restores from the nearest
+/// committed tier — ties (coincident grid points write both tiers) go to
+/// the cheap tier. The write stalls add: a coincident boundary pays both
+/// costs.
+#[derive(Clone, Debug)]
+pub struct Tiered {
+    cheap_interval: Time,
+    cheap_cost: Time,
+    cheap_restore: Time,
+    tier2_interval: Time,
+    tier2_cost: Time,
+    tier2_restore: Time,
+    /// Absolute work point of the newest commit per tier, per job.
+    last_cheap: Vec<Time>,
+    last_tier2: Vec<Time>,
+    /// Whether job `job`'s next restore comes from the expensive tier
+    /// (set by [`Tiered::work_lost`], read by restart_cost).
+    restore_tier2: Vec<bool>,
+}
+
+impl Tiered {
+    pub fn new(n_jobs: usize, p: &Params) -> Tiered {
+        let tier2_restore = if p.checkpoint_tier2_restore > 0.0 {
+            p.checkpoint_tier2_restore
+        } else {
+            p.recovery_time
+        };
+        Tiered {
+            cheap_interval: p.checkpoint_interval,
+            cheap_cost: p.checkpoint_cost,
+            cheap_restore: p.recovery_time,
+            tier2_interval: p.checkpoint_tier2_interval,
+            tier2_cost: p.checkpoint_tier2_cost,
+            tier2_restore,
+            last_cheap: vec![0.0; n_jobs],
+            last_tier2: vec![0.0; n_jobs],
+            restore_tier2: vec![false; n_jobs],
+        }
+    }
+
+    /// The next commit milestone strictly after absolute work point
+    /// `after`: (work point, write cost, cheap committed, tier2
+    /// committed). Coincident grid points merge into one milestone that
+    /// writes both tiers.
+    fn next_milestone(&self, after: Time) -> (Time, Time, bool, bool) {
+        let next_of = |interval: Time| -> Time {
+            ((after / interval + BOUNDARY_EPS).floor() + 1.0) * interval
+        };
+        let w1 = next_of(self.cheap_interval);
+        let w2 = next_of(self.tier2_interval);
+        if (w1 - w2).abs() <= BOUNDARY_EPS * w2.abs().max(1.0) {
+            (w2, self.cheap_cost + self.tier2_cost, true, true)
+        } else if w1 < w2 {
+            (w1, self.cheap_cost, true, false)
+        } else {
+            (w2, self.tier2_cost, false, true)
+        }
+    }
+}
+
+impl CheckpointPolicy for Tiered {
+    fn name(&self) -> &'static str {
+        "tiered"
+    }
+
+    fn work_lost(&mut self, job: usize, done: Time) -> Time {
+        let (cheap, tier2) = (self.last_cheap[job], self.last_tier2[job]);
+        // Nearest committed tier; on a tie both tiers hold the point and
+        // the cheap (fast) restore wins.
+        self.restore_tier2[job] = tier2 > cheap;
+        (done - cheap.max(tier2)).max(0.0)
+    }
+
+    fn restart_cost(&self, job: usize) -> Time {
+        if self.restore_tier2[job] {
+            self.tier2_restore
+        } else {
+            self.cheap_restore
+        }
+    }
+
+    fn wall_for_work(&self, _job: usize, done0: Time, work: Time) -> Time {
+        let target = done0 + work;
+        let slack = BOUNDARY_EPS * target.abs().max(1.0);
+        let mut pos = done0;
+        let mut cost = 0.0;
+        loop {
+            let (w, c, _, _) = self.next_milestone(pos);
+            if w >= target - slack {
+                // Completion-coincident commits are skipped.
+                return work + cost;
+            }
+            cost += c;
+            pos = w;
+        }
+    }
+
+    fn account_burst(
+        &mut self,
+        job: usize,
+        done0: Time,
+        wall: Time,
+        interrupted: bool,
+    ) -> BurstAccount {
+        if wall <= 0.0 {
+            return BurstAccount::passthrough(wall);
+        }
+        let slack = BOUNDARY_EPS * wall.abs().max(1.0);
+        let mut pos = done0; // absolute work reached
+        let mut acc_cost = 0.0; // wall spent in completed write windows
+        let mut out = BurstAccount::default();
+        loop {
+            let (w, c, cheap, tier2) = self.next_milestone(pos);
+            let start = (w - done0) + acc_cost; // wall offset of this write
+            let reached =
+                if interrupted { start <= wall + slack } else { start < wall - slack };
+            if !reached {
+                out.work = (wall - acc_cost).max(0.0);
+                out.overhead = acc_cost;
+                return out;
+            }
+            // Committed (snapshots are atomic at the boundary).
+            if cheap {
+                out.commits += 1;
+                self.last_cheap[job] = w;
+            }
+            if tier2 {
+                out.commits += 1;
+                self.last_tier2[job] = w;
+            }
+            if wall < start + c {
+                // Interrupted inside this write window.
+                out.work = w - done0;
+                out.overhead = acc_cost + (wall - start).max(0.0);
+                return out;
+            }
+            acc_cost += c;
+            pos = w;
+        }
     }
 }
 
@@ -76,22 +676,267 @@ mod tests {
 
     #[test]
     fn continuous_loses_nothing() {
-        let c = Continuous { recovery_time: 20.0 };
-        assert_eq!(c.work_lost(123.4), 0.0);
-        assert_eq!(c.restart_cost(), 20.0);
+        let mut c = Continuous { recovery_time: 20.0 };
+        assert_eq!(c.work_lost(0, 123.4), 0.0);
+        assert_eq!(c.restart_cost(0), 20.0);
+        assert_eq!(c.wall_for_work(0, 0.0, 500.0), 500.0);
+        assert_eq!(c.account_burst(0, 0.0, 77.0, true), BurstAccount::passthrough(77.0));
     }
 
     #[test]
     fn periodic_loses_past_last_commit() {
-        let p = Periodic { interval: 30.0, recovery_time: 20.0 };
-        assert!((p.work_lost(100.0) - 10.0).abs() < 1e-9);
-        assert!(p.work_lost(90.0).abs() < 1e-9, "exact boundary loses nothing");
-        assert!((p.work_lost(29.9) - 29.9).abs() < 1e-9);
+        let mut p = Periodic { interval: 30.0, cost: 0.0, recovery_time: 20.0 };
+        assert!((p.work_lost(0, 100.0) - 10.0).abs() < 1e-9);
+        assert!(p.work_lost(0, 90.0).abs() < 1e-9, "exact boundary loses nothing");
+        assert!((p.work_lost(0, 29.9) - 29.9).abs() < 1e-9);
     }
 
     #[test]
     fn periodic_zero_interval_degenerates_to_continuous() {
-        let p = Periodic { interval: 0.0, recovery_time: 20.0 };
-        assert_eq!(p.work_lost(500.0), 0.0);
+        let mut p = Periodic { interval: 0.0, cost: 0.0, recovery_time: 20.0 };
+        assert_eq!(p.work_lost(0, 500.0), 0.0);
+    }
+
+    /// Satellite bugfix: `done` restored to a committed multiple only up
+    /// to FP error must not floor one interval low on the next failure.
+    #[test]
+    fn work_lost_floor_is_fp_tolerant() {
+        // 0.7 + 0.1 = 0.7999999999999999 < 0.8: the naive floor loses the
+        // whole interval again.
+        let mut p = Periodic { interval: 0.8, cost: 0.0, recovery_time: 20.0 };
+        let done = 0.7 + 0.1;
+        assert!(done < 0.8, "test premise: FP lands below the boundary");
+        assert!(p.work_lost(0, done).abs() < 1e-9, "re-lost committed work");
+    }
+
+    /// Repeated failures landing exactly on commit boundaries: committed
+    /// work must never be lost twice, regardless of FP drift in `done`.
+    #[test]
+    fn repeated_boundary_failures_never_relose_work() {
+        let interval = 0.1;
+        let mut p = Periodic { interval, cost: 0.0, recovery_time: 20.0 };
+        let mut done = 0.0f64;
+        for k in 1..=100 {
+            done += interval; // burst ends exactly at the k-th boundary
+            let lost = p.work_lost(0, done);
+            assert!(lost.abs() < 1e-9, "step {k}: re-lost {lost} of committed work");
+            done -= lost;
+        }
+        assert!((done - 10.0).abs() < 1e-6, "all 100 intervals committed: {done}");
+    }
+
+    #[test]
+    fn commit_clock_dilates_and_inverts() {
+        let c = CommitClock { interval: 100.0, cost: 10.0 };
+        // 250 work = 2 commits inside (at 100 and 200; none at 250).
+        assert_eq!(c.wall_for_work(250.0), 270.0);
+        // Exact-multiple completion skips the final commit.
+        assert_eq!(c.wall_for_work(300.0), 320.0);
+        // Inversion at completion reproduces the work.
+        let a = c.account(270.0, false);
+        assert!((a.work - 250.0).abs() < 1e-9);
+        assert_eq!(a.commits, 2);
+        assert!((a.overhead - 20.0).abs() < 1e-9);
+        let a = c.account(320.0, false);
+        assert!((a.work - 300.0).abs() < 1e-9);
+        assert_eq!(a.commits, 2, "completion-coincident commit skipped");
+    }
+
+    #[test]
+    fn commit_clock_interrupt_during_write_is_committed() {
+        let c = CommitClock { interval: 100.0, cost: 10.0 };
+        // Interrupt at wall 105: commit 1 started at 100, write half done.
+        let a = c.account(105.0, true);
+        assert_eq!(a.commits, 1, "snapshot is atomic at the boundary");
+        assert!((a.work - 100.0).abs() < 1e-9);
+        assert!((a.overhead - 5.0).abs() < 1e-9, "only elapsed stall counts");
+        // Interrupt exactly at the write start: committed, zero overhead.
+        let a = c.account(100.0, true);
+        assert_eq!(a.commits, 1);
+        assert!((a.work - 100.0).abs() < 1e-9);
+        assert!(a.overhead.abs() < 1e-9);
+        // Interrupt mid-work after a full write window.
+        let a = c.account(160.0, true);
+        assert_eq!(a.commits, 1);
+        assert!((a.work - 150.0).abs() < 1e-9);
+        assert!((a.overhead - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn commit_clock_cost_zero_is_exact_passthrough() {
+        let c = CommitClock { interval: 37.0, cost: 0.0 };
+        for wall in [0.0, 1.5, 36.999999, 37.0, 1234.567] {
+            assert_eq!(c.wall_for_work(wall), wall, "bit-identical wall");
+            let a = c.account(wall, true);
+            assert_eq!(a.work, wall, "bit-identical work");
+            assert_eq!(a.overhead, 0.0);
+        }
+        assert_eq!(c.account(74.0, true).commits, 2);
+        assert_eq!(c.account(74.0, false).commits, 1, "completion skips the boundary");
+    }
+
+    #[test]
+    fn young_daly_formula() {
+        // MTBF 500 min, cost 10 min -> sqrt(2*10*500) = 100.
+        assert!((young_daly_interval(10.0, 1.0 / 500.0) - 100.0).abs() < 1e-9);
+        assert_eq!(young_daly_interval(10.0, 0.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn young_daly_tracks_commits_across_interval_changes() {
+        let mut p = Params::small_test();
+        p.checkpoint_cost = 10.0;
+        let mut yd = YoungDaly::new(1, &p);
+        yd.interval[0] = 100.0;
+        // Burst from 0: wall 270 = 250 work, commits at 100 and 200.
+        let a = yd.account_burst(0, 0.0, 270.0, true);
+        assert_eq!(a.commits, 2);
+        assert!((yd.last_committed[0] - 200.0).abs() < 1e-9);
+        assert!((yd.work_lost(0, 250.0) - 50.0).abs() < 1e-9);
+        // Interval changes; the committed point stays where it was.
+        yd.interval[0] = 80.0;
+        assert!((yd.work_lost(0, 250.0) - 50.0).abs() < 1e-9);
+        // Next burst from 200 commits relative to 200: 200 + 80 = 280.
+        let a = yd.account_burst(0, 200.0, 95.0, true);
+        assert_eq!(a.commits, 1);
+        assert!((yd.last_committed[0] - 280.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adaptive_interval_follows_observed_interarrivals() {
+        let mut p = Params::small_test();
+        p.checkpoint_cost = 10.0;
+        p.random_failure_rate = 0.0;
+        p.systematic_failure_rate = 0.0;
+        let mut a = Adaptive::new(1, &p);
+        assert_eq!(a.observed_mtbf(0), f64::INFINITY, "no rates, no observations");
+        // Observe interrupts every ~200 minutes of running.
+        for _ in 0..8 {
+            a.account_burst(0, 0.0, 200.0, true);
+        }
+        assert!((a.observed_mtbf(0) - 200.0).abs() < 1e-9);
+        let ctx_free = crate::model::ctx::SimCtx::new(&p, crate::sim::rng::Rng::new(1));
+        a.on_start_running(&ctx_free, 0);
+        assert!((a.interval(0) - (2.0f64 * 10.0 * 200.0).sqrt()).abs() < 1e-9);
+        // The window slides: old samples age out.
+        for _ in 0..ADAPTIVE_WINDOW {
+            a.account_burst(0, 0.0, 50.0, true);
+        }
+        assert!((a.observed_mtbf(0) - 50.0).abs() < 1e-9);
+        // Completions are not interrupts and must not enter the window.
+        a.account_burst(0, 0.0, 9999.0, false);
+        assert!((a.observed_mtbf(0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gang_rate_counts_domain_outage_exposure() {
+        // A cluster whose ONLY interrupt source is correlated outages
+        // must still yield a finite Young/Daly interval.
+        let mut p = Params::small_test(); // 72 + 16 servers
+        p.checkpoint_cost = 10.0;
+        p.random_failure_rate = 0.0;
+        p.systematic_failure_rate = 0.0;
+        p.systematic_fraction = 0.0;
+        p.topology = Some(crate::config::TopologySpec {
+            levels: vec![crate::config::TopologyLevelSpec {
+                name: "rack".into(),
+                size: 8,
+                outage_rate: 0.001,
+            }],
+        });
+        // Packed estimate: a 64-gang spans 8 of the 11 rack domains.
+        let rate = configured_gang_rate(&p);
+        assert!((rate - 8.0 * 0.001).abs() < 1e-12, "{rate}");
+        assert!(YoungDaly::new(1, &p).interval(0).is_finite());
+
+        // Live rate counts the domains the gang actually touches.
+        let mut ctx = crate::model::ctx::SimCtx::new(&p, crate::sim::rng::Rng::new(1));
+        ctx.jobs[0].active = (0..16).collect(); // racks 0 and 1
+        let live = live_gang_rate(&ctx, 0);
+        assert!((live - 2.0 * 0.001).abs() < 1e-12, "{live}");
+
+        // Without a topology the rates stay the plain gang arithmetic.
+        p.topology = None;
+        assert_eq!(configured_gang_rate(&p), 0.0);
+    }
+
+    fn tiered_params() -> Params {
+        let mut p = Params::small_test();
+        p.checkpoint_interval = 100.0;
+        p.checkpoint_cost = 5.0;
+        p.checkpoint_tier2_interval = 300.0;
+        p.checkpoint_tier2_cost = 20.0;
+        p.checkpoint_tier2_restore = 60.0;
+        p.recovery_time = 20.0;
+        p
+    }
+
+    #[test]
+    fn tiered_merges_coincident_boundaries_and_restores_nearest() {
+        let mut t = Tiered::new(1, &tiered_params());
+        // Work 0..250: cheap commits at 100 and 200 (5 each).
+        assert!((t.wall_for_work(0, 0.0, 250.0) - 260.0).abs() < 1e-9);
+        // Work 0..350: cheap at 100, 200 + coincident at 300 (5+20).
+        assert!((t.wall_for_work(0, 0.0, 350.0) - 385.0).abs() < 1e-9);
+        let a = t.account_burst(0, 0.0, 385.0, true);
+        assert_eq!(a.commits, 4, "3 cheap + 1 tier2 (300 writes both)");
+        assert!((a.work - 350.0).abs() < 1e-9);
+        assert!((a.overhead - 35.0).abs() < 1e-9);
+        assert!((t.last_cheap[0] - 300.0).abs() < 1e-9);
+        assert!((t.last_tier2[0] - 300.0).abs() < 1e-9);
+        // Failure at 350: nearest committed tier is the coincident 300 —
+        // tie goes to the cheap (fast) restore.
+        assert!((t.work_lost(0, 350.0) - 50.0).abs() < 1e-9);
+        assert_eq!(t.restart_cost(0), 20.0);
+    }
+
+    #[test]
+    fn tiered_distinct_restore_costs() {
+        let mut t = Tiered::new(1, &tiered_params());
+        // A long burst: cheap commits at 100..800, tier2 at 300 and 600
+        // (wall 880 = 800 work + 80 of commit stalls, ending exactly as
+        // the 800-commit's write finishes).
+        let a = t.account_burst(0, 0.0, 880.0, true);
+        assert!((a.work - 800.0).abs() < 1e-9);
+        assert!((t.last_cheap[0] - 800.0).abs() < 1e-9);
+        assert!((t.last_tier2[0] - 600.0).abs() < 1e-9);
+        // Nearest committed tier is the cheap 800: fast restore.
+        let lost = t.work_lost(0, 800.0);
+        assert!(lost.abs() < 1e-9);
+        assert_eq!(t.restart_cost(0), 20.0, "cheap tier restores at recovery_time");
+        // Force the tier2-nearest case directly.
+        t.last_cheap[0] = 200.0;
+        t.last_tier2[0] = 300.0;
+        let lost = t.work_lost(0, 420.0);
+        assert!((lost - 120.0).abs() < 1e-9, "restore to 300, the nearest tier");
+        assert_eq!(t.restart_cost(0), 60.0, "tier2 restores at its own cost");
+    }
+
+    #[test]
+    fn tiered_account_interrupt_inside_write_window() {
+        let mut t = Tiered::new(1, &tiered_params());
+        // Burst from 0; commit 1 (cheap) starts at wall 100; interrupt at
+        // wall 102 — inside the 5-minute write.
+        let a = t.account_burst(0, 0.0, 102.0, true);
+        assert_eq!(a.commits, 1);
+        assert!((a.work - 100.0).abs() < 1e-9);
+        assert!((a.overhead - 2.0).abs() < 1e-9);
+        assert!((t.last_cheap[0] - 100.0).abs() < 1e-9);
+        assert_eq!(t.last_tier2[0], 0.0);
+    }
+
+    #[test]
+    fn tiered_bursts_resume_from_tier2_grid_points() {
+        let mut t = Tiered::new(1, &tiered_params());
+        // done0 = 300 (a tier2 point, also cheap-coincident): next cheap
+        // milestone is 400, not 300 again.
+        let (w, c, cheap, tier2) = t.next_milestone(300.0);
+        assert!((w - 400.0).abs() < 1e-9);
+        assert!(cheap && !tier2);
+        assert!((c - 5.0).abs() < 1e-9);
+        // And accounting a burst from 300 commits at 400 first.
+        let a = t.account_burst(0, 300.0, 120.0, true);
+        assert_eq!(a.commits, 1);
+        assert!((t.last_cheap[0] - 400.0).abs() < 1e-9);
     }
 }

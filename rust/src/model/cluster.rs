@@ -17,7 +17,7 @@ use crate::config::Params;
 use crate::model::ctx::SimCtx;
 use crate::model::events::Ev;
 use crate::model::failure::PerServerClocks;
-use crate::model::job::Job;
+use crate::model::job::{Job, JobPhase};
 use crate::model::lifecycle as flow;
 use crate::model::outputs::RunOutputs;
 use crate::model::policy::{PolicySet, PolicySpec};
@@ -154,6 +154,31 @@ impl Simulation {
             self.dispatch(ev);
             if self.ctx.all_done() {
                 break;
+            }
+        }
+
+        // Horizon cut: a job still mid-burst has computed real work since
+        // its last pause that `remaining` does not yet reflect — fold the
+        // partial burst into the checkpoint accounting so `work_done` and
+        // `goodput_fraction` see it (a failure-free job that ran the whole
+        // horizon must not report zero goodput). Only the new checkpoint
+        // fields move; the legacy outputs (burst stats, work_lost) stay
+        // byte-identical to the pre-cost simulator.
+        if !self.ctx.all_done() {
+            let horizon = self.ctx.p.max_sim_time;
+            for j in 0..self.ctx.jobs.len() {
+                if self.ctx.jobs[j].phase != JobPhase::Running {
+                    continue;
+                }
+                let r0 = self.ctx.jobs[j].remaining;
+                let wall = (horizon - self.ctx.jobs[j].run_start).max(0.0);
+                let acct = self
+                    .policies
+                    .checkpoint
+                    .account_burst(j, self.ctx.p.job_len - r0, wall, true);
+                self.ctx.out.checkpoints_committed += acct.commits;
+                self.ctx.out.checkpoint_overhead += acct.overhead;
+                self.ctx.jobs[j].remaining = (r0 - acct.work).max(0.0);
             }
         }
 

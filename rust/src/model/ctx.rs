@@ -157,6 +157,11 @@ impl SimCtx {
             }
             self.tr(TraceKind::Horizon);
         }
+        self.out.work_done = self
+            .jobs
+            .iter()
+            .map(|j| (self.p.job_len - j.remaining).max(0.0))
+            .sum();
         self.out.preemptions = self.pools.preemptions;
         self.out.preemption_cost = self.pools.preemption_cost_total;
         self.out.repairs_auto = self.shop.completed_auto;

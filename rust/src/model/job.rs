@@ -45,6 +45,11 @@ pub struct Job {
     pub gen: Generation,
     /// When the job entered Stalled (to account stall time).
     pub stalled_since: Time,
+    /// When the current checkpoint-restore recovery will finish (valid in
+    /// Recovering): a recovery cut short refunds `recovery_end - now` of
+    /// the cost charged up front, so `recovery_total` accrues only
+    /// recovery time actually spent.
+    pub recovery_end: Time,
     /// When a correlated domain outage last stopped this job, if it has
     /// not resumed running since (attributes downtime to domain events).
     pub domain_down_since: Option<Time>,
@@ -65,6 +70,7 @@ impl Job {
             standbys: Vec::new(),
             gen: Generation::default(),
             stalled_since: 0.0,
+            recovery_end: 0.0,
             domain_down_since: None,
         }
     }
@@ -80,6 +86,7 @@ impl Job {
         self.standbys.clear();
         self.gen = Generation::default();
         self.stalled_since = 0.0;
+        self.recovery_end = 0.0;
         self.domain_down_since = None;
     }
 
@@ -164,8 +171,10 @@ mod tests {
         j.resume(10.0);
         j.pause(60.0);
         j.gen.bump();
+        j.recovery_end = 99.0;
         j.reset(0, 1000.0);
         assert_eq!(j.id, 0);
+        assert_eq!(j.recovery_end, 0.0);
         assert_eq!(j.phase, JobPhase::Stalled);
         assert_eq!(j.remaining, 1000.0);
         assert!(j.active.is_empty() && j.standbys.is_empty());

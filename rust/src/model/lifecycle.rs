@@ -15,6 +15,7 @@ use crate::model::regen;
 use crate::model::repair_flow;
 use crate::model::scheduler;
 use crate::model::server::ServerState;
+use crate::sim::Time;
 use crate::trace::inject::Injection;
 use crate::trace::TraceKind;
 
@@ -83,14 +84,11 @@ pub(crate) fn handle_failure(
 
     // Module 2 (coordinator): stop the gang, commit progress. The failure
     // model owns the per-server vs aggregate clock split.
+    let r0 = ctx.jobs[j].remaining; // work remaining at burst start
     let burst = pol.failure.interrupt(ctx, j, now);
     ctx.burst_sum += burst;
     ctx.burst_count += 1;
-    // Checkpoint policy: lose work past the last committed checkpoint.
-    let done = ctx.p.job_len - ctx.jobs[j].remaining;
-    let lost = pol.checkpoint.work_lost(done);
-    ctx.jobs[j].remaining += lost;
-    ctx.out.work_lost += lost;
+    account_interrupted_burst(ctx, pol, j, r0, burst);
     ctx.jobs[j].gen.bump(); // invalidate JobComplete / stale phase events
 
     // Diagnosis (inputs 12–13) — allocation-free over the active list
@@ -140,14 +138,53 @@ pub(crate) fn handle_failure(
     }
 }
 
+/// End-of-burst accounting at an interrupt: convert the wall-clock burst
+/// into useful work (commit stalls are wall time, not progress), then
+/// lose work past the last committed checkpoint. `r0` is the job's
+/// `remaining` as it stood when the burst started (the failure model's
+/// `interrupt` subtracts wall time and clamps, which loses information
+/// once commits stretch the burst past `remaining`).
+fn account_interrupted_burst(
+    ctx: &mut SimCtx,
+    pol: &mut PolicySet,
+    j: usize,
+    r0: Time,
+    burst: Time,
+) {
+    let done0 = ctx.p.job_len - r0;
+    let acct = pol.checkpoint.account_burst(j, done0, burst, true);
+    ctx.out.checkpoints_committed += acct.commits;
+    ctx.out.checkpoint_overhead += acct.overhead;
+    // Same expression `pause` used, in useful-work terms — bit-identical
+    // when the policy has no commit cost (acct.work == burst exactly).
+    ctx.jobs[j].remaining = (r0 - acct.work).max(0.0);
+    let done = ctx.p.job_len - ctx.jobs[j].remaining;
+    let lost = pol.checkpoint.work_lost(j, done);
+    ctx.jobs[j].remaining += lost;
+    ctx.out.work_lost += lost;
+}
+
 /// Enter checkpoint-restore recovery (cost set by the checkpoint policy).
 pub(crate) fn begin_recovery(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
     ctx.jobs[j].phase = JobPhase::Recovering;
-    let cost = pol.checkpoint.restart_cost();
+    let cost = pol.checkpoint.restart_cost(j);
     ctx.tr(TraceKind::RecoveryStart { cost });
     ctx.out.recovery_total += cost;
+    ctx.jobs[j].recovery_end = ctx.now() + cost;
     let gen = ctx.jobs[j].gen.0;
     ctx.engine.schedule_in(cost, Ev::RecoveryDone { job: j as u32, gen });
+}
+
+/// A recovery in progress is being cut short (e.g. a domain outage broke
+/// the gang mid-restore): refund the unelapsed remainder that
+/// [`begin_recovery`] charged up front, so `recovery_total` accrues only
+/// recovery time actually spent. The retry charges its own full cost —
+/// without the refund an interrupted recovery double-charges time the
+/// job never spent recovering.
+pub(crate) fn interrupt_recovery(ctx: &mut SimCtx, j: usize) {
+    debug_assert_eq!(ctx.jobs[j].phase, JobPhase::Recovering);
+    let remainder = (ctx.jobs[j].recovery_end - ctx.now()).max(0.0);
+    ctx.out.recovery_total -= remainder;
 }
 
 /// (Re-)allocation: Figure 1's host-selection / stall decision.
@@ -241,11 +278,17 @@ pub(crate) fn start_running(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
     if ctx.jobs[j].remaining >= ctx.p.job_len {
         ctx.tr(TraceKind::JobStarted);
     }
+    // Self-optimizing checkpoint policies re-derive their interval from
+    // the gang composition now armed (no RNG draws); the interval holds
+    // for the whole burst.
+    pol.checkpoint.on_start_running(ctx, j);
     // Completion clock first (FIFO tie-break: completion wins a tie
-    // against a failure at the exact same instant).
+    // against a failure at the exact same instant). Commit stalls
+    // stretch the wall clock past the useful work remaining.
     let gen = ctx.jobs[j].gen.0;
     let remaining = ctx.jobs[j].remaining;
-    ctx.engine.schedule_in(remaining, Ev::JobComplete { job: j as u32, gen });
+    let wall = pol.checkpoint.wall_for_work(j, ctx.p.job_len - remaining, remaining);
+    ctx.engine.schedule_in(wall, Ev::JobComplete { job: j as u32, gen });
     // Failure clocks (module 1), per the failure model.
     pol.failure.arm(ctx, j);
 }
@@ -255,9 +298,17 @@ pub(crate) fn on_job_complete(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize, g
         return;
     }
     let now = ctx.now();
+    let r0 = ctx.jobs[j].remaining;
     let burst = ctx.jobs[j].pause(now);
     ctx.burst_sum += burst;
     ctx.burst_count += 1;
+    // The final burst's commit stalls were wall time, not work: account
+    // them and restate `remaining` in useful-work terms (bit-identical
+    // to `pause`'s arithmetic when commits are free).
+    let acct = pol.checkpoint.account_burst(j, ctx.p.job_len - r0, burst, false);
+    ctx.out.checkpoints_committed += acct.commits;
+    ctx.out.checkpoint_overhead += acct.overhead;
+    ctx.jobs[j].remaining = (r0 - acct.work).max(0.0);
     debug_assert!(ctx.jobs[j].remaining <= 1e-6);
     ctx.jobs[j].phase = JobPhase::Done;
     ctx.out.per_job_makespans[j] = now;
@@ -366,13 +417,11 @@ pub(crate) fn on_domain_outage(ctx: &mut SimCtx, pol: &mut PolicySet) {
         }
     }
     for &j in &interrupted {
+        let r0 = ctx.jobs[j].remaining;
         let burst = pol.failure.interrupt(ctx, j, now);
         ctx.burst_sum += burst;
         ctx.burst_count += 1;
-        let done = ctx.p.job_len - ctx.jobs[j].remaining;
-        let lost = pol.checkpoint.work_lost(done);
-        ctx.jobs[j].remaining += lost;
-        ctx.out.work_lost += lost;
+        account_interrupted_burst(ctx, pol, j, r0, burst);
         ctx.jobs[j].gen.bump(); // invalidate JobComplete
         ctx.jobs[j].domain_down_since = Some(now);
     }
@@ -451,6 +500,11 @@ pub(crate) fn on_domain_outage(ctx: &mut SimCtx, pol: &mut PolicySet) {
             JobPhase::Recovering | JobPhase::Selecting
                 if ctx.jobs[j].allotted() < ctx.p.job_size as usize =>
             {
+                if ctx.jobs[j].phase == JobPhase::Recovering {
+                    // The restore is cut short: only the elapsed recovery
+                    // time stays charged (the retry pays its own cost).
+                    interrupt_recovery(ctx, j);
+                }
                 ctx.jobs[j].gen.bump();
                 ctx.jobs[j].domain_down_since.get_or_insert(now);
                 ctx.out.domain_job_interruptions += 1;
@@ -482,4 +536,62 @@ pub(crate) fn on_bad_regen(ctx: &mut SimCtx, pol: &mut PolicySet) {
         }
     }
     ctx.engine.schedule_in(ctx.p.bad_regen_interval, Ev::BadRegen);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Params;
+    use crate::sim::rng::Rng;
+
+    /// Satellite bugfix regression: `begin_recovery` charges the full
+    /// restart cost up front; a recovery cut short mid-flight must keep
+    /// only the elapsed time charged, and the retry charges its own full
+    /// cost — the pre-fix code kept both full costs, over-counting
+    /// recovery time the job never spent.
+    #[test]
+    fn interrupted_recovery_accrues_only_elapsed_time() {
+        let p = Params::small_test(); // recovery_time = 20
+        let mut ctx = SimCtx::new(&p, Rng::new(1));
+        let mut pol = PolicySet::defaults(&p);
+
+        // A 20-minute recovery starts at t = 0.
+        begin_recovery(&mut ctx, &mut pol, 0);
+        assert_eq!(ctx.jobs[0].phase, JobPhase::Recovering);
+        assert_eq!(ctx.out.recovery_total, 20.0, "charged up front");
+        assert_eq!(ctx.jobs[0].recovery_end, 20.0);
+
+        // The clock advances to t = 5 (mid-recovery)...
+        ctx.engine.schedule_at(5.0, Ev::BadRegen);
+        let _ = ctx.engine.pop();
+        assert_eq!(ctx.now(), 5.0);
+
+        // ...and a domain outage cuts the recovery short: only the 5
+        // elapsed minutes stay charged.
+        interrupt_recovery(&mut ctx, 0);
+        assert_eq!(
+            ctx.out.recovery_total, 5.0,
+            "an interrupted recovery accrues only elapsed time (pre-fix: 20)"
+        );
+
+        // The retry charges its own full cost; the total is 5 + 20, not
+        // the pre-fix 20 + 20.
+        ctx.jobs[0].gen.bump();
+        begin_recovery(&mut ctx, &mut pol, 0);
+        assert_eq!(ctx.out.recovery_total, 25.0);
+    }
+
+    /// A recovery that runs to completion stays charged exactly once —
+    /// the refund path must not touch the normal flow.
+    #[test]
+    fn completed_recovery_accounting_is_unchanged() {
+        let p = Params::small_test();
+        let mut ctx = SimCtx::new(&p, Rng::new(2));
+        let mut pol = PolicySet::defaults(&p);
+        begin_recovery(&mut ctx, &mut pol, 0);
+        // Pop the RecoveryDone event: the full cost elapsed.
+        let (at, _) = ctx.engine.pop().expect("RecoveryDone scheduled");
+        assert_eq!(at, 20.0);
+        assert_eq!(ctx.out.recovery_total, 20.0);
+    }
 }

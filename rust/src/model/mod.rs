@@ -9,8 +9,9 @@
 //! | 4. Repairs      | [`repair`] (auto→manual, capacity) | [`repair`] — queue discipline (`fifo`, `lifo`, `job_first`) |
 //! | 5. Pool         | [`pool`] (working/spare pools) | — |
 //!
-//! plus [`checkpoint`] (work-loss/restart policies: `continuous`,
-//! `periodic`), [`job`] (progress semantics), [`diagnosis`] (inputs
+//! plus [`checkpoint`] (commit-cost/work-loss/restart policies:
+//! `continuous`, `periodic`, `young_daly`, `adaptive`, `tiered`),
+//! [`job`] (progress semantics), [`diagnosis`] (inputs
 //! 12–13), [`retirement`] (failure-score retirement, §II-B), [`regen`]
 //! (bad-server regeneration), [`topology`] (failure-domain hierarchy:
 //! feeds the `correlated` failure model and the `anti_affinity`/domain

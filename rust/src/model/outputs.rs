@@ -56,6 +56,14 @@ pub struct RunOutputs {
     /// Useful work lost to checkpoint granularity (minutes; 0 under the
     /// paper's continuous asynchronous checkpointing).
     pub work_lost: Time,
+    /// Checkpoints committed across all jobs (and, for `tiered`, tiers).
+    pub checkpoints_committed: u64,
+    /// Wall-clock spent writing checkpoints (gangs stalled mid-run;
+    /// minutes; 0 when `checkpoint_cost` is 0).
+    pub checkpoint_overhead: Time,
+    /// Useful work completed and retained across all jobs at end of run
+    /// (minutes; `num_jobs * job_len` when every job finished).
+    pub work_done: Time,
 
     // ---- correlated domain outages (topology subsystem; all zero when
     // no `topology:` is configured) ----

@@ -17,7 +17,9 @@
 //! model.
 
 use crate::config::{DistKind, Params};
-use crate::model::checkpoint::{CheckpointPolicy, Continuous, Periodic};
+use crate::model::checkpoint::{
+    Adaptive, CheckpointPolicy, Continuous, Periodic, Tiered, YoungDaly,
+};
 use crate::model::failure::{
     CorrelatedFailures, FailureModel, GangExponential, PerServerClocks,
 };
@@ -69,7 +71,8 @@ pub const SELECTION_NAMES: &[&str] =
 /// Valid repair-policy names.
 pub const REPAIR_NAMES: &[&str] = &["fifo", "lifo", "job_first"];
 /// Valid checkpoint-policy names.
-pub const CHECKPOINT_NAMES: &[&str] = &["auto", "continuous", "periodic"];
+pub const CHECKPOINT_NAMES: &[&str] =
+    &["auto", "continuous", "periodic", "young_daly", "adaptive", "tiered"];
 /// Valid failure-model names.
 pub const FAILURE_NAMES: &[&str] = &["auto", "gang", "per_server", "correlated"];
 
@@ -126,18 +129,85 @@ impl PolicySpec {
             "job_first" => Box::new(JobFirst),
             other => return Err(format!("unknown repair policy `{other}`")),
         };
+        // The self-optimizing interval √(2·C·MTBF) is degenerate at C = 0
+        // (a zero commit cost makes an infinitesimal interval optimal —
+        // the exact degeneracy the cost knob exists to remove).
+        let needs_cost = |name: &str| -> Result<(), String> {
+            if p.checkpoint_cost <= 0.0 {
+                return Err(format!(
+                    "checkpoint policy `{name}` requires `checkpoint_cost` > 0 \
+                     (its interval √(2·C·MTBF) is degenerate at C = 0; with free \
+                     commits use `continuous` or `periodic`)"
+                ));
+            }
+            Ok(())
+        };
         let checkpoint: Box<dyn CheckpointPolicy> = match self.checkpoint.as_str() {
             "continuous" => Box::new(Continuous { recovery_time: p.recovery_time }),
-            "periodic" => Box::new(Periodic {
-                interval: p.checkpoint_interval,
-                recovery_time: p.recovery_time,
-            }),
+            "periodic" => {
+                // An explicit `periodic` with a zero interval used to
+                // silently degenerate to `continuous`; name the knob
+                // instead (the quiet fallback stays available as `auto`).
+                if p.checkpoint_interval <= 0.0 {
+                    return Err(
+                        "checkpoint policy `periodic` requires `checkpoint_interval` > 0 \
+                         (interval 0 is continuous checkpointing; say `continuous`, or \
+                         `auto` to pick by interval)"
+                            .into(),
+                    );
+                }
+                Box::new(Periodic {
+                    interval: p.checkpoint_interval,
+                    cost: p.checkpoint_cost,
+                    recovery_time: p.recovery_time,
+                })
+            }
+            "young_daly" => {
+                needs_cost("young_daly")?;
+                Box::new(YoungDaly::new(n_jobs, p))
+            }
+            "adaptive" => {
+                needs_cost("adaptive")?;
+                Box::new(Adaptive::new(n_jobs, p))
+            }
+            "tiered" => {
+                if p.checkpoint_interval <= 0.0 || p.checkpoint_tier2_interval <= 0.0 {
+                    return Err(
+                        "checkpoint policy `tiered` requires `checkpoint_interval` > 0 \
+                         (cheap tier) and `checkpoint_tier2_interval` > 0 (expensive \
+                         tier)"
+                            .into(),
+                    );
+                }
+                if p.checkpoint_tier2_interval < p.checkpoint_interval {
+                    return Err(format!(
+                        "checkpoint policy `tiered`: `checkpoint_tier2_interval` \
+                         ({}) must be >= `checkpoint_interval` ({}) — the expensive \
+                         tier is the rare one",
+                        p.checkpoint_tier2_interval, p.checkpoint_interval
+                    ));
+                }
+                // Tiered accounting walks one step per commit milestone;
+                // an interval microscopically small relative to the job
+                // would turn every burst into a near-endless walk (the
+                // single-tier policies are closed-form and unaffected).
+                if p.job_len / p.checkpoint_interval > 1e6 {
+                    return Err(format!(
+                        "checkpoint policy `tiered`: `checkpoint_interval` ({}) is \
+                         pathologically small for `job_len` ({}) — over 1e6 commit \
+                         milestones per job",
+                        p.checkpoint_interval, p.job_len
+                    ));
+                }
+                Box::new(Tiered::new(n_jobs, p))
+            }
             // The pre-refactor behavior: periodic loss when an interval is
             // configured, lossless continuous checkpointing otherwise.
             "auto" => {
                 if p.checkpoint_interval > 0.0 {
                     Box::new(Periodic {
                         interval: p.checkpoint_interval,
+                        cost: p.checkpoint_cost,
                         recovery_time: p.recovery_time,
                     })
                 } else {
@@ -256,9 +326,16 @@ mod tests {
     }
 
     /// Params with a minimal one-level topology at the given per-domain
-    /// outage rate.
+    /// outage rate, plus checkpoint knobs every checkpoint policy can
+    /// build against (interval + cost for `periodic`/`young_daly`/
+    /// `adaptive`, a second tier for `tiered`).
     fn topo_params(outage_rate: f64) -> Params {
         let mut p = Params::small_test();
+        p.checkpoint_interval = 60.0;
+        p.checkpoint_cost = 5.0;
+        p.checkpoint_tier2_interval = 240.0;
+        p.checkpoint_tier2_cost = 20.0;
+        p.checkpoint_tier2_restore = 60.0;
         p.topology = Some(crate::config::TopologySpec {
             levels: vec![crate::config::TopologyLevelSpec {
                 name: "rack".into(),
@@ -289,6 +366,65 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Satellite bugfix: an explicit `checkpoint: periodic` with a zero
+    /// interval used to silently degenerate to `continuous`; it is now a
+    /// build error naming the knob. `auto` keeps the quiet legacy
+    /// resolution.
+    #[test]
+    fn explicit_periodic_with_zero_interval_is_rejected() {
+        let p = Params::small_test(); // checkpoint_interval = 0
+        let mut spec = PolicySpec::default();
+        spec.set("checkpoint", "periodic").unwrap();
+        let err = spec.build(&p).unwrap_err();
+        assert!(err.contains("checkpoint_interval"), "{err}");
+        assert!(err.contains("periodic"), "{err}");
+        // `auto` still degrades quietly (the documented legacy behavior).
+        let set = PolicySpec::default().build(&p).unwrap();
+        assert_eq!(set.checkpoint.name(), "continuous");
+    }
+
+    #[test]
+    fn self_optimizing_policies_require_a_commit_cost() {
+        // young_daly / adaptive are degenerate with free commits.
+        let mut p = Params::small_test();
+        p.checkpoint_interval = 60.0; // cost stays 0
+        for name in ["young_daly", "adaptive"] {
+            let mut spec = PolicySpec::default();
+            spec.set("checkpoint", name).unwrap();
+            let err = spec.build(&p).unwrap_err();
+            assert!(err.contains("checkpoint_cost"), "{name}: {err}");
+        }
+        p.checkpoint_cost = 10.0;
+        for name in ["young_daly", "adaptive"] {
+            let mut spec = PolicySpec::default();
+            spec.set("checkpoint", name).unwrap();
+            assert_eq!(spec.build(&p).unwrap().checkpoint.name(), name);
+        }
+    }
+
+    #[test]
+    fn tiered_requires_ordered_intervals() {
+        let mut p = Params::small_test();
+        let mut spec = PolicySpec::default();
+        spec.set("checkpoint", "tiered").unwrap();
+        // No intervals at all.
+        let err = spec.build(&p).unwrap_err();
+        assert!(err.contains("checkpoint_tier2_interval"), "{err}");
+        // Expensive tier more frequent than the cheap one.
+        p.checkpoint_interval = 120.0;
+        p.checkpoint_tier2_interval = 60.0;
+        let err = spec.build(&p).unwrap_err();
+        assert!(err.contains(">="), "{err}");
+        // Properly ordered tiers build.
+        p.checkpoint_tier2_interval = 480.0;
+        assert_eq!(spec.build(&p).unwrap().checkpoint.name(), "tiered");
+        // A cheap interval microscopically small for the job is rejected
+        // (its milestone walk would effectively hang every burst).
+        p.checkpoint_interval = p.job_len / 2e6;
+        let err = spec.build(&p).unwrap_err();
+        assert!(err.contains("pathologically small"), "{err}");
     }
 
     #[test]

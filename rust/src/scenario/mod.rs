@@ -10,6 +10,7 @@
 //! title: recovery-time sensitivity
 //! seed: 42
 //! replications: 30
+//! crn: true                  # sweeps only: common random numbers
 //! params:
 //!   job_size: 64
 //!   working_pool: 72
@@ -120,9 +121,6 @@ impl Scenario {
     pub fn from_doc(doc: &yaml::Value) -> Result<Scenario, String> {
         let params = validate::params_from_config(doc).map_err(|e| e.to_string())?;
         let policies = policies_from_doc(doc)?;
-        // The policy spec must build against these params (e.g. `gang`
-        // needs exponential clocks) — fail at parse time, not mid-run.
-        policies.build(&params)?;
         let seed = doc.get("seed").and_then(|v| v.as_f64()).map(|v| v as u64).unwrap_or(42);
         let reps = doc
             .get("replications")
@@ -187,6 +185,17 @@ impl Scenario {
                 ))
             }
         };
+
+        // Non-sweep kinds run exactly these policies against exactly
+        // these params: an incompatible combo (e.g. `gang` with Weibull
+        // clocks) fails at parse time, not mid-run. Sweeps defer to
+        // `Sweep::validate`, which checks every point *with its
+        // overrides applied* — a point may supply the very knob a policy
+        // needs (e.g. sweeping `checkpoint_interval` under
+        // `checkpoint: periodic`).
+        if !matches!(kind, ScenarioKind::Sweep(_)) {
+            policies.build(&params)?;
+        }
 
         let title = doc
             .get("title")

@@ -159,6 +159,35 @@ pub const REGISTRY: &[Metric] = &[
         extract: |_, o| o.work_lost,
     },
     Metric {
+        name: "checkpoints_committed",
+        unit: "count",
+        doc: "checkpoints committed across all jobs (and tiers)",
+        extract: |_, o| o.checkpoints_committed as f64,
+    },
+    Metric {
+        name: "checkpoint_overhead",
+        unit: "min",
+        doc: "wall-clock spent writing checkpoints (gangs stalled)",
+        extract: |_, o| o.checkpoint_overhead,
+    },
+    Metric {
+        name: "goodput_fraction",
+        unit: "ratio",
+        doc: "useful work retained / wall-clock elapsed, summed over jobs",
+        extract: |p, o| {
+            let elapsed: f64 = o
+                .per_job_makespans
+                .iter()
+                .map(|&m| if m > 0.0 { m } else { p.max_sim_time })
+                .sum();
+            if elapsed > 0.0 {
+                o.work_done / elapsed
+            } else {
+                0.0
+            }
+        },
+    },
+    Metric {
         name: "domain_failures",
         unit: "count",
         doc: "correlated domain outages delivered (topology levels)",

@@ -253,7 +253,10 @@ pub fn policies_from_doc(doc: &crate::config::yaml::Value) -> Result<PolicySpec,
 
 /// Build a sweep from a parsed config document's `sweep:` section
 /// (§III-D's experiment files). Axes are numeric parameters or
-/// `policies.<axis>` names:
+/// `policies.<axis>` names; `crn: true` (top-level, or inside the
+/// `sweep:` section) runs every point on common random numbers (the
+/// variance-reduction mode policy shoot-outs want — "the same master
+/// streams"):
 ///
 /// ```yaml
 /// sweep:
@@ -262,6 +265,7 @@ pub fn policies_from_doc(doc: &crate::config::yaml::Value) -> Result<PolicySpec,
 ///   y: { name: working_pool, values: [4112, 4128, 4160, 4192] }
 /// replications: 30
 /// seed: 42
+/// crn: true                  # optional: common random numbers
 /// ```
 pub fn sweep_from_doc(
     doc: &crate::config::yaml::Value,
@@ -320,25 +324,41 @@ pub fn sweep_from_doc(
     // here — policy resolution (doc section + CLI overrides + build
     // validation) has one owner per entry point, which then calls
     // [`Sweep::with_policies`]. See `policies_from_doc`.
+    // Strict boolean: a misspelled `crn:` must not silently run the
+    // comparison on independent streams. Accepted at the document top
+    // level or inside the `sweep:` section — both placements are
+    // natural, and the unused one being silently ignored would be the
+    // exact failure mode the strict parse exists to prevent.
+    let crn = match doc.get("crn").or_else(|| sweep.get("crn")) {
+        None => false,
+        Some(v) => {
+            let s = v.as_str().unwrap_or("");
+            match s.to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" | "on" => true,
+                "false" | "0" | "no" | "off" => false,
+                other => {
+                    return Err(format!(
+                        "bad `crn:` value `{other}` (expected true or false)"
+                    ))
+                }
+            }
+        }
+    };
     let kind = sweep.get("kind").and_then(|v| v.as_str()).unwrap_or("one_way");
-    match kind {
+    let built = match kind {
         "one_way" => {
             let (name, values) = axis("x")?;
             let title = name.clone();
-            Ok(Sweep::from_axes(&title, &[(name, values)], reps, seed))
+            Sweep::from_axes(&title, &[(name, values)], reps, seed)
         }
         "two_way" => {
             let (xn, xv) = axis("x")?;
             let (yn, yv) = axis("y")?;
-            Ok(Sweep::from_axes(
-                &format!("{xn} x {yn}"),
-                &[(xn, xv), (yn, yv)],
-                reps,
-                seed,
-            ))
+            Sweep::from_axes(&format!("{xn} x {yn}"), &[(xn, xv), (yn, yv)], reps, seed)
         }
-        other => Err(format!("unknown sweep kind `{other}`")),
-    }
+        other => return Err(format!("unknown sweep kind `{other}`")),
+    };
+    Ok(if crn { built.with_crn() } else { built })
 }
 
 /// Results of one sweep point across replications.
@@ -581,6 +601,31 @@ mod tests {
             assert_eq!(sa.mean, sb.mean, "determinism across thread counts");
             assert_eq!(sa.std, sb.std);
         }
+    }
+
+    #[test]
+    fn crn_key_enables_common_random_numbers() {
+        let parse = |head: &str| {
+            crate::config::yaml::parse(&format!(
+                "{head}sweep:\n  kind: one_way\n  x: {{ name: recovery_time, values: [10, 30] }}\n"
+            ))
+            .unwrap()
+        };
+        for head in ["crn: true\n", "crn: True\n", "crn: yes\n", "crn: 1\n"] {
+            assert!(sweep_from_doc(&parse(head), 2, 1).unwrap().crn, "{head}");
+        }
+        for head in ["", "crn: false\n", "crn: off\n"] {
+            assert!(!sweep_from_doc(&parse(head), 2, 1).unwrap().crn, "{head:?}");
+        }
+        // A misspelling is an error, not a silent independent-streams run.
+        let err = sweep_from_doc(&parse("crn: ture\n"), 2, 1).unwrap_err();
+        assert!(err.contains("crn"), "{err}");
+        // The key is also honored inside the sweep: section itself.
+        let doc = crate::config::yaml::parse(
+            "sweep:\n  kind: one_way\n  crn: true\n  x: { name: recovery_time, values: [10] }\n",
+        )
+        .unwrap();
+        assert!(sweep_from_doc(&doc, 2, 1).unwrap().crn, "crn nested under sweep:");
     }
 
     #[test]

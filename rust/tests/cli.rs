@@ -141,9 +141,50 @@ fn list_policies_covers_every_axis() {
         "anti_affinity",
         "power_of_two_choices",
         "correlated",
+        "young_daly",
+        "adaptive",
+        "tiered",
     ] {
         assert!(out.contains(name), "list-policies missing {name}");
     }
+}
+
+#[test]
+fn run_accepts_checkpoint_policy_overrides() {
+    // young_daly needs a commit cost; the CLI surfaces the build error.
+    let (_, err, ok) =
+        airesim(&["run", "--set", SMALL, "--policy", "checkpoint=young_daly"]);
+    assert!(!ok);
+    assert!(err.contains("checkpoint_cost"), "stderr: {err}");
+
+    // With the cost knob set it runs end to end.
+    let (out, err, ok) = airesim(&[
+        "run",
+        "--seed",
+        "7",
+        "--set",
+        &format!("{SMALL},checkpoint_cost=10"),
+        "--policy",
+        "checkpoint=young_daly",
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("makespan"));
+}
+
+#[test]
+fn checkpoint_scenario_runs_and_labels_policies() {
+    // Scale the shipped config down (fewer reps) via a temp copy —
+    // `replications:` is scenario metadata, not a `--set` param.
+    let cfg = std::env::temp_dir().join("airesim_checkpoint_scenario.yaml");
+    let text = std::fs::read_to_string("configs/scenario_checkpoint.yaml")
+        .unwrap()
+        .replace("replications: 8", "replications: 2");
+    std::fs::write(&cfg, text).unwrap();
+    let (out, err, ok) = airesim(&["scenario", "--config", cfg.to_str().unwrap()]);
+    let _ = std::fs::remove_file(&cfg);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("policies.checkpoint=periodic"), "{out}");
+    assert!(out.contains("policies.checkpoint=young_daly"), "{out}");
 }
 
 #[test]
@@ -196,6 +237,9 @@ fn list_metrics_covers_the_registry() {
         "domain_max_blast",
         "domain_job_interruptions",
         "domain_downtime",
+        "checkpoints_committed",
+        "checkpoint_overhead",
+        "goodput_fraction",
     ] {
         assert!(out.contains(m), "list-metrics missing {m}");
     }
