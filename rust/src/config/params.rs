@@ -145,6 +145,10 @@ pub struct Params {
     pub auto_repair_capacity: u32,
     /// Concurrent manual-repair (technician) capacity; 0 = unlimited.
     pub manual_repair_capacity: u32,
+    /// `repair: sla_aged` only — a queued server escalates to the head
+    /// of service once it has waited this many minutes (0 = every queued
+    /// server is instantly "aged": pure FIFO).
+    pub repair_sla_minutes: f64,
 
     // ---- diagnosis (inputs 12–13) ----
     /// P(the failure is diagnosed and *some* server is identified).
@@ -227,6 +231,7 @@ impl Params {
             manual_repair_time: 2.0 * MIN_PER_DAY,
             auto_repair_capacity: 0,
             manual_repair_capacity: 0,
+            repair_sla_minutes: MIN_PER_DAY,
             diagnosis_prob: 0.8,
             diagnosis_uncertainty: 0.0,
             retirement_threshold: 0,
@@ -268,6 +273,7 @@ impl Params {
             manual_repair_time: 2.0 * MIN_PER_DAY,
             auto_repair_capacity: 0,
             manual_repair_capacity: 0,
+            repair_sla_minutes: MIN_PER_DAY,
             diagnosis_prob: 0.8,
             diagnosis_uncertainty: 0.0,
             retirement_threshold: 0,
@@ -319,6 +325,7 @@ impl Params {
             "manual_repair_time" => self.manual_repair_time = value,
             "auto_repair_capacity" => self.auto_repair_capacity = value as u32,
             "manual_repair_capacity" => self.manual_repair_capacity = value as u32,
+            "repair_sla_minutes" => self.repair_sla_minutes = value,
             "diagnosis_prob" => self.diagnosis_prob = value,
             "diagnosis_uncertainty" => self.diagnosis_uncertainty = value,
             "retirement_threshold" => self.retirement_threshold = value as u32,
@@ -362,6 +369,7 @@ impl Params {
             "manual_repair_time" => self.manual_repair_time,
             "auto_repair_capacity" => self.auto_repair_capacity as f64,
             "manual_repair_capacity" => self.manual_repair_capacity as f64,
+            "repair_sla_minutes" => self.repair_sla_minutes,
             "diagnosis_prob" => self.diagnosis_prob,
             "diagnosis_uncertainty" => self.diagnosis_uncertainty,
             "retirement_threshold" => self.retirement_threshold as f64,
@@ -402,6 +410,7 @@ impl Params {
             "manual_repair_time",
             "auto_repair_capacity",
             "manual_repair_capacity",
+            "repair_sla_minutes",
             "diagnosis_prob",
             "diagnosis_uncertainty",
             "retirement_threshold",

@@ -81,6 +81,7 @@ pub fn validate(p: &Params) -> Result<(), ConfigError> {
     prob("manual_repair_fail_prob", p.manual_repair_fail_prob)?;
     pos("auto_repair_time", p.auto_repair_time)?;
     pos("manual_repair_time", p.manual_repair_time)?;
+    non_neg("repair_sla_minutes", p.repair_sla_minutes)?;
     prob("diagnosis_prob", p.diagnosis_prob)?;
     prob("diagnosis_uncertainty", p.diagnosis_uncertainty)?;
     non_neg("retirement_window", p.retirement_window)?;

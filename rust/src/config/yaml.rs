@@ -14,9 +14,18 @@
 //! seed: 42
 //! ```
 //!
-//! Two-level nesting, scalars, inline lists `[a, b, c]`, inline maps
-//! `{ k: v, ... }`, comments, and arithmetic value expressions — the same
-//! surface the paper's `Params`/`config.yaml` user files use (§III-D).
+//! Nested maps, scalars, inline lists `[a, b, c]`, inline maps
+//! `{ k: v, ... }`, block sequences of maps (the `children:` form below,
+//! which `multi:` study files use), comments, and arithmetic value
+//! expressions — the same surface the paper's `Params`/`config.yaml`
+//! user files use (§III-D):
+//!
+//! ```yaml
+//! children:
+//!   - label: tuned               # block-sequence item: a map whose
+//!     params: { recovery_time: 10 }  # entries continue on the lines
+//!   - label: baseline            # indented past the dash
+//! ```
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -142,27 +151,38 @@ fn parse_block(
         if ind > indent {
             return Err(YamlError::Indent(lineno));
         }
+        if is_seq_item(content) {
+            // A sequence item where a map entry belongs (sequences only
+            // start as the nested block of a `key:` line).
+            return Err(YamlError::KeyValue(lineno));
+        }
         let (key, rest) = content
             .split_once(':')
             .ok_or(YamlError::KeyValue(lineno))?;
         let key = key.trim().to_string();
         let rest = rest.trim();
         if rest.is_empty() {
-            // Nested block.
-            let child_indent = lines
-                .get(i + 1)
-                .map(|&(_, ci, _)| ci)
-                .filter(|&ci| ci > indent);
-            match child_indent {
-                Some(ci) => {
-                    let (child, consumed) = parse_block(lines, i + 1, ci)?;
-                    map.insert(key, child);
-                    i = consumed;
-                }
-                None => {
-                    map.insert(key, Value::Scalar(String::new()));
-                    i += 1;
-                }
+            // Nested block: a map, or a block sequence when the first
+            // child line leads with a dash. Sequence items may sit
+            // deeper than the key (the usual form) or at the key's own
+            // indent (YAML's zero-indent sequence form).
+            let next = lines.get(i + 1);
+            let seq_indent = next
+                .filter(|(_, ci, content)| *ci >= indent && is_seq_item(content))
+                .map(|&(_, ci, _)| ci);
+            let map_indent =
+                next.map(|&(_, ci, _)| ci).filter(|&ci| ci > indent);
+            if let Some(ci) = seq_indent {
+                let (child, consumed) = parse_list_block(lines, i + 1, ci)?;
+                map.insert(key, child);
+                i = consumed;
+            } else if let Some(ci) = map_indent {
+                let (child, consumed) = parse_block(lines, i + 1, ci)?;
+                map.insert(key, child);
+                i = consumed;
+            } else {
+                map.insert(key, Value::Scalar(String::new()));
+                i += 1;
             }
         } else {
             map.insert(key, parse_inline(rest, lineno)?);
@@ -170,6 +190,89 @@ fn parse_block(
         }
     }
     Ok((Value::Map(map), i))
+}
+
+/// Does this (trimmed) line open a block-sequence item? (`- x`, or a
+/// bare `-` is rejected later — a scalar `-5` is still an item.)
+fn is_seq_item(content: &str) -> bool {
+    content == "-" || content.starts_with("- ")
+}
+
+/// Is `s` a `key: value` map entry rather than an inline scalar or
+/// collection? (A top-level colon outside brackets, not an inline form.)
+fn looks_like_map_entry(s: &str) -> bool {
+    if s.starts_with('[') || s.starts_with('{') {
+        return false;
+    }
+    let mut depth = 0i32;
+    for c in s.chars() {
+        match c {
+            '[' | '{' => depth += 1,
+            ']' | '}' => depth -= 1,
+            ':' if depth == 0 => return true,
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Parse a block sequence (`- item` lines at one indent level). An item
+/// whose dash is followed by a `key: value` entry is a map; its further
+/// entries continue on subsequent lines indented past the dash:
+///
+/// ```yaml
+/// - label: a
+///   params: { recovery_time: 10 }
+/// - label: b
+/// ```
+fn parse_list_block(
+    lines: &[(usize, usize, String)],
+    start: usize,
+    indent: usize,
+) -> Result<(Value, usize), YamlError> {
+    let mut items = Vec::new();
+    let mut i = start;
+    while i < lines.len() {
+        let (lineno, ind, ref content) = lines[i];
+        if ind < indent {
+            break;
+        }
+        if ind == indent && !is_seq_item(content) {
+            // A `key: value` line at the list's own indent ends the
+            // sequence (the zero-indent form shares the parent's level).
+            break;
+        }
+        if ind > indent {
+            return Err(YamlError::Indent(lineno));
+        }
+        let rest = content[1..].trim_start();
+        if rest.is_empty() {
+            return Err(YamlError::KeyValue(lineno));
+        }
+        if looks_like_map_entry(rest) {
+            // The item is a map: its first entry shares the dash's line,
+            // the rest follow at the entry's own indent.
+            let rest_indent = ind + (content.len() - rest.len());
+            let mut item_lines = vec![(lineno, rest_indent, rest.to_string())];
+            let mut j = i + 1;
+            while j < lines.len() && lines[j].1 > ind {
+                item_lines.push(lines[j].clone());
+                j += 1;
+            }
+            let (item, consumed) = parse_block(&item_lines, 0, rest_indent)?;
+            if consumed != item_lines.len() {
+                // A continuation line indented between the dash and the
+                // first entry — parse_block stopped early on it.
+                return Err(YamlError::Indent(item_lines[consumed].0));
+            }
+            items.push(item);
+            i = j;
+        } else {
+            items.push(parse_inline(rest, lineno)?);
+            i += 1;
+        }
+    }
+    Ok((Value::List(items), i))
 }
 
 fn parse_inline(s: &str, lineno: usize) -> Result<Value, YamlError> {
@@ -416,5 +519,62 @@ seed: 42
     fn quoted_strings() {
         let v = parse("name: \"hello world\"\n").unwrap();
         assert_eq!(v.get("name").unwrap().as_str(), Some("hello world"));
+    }
+
+    #[test]
+    fn block_sequence_of_maps() {
+        let v = parse(
+            "children:\n\
+             \x20 - label: a\n\
+             \x20   params: { recovery_time: 10 }\n\
+             \x20 - label: b\n\
+             seed: 7\n",
+        )
+        .unwrap();
+        let list = v.get("children").unwrap().as_list().unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].get("label").unwrap().as_str(), Some("a"));
+        assert_eq!(
+            list[0].get("params").unwrap().get("recovery_time").unwrap().as_f64(),
+            Some(10.0)
+        );
+        assert_eq!(list[1].get("label").unwrap().as_str(), Some("b"));
+        assert_eq!(v.get("seed").unwrap().as_f64(), Some(7.0), "block after list parses");
+    }
+
+    #[test]
+    fn zero_indent_block_sequence() {
+        // YAML's common zero-indent form: items at the key's own level.
+        let v = parse(
+            "children:\n- label: a\n  params: { recovery_time: 10 }\n- label: b\nseed: 7\n",
+        )
+        .unwrap();
+        let list = v.get("children").unwrap().as_list().unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(
+            list[0].get("params").unwrap().get("recovery_time").unwrap().as_f64(),
+            Some(10.0)
+        );
+        assert_eq!(list[1].get("label").unwrap().as_str(), Some("b"));
+        assert_eq!(v.get("seed").unwrap().as_f64(), Some(7.0), "key after the list parses");
+    }
+
+    #[test]
+    fn block_sequence_of_scalars_and_inline_maps() {
+        let v = parse("xs:\n  - 1\n  - 2*3\n  - { k: 4 }\n").unwrap();
+        let list = v.get("xs").unwrap().as_list().unwrap();
+        assert_eq!(list[0].as_f64(), Some(1.0));
+        assert_eq!(list[1].as_f64(), Some(6.0));
+        assert_eq!(list[2].get("k").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn bad_block_sequences_rejected() {
+        // Bare dash with nothing after it.
+        assert!(parse("xs:\n  - a: 1\n  -\n").is_err());
+        // Item lines at inconsistent indent.
+        assert!(parse("xs:\n  - a: 1\n    - b: 2\n").is_err());
+        // Continuation indented between the dash and the first entry.
+        assert!(parse("xs:\n  - label: a\n   params: { x: 1 }\n").is_err());
     }
 }

@@ -69,7 +69,9 @@ fn print_usage() {
          \x20 run            run one simulation and print its outputs\n\
          \x20 sweep          one- or two-way parameter sweep with replications\n\
          \x20 scenario       run a declarative scenario file (single/sweep/\n\
-         \x20                whatif/inject/compare, policies by name)\n\
+         \x20                whatif/inject/compare/multi, policies by name;\n\
+         \x20                `multi:` runs a labeled study with a combined\n\
+         \x20                comparison report)\n\
          \x20 analytic       run the AOT analytical baseline (PJRT artifact)\n\
          \x20 prescreen      analytically rank a sweep grid, DES the top-k\n\
          \x20 whatif         scale one parameter by a factor, compare outputs\n\
@@ -399,10 +401,11 @@ fn cmd_scenario(argv: &[String]) -> Result<()> {
     }
     if let Some(clauses) = args.get("policy") {
         apply_policy_clauses(&mut scenario.policies, clauses)?;
-        // Sweep scenarios validate per point (`Sweep::validate`, with
-        // overrides applied); everything else runs the base params
-        // verbatim and must build against them now.
-        if !matches!(scenario.kind, ScenarioKind::Sweep(_)) {
+        // Sweep scenarios validate per point (`Sweep::validate`) and
+        // studies per child (`Study::resolve_all` inside `run_study`),
+        // both with overrides applied; everything else runs the base
+        // params verbatim and must build against them now.
+        if !matches!(scenario.kind, ScenarioKind::Sweep(_) | ScenarioKind::Multi(_)) {
             scenario.policies.build(&scenario.params).map_err(|e| anyhow!("{e}"))?;
         }
     }
@@ -430,23 +433,64 @@ fn cmd_scenario(argv: &[String]) -> Result<()> {
                 forced_trace = !*trace;
                 *trace = true;
             }
-            _ => bail!("--trace-out applies to single/inject scenarios (event timelines)"),
+            // A study of single-style children (one replication each)
+            // can dump one timeline per child; with replications > 1 a
+            // single file would be a misleading sample.
+            ScenarioKind::Multi(study) => {
+                if study.replications != 1 {
+                    bail!(
+                        "--trace-out on a multi study needs `replications: 1` \
+                         (single-style children; this study runs {})",
+                        study.replications
+                    );
+                }
+            }
+            _ => bail!(
+                "--trace-out applies to single/inject scenarios and \
+                 replications-1 multi studies (event timelines)"
+            ),
         }
     }
 
     let mut outcome = scenario.run().map_err(|e| anyhow!("{e}"))?;
     if let Some(out_path) = args.get("trace-out") {
-        let (ScenarioOutcome::Single { trace, .. } | ScenarioOutcome::Inject { trace, .. }) =
-            &mut outcome
-        else {
-            unreachable!("guarded above");
-        };
-        write_trace_out(out_path, &trace.to_ndjson())?;
-        if forced_trace || (out_path == "-" && format == Format::Ndjson) {
-            // Either the trace existed only to feed the timeline file,
-            // or the timeline is already on stdout in the same schema —
-            // keep the report single-copy.
-            *trace = Trace::default();
+        match &mut outcome {
+            ScenarioOutcome::Single { trace, .. } | ScenarioOutcome::Inject { trace, .. } => {
+                write_trace_out(out_path, &trace.to_ndjson())?;
+                if forced_trace || (out_path == "-" && format == Format::Ndjson) {
+                    // Either the trace existed only to feed the timeline
+                    // file, or the timeline is already on stdout in the
+                    // same schema — keep the report single-copy.
+                    *trace = Trace::default();
+                }
+            }
+            ScenarioOutcome::Study(_) => {
+                // Replication 0 of every child, re-run traced (traces
+                // never perturb draws — the report above is untouched).
+                let ScenarioKind::Multi(study) = &scenario.kind else {
+                    unreachable!("outcome kind matches scenario kind");
+                };
+                let timelines = airesim::scenario::study::child_timelines(
+                    &scenario.params,
+                    &scenario.policies,
+                    study,
+                    scenario.seed,
+                )
+                .map_err(|e| anyhow!("{e}"))?;
+                let mut ndjson = String::new();
+                for (label, trace) in &timelines {
+                    // A separator line names the child; the event lines
+                    // that follow use the standard timeline schema.
+                    let sep = airesim::report::json::Json::obj([
+                        ("type", airesim::report::json::Json::str("child-timeline")),
+                        ("label", airesim::report::json::Json::str(label.as_str())),
+                    ]);
+                    ndjson.push_str(&(sep.render() + "\n"));
+                    ndjson.push_str(&trace.to_ndjson());
+                }
+                write_trace_out(out_path, &ndjson)?;
+            }
+            _ => unreachable!("guarded above"),
         }
     }
     print!("{}", format.sink().scenario(&scenario.record_owned(outcome)));

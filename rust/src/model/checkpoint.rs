@@ -6,8 +6,8 @@
 //! |---|---|
 //! | `continuous` | [`Continuous`] — async checkpointing, no loss, no commit cost (paper default) |
 //! | `periodic`   | [`Periodic`] — commit every `checkpoint_interval` minutes of work, each commit stalls the gang `checkpoint_cost` minutes |
-//! | `young_daly` | [`YoungDaly`] — interval = √(2·C·MTBF_gang) from the configured rates and the live gang composition |
-//! | `adaptive`   | [`Adaptive`] — online Young/Daly from a sliding window of observed interrupt inter-arrivals |
+//! | `young_daly` | [`SelfTuning::young_daly`] — interval = √(2·C·MTBF_gang) from the configured rates and the live gang composition |
+//! | `adaptive`   | [`SelfTuning::adaptive`] — online Young/Daly from a sliding window of observed interrupt inter-arrivals |
 //! | `tiered`     | [`Tiered`] — cheap-frequent + expensive-rare commit tiers with distinct restore costs |
 //! | `auto`       | `periodic` when `checkpoint_interval > 0`, else `continuous` |
 //!
@@ -336,18 +336,44 @@ impl CheckpointPolicy for Periodic {
 }
 
 // ------------------------------------------------------------------ //
-// Young/Daly
+// Young/Daly (one struct, pluggable MTBF source)
 // ------------------------------------------------------------------ //
 
-/// Self-optimizing interval: √(2·C·MTBF_gang), recomputed from the live
-/// gang composition every time the job (re-)enters Running — a gang that
-/// accumulates bad servers checkpoints more often. Commits move with the
-/// interval, so the last committed point is tracked per job instead of
-/// floored from a fixed grid.
+/// Sliding window of observed interrupt inter-arrivals per job.
+const ADAPTIVE_WINDOW: usize = 16;
+
+/// Where a [`SelfTuning`] policy gets its gang MTBF estimate from. The
+/// interval/`last_committed` machinery is identical for both policies —
+/// only this estimate differs — so they share one struct.
 #[derive(Clone, Debug)]
-pub struct YoungDaly {
+pub enum MtbfSource {
+    /// `young_daly`: the configured failure/outage rates applied to the
+    /// live gang composition at every burst start.
+    ConfiguredRate,
+    /// `adaptive`: a per-job sliding window of observed interrupt
+    /// inter-arrivals (running-burst lengths that ended in an interrupt),
+    /// falling back to the configured-rate estimate until the first
+    /// interrupt is observed.
+    SlidingWindow {
+        /// Configured-rate MTBF estimate (the cold-start fallback).
+        fallback_mtbf: Time,
+        /// Observed burst lengths per job, newest last.
+        window: Vec<Vec<Time>>,
+    },
+}
+
+/// Self-optimizing Young/Daly interval: √(2·C·MTBF_gang), recomputed
+/// every time the job (re-)enters Running from whatever the policy's
+/// [`MtbfSource`] currently estimates — the configured rates over the
+/// live gang composition (`young_daly`), or a sliding window of observed
+/// interrupts (`adaptive`). Commits move with the interval, so the last
+/// committed point is tracked per job instead of floored from a fixed
+/// grid.
+#[derive(Clone, Debug)]
+pub struct SelfTuning {
     cost: Time,
     recovery_time: Time,
+    source: MtbfSource,
     /// Current interval per job (configured-rate estimate until the
     /// first burst).
     interval: Vec<Time>,
@@ -355,15 +381,35 @@ pub struct YoungDaly {
     last_committed: Vec<Time>,
 }
 
-impl YoungDaly {
-    pub fn new(n_jobs: usize, p: &Params) -> YoungDaly {
+impl SelfTuning {
+    fn new(n_jobs: usize, p: &Params, source: MtbfSource) -> SelfTuning {
         let initial = young_daly_interval(p.checkpoint_cost, configured_gang_rate(p));
-        YoungDaly {
+        SelfTuning {
             cost: p.checkpoint_cost,
             recovery_time: p.recovery_time,
+            source,
             interval: vec![initial; n_jobs],
             last_committed: vec![0.0; n_jobs],
         }
+    }
+
+    /// The `young_daly` policy: configured-rate MTBF source.
+    pub fn young_daly(n_jobs: usize, p: &Params) -> SelfTuning {
+        SelfTuning::new(n_jobs, p, MtbfSource::ConfiguredRate)
+    }
+
+    /// The `adaptive` policy: sliding-window MTBF source.
+    pub fn adaptive(n_jobs: usize, p: &Params) -> SelfTuning {
+        let rate = configured_gang_rate(p);
+        let fallback_mtbf = if rate > 0.0 { 1.0 / rate } else { f64::INFINITY };
+        SelfTuning::new(
+            n_jobs,
+            p,
+            MtbfSource::SlidingWindow {
+                fallback_mtbf,
+                window: vec![Vec::new(); n_jobs],
+            },
+        )
     }
 
     /// The interval currently in force for `job` (test hook).
@@ -374,11 +420,36 @@ impl YoungDaly {
     fn clock(&self, job: usize) -> CommitClock {
         CommitClock { interval: self.interval[job], cost: self.cost }
     }
+
+    /// The gang interrupt rate (1/min) the next interval derives from.
+    fn rate(&self, ctx: &SimCtx, job: usize) -> f64 {
+        match &self.source {
+            MtbfSource::ConfiguredRate => live_gang_rate(ctx, job),
+            MtbfSource::SlidingWindow { fallback_mtbf, window } => {
+                let w = &window[job];
+                let mtbf = if w.is_empty() {
+                    *fallback_mtbf
+                } else {
+                    w.iter().sum::<Time>() / w.len() as f64
+                };
+                // One formula, one site: the observed MTBF feeds the same
+                // Young/Daly helper the configured-rate source uses.
+                if mtbf.is_finite() {
+                    1.0 / mtbf
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
 }
 
-impl CheckpointPolicy for YoungDaly {
+impl CheckpointPolicy for SelfTuning {
     fn name(&self) -> &'static str {
-        "young_daly"
+        match self.source {
+            MtbfSource::ConfiguredRate => "young_daly",
+            MtbfSource::SlidingWindow { .. } => "adaptive",
+        }
     }
 
     fn work_lost(&mut self, job: usize, done: Time) -> Time {
@@ -407,116 +478,20 @@ impl CheckpointPolicy for YoungDaly {
             // without stranding the committed grid.
             self.last_committed[job] = done0 + acct.commits as f64 * self.interval[job];
         }
+        if interrupted {
+            if let MtbfSource::SlidingWindow { window, .. } = &mut self.source {
+                let w = &mut window[job];
+                if w.len() == ADAPTIVE_WINDOW {
+                    w.remove(0);
+                }
+                w.push(wall);
+            }
+        }
         acct
     }
 
     fn on_start_running(&mut self, ctx: &SimCtx, job: usize) {
-        self.interval[job] = young_daly_interval(self.cost, live_gang_rate(ctx, job));
-    }
-}
-
-// ------------------------------------------------------------------ //
-// Adaptive (online Young/Daly)
-// ------------------------------------------------------------------ //
-
-/// Sliding window of observed interrupt inter-arrivals per job.
-const ADAPTIVE_WINDOW: usize = 16;
-
-/// Online Young/Daly: instead of trusting the configured rates, estimate
-/// MTBF from a sliding window of observed interrupt inter-arrivals
-/// (running-burst lengths) and recompute √(2·C·MTBF) at every burst
-/// start. Falls back to the configured-rate estimate until the first
-/// interrupt is observed.
-#[derive(Clone, Debug)]
-pub struct Adaptive {
-    cost: Time,
-    recovery_time: Time,
-    /// Configured-rate MTBF estimate (the cold-start fallback).
-    fallback_mtbf: Time,
-    /// Per-job sliding window of observed running-burst lengths that
-    /// ended in an interrupt.
-    window: Vec<Vec<Time>>,
-    interval: Vec<Time>,
-    last_committed: Vec<Time>,
-}
-
-impl Adaptive {
-    pub fn new(n_jobs: usize, p: &Params) -> Adaptive {
-        let rate = configured_gang_rate(p);
-        let fallback_mtbf = if rate > 0.0 { 1.0 / rate } else { f64::INFINITY };
-        let initial = young_daly_interval(p.checkpoint_cost, rate);
-        Adaptive {
-            cost: p.checkpoint_cost,
-            recovery_time: p.recovery_time,
-            fallback_mtbf,
-            window: vec![Vec::new(); n_jobs],
-            interval: vec![initial; n_jobs],
-            last_committed: vec![0.0; n_jobs],
-        }
-    }
-
-    /// The interval currently in force for `job` (test hook).
-    pub fn interval(&self, job: usize) -> Time {
-        self.interval[job]
-    }
-
-    fn clock(&self, job: usize) -> CommitClock {
-        CommitClock { interval: self.interval[job], cost: self.cost }
-    }
-
-    fn observed_mtbf(&self, job: usize) -> Time {
-        let w = &self.window[job];
-        if w.is_empty() {
-            return self.fallback_mtbf;
-        }
-        w.iter().sum::<Time>() / w.len() as f64
-    }
-}
-
-impl CheckpointPolicy for Adaptive {
-    fn name(&self) -> &'static str {
-        "adaptive"
-    }
-
-    fn work_lost(&mut self, job: usize, done: Time) -> Time {
-        (done - self.last_committed[job]).max(0.0)
-    }
-
-    fn restart_cost(&self, _job: usize) -> Time {
-        self.recovery_time
-    }
-
-    fn wall_for_work(&self, job: usize, _done0: Time, work: Time) -> Time {
-        self.clock(job).wall_for_work(work)
-    }
-
-    fn account_burst(
-        &mut self,
-        job: usize,
-        done0: Time,
-        wall: Time,
-        interrupted: bool,
-    ) -> BurstAccount {
-        let acct = self.clock(job).account(wall, interrupted);
-        if acct.commits > 0 {
-            self.last_committed[job] = done0 + acct.commits as f64 * self.interval[job];
-        }
-        if interrupted {
-            let w = &mut self.window[job];
-            if w.len() == ADAPTIVE_WINDOW {
-                w.remove(0);
-            }
-            w.push(wall);
-        }
-        acct
-    }
-
-    fn on_start_running(&mut self, _ctx: &SimCtx, job: usize) {
-        let mtbf = self.observed_mtbf(job);
-        // One formula, one site: the observed MTBF feeds the same
-        // Young/Daly helper the configured-rate policy uses.
-        let rate = if mtbf.is_finite() { 1.0 / mtbf } else { 0.0 };
-        self.interval[job] = young_daly_interval(self.cost, rate);
+        self.interval[job] = young_daly_interval(self.cost, self.rate(ctx, job));
     }
 }
 
@@ -786,7 +761,8 @@ mod tests {
     fn young_daly_tracks_commits_across_interval_changes() {
         let mut p = Params::small_test();
         p.checkpoint_cost = 10.0;
-        let mut yd = YoungDaly::new(1, &p);
+        let mut yd = SelfTuning::young_daly(1, &p);
+        assert_eq!(yd.name(), "young_daly");
         yd.interval[0] = 100.0;
         // Burst from 0: wall 270 = 250 work, commits at 100 and 200.
         let a = yd.account_burst(0, 0.0, 270.0, true);
@@ -808,13 +784,26 @@ mod tests {
         p.checkpoint_cost = 10.0;
         p.random_failure_rate = 0.0;
         p.systematic_failure_rate = 0.0;
-        let mut a = Adaptive::new(1, &p);
-        assert_eq!(a.observed_mtbf(0), f64::INFINITY, "no rates, no observations");
+        let mut a = SelfTuning::adaptive(1, &p);
+        assert_eq!(a.name(), "adaptive");
+        // The observed MTBF behind the interval the source would derive.
+        let observed_mtbf = |a: &SelfTuning| -> Time {
+            let MtbfSource::SlidingWindow { fallback_mtbf, window } = &a.source else {
+                panic!("adaptive uses the sliding-window source")
+            };
+            let w = &window[0];
+            if w.is_empty() {
+                *fallback_mtbf
+            } else {
+                w.iter().sum::<Time>() / w.len() as f64
+            }
+        };
+        assert_eq!(observed_mtbf(&a), f64::INFINITY, "no rates, no observations");
         // Observe interrupts every ~200 minutes of running.
         for _ in 0..8 {
             a.account_burst(0, 0.0, 200.0, true);
         }
-        assert!((a.observed_mtbf(0) - 200.0).abs() < 1e-9);
+        assert!((observed_mtbf(&a) - 200.0).abs() < 1e-9);
         let ctx_free = crate::model::ctx::SimCtx::new(&p, crate::sim::rng::Rng::new(1));
         a.on_start_running(&ctx_free, 0);
         assert!((a.interval(0) - (2.0f64 * 10.0 * 200.0).sqrt()).abs() < 1e-9);
@@ -822,10 +811,15 @@ mod tests {
         for _ in 0..ADAPTIVE_WINDOW {
             a.account_burst(0, 0.0, 50.0, true);
         }
-        assert!((a.observed_mtbf(0) - 50.0).abs() < 1e-9);
+        assert!((observed_mtbf(&a) - 50.0).abs() < 1e-9);
         // Completions are not interrupts and must not enter the window.
         a.account_burst(0, 0.0, 9999.0, false);
-        assert!((a.observed_mtbf(0) - 50.0).abs() < 1e-9);
+        assert!((observed_mtbf(&a) - 50.0).abs() < 1e-9);
+        // The configured-rate twin never grows a window: interrupts leave
+        // its source untouched (the fold must not cross-contaminate).
+        let mut yd = SelfTuning::young_daly(1, &p);
+        yd.account_burst(0, 0.0, 200.0, true);
+        assert!(matches!(yd.source, MtbfSource::ConfiguredRate));
     }
 
     #[test]
@@ -847,7 +841,7 @@ mod tests {
         // Packed estimate: a 64-gang spans 8 of the 11 rack domains.
         let rate = configured_gang_rate(&p);
         assert!((rate - 8.0 * 0.001).abs() < 1e-12, "{rate}");
-        assert!(YoungDaly::new(1, &p).interval(0).is_finite());
+        assert!(SelfTuning::young_daly(1, &p).interval(0).is_finite());
 
         // Live rate counts the domains the gang actually touches.
         let mut ctx = crate::model::ctx::SimCtx::new(&p, crate::sim::rng::Rng::new(1));

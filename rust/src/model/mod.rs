@@ -6,7 +6,7 @@
 //! | 1. Server       | [`server`] (state machine) | [`failure`] — clock models (`gang`, `per_server`) |
 //! | 2. Coordinator  | [`coordinator`] (gang interrupt) | — |
 //! | 3. Scheduler    | [`scheduler`] (allotment top-up) | [`selection`] — host choice (`first_fit`, `random`, `locality`) |
-//! | 4. Repairs      | [`repair`] (auto→manual, capacity) | [`repair`] — queue discipline (`fifo`, `lifo`, `job_first`) |
+//! | 4. Repairs      | [`repair`] (auto→manual, capacity) | [`repair`] — queue discipline (`fifo`, `lifo`, `job_first`, `sla_aged`) |
 //! | 5. Pool         | [`pool`] (working/spare pools) | — |
 //!
 //! plus [`checkpoint`] (commit-cost/work-loss/restart policies:

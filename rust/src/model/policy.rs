@@ -5,8 +5,8 @@
 //! ```yaml
 //! policies:
 //!   selection: locality      # first_fit | random | locality | anti_affinity | power_of_two_choices
-//!   repair: job_first        # fifo | lifo | job_first
-//!   checkpoint: periodic     # auto | continuous | periodic
+//!   repair: job_first        # fifo | lifo | job_first | sla_aged
+//!   checkpoint: periodic     # auto | continuous | periodic | young_daly | adaptive | tiered
 //!   failure: auto            # auto | gang | per_server | correlated
 //! ```
 //!
@@ -18,12 +18,12 @@
 
 use crate::config::{DistKind, Params};
 use crate::model::checkpoint::{
-    Adaptive, CheckpointPolicy, Continuous, Periodic, Tiered, YoungDaly,
+    CheckpointPolicy, Continuous, Periodic, SelfTuning, Tiered,
 };
 use crate::model::failure::{
     CorrelatedFailures, FailureModel, GangExponential, PerServerClocks,
 };
-use crate::model::repair::{Fifo, JobFirst, Lifo, RepairPolicy};
+use crate::model::repair::{Fifo, JobFirst, Lifo, RepairPolicy, SlaAged};
 use crate::model::selection::{
     AntiAffinity, FirstFit, Locality, PowerOfTwoChoices, Random, SelectionPolicy,
 };
@@ -69,7 +69,7 @@ impl Default for PolicySpec {
 pub const SELECTION_NAMES: &[&str] =
     &["first_fit", "random", "locality", "anti_affinity", "power_of_two_choices"];
 /// Valid repair-policy names.
-pub const REPAIR_NAMES: &[&str] = &["fifo", "lifo", "job_first"];
+pub const REPAIR_NAMES: &[&str] = &["fifo", "lifo", "job_first", "sla_aged"];
 /// Valid checkpoint-policy names.
 pub const CHECKPOINT_NAMES: &[&str] =
     &["auto", "continuous", "periodic", "young_daly", "adaptive", "tiered"];
@@ -127,6 +127,7 @@ impl PolicySpec {
             "fifo" => Box::new(Fifo),
             "lifo" => Box::new(Lifo),
             "job_first" => Box::new(JobFirst),
+            "sla_aged" => Box::new(SlaAged),
             other => return Err(format!("unknown repair policy `{other}`")),
         };
         // The self-optimizing interval √(2·C·MTBF) is degenerate at C = 0
@@ -164,11 +165,11 @@ impl PolicySpec {
             }
             "young_daly" => {
                 needs_cost("young_daly")?;
-                Box::new(YoungDaly::new(n_jobs, p))
+                Box::new(SelfTuning::young_daly(n_jobs, p))
             }
             "adaptive" => {
                 needs_cost("adaptive")?;
-                Box::new(Adaptive::new(n_jobs, p))
+                Box::new(SelfTuning::adaptive(n_jobs, p))
             }
             "tiered" => {
                 if p.checkpoint_interval <= 0.0 || p.checkpoint_tier2_interval <= 0.0 {

@@ -37,10 +37,14 @@ use std::collections::{HashSet, VecDeque};
 /// nothing extra; a `job_first` bucket pick tombstones its global twin,
 /// which later global pops reclaim lazily. Memory is O(live entries +
 /// unreclaimed tombstones), never O(all admissions of the run).
+///
+/// Entries carry their enqueue time, so age-aware disciplines
+/// ([`SlaAged`]) can compare the head's wait against an SLA without any
+/// extra bookkeeping.
 #[derive(Clone, Debug, Default)]
 pub struct RepairQueue {
-    /// Global arrival order: `(seq, server, assigned job)`.
-    fifo: VecDeque<(u64, ServerId, Option<u32>)>,
+    /// Global arrival order: `(seq, server, assigned job, enqueued at)`.
+    fifo: VecDeque<(u64, ServerId, Option<u32>, Time)>,
     /// Live entries per assigned job (index = job id), in arrival order.
     /// Servers with no assigned job live only in `fifo`.
     by_job: Vec<VecDeque<(u64, ServerId)>>,
@@ -71,14 +75,14 @@ impl RepairQueue {
         self.len = 0;
     }
 
-    /// Enqueue `server`, indexed under its assigned `job` (if any). The
-    /// assignment must not change while the server is queued — true in
-    /// the simulation, where a shop-bound server belongs to no pool or
-    /// gang list.
-    pub fn push(&mut self, server: ServerId, job: Option<u32>) {
+    /// Enqueue `server` at time `at`, indexed under its assigned `job`
+    /// (if any). The assignment must not change while the server is
+    /// queued — true in the simulation, where a shop-bound server belongs
+    /// to no pool or gang list.
+    pub fn push(&mut self, server: ServerId, job: Option<u32>, at: Time) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.fifo.push_back((seq, server, job));
+        self.fifo.push_back((seq, server, job, at));
         if let Some(j) = job {
             let j = j as usize;
             if j >= self.by_job.len() {
@@ -91,7 +95,7 @@ impl RepairQueue {
 
     /// Oldest entry (FIFO discipline).
     pub fn pop_front(&mut self) -> Option<ServerId> {
-        while let Some((seq, server, job)) = self.fifo.pop_front() {
+        while let Some((seq, server, job, _)) = self.fifo.pop_front() {
             if self.dead.remove(&seq) {
                 continue; // already taken via the job index
             }
@@ -110,7 +114,7 @@ impl RepairQueue {
 
     /// Newest entry (LIFO discipline).
     pub fn pop_back(&mut self) -> Option<ServerId> {
-        while let Some((seq, server, job)) = self.fifo.pop_back() {
+        while let Some((seq, server, job, _)) = self.fifo.pop_back() {
             if self.dead.remove(&seq) {
                 continue;
             }
@@ -125,6 +129,21 @@ impl RepairQueue {
             return Some(server);
         }
         None
+    }
+
+    /// Enqueue time of the oldest live entry (the head the FIFO
+    /// discipline would pop). Reclaims any tombstones sitting at the
+    /// front so the answer is about a live entry.
+    pub fn front_enqueued_at(&mut self) -> Option<Time> {
+        while self
+            .fifo
+            .front()
+            .is_some_and(|(s, _, _, _)| self.dead.contains(s))
+        {
+            let (s, ..) = self.fifo.pop_front().expect("front checked");
+            self.dead.remove(&s);
+        }
+        self.fifo.front().map(|&(_, _, _, at)| at)
     }
 
     /// The earliest-queued server whose assigned job satisfies `waiting`
@@ -151,9 +170,9 @@ impl RepairQueue {
                 while self
                     .fifo
                     .front()
-                    .is_some_and(|(s, _, _)| self.dead.contains(s))
+                    .is_some_and(|(s, _, _, _)| self.dead.contains(s))
                 {
-                    let (s, _, _) = self.fifo.pop_front().expect("front checked");
+                    let (s, ..) = self.fifo.pop_front().expect("front checked");
                     self.dead.remove(&s);
                 }
                 self.len -= 1;
@@ -172,17 +191,21 @@ impl RepairQueue {
 /// | `fifo`      | [`Fifo`] — arrival order (default) |
 /// | `lifo`      | [`Lifo`] — most recent arrival first |
 /// | `job_first` | [`JobFirst`] — servers a live job is waiting on jump the queue |
+/// | `sla_aged`  | [`SlaAged`] — freshest first, until the head breaches `repair_sla_minutes` |
 pub trait RepairPolicy {
     /// Stable policy name (the YAML/CLI selector).
     fn name(&self) -> &'static str;
 
-    /// Remove and return the next server to repair from `queue`.
+    /// Remove and return the next server to repair from `queue`; `now`
+    /// is the pick time (age-aware disciplines compare queue waits
+    /// against it).
     fn pick_next(
         &self,
         queue: &mut RepairQueue,
         fleet: &[Server],
         jobs: &[Job],
         p: &Params,
+        now: Time,
     ) -> Option<ServerId>;
 }
 
@@ -201,6 +224,7 @@ impl RepairPolicy for Fifo {
         _fleet: &[Server],
         _jobs: &[Job],
         _p: &Params,
+        _now: Time,
     ) -> Option<ServerId> {
         queue.pop_front()
     }
@@ -222,6 +246,7 @@ impl RepairPolicy for Lifo {
         _fleet: &[Server],
         _jobs: &[Job],
         _p: &Params,
+        _now: Time,
     ) -> Option<ServerId> {
         queue.pop_back()
     }
@@ -248,8 +273,39 @@ impl RepairPolicy for JobFirst {
         _fleet: &[Server],
         jobs: &[Job],
         p: &Params,
+        _now: Time,
     ) -> Option<ServerId> {
         queue.pop_first_waiting(|j| jobs[j].wants_more(p))
+    }
+}
+
+/// SLA-aged priority: serve the freshest arrival (LIFO keeps the mean
+/// wait low under overload) *unless* the oldest queued server has waited
+/// `repair_sla_minutes` or longer — then the breacher escalates to the
+/// head of service. Because arrivals are time-ordered, the oldest entry
+/// is the only one that can breach first, so the check is O(1): compare
+/// the queue head's age, pop front on breach, pop back otherwise.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SlaAged;
+
+impl RepairPolicy for SlaAged {
+    fn name(&self) -> &'static str {
+        "sla_aged"
+    }
+
+    fn pick_next(
+        &self,
+        queue: &mut RepairQueue,
+        _fleet: &[Server],
+        _jobs: &[Job],
+        p: &Params,
+        now: Time,
+    ) -> Option<ServerId> {
+        match queue.front_enqueued_at() {
+            Some(at) if now - at >= p.repair_sla_minutes => queue.pop_front(),
+            Some(_) => queue.pop_back(),
+            None => None,
+        }
     }
 }
 
@@ -335,14 +391,15 @@ impl RepairShop {
         }
     }
 
-    /// Try to admit `server` into `stage`; `job` is the server's assigned
-    /// job (the queue's index key for `job_first`).
+    /// Try to admit `server` into `stage` at time `now`; `job` is the
+    /// server's assigned job (the queue's index key for `job_first`).
     pub fn admit(
         &mut self,
         p: &Params,
         stage: RepairStage,
         server: ServerId,
         job: Option<u32>,
+        now: Time,
     ) -> Admission {
         let cap = Self::cap(p, stage);
         let (busy, queue) = match stage {
@@ -353,7 +410,7 @@ impl RepairShop {
             *busy += 1;
             Admission::Start
         } else {
-            queue.push(server, job);
+            queue.push(server, job, now);
             match stage {
                 RepairStage::Automated => {
                     self.max_queue_auto = self.max_queue_auto.max(queue.len())
@@ -366,9 +423,9 @@ impl RepairShop {
         }
     }
 
-    /// A repair of `stage` completed: free the slot and return the next
-    /// queued server per the queue discipline (if any), which the caller
-    /// must now start.
+    /// A repair of `stage` completed at time `now`: free the slot and
+    /// return the next queued server per the queue discipline (if any),
+    /// which the caller must now start.
     pub fn complete(
         &mut self,
         p: &Params,
@@ -376,6 +433,7 @@ impl RepairShop {
         policy: &dyn RepairPolicy,
         fleet: &[Server],
         jobs: &[Job],
+        now: Time,
     ) -> Option<ServerId> {
         let (busy, queue, completed) = match stage {
             RepairStage::Automated => {
@@ -388,7 +446,7 @@ impl RepairShop {
         debug_assert!(*busy > 0);
         *busy -= 1;
         *completed += 1;
-        let next = policy.pick_next(queue, fleet, jobs, p);
+        let next = policy.pick_next(queue, fleet, jobs, p, now);
         if next.is_some() {
             *busy += 1;
         }
@@ -419,11 +477,12 @@ mod tests {
         vec![Job::new(p.job_len)]
     }
 
-    /// Build a queue from (server, job) pairs in arrival order.
+    /// Build a queue from (server, job) pairs in arrival order (all
+    /// enqueued at t = 0).
     fn queue_of(entries: &[(ServerId, Option<u32>)]) -> RepairQueue {
         let mut q = RepairQueue::default();
         for &(s, j) in entries {
-            q.push(s, j);
+            q.push(s, j, 0.0);
         }
         q
     }
@@ -433,7 +492,10 @@ mod tests {
         let p = Params::small_test(); // capacities 0
         let mut shop = RepairShop::new();
         for id in 0..1000 {
-            assert_eq!(shop.admit(&p, RepairStage::Automated, id, Some(0)), Admission::Start);
+            assert_eq!(
+                shop.admit(&p, RepairStage::Automated, id, Some(0), 0.0),
+                Admission::Start
+            );
         }
         assert_eq!(shop.population(), 1000);
     }
@@ -445,13 +507,13 @@ mod tests {
         let fleet = test_fleet(4);
         let jobs = waiting_job(&p);
         let mut shop = RepairShop::new();
-        assert_eq!(shop.admit(&p, RepairStage::Automated, 0, Some(0)), Admission::Start);
-        assert_eq!(shop.admit(&p, RepairStage::Automated, 1, Some(0)), Admission::Start);
-        assert_eq!(shop.admit(&p, RepairStage::Automated, 2, Some(0)), Admission::Queued);
-        assert_eq!(shop.admit(&p, RepairStage::Automated, 3, Some(0)), Admission::Queued);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 0, Some(0), 0.0), Admission::Start);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 1, Some(0), 0.0), Admission::Start);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 2, Some(0), 0.0), Admission::Queued);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 3, Some(0), 0.0), Admission::Queued);
         // Completion hands the slot to the FIFO head.
         let next = |shop: &mut RepairShop| {
-            shop.complete(&p, RepairStage::Automated, &Fifo, &fleet, &jobs)
+            shop.complete(&p, RepairStage::Automated, &Fifo, &fleet, &jobs, 0.0)
         };
         assert_eq!(next(&mut shop), Some(2));
         assert_eq!(next(&mut shop), Some(3));
@@ -467,10 +529,10 @@ mod tests {
         p.auto_repair_capacity = 1;
         p.manual_repair_capacity = 1;
         let mut shop = RepairShop::new();
-        assert_eq!(shop.admit(&p, RepairStage::Automated, 0, None), Admission::Start);
-        assert_eq!(shop.admit(&p, RepairStage::Manual, 1, None), Admission::Start);
-        assert_eq!(shop.admit(&p, RepairStage::Automated, 2, None), Admission::Queued);
-        assert_eq!(shop.admit(&p, RepairStage::Manual, 3, None), Admission::Queued);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 0, None, 0.0), Admission::Start);
+        assert_eq!(shop.admit(&p, RepairStage::Manual, 1, None, 0.0), Admission::Start);
+        assert_eq!(shop.admit(&p, RepairStage::Automated, 2, None, 0.0), Admission::Queued);
+        assert_eq!(shop.admit(&p, RepairStage::Manual, 3, None, 0.0), Admission::Queued);
     }
 
     #[test]
@@ -479,10 +541,10 @@ mod tests {
         let fleet = test_fleet(4);
         let jobs = waiting_job(&p);
         let mut q = queue_of(&[(0, Some(0)), (1, Some(0)), (2, Some(0))]);
-        assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p), Some(2));
-        assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p), Some(1));
-        assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p), Some(0));
-        assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p), None);
+        assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(2));
+        assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(1));
+        assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(0));
+        assert_eq!(Lifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0), None);
     }
 
     #[test]
@@ -500,12 +562,12 @@ mod tests {
         let mut q =
             queue_of(&[(0, Some(0)), (1, Some(0)), (2, Some(1)), (3, Some(0))]);
         // Server 2 jumps ahead of 0 and 1.
-        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(2));
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(2));
         // Nobody else is awaited: FIFO order resumes.
-        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(0));
-        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(1));
-        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(3));
-        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), None);
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(0));
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(1));
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(3));
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), None);
     }
 
     #[test]
@@ -522,7 +584,7 @@ mod tests {
         job.active = vec![0, 1]; // allotted == target
         let jobs = vec![job];
         let mut q = queue_of(&[(2, Some(0)), (3, Some(0))]);
-        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(2), "plain FIFO");
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(2), "plain FIFO");
     }
 
     #[test]
@@ -533,11 +595,67 @@ mod tests {
         let fleet = test_fleet(4);
         let jobs = vec![Job::with_id(0, p.job_len), Job::with_id(1, p.job_len)];
         let mut q = queue_of(&[(3, Some(1)), (0, Some(0)), (1, None)]);
-        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(3));
-        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(0));
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(3));
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(0));
         // Unassigned server only via the FIFO fallback.
-        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), Some(1));
-        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p), None);
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(1));
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), None);
+    }
+
+    #[test]
+    fn sla_aged_serves_freshest_until_the_head_breaches() {
+        let mut p = Params::small_test();
+        p.repair_sla_minutes = 100.0;
+        let fleet = test_fleet(4);
+        let jobs = waiting_job(&p);
+        let mut q = RepairQueue::default();
+        q.push(0, Some(0), 10.0);
+        q.push(1, None, 50.0);
+        q.push(2, Some(0), 60.0);
+        // At t=90 nobody has waited 100 minutes: freshest first.
+        assert_eq!(SlaAged.pick_next(&mut q, &fleet, &jobs, &p, 90.0), Some(2));
+        // At t=115 server 0 has waited 105 >= 100: it escalates.
+        assert_eq!(SlaAged.pick_next(&mut q, &fleet, &jobs, &p, 115.0), Some(0));
+        // Head (server 1, waited 65) is within SLA again: LIFO resumes —
+        // and with one entry left, both ends coincide.
+        assert_eq!(SlaAged.pick_next(&mut q, &fleet, &jobs, &p, 115.0), Some(1));
+        assert_eq!(SlaAged.pick_next(&mut q, &fleet, &jobs, &p, 115.0), None);
+        // Exact-boundary wait counts as breached (>=).
+        q.push(3, None, 200.0);
+        assert_eq!(SlaAged.pick_next(&mut q, &fleet, &jobs, &p, 300.0), Some(3));
+    }
+
+    #[test]
+    fn sla_aged_head_age_skips_job_first_tombstones() {
+        // A job_first pick tombstones the global head; the SLA check must
+        // see the oldest *live* entry's age, not the tombstone's.
+        let mut p = Params::small_test();
+        p.repair_sla_minutes = 100.0;
+        let fleet = test_fleet(3);
+        let jobs = waiting_job(&p);
+        let mut q = RepairQueue::default();
+        q.push(0, Some(0), 0.0); // will be taken via the job index
+        q.push(1, None, 500.0);
+        q.push(2, None, 510.0);
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 520.0), Some(0));
+        // t=550: the live head (1, waited 50) is within SLA -> LIFO. If
+        // the dead entry at t=0 were consulted, it would force FIFO.
+        assert_eq!(SlaAged.pick_next(&mut q, &fleet, &jobs, &p, 550.0), Some(2));
+        assert_eq!(SlaAged.pick_next(&mut q, &fleet, &jobs, &p, 550.0), Some(1));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn sla_zero_degenerates_to_fifo() {
+        // Every queued server breaches instantly: pure arrival order.
+        let mut p = Params::small_test();
+        p.repair_sla_minutes = 0.0;
+        let fleet = test_fleet(3);
+        let jobs = waiting_job(&p);
+        let mut q = queue_of(&[(0, None), (1, None), (2, None)]);
+        assert_eq!(SlaAged.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(0));
+        assert_eq!(SlaAged.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(1));
+        assert_eq!(SlaAged.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(2));
     }
 
     #[test]
@@ -556,15 +674,15 @@ mod tests {
             (5, None),
         ]);
         let mut got = Vec::new();
-        got.push(JobFirst.pick_next(&mut q, &fleet, &jobs, &p).unwrap()); // 0
-        got.push(Lifo.pick_next(&mut q, &fleet, &jobs, &p).unwrap()); // 5
-        got.push(JobFirst.pick_next(&mut q, &fleet, &jobs, &p).unwrap()); // 2
-        got.push(Fifo.pick_next(&mut q, &fleet, &jobs, &p).unwrap()); // 1
-        got.push(JobFirst.pick_next(&mut q, &fleet, &jobs, &p).unwrap()); // 4
-        got.push(Fifo.pick_next(&mut q, &fleet, &jobs, &p).unwrap()); // 3
+        got.push(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0).unwrap()); // 0
+        got.push(Lifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0).unwrap()); // 5
+        got.push(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0).unwrap()); // 2
+        got.push(Fifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0).unwrap()); // 1
+        got.push(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0).unwrap()); // 4
+        got.push(Fifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0).unwrap()); // 3
         assert_eq!(got, vec![0, 5, 2, 1, 4, 3]);
         assert!(q.is_empty());
-        assert_eq!(Fifo.pick_next(&mut q, &fleet, &jobs, &p), None);
+        assert_eq!(Fifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0), None);
     }
 
     #[test]
@@ -578,15 +696,15 @@ mod tests {
         let mut q = RepairQueue::default();
         for round in 0..50u32 {
             for s in 0..8 {
-                q.push(s, if s % 3 == 0 { None } else { Some(0) });
+                q.push(s, if s % 3 == 0 { None } else { Some(0) }, 0.0);
             }
             for _ in 0..4 {
-                assert!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p).is_some());
+                assert!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0).is_some());
             }
             for _ in 0..2 {
-                assert!(Lifo.pick_next(&mut q, &fleet, &jobs, &p).is_some());
+                assert!(Lifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0).is_some());
             }
-            while Fifo.pick_next(&mut q, &fleet, &jobs, &p).is_some() {}
+            while Fifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0).is_some() {}
             assert!(q.is_empty(), "round {round}");
             assert!(q.fifo.is_empty(), "fifo residue at round {round}");
             assert!(q.dead.is_empty(), "tombstone residue at round {round}");
@@ -601,9 +719,9 @@ mod tests {
         let fleet = test_fleet(4);
         let jobs = waiting_job(&p);
         let mut shop = RepairShop::new();
-        shop.admit(&p, RepairStage::Automated, 0, Some(0));
-        shop.admit(&p, RepairStage::Automated, 1, Some(0));
-        let _ = shop.complete(&p, RepairStage::Automated, &Fifo, &fleet, &jobs);
+        shop.admit(&p, RepairStage::Automated, 0, Some(0), 0.0);
+        shop.admit(&p, RepairStage::Automated, 1, Some(0), 0.0);
+        let _ = shop.complete(&p, RepairStage::Automated, &Fifo, &fleet, &jobs, 0.0);
         assert!(shop.population() > 0 || shop.completed_auto > 0);
         shop.reset();
         assert_eq!(shop.population(), 0);

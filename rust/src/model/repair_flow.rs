@@ -45,9 +45,11 @@ pub(crate) fn start_repair(ctx: &mut SimCtx, pol: &mut PolicySet, server: Server
 /// Admission into a repair stage (possibly queueing on capacity).
 fn enter_stage(ctx: &mut SimCtx, pol: &mut PolicySet, server: ServerId, stage: RepairStage) {
     // The queue index keys on the server's assigned job (stable while it
-    // sits in the shop) so `job_first` picks without scanning.
+    // sits in the shop) so `job_first` picks without scanning; the
+    // enqueue time feeds the `sla_aged` age check.
     let job = ctx.fleet[server as usize].assigned_job;
-    match ctx.shop.admit(&ctx.p, stage, server, job) {
+    let now = ctx.now();
+    match ctx.shop.admit(&ctx.p, stage, server, job, now) {
         Admission::Start => start_stage(ctx, pol, server, stage),
         Admission::Queued => {
             ctx.fleet[server as usize].state = ServerState::RepairQueued;
@@ -76,9 +78,15 @@ pub(crate) fn on_repair_done(
     stage: RepairStage,
 ) {
     // Free the shop slot; the repair policy picks who starts next.
-    let next =
-        ctx.shop
-            .complete(&ctx.p, stage, pol.repair.as_ref(), &ctx.fleet, &ctx.jobs);
+    let now = ctx.now();
+    let next = ctx.shop.complete(
+        &ctx.p,
+        stage,
+        pol.repair.as_ref(),
+        &ctx.fleet,
+        &ctx.jobs,
+        now,
+    );
     if let Some(next) = next {
         start_stage(ctx, pol, next, stage);
     }

@@ -12,8 +12,8 @@ pub mod record;
 pub mod sink;
 
 pub use record::{
-    CompareRecord, PrescreenRecord, RecordBody, RunRecord, ScenarioRecord, SweepRecord,
-    WhatIfRecord,
+    CompareRecord, ComparisonEntry, PrescreenRecord, RecordBody, RunRecord,
+    ScenarioRecord, StudyChildRecord, StudyRecord, SweepRecord, WhatIfRecord,
 };
 pub use sink::{Format, Sink};
 

@@ -7,7 +7,7 @@ use crate::analytical::AnalyticOutputs;
 use crate::config::Params;
 use crate::model::{PolicySpec, RunOutputs};
 use crate::report::json::Json;
-use crate::stats::{metrics, Summary};
+use crate::stats::{metrics, Collector, Summary};
 use crate::sweep::{AxisValue, PointResult, SweepResult};
 use crate::trace::{event_json, Trace};
 
@@ -118,6 +118,180 @@ impl WhatIfRecord {
             "points".to_string(),
             Json::Arr(self.result.points.iter().map(point_json).collect()),
         ));
+        Json::Obj(fields)
+    }
+}
+
+/// One child of a `multi:` study: its label, the overrides it applies to
+/// the shared base config, the policy set it resolved to, and the
+/// collected outputs of all of its replications.
+#[derive(Clone)]
+pub struct StudyChildRecord {
+    pub label: String,
+    /// (axis, value) overrides on the base config — numeric parameter
+    /// names or `policies.<axis>` names, exactly the sweep-point form.
+    pub overrides: Vec<(String, AxisValue)>,
+    /// The child's fully resolved policy selection (base + overrides).
+    pub policies: PolicySpec,
+    /// Every registry metric across the child's replications.
+    pub collector: Collector,
+}
+
+impl StudyChildRecord {
+    pub fn summary(&self, metric: &str) -> Option<Summary> {
+        self.collector.summary(metric)
+    }
+
+    /// The child's overrides as a display string (empty overrides render
+    /// as the base config marker).
+    pub fn overrides_label(&self) -> String {
+        if self.overrides.is_empty() {
+            return "(base config)".into();
+        }
+        self.overrides
+            .iter()
+            .map(|(n, v)| format!("{n}={v}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// One comparison-table cell: a child's mean of one metric, with its
+/// delta against the study baseline when one is designated.
+#[derive(Clone, Copy, Debug)]
+pub struct ComparisonEntry {
+    /// Index into [`StudyRecord::children`].
+    pub child: usize,
+    pub n: usize,
+    pub mean: f64,
+    pub ci95: f64,
+    /// `mean - baseline_mean`; `None` for the baseline row itself (or
+    /// when no baseline is designated).
+    pub delta: Option<f64>,
+    /// Percent change vs the baseline mean; `None` on the baseline row,
+    /// without a baseline, or when the baseline mean is 0.
+    pub delta_pct: Option<f64>,
+}
+
+/// The combined result of a `multi:` study: per-child records plus the
+/// derived comparison table (every registry metric, delta vs baseline).
+#[derive(Clone)]
+pub struct StudyRecord {
+    pub replications: usize,
+    /// Whether all children ran on common random numbers.
+    pub crn: bool,
+    /// Index of the designated baseline child, if any.
+    pub baseline: Option<usize>,
+    pub children: Vec<StudyChildRecord>,
+}
+
+impl StudyRecord {
+    /// The baseline child's label, if a baseline is designated.
+    pub fn baseline_label(&self) -> Option<&str> {
+        self.baseline.map(|i| self.children[i].label.as_str())
+    }
+
+    /// The comparison table: for every registry metric, one entry per
+    /// child (in child order) with delta-vs-baseline columns. Children
+    /// missing a metric's summary are skipped in that metric's row set.
+    pub fn comparison(&self) -> Vec<(&'static metrics::Metric, Vec<ComparisonEntry>)> {
+        let mut table = Vec::with_capacity(metrics::REGISTRY.len());
+        for m in metrics::REGISTRY {
+            let base_mean = self
+                .baseline
+                .and_then(|i| self.children[i].summary(m.name))
+                .map(|s| s.mean);
+            let mut entries = Vec::with_capacity(self.children.len());
+            for (i, child) in self.children.iter().enumerate() {
+                let Some(s) = child.summary(m.name) else { continue };
+                let (delta, delta_pct) = match (base_mean, self.baseline) {
+                    (Some(b), Some(bi)) if bi != i => (
+                        Some(s.mean - b),
+                        (b != 0.0).then(|| (s.mean / b - 1.0) * 100.0),
+                    ),
+                    _ => (None, None),
+                };
+                entries.push(ComparisonEntry {
+                    child: i,
+                    n: s.n,
+                    mean: s.mean,
+                    ci95: s.ci95_halfwidth(),
+                    delta,
+                    delta_pct,
+                });
+            }
+            table.push((m, entries));
+        }
+        table
+    }
+
+    pub fn to_json(&self) -> Json {
+        let children = Json::Arr(
+            self.children
+                .iter()
+                .map(|c| {
+                    let metrics_obj = Json::Obj(
+                        metrics::REGISTRY
+                            .iter()
+                            .filter_map(|m| {
+                                c.summary(m.name)
+                                    .map(|s| (m.name.to_string(), summary_json(&s)))
+                            })
+                            .collect(),
+                    );
+                    Json::obj([
+                        ("label", Json::str(&c.label)),
+                        ("overrides", overrides_json(&c.overrides)),
+                        ("policies", policies_json(&c.policies)),
+                        ("metrics", metrics_obj),
+                    ])
+                })
+                .collect(),
+        );
+        let comparison = Json::Arr(
+            self.comparison()
+                .into_iter()
+                .map(|(m, entries)| {
+                    let rows = Json::Arr(
+                        entries
+                            .iter()
+                            .map(|e| {
+                                let mut fields = vec![
+                                    (
+                                        "label".to_string(),
+                                        Json::str(&self.children[e.child].label),
+                                    ),
+                                    ("mean".to_string(), Json::Num(e.mean)),
+                                    ("ci95".to_string(), Json::Num(e.ci95)),
+                                ];
+                                if let Some(d) = e.delta {
+                                    fields.push(("delta".to_string(), Json::Num(d)));
+                                }
+                                if let Some(pct) = e.delta_pct {
+                                    fields.push(("delta_pct".to_string(), Json::Num(pct)));
+                                }
+                                Json::Obj(fields)
+                            })
+                            .collect(),
+                    );
+                    Json::obj([
+                        ("metric", Json::str(m.name)),
+                        ("unit", Json::str(m.unit)),
+                        ("children", rows),
+                    ])
+                })
+                .collect(),
+        );
+        let mut fields = vec![
+            ("kind".to_string(), Json::str("study")),
+            ("replications".to_string(), self.replications.into()),
+            ("crn".to_string(), Json::Bool(self.crn)),
+        ];
+        if let Some(label) = self.baseline_label() {
+            fields.push(("baseline".to_string(), Json::str(label)));
+        }
+        fields.push(("children".to_string(), children));
+        fields.push(("comparison".to_string(), comparison));
         Json::Obj(fields)
     }
 }
@@ -268,12 +442,13 @@ pub enum RecordBody {
     Sweep(SweepRecord),
     WhatIf(WhatIfRecord),
     Compare(CompareRecord),
+    Study(StudyRecord),
 }
 
 /// A scenario outcome: metadata + the kind-specific body record.
 pub struct ScenarioRecord {
     pub title: String,
-    /// `single | sweep | whatif | inject | compare`.
+    /// `single | sweep | whatif | inject | compare | multi`.
     pub kind: &'static str,
     pub seed: u64,
     pub policies: PolicySpec,
@@ -287,6 +462,7 @@ impl ScenarioRecord {
             RecordBody::Sweep(r) => r.to_json(),
             RecordBody::WhatIf(r) => r.to_json(),
             RecordBody::Compare(r) => r.to_json(),
+            RecordBody::Study(r) => r.to_json(),
         };
         Json::obj([
             ("kind", Json::str("scenario")),
@@ -326,12 +502,11 @@ pub fn summary_json(s: &Summary) -> Json {
     ])
 }
 
-/// One sweep point: its label, typed axis overrides, and the summary of
-/// **every** registry metric at that point.
-pub fn point_json(pr: &PointResult) -> Json {
-    let overrides = Json::Obj(
-        pr.point
-            .overrides
+/// `(axis, value)` overrides as a JSON object (numeric axes as numbers,
+/// policy axes as strings) — shared by sweep points and study children.
+pub fn overrides_json(overrides: &[(String, AxisValue)]) -> Json {
+    Json::Obj(
+        overrides
             .iter()
             .map(|(n, v)| {
                 let jv = match v {
@@ -341,7 +516,13 @@ pub fn point_json(pr: &PointResult) -> Json {
                 (n.clone(), jv)
             })
             .collect(),
-    );
+    )
+}
+
+/// One sweep point: its label, typed axis overrides, and the summary of
+/// **every** registry metric at that point.
+pub fn point_json(pr: &PointResult) -> Json {
+    let overrides = overrides_json(&pr.point.overrides);
     let metrics_obj = Json::Obj(
         metrics::REGISTRY
             .iter()

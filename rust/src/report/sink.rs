@@ -10,7 +10,8 @@
 
 use crate::report::json::Json;
 use crate::report::record::{
-    CompareRecord, RecordBody, RunRecord, ScenarioRecord, SweepRecord, WhatIfRecord,
+    CompareRecord, RecordBody, RunRecord, ScenarioRecord, StudyRecord, SweepRecord,
+    WhatIfRecord,
 };
 use crate::report::{csv, text_table};
 
@@ -63,6 +64,7 @@ pub trait Sink {
     fn sweep(&self, r: &SweepRecord) -> String;
     fn whatif(&self, r: &WhatIfRecord) -> String;
     fn compare(&self, r: &CompareRecord) -> String;
+    fn study(&self, r: &StudyRecord) -> String;
     fn scenario(&self, r: &ScenarioRecord) -> String;
 }
 
@@ -140,6 +142,52 @@ fn scenario_outputs_text(r: &RunRecord) -> String {
     )
 }
 
+/// The study report: the child roster, then the combined comparison
+/// table — every registry metric, one row per child, Δ% vs the baseline.
+fn study_text(r: &StudyRecord) -> String {
+    let mut s = String::new();
+    let crn = if r.crn { "crn on" } else { "crn off" };
+    let baseline = match r.baseline_label() {
+        Some(label) => format!(", baseline {label}"),
+        None => String::new(),
+    };
+    s.push_str(&format!(
+        "study: {} children x {} replications ({crn}{baseline})\n",
+        r.children.len(),
+        r.replications
+    ));
+    s.push_str(&format!("{:<42} overrides\n", "child"));
+    for (i, c) in r.children.iter().enumerate() {
+        let mark = if Some(i) == r.baseline { "*" } else { " " };
+        s.push_str(&format!("{:<40} {mark} {}\n", c.label, c.overrides_label()));
+    }
+    s.push_str(&format!(
+        "\n== comparison — per-child means{} ==\n",
+        if r.baseline.is_some() { " (Δ% vs baseline *)" } else { "" }
+    ));
+    s.push_str(&format!(
+        "{:<24} {:<6} {:<40} {:>14} {:>12} {:>10}\n",
+        "metric", "unit", "child", "mean", "±95%CI", "Δ%"
+    ));
+    for (m, entries) in r.comparison() {
+        for (k, e) in entries.iter().enumerate() {
+            // Name the metric on its first row only: the blank rows read
+            // as one per-metric block.
+            let (name, unit) = if k == 0 { (m.name, m.unit) } else { ("", "") };
+            let delta = match e.delta_pct {
+                Some(pct) => format!("{pct:>+9.2}%"),
+                None => format!("{:>10}", "-"),
+            };
+            let mark = if Some(e.child) == r.baseline { "*" } else { " " };
+            s.push_str(&format!(
+                "{:<24} {:<6} {:<38} {mark} {:>14.3} {:>12.3} {delta}\n",
+                name, unit, r.children[e.child].label, e.mean, e.ci95
+            ));
+        }
+    }
+    s
+}
+
 fn whatif_delta_text(r: &WhatIfRecord) -> String {
     match r.delta() {
         Some((base, scaled, pct)) => format!(
@@ -176,6 +224,10 @@ impl Sink for TextSink {
         )
     }
 
+    fn study(&self, r: &StudyRecord) -> String {
+        study_text(r)
+    }
+
     fn scenario(&self, r: &ScenarioRecord) -> String {
         let mut s = format!(
             "== scenario: {} [{}] ==\npolicies: selection={} repair={} checkpoint={} failure={}\n",
@@ -196,6 +248,7 @@ impl Sink for TextSink {
             RecordBody::Sweep(sr) => s.push_str(&self.sweep(sr)),
             RecordBody::WhatIf(wr) => s.push_str(&self.whatif(wr)),
             RecordBody::Compare(cr) => s.push_str(&self.compare(cr)),
+            RecordBody::Study(st) => s.push_str(&self.study(st)),
         }
         s
     }
@@ -221,6 +274,10 @@ impl Sink for JsonSink {
     }
 
     fn compare(&self, r: &CompareRecord) -> String {
+        r.to_json().render() + "\n"
+    }
+
+    fn study(&self, r: &StudyRecord) -> String {
         r.to_json().render() + "\n"
     }
 
@@ -264,12 +321,51 @@ impl Sink for CsvSink {
         s
     }
 
+    fn study(&self, r: &StudyRecord) -> String {
+        // Standard CSV quoting for the one free-form column: child
+        // labels are user text (a label containing a comma would shift
+        // every subsequent column); metric names/units come from the
+        // registry and never need it.
+        fn csv_field(s: &str) -> String {
+            if s.contains([',', '"', '\n', '\r']) {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        }
+        // Long form: one row per (metric, child). Delta columns are empty
+        // on the baseline row and when no baseline is designated.
+        let mut s = String::from("metric,unit,child,n,mean,std,ci95,delta,delta_pct\n");
+        for (m, entries) in r.comparison() {
+            for e in &entries {
+                let std = r.children[e.child]
+                    .summary(m.name)
+                    .map(|sm| sm.std)
+                    .unwrap_or(0.0);
+                let delta = e.delta.map(|d| d.to_string()).unwrap_or_default();
+                let pct = e.delta_pct.map(|d| d.to_string()).unwrap_or_default();
+                s.push_str(&format!(
+                    "{},{},{},{},{},{},{},{delta},{pct}\n",
+                    m.name,
+                    m.unit,
+                    csv_field(&r.children[e.child].label),
+                    e.n,
+                    e.mean,
+                    std,
+                    e.ci95
+                ));
+            }
+        }
+        s
+    }
+
     fn scenario(&self, r: &ScenarioRecord) -> String {
         match &r.body {
             RecordBody::Run(rr) => self.run(rr),
             RecordBody::Sweep(sr) => self.sweep(sr),
             RecordBody::WhatIf(wr) => self.whatif(wr),
             RecordBody::Compare(cr) => self.compare(cr),
+            RecordBody::Study(st) => self.study(st),
         }
     }
 }
@@ -283,6 +379,15 @@ pub struct NdjsonSink;
 fn ndjson_line(mut fields: Vec<(String, Json)>, type_name: &str) -> String {
     fields.insert(0, ("type".to_string(), Json::str(type_name)));
     Json::Obj(fields).render() + "\n"
+}
+
+/// Field lookup on a JSON object (the study sink re-slices the record's
+/// document into per-line objects).
+fn obj_field<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    match j {
+        Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+        _ => None,
+    }
 }
 
 /// One `{"type":"point",...}` line per sweep point.
@@ -349,6 +454,31 @@ impl Sink for NdjsonSink {
         }
     }
 
+    fn study(&self, r: &StudyRecord) -> String {
+        // One `{"type":"child",...}` line per child (full summaries),
+        // then one `{"type":"comparison",...}` line per registry metric —
+        // `jq 'select(.type == "comparison")'` extracts the whole table.
+        let mut s = String::new();
+        let study_json = r.to_json();
+        if let Some(Json::Arr(children)) = obj_field(&study_json, "children") {
+            for (i, child) in children.iter().enumerate() {
+                if let Json::Obj(fields) = child {
+                    let mut fields = fields.clone();
+                    fields.insert(0, ("index".to_string(), i.into()));
+                    s.push_str(&ndjson_line(fields, "child"));
+                }
+            }
+        }
+        if let Some(Json::Arr(rows)) = obj_field(&study_json, "comparison") {
+            for row in rows {
+                if let Json::Obj(fields) = row {
+                    s.push_str(&ndjson_line(fields.clone(), "comparison"));
+                }
+            }
+        }
+        s
+    }
+
     fn scenario(&self, r: &ScenarioRecord) -> String {
         let meta = ndjson_line(
             vec![
@@ -367,6 +497,7 @@ impl Sink for NdjsonSink {
             RecordBody::Sweep(sr) => self.sweep(sr),
             RecordBody::WhatIf(wr) => self.whatif(wr),
             RecordBody::Compare(cr) => self.compare(cr),
+            RecordBody::Study(st) => self.study(st),
         };
         meta + &body
     }

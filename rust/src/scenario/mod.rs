@@ -6,30 +6,39 @@
 //! A scenario file is the YAML subset [`crate::config::yaml`] parses:
 //!
 //! ```yaml
-//! scenario: sweep            # single | sweep | whatif | inject | compare
+//! scenario: sweep            # single | sweep | whatif | inject | compare | multi
 //! title: recovery-time sensitivity
 //! seed: 42
 //! replications: 30
-//! crn: true                  # sweeps only: common random numbers
+//! crn: true                  # sweeps & studies: common random numbers
 //! params:
 //!   job_size: 64
 //!   working_pool: 72
 //! policies:
 //!   selection: locality      # first_fit | random | locality
-//!   repair: job_first        # fifo | lifo | job_first
+//!   repair: job_first        # fifo | lifo | job_first | sla_aged
 //! sweep:
 //!   kind: one_way
 //!   x: { name: recovery_time, values: [10, 20, 30] }
 //! whatif: { param: recovery_time, factor: 2 }      # whatif only
 //! inject:                                          # inject only
 //!   failures: [ { at: 100, job: 0, victim: 3, kind: systematic } ]
+//! children:                                        # multi (study) only
+//!   - label: tuned
+//!     params: { recovery_time: 10 }
+//!     policies: { selection: locality }
 //! ```
 //!
-//! `Scenario::run` executes the spec (sweeps through the batched
-//! [`crate::model::ReplicationRunner`] worker pool) and returns a typed
-//! [`ScenarioOutcome`]; [`Scenario::record`] wraps the outcome in the
-//! structured-report data model so any `--format` sink can render it
-//! (`render` is the text-sink shorthand).
+//! `Scenario::run` executes the spec (sweeps — and every child of a
+//! `multi:` study — through the shared [`crate::sweep::run_pool`] worker
+//! queue over batched [`crate::model::ReplicationRunner`]s) and returns a
+//! typed [`ScenarioOutcome`]; [`Scenario::record`] wraps the outcome in
+//! the structured-report data model so any `--format` sink can render it
+//! (`render` is the text-sink shorthand). Studies — labeled children as
+//! overrides on the shared base config, with baseline deltas and CRN —
+//! live in [`study`].
+
+pub mod study;
 
 use crate::analytical::{self, AnalyticOutputs};
 use crate::config::{validate, yaml, Params};
@@ -37,14 +46,15 @@ use crate::model::cluster::{ReplicationRunner, Simulation};
 use crate::model::events::FailureKind;
 use crate::model::{PolicySpec, RunOutputs};
 use crate::report::{
-    CompareRecord, Format, RecordBody, RunRecord, ScenarioRecord, Sink, SweepRecord,
-    WhatIfRecord,
+    CompareRecord, Format, RecordBody, RunRecord, ScenarioRecord, Sink, StudyRecord,
+    SweepRecord, WhatIfRecord,
 };
 use crate::sim::rng::Rng;
 use crate::stats::{metrics, Summary};
 use crate::sweep::{policies_from_doc, run_sweep, sweep_from_doc, Sweep, SweepResult};
 use crate::trace::inject::{Injection, InjectionPlan};
 use crate::trace::Trace;
+use study::Study;
 
 /// What kind of experiment a scenario describes.
 #[derive(Clone, Debug)]
@@ -59,6 +69,9 @@ pub enum ScenarioKind {
     Inject { failures: Vec<Injection>, trace: bool },
     /// The analytical CTMC estimate vs the DES mean over replications.
     Compare { replications: usize },
+    /// A `multi:` study: labeled children as overrides on the shared
+    /// base config, all replications drained through one worker pool.
+    Multi(Study),
 }
 
 /// A declarative experiment: parameters + named policies + kind.
@@ -80,6 +93,9 @@ pub enum ScenarioOutcome {
     WhatIf { result: SweepResult, param: String, factor: f64 },
     Inject { outputs: RunOutputs, trace: Trace },
     Compare { analytic: AnalyticOutputs, des_makespan: Summary, replications: usize },
+    /// A study's combined record (already the report data model — per-
+    /// child collectors plus the derived comparison table).
+    Study(StudyRecord),
 }
 
 impl Scenario {
@@ -178,10 +194,13 @@ impl Scenario {
                 ScenarioKind::Inject { failures, trace }
             }
             "compare" => ScenarioKind::Compare { replications: reps },
+            "multi" => ScenarioKind::Multi(study::study_from_doc(
+                doc, &params, &policies, reps,
+            )?),
             other => {
                 return Err(format!(
                     "unknown scenario kind `{other}` (expected single, sweep, whatif, \
-                     inject, or compare)"
+                     inject, compare, or multi)"
                 ))
             }
         };
@@ -189,11 +208,12 @@ impl Scenario {
         // Non-sweep kinds run exactly these policies against exactly
         // these params: an incompatible combo (e.g. `gang` with Weibull
         // clocks) fails at parse time, not mid-run. Sweeps defer to
-        // `Sweep::validate`, which checks every point *with its
-        // overrides applied* — a point may supply the very knob a policy
-        // needs (e.g. sweeping `checkpoint_interval` under
-        // `checkpoint: periodic`).
-        if !matches!(kind, ScenarioKind::Sweep(_)) {
+        // `Sweep::validate`, and studies to per-child resolution (already
+        // done in `study_from_doc`) — in both, a point/child may supply
+        // the very knob a policy needs (e.g. sweeping
+        // `checkpoint_interval` under `checkpoint: periodic`), so the
+        // bare base spec need not build.
+        if !matches!(kind, ScenarioKind::Sweep(_) | ScenarioKind::Multi(_)) {
             policies.build(&params)?;
         }
 
@@ -279,6 +299,13 @@ impl Scenario {
                     replications: *replications,
                 })
             }
+            ScenarioKind::Multi(study) => Ok(ScenarioOutcome::Study(study::run_study(
+                &self.params,
+                &self.policies,
+                study,
+                self.seed,
+                self.threads,
+            )?)),
         }
     }
 
@@ -309,6 +336,7 @@ impl Scenario {
             ScenarioOutcome::Compare { analytic, des_makespan, replications } => {
                 RecordBody::Compare(CompareRecord { analytic, des_makespan, replications })
             }
+            ScenarioOutcome::Study(record) => RecordBody::Study(record),
         };
         ScenarioRecord {
             title: self.title.clone(),
@@ -340,6 +368,7 @@ fn kind_name(kind: &ScenarioKind) -> &'static str {
         ScenarioKind::WhatIf { .. } => "whatif",
         ScenarioKind::Inject { .. } => "inject",
         ScenarioKind::Compare { .. } => "compare",
+        ScenarioKind::Multi(_) => "multi",
     }
 }
 
@@ -476,6 +505,37 @@ mod tests {
             }
             _ => panic!("expected Compare outcome"),
         }
+    }
+
+    #[test]
+    fn multi_scenario_runs_and_records() {
+        let text = format!(
+            "scenario: multi\nseed: 3\nreplications: 2\nbaseline: base\n{SMALL}\
+             children:\n  - label: base\n  - label: fast\n    params: {{ recovery_time: 5 }}\n"
+        );
+        let sc = Scenario::from_yaml(&text).unwrap();
+        match sc.run().unwrap() {
+            ScenarioOutcome::Study(rec) => {
+                assert_eq!(rec.children.len(), 2);
+                assert_eq!(rec.baseline_label(), Some("base"));
+                assert_eq!(rec.children[1].summary("makespan").unwrap().n, 2);
+            }
+            _ => panic!("expected Study outcome"),
+        }
+    }
+
+    #[test]
+    fn multi_children_may_supply_policy_knobs_the_base_lacks() {
+        // The base params carry no checkpoint interval/cost; a child that
+        // selects `periodic` supplies the interval itself — like sweep
+        // points, children are validated with their overrides applied.
+        let text = format!(
+            "scenario: multi\nseed: 3\nreplications: 1\n{SMALL}\
+             children:\n  - label: p\n    params: {{ checkpoint_interval: 120 }}\n    policies: {{ checkpoint: periodic }}\n"
+        );
+        let sc = Scenario::from_yaml(&text).unwrap();
+        assert!(matches!(sc.kind, ScenarioKind::Multi(_)));
+        assert!(sc.run().is_ok());
     }
 
     #[test]

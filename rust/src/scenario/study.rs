@@ -1,0 +1,426 @@
+//! `multi:` studies — composable scenario comparison on one shared
+//! execution pool.
+//!
+//! A study is a list of labeled children, each expressed as param/policy
+//! **overrides on the shared base config**, with an optional designated
+//! baseline and optional common random numbers:
+//!
+//! ```yaml
+//! scenario: multi
+//! title: placement x checkpoint-policy study
+//! seed: 42
+//! replications: 30
+//! crn: true                      # all children share master streams
+//! baseline: locality_periodic    # delta columns compare against this child
+//! params:                        # the shared base config
+//!   job_size: 64
+//!   checkpoint_cost: 10
+//! policies:                      # shared base policies
+//!   repair: job_first
+//! children:
+//!   - label: locality_periodic
+//!     params: { checkpoint_interval: 120 }
+//!     policies: { selection: locality, checkpoint: periodic }
+//!   - label: anti_young
+//!     policies: { selection: anti_affinity, checkpoint: young_daly }
+//! ```
+//!
+//! ## Execution: one shared work queue
+//!
+//! [`run_study`] flattens **every child's replications** into the single
+//! (unit, replication) work queue of [`crate::sweep::run_pool`] — the
+//! same [`crate::model::ReplicationRunner`] worker pool sweeps use. A
+//! 6-child study therefore saturates all cores instead of running its
+//! children serially, and results are independent of the thread count.
+//!
+//! ## Seed discipline
+//!
+//! Replication `r` of a child labeled `L` draws from
+//! `Rng::derived(seed, &[fnv1a(L), r])` — keyed by the **label**, not the
+//! child's position, so a child's outputs are byte-identical whether it
+//! runs alone or inside a larger study (reordering or deleting siblings
+//! never perturbs it). With `crn: true` the label key is replaced by the
+//! shared [`crate::sweep::CRN_STREAM`] sentinel: every child sees the
+//! same draws at replication `r` (and the same draws a CRN *sweep* with
+//! this master seed would see), the classic variance-reduction setup for
+//! estimating child-to-child differences.
+
+use crate::config::{validate, yaml, Params};
+use crate::model::cluster::Simulation;
+use crate::model::PolicySpec;
+use crate::report::record::{StudyChildRecord, StudyRecord};
+use crate::sim::rng::Rng;
+use crate::sweep::{parse_crn, run_pool, AxisValue, SweepPoint, CRN_STREAM};
+use crate::trace::Trace;
+
+/// One child of a study: a label plus overrides on the shared base.
+#[derive(Clone, Debug)]
+pub struct StudyChild {
+    pub label: String,
+    /// Numeric parameter names and `policies.<axis>` names — the sweep
+    /// point override form ([`SweepPoint::apply_full`] resolves them).
+    pub overrides: Vec<(String, AxisValue)>,
+}
+
+/// A parsed `multi:` study specification.
+#[derive(Clone, Debug)]
+pub struct Study {
+    pub children: Vec<StudyChild>,
+    /// Index of the designated `baseline:` child, if any.
+    pub baseline: Option<usize>,
+    pub replications: usize,
+    /// Common random numbers across children.
+    pub crn: bool,
+}
+
+/// FNV-1a hash of a child label: the label's stream-path key.
+fn label_key(label: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in label.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl Study {
+    /// The RNG stream for replication `rep` of child `idx`.
+    fn rng(&self, seed: u64, idx: usize, rep: usize) -> Rng {
+        let key = if self.crn { CRN_STREAM } else { label_key(&self.children[idx].label) };
+        Rng::derived(seed, &[key, rep as u64])
+    }
+
+    /// Resolve one child against the base config: overrides applied,
+    /// params range-validated, and the policy spec proven to build —
+    /// every error names the offending child.
+    fn resolve(
+        &self,
+        idx: usize,
+        base: &Params,
+        policies: &PolicySpec,
+    ) -> Result<(Params, PolicySpec), String> {
+        let child = &self.children[idx];
+        let err = |e: String| format!("study child `{}`: {e}", child.label);
+        let point = SweepPoint { overrides: child.overrides.clone() };
+        let (p, spec) = point.apply_full(base, policies).map_err(&err)?;
+        validate::validate(&p).map_err(|e| err(e.to_string()))?;
+        spec.build(&p).map_err(&err)?;
+        Ok((p, spec))
+    }
+
+    /// Resolve every child (the study-wide pre-flight: run after CLI
+    /// `--set`/`--policy` overrides land on the base, so no worker thread
+    /// ever sees a build error).
+    pub fn resolve_all(
+        &self,
+        base: &Params,
+        policies: &PolicySpec,
+    ) -> Result<Vec<(Params, PolicySpec)>, String> {
+        (0..self.children.len()).map(|i| self.resolve(i, base, policies)).collect()
+    }
+}
+
+/// Parse one child's override sections: `params:` (numeric) and
+/// `policies:` (names), in that order so labels render params-first.
+fn child_overrides(
+    item: &yaml::Value,
+    label: &str,
+    base: &Params,
+) -> Result<Vec<(String, AxisValue)>, String> {
+    let mut overrides = Vec::new();
+    if let Some(params) = item.get("params") {
+        let map = params
+            .as_map()
+            .ok_or_else(|| format!("study child `{label}`: `params:` must be a map"))?;
+        for (name, v) in map {
+            // Reject unknown names here, where the offender can be named;
+            // `apply_full` would catch them later but without the child.
+            if base.get_by_name(name).is_none() {
+                return Err(format!(
+                    "study child `{label}`: unknown parameter `{name}` in overrides"
+                ));
+            }
+            let val = v.as_f64().ok_or_else(|| {
+                format!("study child `{label}`: `{name}` needs a numeric value")
+            })?;
+            overrides.push((name.clone(), AxisValue::Num(val)));
+        }
+    }
+    if let Some(policies) = item.get("policies") {
+        let map = policies
+            .as_map()
+            .ok_or_else(|| format!("study child `{label}`: `policies:` must be a map"))?;
+        let mut probe = PolicySpec::default();
+        for (axis, v) in map {
+            let name = v.as_str().ok_or_else(|| {
+                format!("study child `{label}`: policies.{axis} must be a name")
+            })?;
+            // Validate axis + name against the registry at parse time.
+            probe
+                .set(axis, name)
+                .map_err(|e| format!("study child `{label}`: {e}"))?;
+            overrides.push((format!("policies.{axis}"), AxisValue::Name(name.into())));
+        }
+    }
+    Ok(overrides)
+}
+
+/// Build a [`Study`] from a parsed `scenario: multi` document. The
+/// `children:` list, `baseline:`, and `crn:` keys are document-level;
+/// every child is validated against the base config here, so a bad study
+/// file is one clean build error naming the offending child.
+pub fn study_from_doc(
+    doc: &yaml::Value,
+    base: &Params,
+    policies: &PolicySpec,
+    replications: usize,
+) -> Result<Study, String> {
+    let list = doc
+        .get("children")
+        .ok_or("multi scenario needs a `children:` list")?
+        .as_list()
+        .ok_or("`children:` must be a list")?;
+    if list.is_empty() {
+        return Err("multi scenario needs at least one child in `children:`".into());
+    }
+    let mut children = Vec::with_capacity(list.len());
+    for item in list {
+        let label = item
+            .get("label")
+            .and_then(|v| v.as_str())
+            .ok_or("every study child needs a `label:`")?
+            .to_string();
+        // A misspelled `params:`/`policies:` key would otherwise be
+        // silently ignored — the child would run the bare base config
+        // under its label, a 0-delta "mitigation" nobody asked for.
+        if let Some(map) = item.as_map() {
+            for key in map.keys() {
+                if !["label", "params", "policies"].contains(&key.as_str()) {
+                    return Err(format!(
+                        "study child `{label}`: unknown key `{key}` (expected \
+                         label, params, policies)"
+                    ));
+                }
+            }
+        }
+        if children.iter().any(|c: &StudyChild| c.label == label) {
+            return Err(format!("duplicate study child label `{label}`"));
+        }
+        let overrides = child_overrides(item, &label, base)?;
+        children.push(StudyChild { label, overrides });
+    }
+    let baseline = match doc.get("baseline").and_then(|v| v.as_str()) {
+        Some(label) => Some(
+            children.iter().position(|c| c.label == label).ok_or_else(|| {
+                format!(
+                    "baseline `{label}` is not a study child (children: {})",
+                    children.iter().map(|c| c.label.as_str()).collect::<Vec<_>>().join(", ")
+                )
+            })?,
+        ),
+        None => None,
+    };
+    let crn = match doc.get("crn") {
+        None => false,
+        Some(v) => parse_crn(v)?,
+    };
+    let study = Study { children, baseline, replications, crn };
+    // Every child must resolve against the base it was written for.
+    study.resolve_all(base, policies)?;
+    Ok(study)
+}
+
+/// Execute a study: every child's replications flattened into one shared
+/// [`run_pool`] work queue, collected into a [`StudyRecord`] (per-child
+/// records + the derived comparison table).
+pub fn run_study(
+    base: &Params,
+    policies: &PolicySpec,
+    study: &Study,
+    seed: u64,
+    threads: usize,
+) -> Result<StudyRecord, String> {
+    // Re-resolve against the *current* base: CLI --set/--policy overrides
+    // land after parse time, and a worker must never see a build error.
+    let resolved = study.resolve_all(base, policies)?;
+    let reps = study.replications.max(1);
+    let collectors = run_pool(study.children.len(), reps, threads, |runner, idx, rep| {
+        let (p, spec) = &resolved[idx];
+        let out = runner.run(p, spec, study.rng(seed, idx, rep));
+        (p.clone(), out)
+    });
+    Ok(StudyRecord {
+        replications: reps,
+        crn: study.crn,
+        baseline: study.baseline,
+        children: study
+            .children
+            .iter()
+            .zip(resolved.iter().zip(collectors))
+            .map(|(child, ((_, spec), collector))| StudyChildRecord {
+                label: child.label.clone(),
+                overrides: child.overrides.clone(),
+                policies: spec.clone(),
+                collector,
+            })
+            .collect(),
+    })
+}
+
+/// Capture one event timeline per child (`--trace-out` on a
+/// `replications: 1` study): replication 0 of every child re-run with
+/// tracing on. Traces never perturb draws, so these runs see exactly the
+/// streams the pooled report runs saw.
+pub fn child_timelines(
+    base: &Params,
+    policies: &PolicySpec,
+    study: &Study,
+    seed: u64,
+) -> Result<Vec<(String, Trace)>, String> {
+    let resolved = study.resolve_all(base, policies)?;
+    let mut out = Vec::with_capacity(study.children.len());
+    for (idx, (p, spec)) in resolved.iter().enumerate() {
+        let (_, trace) = Simulation::from_spec(p, spec, study.rng(seed, idx, 0))?
+            .with_trace()
+            .run_traced();
+        out.push((study.children[idx].label.clone(), trace));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Params {
+        Params::small_test()
+    }
+
+    fn parse(doc: &str) -> Result<Study, String> {
+        study_from_doc(
+            &yaml::parse(doc).unwrap(),
+            &base(),
+            &PolicySpec::default(),
+            4,
+        )
+    }
+
+    #[test]
+    fn parses_children_baseline_and_crn() {
+        let s = parse(
+            "crn: true\nbaseline: b\nchildren:\n\
+             - label: a\n  params: { recovery_time: 10 }\n\
+             - label: b\n  policies: { selection: locality }\n",
+        )
+        .unwrap();
+        assert_eq!(s.children.len(), 2);
+        assert!(s.crn);
+        assert_eq!(s.baseline, Some(1));
+        assert_eq!(
+            s.children[0].overrides,
+            vec![("recovery_time".to_string(), AxisValue::Num(10.0))]
+        );
+        assert_eq!(
+            s.children[1].overrides,
+            vec![("policies.selection".to_string(), AxisValue::Name("locality".into()))]
+        );
+    }
+
+    #[test]
+    fn error_paths_name_the_offender() {
+        // Empty child list.
+        let err = parse("children: []\n").unwrap_err();
+        assert!(err.contains("at least one child"), "{err}");
+        // Missing children key entirely.
+        let err = parse("seed: 1\n").unwrap_err();
+        assert!(err.contains("children"), "{err}");
+        // Duplicate labels.
+        let err = parse("children:\n- label: x\n- label: x\n").unwrap_err();
+        assert!(err.contains("duplicate") && err.contains('x'), "{err}");
+        // Unknown baseline label.
+        let err = parse("baseline: nope\nchildren:\n- label: x\n").unwrap_err();
+        assert!(err.contains("nope") && err.contains('x'), "{err}");
+        // Unknown parameter in a child override.
+        let err =
+            parse("children:\n- label: x\n  params: { bogus_knob: 3 }\n").unwrap_err();
+        assert!(err.contains('x') && err.contains("bogus_knob"), "{err}");
+        // Unknown policy name in a child override.
+        let err =
+            parse("children:\n- label: x\n  policies: { selection: bogus }\n").unwrap_err();
+        assert!(err.contains('x') && err.contains("bogus"), "{err}");
+        // A child whose resolved policies cannot build (anti_affinity
+        // without a topology) is caught at parse time, naming the child.
+        let err = parse("children:\n- label: x\n  policies: { selection: anti_affinity }\n")
+            .unwrap_err();
+        assert!(err.contains('x') && err.contains("topology"), "{err}");
+        // A child whose resolved params fail range validation.
+        let err =
+            parse("children:\n- label: x\n  params: { auto_repair_prob: 1.5 }\n").unwrap_err();
+        assert!(err.contains('x') && err.contains("auto_repair_prob"), "{err}");
+        // Misspelled crn is an error, not independent streams.
+        let err = parse("crn: ture\nchildren:\n- label: x\n").unwrap_err();
+        assert!(err.contains("crn"), "{err}");
+        // A misspelled override section must not silently run the base
+        // config under the child's label.
+        let err = parse("children:\n- label: x\n  polices: { selection: locality }\n")
+            .unwrap_err();
+        assert!(err.contains("`x`") && err.contains("polices"), "{err}");
+    }
+
+    #[test]
+    fn label_keyed_streams_are_position_independent() {
+        let draws = |mut rng: Rng| -> Vec<u64> { (0..4).map(|_| rng.next_u64()).collect() };
+        let study = parse(
+            "children:\n- label: a\n- label: b\n  params: { recovery_time: 40 }\n",
+        )
+        .unwrap();
+        // Child `b`'s stream does not depend on its index.
+        let solo = parse("children:\n- label: b\n  params: { recovery_time: 40 }\n").unwrap();
+        assert_eq!(draws(study.rng(7, 1, 3)), draws(solo.rng(7, 0, 3)));
+        // Distinct labels get distinct streams...
+        assert_ne!(draws(study.rng(7, 0, 3)), draws(study.rng(7, 1, 3)));
+        // ...unless CRN collapses them onto the shared sentinel stream.
+        let mut crn = study.clone();
+        crn.crn = true;
+        assert_eq!(draws(crn.rng(7, 0, 3)), draws(crn.rng(7, 1, 3)));
+    }
+
+    #[test]
+    fn run_study_collects_every_child() {
+        let study = parse(
+            "baseline: slow\nchildren:\n\
+             - label: slow\n  params: { recovery_time: 60 }\n\
+             - label: fast\n  params: { recovery_time: 5 }\n",
+        )
+        .unwrap();
+        let rec = run_study(&base(), &PolicySpec::default(), &study, 42, 2).unwrap();
+        assert_eq!(rec.children.len(), 2);
+        assert_eq!(rec.baseline_label(), Some("slow"));
+        for c in &rec.children {
+            assert_eq!(c.summary("makespan").unwrap().n, 4);
+        }
+        // The comparison carries a delta for the non-baseline child only.
+        let (m, entries) = &rec.comparison()[0];
+        assert_eq!(m.name, "makespan");
+        assert_eq!(entries.len(), 2);
+        assert!(entries[0].delta.is_none(), "baseline row has no delta");
+        assert!(entries[1].delta.is_some());
+    }
+
+    #[test]
+    fn crn_children_with_equal_overrides_are_identical() {
+        let study = parse(
+            "crn: true\nchildren:\n- label: a\n- label: also_a\n",
+        )
+        .unwrap();
+        let rec = run_study(&base(), &PolicySpec::default(), &study, 11, 0).unwrap();
+        for m in crate::stats::metrics::REGISTRY {
+            assert_eq!(
+                rec.children[0].summary(m.name),
+                rec.children[1].summary(m.name),
+                "CRN twins diverged on {}",
+                m.name
+            );
+        }
+    }
+}

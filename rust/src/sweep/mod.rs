@@ -251,6 +251,19 @@ pub fn policies_from_doc(doc: &crate::config::yaml::Value) -> Result<PolicySpec,
     Ok(spec)
 }
 
+/// Strict boolean parse of a `crn:` value. A misspelling must not
+/// silently run a comparison on independent streams, so anything outside
+/// the standard spellings is an error, not `false`. Shared by the
+/// `sweep:` parser and the `multi:` study parser.
+pub fn parse_crn(v: &crate::config::yaml::Value) -> Result<bool, String> {
+    let s = v.as_str().unwrap_or("");
+    match s.to_ascii_lowercase().as_str() {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        other => Err(format!("bad `crn:` value `{other}` (expected true or false)")),
+    }
+}
+
 /// Build a sweep from a parsed config document's `sweep:` section
 /// (§III-D's experiment files). Axes are numeric parameters or
 /// `policies.<axis>` names; `crn: true` (top-level, or inside the
@@ -324,25 +337,13 @@ pub fn sweep_from_doc(
     // here — policy resolution (doc section + CLI overrides + build
     // validation) has one owner per entry point, which then calls
     // [`Sweep::with_policies`]. See `policies_from_doc`.
-    // Strict boolean: a misspelled `crn:` must not silently run the
-    // comparison on independent streams. Accepted at the document top
-    // level or inside the `sweep:` section — both placements are
-    // natural, and the unused one being silently ignored would be the
-    // exact failure mode the strict parse exists to prevent.
+    // Accepted at the document top level or inside the `sweep:` section —
+    // both placements are natural, and the unused one being silently
+    // ignored would be the exact failure mode the strict parse exists to
+    // prevent.
     let crn = match doc.get("crn").or_else(|| sweep.get("crn")) {
         None => false,
-        Some(v) => {
-            let s = v.as_str().unwrap_or("");
-            match s.to_ascii_lowercase().as_str() {
-                "true" | "1" | "yes" | "on" => true,
-                "false" | "0" | "no" | "off" => false,
-                other => {
-                    return Err(format!(
-                        "bad `crn:` value `{other}` (expected true or false)"
-                    ))
-                }
-            }
-        }
+        Some(v) => parse_crn(v)?,
     };
     let kind = sweep.get("kind").and_then(|v| v.as_str()).unwrap_or("one_way");
     let built = match kind {
@@ -403,7 +404,7 @@ fn run_one(
     // CRN: drop the point index from the stream path so every point sees
     // the same draws at replication `rep`.
     let rng = if sweep.crn {
-        Rng::derived(sweep.master_seed, &[u64::MAX, rep as u64])
+        Rng::derived(sweep.master_seed, &[CRN_STREAM, rep as u64])
     } else {
         Rng::derived(sweep.master_seed, &[point_idx as u64, rep as u64])
     };
@@ -411,14 +412,31 @@ fn run_one(
     (p, out)
 }
 
-/// Execute a sweep, parallelizing (point, replication) tasks over
-/// `threads` OS threads (0 = available parallelism). Each worker owns one
-/// [`ReplicationRunner`], so simulation state is reset — not reallocated —
-/// between that worker's replications.
-pub fn run_sweep(base: &Params, sweep: &Sweep, threads: usize) -> SweepResult {
-    let n_points = sweep.points.len();
-    let reps = sweep.replications.max(1);
-    let total = n_points * reps;
+/// The sentinel stream-path element common random numbers substitute for
+/// the per-unit index: every sweep point (and every study child) derives
+/// replication `r` from `Rng::derived(master, &[CRN_STREAM, r])`, so CRN
+/// comparisons across *different* experiment shapes share draws too.
+pub const CRN_STREAM: u64 = u64::MAX;
+
+/// The shared execution pool: drain `n_units * reps` (unit, replication)
+/// tasks through `threads` OS threads (0 = available parallelism), each
+/// worker owning one [`ReplicationRunner`] so simulation state is reset —
+/// not reallocated — between that worker's tasks. Returns one filled
+/// [`Collector`] per unit, in unit order.
+///
+/// This is the one worker pool behind every batched experiment shape:
+/// [`run_sweep`] drains sweep points through it, and a `multi:` study
+/// ([`crate::scenario::study`]) flattens *all* of its children's
+/// replications into this single queue — a 6-child study saturates every
+/// core instead of running children serially. Results are independent of
+/// the thread count by construction (each task's stream is derived from
+/// its `(unit, rep)` identity, and collectors sort before reducing).
+pub fn run_pool<F>(n_units: usize, reps: usize, threads: usize, run: F) -> Vec<Collector>
+where
+    F: Fn(&mut ReplicationRunner, usize, usize) -> (Params, RunOutputs) + Sync,
+{
+    let reps = reps.max(1);
+    let total = n_units * reps;
 
     let threads = if threads == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -427,10 +445,10 @@ pub fn run_sweep(base: &Params, sweep: &Sweep, threads: usize) -> SweepResult {
     }
     .min(total.max(1));
 
-    // Work queue: flat task index -> (point, replication).
+    // Work queue: flat task index -> (unit, replication).
     let next = AtomicUsize::new(0);
     let collectors: Vec<Mutex<Collector>> =
-        (0..n_points).map(|_| Mutex::new(Collector::new())).collect();
+        (0..n_units).map(|_| Mutex::new(Collector::new())).collect();
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
@@ -441,16 +459,26 @@ pub fn run_sweep(base: &Params, sweep: &Sweep, threads: usize) -> SweepResult {
                     if task >= total {
                         break;
                     }
-                    let point_idx = task / reps;
+                    let unit = task / reps;
                     let rep = task % reps;
-                    let (p, out) = run_one(&mut runner, base, sweep, point_idx, rep);
-                    let mut c = collectors[point_idx].lock().unwrap();
+                    let (p, out) = run(&mut runner, unit, rep);
+                    let mut c = collectors[unit].lock().unwrap();
                     collect_outputs(&mut c, &p, &out);
                 }
             });
         }
     });
 
+    collectors.into_iter().map(|c| c.into_inner().unwrap()).collect()
+}
+
+/// Execute a sweep over the shared execution pool ([`run_pool`]).
+pub fn run_sweep(base: &Params, sweep: &Sweep, threads: usize) -> SweepResult {
+    let reps = sweep.replications.max(1);
+    let collectors =
+        run_pool(sweep.points.len(), reps, threads, |runner, point_idx, rep| {
+            run_one(runner, base, sweep, point_idx, rep)
+        });
     SweepResult {
         title: sweep.title.clone(),
         points: sweep
@@ -458,7 +486,7 @@ pub fn run_sweep(base: &Params, sweep: &Sweep, threads: usize) -> SweepResult {
             .iter()
             .cloned()
             .zip(collectors)
-            .map(|(point, c)| PointResult { point, collector: c.into_inner().unwrap() })
+            .map(|(point, collector)| PointResult { point, collector })
             .collect(),
     }
 }

@@ -17,6 +17,13 @@ fn airesim(args: &[&str]) -> (String, String, bool) {
     )
 }
 
+fn obj_get<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    match j {
+        Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+        _ => None,
+    }
+}
+
 /// Small, fast override set reused across tests.
 const SMALL: &str = "job_size=32,working_pool=40,spare_pool=8,warm_standbys=4,job_len=1440,random_failure_rate=0.5/1440,systematic_failure_rate=2.5/1440";
 
@@ -144,9 +151,80 @@ fn list_policies_covers_every_axis() {
         "young_daly",
         "adaptive",
         "tiered",
+        "sla_aged",
     ] {
         assert!(out.contains(name), "list-policies missing {name}");
     }
+}
+
+#[test]
+fn scenario_study_from_file_renders_comparison() {
+    // Scale the shipped study down (fewer reps) via a temp copy.
+    let cfg = std::env::temp_dir().join("airesim_study_scenario.yaml");
+    let text = std::fs::read_to_string("configs/scenario_study.yaml")
+        .unwrap()
+        .replace("replications: 8", "replications: 2");
+    std::fs::write(&cfg, text).unwrap();
+    let (out, err, ok) = airesim(&["scenario", "--config", cfg.to_str().unwrap()]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("[multi]"), "{out}");
+    assert!(out.contains("baseline locality_periodic"), "{out}");
+    assert!(out.contains("anti_affinity_young_daly"), "{out}");
+
+    // JSON mode: one parseable document carrying the comparison table.
+    let (out, err, ok) = airesim(&[
+        "scenario",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--format",
+        "json",
+    ]);
+    let _ = std::fs::remove_file(&cfg);
+    assert!(ok, "stderr: {err}");
+    let doc = parse_json(out.trim_end()).unwrap();
+    let result = obj_get(&doc, "result").expect("result key");
+    assert!(obj_get(result, "comparison").is_some(), "{out}");
+}
+
+#[test]
+fn scenario_study_trace_out_needs_single_style_children() {
+    // The shipped study runs 8 replications: --trace-out refuses.
+    let (_, err, ok) = airesim(&[
+        "scenario",
+        "--config",
+        "configs/scenario_study.yaml",
+        "--trace-out",
+        "-",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("replications: 1"), "stderr: {err}");
+
+    // With replications 1 it writes one labeled timeline per child.
+    let cfg = std::env::temp_dir().join("airesim_study_trace.yaml");
+    let text = std::fs::read_to_string("configs/scenario_study.yaml")
+        .unwrap()
+        .replace("replications: 8", "replications: 1");
+    std::fs::write(&cfg, text).unwrap();
+    let trace = std::env::temp_dir().join("airesim_study_trace.ndjson");
+    let (_, err, ok) = airesim(&[
+        "scenario",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--trace-out",
+        trace.to_str().unwrap(),
+    ]);
+    let _ = std::fs::remove_file(&cfg);
+    assert!(ok, "stderr: {err}");
+    let timeline = std::fs::read_to_string(&trace).unwrap();
+    let _ = std::fs::remove_file(&trace);
+    let mut separators = 0;
+    for line in timeline.trim_end().lines() {
+        let doc = parse_json(line).unwrap_or_else(|e| panic!("bad line `{line}`: {e}"));
+        if obj_get(&doc, "type") == Some(&Json::str("child-timeline")) {
+            separators += 1;
+        }
+    }
+    assert_eq!(separators, 4, "one separator per child");
 }
 
 #[test]

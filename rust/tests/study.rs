@@ -1,0 +1,265 @@
+//! Acceptance suite for `multi:` studies (the composable-scenario API):
+//!
+//! * the shipped study config parses, runs, and renders in all four
+//!   formats (one combined comparison record per invocation);
+//! * a child's per-child outputs are byte-equal to running that child
+//!   standalone on the same seed (label-keyed streams);
+//! * study results are byte-equal across worker thread counts (the
+//!   shared-pool analogue of the sweep equality test);
+//! * YAML error paths are clean build errors naming the offender.
+
+use airesim::model::PolicySpec;
+use airesim::report::json::Json;
+use airesim::report::{Format, Sink};
+use airesim::scenario::study::{run_study, Study, StudyChild};
+use airesim::scenario::{Scenario, ScenarioKind, ScenarioOutcome};
+use airesim::stats::metrics;
+use airesim::testkit::parse_json;
+
+const SMALL: &str = "params:\n  job_size: 32\n  working_pool: 40\n  spare_pool: 8\n  warm_standbys: 4\n  job_len: 1440\n  random_failure_rate: 0.5/1440\n  systematic_failure_rate: 2.5/1440\n";
+
+fn obj_get<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    match j {
+        Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+        _ => None,
+    }
+}
+
+fn four_child_study_yaml() -> String {
+    format!(
+        "scenario: multi\ntitle: study test\nseed: 9\nreplications: 3\nbaseline: slow\n{SMALL}\
+         children:\n\
+         \x20 - label: slow\n    params: {{ recovery_time: 60 }}\n\
+         \x20 - label: fast\n    params: {{ recovery_time: 5 }}\n\
+         \x20 - label: packed\n    policies: {{ selection: locality }}\n\
+         \x20 - label: aged\n    policies: {{ repair: sla_aged }}\n    params: {{ repair_sla_minutes: 120 }}\n"
+    )
+}
+
+fn run_four_child(threads: usize) -> airesim::report::StudyRecord {
+    let mut sc = Scenario::from_yaml(&four_child_study_yaml()).unwrap();
+    sc.threads = threads;
+    match sc.run().unwrap() {
+        ScenarioOutcome::Study(rec) => rec,
+        _ => panic!("expected Study outcome"),
+    }
+}
+
+#[test]
+fn shipped_study_config_parses_and_runs() {
+    let text = std::fs::read_to_string("configs/scenario_study.yaml").unwrap();
+    let sc = Scenario::from_yaml(&text).unwrap();
+    let ScenarioKind::Multi(study) = &sc.kind else { panic!("expected multi kind") };
+    assert_eq!(study.children.len(), 4);
+    assert!(study.crn);
+    assert_eq!(study.baseline, Some(0));
+    let ScenarioOutcome::Study(rec) = sc.run().unwrap() else { panic!() };
+    assert_eq!(rec.baseline_label(), Some("locality_periodic"));
+    for c in &rec.children {
+        assert_eq!(c.summary("makespan").unwrap().n, 8, "{}", c.label);
+    }
+    // The interesting joint signal exists: young_daly children commit
+    // checkpoints (the periodic children do too, on the fixed grid).
+    for c in &rec.children {
+        assert!(
+            c.summary("checkpoints_committed").unwrap().mean > 0.0,
+            "{} committed nothing",
+            c.label
+        );
+    }
+}
+
+#[test]
+fn study_renders_in_all_four_formats() {
+    let sc = Scenario::from_yaml(&four_child_study_yaml()).unwrap();
+    let outcome = sc.run().unwrap();
+    let record = sc.record(&outcome);
+
+    // Text: roster + one comparison block per metric, baseline marked.
+    let text = Format::Text.sink().scenario(&record);
+    assert!(text.contains("== scenario: study test [multi] =="), "{text}");
+    assert!(text.contains("study: 4 children x 3 replications"), "{text}");
+    assert!(text.contains("baseline slow"), "{text}");
+    for label in ["slow", "fast", "packed", "aged"] {
+        assert!(text.contains(label), "text misses child {label}: {text}");
+    }
+    assert!(text.contains("Δ%"), "{text}");
+
+    // JSON: one document; children carry every registry metric summary,
+    // the comparison carries every registry metric row.
+    let doc = parse_json(Format::Json.sink().scenario(&record).trim_end()).unwrap();
+    assert_eq!(obj_get(&doc, "scenario"), Some(&Json::str("multi")));
+    let result = obj_get(&doc, "result").unwrap();
+    assert_eq!(obj_get(result, "baseline"), Some(&Json::str("slow")));
+    let Some(Json::Arr(children)) = obj_get(result, "children") else { panic!() };
+    assert_eq!(children.len(), 4);
+    for child in children {
+        let m = obj_get(child, "metrics").unwrap();
+        for name in metrics::names() {
+            assert!(obj_get(m, name).is_some(), "child json missing {name}");
+        }
+        assert!(obj_get(child, "policies").is_some());
+    }
+    let Some(Json::Arr(rows)) = obj_get(result, "comparison") else { panic!() };
+    assert_eq!(rows.len(), metrics::REGISTRY.len());
+    let Some(Json::Arr(first)) = obj_get(&rows[0], "children") else { panic!() };
+    assert_eq!(first.len(), 4);
+    assert!(obj_get(&first[0], "delta").is_none(), "baseline row carries no delta");
+    assert!(obj_get(&first[1], "delta").is_some(), "non-baseline rows carry deltas");
+
+    // CSV: long form, one row per (metric, child).
+    let csv = Format::Csv.sink().scenario(&record);
+    let mut lines = csv.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "metric,unit,child,n,mean,std,ci95,delta,delta_pct"
+    );
+    assert_eq!(csv.lines().count(), 1 + metrics::REGISTRY.len() * 4);
+    assert!(csv.contains("\nmakespan,min,slow,3,"), "{csv}");
+
+    // NDJSON: meta + 4 child lines + one comparison line per metric,
+    // every line independently parseable.
+    let nd = Format::Ndjson.sink().scenario(&record);
+    let mut counts = std::collections::BTreeMap::new();
+    for line in nd.trim_end().lines() {
+        let doc = parse_json(line).unwrap_or_else(|e| panic!("bad line `{line}`: {e}"));
+        let Some(Json::Str(t)) = obj_get(&doc, "type") else { panic!("untyped line") };
+        *counts.entry(t.clone()).or_insert(0usize) += 1;
+    }
+    assert_eq!(counts.get("scenario"), Some(&1));
+    assert_eq!(counts.get("child"), Some(&4));
+    assert_eq!(counts.get("comparison"), Some(&metrics::REGISTRY.len()));
+}
+
+/// The acceptance property: a child's outputs inside a study are
+/// byte-equal to running that child standalone (a one-child study on the
+/// same seed) — label-keyed streams make siblings invisible.
+#[test]
+fn study_children_byte_equal_standalone_runs() {
+    let full = run_four_child(2);
+    for child in ["slow", "fast", "packed", "aged"] {
+        let idx = full.children.iter().position(|c| c.label == child).unwrap();
+        let solo_spec = Study {
+            children: vec![StudyChild {
+                label: child.into(),
+                overrides: full.children[idx].overrides.clone(),
+            }],
+            baseline: None,
+            replications: 3,
+            crn: false,
+        };
+        let sc = Scenario::from_yaml(&four_child_study_yaml()).unwrap();
+        let solo = run_study(&sc.params, &PolicySpec::default(), &solo_spec, 9, 1).unwrap();
+        for m in metrics::REGISTRY {
+            assert_eq!(
+                full.children[idx].summary(m.name),
+                solo.children[0].summary(m.name),
+                "child {child} metric {} diverged from its standalone run",
+                m.name
+            );
+        }
+    }
+}
+
+/// The cross-thread-count equality test, extended to studies: the shared
+/// work queue interleaves children arbitrarily across workers, but every
+/// collected metric must agree bit-for-bit.
+#[test]
+fn study_outputs_identical_across_thread_counts() {
+    let a = run_four_child(1);
+    let b = run_four_child(4);
+    for (ca, cb) in a.children.iter().zip(&b.children) {
+        assert_eq!(ca.label, cb.label);
+        for m in metrics::REGISTRY {
+            assert_eq!(
+                ca.summary(m.name),
+                cb.summary(m.name),
+                "child {} metric {} diverged across thread counts",
+                ca.label,
+                m.name
+            );
+        }
+    }
+}
+
+/// CRN puts every child on the same master streams: two children with
+/// identical overrides become bit-identical, and the whole study stays
+/// thread-count independent.
+#[test]
+fn crn_study_twins_are_bit_identical() {
+    let text = format!(
+        "scenario: multi\nseed: 5\nreplications: 3\ncrn: true\n{SMALL}\
+         children:\n  - label: a\n  - label: twin_of_a\n  - label: fast\n    params: {{ recovery_time: 5 }}\n"
+    );
+    let sc = Scenario::from_yaml(&text).unwrap();
+    let ScenarioOutcome::Study(rec) = sc.run().unwrap() else { panic!() };
+    for m in metrics::REGISTRY {
+        assert_eq!(
+            rec.children[0].summary(m.name),
+            rec.children[1].summary(m.name),
+            "CRN twins diverged on {}",
+            m.name
+        );
+    }
+}
+
+/// Every `multi:` YAML error path is a clean parse-time error naming the
+/// offender (through the full Scenario::from_yaml entry point).
+#[test]
+fn study_yaml_error_paths() {
+    let parse = |body: &str| {
+        Scenario::from_yaml(&format!("scenario: multi\n{SMALL}{body}")).unwrap_err()
+    };
+    // Empty child list.
+    let err = parse("children: []\n");
+    assert!(err.contains("at least one child"), "{err}");
+    // Duplicate child labels.
+    let err = parse("children:\n  - label: x\n  - label: x\n");
+    assert!(err.contains("duplicate") && err.contains("`x`"), "{err}");
+    // Unknown baseline label (the error lists the real children).
+    let err = parse("baseline: bogus\nchildren:\n  - label: x\n  - label: y\n");
+    assert!(err.contains("bogus") && err.contains('y'), "{err}");
+    // Child overriding a nonexistent param.
+    let err = parse("children:\n  - label: x\n    params: { not_a_knob: 1 }\n");
+    assert!(err.contains("`x`") && err.contains("not_a_knob"), "{err}");
+    // Child policy that cannot build against its resolved params.
+    let err = parse("children:\n  - label: x\n    policies: { checkpoint: young_daly }\n");
+    assert!(err.contains("`x`") && err.contains("checkpoint_cost"), "{err}");
+    // A label-less child.
+    let err = parse("children:\n  - params: { recovery_time: 5 }\n");
+    assert!(err.contains("label"), "{err}");
+    // A misspelled override section (would silently run the base config).
+    let err = parse("children:\n  - label: x\n    parms: { recovery_time: 5 }\n");
+    assert!(err.contains("`x`") && err.contains("parms"), "{err}");
+}
+
+/// Free-form child labels survive the CSV sink: a label containing a
+/// comma is quoted, not split across columns.
+#[test]
+fn csv_quotes_free_form_child_labels() {
+    let text = format!(
+        "scenario: multi\nseed: 2\nreplications: 1\n{SMALL}\
+         children:\n  - label: \"locality, tuned\"\n"
+    );
+    let sc = Scenario::from_yaml(&text).unwrap();
+    let outcome = sc.run().unwrap();
+    let csv = Format::Csv.sink().scenario(&sc.record(&outcome));
+    let row = csv.lines().nth(1).unwrap();
+    assert!(row.starts_with("makespan,min,\"locality, tuned\",1,"), "{row}");
+}
+
+/// Base `policies:` apply to every child; child `policies:` override per
+/// axis (visible in the per-child resolved spec of the record).
+#[test]
+fn base_policies_compose_with_child_overrides() {
+    let text = format!(
+        "scenario: multi\nseed: 2\nreplications: 1\n{SMALL}\
+         policies:\n  repair: job_first\n\
+         children:\n  - label: inherit\n  - label: override\n    policies: {{ repair: lifo }}\n"
+    );
+    let sc = Scenario::from_yaml(&text).unwrap();
+    let ScenarioOutcome::Study(rec) = sc.run().unwrap() else { panic!() };
+    assert_eq!(rec.children[0].policies.repair, "job_first");
+    assert_eq!(rec.children[1].policies.repair, "lifo");
+    assert_eq!(rec.children[1].policies.selection, "first_fit", "other axes inherited");
+}
