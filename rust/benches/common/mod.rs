@@ -1,9 +1,17 @@
 //! Shared measurement kit for the bench harnesses (criterion is not in
 //! the offline vendor set; these benches are `harness = false` binaries
 //! that print the paper's tables/series plus wall-clock timings).
+//!
+//! Machine-readable mode: set `AIRESIM_BENCH_JSON=<path>` (or pass
+//! `--json <path>` after `--`) and every bench that carries a
+//! [`BenchRecorder`] appends its timings to that file as one JSON array —
+//! the committed `BENCH_*.json` perf-trajectory baselines are produced
+//! this way (delete the file first to regenerate from scratch).
 
 #![allow(dead_code)] // each bench uses a subset of these helpers
 
+use airesim::report::json::Json;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// Replications per sweep point (override: AIRESIM_BENCH_REPS).
@@ -36,4 +44,110 @@ pub fn median_time(n: usize, mut f: impl FnMut()) -> f64 {
 
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Machine-readable timing sink: collects one JSON object per measurement
+/// and merges them into a single top-level JSON array on [`flush`].
+/// Inactive (every call a no-op) unless `AIRESIM_BENCH_JSON` or a
+/// `--json <path>` argument names the output file, so plain bench runs
+/// keep their text-only behavior.
+///
+/// [`flush`]: BenchRecorder::flush
+pub struct BenchRecorder {
+    bench: &'static str,
+    path: Option<PathBuf>,
+    rows: Vec<Json>,
+}
+
+impl BenchRecorder {
+    /// `bench` tags every record with the emitting harness (`"engine"`,
+    /// `"table1"`, ...) so several benches can share one trajectory file.
+    pub fn new(bench: &'static str) -> BenchRecorder {
+        let mut path = std::env::var("AIRESIM_BENCH_JSON").ok().map(PathBuf::from);
+        // `cargo bench --bench engine -- --json out.json`
+        let args: Vec<String> = std::env::args().collect();
+        for (i, a) in args.iter().enumerate() {
+            if a == "--json" {
+                if let Some(p) = args.get(i + 1) {
+                    path = Some(PathBuf::from(p));
+                }
+            }
+        }
+        BenchRecorder { bench, path, rows: Vec::new() }
+    }
+
+    /// Is a JSON sink configured?
+    pub fn active(&self) -> bool {
+        self.path.is_some()
+    }
+
+    /// Record one measurement. `events_per_sec` is derived from
+    /// `events_delivered / wall_seconds`; pass 0 events for measurements
+    /// where only wall time is meaningful.
+    pub fn record(
+        &mut self,
+        name: &str,
+        fleet_size: u64,
+        events_delivered: u64,
+        events_scheduled: u64,
+        wall_seconds: f64,
+    ) {
+        if self.path.is_none() {
+            return;
+        }
+        let eps = if wall_seconds > 0.0 {
+            events_delivered as f64 / wall_seconds
+        } else {
+            0.0
+        };
+        self.rows.push(Json::obj([
+            ("bench", Json::str(self.bench)),
+            ("name", Json::str(name)),
+            ("fleet_size", Json::from(fleet_size)),
+            ("events_delivered", Json::from(events_delivered)),
+            ("events_scheduled", Json::from(events_scheduled)),
+            ("wall_seconds", Json::Num(wall_seconds)),
+            ("events_per_sec", Json::Num(eps)),
+        ]));
+    }
+
+    /// Merge this run's records into the output file, preserving any
+    /// records already there (so `engine` then `table1` produce one valid
+    /// array). The file stays a single top-level JSON array with one
+    /// compact object per line — `python3 -m json.tool` validates it,
+    /// `jq` slices it.
+    pub fn flush(&mut self) {
+        let Some(path) = self.path.clone() else { return };
+        if self.rows.is_empty() {
+            return;
+        }
+        // Pull existing entries out of a previous `[ ... ]` document.
+        let existing = std::fs::read_to_string(&path).ok().and_then(|s| {
+            let t = s.trim();
+            let inner = t.strip_prefix('[')?.strip_suffix(']')?.trim();
+            (!inner.is_empty()).then(|| inner.to_string())
+        });
+        let mut body = String::new();
+        if let Some(inner) = existing {
+            body.push_str(&inner);
+            body.push_str(",\n");
+        }
+        let fresh: Vec<String> = self.rows.iter().map(Json::render).collect();
+        body.push_str(&fresh.join(",\n"));
+        let doc = format!("[\n{body}\n]\n");
+        match std::fs::write(&path, doc) {
+            Ok(()) => eprintln!(
+                "bench[{}]: appended {} records to {}",
+                self.bench,
+                self.rows.len(),
+                path.display()
+            ),
+            Err(e) => eprintln!(
+                "bench[{}]: FAILED to write {}: {e}",
+                self.bench,
+                path.display()
+            ),
+        }
+        self.rows.clear();
+    }
 }

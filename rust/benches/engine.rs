@@ -1,47 +1,104 @@
 //! Bench: DES core throughput — the §Perf numbers for Layer 3.
 //!
-//! * event-queue micro: schedule+pop ops/s at several heap depths
-//! * end-to-end events/s on the Table-I run
-//! * gang fast path vs per-server failure clocks (the headline
-//!   optimization recorded in EXPERIMENTS.md §Perf)
+//! * event-queue micro: schedule+pop ops/s at several depths, calendar
+//!   queue vs binary heap
+//! * end-to-end events/s on the Table-I run under both queue kinds
+//! * gang fast path vs per-server failure clocks (the original headline
+//!   optimization), plus thinned vs per-server clocks on a large Weibull
+//!   fleet (this PR's headline: aggregate clocks for non-exponential
+//!   families)
 //!
 //! ```bash
 //! cargo bench --bench engine
+//! # machine-readable trajectory (see BENCH_PR6.json):
+//! AIRESIM_BENCH_JSON=BENCH_PR6.json cargo bench --bench engine
+//! # CI smoke scale:
+//! AIRESIM_BENCH_REPS=1 AIRESIM_BENCH_FLEET=512 cargo bench --bench engine
 //! ```
 
 mod common;
 
-use airesim::config::Params;
+use airesim::config::{DistKind, Params};
 use airesim::model::cluster::Simulation;
-use airesim::sim::engine::Engine;
+use airesim::model::PolicySpec;
+use airesim::sim::engine::{Engine, QueueKind};
 use airesim::sim::rng::Rng;
-use common::{header, median_time, timed};
+use common::{bench_reps, header, median_time, timed, BenchRecorder};
+
+fn kind_name(kind: QueueKind) -> &'static str {
+    match kind {
+        QueueKind::Calendar => "calendar",
+        QueueKind::Heap => "heap",
+    }
+}
+
+/// Weibull fleet size for the thinning section (override:
+/// AIRESIM_BENCH_FLEET; CI smoke uses a small value).
+fn bench_fleet(default: u32) -> u32 {
+    std::env::var("AIRESIM_BENCH_FLEET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
 
 fn main() {
-    header("Event-queue micro: schedule+pop throughput");
-    for depth in [1_000usize, 10_000, 100_000] {
-        let ops = 1_000_000usize;
-        let t = median_time(3, || {
-            let mut e: Engine<u64> = Engine::with_capacity(depth);
-            let mut rng = Rng::new(1);
-            // Pre-fill to the target depth.
-            for i in 0..depth {
-                e.schedule_at(rng.next_f64() * 1e6, i as u64);
-            }
-            // Steady-state churn: pop one, push one.
-            for i in 0..ops {
-                let (t, _) = e.pop().unwrap();
-                e.schedule_at(t + rng.next_f64() * 1e3, i as u64);
-            }
-        });
+    let mut rec = BenchRecorder::new("engine");
+
+    header("Event-queue micro: schedule+pop throughput (hold-model churn)");
+    for kind in [QueueKind::Calendar, QueueKind::Heap] {
+        for depth in [1_000usize, 10_000, 100_000] {
+            let ops = 1_000_000usize;
+            let t = median_time(3, || {
+                let mut e: Engine<u64> = Engine::with_queue(kind, depth);
+                let mut rng = Rng::new(1);
+                // Pre-fill to the target depth.
+                for i in 0..depth {
+                    e.schedule_at(rng.next_f64() * 1e6, i as u64);
+                }
+                // Steady-state churn: pop one, push one.
+                for i in 0..ops {
+                    let (t, _) = e.pop().unwrap();
+                    e.schedule_at(t + rng.next_f64() * 1e3, i as u64);
+                }
+            });
+            println!(
+                "{:<8} depth {depth:>7}: {:>6.1} M ops/s",
+                kind_name(kind),
+                ops as f64 / t / 1e6
+            );
+            rec.record(
+                &format!("micro_{}_{depth}", kind_name(kind)),
+                depth as u64,
+                ops as u64,
+                ops as u64,
+                t,
+            );
+        }
+    }
+
+    header("End-to-end: Table-I default run, calendar vs heap");
+    let p = Params::table1_defaults();
+    for kind in [QueueKind::Calendar, QueueKind::Heap] {
+        let (out, secs) =
+            timed(|| Simulation::new(&p, 42).with_queue(kind).run());
         println!(
-            "depth {depth:>7}: {:>6.1} M ops/s",
-            ops as f64 / t / 1e6
+            "{:<8} queue: {:>8.1} ms, {} events ({:.2} M events/s), {} failures",
+            kind_name(kind),
+            secs * 1e3,
+            out.events_delivered,
+            out.events_delivered as f64 / secs / 1e6,
+            out.failures_total
+        );
+        rec.record(
+            &format!("table1_gang_{}", kind_name(kind)),
+            p.total_servers() as u64,
+            out.events_delivered,
+            out.events_scheduled,
+            secs,
         );
     }
 
-    header("End-to-end: Table-I default run");
-    let p = Params::table1_defaults();
+    header("Failure-clock models on the Table-I run (exponential)");
     let (out, secs) = timed(|| Simulation::new(&p, 42).run());
     println!(
         "gang fast path   : {:>8.1} ms, {} events ({:.2} M events/s), {} failures",
@@ -50,10 +107,8 @@ fn main() {
         out.events_delivered as f64 / secs / 1e6,
         out.failures_total
     );
-
-    let (out2, secs2) = timed(|| {
-        Simulation::new(&p, 42).with_per_server_clocks().run()
-    });
+    let (out2, secs2) =
+        timed(|| Simulation::new(&p, 42).with_per_server_clocks().run());
     println!(
         "per-server clocks: {:>8.1} ms, {} events ({:.2} M events/s), {} failures",
         secs2 * 1e3,
@@ -66,16 +121,70 @@ fn main() {
         secs2 / secs,
         out2.events_delivered as f64 / out.events_delivered as f64
     );
+    rec.record(
+        "table1_per_server",
+        p.total_servers() as u64,
+        out2.events_delivered,
+        out2.events_scheduled,
+        secs2,
+    );
 
-    header("Sweep scaling across threads (12-point Fig-2a grid, 2 reps)");
+    header("Thinned aggregate clocks: Weibull fleet, thinned vs per-server");
+    let fleet_n = bench_fleet(10_000);
+    let mut w = Params::table1_defaults();
+    w.failure_dist = DistKind::Weibull { shape: 1.5 };
+    w.num_jobs = 1;
+    w.working_pool = fleet_n;
+    w.job_size = fleet_n / 32 * 31;
+    w.warm_standbys = fleet_n / 64;
+    w.spare_pool = (fleet_n / 32).max(8);
+    w.job_len = 365.0 * 1440.0; // horizon-bound: fixed simulated length
+    w.max_sim_time = 30.0 * 1440.0;
+    let mut run = |failure: &'static str| {
+        let mut spec = PolicySpec::default();
+        spec.set("failure", failure).unwrap();
+        let (out, secs) = timed(|| {
+            Simulation::from_spec(&w, &spec, Rng::new(42))
+                .expect("bench spec builds")
+                .run()
+        });
+        println!(
+            "{failure:<11}: {:>8.1} ms, {} scheduled / {} delivered, {} failures",
+            secs * 1e3,
+            out.events_scheduled,
+            out.events_delivered,
+            out.failures_total
+        );
+        rec.record(
+            &format!("weibull_{failure}"),
+            w.total_servers() as u64,
+            out.events_delivered,
+            out.events_scheduled,
+            secs,
+        );
+        (out, secs)
+    };
+    let (thin, thin_secs) = run("thinned");
+    let (per, per_secs) = run("per_server");
+    println!(
+        "thinning win: {:.1}× fewer scheduled events, {:.1}× wall-clock \
+         ({} vs {} failures — statistically equivalent, see tests/thinning.rs)",
+        per.events_scheduled as f64 / thin.events_scheduled.max(1) as f64,
+        per_secs / thin_secs,
+        thin.failures_total,
+        per.failures_total
+    );
+
+    header("Sweep scaling across threads (12-point Fig-2a grid)");
     use airesim::sweep::{run_sweep, Sweep};
+    let reps = bench_reps(2);
     let sweep = Sweep::two_way(
         "scal",
         "recovery_time",
         &[10.0, 20.0, 30.0],
         "working_pool",
         &[4112.0, 4128.0, 4160.0, 4192.0],
-        2,
+        reps,
         42,
     );
     let mut t1 = 0.0;
@@ -84,10 +193,8 @@ fn main() {
         if threads == 1 {
             t1 = t;
         }
-        println!(
-            "threads {threads}: {:>6.2} s  (speedup {:.2}×)",
-            t,
-            t1 / t
-        );
+        println!("threads {threads}: {:>6.2} s  (speedup {:.2}×)", t, t1 / t);
     }
+
+    rec.flush();
 }

@@ -5,6 +5,8 @@
 //! ```bash
 //! cargo bench --bench table1
 //! AIRESIM_BENCH_REPS=10 cargo bench --bench table1
+//! # machine-readable per-axis timings (see BENCH_PR6.json):
+//! AIRESIM_BENCH_JSON=BENCH_PR6.json cargo bench --bench table1
 //! ```
 
 mod common;
@@ -12,9 +14,10 @@ mod common;
 use airesim::config::Params;
 use airesim::report;
 use airesim::sweep::{run_sweep, Sweep, SweepResult};
-use common::{bench_reps, header, timed};
+use common::{bench_reps, header, timed, BenchRecorder};
 
 fn main() {
+    let mut rec = BenchRecorder::new("table1");
     let reps = bench_reps(3);
     header(&format!("Table I: one-way sweeps over every parameter ({reps} reps/point)"));
 
@@ -45,8 +48,25 @@ fn main() {
         for (name, values) in &axes {
             let sweep = Sweep::one_way(name, name, values, reps, 42);
             total_runs += sweep.points.len() * reps;
-            let r = run_sweep(&base, &sweep, 0);
+            let (r, axis_secs) = timed(|| run_sweep(&base, &sweep, 0));
             print!("{}", report::text_table(&r, "makespan_hours"));
+            let events: f64 = r
+                .points
+                .iter()
+                .map(|pt| {
+                    pt.collector
+                        .values("events_delivered")
+                        .map(|v| v.iter().sum::<f64>())
+                        .unwrap_or(0.0)
+                })
+                .sum();
+            rec.record(
+                name,
+                base.total_servers() as u64,
+                events as u64,
+                0,
+                axis_secs,
+            );
             results.push((name.to_string(), r));
         }
     });
@@ -62,4 +82,5 @@ fn main() {
         "timing: {total_runs} runs in {secs:.1}s ({:.0} ms/run)",
         secs * 1000.0 / total_runs as f64
     );
+    rec.flush();
 }

@@ -24,6 +24,7 @@ use crate::model::policy::{PolicySet, PolicySpec};
 use crate::model::repair_flow;
 use crate::model::selection::SelectionPolicy;
 use crate::model::server::Server;
+use crate::sim::engine::{Engine, QueueKind};
 use crate::sim::rng::Rng;
 use crate::sim::Time;
 use crate::trace::inject::{Injection, InjectionPlan};
@@ -68,6 +69,20 @@ impl Simulation {
     /// draw-identical to the gang fast path).
     pub fn with_per_server_clocks(mut self) -> Self {
         self.policies.failure = Box::new(PerServerClocks);
+        self
+    }
+
+    /// Run on an explicit event-queue implementation (A/B benchmarking
+    /// and the cross-queue equivalence suite; both orders are identical,
+    /// so outputs are byte-equal either way). Must be called before any
+    /// events are scheduled — i.e. right after construction.
+    pub fn with_queue(mut self, kind: QueueKind) -> Self {
+        debug_assert_eq!(
+            self.ctx.engine.pending(),
+            0,
+            "queue swap after events were scheduled"
+        );
+        self.ctx.engine = Engine::with_queue(kind, self.ctx.p.job_size as usize + 64);
         self
     }
 

@@ -172,6 +172,7 @@ impl SimCtx {
             0.0
         };
         self.out.events_delivered = self.engine.delivered();
+        self.out.events_scheduled = self.engine.scheduled();
     }
 
     /// Server-conservation invariant: every server is in exactly one
@@ -221,6 +222,10 @@ mod tests {
         let mut reused = SimCtx::new(&q, Rng::new(1));
         reused.burst_sum = 123.0;
         reused.burst_count = 5;
+        // Dirty per-server state the in-place fleet rebuild must scrub.
+        reused.fleet[0].failure_times.extend([1.0, 2.0]);
+        reused.fleet[0].run_age = 77.0;
+        reused.fleet[0].total_failures = 4;
         reused.reset(&p, Rng::new(9));
 
         assert_eq!(reused.fleet.len(), fresh.fleet.len());
@@ -229,6 +234,11 @@ mod tests {
             assert_eq!(a.is_bad, b.is_bad, "bad set differs at {}", a.id);
             assert_eq!(a.state, b.state);
             assert_eq!(a.home, b.home);
+            assert_eq!(a.gen, b.gen);
+            assert_eq!(a.assigned_job, b.assigned_job);
+            assert_eq!(a.run_age, b.run_age);
+            assert_eq!(a.failure_times, b.failure_times);
+            assert_eq!(a.total_failures, b.total_failures);
         }
         assert_eq!(reused.jobs.len(), fresh.jobs.len());
         assert_eq!(reused.pools.idle_count(), fresh.pools.idle_count());

@@ -5,8 +5,9 @@
 //! |---|---|
 //! | `gang`       | [`GangExponential`] — one aggregate clock per gang (exponential only) |
 //! | `per_server` | [`PerServerClocks`] — one clock per active server (any distribution) |
-//! | `correlated` | [`CorrelatedFailures`] — per-server/gang clocks *plus* domain-outage clocks |
-//! | `auto`       | `gang`/`per_server` by family, wrapped `correlated` when the topology carries outage rates |
+//! | `thinned`    | [`ThinnedClocks`] — one aggregate clock per gang via hazard thinning (non-decreasing hazards) |
+//! | `correlated` | [`CorrelatedFailures`] — any of the above *plus* domain-outage clocks |
+//! | `auto`       | `gang` (exponential) / `thinned` (thinnable families) / `per_server` (rest), wrapped `correlated` when the topology carries outage rates |
 //!
 //! [`GangExponential`] exploits memorylessness: the minimum of N
 //! exponential clocks is `Exp(sum of rates)`, so one event replaces N and
@@ -14,14 +15,20 @@
 //! headline event-count optimization. [`PerServerClocks`] arms every
 //! active server individually with age-conditional sampling, which is
 //! what non-exponential families (Weibull, LogNormal) require.
+//! [`ThinnedClocks`] extends the aggregate trick to those families by
+//! Lewis–Shedler thinning: one candidate clock paced by a majorizing
+//! hazard envelope, accepted or rejected against the gang's true
+//! age-conditional hazard at fire time.
 //!
-//! Both models implement [`FailureModel`] and are draw-for-draw
+//! All models implement [`FailureModel`] and are draw-for-draw
 //! deterministic: the dispatch refactor preserves the exact RNG
 //! consumption order of the pre-refactor `Simulation`.
 
+use crate::config::Params;
 use crate::model::coordinator;
 use crate::model::ctx::SimCtx;
 use crate::model::events::{Ev, FailureKind, ServerId};
+use crate::sim::dist::Dist;
 use crate::sim::Time;
 
 /// Stochastic failure-clock subsystem for the running gangs.
@@ -281,6 +288,240 @@ impl FailureModel for PerServerClocks {
                 );
             }
         }
+    }
+}
+
+/// Expected candidate arrivals per thinning window: windows short enough
+/// that the envelope stays tight, long enough that refresh markers are a
+/// small fraction of traffic.
+const WINDOW_CANDIDATES: f64 = 4.0;
+
+/// Aggregate gang clock for non-exponential families via Lewis–Shedler
+/// thinning.
+///
+/// The gang's failure process is the superposition of per-server renewal
+/// hazards `H(t) = Σᵢ h_rand(ageᵢ(t)) + [badᵢ]·h_sys(ageᵢ(t))`. Over a
+/// lookahead window `[t₀, t₀+w]` we precompute a majorizing constant
+/// `Λ = Σᵢ max h` (each term via [`Dist::hazard_max`], exact because every
+/// supported hazard is monotone or unimodal), then run ONE Poisson(Λ)
+/// candidate clock: at each candidate time `t`, accept with probability
+/// `H(t)/Λ` — an accepted candidate is a real failure, and the victim is
+/// drawn proportionally to its hazard share. Rejections redraw the next
+/// candidate O(1) from the same envelope; a candidate clamped to the
+/// window's end is a *refresh marker* that recomputes the envelope.
+/// This replaces [`PerServerClocks`]' N timers per burst with one event
+/// in flight per gang, at identical statistics (pinned by
+/// `tests/thinning.rs`) though not identical draws.
+///
+/// Requires non-decreasing-at-renewal hazards to stay efficient and
+/// finite: the policy registry routes Weibull `shape < 1` (hazard diverges
+/// at age 0) to `per_server` instead.
+#[derive(Clone, Debug)]
+pub struct ThinnedClocks {
+    /// Per-job clock generation (bumped on every arm / accepted failure).
+    gens: Vec<u64>,
+    /// Current envelope rate Λ per job.
+    lambda: Vec<f64>,
+    /// Absolute end of the current thinning window per job.
+    window_end: Vec<Time>,
+    /// Random-failure lifetime distribution (from the configured family).
+    d_rand: Dist,
+    /// Systematic-failure lifetime distribution (bad servers only).
+    d_sys: Dist,
+    /// Cached hazard-peak ages (golden-section for LogNormal: computed
+    /// once here, never in the hot path).
+    peak_rand: f64,
+    peak_sys: f64,
+    /// Per-active-server hazards from the last `total_hazard` call, for
+    /// hazard-proportional victim resolution.
+    haz_buf: Vec<f64>,
+}
+
+impl ThinnedClocks {
+    pub fn new(n_jobs: usize, p: &Params) -> Self {
+        let d_rand = p.failure_dist.with_rate(p.random_failure_rate);
+        let d_sys = p.failure_dist.with_rate(p.systematic_failure_rate);
+        let peak_rand = d_rand.hazard_peak();
+        let peak_sys = d_sys.hazard_peak();
+        ThinnedClocks {
+            gens: vec![0; n_jobs],
+            lambda: vec![0.0; n_jobs],
+            window_end: vec![0.0; n_jobs],
+            d_rand,
+            d_sys,
+            peak_rand,
+            peak_sys,
+            haz_buf: Vec::new(),
+        }
+    }
+
+    /// Gang hazard `H(now)` for job `j`, leaving each server's share in
+    /// `haz_buf` (indexed like `jobs[j].active`).
+    fn total_hazard(&mut self, ctx: &SimCtx, j: usize, now: Time) -> f64 {
+        let active = &ctx.jobs[j].active;
+        self.haz_buf.clear();
+        self.haz_buf.reserve(active.len());
+        let mut total = 0.0;
+        for &id in active {
+            let s = &ctx.fleet[id as usize];
+            let age = s.run_age + (now - s.active_since);
+            let mut h = self.d_rand.hazard(age);
+            if s.is_bad {
+                h += self.d_sys.hazard(age);
+            }
+            self.haz_buf.push(h);
+            total += h;
+        }
+        total
+    }
+
+    /// Open a fresh thinning window from `now`: compute the majorizing
+    /// envelope Λ over it and schedule the first candidate. Does NOT bump
+    /// the generation — callers decide whether in-flight clocks die.
+    fn schedule_envelope(&mut self, ctx: &mut SimCtx, j: usize) {
+        let now = ctx.engine.now();
+        let n_active = ctx.jobs[j].active.len();
+        if n_active == 0 {
+            return;
+        }
+        // Window length: aim for WINDOW_CANDIDATES arrivals at the
+        // current pace. The exponential-equivalent rate floors the pace so
+        // a young increasing-hazard fleet (H(now) ≈ 0) still gets a
+        // finite, sensibly-sized window.
+        let n_bad = count_bad_active(ctx, j);
+        let exp_rate = n_active as f64 * ctx.p.random_failure_rate
+            + n_bad as f64 * ctx.p.systematic_failure_rate;
+        let pace = self.total_hazard(ctx, j, now).max(exp_rate);
+        if pace <= 0.0 {
+            return; // failure-free configuration
+        }
+        let w = WINDOW_CANDIDATES / pace;
+
+        let mut lambda = 0.0;
+        for &id in &ctx.jobs[j].active {
+            let s = &ctx.fleet[id as usize];
+            let age = s.run_age + (now - s.active_since);
+            lambda += self.d_rand.hazard_max(age, age + w, self.peak_rand);
+            if s.is_bad {
+                lambda += self.d_sys.hazard_max(age, age + w, self.peak_sys);
+            }
+        }
+        debug_assert!(
+            lambda.is_finite() && lambda > 0.0,
+            "degenerate thinning envelope {lambda} (did the registry let a \
+             diverging hazard through?)"
+        );
+        self.lambda[j] = lambda;
+        self.window_end[j] = now + w;
+        self.schedule_candidate(ctx, j, now);
+    }
+
+    /// Draw the next Poisson(Λ) candidate from `from`, clamped to the
+    /// window's end (the clamped case is the refresh marker).
+    fn schedule_candidate(&mut self, ctx: &mut SimCtx, j: usize, from: Time) {
+        let dt = -ctx.rng.next_open_f64().ln() / self.lambda[j];
+        let at = (from + dt).min(self.window_end[j]);
+        ctx.engine
+            .schedule_at(at, Ev::GangFail { job: j as u32, gang_gen: self.gens[j] });
+    }
+}
+
+impl FailureModel for ThinnedClocks {
+    fn name(&self) -> &'static str {
+        "thinned"
+    }
+
+    fn interrupt(&mut self, ctx: &mut SimCtx, j: usize, now: Time) -> Time {
+        // Ages matter here (unlike `gang`): bank every server's burst age
+        // so the next envelope conditions on true ages. The aggregate
+        // candidate is retired by the next generation bump at arm.
+        let SimCtx { jobs, fleet, .. } = ctx;
+        coordinator::interrupt(&mut jobs[j], fleet, now)
+    }
+
+    fn mark_running(&mut self, ctx: &mut SimCtx, j: usize, now: Time) {
+        let SimCtx { jobs, fleet, .. } = ctx;
+        coordinator::mark_running(&jobs[j], fleet, now);
+    }
+
+    fn arm(&mut self, ctx: &mut SimCtx, j: usize) {
+        self.gens[j] += 1; // retire any in-flight candidate
+        self.schedule_envelope(ctx, j);
+    }
+
+    fn resolve_gang_fail(
+        &mut self,
+        ctx: &mut SimCtx,
+        j: usize,
+        gang_gen: u64,
+    ) -> Option<(ServerId, FailureKind)> {
+        if gang_gen != self.gens[j] {
+            return None; // stale clock (lazy cancellation)
+        }
+        let now = ctx.engine.now();
+        if now >= self.window_end[j] {
+            // Refresh marker (candidates are clamped to the window end):
+            // open the next window under the same generation.
+            self.schedule_envelope(ctx, j);
+            return None;
+        }
+        let h = self.total_hazard(ctx, j, now);
+        let lambda = self.lambda[j];
+        // The envelope majorizes by construction; the 1% slack absorbs the
+        // LogNormal deep-tail seam (sim/dist.rs switches to a Mills-ratio
+        // asymptotic there, which slightly over-estimates — envelope-safe).
+        debug_assert!(
+            h <= lambda * 1.01 + 1e-12,
+            "hazard {h} escaped its envelope {lambda}"
+        );
+        if ctx.rng.next_f64() * lambda >= h {
+            // Rejected: the next candidate redraws O(1) from the same
+            // envelope — no N-server recompute on the rejection path.
+            self.schedule_candidate(ctx, j, now);
+            return None;
+        }
+        // Accepted: victim proportional to its hazard share.
+        let n_active = ctx.jobs[j].active.len();
+        let u = ctx.rng.next_f64() * h;
+        let mut k = n_active - 1; // float edges resolve to the last server
+        let mut acc = 0.0;
+        for (i, &hi) in self.haz_buf.iter().enumerate() {
+            acc += hi;
+            if u < acc {
+                k = i;
+                break;
+            }
+        }
+        let victim = ctx.jobs[j].active[k];
+        let s = &ctx.fleet[victim as usize];
+        let kind = if s.is_bad {
+            // Split the server's hazard share between its two processes.
+            let age = s.run_age + (now - s.active_since);
+            if ctx.rng.next_f64() * self.haz_buf[k] < self.d_rand.hazard(age) {
+                FailureKind::Random
+            } else {
+                FailureKind::Systematic
+            }
+        } else {
+            FailureKind::Random
+        };
+        self.gens[j] += 1; // retire this clock before the interrupt
+        Some((victim, kind))
+    }
+
+    // Composition changes only happen between an interrupt and the next
+    // arm (which re-envelopes from scratch), so no incremental cache.
+    fn note_removed(&mut self, _j: usize, _was_bad: bool) {}
+
+    fn note_promoted(&mut self, _j: usize, _is_bad: bool) {}
+
+    fn recount(&mut self, _ctx: &SimCtx, _j: usize) {}
+
+    fn regen_rearm(&mut self, ctx: &mut SimCtx, j: usize) {
+        // Newly-bad servers invalidate the majorization: rebuild the
+        // envelope (the gen bump retires the in-flight candidate).
+        self.gens[j] += 1;
+        self.schedule_envelope(ctx, j);
     }
 }
 
@@ -560,6 +801,95 @@ mod tests {
         fm.arm(&mut ctx, 0);
         assert_eq!(ctx.engine.pending(), 1, "inner gang clock armed");
         let (victim, _) = fm.resolve_gang_fail(&mut ctx, 0, 1).expect("current gen");
+        assert!(ctx.jobs[0].active.contains(&victim));
+    }
+
+    #[test]
+    fn thinned_schedules_one_event_per_arm() {
+        let mut p = Params::small_test();
+        p.failure_dist = crate::config::DistKind::Weibull { shape: 1.5 };
+        let mut ctx = running_ctx(&p, 1);
+        let mut fm = ThinnedClocks::new(1, &p);
+        fm.arm(&mut ctx, 0);
+        assert_eq!(
+            ctx.engine.pending(),
+            1,
+            "one aggregate candidate clock, vs {} per-server timers",
+            p.job_size
+        );
+    }
+
+    #[test]
+    fn thinned_stale_gen_is_dropped_without_draws() {
+        let mut p = Params::small_test();
+        p.failure_dist = crate::config::DistKind::Weibull { shape: 1.5 };
+        let mut ctx = running_ctx(&p, 3);
+        let mut fm = ThinnedClocks::new(1, &p);
+        fm.arm(&mut ctx, 0);
+        let rng_before = ctx.rng.clone();
+        // Generation 0 is stale (arm bumped to 1).
+        assert!(fm.resolve_gang_fail(&mut ctx, 0, 0).is_none());
+        let mut a = rng_before;
+        let mut b = ctx.rng.clone();
+        assert_eq!(a.next_u64(), b.next_u64(), "stale resolution must not draw");
+    }
+
+    #[test]
+    fn thinned_exponential_always_accepts_a_victim() {
+        // Constant hazard: H == Λ, so the very first candidate resolves.
+        let p = Params::small_test();
+        let mut ctx = running_ctx(&p, 4);
+        let mut fm = ThinnedClocks::new(1, &p);
+        fm.arm(&mut ctx, 0);
+        let (victim, _kind) =
+            fm.resolve_gang_fail(&mut ctx, 0, 1).expect("exponential never rejects");
+        assert!(ctx.jobs[0].active.contains(&victim));
+        // The resolution retired the clock: the same gen is now stale.
+        assert!(fm.resolve_gang_fail(&mut ctx, 0, 1).is_none());
+    }
+
+    #[test]
+    fn thinned_zero_rates_never_fire() {
+        let mut p = Params::small_test();
+        p.failure_dist = crate::config::DistKind::Weibull { shape: 2.0 };
+        p.random_failure_rate = 0.0;
+        p.systematic_failure_rate = 0.0;
+        let mut ctx = running_ctx(&p, 2);
+        let mut fm = ThinnedClocks::new(1, &p);
+        fm.arm(&mut ctx, 0);
+        assert_eq!(ctx.engine.pending(), 0);
+    }
+
+    #[test]
+    fn thinned_refresh_marker_opens_next_window_same_gen() {
+        let mut p = Params::small_test();
+        p.failure_dist = crate::config::DistKind::Weibull { shape: 3.0 };
+        p.random_failure_rate = 1.0; // per-minute: keeps the loop short
+        let mut ctx = running_ctx(&p, 6);
+        let mut fm = ThinnedClocks::new(1, &p);
+        fm.arm(&mut ctx, 0);
+        // Young shape-3 fleet: H(0) = 0 while Λ > 0, so candidates at the
+        // window end are refresh markers. Drive the engine to the first
+        // event; resolving at now == window_end must re-envelope without
+        // producing a failure or bumping the generation.
+        let (_t, ev) = ctx.engine.pop().expect("candidate scheduled");
+        let Ev::GangFail { job, gang_gen } = ev else {
+            panic!("unexpected event {ev:?}")
+        };
+        assert_eq!(job, 0);
+        let mut resolved = fm.resolve_gang_fail(&mut ctx, 0, gang_gen);
+        // Either an early accept (possible) or a refresh/reject chain that
+        // keeps exactly one candidate in flight.
+        for _ in 0..512 {
+            if resolved.is_some() {
+                break;
+            }
+            assert_eq!(ctx.engine.pending(), 1, "exactly one candidate in flight");
+            let (_t, ev) = ctx.engine.pop().unwrap();
+            let Ev::GangFail { gang_gen, .. } = ev else { unreachable!() };
+            resolved = fm.resolve_gang_fail(&mut ctx, 0, gang_gen);
+        }
+        let (victim, _) = resolved.expect("shape-3 hazard grows: must fire eventually");
         assert!(ctx.jobs[0].active.contains(&victim));
     }
 

@@ -82,6 +82,10 @@ pub struct RunOutputs {
 
     /// Events the engine delivered (perf accounting).
     pub events_delivered: u64,
+    /// Events scheduled into the engine — the thinned failure model's
+    /// whole point is to shrink this relative to `per_server` (includes
+    /// lazily-cancelled clocks that were never delivered).
+    pub events_scheduled: u64,
 }
 
 impl RunOutputs {

@@ -7,7 +7,7 @@
 //!   selection: locality      # first_fit | random | locality | anti_affinity | power_of_two_choices
 //!   repair: job_first        # fifo | lifo | job_first | sla_aged
 //!   checkpoint: periodic     # auto | continuous | periodic | young_daly | adaptive | tiered
-//!   failure: auto            # auto | gang | per_server | correlated
+//!   failure: auto            # auto | gang | per_server | thinned | correlated
 //! ```
 //!
 //! `anti_affinity` and `correlated` require a configured `topology:`
@@ -21,7 +21,7 @@ use crate::model::checkpoint::{
     CheckpointPolicy, Continuous, Periodic, SelfTuning, Tiered,
 };
 use crate::model::failure::{
-    CorrelatedFailures, FailureModel, GangExponential, PerServerClocks,
+    CorrelatedFailures, FailureModel, GangExponential, PerServerClocks, ThinnedClocks,
 };
 use crate::model::repair::{Fifo, JobFirst, Lifo, RepairPolicy, SlaAged};
 use crate::model::selection::{
@@ -74,7 +74,8 @@ pub const REPAIR_NAMES: &[&str] = &["fifo", "lifo", "job_first", "sla_aged"];
 pub const CHECKPOINT_NAMES: &[&str] =
     &["auto", "continuous", "periodic", "young_daly", "adaptive", "tiered"];
 /// Valid failure-model names.
-pub const FAILURE_NAMES: &[&str] = &["auto", "gang", "per_server", "correlated"];
+pub const FAILURE_NAMES: &[&str] =
+    &["auto", "gang", "per_server", "thinned", "correlated"];
 
 impl PolicySpec {
     /// Set one axis by name (`selection`, `repair`, `checkpoint`,
@@ -232,10 +233,22 @@ impl PolicySpec {
             }
             Ok(())
         };
-        // The family-appropriate per-gang clock model (`auto` resolution).
+        // Thinning needs a finite majorizing envelope: a Weibull with
+        // shape < 1 has a hazard diverging at renewal age 0, so no
+        // constant can bound it over a window starting there.
+        let thinnable = match p.failure_dist {
+            DistKind::Weibull { shape } => shape >= 1.0,
+            _ => true,
+        };
+        // The family-appropriate per-gang clock model (`auto` resolution):
+        // exponential keeps the exact legacy gang fast path (byte-identical
+        // streams), other thinnable families get the aggregate thinned
+        // clock, and diverging hazards fall back to per-server timers.
         let auto_inner = |n_jobs: usize| -> Box<dyn FailureModel> {
             if exponential {
                 Box::new(GangExponential::new(n_jobs))
+            } else if thinnable {
+                Box::new(ThinnedClocks::new(n_jobs, p))
             } else {
                 Box::new(PerServerClocks)
             }
@@ -254,6 +267,18 @@ impl PolicySpec {
             "per_server" => {
                 plain_vs_rates("per_server")?;
                 Box::new(PerServerClocks)
+            }
+            "thinned" => {
+                if !thinnable {
+                    return Err(format!(
+                        "failure model `thinned` cannot majorize a {} hazard \
+                         (it diverges at renewal age 0); use `per_server`, or \
+                         `auto` to route by family",
+                        p.failure_dist.name()
+                    ));
+                }
+                plain_vs_rates("thinned")?;
+                Box::new(ThinnedClocks::new(n_jobs, p))
             }
             "correlated" => {
                 if p.topology.is_none() {
@@ -303,7 +328,37 @@ mod tests {
         p.failure_dist = DistKind::Weibull { shape: 1.5 };
         let set = PolicySpec::default().build(&p).unwrap();
         assert_eq!(set.checkpoint.name(), "periodic");
-        assert_eq!(set.failure.name(), "per_server");
+        assert_eq!(set.failure.name(), "thinned");
+    }
+
+    #[test]
+    fn auto_failure_routes_by_hazard_family() {
+        let case = |dist: DistKind| {
+            let mut p = Params::small_test();
+            p.failure_dist = dist;
+            PolicySpec::default().build(&p).unwrap().failure.name()
+        };
+        // Exponential keeps the exact legacy fast path.
+        assert_eq!(case(DistKind::Exponential), "gang");
+        // Non-decreasing / unimodal hazards thin.
+        assert_eq!(case(DistKind::Weibull { shape: 1.0 }), "thinned");
+        assert_eq!(case(DistKind::Weibull { shape: 2.5 }), "thinned");
+        assert_eq!(case(DistKind::LogNormal { sigma: 0.8 }), "thinned");
+        // A diverging hazard (Weibull shape < 1) cannot be majorized.
+        assert_eq!(case(DistKind::Weibull { shape: 0.8 }), "per_server");
+    }
+
+    #[test]
+    fn explicit_thinned_rejects_diverging_hazard() {
+        let mut p = Params::small_test();
+        p.failure_dist = DistKind::Weibull { shape: 0.7 };
+        let mut spec = PolicySpec::default();
+        spec.set("failure", "thinned").unwrap();
+        let err = spec.build(&p).unwrap_err();
+        assert!(err.contains("per_server"), "{err}");
+        // The same family with shape >= 1 builds.
+        p.failure_dist = DistKind::Weibull { shape: 1.5 };
+        assert_eq!(spec.build(&p).unwrap().failure.name(), "thinned");
     }
 
     #[test]

@@ -122,6 +122,34 @@ impl Server {
     pub fn renew(&mut self) {
         self.run_age = 0.0;
     }
+
+    /// Re-stamp this server as factory-fresh in place, keeping the
+    /// `failure_times` allocation — the fleet-build fast path for batched
+    /// replication runs.
+    fn reset(&mut self, id: ServerId, home: Home) {
+        self.id = id;
+        self.is_bad = false;
+        self.state = match home {
+            Home::Working => ServerState::WorkingIdle,
+            Home::Spare => ServerState::SparePool,
+        };
+        self.home = home;
+        self.gen = Generation::default();
+        self.assigned_job = None;
+        self.run_age = 0.0;
+        self.active_since = 0.0;
+        self.failure_times.clear();
+        self.total_failures = 0;
+    }
+}
+
+/// Home pool of server `id` under `p`'s pool split.
+fn home_of(p: &Params, id: u32) -> Home {
+    if id < p.working_pool {
+        Home::Working
+    } else {
+        Home::Spare
+    }
 }
 
 /// Build the initial fleet: `working_pool` servers homed Working plus
@@ -138,6 +166,12 @@ pub fn build_fleet(p: &Params, rng: &mut Rng) -> Vec<Server> {
 /// refilled, `scratch` is the id buffer for the bad-set shuffle. The
 /// batched replication runner reuses both across runs; the RNG draw
 /// order is identical to [`build_fleet`].
+///
+/// Fast path: servers surviving from the previous run are reset in
+/// place — their `failure_times` allocations (the only per-server heap
+/// memory) are kept, so a steady-state replication loop allocates
+/// nothing here. Field-for-field equivalence with a fresh build is
+/// pinned by `rebuild_in_place_equals_fresh_build` below.
 pub fn build_fleet_into(
     p: &Params,
     rng: &mut Rng,
@@ -146,15 +180,20 @@ pub fn build_fleet_into(
 ) {
     let total = p.total_servers() as usize;
     let n_bad = ((total as f64) * p.systematic_fraction).round() as usize;
-    // Choose the bad set by shuffling ids.
+    // Choose the bad set by shuffling ids (drawn before any fleet work so
+    // the stream order matches the original implementation exactly).
     scratch.clear();
     scratch.extend(0..total as u32);
     rng.shuffle(scratch);
-    fleet.clear();
-    fleet.extend((0..total as u32).map(|id| {
-        let home = if id < p.working_pool { Home::Working } else { Home::Spare };
-        Server::new(id, false, home)
-    }));
+    fleet.truncate(total);
+    for (id, s) in fleet.iter_mut().enumerate() {
+        let id = id as u32;
+        s.reset(id, home_of(p, id));
+    }
+    let reused = fleet.len() as u32;
+    fleet.extend(
+        (reused..total as u32).map(|id| Server::new(id, false, home_of(p, id))),
+    );
     for &id in scratch.iter().take(n_bad) {
         fleet[id as usize].is_bad = true;
     }
@@ -253,6 +292,50 @@ mod tests {
         let mut rng = Rng::new(6);
         let (t, _) = s.sample_failure(&p, &mut rng);
         assert_eq!(t, f64::INFINITY);
+    }
+
+    #[test]
+    fn rebuild_in_place_equals_fresh_build() {
+        // Dirty every reusable field, then rebuild into the same buffers
+        // (including a pool-size change) and compare against a fresh
+        // build with the same RNG seed, field by field.
+        let mut p = Params::small_test();
+        p.systematic_fraction = 0.2;
+        let mut fleet = Vec::new();
+        let mut scratch = Vec::new();
+        build_fleet_into(&p, &mut Rng::new(11), &mut fleet, &mut scratch);
+        for s in &mut fleet {
+            s.state = ServerState::ManualRepair;
+            s.gen.bump();
+            s.assigned_job = Some(3);
+            s.run_age = 123.0;
+            s.active_since = 45.0;
+            s.failure_times.extend([1.0, 2.0, 3.0]);
+            s.total_failures = 9;
+        }
+        p.spare_pool += 4; // grow: exercises the extend tail
+        build_fleet_into(&p, &mut Rng::new(12), &mut fleet, &mut scratch);
+        let fresh = build_fleet(&p, &mut Rng::new(12));
+        assert_eq!(fleet.len(), fresh.len());
+        for (a, b) in fleet.iter().zip(&fresh) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.is_bad, b.is_bad, "server {}", a.id);
+            assert_eq!(a.state, b.state);
+            assert_eq!(a.home, b.home);
+            assert_eq!(a.gen, b.gen);
+            assert_eq!(a.assigned_job, b.assigned_job);
+            assert_eq!(a.run_age, b.run_age);
+            assert_eq!(a.active_since, b.active_since);
+            assert_eq!(a.failure_times, b.failure_times);
+            assert_eq!(a.total_failures, b.total_failures);
+        }
+        // Shrink path too.
+        p.spare_pool -= 6;
+        build_fleet_into(&p, &mut Rng::new(13), &mut fleet, &mut scratch);
+        let fresh = build_fleet(&p, &mut Rng::new(13));
+        assert_eq!(fleet.len(), fresh.len());
+        let bad = |f: &[Server]| f.iter().filter(|s| s.is_bad).count();
+        assert_eq!(bad(&fleet), bad(&fresh));
     }
 
     #[test]

@@ -1,0 +1,413 @@
+//! Calendar (bucket) event queue: amortized O(1) schedule/pop.
+//!
+//! A ring of time buckets of fixed `width`; an event at time `t` lives in
+//! virtual bucket `⌊t/width⌋`, mapped onto the ring modulo the bucket
+//! count. The cursor walks virtual buckets in order; within a bucket,
+//! events are lazily sorted with the *same* comparator the binary heap
+//! uses ([`Scheduled`]'s reversed `(at, seq)` order), so delivery — time
+//! order with FIFO ties — is bit-identical to the heap's. The property
+//! suite in `tests/queue_equivalence.rs` pins exactly that.
+//!
+//! Events beyond one ring revolution from the cursor ("far-future
+//! outliers": domain-outage clocks, horizon sentinels) go to an overflow
+//! list guarded by a min-virtual-bucket watermark; they migrate into the
+//! ring the moment the cursor reaches the watermark, which is checked on
+//! every cursor step — exact, with no boundary-crossing bookkeeping.
+//!
+//! The structure resizes itself from the live event population (grow at
+//! 2 events/bucket, shrink at 1/8 — a 16× hysteresis band so alternating
+//! schedule/pop bursts don't thrash) and re-derives `width` from the
+//! observed schedule-horizon span on each rebuild. `reset()` keeps both
+//! learned parameters, so batched replication runners start the next run
+//! pre-adapted.
+
+use crate::sim::event::Scheduled;
+use crate::sim::Time;
+
+const MIN_BUCKETS: usize = 16;
+const MAX_BUCKETS: usize = 1 << 20;
+
+/// Bucketed pending-event set with heap-identical delivery order.
+#[derive(Debug)]
+pub struct CalendarQueue<E> {
+    /// Ring of buckets; each holds events whose virtual bucket maps here.
+    buckets: Vec<Vec<Scheduled<E>>>,
+    /// Lazy-sort flags: a bucket is re-sorted only when next examined.
+    sorted: Vec<bool>,
+    /// Events more than one revolution ahead of the cursor.
+    overflow: Vec<Scheduled<E>>,
+    /// Min virtual bucket over `overflow` (u64::MAX when empty): the
+    /// migration watermark.
+    overflow_min_v: u64,
+    /// Bucket width in simulated minutes (re-learned on rebuilds).
+    width: f64,
+    /// Cursor: the virtual bucket currently being drained.
+    cur_v: u64,
+    len: usize,
+}
+
+impl<E> Default for CalendarQueue<E> {
+    fn default() -> Self {
+        Self::with_capacity(0)
+    }
+}
+
+impl<E> CalendarQueue<E> {
+    pub fn with_capacity(cap: usize) -> Self {
+        let nb = cap.next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        CalendarQueue {
+            buckets: (0..nb).map(|_| Vec::new()).collect(),
+            sorted: vec![true; nb],
+            overflow: Vec::new(),
+            overflow_min_v: u64::MAX,
+            width: 1.0,
+            cur_v: 0,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Clear all events, keeping allocations AND the learned bucket
+    /// count/width (the next replication has the same horizon scale).
+    pub fn reset(&mut self) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.sorted.iter_mut().for_each(|s| *s = true);
+        self.overflow.clear();
+        self.overflow_min_v = u64::MAX;
+        self.cur_v = 0;
+        self.len = 0;
+    }
+
+    /// Virtual bucket of an event time, saturating so cursor arithmetic
+    /// (`cur_v + nb`) can never overflow.
+    #[inline]
+    fn vbucket(&self, at: Time) -> u64 {
+        let v = (at / self.width).floor();
+        if v >= (u64::MAX - 1) as f64 {
+            u64::MAX - 1
+        } else {
+            v as u64
+        }
+    }
+
+    pub fn push(&mut self, ev: Scheduled<E>) {
+        let v = self.vbucket(ev.at);
+        if self.len == 0 {
+            // Empty queue: teleport the cursor instead of scanning to it.
+            self.cur_v = v;
+        } else if v < self.cur_v {
+            // The cursor over-scanned past this time while peeking empty
+            // buckets; pull it back so delivery order stays exact.
+            self.cur_v = v;
+        }
+        self.place(ev, v);
+        self.len += 1;
+        let nb = self.buckets.len();
+        if self.len > 2 * nb && nb < MAX_BUCKETS {
+            self.rebuild(nb * 2);
+        }
+    }
+
+    /// Put an event into its bucket or the overflow list. Does not touch
+    /// `len` or trigger resizing (shared by `push` and `rebuild`).
+    fn place(&mut self, ev: Scheduled<E>, v: u64) {
+        let nb = self.buckets.len() as u64;
+        if v >= self.cur_v.saturating_add(nb) {
+            self.overflow_min_v = self.overflow_min_v.min(v);
+            self.overflow.push(ev);
+        } else {
+            let idx = (v % nb) as usize;
+            self.buckets[idx].push(ev);
+            self.sorted[idx] = false;
+        }
+    }
+
+    /// Pop the earliest event (FIFO among ties), identical to the heap.
+    pub fn pop(&mut self) -> Option<Scheduled<E>> {
+        let idx = self.locate()?;
+        let ev = self.buckets[idx].pop().expect("located bucket is non-empty");
+        self.len -= 1;
+        let nb = self.buckets.len();
+        if self.len > 0 && self.len < nb / 8 && nb > MIN_BUCKETS {
+            let want = (2 * self.len).next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+            if want < nb {
+                self.rebuild(want);
+            }
+        }
+        Some(ev)
+    }
+
+    /// Time of the earliest event without removing it.
+    pub fn peek_time(&mut self) -> Option<Time> {
+        let idx = self.locate()?;
+        self.buckets[idx].last().map(|e| e.at)
+    }
+
+    /// Advance the cursor to the bucket whose sorted back is the global
+    /// minimum, returning its physical index. Migrates overflow events as
+    /// the cursor reaches the watermark.
+    fn locate(&mut self) -> Option<usize> {
+        if self.len == 0 {
+            return None;
+        }
+        let nb = self.buckets.len() as u64;
+        let mut scanned: u64 = 0;
+        loop {
+            if self.overflow_min_v <= self.cur_v {
+                self.migrate_overflow();
+            }
+            let idx = (self.cur_v % nb) as usize;
+            if !self.buckets[idx].is_empty() {
+                if !self.sorted[idx] {
+                    // Ascending under Scheduled's reversed Ord puts the
+                    // earliest (at, then lowest seq) at the back: O(1)
+                    // pop with exactly the heap's tie-breaking. (at, seq)
+                    // pairs are unique, so unstable sort is deterministic.
+                    self.buckets[idx].sort_unstable();
+                    self.sorted[idx] = true;
+                }
+                let back_at = self.buckets[idx].last().expect("non-empty").at;
+                if self.vbucket(back_at) == self.cur_v {
+                    return Some(idx);
+                }
+                // Only wrap-around (future-revolution) events here.
+            }
+            self.cur_v += 1;
+            scanned += 1;
+            if scanned >= nb {
+                // Sparse region: one O(n) scan beats revolving the ring.
+                self.jump_to_min();
+                scanned = 0;
+            }
+        }
+    }
+
+    /// Move every overflow event now within one revolution of the cursor
+    /// into its bucket, and recompute the watermark.
+    fn migrate_overflow(&mut self) {
+        let nb = self.buckets.len() as u64;
+        let limit = self.cur_v.saturating_add(nb);
+        let mut new_min = u64::MAX;
+        let mut i = 0;
+        while i < self.overflow.len() {
+            let v = self.vbucket(self.overflow[i].at);
+            if v < limit {
+                let ev = self.overflow.swap_remove(i);
+                let idx = (v % nb) as usize;
+                self.buckets[idx].push(ev);
+                self.sorted[idx] = false;
+            } else {
+                new_min = new_min.min(v);
+                i += 1;
+            }
+        }
+        self.overflow_min_v = new_min;
+    }
+
+    /// Set the cursor directly onto the earliest event's virtual bucket.
+    fn jump_to_min(&mut self) {
+        let mut min_at = f64::INFINITY;
+        for b in &self.buckets {
+            for e in b {
+                if e.at < min_at {
+                    min_at = e.at;
+                }
+            }
+        }
+        for e in &self.overflow {
+            if e.at < min_at {
+                min_at = e.at;
+            }
+        }
+        if min_at.is_finite() {
+            self.cur_v = self.vbucket(min_at);
+        }
+    }
+
+    /// Re-partition everything into `new_nb` buckets, re-deriving the
+    /// bucket width from the live events' time span.
+    fn rebuild(&mut self, new_nb: usize) {
+        let mut all: Vec<Scheduled<E>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        all.append(&mut self.overflow);
+        self.overflow_min_v = u64::MAX;
+
+        let mut min_at = f64::INFINITY;
+        let mut max_at = f64::NEG_INFINITY;
+        for e in &all {
+            min_at = min_at.min(e.at);
+            max_at = max_at.max(e.at);
+        }
+        let span = max_at - min_at;
+        if span.is_finite() && span > 0.0 {
+            // Aim for the live population to span ~half a revolution.
+            self.width = (2.0 * span / new_nb as f64).max(1e-9);
+        }
+
+        self.buckets.resize_with(new_nb, Vec::new);
+        self.sorted.clear();
+        self.sorted.resize(new_nb, true);
+        if min_at.is_finite() {
+            self.cur_v = self.vbucket(min_at);
+        } else {
+            self.cur_v = 0;
+        }
+        for ev in all {
+            let v = self.vbucket(ev.at);
+            self.place(ev, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Rng;
+    use std::collections::BinaryHeap;
+
+    fn ev(at: Time, seq: u64) -> Scheduled<u64> {
+        Scheduled { at, seq, payload: seq }
+    }
+
+    /// Drive the calendar and a BinaryHeap with identical operations and
+    /// assert element-wise identical pops.
+    fn against_heap(ops: impl Iterator<Item = Option<(Time, u64)>>) {
+        let mut cal: CalendarQueue<u64> = CalendarQueue::with_capacity(4);
+        let mut heap: BinaryHeap<Scheduled<u64>> = BinaryHeap::new();
+        for op in ops {
+            match op {
+                Some((at, seq)) => {
+                    cal.push(ev(at, seq));
+                    heap.push(ev(at, seq));
+                }
+                None => {
+                    let a = cal.pop().map(|e| (e.at, e.seq, e.payload));
+                    let b = heap.pop().map(|e| (e.at, e.seq, e.payload));
+                    assert_eq!(a, b, "calendar diverged from heap");
+                }
+            }
+            assert_eq!(cal.len(), heap.len());
+        }
+        loop {
+            let a = cal.pop().map(|e| (e.at, e.seq, e.payload));
+            let b = heap.pop().map(|e| (e.at, e.seq, e.payload));
+            assert_eq!(a, b, "drain diverged");
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn matches_heap_on_random_interleavings() {
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let mut seq = 0u64;
+            let mut last_pop = 0.0f64;
+            let ops: Vec<Option<(Time, u64)>> = (0..600)
+                .map(|_| {
+                    if rng.next_f64() < 0.6 {
+                        let at = last_pop + rng.next_f64() * 500.0;
+                        seq += 1;
+                        Some((at, seq))
+                    } else {
+                        last_pop += rng.next_f64() * 5.0;
+                        None
+                    }
+                })
+                .collect();
+            against_heap(ops.into_iter());
+        }
+    }
+
+    #[test]
+    fn fifo_ties_match_heap() {
+        let ops: Vec<Option<(Time, u64)>> = (0..64)
+            .map(|i| Some((7.0, i)))
+            .chain((0..64).map(|_| None))
+            .collect();
+        against_heap(ops.into_iter());
+    }
+
+    #[test]
+    fn far_future_outliers_go_through_overflow_and_back() {
+        let mut cal: CalendarQueue<u64> = CalendarQueue::with_capacity(4);
+        cal.push(ev(1.0, 0));
+        cal.push(ev(1.0e9, 1)); // way past one revolution: overflow
+        cal.push(ev(2.0, 2));
+        assert!(!cal.overflow.is_empty(), "outlier should land in overflow");
+        assert_eq!(cal.pop().unwrap().seq, 0);
+        assert_eq!(cal.pop().unwrap().seq, 2);
+        assert_eq!(cal.pop().unwrap().seq, 1);
+        assert!(cal.pop().is_none());
+    }
+
+    #[test]
+    fn grow_and_shrink_preserve_order() {
+        let mut cal: CalendarQueue<u64> = CalendarQueue::with_capacity(4);
+        let mut rng = Rng::new(9);
+        let mut evs: Vec<(Time, u64)> =
+            (0..5000).map(|i| (rng.next_f64() * 1e6, i)).collect();
+        for &(at, seq) in &evs {
+            cal.push(ev(at, seq));
+        }
+        // Sort ascending by (at, seq) — the delivery order.
+        evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        for &(at, seq) in &evs {
+            let got = cal.pop().unwrap();
+            assert_eq!((got.at, got.seq), (at, seq));
+        }
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn reset_keeps_learned_shape_and_empties() {
+        let mut cal: CalendarQueue<u64> = CalendarQueue::with_capacity(4);
+        for i in 0..1000 {
+            cal.push(ev(i as f64 * 3.0, i));
+        }
+        let nb = cal.buckets.len();
+        let width = cal.width;
+        cal.reset();
+        assert!(cal.is_empty());
+        assert_eq!(cal.buckets.len(), nb);
+        assert_eq!(cal.width, width);
+        cal.push(ev(5.0, 0));
+        assert_eq!(cal.pop().unwrap().seq, 0);
+    }
+
+    #[test]
+    fn identical_times_identical_seqs_unique() {
+        // Ties broken strictly by seq even across resize boundaries.
+        let mut cal: CalendarQueue<u64> = CalendarQueue::with_capacity(4);
+        for i in 0..200 {
+            cal.push(ev(if i % 2 == 0 { 10.0 } else { 20.0 }, i));
+        }
+        let mut prev = (0.0, 0);
+        let mut first = true;
+        while let Some(e) = cal.pop() {
+            if !first {
+                assert!(
+                    e.at > prev.0 || (e.at == prev.0 && e.seq > prev.1),
+                    "order violated: {:?} after {prev:?}",
+                    (e.at, e.seq)
+                );
+            }
+            prev = (e.at, e.seq);
+            first = false;
+        }
+    }
+}

@@ -114,6 +114,107 @@ impl Dist {
             }
         }
     }
+
+    /// Hazard (instantaneous failure-intensity) function
+    /// `h(x) = f(x)/S(x)`: the failure rate at age `x` conditional on
+    /// survival to `x`. This is what the thinned aggregate failure clocks
+    /// ([`crate::model::failure`]) accept/reject candidates against.
+    ///
+    /// Defined for the parametric families (Exponential, Weibull,
+    /// LogNormal) and Deterministic; panics for Empirical, whose hazard is
+    /// a sum of point masses no thinning envelope can majorize.
+    pub fn hazard(&self, x: f64) -> f64 {
+        debug_assert!(x >= 0.0, "hazard at negative age {x}");
+        match self {
+            Dist::Exponential { rate } => *rate,
+            Dist::Weibull { shape, scale } => {
+                // h(x) = (k/λ)·(x/λ)^(k-1): increasing for k > 1, constant
+                // at k = 1, decreasing (and diverging at 0) for k < 1.
+                if x == 0.0 {
+                    return match shape.partial_cmp(&1.0) {
+                        Some(std::cmp::Ordering::Greater) => 0.0,
+                        Some(std::cmp::Ordering::Equal) => 1.0 / scale,
+                        _ => f64::INFINITY,
+                    };
+                }
+                (shape / scale) * (x / scale).powf(shape - 1.0)
+            }
+            Dist::LogNormal { mu, sigma } => {
+                if x <= 0.0 {
+                    return 0.0; // h(0+) = 0: the density vanishes at 0
+                }
+                let z = (x.ln() - mu) / sigma;
+                if z > 5.0 {
+                    // Deep right tail: 1 - Φ(z) underflows the erf
+                    // approximation; use the Mills-ratio asymptotic
+                    // S(z) ≈ φ(z)/z · (1 - 1/z²), accurate to ~z⁻⁴ there.
+                    return z / (x * sigma * (1.0 - 1.0 / (z * z)));
+                }
+                let sf = 1.0 - normal_cdf(z);
+                let pdf = (-0.5 * z * z).exp()
+                    / ((2.0 * std::f64::consts::PI).sqrt() * x * sigma);
+                pdf / sf
+            }
+            Dist::Deterministic { value } => {
+                if x < *value {
+                    0.0
+                } else {
+                    f64::INFINITY
+                }
+            }
+            Dist::Empirical { .. } => {
+                panic!("hazard() is undefined for empirical distributions")
+            }
+        }
+    }
+
+    /// Age at which the hazard attains its maximum (`+∞` when the hazard
+    /// is non-decreasing, so callers clamp it to their window's right
+    /// edge). Closed-form for Exponential and Weibull; the LogNormal
+    /// hazard is unimodal with no closed-form mode, located here by
+    /// golden-section search — not free, so callers cache the result per
+    /// distribution (the thinned model computes it once at build time).
+    pub fn hazard_peak(&self) -> f64 {
+        match self {
+            Dist::Exponential { .. } => 0.0, // constant hazard: any point
+            Dist::Weibull { shape, .. } => {
+                if *shape >= 1.0 {
+                    f64::INFINITY // non-decreasing
+                } else {
+                    0.0 // decreasing, diverges at 0
+                }
+            }
+            Dist::LogNormal { mu, sigma } => {
+                // Unimodal on (0, ∞); search over t = ln x (the monotone
+                // transform preserves the maximizer).
+                let (mut lo, mut hi) = (mu - 8.0 * sigma, mu + 12.0 * sigma);
+                const INV_PHI: f64 = 0.618_033_988_749_894_8;
+                for _ in 0..120 {
+                    let m1 = hi - INV_PHI * (hi - lo);
+                    let m2 = lo + INV_PHI * (hi - lo);
+                    if self.hazard(m1.exp()) < self.hazard(m2.exp()) {
+                        lo = m1;
+                    } else {
+                        hi = m2;
+                    }
+                }
+                (0.5 * (lo + hi)).exp()
+            }
+            Dist::Deterministic { value } => *value,
+            Dist::Empirical { .. } => {
+                panic!("hazard_peak() is undefined for empirical distributions")
+            }
+        }
+    }
+
+    /// A majorizing bound on the hazard over the age window `[a, b]`.
+    /// Every supported family's hazard is monotone or unimodal, so the
+    /// window max is attained at the peak clamped into the window. `peak`
+    /// must come from [`Dist::hazard_peak`] on the same distribution.
+    pub fn hazard_max(&self, a: f64, b: f64, peak: f64) -> f64 {
+        debug_assert!(a <= b, "empty hazard window [{a}, {b}]");
+        self.hazard(peak.clamp(a, b))
+    }
 }
 
 /// Lanczos approximation of the Gamma function (for Weibull means).
@@ -346,6 +447,118 @@ mod tests {
             let z = normal_quantile(p);
             let back = normal_cdf(z);
             assert!((back - p).abs() < 1e-6, "p={p} back={back}");
+        }
+    }
+
+    /// Analytic survival functions for the hazard finite-difference check.
+    fn survival(d: &Dist, x: f64) -> f64 {
+        match d {
+            Dist::Exponential { rate } => (-rate * x).exp(),
+            Dist::Weibull { shape, scale } => (-(x / scale).powf(*shape)).exp(),
+            Dist::LogNormal { mu, sigma } => {
+                1.0 - normal_cdf((x.ln() - mu) / sigma)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn hazard_matches_finite_difference_of_log_survival() {
+        // h(x) = -d/dx ln S(x); central difference on the analytic S.
+        let dists = [
+            Dist::exp_rate(0.07),
+            Dist::Weibull { shape: 1.5, scale: 40.0 },
+            Dist::Weibull { shape: 3.0, scale: 25.0 },
+            Dist::LogNormal { mu: 3.0, sigma: 0.6 },
+        ];
+        for d in &dists {
+            for &x in &[0.5, 2.0, 10.0, 35.0, 90.0] {
+                let eps = 1e-5 * x.max(1.0);
+                let fd = (survival(d, x - eps).ln() - survival(d, x + eps).ln())
+                    / (2.0 * eps);
+                let h = d.hazard(x);
+                assert!(
+                    (h - fd).abs() / fd.abs().max(1e-12) < 1e-3,
+                    "{d:?} at x={x}: hazard={h} finite-diff={fd}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weibull_shape_one_hazard_is_constant_rate() {
+        let d = Dist::Weibull { shape: 1.0, scale: 15.0 };
+        for &x in &[0.0, 1.0, 100.0, 1e6] {
+            assert!((d.hazard(x) - 1.0 / 15.0).abs() < 1e-12, "x={x}");
+        }
+    }
+
+    #[test]
+    fn hazard_edge_cases() {
+        // Increasing Weibull starts at 0; decreasing diverges at 0.
+        assert_eq!(Dist::Weibull { shape: 2.0, scale: 10.0 }.hazard(0.0), 0.0);
+        assert_eq!(
+            Dist::Weibull { shape: 0.5, scale: 10.0 }.hazard(0.0),
+            f64::INFINITY
+        );
+        // LogNormal hazard vanishes at 0 and stays finite deep in the
+        // right tail (the Mills-ratio branch) instead of 0/0 → NaN.
+        let ln = Dist::LogNormal { mu: 2.0, sigma: 0.5 };
+        assert_eq!(ln.hazard(0.0), 0.0);
+        let deep = (2.0f64 + 0.5 * 8.0).exp(); // z = 8
+        let h = ln.hazard(deep);
+        assert!(h.is_finite() && h > 0.0, "deep-tail hazard {h}");
+        // Deterministic: zero before the value, infinite at/after it.
+        let det = Dist::Deterministic { value: 5.0 };
+        assert_eq!(det.hazard(1.0), 0.0);
+        assert_eq!(det.hazard(5.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn hazard_max_majorizes_over_windows() {
+        let dists = [
+            Dist::exp_rate(0.03),
+            Dist::Weibull { shape: 1.0, scale: 30.0 },
+            Dist::Weibull { shape: 2.5, scale: 50.0 },
+            Dist::LogNormal { mu: 3.0, sigma: 0.8 },
+            Dist::LogNormal { mu: 1.0, sigma: 1.4 },
+        ];
+        for d in &dists {
+            let peak = d.hazard_peak();
+            for &(a, w) in
+                &[(0.0, 5.0), (0.0, 500.0), (3.0, 40.0), (80.0, 120.0), (400.0, 50.0)]
+            {
+                let b = a + w;
+                let bound = d.hazard_max(a, b, peak);
+                for i in 0..=400 {
+                    let x = a + w * i as f64 / 400.0;
+                    let h = d.hazard(x);
+                    // 1% slack spans the LogNormal Mills-ratio seam.
+                    assert!(
+                        h <= bound * 1.01 + 1e-12,
+                        "{d:?}: h({x})={h} > bound {bound} on [{a}, {b}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lognormal_hazard_peak_is_a_maximum() {
+        for d in [
+            Dist::LogNormal { mu: 3.0, sigma: 0.5 },
+            Dist::LogNormal { mu: 1.5, sigma: 1.2 },
+        ] {
+            let peak = d.hazard_peak();
+            assert!(peak.is_finite() && peak > 0.0);
+            let hp = d.hazard(peak);
+            for i in 1..=300 {
+                let x = peak * (0.01 + 3.0 * i as f64 / 300.0);
+                assert!(
+                    d.hazard(x) <= hp * 1.01 + 1e-12,
+                    "{d:?}: hazard({x}) exceeds hazard(peak={peak})={hp}"
+                );
+            }
         }
     }
 

@@ -1,19 +1,49 @@
 //! The discrete-event engine: a pending-event set with a monotone clock.
 //!
 //! Generic over the event payload so the model layer owns its vocabulary.
-//! The queue is a binary heap with stable FIFO tie-breaking ([`Scheduled`]);
-//! cancellation is lazy (generation counters at the model layer), which
+//! The pending set is a calendar queue by default ([`CalendarQueue`],
+//! amortized O(1) per operation) with the original binary heap available
+//! behind [`QueueKind::Heap`] / the `heap-queue` cargo feature for A/B
+//! benchmarking; both deliver the exact `(at, seq)` earliest-first FIFO
+//! order, so the choice is invisible to every oracle and golden file.
+//! Cancellation is lazy (generation counters at the model layer), which
 //! profiles far better than tombstone removal for this workload — failure
 //! clocks are invalidated in bulk at every job interruption.
 
+use crate::sim::calendar::CalendarQueue;
 use crate::sim::event::Scheduled;
 use crate::sim::Time;
 use std::collections::BinaryHeap;
 
+/// Which pending-event structure the engine runs on. Both orders are
+/// bit-identical; the calendar is faster at scale, the heap is the
+/// reference implementation kept for A/B runs (`benches/engine.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueKind {
+    Calendar,
+    Heap,
+}
+
+impl Default for QueueKind {
+    fn default() -> Self {
+        if cfg!(feature = "heap-queue") {
+            QueueKind::Heap
+        } else {
+            QueueKind::Calendar
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Queue<E> {
+    Calendar(CalendarQueue<E>),
+    Heap(BinaryHeap<Scheduled<E>>),
+}
+
 /// Event queue + simulation clock.
 #[derive(Debug)]
 pub struct Engine<E> {
-    heap: BinaryHeap<Scheduled<E>>,
+    queue: Queue<E>,
     now: Time,
     seq: u64,
     delivered: u64,
@@ -27,27 +57,46 @@ impl<E> Default for Engine<E> {
 
 impl<E> Engine<E> {
     pub fn new() -> Self {
-        Engine { heap: BinaryHeap::new(), now: 0.0, seq: 0, delivered: 0 }
+        Self::with_queue(QueueKind::default(), 0)
     }
 
-    /// Pre-size the heap (perf: avoids rehoming during the warm-up burst
+    /// Pre-size the queue (perf: avoids rehoming during the warm-up burst
     /// when every server schedules its first failure clock).
     pub fn with_capacity(cap: usize) -> Self {
-        Engine {
-            heap: BinaryHeap::with_capacity(cap),
-            now: 0.0,
-            seq: 0,
-            delivered: 0,
+        Self::with_queue(QueueKind::default(), cap)
+    }
+
+    /// Build on an explicit queue implementation (A/B benchmarking and
+    /// the cross-queue equivalence tests).
+    pub fn with_queue(kind: QueueKind, cap: usize) -> Self {
+        let queue = match kind {
+            QueueKind::Calendar => Queue::Calendar(CalendarQueue::with_capacity(cap)),
+            QueueKind::Heap => Queue::Heap(BinaryHeap::with_capacity(cap)),
+        };
+        Engine { queue, now: 0.0, seq: 0, delivered: 0 }
+    }
+
+    /// Which queue implementation this engine runs on.
+    pub fn queue_kind(&self) -> QueueKind {
+        match self.queue {
+            Queue::Calendar(_) => QueueKind::Calendar,
+            Queue::Heap(_) => QueueKind::Heap,
         }
     }
 
     /// Clear all state for a new run, retaining (and growing to at least
-    /// `capacity`) the heap allocation — the batched replication runner
-    /// resets engines instead of rebuilding them.
+    /// `capacity`) the queue allocation — the batched replication runner
+    /// resets engines instead of rebuilding them. The queue kind (and the
+    /// calendar's learned bucket shape) carries over.
     pub fn reset(&mut self, capacity: usize) {
-        self.heap.clear();
-        if self.heap.capacity() < capacity {
-            self.heap.reserve(capacity);
+        match &mut self.queue {
+            Queue::Calendar(c) => c.reset(),
+            Queue::Heap(h) => {
+                h.clear();
+                if h.capacity() < capacity {
+                    h.reserve(capacity);
+                }
+            }
         }
         self.now = 0.0;
         self.seq = 0;
@@ -66,10 +115,20 @@ impl<E> Engine<E> {
         self.delivered
     }
 
+    /// Events scheduled so far — the other half of the perf ledger: the
+    /// thinned failure model's whole point is to shrink this number.
+    #[inline]
+    pub fn scheduled(&self) -> u64 {
+        self.seq
+    }
+
     /// Pending events (including lazily-cancelled ones).
     #[inline]
     pub fn pending(&self) -> usize {
-        self.heap.len()
+        match &self.queue {
+            Queue::Calendar(c) => c.len(),
+            Queue::Heap(h) => h.len(),
+        }
     }
 
     /// Schedule `payload` at absolute time `at` (must not be in the past).
@@ -82,7 +141,11 @@ impl<E> Engine<E> {
         debug_assert!(!at.is_nan(), "scheduling at NaN");
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Scheduled { at, seq, payload });
+        let ev = Scheduled { at, seq, payload };
+        match &mut self.queue {
+            Queue::Calendar(c) => c.push(ev),
+            Queue::Heap(h) => h.push(ev),
+        }
     }
 
     /// Schedule `payload` after a delay from now. Infinite delays are
@@ -97,16 +160,23 @@ impl<E> Engine<E> {
     /// Pop the next event, advancing the clock. Returns `None` when the
     /// simulation has run out of events.
     pub fn pop(&mut self) -> Option<(Time, E)> {
-        let ev = self.heap.pop()?;
+        let ev = match &mut self.queue {
+            Queue::Calendar(c) => c.pop()?,
+            Queue::Heap(h) => h.pop()?,
+        };
         debug_assert!(ev.at >= self.now, "clock went backwards");
         self.now = ev.at;
         self.delivered += 1;
         Some((ev.at, ev.payload))
     }
 
-    /// Peek at the next event time without advancing.
-    pub fn peek_time(&self) -> Option<Time> {
-        self.heap.peek().map(|e| e.at)
+    /// Peek at the next event time without advancing. (`&mut`: the
+    /// calendar may advance its cursor and lazily sort a bucket.)
+    pub fn peek_time(&mut self) -> Option<Time> {
+        match &mut self.queue {
+            Queue::Calendar(c) => c.peek_time(),
+            Queue::Heap(h) => h.peek().map(|e| e.at),
+        }
     }
 }
 
@@ -114,39 +184,52 @@ impl<E> Engine<E> {
 mod tests {
     use super::*;
 
+    fn both_kinds() -> [QueueKind; 2] {
+        [QueueKind::Calendar, QueueKind::Heap]
+    }
+
     #[test]
     fn delivers_in_time_order() {
-        let mut e: Engine<u32> = Engine::new();
-        e.schedule_at(5.0, 5);
-        e.schedule_at(1.0, 1);
-        e.schedule_at(3.0, 3);
-        let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
-        assert_eq!(order, vec![1, 3, 5]);
+        for kind in both_kinds() {
+            let mut e: Engine<u32> = Engine::with_queue(kind, 0);
+            e.schedule_at(5.0, 5);
+            e.schedule_at(1.0, 1);
+            e.schedule_at(3.0, 3);
+            let order: Vec<u32> =
+                std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+            assert_eq!(order, vec![1, 3, 5], "{kind:?}");
+        }
     }
 
     #[test]
     fn fifo_on_simultaneous_events() {
-        let mut e: Engine<u32> = Engine::new();
-        for i in 0..100 {
-            e.schedule_at(7.0, i);
+        for kind in both_kinds() {
+            let mut e: Engine<u32> = Engine::with_queue(kind, 0);
+            for i in 0..100 {
+                e.schedule_at(7.0, i);
+            }
+            let order: Vec<u32> =
+                std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+            assert_eq!(order, (0..100).collect::<Vec<_>>(), "{kind:?}");
         }
-        let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
-        assert_eq!(order, (0..100).collect::<Vec<_>>());
     }
 
     #[test]
     fn clock_is_monotone() {
-        let mut e: Engine<()> = Engine::new();
-        let mut rng = crate::sim::rng::Rng::new(1);
-        for _ in 0..1000 {
-            e.schedule_at(rng.next_f64() * 100.0, ());
+        for kind in both_kinds() {
+            let mut e: Engine<()> = Engine::with_queue(kind, 0);
+            let mut rng = crate::sim::rng::Rng::new(1);
+            for _ in 0..1000 {
+                e.schedule_at(rng.next_f64() * 100.0, ());
+            }
+            let mut last = 0.0;
+            while let Some((t, _)) = e.pop() {
+                assert!(t >= last, "{kind:?}");
+                last = t;
+            }
+            assert_eq!(e.delivered(), 1000);
+            assert_eq!(e.scheduled(), 1000);
         }
-        let mut last = 0.0;
-        while let Some((t, _)) = e.pop() {
-            assert!(t >= last);
-            last = t;
-        }
-        assert_eq!(e.delivered(), 1000);
     }
 
     #[test]
@@ -165,18 +248,44 @@ mod tests {
         let mut e: Engine<()> = Engine::new();
         e.schedule_in(f64::INFINITY, ());
         assert_eq!(e.pending(), 0);
+        assert_eq!(e.scheduled(), 0);
         assert!(e.pop().is_none());
     }
 
     #[test]
     fn interleaved_schedule_and_pop() {
-        let mut e: Engine<u32> = Engine::new();
-        e.schedule_at(1.0, 1);
-        e.schedule_at(10.0, 10);
-        assert_eq!(e.pop().unwrap().1, 1);
-        // Schedule between the popped time and the remaining event.
-        e.schedule_at(5.0, 5);
-        assert_eq!(e.pop().unwrap().1, 5);
-        assert_eq!(e.pop().unwrap().1, 10);
+        for kind in both_kinds() {
+            let mut e: Engine<u32> = Engine::with_queue(kind, 0);
+            e.schedule_at(1.0, 1);
+            e.schedule_at(10.0, 10);
+            assert_eq!(e.pop().unwrap().1, 1);
+            // Schedule between the popped time and the remaining event.
+            e.schedule_at(5.0, 5);
+            assert_eq!(e.pop().unwrap().1, 5);
+            assert_eq!(e.pop().unwrap().1, 10, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn reset_preserves_queue_kind() {
+        for kind in both_kinds() {
+            let mut e: Engine<u32> = Engine::with_queue(kind, 8);
+            e.schedule_at(1.0, 1);
+            e.reset(16);
+            assert_eq!(e.queue_kind(), kind);
+            assert_eq!(e.pending(), 0);
+            assert_eq!((e.now(), e.scheduled(), e.delivered()), (0.0, 0, 0));
+        }
+    }
+
+    #[test]
+    fn default_kind_tracks_feature() {
+        let expect = if cfg!(feature = "heap-queue") {
+            QueueKind::Heap
+        } else {
+            QueueKind::Calendar
+        };
+        let e: Engine<()> = Engine::new();
+        assert_eq!(e.queue_kind(), expect);
     }
 }

@@ -10,9 +10,13 @@
 //!   supports (Exponential by assumption 2, plus Weibull and LogNormal,
 //!   plus deterministic and empirical user-defined distributions).
 //! * [`event`] — the event vocabulary and lazy-cancellation tokens.
-//! * [`engine`] — the binary-heap event queue with stable FIFO
+//! * [`calendar`] — the bucketed calendar queue backing the engine:
+//!   amortized O(1) schedule/pop with heap-identical delivery order.
+//! * [`engine`] — the pending-event set (calendar by default, binary
+//!   heap behind `QueueKind::Heap` for A/B runs) with stable FIFO
 //!   tie-breaking and a monotone simulation clock.
 
+pub mod calendar;
 pub mod dist;
 pub mod engine;
 pub mod event;

@@ -229,6 +229,12 @@ pub const REGISTRY: &[Metric] = &[
         doc: "events the engine delivered (perf accounting)",
         extract: |_, o| o.events_delivered as f64,
     },
+    Metric {
+        name: "events_scheduled",
+        unit: "count",
+        doc: "events scheduled into the engine (thinning efficiency accounting)",
+        extract: |_, o| o.events_scheduled as f64,
+    },
 ];
 
 /// Look a metric up by name.

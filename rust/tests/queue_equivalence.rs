@@ -1,0 +1,172 @@
+//! Cross-queue equivalence: the calendar queue must be observationally
+//! identical to the binary heap — not statistically, *byte-for-byte*.
+//! The engine's delivery contract is earliest-`at` first with FIFO
+//! tie-breaks by schedule order, and both backends implement it exactly,
+//! so every pop (time, payload), every `pending()` count, and every full
+//! simulation output must agree.
+//!
+//! Layers of evidence:
+//! * lockstep random-workload drive (property harness, hostile `dt` mix:
+//!   exact ties, sub-bucket-width clusters, far-future outliers that land
+//!   in the calendar's overflow list);
+//! * explicit FIFO-tie and outlier regressions;
+//! * `reset()`-reuse round two (the calendar keeps its learned geometry);
+//! * whole-simulation output equality over the config zoo.
+
+use airesim::config::{DistKind, Params};
+use airesim::model::cluster::Simulation;
+use airesim::sim::engine::{Engine, QueueKind};
+use airesim::testkit::{check, Gen};
+
+/// Drive both backends with an identical op sequence; assert every
+/// observable agrees at every step. Payload = schedule index, so payload
+/// equality proves FIFO tie-breaking matches too.
+fn lockstep(g: &mut Gen, rounds: usize) {
+    let mut cal: Engine<u64> = Engine::with_queue(QueueKind::Calendar, 16);
+    let mut heap: Engine<u64> = Engine::with_queue(QueueKind::Heap, 16);
+    let mut tag = 0u64;
+    for _ in 0..rounds {
+        // A burst of schedules with a hostile delay mix.
+        for _ in 0..g.usize_in(0, 12) {
+            let dt = match g.usize_in(0, 9) {
+                // Exact ties, sub-bucket-width clusters, far-future
+                // outliers, and typical delays, in that order.
+                0 => 0.0,
+                1 => g.f64_in(0.0, 1e-6),
+                2 => g.f64_in(1e6, 1e9),
+                _ => g.f64_in(0.0, 1e3),
+            };
+            cal.schedule_in(dt, tag);
+            heap.schedule_in(dt, tag);
+            tag += 1;
+        }
+        // A burst of pops, compared element-wise.
+        for _ in 0..g.usize_in(0, 12) {
+            let a = cal.pop();
+            let b = heap.pop();
+            assert_eq!(a, b, "pop diverged (after {tag} schedules)");
+            if a.is_none() {
+                break;
+            }
+        }
+        assert_eq!(cal.pending(), heap.pending());
+        assert_eq!(cal.now(), heap.now());
+        assert_eq!(cal.peek_time(), heap.peek_time());
+    }
+    // Full drain: remaining order must also agree.
+    loop {
+        let a = cal.pop();
+        let b = heap.pop();
+        assert_eq!(a, b, "drain diverged");
+        if a.is_none() {
+            break;
+        }
+    }
+    assert_eq!(cal.scheduled(), heap.scheduled());
+    assert_eq!(cal.delivered(), heap.delivered());
+}
+
+#[test]
+fn calendar_matches_heap_under_random_workloads() {
+    check("calendar ≡ heap lockstep", 40, |g| {
+        let rounds = g.usize_in(10, 120);
+        lockstep(g, rounds);
+    });
+}
+
+#[test]
+fn fifo_ties_deliver_in_schedule_order_on_both_queues() {
+    for kind in [QueueKind::Calendar, QueueKind::Heap] {
+        let mut e: Engine<u64> = Engine::with_queue(kind, 4);
+        // Interleave two tie groups with a distinct time between them.
+        for i in 0..8 {
+            e.schedule_at(5.0, i);
+        }
+        e.schedule_at(2.0, 100);
+        for i in 8..16 {
+            e.schedule_at(5.0, i);
+        }
+        assert_eq!(e.pop(), Some((2.0, 100)));
+        for i in 0..16 {
+            assert_eq!(e.pop(), Some((5.0, i)), "{kind:?} broke FIFO ties");
+        }
+        assert_eq!(e.pop(), None);
+    }
+}
+
+#[test]
+fn far_future_outliers_come_back_in_order() {
+    let mut cal: Engine<u32> = Engine::with_queue(QueueKind::Calendar, 8);
+    let mut heap: Engine<u32> = Engine::with_queue(QueueKind::Heap, 8);
+    for e in [&mut cal as &mut Engine<u32>, &mut heap] {
+        e.schedule_at(1e9, 3); // lands in the calendar overflow list
+        e.schedule_at(1.0, 1);
+        e.schedule_at(5e8, 2);
+        e.schedule_at(2e9, 4);
+    }
+    for _ in 0..5 {
+        assert_eq!(cal.pop(), heap.pop());
+    }
+}
+
+#[test]
+fn reset_reuse_stays_equivalent() {
+    // Round one teaches the calendar a bucket geometry; round two (after
+    // reset) must still match the heap exactly with a different workload.
+    let mut g = Gen::new(0xCA1E_4DA2);
+    let mut cal: Engine<u64> = Engine::with_queue(QueueKind::Calendar, 16);
+    let mut heap: Engine<u64> = Engine::with_queue(QueueKind::Heap, 16);
+    for round in 0..3 {
+        let scale = [1e3, 1e7, 1.0][round]; // shift the time scale each round
+        for i in 0..500u64 {
+            let at = g.f64_in(0.0, scale);
+            cal.schedule_at(at, i);
+            heap.schedule_at(at, i);
+        }
+        loop {
+            let a = cal.pop();
+            assert_eq!(a, heap.pop(), "round {round} diverged");
+            if a.is_none() {
+                break;
+            }
+        }
+        cal.reset(16);
+        heap.reset(16);
+        assert_eq!(cal.pending(), 0);
+        assert_eq!(cal.now(), 0.0);
+    }
+}
+
+/// Whole-simulation equality: same seed, same config, both queue kinds →
+/// byte-identical `RunOutputs`. This is the end-to-end form of the
+/// "default outputs stay byte-identical" acceptance bar.
+#[test]
+fn full_simulation_outputs_identical_across_queues() {
+    let mut zoo = vec![Params::small_test()];
+
+    let mut multi = Params::small_test();
+    multi.num_jobs = 2;
+    multi.job_size = 24;
+    multi.warm_standbys = 2;
+    multi.working_pool = 56;
+    multi.spare_pool = 8;
+    zoo.push(multi);
+
+    let mut churn = Params::small_test();
+    churn.bad_regen_interval = 300.0;
+    churn.bad_regen_fraction = 0.05;
+    zoo.push(churn);
+
+    let mut weibull = Params::small_test();
+    weibull.failure_dist = DistKind::Weibull { shape: 1.5 };
+    weibull.max_sim_time = 1e9;
+    zoo.push(weibull);
+
+    for (i, p) in zoo.iter().enumerate() {
+        for seed in [1u64, 42, 4242] {
+            let a = Simulation::new(p, seed).with_queue(QueueKind::Calendar).run();
+            let b = Simulation::new(p, seed).with_queue(QueueKind::Heap).run();
+            assert_eq!(a, b, "config {i} seed {seed}: queues diverged");
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Acceptance suite for the thinned aggregate failure clocks.
+//!
+//! The thinned model replaces N per-server renewal timers with ONE
+//! Poisson candidate clock per gang drawn against a majorizing hazard
+//! envelope (Lewis–Shedler thinning). Correctness is *statistical*
+//! equivalence with the per-server reference — same failure process in
+//! distribution, not draw-for-draw — so the oracles here are means and
+//! spreads over many common-random-number replications:
+//!
+//! * mean makespan, mean failure count, mean uninterrupted-burst length
+//!   (the inter-arrival proxy), and the failure-count spread must agree
+//!   between `thinned` and `per_server` for Weibull and LogNormal fleets;
+//! * on an exponential fleet (where thinning never rejects) the same
+//!   bars hold against the exact `gang` fast path;
+//! * the whole point: `events_scheduled` must collapse — ≥5× fewer
+//!   scheduled events than per-server timers on a wide Weibull gang;
+//! * the PR-3 `CorrelatedFailures` wrapper composes unchanged: `auto` on
+//!   a rated topology + Weibull clocks builds `correlated(thinned)`.
+
+use airesim::config::{DistKind, Params, TopologyLevelSpec, TopologySpec};
+use airesim::model::cluster::Simulation;
+use airesim::model::{PolicySpec, RunOutputs};
+use airesim::sim::rng::Rng;
+
+/// A busy little fleet: failures are frequent relative to the job length,
+/// so every replication sees dozens of interrupts in every subsystem.
+fn fleet(dist: DistKind) -> Params {
+    let mut p = Params::small_test();
+    p.job_size = 32;
+    p.working_pool = 40;
+    p.warm_standbys = 4;
+    p.spare_pool = 8;
+    p.job_len = 2880.0;
+    p.max_sim_time = 1e9;
+    p.failure_dist = dist;
+    p
+}
+
+fn run_one(p: &Params, failure: &str, rng: Rng) -> RunOutputs {
+    let mut spec = PolicySpec::default();
+    spec.set("failure", failure).unwrap();
+    Simulation::from_spec(p, &spec, rng).unwrap().run()
+}
+
+struct ArmStats {
+    mean_makespan: f64,
+    mean_failures: f64,
+    std_failures: f64,
+    mean_burst: f64,
+}
+
+fn arm_stats(p: &Params, failure: &str, arm: u64, reps: u64) -> ArmStats {
+    let mut makespans = Vec::new();
+    let mut failures = Vec::new();
+    let mut bursts = Vec::new();
+    for r in 0..reps {
+        let o = run_one(p, failure, Rng::derived(7, &[arm, r]));
+        assert!(o.completed, "{failure} rep {r} did not complete");
+        makespans.push(o.makespan);
+        failures.push(o.failures_total as f64);
+        bursts.push(o.avg_run_duration);
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let mf = mean(&failures);
+    let var =
+        failures.iter().map(|x| (x - mf) * (x - mf)).sum::<f64>() / (reps - 1) as f64;
+    ArmStats {
+        mean_makespan: mean(&makespans),
+        mean_failures: mf,
+        std_failures: var.sqrt(),
+        mean_burst: mean(&bursts),
+    }
+}
+
+fn assert_close(what: &str, a: f64, b: f64, tol: f64) {
+    let rel = (a - b).abs() / b.abs().max(1e-12);
+    assert!(rel < tol, "{what} diverged: {a} vs {b} (rel {rel:.3}, tol {tol})");
+}
+
+/// The tentpole oracle: thinned and per-server clocks are draws from the
+/// same failure process. Checked on both non-exponential families the
+/// `auto` router sends to `thinned`.
+#[test]
+fn thinned_matches_per_server_statistically() {
+    for (arm, dist) in [
+        (0u64, DistKind::Weibull { shape: 1.5 }),
+        (2, DistKind::LogNormal { sigma: 0.8 }),
+    ] {
+        let p = fleet(dist);
+        let reps = 60;
+        let thin = arm_stats(&p, "thinned", arm, reps);
+        let per = arm_stats(&p, "per_server", arm + 1, reps);
+        let tag = format!("{dist:?}");
+        assert_close(&format!("{tag} mean makespan"), thin.mean_makespan, per.mean_makespan, 0.05);
+        assert_close(&format!("{tag} mean failures"), thin.mean_failures, per.mean_failures, 0.10);
+        assert_close(&format!("{tag} mean burst"), thin.mean_burst, per.mean_burst, 0.10);
+        // Spread too: equal means with the wrong inter-arrival shape would
+        // show up as a different failure-count dispersion.
+        assert_close(&format!("{tag} failures spread"), thin.std_failures, per.std_failures, 0.35);
+        // Sanity: the runs actually exercised the clocks.
+        assert!(thin.mean_failures > 10.0, "{tag}: too few failures to compare");
+    }
+}
+
+/// On exponential clocks the envelope is exact (H == Λ, no rejections),
+/// so thinned must also agree with the legacy gang fast path.
+#[test]
+fn thinned_matches_gang_on_exponential_fleets() {
+    let p = fleet(DistKind::Exponential);
+    let reps = 60;
+    let thin = arm_stats(&p, "thinned", 10, reps);
+    let gang = arm_stats(&p, "gang", 11, reps);
+    assert_close("exp mean makespan", thin.mean_makespan, gang.mean_makespan, 0.05);
+    assert_close("exp mean failures", thin.mean_failures, gang.mean_failures, 0.10);
+    assert_close("exp mean burst", thin.mean_burst, gang.mean_burst, 0.10);
+}
+
+/// The perf claim, as a hard functional bar: one aggregate clock per gang
+/// schedules at least 5× fewer events than one timer per server on a
+/// wide Weibull gang (the acceptance threshold from the PR issue; at
+/// 10k servers the bench shows far more — see BENCH_PR6.json).
+#[test]
+fn thinned_schedules_far_fewer_events() {
+    let mut p = fleet(DistKind::Weibull { shape: 1.5 });
+    p.job_size = 256;
+    p.working_pool = 288;
+    p.warm_standbys = 8;
+    p.spare_pool = 32;
+    let thin = run_one(&p, "thinned", Rng::new(42));
+    let per = run_one(&p, "per_server", Rng::new(42));
+    assert!(thin.completed && per.completed);
+    assert!(
+        per.events_scheduled >= 5 * thin.events_scheduled,
+        "expected ≥5× fewer scheduled events: thinned {} vs per_server {}",
+        thin.events_scheduled,
+        per.events_scheduled
+    );
+    // The ledger itself must be coherent: everything delivered was
+    // scheduled (lazy cancellation means not everything scheduled is
+    // delivered before the run ends).
+    assert!(thin.events_delivered <= thin.events_scheduled);
+    assert!(per.events_delivered <= per.events_scheduled);
+}
+
+/// Composition with PR-3 correlated outages: `auto` on a rated topology
+/// with Weibull base clocks must wrap thinned clocks in
+/// `CorrelatedFailures` — and the combined run must still complete with
+/// both failure sources live.
+#[test]
+fn correlated_wrapper_composes_over_thinned_clocks() {
+    let mut p = fleet(DistKind::Weibull { shape: 1.5 });
+    p.job_size = 24;
+    p.working_pool = 96;
+    p.warm_standbys = 12;
+    p.spare_pool = 16;
+    p.topology = Some(TopologySpec {
+        levels: vec![
+            TopologyLevelSpec { name: "rack".into(), size: 4, outage_rate: 0.0 },
+            TopologyLevelSpec {
+                name: "switch".into(),
+                size: 4,
+                outage_rate: 0.5 / 1440.0,
+            },
+        ],
+    });
+    let set = PolicySpec::default().build(&p).unwrap();
+    assert_eq!(set.failure.name(), "correlated");
+
+    let o = Simulation::new(&p, 7).run();
+    assert!(o.completed);
+    assert!(o.failures_total > 0, "base (thinned) clocks never fired");
+    assert!(o.domain_failures > 0, "correlated outage clocks never fired");
+}
