@@ -204,6 +204,13 @@ pub struct Params {
     /// the paper's configuration) keeps servers topologically anonymous
     /// and every output byte-identical to the pre-topology simulator.
     pub topology: Option<TopologySpec>,
+
+    // ---- workload (open-loop arrivals; `workload:` config block) ----
+    /// Open-loop arrival process and job-mix classes. `None` (the default,
+    /// and the paper's configuration) starts all `num_jobs` jobs at t=0
+    /// with zero extra RNG draws — byte-identical to the pre-workload
+    /// simulator.
+    pub workload: Option<crate::model::workload::WorkloadSpec>,
 }
 
 impl Params {
@@ -246,6 +253,7 @@ impl Params {
             preemption_cost: 0.0,
             max_sim_time: 10.0 * 256.0 * MIN_PER_DAY,
             topology: None,
+            workload: None,
         }
     }
 
@@ -288,6 +296,7 @@ impl Params {
             preemption_cost: 0.0,
             max_sim_time: 100.0 * MIN_PER_DAY,
             topology: None,
+            workload: None,
         }
     }
 

@@ -5,6 +5,9 @@
 
 use crate::config::params::{DistKind, Params, TopologyLevelSpec, TopologySpec};
 use crate::config::yaml::Value;
+use crate::model::workload::{
+    parse_empirical, parse_replay, ArrivalProcess, JobClass, WorkloadSpec,
+};
 use std::fmt;
 
 #[derive(Debug)]
@@ -15,6 +18,7 @@ pub enum ConfigError {
     Infeasible(u32, u32, u32),
     BadDist(String),
     Topology(String),
+    Workload(String),
 }
 
 impl fmt::Display for ConfigError {
@@ -36,6 +40,7 @@ impl fmt::Display for ConfigError {
                  lognormal:<sigma>)"
             ),
             ConfigError::Topology(s) => write!(f, "bad topology: {s}"),
+            ConfigError::Workload(s) => write!(f, "bad workload: {s}"),
         }
     }
 }
@@ -285,6 +290,183 @@ pub fn topology_from_config(doc: &Value) -> Result<Option<TopologySpec>, ConfigE
     Ok(Some(spec))
 }
 
+/// Parse the `workload:` config block (see [`crate::model::workload`]).
+/// Three mutually exclusive arrival sources plus optional job-mix
+/// classes:
+///
+/// ```yaml
+/// workload:
+///   poisson: { rate: 0.01 }        # arrivals/min
+///   # empirical: { file: gaps.txt }  # one inter-arrival per line
+///   # replay: { file: run.ndjson }   # a --trace-out capture
+///   classes:                       # optional weighted job mix
+///     - { weight: 3, job_size: 8, warm_standbys: 1 }
+///     - { weight: 1, job_size: 32, job_len: 2880 }
+/// ```
+///
+/// `empirical`/`replay` files are read and parsed here, so errors
+/// surface at config load with the offending line named.
+pub fn workload_from_config(doc: &Value) -> Result<Option<WorkloadSpec>, ConfigError> {
+    let Some(section) = doc.get("workload") else {
+        return Ok(None);
+    };
+    let err = |s: String| ConfigError::Workload(s);
+    let map = section
+        .as_map()
+        .ok_or_else(|| err("`workload:` must be a map".into()))?;
+    for key in map.keys() {
+        if !["poisson", "empirical", "replay", "classes"].contains(&key.as_str()) {
+            return Err(err(format!(
+                "unknown key `{key}` (expected poisson, empirical, replay, classes)"
+            )));
+        }
+    }
+    let sources = ["poisson", "empirical", "replay"]
+        .iter()
+        .filter(|k| map.contains_key(**k))
+        .count();
+    if sources != 1 {
+        return Err(err(
+            "needs exactly one arrival source: poisson: { rate }, \
+             empirical: { file }, or replay: { file }"
+                .into(),
+        ));
+    }
+    // A `{ file: ... }` sub-map with unknown-key rejection.
+    let file_of = |key: &str| -> Result<String, ConfigError> {
+        let sub = map
+            .get(key)
+            .expect("presence checked")
+            .as_map()
+            .ok_or_else(|| err(format!("`{key}:` must be a map with `file:`")))?;
+        for k in sub.keys() {
+            if k != "file" {
+                return Err(err(format!("unknown `{key}` key `{k}` (expected file)")));
+            }
+        }
+        let file = sub
+            .get("file")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| err(format!("`{key}:` needs `file: <path>`")))?;
+        Ok(file.to_string())
+    };
+    let read = |file: &str| -> Result<String, ConfigError> {
+        std::fs::read_to_string(file)
+            .map_err(|e| err(format!("cannot read `{file}`: {e}")))
+    };
+    let arrival = if map.contains_key("poisson") {
+        let sub = map
+            .get("poisson")
+            .expect("presence checked")
+            .as_map()
+            .ok_or_else(|| err("`poisson:` must be a map with `rate:`".into()))?;
+        for k in sub.keys() {
+            if k != "rate" {
+                return Err(err(format!("unknown `poisson` key `{k}` (expected rate)")));
+            }
+        }
+        let rate = sub
+            .get("rate")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| err("`poisson:` needs numeric `rate:` (arrivals/min)".into()))?;
+        if !rate.is_finite() || rate < 0.0 {
+            return Err(err(format!("poisson rate {rate} must be finite and >= 0")));
+        }
+        ArrivalProcess::Poisson { rate }
+    } else if map.contains_key("empirical") {
+        let file = file_of("empirical")?;
+        let gaps = parse_empirical(&read(&file)?)
+            .map_err(|e| err(format!("empirical `{file}`: {e}")))?;
+        ArrivalProcess::Empirical { file, gaps }
+    } else {
+        let file = file_of("replay")?;
+        let (arrivals, failures) = parse_replay(&read(&file)?)
+            .map_err(|e| err(format!("replay `{file}`: {e}")))?;
+        if arrivals.is_empty() {
+            return Err(err(format!(
+                "replay `{file}` holds no job_arrival events (only workload runs \
+                 record them; re-capture with a `workload:` config and --trace-out)"
+            )));
+        }
+        ArrivalProcess::Replay { file, arrivals, failures }
+    };
+    let mut classes = Vec::new();
+    if let Some(list) = map.get("classes") {
+        let list = list
+            .as_list()
+            .ok_or_else(|| err("`classes:` must be a list".into()))?;
+        if matches!(arrival, ArrivalProcess::Replay { .. }) {
+            return Err(err(
+                "`classes:` cannot be combined with replay (the capture already \
+                 carries each arrival's resolved shape)"
+                    .into(),
+            ));
+        }
+        let as_count = |key: &str, v: f64| -> Result<u32, ConfigError> {
+            if v.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&v) {
+                return Err(err(format!("`{key}` = {v} must be a non-negative integer")));
+            }
+            Ok(v as u32)
+        };
+        for (i, item) in list.iter().enumerate() {
+            let m = item
+                .as_map()
+                .ok_or_else(|| err(format!("class {}: must be a map", i + 1)))?;
+            for k in m.keys() {
+                if !["weight", "job_size", "job_len", "warm_standbys"].contains(&k.as_str()) {
+                    return Err(err(format!(
+                        "class {}: unknown key `{k}` (expected weight, job_size, \
+                         job_len, warm_standbys)",
+                        i + 1
+                    )));
+                }
+            }
+            let weight = m
+                .get("weight")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| err(format!("class {}: needs numeric `weight:`", i + 1)))?;
+            if !weight.is_finite() || weight <= 0.0 {
+                return Err(err(format!("class {}: weight {weight} must be > 0", i + 1)));
+            }
+            let num = |key: &str| -> Result<Option<f64>, ConfigError> {
+                match m.get(key) {
+                    Some(v) => v
+                        .as_f64()
+                        .map(Some)
+                        .ok_or_else(|| ConfigError::BadValue(format!("class {}: {key}", i + 1))),
+                    None => Ok(None),
+                }
+            };
+            let job_size = match num("job_size")? {
+                Some(v) => {
+                    let v = as_count(&format!("class {} job_size", i + 1), v)?;
+                    if v == 0 {
+                        return Err(err(format!("class {}: job_size must be >= 1", i + 1)));
+                    }
+                    Some(v)
+                }
+                None => None,
+            };
+            let warm_standbys = match num("warm_standbys")? {
+                Some(v) => Some(as_count(&format!("class {} warm_standbys", i + 1), v)?),
+                None => None,
+            };
+            let job_len = match num("job_len")? {
+                Some(v) if v > 0.0 && v.is_finite() => Some(v),
+                Some(v) => {
+                    return Err(err(format!("class {}: job_len {v} must be > 0", i + 1)))
+                }
+                None => None,
+            };
+            classes.push(JobClass { weight, job_size, job_len, warm_standbys });
+        }
+        if classes.is_empty() {
+            return Err(err("`classes:` must not be an empty list".into()));
+        }
+    }
+    Ok(Some(WorkloadSpec { arrival, classes }))
+}
+
 /// Apply a parsed config document's `params:` section onto defaults.
 pub fn params_from_config(doc: &Value) -> Result<Params, ConfigError> {
     let mut p = Params::table1_defaults();
@@ -309,6 +491,29 @@ pub fn params_from_config(doc: &Value) -> Result<Params, ConfigError> {
         }
     }
     p.topology = topology_from_config(doc)?;
+    p.workload = workload_from_config(doc)?;
+    // A replay's job count is the capture's, not `num_jobs`: keep them in
+    // sync so the engine's plan/job-table sizes (and per-job policy
+    // state) always agree.
+    if let Some(ArrivalProcess::Replay { arrivals, .. }) =
+        p.workload.as_ref().map(|w| &w.arrival)
+    {
+        p.num_jobs = arrivals.len() as u32;
+    }
+    // Replay re-schedules the *recorded* failures; live stochastic clocks
+    // would fire extra failures on top and the replayed timeline would
+    // diverge from the capture. Like `scenario: inject` studies, the
+    // silencing is config-level: the rates must be written as 0.
+    if p.workload.as_ref().is_some_and(|w| w.is_replay())
+        && (p.random_failure_rate > 0.0 || p.systematic_failure_rate > 0.0)
+    {
+        return Err(ConfigError::Workload(
+            "replay requires the stochastic failure clocks silenced: set \
+             random_failure_rate: 0 and systematic_failure_rate: 0 (the \
+             capture's failures are re-injected verbatim)"
+                .into(),
+        ));
+    }
     validate(&p)?;
     Ok(p)
 }
@@ -468,5 +673,135 @@ mod tests {
         let doc = yaml::parse("params:\n  recovery_time: 30\n").unwrap();
         let p = params_from_config(&doc).unwrap();
         assert!(p.topology.is_none());
+    }
+
+    /// A scratch file in the OS temp dir, deleted on drop.
+    struct TempFile(std::path::PathBuf);
+
+    impl TempFile {
+        fn new(name: &str, contents: &str) -> TempFile {
+            let path = std::env::temp_dir().join(format!(
+                "airesim_validate_{}_{name}",
+                std::process::id()
+            ));
+            std::fs::write(&path, contents).unwrap();
+            TempFile(path)
+        }
+
+        fn path(&self) -> &str {
+            self.0.to_str().unwrap()
+        }
+    }
+
+    impl Drop for TempFile {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_file(&self.0);
+        }
+    }
+
+    #[test]
+    fn no_workload_block_stays_none() {
+        let doc = yaml::parse("params:\n  recovery_time: 30\n").unwrap();
+        assert!(params_from_config(&doc).unwrap().workload.is_none());
+    }
+
+    #[test]
+    fn workload_poisson_with_classes_parses() {
+        let doc = yaml::parse(
+            "workload:\n  poisson: { rate: 0.01 }\n  classes:\n    - { weight: 3, job_size: 8, warm_standbys: 1 }\n    - { weight: 1, job_size: 32, job_len: 2880 }\n",
+        )
+        .unwrap();
+        let w = workload_from_config(&doc).unwrap().unwrap();
+        assert_eq!(w.arrival, ArrivalProcess::Poisson { rate: 0.01 });
+        assert_eq!(w.classes.len(), 2);
+        assert_eq!(
+            w.classes[0],
+            JobClass { weight: 3.0, job_size: Some(8), job_len: None, warm_standbys: Some(1) }
+        );
+        assert_eq!(w.classes[1].job_len, Some(2880.0));
+        assert!(!w.is_replay());
+    }
+
+    #[test]
+    fn workload_empirical_reads_the_file() {
+        let f = TempFile::new("gaps.txt", "# gaps\n10\n20\n");
+        let doc = yaml::parse(&format!("workload:\n  empirical: {{ file: {} }}\n", f.path()))
+            .unwrap();
+        let w = workload_from_config(&doc).unwrap().unwrap();
+        match w.arrival {
+            ArrivalProcess::Empirical { gaps, .. } => assert_eq!(gaps, vec![10.0, 20.0]),
+            other => panic!("{other:?}"),
+        }
+        // A parse error surfaces at config load, naming the line.
+        let bad = TempFile::new("bad_gaps.txt", "10\nbogus\n");
+        let doc = yaml::parse(&format!("workload:\n  empirical: {{ file: {} }}\n", bad.path()))
+            .unwrap();
+        let e = workload_from_config(&doc).unwrap_err().to_string();
+        assert!(e.contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn workload_replay_parses_and_requires_silenced_clocks() {
+        let f = TempFile::new(
+            "replay.ndjson",
+            concat!(
+                r#"{"type":"event","at":5,"event":"job_arrival","job":0,"size":0,"len":1440,"standbys":0}"#,
+                "\n",
+                r#"{"type":"event","at":9,"event":"failure","server":3,"systematic":false}"#,
+                "\n",
+            ),
+        );
+        let yaml_for = |rates: &str| {
+            format!("params:\n{rates}workload:\n  replay: {{ file: {} }}\n", f.path())
+        };
+        // Live stochastic rates alongside replay: rejected.
+        let doc = yaml::parse(&yaml_for("  num_jobs: 1\n")).unwrap();
+        let e = params_from_config(&doc).unwrap_err().to_string();
+        assert!(e.contains("random_failure_rate"), "{e}");
+        // Zeroed rates: parses, and the capture's events are lifted.
+        let doc = yaml::parse(&yaml_for(
+            "  num_jobs: 1\n  random_failure_rate: 0\n  systematic_failure_rate: 0\n",
+        ))
+        .unwrap();
+        let p = params_from_config(&doc).unwrap();
+        let w = p.workload.unwrap();
+        assert!(w.is_replay());
+        assert_eq!(w.replay_failures().len(), 1);
+    }
+
+    #[test]
+    fn workload_bad_shapes_rejected() {
+        let cases = [
+            // No arrival source.
+            "workload:\n  classes: [ { weight: 1 } ]\n",
+            // Two sources.
+            "workload:\n  poisson: { rate: 1 }\n  empirical: { file: x }\n",
+            // Unknown top-level key.
+            "workload:\n  poison: { rate: 1 }\n",
+            // Unknown poisson key.
+            "workload:\n  poisson: { rte: 1 }\n",
+            // Negative rate.
+            "workload:\n  poisson: { rate: -1 }\n",
+            // Missing file.
+            "workload:\n  empirical: { }\n",
+            // Unreadable file.
+            "workload:\n  empirical: { file: /nonexistent/gaps.txt }\n",
+            // Class without weight.
+            "workload:\n  poisson: { rate: 1 }\n  classes: [ { job_size: 8 } ]\n",
+            // Zero weight.
+            "workload:\n  poisson: { rate: 1 }\n  classes: [ { weight: 0 } ]\n",
+            // Fractional job_size.
+            "workload:\n  poisson: { rate: 1 }\n  classes: [ { weight: 1, job_size: 8.5 } ]\n",
+            // Zero job_size.
+            "workload:\n  poisson: { rate: 1 }\n  classes: [ { weight: 1, job_size: 0 } ]\n",
+            // Non-positive job_len.
+            "workload:\n  poisson: { rate: 1 }\n  classes: [ { weight: 1, job_len: 0 } ]\n",
+            // Unknown class key.
+            "workload:\n  poisson: { rate: 1 }\n  classes: [ { weight: 1, jobsize: 8 } ]\n",
+        ];
+        for yaml_text in cases {
+            let doc = yaml::parse(yaml_text).unwrap();
+            assert!(workload_from_config(&doc).is_err(), "accepted: {yaml_text}");
+        }
     }
 }

@@ -15,7 +15,7 @@
 
 use crate::config::Params;
 use crate::model::ctx::SimCtx;
-use crate::model::events::Ev;
+use crate::model::events::{Ev, FailureKind};
 use crate::model::failure::PerServerClocks;
 use crate::model::job::{Job, JobPhase};
 use crate::model::lifecycle as flow;
@@ -24,6 +24,7 @@ use crate::model::policy::{PolicySet, PolicySpec};
 use crate::model::repair_flow;
 use crate::model::selection::SelectionPolicy;
 use crate::model::server::Server;
+use crate::model::workload::WORKLOAD_STREAM;
 use crate::sim::engine::{Engine, QueueKind};
 use crate::sim::rng::Rng;
 use crate::sim::Time;
@@ -138,6 +139,52 @@ impl Simulation {
         (out, trace)
     }
 
+    /// Stamp the run's arrival plan, when a `workload:` is configured.
+    ///
+    /// Draws the plan from a dedicated [`Rng::derived`] stream seeded by
+    /// one `next_u64` off the master RNG — the *only* extra draw, taken
+    /// only when a workload exists, so no-workload runs stay
+    /// byte-identical. Each planned job gets its resolved shape stamped
+    /// and a `JobArrival` event scheduled; a replay workload also joins
+    /// its recorded failures to the injection schedule as
+    /// server-targeted injections. Returns true when arrivals are
+    /// open-loop (the caller skips the legacy all-at-t=0 start).
+    fn init_workload(&mut self) -> bool {
+        let Some(spec) = self.ctx.p.workload.clone() else {
+            return false;
+        };
+        let wseed = self.ctx.rng.next_u64();
+        let mut wrng = Rng::derived(wseed, &[WORKLOAD_STREAM]);
+        let plan = spec.plan(&self.ctx.p, &mut wrng);
+        assert_eq!(
+            plan.len(),
+            self.ctx.jobs.len(),
+            "workload plan size must match num_jobs (config loading keeps them in sync)"
+        );
+        for (job, s) in self.ctx.jobs.iter_mut().zip(&plan) {
+            job.size = s.size;
+            job.standbys_target = s.standbys;
+            job.len = s.len;
+            job.remaining = s.len;
+            job.arrived = false;
+            job.admitted = false;
+        }
+        for (j, s) in plan.iter().enumerate() {
+            self.ctx.engine.schedule_at(s.at, Ev::JobArrival { job: j as u32 });
+        }
+        for f in spec.replay_failures() {
+            let kind = if f.systematic {
+                FailureKind::Systematic
+            } else {
+                FailureKind::Random
+            };
+            let idx = self.injection_buf.len();
+            self.ctx.engine.schedule_at(f.at, Ev::Inject { idx });
+            self.injection_buf.push(Injection::for_server(f.at, f.server, kind));
+        }
+        true
+    }
+
     /// The event loop (both the consuming and the buffer-reusing entry
     /// points land here).
     fn run_in_place(&mut self) -> RunOutputs {
@@ -148,6 +195,8 @@ impl Simulation {
             self.injection_buf.push(inj);
             k += 1;
         }
+        // Open-loop arrivals (and replayed failures), when configured.
+        let open_loop = self.init_workload();
         // Periodic bad-server regeneration.
         if self.ctx.p.bad_regen_interval > 0.0 {
             self.ctx.engine.schedule_in(self.ctx.p.bad_regen_interval, Ev::BadRegen);
@@ -156,10 +205,13 @@ impl Simulation {
         // no draw — for the plain models).
         self.policies.failure.on_sim_start(&mut self.ctx);
         // Initial host selection for every job (in id order: earlier jobs
-        // get first pick of the pools).
+        // get first pick of the pools). Open-loop jobs instead enter at
+        // their scheduled `JobArrival`.
         self.ctx.out.per_job_makespans = vec![0.0; self.ctx.jobs.len()];
-        for j in 0..self.ctx.jobs.len() {
-            flow::attempt_start(&mut self.ctx, &mut self.policies, j);
+        if !open_loop {
+            for j in 0..self.ctx.jobs.len() {
+                flow::attempt_start(&mut self.ctx, &mut self.policies, j);
+            }
         }
 
         while let Some((now, ev)) = self.ctx.engine.pop() {
@@ -190,7 +242,7 @@ impl Simulation {
                 let acct = self
                     .policies
                     .checkpoint
-                    .account_burst(j, self.ctx.p.job_len - r0, wall, true);
+                    .account_burst(j, self.ctx.jobs[j].len - r0, wall, true);
                 self.ctx.out.checkpoints_committed += acct.commits;
                 self.ctx.out.checkpoint_overhead += acct.overhead;
                 self.ctx.jobs[j].remaining = (r0 - acct.work).max(0.0);
@@ -226,6 +278,7 @@ impl Simulation {
             Ev::BadRegen => flow::on_bad_regen(ctx, pol),
             Ev::DomainOutage => flow::on_domain_outage(ctx, pol),
             Ev::Inject { idx } => flow::on_inject(ctx, pol, self.injection_buf[idx]),
+            Ev::JobArrival { job } => flow::on_job_arrival(ctx, pol, job as usize),
         }
     }
 
@@ -273,13 +326,16 @@ impl Simulation {
     /// Initialize scheduling as `run()` does, without consuming events
     /// (test hook for step-wise execution).
     pub fn prime(&mut self) {
+        let open_loop = self.init_workload();
         if self.ctx.p.bad_regen_interval > 0.0 {
             self.ctx.engine.schedule_in(self.ctx.p.bad_regen_interval, Ev::BadRegen);
         }
         self.policies.failure.on_sim_start(&mut self.ctx);
         self.ctx.out.per_job_makespans = vec![0.0; self.ctx.jobs.len()];
-        for j in 0..self.ctx.jobs.len() {
-            flow::attempt_start(&mut self.ctx, &mut self.policies, j);
+        if !open_loop {
+            for j in 0..self.ctx.jobs.len() {
+                flow::attempt_start(&mut self.ctx, &mut self.policies, j);
+            }
         }
     }
 }

@@ -24,6 +24,7 @@ use crate::model::topology::Topology;
 use crate::sim::engine::Engine;
 use crate::sim::rng::Rng;
 use crate::sim::Time;
+use crate::stats::quantile::P2Quantile;
 use crate::trace::{Observer, Trace, TraceKind};
 
 /// Shared mutable state of one simulation run.
@@ -51,6 +52,14 @@ pub struct SimCtx {
     pub burst_count: u64,
     /// Scratch id buffer reused by fleet construction.
     pub scratch_ids: Vec<u32>,
+
+    // ---- admission-queue scratch (workload subsystem) ----
+    /// Jobs arrived but not yet admitted (current queue depth).
+    pub queued_now: u64,
+    /// Streaming median of admission waits (copied out in `finalize`).
+    pub wait_p50: P2Quantile,
+    /// Streaming p99 of admission waits.
+    pub wait_p99: P2Quantile,
 }
 
 impl SimCtx {
@@ -71,6 +80,9 @@ impl SimCtx {
             burst_sum: 0.0,
             burst_count: 0,
             scratch_ids: Vec::new(),
+            queued_now: 0,
+            wait_p50: P2Quantile::new(0.5),
+            wait_p99: P2Quantile::new(0.99),
         };
         ctx.reset(p, rng);
         ctx
@@ -100,6 +112,9 @@ impl SimCtx {
         self.observer = None;
         self.burst_sum = 0.0;
         self.burst_count = 0;
+        self.queued_now = 0;
+        self.wait_p50 = P2Quantile::new(0.5);
+        self.wait_p99 = P2Quantile::new(0.99);
         self.rng = rng;
         self.p = p.clone();
     }
@@ -147,8 +162,15 @@ impl SimCtx {
             self.out.completed = false;
             self.out.makespan = self.p.max_sim_time;
             for j in &self.jobs {
-                if j.phase == JobPhase::Stalled {
+                // Jobs that never arrived are not in the system: no stall.
+                if j.phase == JobPhase::Stalled && j.arrived {
                     self.out.stall_time += self.p.max_sim_time - j.stalled_since;
+                }
+                // Horizon cut for still-queued arrivals: their censored
+                // wait counts, so `queue_wait_total` stays the exact
+                // time-integral of the queue depth (Little's law).
+                if j.arrived && !j.admitted {
+                    self.out.queue_wait_total += self.p.max_sim_time - j.arrived_at;
                 }
                 // Still down from a correlated outage at the horizon.
                 if let Some(t) = j.domain_down_since {
@@ -160,8 +182,10 @@ impl SimCtx {
         self.out.work_done = self
             .jobs
             .iter()
-            .map(|j| (self.p.job_len - j.remaining).max(0.0))
+            .map(|j| (j.len - j.remaining).max(0.0))
             .sum();
+        self.out.queue_wait_p50 = self.wait_p50.value();
+        self.out.queue_wait_p99 = self.wait_p99.value();
         self.out.preemptions = self.pools.preemptions;
         self.out.preemption_cost = self.pools.preemption_cost_total;
         self.out.repairs_auto = self.shop.completed_auto;

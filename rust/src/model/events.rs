@@ -53,4 +53,9 @@ pub enum Ev {
     /// A scripted failure injection (see [`crate::trace::inject`]);
     /// carries the index into the injection plan.
     Inject { idx: usize },
+    /// A job arrives (open-loop workload, [`crate::model::workload`]):
+    /// it joins the admission queue and attempts its first host
+    /// selection. Only scheduled when a `workload:` is configured — the
+    /// legacy all-jobs-at-t=0 path never sees this event.
+    JobArrival { job: u32 },
 }

@@ -53,6 +53,28 @@ pub struct Job {
     /// When a correlated domain outage last stopped this job, if it has
     /// not resumed running since (attributes downtime to domain events).
     pub domain_down_since: Option<Time>,
+
+    // ---- per-job shape (workload job-mix classes) ----
+    /// Gang size for this job; 0 = "use `Params::job_size`" (the legacy
+    /// homogeneous path and directly-constructed test jobs).
+    pub size: u32,
+    /// Warm-standby target for this job (only meaningful when `size > 0`;
+    /// the homogeneous path reads `Params::warm_standbys`).
+    pub standbys_target: u32,
+    /// Failure-free length of this job in minutes (every constructor sets
+    /// it; workload classes override the `Params::job_len` default).
+    pub len: Time,
+
+    // ---- open-loop arrival bookkeeping (workload subsystem) ----
+    /// Has the job arrived? Legacy jobs are constructed arrived; workload
+    /// jobs flip this in the `JobArrival` handler. An unarrived job takes
+    /// no servers and blocks no repair routing.
+    pub arrived: bool,
+    /// When the job arrived (admission-wait accounting).
+    pub arrived_at: Time,
+    /// Has the job been admitted (first successful allocation)? Guards
+    /// the one-shot admission metrics; legacy jobs are born admitted.
+    pub admitted: bool,
 }
 
 impl Job {
@@ -72,6 +94,12 @@ impl Job {
             stalled_since: 0.0,
             recovery_end: 0.0,
             domain_down_since: None,
+            size: 0,
+            standbys_target: 0,
+            len: job_len,
+            arrived: true,
+            arrived_at: 0.0,
+            admitted: true,
         }
     }
 
@@ -88,6 +116,25 @@ impl Job {
         self.stalled_since = 0.0;
         self.recovery_end = 0.0;
         self.domain_down_since = None;
+        self.size = 0;
+        self.standbys_target = 0;
+        self.len = job_len;
+        self.arrived = true;
+        self.arrived_at = 0.0;
+        self.admitted = true;
+    }
+
+    /// This job's `(gang size, warm-standby target)`: its own class shape
+    /// when one was assigned (`size > 0`), else the homogeneous Table-I
+    /// values — identical arithmetic, so the legacy path is bit-for-bit
+    /// unchanged.
+    #[inline]
+    pub fn shape(&self, p: &Params) -> (u32, u32) {
+        if self.size > 0 {
+            (self.size, self.standbys_target)
+        } else {
+            (p.job_size, p.warm_standbys)
+        }
     }
 
     /// Total servers currently allotted to the job.
@@ -95,13 +142,16 @@ impl Job {
         self.active.len() + self.standbys.len()
     }
 
-    /// Is the job live and under its full allotment (`job_size +
-    /// warm_standbys`)? The single source of truth for "this job would
-    /// take another server": repair reintegration, preemption-arrival
-    /// routing, and the `job_first` repair priority all key on it.
+    /// Is the job live and under its full allotment (`size +
+    /// standbys_target`, per-job)? The single source of truth for "this
+    /// job would take another server": repair reintegration,
+    /// preemption-arrival routing, and the `job_first` repair priority
+    /// all key on it. A job that has not arrived yet takes nothing.
     pub fn wants_more(&self, p: &Params) -> bool {
-        self.phase != JobPhase::Done
-            && self.allotted() < (p.job_size + p.warm_standbys) as usize
+        let (size, standbys) = self.shape(p);
+        self.arrived
+            && self.phase != JobPhase::Done
+            && self.allotted() < (size + standbys) as usize
     }
 
     /// Commit the progress of a running burst that ends now.
@@ -172,6 +222,10 @@ mod tests {
         j.pause(60.0);
         j.gen.bump();
         j.recovery_end = 99.0;
+        j.size = 16;
+        j.arrived = false;
+        j.admitted = false;
+        j.arrived_at = 40.0;
         j.reset(0, 1000.0);
         assert_eq!(j.id, 0);
         assert_eq!(j.recovery_end, 0.0);
@@ -179,6 +233,31 @@ mod tests {
         assert_eq!(j.remaining, 1000.0);
         assert!(j.active.is_empty() && j.standbys.is_empty());
         assert_eq!(j.gen.0, 0);
+        assert_eq!((j.size, j.len), (0, 1000.0));
+        assert!(j.arrived && j.admitted);
+        assert_eq!(j.arrived_at, 0.0);
+    }
+
+    #[test]
+    fn shape_falls_back_to_params() {
+        let p = Params::small_test();
+        let mut j = Job::new(100.0);
+        assert_eq!(j.shape(&p), (p.job_size, p.warm_standbys));
+        j.size = 8;
+        j.standbys_target = 0;
+        assert_eq!(j.shape(&p), (8, 0), "per-job shape wins, even 0 standbys");
+    }
+
+    #[test]
+    fn unarrived_job_wants_nothing() {
+        let p = Params::small_test();
+        let mut j = Job::new(100.0);
+        assert!(j.wants_more(&p), "legacy jobs are born arrived");
+        j.arrived = false;
+        assert!(!j.wants_more(&p));
+        j.arrived = true;
+        j.phase = JobPhase::Done;
+        assert!(!j.wants_more(&p));
     }
 
     #[test]

@@ -53,6 +53,26 @@ pub(crate) fn on_gang_fail(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize, gang
 /// target job does not exist or is not running (the injection missed its
 /// window).
 pub(crate) fn on_inject(ctx: &mut SimCtx, pol: &mut PolicySet, inj: Injection) {
+    // Server-targeted form (`workload: replay:` re-injecting recorded
+    // failures): fail that server wherever it computes; dropped cleanly
+    // if it is not computing at `at`.
+    if let Some(server) = inj.server {
+        if server as usize >= ctx.fleet.len() {
+            return;
+        }
+        let s = &ctx.fleet[server as usize];
+        if s.state != ServerState::JobActive {
+            return;
+        }
+        let Some(j) = s.assigned_job.map(|j| j as usize) else {
+            return;
+        };
+        if ctx.jobs[j].phase != JobPhase::Running {
+            return;
+        }
+        handle_failure(ctx, pol, j, server, inj.kind);
+        return;
+    }
     let j = inj.job as usize;
     if j >= ctx.jobs.len() {
         return;
@@ -151,14 +171,14 @@ fn account_interrupted_burst(
     r0: Time,
     burst: Time,
 ) {
-    let done0 = ctx.p.job_len - r0;
+    let done0 = ctx.jobs[j].len - r0;
     let acct = pol.checkpoint.account_burst(j, done0, burst, true);
     ctx.out.checkpoints_committed += acct.commits;
     ctx.out.checkpoint_overhead += acct.overhead;
     // Same expression `pause` used, in useful-work terms — bit-identical
     // when the policy has no commit cost (acct.work == burst exactly).
     ctx.jobs[j].remaining = (r0 - acct.work).max(0.0);
-    let done = ctx.p.job_len - ctx.jobs[j].remaining;
+    let done = ctx.jobs[j].len - ctx.jobs[j].remaining;
     let lost = pol.checkpoint.work_lost(j, done);
     ctx.jobs[j].remaining += lost;
     ctx.out.work_lost += lost;
@@ -204,6 +224,19 @@ pub(crate) fn attempt_start(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
         ctx.engine.schedule_in(ctx.p.waiting_time, Ev::PreemptArrive { server: id });
     }
     if alloc.can_start {
+        // One-shot admission: the first successful allocation after an
+        // open-loop arrival leaves the admission queue (legacy jobs are
+        // born admitted, so this path stays dormant without `workload:`).
+        if !ctx.jobs[j].admitted {
+            ctx.jobs[j].admitted = true;
+            let wait = ctx.now() - ctx.jobs[j].arrived_at;
+            ctx.out.jobs_admitted += 1;
+            ctx.out.queue_wait_total += wait;
+            ctx.wait_p50.insert(wait);
+            ctx.wait_p99.insert(wait);
+            ctx.queued_now -= 1;
+            ctx.tr(TraceKind::JobAdmitted { job: j as u32, waited: wait });
+        }
         if was_stalled {
             let waited = ctx.now() - ctx.jobs[j].stalled_since;
             ctx.out.stall_time += waited;
@@ -226,13 +259,33 @@ pub(crate) fn attempt_start(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
 }
 
 /// Give every stalled job another allocation attempt (a server just
-/// became available somewhere).
+/// became available somewhere). Jobs that have not arrived yet sit in
+/// the initial `Stalled` phase but are not in the system.
 pub(crate) fn retry_stalled(ctx: &mut SimCtx, pol: &mut PolicySet) {
     for j in 0..ctx.jobs.len() {
-        if ctx.jobs[j].phase == JobPhase::Stalled {
+        if ctx.jobs[j].phase == JobPhase::Stalled && ctx.jobs[j].arrived {
             attempt_start(ctx, pol, j);
         }
     }
+}
+
+/// An open-loop arrival fires ([`crate::model::workload`]): the job
+/// enters the system, joins the admission queue, and immediately tries
+/// to allocate.
+pub(crate) fn on_job_arrival(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
+    debug_assert!(!ctx.jobs[j].arrived, "job {j} arrived twice");
+    let now = ctx.now();
+    ctx.jobs[j].arrived = true;
+    ctx.jobs[j].arrived_at = now;
+    // Stall accounting starts at arrival, not t=0.
+    ctx.jobs[j].stalled_since = now;
+    let (size, standbys) = ctx.jobs[j].shape(&ctx.p);
+    let len = ctx.jobs[j].len;
+    ctx.tr(TraceKind::JobArrival { job: j as u32, size, len, standbys });
+    ctx.out.jobs_arrived += 1;
+    ctx.queued_now += 1;
+    ctx.out.queue_depth_max = ctx.out.queue_depth_max.max(ctx.queued_now);
+    attempt_start(ctx, pol, j);
 }
 
 pub(crate) fn on_selection_done(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize, gen: u64) {
@@ -242,7 +295,7 @@ pub(crate) fn on_selection_done(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize,
     let ok = scheduler::activate(&ctx.p, &mut ctx.jobs[j], &mut ctx.fleet);
     debug_assert!(ok, "selection completed without enough servers");
     pol.failure.recount(ctx, j);
-    if ctx.jobs[j].remaining < ctx.p.job_len {
+    if ctx.jobs[j].remaining < ctx.jobs[j].len {
         // There is a checkpoint to restore.
         begin_recovery(ctx, pol, j);
     } else {
@@ -268,14 +321,14 @@ pub(crate) fn on_recovery_done(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize, 
 /// Arm the gang and let job `j` run.
 pub(crate) fn start_running(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
     let now = ctx.now();
-    debug_assert!(ctx.jobs[j].active.len() >= ctx.p.job_size as usize);
+    debug_assert!(ctx.jobs[j].active.len() >= ctx.jobs[j].shape(&ctx.p).0 as usize);
     // Close out downtime attributed to a correlated domain outage.
     if let Some(t) = ctx.jobs[j].domain_down_since.take() {
         ctx.out.domain_downtime += now - t;
     }
     ctx.jobs[j].resume(now);
     pol.failure.mark_running(ctx, j, now);
-    if ctx.jobs[j].remaining >= ctx.p.job_len {
+    if ctx.jobs[j].remaining >= ctx.jobs[j].len {
         ctx.tr(TraceKind::JobStarted);
     }
     // Self-optimizing checkpoint policies re-derive their interval from
@@ -287,7 +340,7 @@ pub(crate) fn start_running(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize) {
     // stretch the wall clock past the useful work remaining.
     let gen = ctx.jobs[j].gen.0;
     let remaining = ctx.jobs[j].remaining;
-    let wall = pol.checkpoint.wall_for_work(j, ctx.p.job_len - remaining, remaining);
+    let wall = pol.checkpoint.wall_for_work(j, ctx.jobs[j].len - remaining, remaining);
     ctx.engine.schedule_in(wall, Ev::JobComplete { job: j as u32, gen });
     // Failure clocks (module 1), per the failure model.
     pol.failure.arm(ctx, j);
@@ -305,7 +358,7 @@ pub(crate) fn on_job_complete(ctx: &mut SimCtx, pol: &mut PolicySet, j: usize, g
     // The final burst's commit stalls were wall time, not work: account
     // them and restate `remaining` in useful-work terms (bit-identical
     // to `pause`'s arithmetic when commits are free).
-    let acct = pol.checkpoint.account_burst(j, ctx.p.job_len - r0, burst, false);
+    let acct = pol.checkpoint.account_burst(j, ctx.jobs[j].len - r0, burst, false);
     ctx.out.checkpoints_committed += acct.commits;
     ctx.out.checkpoint_overhead += acct.overhead;
     ctx.jobs[j].remaining = (r0 - acct.work).max(0.0);
@@ -465,7 +518,8 @@ pub(crate) fn on_domain_outage(ctx: &mut SimCtx, pol: &mut PolicySet) {
         // order), so the trace's swap events name their victims exactly
         // as the single-failure path does.
         let mut victims = hit_actives.iter().filter(|&&(job, _)| job == j);
-        while ctx.jobs[j].active.len() < ctx.p.job_size as usize {
+        let size = ctx.jobs[j].shape(&ctx.p).0 as usize;
+        while ctx.jobs[j].active.len() < size {
             match ctx.jobs[j].promote_standby() {
                 Some(s) => {
                     let is_bad = ctx.fleet[s as usize].is_bad;
@@ -479,7 +533,7 @@ pub(crate) fn on_domain_outage(ctx: &mut SimCtx, pol: &mut PolicySet) {
                 None => break,
             }
         }
-        if ctx.jobs[j].active.len() >= ctx.p.job_size as usize {
+        if ctx.jobs[j].active.len() >= size {
             begin_recovery(ctx, pol, j);
         } else {
             ctx.out.domain_job_interruptions += 1;
@@ -498,7 +552,7 @@ pub(crate) fn on_domain_outage(ctx: &mut SimCtx, pol: &mut PolicySet) {
         }
         match ctx.jobs[j].phase {
             JobPhase::Recovering | JobPhase::Selecting
-                if ctx.jobs[j].allotted() < ctx.p.job_size as usize =>
+                if ctx.jobs[j].allotted() < ctx.jobs[j].shape(&ctx.p).0 as usize =>
             {
                 if ctx.jobs[j].phase == JobPhase::Recovering {
                     // The restore is cut short: only the elapsed recovery

@@ -6,7 +6,7 @@
 //! | 1. Server       | [`server`] (state machine) | [`failure`] — clock models (`gang`, `per_server`) |
 //! | 2. Coordinator  | [`coordinator`] (gang interrupt) | — |
 //! | 3. Scheduler    | [`scheduler`] (allotment top-up) | [`selection`] — host choice (`first_fit`, `random`, `locality`) |
-//! | 4. Repairs      | [`repair`] (auto→manual, capacity) | [`repair`] — queue discipline (`fifo`, `lifo`, `job_first`, `sla_aged`) |
+//! | 4. Repairs      | [`repair`] (auto→manual, capacity) | [`repair`] — queue discipline (`fifo`, `lifo`, `job_first`, `sla_aged`, `shortest_first`) |
 //! | 5. Pool         | [`pool`] (working/spare pools) | — |
 //!
 //! plus [`checkpoint`] (commit-cost/work-loss/restart policies:
@@ -15,8 +15,9 @@
 //! 12–13), [`retirement`] (failure-score retirement, §II-B), [`regen`]
 //! (bad-server regeneration), [`topology`] (failure-domain hierarchy:
 //! feeds the `correlated` failure model and the `anti_affinity`/domain
-//! `locality` selection policies), and [`outputs`] (measured outputs,
-//! §III-B).
+//! `locality` selection policies), [`workload`] (open-loop arrivals,
+//! admission queueing, and NDJSON trace replay), and [`outputs`]
+//! (measured outputs, §III-B).
 //!
 //! The composition layer: [`ctx::SimCtx`] holds the shared state,
 //! [`policy::PolicySet`]/[`policy::PolicySpec`] select implementations by
@@ -44,6 +45,7 @@ pub mod scheduler;
 pub mod selection;
 pub mod server;
 pub mod topology;
+pub mod workload;
 
 pub use cluster::{ReplicationRunner, Simulation};
 pub use outputs::RunOutputs;

@@ -80,6 +80,24 @@ pub struct RunOutputs {
     /// from each domain-caused stop until the job runs again).
     pub domain_downtime: Time,
 
+    // ---- admission queue (workload subsystem; all zero when no
+    // `workload:` is configured — legacy jobs are born admitted) ----
+    /// Open-loop job arrivals delivered before the horizon.
+    pub jobs_arrived: u64,
+    /// Arrivals admitted (first successful allocation).
+    pub jobs_admitted: u64,
+    /// Total admission-queue wait (minutes), summed over admitted jobs;
+    /// jobs still queued at the horizon contribute their censored wait,
+    /// so this equals the time-integral of the queue depth.
+    pub queue_wait_total: Time,
+    /// Peak admission-queue depth.
+    pub queue_depth_max: u64,
+    /// Median admission wait of admitted jobs (P² streaming estimate;
+    /// exact below 5 samples).
+    pub queue_wait_p50: Time,
+    /// 99th-percentile admission wait of admitted jobs (P² estimate).
+    pub queue_wait_p99: Time,
+
     /// Events the engine delivered (perf accounting).
     pub events_delivered: u64,
     /// Events scheduled into the engine — the thinned failure model's

@@ -5,7 +5,7 @@
 //! ```yaml
 //! policies:
 //!   selection: locality      # first_fit | random | locality | anti_affinity | power_of_two_choices
-//!   repair: job_first        # fifo | lifo | job_first | sla_aged
+//!   repair: job_first        # fifo | lifo | job_first | sla_aged | shortest_first
 //!   checkpoint: periodic     # auto | continuous | periodic | young_daly | adaptive | tiered
 //!   failure: auto            # auto | gang | per_server | thinned | correlated
 //! ```
@@ -23,7 +23,7 @@ use crate::model::checkpoint::{
 use crate::model::failure::{
     CorrelatedFailures, FailureModel, GangExponential, PerServerClocks, ThinnedClocks,
 };
-use crate::model::repair::{Fifo, JobFirst, Lifo, RepairPolicy, SlaAged};
+use crate::model::repair::{Fifo, JobFirst, Lifo, RepairPolicy, ShortestFirst, SlaAged};
 use crate::model::selection::{
     AntiAffinity, FirstFit, Locality, PowerOfTwoChoices, Random, SelectionPolicy,
 };
@@ -69,7 +69,8 @@ impl Default for PolicySpec {
 pub const SELECTION_NAMES: &[&str] =
     &["first_fit", "random", "locality", "anti_affinity", "power_of_two_choices"];
 /// Valid repair-policy names.
-pub const REPAIR_NAMES: &[&str] = &["fifo", "lifo", "job_first", "sla_aged"];
+pub const REPAIR_NAMES: &[&str] =
+    &["fifo", "lifo", "job_first", "sla_aged", "shortest_first"];
 /// Valid checkpoint-policy names.
 pub const CHECKPOINT_NAMES: &[&str] =
     &["auto", "continuous", "periodic", "young_daly", "adaptive", "tiered"];
@@ -129,6 +130,7 @@ impl PolicySpec {
             "lifo" => Box::new(Lifo),
             "job_first" => Box::new(JobFirst),
             "sla_aged" => Box::new(SlaAged),
+            "shortest_first" => Box::new(ShortestFirst),
             other => return Err(format!("unknown repair policy `{other}`")),
         };
         // The self-optimizing interval √(2·C·MTBF) is degenerate at C = 0

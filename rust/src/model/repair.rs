@@ -181,6 +181,40 @@ impl RepairQueue {
             None => self.pop_front(),
         }
     }
+
+    /// Remove and return the live entry minimizing `key(server)`, ties
+    /// broken by arrival order (the [`ShortestFirst`] discipline). An
+    /// O(live + tombstones) scan: entries already taken via a job bucket
+    /// are skipped (and left for the lazy front reclamation); the winner
+    /// is removed from *both* its homes, so no tombstone is created.
+    pub fn pop_min_by(&mut self, mut key: impl FnMut(ServerId) -> f64) -> Option<ServerId> {
+        let mut best: Option<(f64, u64, usize)> = None;
+        for (i, &(seq, server, _, _)) in self.fifo.iter().enumerate() {
+            if self.dead.contains(&seq) {
+                continue;
+            }
+            let k = key(server);
+            let better = match best {
+                None => true,
+                Some((bk, bseq, _)) => k < bk || (k == bk && seq < bseq),
+            };
+            if better {
+                best = Some((k, seq, i));
+            }
+        }
+        let (_, seq, i) = best?;
+        let (_, server, job, _) = self.fifo.remove(i).expect("index from the scan above");
+        if let Some(j) = job {
+            let q = &mut self.by_job[j as usize];
+            let pos = q
+                .iter()
+                .position(|&(s, _)| s == seq)
+                .expect("live entry has a bucket twin");
+            q.remove(pos);
+        }
+        self.len -= 1;
+        Some(server)
+    }
 }
 
 /// Queue discipline for a repair stage: which queued server starts when a
@@ -192,6 +226,7 @@ impl RepairQueue {
 /// | `lifo`      | [`Lifo`] — most recent arrival first |
 /// | `job_first` | [`JobFirst`] — servers a live job is waiting on jump the queue |
 /// | `sla_aged`  | [`SlaAged`] — freshest first, until the head breaches `repair_sla_minutes` |
+/// | `shortest_first` | [`ShortestFirst`] — shortest pre-drawn repair duration first (SPT) |
 pub trait RepairPolicy {
     /// Stable policy name (the YAML/CLI selector).
     fn name(&self) -> &'static str;
@@ -306,6 +341,35 @@ impl RepairPolicy for SlaAged {
             Some(_) => queue.pop_back(),
             None => None,
         }
+    }
+}
+
+/// Shortest-processing-time-first: serve the queued server whose repair
+/// will finish soonest — classic SPT, which minimizes mean queue wait.
+/// The ranking key is each server's *pre-drawn* repair duration
+/// ([`Server::predrawn_repair`]): when this policy is active, the repair
+/// flow draws the stage duration at queue entry and stashes it, and
+/// `start_stage` consumes the stash instead of drawing fresh — so the
+/// shop "knows" each pending repair's length the way a triage bench
+/// estimates work before queueing it. Servers without a pre-drawn
+/// duration rank last (infinity); ties fall back to arrival order.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShortestFirst;
+
+impl RepairPolicy for ShortestFirst {
+    fn name(&self) -> &'static str {
+        "shortest_first"
+    }
+
+    fn pick_next(
+        &self,
+        queue: &mut RepairQueue,
+        fleet: &[Server],
+        _jobs: &[Job],
+        _p: &Params,
+        _now: Time,
+    ) -> Option<ServerId> {
+        queue.pop_min_by(|s| fleet[s as usize].predrawn_repair.unwrap_or(f64::INFINITY))
     }
 }
 
@@ -710,6 +774,54 @@ mod tests {
             assert!(q.dead.is_empty(), "tombstone residue at round {round}");
             assert!(q.by_job.iter().all(|b| b.is_empty()), "bucket residue at round {round}");
         }
+    }
+
+    #[test]
+    fn shortest_first_picks_minimal_predrawn_duration() {
+        let p = Params::small_test();
+        let jobs = waiting_job(&p);
+        let mut fleet = test_fleet(4);
+        fleet[0].predrawn_repair = Some(50.0);
+        fleet[1].predrawn_repair = Some(10.0);
+        fleet[2].predrawn_repair = None; // never pre-drawn: ranks last
+        fleet[3].predrawn_repair = Some(10.0); // tie: arrival order wins
+        let mut q = queue_of(&[(0, Some(0)), (1, None), (2, Some(0)), (3, None)]);
+        let mut next =
+            |q: &mut RepairQueue| ShortestFirst.pick_next(q, &fleet, &jobs, &p, 0.0);
+        assert_eq!(next(&mut q), Some(1));
+        assert_eq!(next(&mut q), Some(3), "10.0 tie broken by arrival order");
+        assert_eq!(next(&mut q), Some(0));
+        assert_eq!(next(&mut q), Some(2));
+        assert_eq!(next(&mut q), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn shortest_first_skips_tombstones_and_keeps_consistency() {
+        // Interleave with job_first so the scan must step over dead
+        // entries and remove bucket twins from the middle of a bucket.
+        let p = Params::small_test();
+        let jobs = waiting_job(&p);
+        let mut fleet = test_fleet(4);
+        fleet[0].predrawn_repair = Some(5.0);
+        fleet[1].predrawn_repair = Some(1.0);
+        fleet[2].predrawn_repair = Some(2.0);
+        fleet[3].predrawn_repair = Some(9.0);
+        // 3 arrives first so the job_first tombstone lands mid-queue
+        // (not at the reclaimable front).
+        let mut q = queue_of(&[(3, None), (0, Some(0)), (1, Some(0)), (2, Some(0))]);
+        // job_first takes the bucket head (0) and tombstones its fifo copy.
+        assert_eq!(JobFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(0));
+        // shortest_first must skip the dead entry and take 1 (mid-bucket).
+        assert_eq!(ShortestFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(1));
+        // Remaining entries still pop consistently under other orders.
+        assert_eq!(Fifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(3));
+        assert_eq!(ShortestFirst.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(2));
+        assert!(q.is_empty());
+        // A final front pop reclaims the remaining tombstone: no residue.
+        assert_eq!(Fifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0), None);
+        assert!(q.fifo.is_empty() && q.dead.is_empty());
+        assert!(q.by_job.iter().all(|b| b.is_empty()));
     }
 
     #[test]

@@ -52,6 +52,15 @@ fn enter_stage(ctx: &mut SimCtx, pol: &mut PolicySet, server: ServerId, stage: R
     match ctx.shop.admit(&ctx.p, stage, server, job, now) {
         Admission::Start => start_stage(ctx, pol, server, stage),
         Admission::Queued => {
+            // `shortest_first` ranks queued servers by how long their
+            // repair will take: draw the stage duration now and stash it;
+            // `start_stage` consumes the stash instead of drawing fresh.
+            // Other disciplines never pre-draw, so their RNG order is
+            // untouched.
+            if pol.repair.name() == "shortest_first" {
+                let d = repair::duration(&ctx.p, stage, &mut ctx.rng);
+                ctx.fleet[server as usize].predrawn_repair = Some(d);
+            }
             ctx.fleet[server as usize].state = ServerState::RepairQueued;
             ctx.tr(TraceKind::RepairQueued {
                 server,
@@ -66,7 +75,11 @@ fn start_stage(ctx: &mut SimCtx, _pol: &mut PolicySet, server: ServerId, stage: 
         RepairStage::Automated => ServerState::AutoRepair,
         RepairStage::Manual => ServerState::ManualRepair,
     };
-    let d = repair::duration(&ctx.p, stage, &mut ctx.rng);
+    // A pre-drawn duration (stashed at queue entry under `shortest_first`)
+    // is the *same* sample the stage would draw here — consuming it keeps
+    // the duration distribution exact.
+    let predrawn = ctx.fleet[server as usize].predrawn_repair.take();
+    let d = predrawn.unwrap_or_else(|| repair::duration(&ctx.p, stage, &mut ctx.rng));
     ctx.tr(TraceKind::RepairStart { server, manual: stage == RepairStage::Manual });
     ctx.engine.schedule_in(d, Ev::RepairDone { server, stage });
 }

@@ -44,7 +44,8 @@ pub fn allocate(
     topo: Option<&Topology>,
     rng: &mut Rng,
 ) -> AllocOutcome {
-    let target = (p.job_size + p.warm_standbys) as usize;
+    let (size, standbys) = job.shape(p);
+    let target = (size + standbys) as usize;
 
     // 1. Working-pool idle servers, chosen by the selection policy.
     while job.allotted() < target {
@@ -71,14 +72,15 @@ pub fn allocate(
         }
     }
 
-    let can_start = job.allotted() >= p.job_size as usize;
+    let can_start = job.allotted() >= size as usize;
     AllocOutcome { preempted, can_start }
 }
 
 /// Promote standbys until `job_size` servers are active (start-of-run).
 /// Returns false if there were not enough.
 pub fn activate(p: &Params, job: &mut Job, fleet: &mut [Server]) -> bool {
-    while job.active.len() < p.job_size as usize {
+    let size = job.shape(p).0;
+    while job.active.len() < size as usize {
         match job.promote_standby() {
             Some(id) => fleet[id as usize].state = ServerState::JobActive,
             None => return false,

@@ -70,6 +70,11 @@ pub struct Server {
     pub failure_times: Vec<Time>,
     /// Lifetime failure count (stats).
     pub total_failures: u32,
+    /// Repair duration drawn at queue-entry time when the active repair
+    /// policy ranks by expected repair length (`shortest_first`); taken
+    /// by `start_stage` instead of drawing fresh. Always `None` under
+    /// policies that do not pre-draw, so their RNG order is untouched.
+    pub predrawn_repair: Option<Time>,
 }
 
 impl Server {
@@ -89,6 +94,7 @@ impl Server {
             active_since: 0.0,
             failure_times: Vec::new(),
             total_failures: 0,
+            predrawn_repair: None,
         }
     }
 
@@ -140,6 +146,7 @@ impl Server {
         self.active_since = 0.0;
         self.failure_times.clear();
         self.total_failures = 0;
+        self.predrawn_repair = None;
     }
 }
 
@@ -312,6 +319,7 @@ mod tests {
             s.active_since = 45.0;
             s.failure_times.extend([1.0, 2.0, 3.0]);
             s.total_failures = 9;
+            s.predrawn_repair = Some(42.0);
         }
         p.spare_pool += 4; // grow: exercises the extend tail
         build_fleet_into(&p, &mut Rng::new(12), &mut fleet, &mut scratch);
@@ -328,6 +336,7 @@ mod tests {
             assert_eq!(a.active_since, b.active_since);
             assert_eq!(a.failure_times, b.failure_times);
             assert_eq!(a.total_failures, b.total_failures);
+            assert_eq!(a.predrawn_repair, b.predrawn_repair);
         }
         // Shrink path too.
         p.spare_pool -= 6;

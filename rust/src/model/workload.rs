@@ -1,0 +1,412 @@
+//! The workload subsystem: open-loop job arrivals, job-mix classes, and
+//! NDJSON trace replay (the `workload:` config block).
+//!
+//! The paper's assumption 6 runs a fixed job set that all exists at t=0;
+//! real clusters serve a *stream* where jobs arrive, queue for admission,
+//! and contend for the spare pool. This module turns `Params::num_jobs`
+//! into an arrival plan:
+//!
+//! * [`ArrivalProcess::Poisson`] — exponential inter-arrivals at `rate`
+//!   (1/min), the open-loop M/·/· workload.
+//! * [`ArrivalProcess::Empirical`] — inter-arrivals read from a file,
+//!   one gap per line (cycled when the file holds fewer gaps than jobs).
+//! * [`ArrivalProcess::Replay`] — re-schedule `job_arrival` and
+//!   `failure` events from a previously captured `--trace-out` NDJSON
+//!   timeline; the stochastic failure clocks are silenced the way
+//!   `scenario: inject` already does, so the replayed run reproduces the
+//!   recorded timeline exactly — under whatever *policies* the replaying
+//!   config selects (record an incident, replay it under a different
+//!   repair discipline).
+//!
+//! Arrivals optionally draw a heterogeneous job shape from weighted
+//! [`JobClass`]es; the resolved shape is stamped onto the `Job` (see
+//! `Job::shape`) and carried in `job_arrival` trace events so replays
+//! keep the mix.
+//!
+//! Determinism: the arrival plan is drawn from a dedicated
+//! [`Rng::derived`] stream (key [`WORKLOAD_STREAM`]), seeded by a single
+//! `next_u64` taken from the run's master RNG *only when a workload is
+//! configured* — configs without `workload:` perform zero extra draws
+//! and stay byte-identical.
+
+use crate::config::Params;
+use crate::model::events::ServerId;
+use crate::report::json::Json;
+use crate::sim::dist::Dist;
+use crate::sim::rng::Rng;
+use crate::sim::Time;
+
+/// Derivation key for the arrival-plan RNG stream (`Rng::derived`),
+/// chosen to collide with no other derived stream in the crate.
+pub const WORKLOAD_STREAM: u64 = 0x574f_524b_4c4f_4144; // "WORKLOAD"
+
+/// One weighted job class: overrides the Table-I job shape for arrivals
+/// that draw it. Unset fields fall back to the corresponding `Params`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobClass {
+    /// Relative draw weight (> 0).
+    pub weight: f64,
+    pub job_size: Option<u32>,
+    pub job_len: Option<Time>,
+    pub warm_standbys: Option<u32>,
+}
+
+/// A `job_arrival` event lifted from a replayed trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplayArrival {
+    pub at: Time,
+    pub size: u32,
+    pub len: Time,
+    pub standbys: u32,
+}
+
+/// A `failure` event lifted from a replayed trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplayFailure {
+    pub at: Time,
+    pub server: ServerId,
+    pub systematic: bool,
+}
+
+/// Where inter-arrival times come from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Exponential inter-arrivals at `rate` jobs/min (`rate <= 0` puts
+    /// every job at t=0, the degenerate open-loop limit).
+    Poisson { rate: f64 },
+    /// Inter-arrivals from `file`, one per line (`#` comments and blank
+    /// lines skipped), parsed into `gaps` at config load. Cycled when
+    /// the run needs more arrivals than the file holds.
+    Empirical { file: String, gaps: Vec<Time> },
+    /// Events from a `--trace-out` NDJSON capture, parsed at config
+    /// load. `arrivals` drive the job plan (empty = the legacy all-at-
+    /// t=0 init); `failures` become server-targeted injections.
+    Replay { file: String, arrivals: Vec<ReplayArrival>, failures: Vec<ReplayFailure> },
+}
+
+/// The `workload:` config block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    pub arrival: ArrivalProcess,
+    /// Weighted job-mix classes; empty = every arrival uses the
+    /// homogeneous Table-I shape.
+    pub classes: Vec<JobClass>,
+}
+
+/// One planned arrival: job `j` of the run arrives at `at` with this
+/// resolved shape. `size == 0` means "use `Params`" (see `Job::shape`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobSpec {
+    pub at: Time,
+    pub size: u32,
+    pub len: Time,
+    pub standbys: u32,
+}
+
+impl WorkloadSpec {
+    /// Draw the run's arrival plan. `rng` must be the dedicated
+    /// workload stream; per arrival the draw order is *gap, then class*
+    /// (classes only drawn when `classes` is non-empty). Replay ignores
+    /// `rng` entirely. An empty plan means "legacy init": all
+    /// `num_jobs` jobs present and started at t=0.
+    pub fn plan(&self, p: &Params, rng: &mut Rng) -> Vec<JobSpec> {
+        match &self.arrival {
+            ArrivalProcess::Poisson { rate } => {
+                let gap_dist = Dist::exp_rate(*rate);
+                let mut t = 0.0;
+                (0..p.num_jobs)
+                    .map(|_| {
+                        let gap = if *rate > 0.0 { gap_dist.sample(rng) } else { 0.0 };
+                        t += gap;
+                        self.draw_class(p, rng, t)
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Empirical { gaps, .. } => {
+                let mut t = 0.0;
+                (0..p.num_jobs as usize)
+                    .map(|j| {
+                        t += gaps[j % gaps.len()];
+                        self.draw_class(p, rng, t)
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Replay { arrivals, .. } => arrivals
+                .iter()
+                .map(|a| JobSpec { at: a.at, size: a.size, len: a.len, standbys: a.standbys })
+                .collect(),
+        }
+    }
+
+    /// The failure injections a replay carries (empty for live arrival
+    /// processes).
+    pub fn replay_failures(&self) -> &[ReplayFailure] {
+        match &self.arrival {
+            ArrivalProcess::Replay { failures, .. } => failures,
+            _ => &[],
+        }
+    }
+
+    /// Is this a replay workload? (Drives the stochastic-clock
+    /// silencing in config validation.)
+    pub fn is_replay(&self) -> bool {
+        matches!(self.arrival, ArrivalProcess::Replay { .. })
+    }
+
+    /// Resolve the shape of one arrival at `at`: a weighted class draw
+    /// when classes are configured, else the `size == 0` sentinel that
+    /// makes `Job::shape` read `Params` (bit-identical arithmetic to
+    /// the homogeneous path).
+    fn draw_class(&self, p: &Params, rng: &mut Rng, at: Time) -> JobSpec {
+        if self.classes.is_empty() {
+            return JobSpec { at, size: 0, len: p.job_len, standbys: 0 };
+        }
+        let total: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let mut x = rng.next_f64() * total;
+        let mut chosen = &self.classes[self.classes.len() - 1];
+        for c in &self.classes {
+            if x < c.weight {
+                chosen = c;
+                break;
+            }
+            x -= c.weight;
+        }
+        JobSpec {
+            at,
+            size: chosen.job_size.unwrap_or(p.job_size).max(1),
+            len: chosen.job_len.unwrap_or(p.job_len),
+            standbys: chosen.warm_standbys.unwrap_or(p.warm_standbys),
+        }
+    }
+}
+
+/// Parse an empirical inter-arrival file: one non-negative gap (minutes)
+/// per line; blank lines and `#` comments are skipped. Errors name the
+/// offending 1-based line.
+pub fn parse_empirical(text: &str) -> Result<Vec<Time>, String> {
+    let mut gaps = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let gap: f64 = line
+            .parse()
+            .map_err(|_| format!("line {}: not a number: `{line}`", i + 1))?;
+        if !gap.is_finite() || gap < 0.0 {
+            return Err(format!("line {}: inter-arrival must be finite and >= 0, got {gap}", i + 1));
+        }
+        gaps.push(gap);
+    }
+    if gaps.is_empty() {
+        return Err("empirical inter-arrival file holds no samples".into());
+    }
+    Ok(gaps)
+}
+
+/// Parse a `--trace-out` NDJSON capture into replayable events: every
+/// `job_arrival` and `failure` line is lifted, all other events are
+/// ignored (they are *consequences* the replayed run re-derives). Errors
+/// name the offending 1-based line.
+pub fn parse_replay(text: &str) -> Result<(Vec<ReplayArrival>, Vec<ReplayFailure>), String> {
+    let mut arrivals = Vec::new();
+    let mut failures = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let doc = crate::testkit::parse_json(line)
+            .map_err(|e| format!("line {}: {e}", i + 1))?;
+        let Json::Obj(fields) = &doc else {
+            return Err(format!("line {}: expected a JSON object", i + 1));
+        };
+        let get = |key: &str| fields.iter().find(|(k, _)| k == key).map(|(_, v)| v);
+        let num = |key: &str| -> Result<f64, String> {
+            match get(key) {
+                Some(Json::Num(n)) => Ok(*n),
+                _ => Err(format!("line {}: missing numeric `{key}`", i + 1)),
+            }
+        };
+        let Some(Json::Str(event)) = get("event") else {
+            continue; // summary/header lines of --format ndjson
+        };
+        match event.as_str() {
+            "job_arrival" => arrivals.push(ReplayArrival {
+                at: num("at")?,
+                size: num("size")? as u32,
+                len: num("len")?,
+                standbys: num("standbys")? as u32,
+            }),
+            "failure" => failures.push(ReplayFailure {
+                at: num("at")?,
+                server: num("server")? as ServerId,
+                systematic: matches!(get("systematic"), Some(Json::Bool(true))),
+            }),
+            _ => {}
+        }
+    }
+    arrivals.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+    failures.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+    Ok((arrivals, failures))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson(rate: f64) -> WorkloadSpec {
+        WorkloadSpec { arrival: ArrivalProcess::Poisson { rate }, classes: vec![] }
+    }
+
+    #[test]
+    fn poisson_plan_is_sorted_and_sized() {
+        let mut p = Params::small_test();
+        p.num_jobs = 20;
+        let mut rng = Rng::new(1);
+        let plan = poisson(0.01).plan(&p, &mut rng);
+        assert_eq!(plan.len(), 20);
+        for w in plan.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(plan[0].at > 0.0, "first gap is drawn too");
+        assert!(plan.iter().all(|s| s.size == 0 && s.len == p.job_len));
+    }
+
+    #[test]
+    fn poisson_gaps_have_the_right_mean() {
+        let mut p = Params::small_test();
+        p.num_jobs = 20_000;
+        let rate = 0.05;
+        let mut rng = Rng::new(2);
+        let plan = poisson(rate).plan(&p, &mut rng);
+        let mean_gap = plan.last().unwrap().at / plan.len() as f64;
+        assert!((mean_gap - 1.0 / rate).abs() / (1.0 / rate) < 0.03, "mean {mean_gap}");
+    }
+
+    #[test]
+    fn zero_rate_means_all_at_t0() {
+        let mut p = Params::small_test();
+        p.num_jobs = 5;
+        let mut rng = Rng::new(3);
+        let plan = poisson(0.0).plan(&p, &mut rng);
+        assert!(plan.iter().all(|s| s.at == 0.0));
+    }
+
+    #[test]
+    fn empirical_gaps_cycle() {
+        let mut p = Params::small_test();
+        p.num_jobs = 5;
+        let spec = WorkloadSpec {
+            arrival: ArrivalProcess::Empirical {
+                file: "gaps.txt".into(),
+                gaps: vec![10.0, 20.0],
+            },
+            classes: vec![],
+        };
+        let mut rng = Rng::new(4);
+        let plan = spec.plan(&p, &mut rng);
+        let ats: Vec<f64> = plan.iter().map(|s| s.at).collect();
+        assert_eq!(ats, vec![10.0, 30.0, 40.0, 60.0, 70.0]);
+    }
+
+    #[test]
+    fn classes_are_drawn_by_weight() {
+        let mut p = Params::small_test();
+        p.num_jobs = 10_000;
+        let spec = WorkloadSpec {
+            arrival: ArrivalProcess::Poisson { rate: 1.0 },
+            classes: vec![
+                JobClass {
+                    weight: 3.0,
+                    job_size: Some(8),
+                    job_len: None,
+                    warm_standbys: Some(1),
+                },
+                JobClass { weight: 1.0, job_size: Some(32), job_len: Some(99.0), warm_standbys: None },
+            ],
+        };
+        let mut rng = Rng::new(5);
+        let plan = spec.plan(&p, &mut rng);
+        let small = plan.iter().filter(|s| s.size == 8).count();
+        let big = plan.iter().filter(|s| s.size == 32).count();
+        assert_eq!(small + big, plan.len());
+        let frac = small as f64 / plan.len() as f64;
+        assert!((frac - 0.75).abs() < 0.02, "weight-3 class frac {frac}");
+        // Unset fields fall back to Params.
+        let s8 = plan.iter().find(|s| s.size == 8).unwrap();
+        assert_eq!((s8.len, s8.standbys), (p.job_len, 1));
+        let s32 = plan.iter().find(|s| s.size == 32).unwrap();
+        assert_eq!((s32.len, s32.standbys), (99.0, p.warm_standbys));
+    }
+
+    #[test]
+    fn plan_is_deterministic_per_seed() {
+        let mut p = Params::small_test();
+        p.num_jobs = 50;
+        let spec = poisson(0.02);
+        let a = spec.plan(&p, &mut Rng::derived(9, &[WORKLOAD_STREAM]));
+        let b = spec.plan(&p, &mut Rng::derived(9, &[WORKLOAD_STREAM]));
+        let c = spec.plan(&p, &mut Rng::derived(10, &[WORKLOAD_STREAM]));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn parse_empirical_skips_comments_and_names_bad_lines() {
+        let gaps = parse_empirical("# trace\n10\n\n 2.5 \n0\n").unwrap();
+        assert_eq!(gaps, vec![10.0, 2.5, 0.0]);
+        let err = parse_empirical("1\nbogus\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse_empirical("1\n2\n-3\n").unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(parse_empirical("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn parse_replay_lifts_arrivals_and_failures() {
+        let ndjson = concat!(
+            r#"{"type":"event","at":0,"event":"job_started"}"#, "\n",
+            r#"{"type":"event","at":5,"event":"job_arrival","job":1,"size":8,"len":100,"standbys":2}"#, "\n",
+            r#"{"type":"event","at":9.5,"event":"failure","server":3,"systematic":true}"#, "\n",
+            r#"{"type":"event","at":2,"event":"failure","server":1,"systematic":false}"#, "\n",
+            r#"{"type":"run","seed":42}"#, "\n",
+        );
+        let (arr, fail) = parse_replay(ndjson).unwrap();
+        assert_eq!(arr, vec![ReplayArrival { at: 5.0, size: 8, len: 100.0, standbys: 2 }]);
+        // Failures come back time-sorted.
+        assert_eq!(
+            fail,
+            vec![
+                ReplayFailure { at: 2.0, server: 1, systematic: false },
+                ReplayFailure { at: 9.5, server: 3, systematic: true },
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_replay_errors_name_the_line() {
+        let err = parse_replay("{\"at\":1}\nnot json\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse_replay(r#"{"event":"failure","at":1}"#).unwrap_err();
+        assert!(err.contains("server"), "{err}");
+    }
+
+    #[test]
+    fn replay_plan_ignores_rng() {
+        let mut p = Params::small_test();
+        p.num_jobs = 1;
+        let spec = WorkloadSpec {
+            arrival: ArrivalProcess::Replay {
+                file: "t.ndjson".into(),
+                arrivals: vec![ReplayArrival { at: 7.0, size: 4, len: 50.0, standbys: 0 }],
+                failures: vec![ReplayFailure { at: 9.0, server: 0, systematic: false }],
+            },
+            classes: vec![],
+        };
+        let plan = spec.plan(&p, &mut Rng::new(1));
+        assert_eq!(plan, vec![JobSpec { at: 7.0, size: 4, len: 50.0, standbys: 0 }]);
+        assert_eq!(spec.replay_failures().len(), 1);
+        assert!(spec.is_replay());
+    }
+}

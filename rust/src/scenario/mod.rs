@@ -16,7 +16,7 @@
 //!   working_pool: 72
 //! policies:
 //!   selection: locality      # first_fit | random | locality
-//!   repair: job_first        # fifo | lifo | job_first | sla_aged
+//!   repair: job_first        # fifo | lifo | job_first | sla_aged | shortest_first
 //! sweep:
 //!   kind: one_way
 //!   x: { name: recovery_time, values: [10, 20, 30] }

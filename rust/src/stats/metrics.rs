@@ -224,6 +224,42 @@ pub const REGISTRY: &[Metric] = &[
         extract: |p, o| o.utilization(p.job_len),
     },
     Metric {
+        name: "jobs_arrived",
+        unit: "count",
+        doc: "open-loop job arrivals delivered (workload subsystem)",
+        extract: |_, o| o.jobs_arrived as f64,
+    },
+    Metric {
+        name: "jobs_admitted",
+        unit: "count",
+        doc: "arrivals admitted: first successful allocation after arriving",
+        extract: |_, o| o.jobs_admitted as f64,
+    },
+    Metric {
+        name: "queue_wait_total",
+        unit: "min",
+        doc: "total admission-queue wait (still-queued jobs censored at the horizon)",
+        extract: |_, o| o.queue_wait_total,
+    },
+    Metric {
+        name: "queue_depth_max",
+        unit: "count",
+        doc: "peak admission-queue depth",
+        extract: |_, o| o.queue_depth_max as f64,
+    },
+    Metric {
+        name: "queue_wait_p50",
+        unit: "min",
+        doc: "median admission wait (P2 streaming estimate, exact below 5 samples)",
+        extract: |_, o| o.queue_wait_p50,
+    },
+    Metric {
+        name: "queue_wait_p99",
+        unit: "min",
+        doc: "99th-percentile admission wait (P2 streaming estimate)",
+        extract: |_, o| o.queue_wait_p99,
+    },
+    Metric {
         name: "events_delivered",
         unit: "count",
         doc: "events the engine delivered (perf accounting)",

@@ -6,6 +6,7 @@
 //! across replications.
 
 pub mod metrics;
+pub mod quantile;
 
 use std::collections::BTreeMap;
 

@@ -1,0 +1,228 @@
+//! Bounded streaming quantile estimation — the P² algorithm
+//! (Jain & Chlamtac, CACM 1985).
+//!
+//! The admission queue reports p50/p99 job wait without storing every
+//! wait sample: the P² estimator tracks one quantile with five markers
+//! (O(1) memory, O(1) per insert), adjusting marker heights with a
+//! piecewise-parabolic interpolation as observations stream in. Below
+//! five observations it falls back to the exact sorted-sample quantile,
+//! so small runs report exact values.
+
+/// One-quantile P² estimator.
+///
+/// `value()` of an estimator that has seen no samples is `0.0`, not NaN:
+/// the queue-wait metrics live in `RunOutputs` (which derives
+/// `PartialEq` for the replication-determinism oracles), and a no-queue
+/// run must compare equal to itself.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    /// Target quantile in `[0, 1]`.
+    q: f64,
+    /// Marker heights (estimated order statistics), ascending.
+    heights: [f64; 5],
+    /// Actual marker positions (1-based observation ranks).
+    pos: [f64; 5],
+    /// Desired marker positions.
+    desired: [f64; 5],
+    /// Desired-position increments per observation.
+    inc: [f64; 5],
+    /// Observations seen so far.
+    n: u64,
+}
+
+impl P2Quantile {
+    /// A fresh estimator for quantile `q` (e.g. `0.5`, `0.99`).
+    pub fn new(q: f64) -> Self {
+        debug_assert!((0.0..=1.0).contains(&q));
+        P2Quantile {
+            q,
+            heights: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            inc: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            n: 0,
+        }
+    }
+
+    /// Observations inserted so far.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Insert one observation.
+    pub fn insert(&mut self, x: f64) {
+        if self.n < 5 {
+            // Bootstrap: collect the first five exactly, sorted.
+            let i = self.n as usize;
+            self.heights[i] = x;
+            self.n += 1;
+            let slice = &mut self.heights[..self.n as usize];
+            slice.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            return;
+        }
+
+        // Find the cell k such that heights[k] <= x < heights[k+1],
+        // extending the extreme markers when x falls outside them.
+        let k = if x < self.heights[0] {
+            self.heights[0] = x;
+            0
+        } else if x >= self.heights[4] {
+            self.heights[4] = x;
+            3
+        } else {
+            // heights[0] <= x < heights[4]: one of cells 0..=3.
+            let mut cell = 0;
+            for i in 1..4 {
+                if x >= self.heights[i] {
+                    cell = i;
+                }
+            }
+            cell
+        };
+
+        // Shift actual positions above the insertion cell.
+        for i in (k + 1)..5 {
+            self.pos[i] += 1.0;
+        }
+        self.n += 1;
+        for i in 0..5 {
+            self.desired[i] += self.inc[i];
+        }
+
+        // Adjust the three interior markers toward their desired
+        // positions, parabolic when the neighbour gap allows, linear
+        // otherwise (the P² update rule).
+        for i in 1..4 {
+            let d = self.desired[i] - self.pos[i];
+            let step_up = self.pos[i + 1] - self.pos[i] > 1.0;
+            let step_dn = self.pos[i - 1] - self.pos[i] < -1.0;
+            if (d >= 1.0 && step_up) || (d <= -1.0 && step_dn) {
+                let d = d.signum();
+                let h = self.parabolic(i, d);
+                self.heights[i] =
+                    if self.heights[i - 1] < h && h < self.heights[i + 1] {
+                        h
+                    } else {
+                        self.linear(i, d)
+                    };
+                self.pos[i] += d;
+            }
+        }
+    }
+
+    /// Current quantile estimate; `0.0` before any observation, exact
+    /// below five observations.
+    pub fn value(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if self.n < 5 {
+            // Exact sorted-sample quantile over what we have.
+            let have = &self.heights[..self.n as usize];
+            return crate::stats::percentile(have, self.q);
+        }
+        self.heights[2]
+    }
+
+    /// Piecewise-parabolic height prediction for marker `i` moved by
+    /// `d` (±1).
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, pos) = (&self.heights, &self.pos);
+        q[i] + d / (pos[i + 1] - pos[i - 1])
+            * ((pos[i] - pos[i - 1] + d) * (q[i + 1] - q[i])
+                / (pos[i + 1] - pos[i])
+                + (pos[i + 1] - pos[i] - d) * (q[i] - q[i - 1])
+                    / (pos[i] - pos[i - 1]))
+    }
+
+    /// Linear fallback when the parabola would leave the bracket.
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i]
+            + d * (self.heights[j] - self.heights[i]) / (self.pos[j] - self.pos[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Rng;
+
+    #[test]
+    fn empty_is_zero_not_nan() {
+        let est = P2Quantile::new(0.99);
+        assert_eq!(est.value(), 0.0);
+        assert_eq!(est.count(), 0);
+    }
+
+    #[test]
+    fn small_samples_are_exact() {
+        let mut est = P2Quantile::new(0.5);
+        est.insert(7.0);
+        assert_eq!(est.value(), 7.0);
+        est.insert(1.0);
+        assert_eq!(est.value(), 4.0); // exact interpolated median of {1,7}
+        est.insert(3.0);
+        assert_eq!(est.value(), 3.0);
+    }
+
+    #[test]
+    fn median_of_uniform_stream() {
+        let mut est = P2Quantile::new(0.5);
+        let mut rng = Rng::new(42);
+        for _ in 0..20_000 {
+            est.insert(rng.next_f64());
+        }
+        let v = est.value();
+        assert!((v - 0.5).abs() < 0.02, "median estimate {v}");
+    }
+
+    #[test]
+    fn p99_of_uniform_stream() {
+        let mut est = P2Quantile::new(0.99);
+        let mut rng = Rng::new(7);
+        for _ in 0..50_000 {
+            est.insert(rng.next_f64());
+        }
+        let v = est.value();
+        assert!((v - 0.99).abs() < 0.02, "p99 estimate {v}");
+    }
+
+    #[test]
+    fn exponential_median_matches_ln2() {
+        // Exp(1) median = ln 2 ≈ 0.693.
+        let mut est = P2Quantile::new(0.5);
+        let mut rng = Rng::new(9);
+        for _ in 0..30_000 {
+            est.insert(-rng.next_open_f64().ln());
+        }
+        let v = est.value();
+        let want = std::f64::consts::LN_2;
+        assert!((v - want).abs() / want < 0.05, "median {v} want {want}");
+    }
+
+    #[test]
+    fn constant_stream_is_constant() {
+        let mut est = P2Quantile::new(0.99);
+        for _ in 0..1000 {
+            est.insert(5.0);
+        }
+        assert_eq!(est.value(), 5.0);
+    }
+
+    #[test]
+    fn estimate_stays_in_range() {
+        let mut est = P2Quantile::new(0.9);
+        let mut rng = Rng::new(3);
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for _ in 0..5000 {
+            let x = rng.next_f64() * 100.0 - 50.0;
+            lo = lo.min(x);
+            hi = hi.max(x);
+            est.insert(x);
+            let v = est.value();
+            assert!(v >= lo && v <= hi, "estimate {v} outside [{lo}, {hi}]");
+        }
+    }
+}

@@ -3,7 +3,7 @@
 //! flowchart branch-by-branch, by `Scenario::inject` what-if specs, and
 //! by the CLI to replay observed incident timelines.
 
-use crate::model::events::FailureKind;
+use crate::model::events::{FailureKind, ServerId};
 use crate::sim::Time;
 
 /// A scripted failure: at time `at`, the active server of job `job` with
@@ -17,17 +17,27 @@ pub struct Injection {
     pub job: u32,
     pub victim_index: usize,
     pub kind: FailureKind,
+    /// When set, the injection targets this *server* (wherever it is)
+    /// instead of `job`/`victim_index` — the form `workload: replay:`
+    /// uses, since recorded `failure` events name servers, not gang
+    /// slots. Dropped cleanly if the server is not computing at `at`.
+    pub server: Option<ServerId>,
 }
 
 impl Injection {
     /// An injection against job 0 (the single-job default).
     pub fn new(at: Time, victim_index: usize, kind: FailureKind) -> Injection {
-        Injection { at, job: 0, victim_index, kind }
+        Injection { at, job: 0, victim_index, kind, server: None }
     }
 
     /// An injection against an arbitrary job.
     pub fn for_job(job: u32, at: Time, victim_index: usize, kind: FailureKind) -> Injection {
-        Injection { at, job, victim_index, kind }
+        Injection { at, job, victim_index, kind, server: None }
+    }
+
+    /// A server-targeted injection (trace replay).
+    pub fn for_server(at: Time, server: ServerId, kind: FailureKind) -> Injection {
+        Injection { at, job: 0, victim_index: 0, kind, server: Some(server) }
     }
 }
 
@@ -85,5 +95,13 @@ mod tests {
         let i = Injection::for_job(3, 5.0, 2, FailureKind::Systematic);
         assert_eq!(i.job, 3);
         assert_eq!(i.victim_index, 2);
+        assert_eq!(i.server, None);
+    }
+
+    #[test]
+    fn for_server_targets_a_server() {
+        let i = Injection::for_server(7.5, 19, FailureKind::Random);
+        assert_eq!(i.server, Some(19));
+        assert_eq!(i.at, 7.5);
     }
 }

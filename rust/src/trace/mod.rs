@@ -32,6 +32,15 @@ pub struct TraceRecord {
 #[derive(Clone, Debug, PartialEq)]
 pub enum TraceKind {
     JobStarted,
+    /// An open-loop job arrival ([`crate::model::workload`]): the job's
+    /// resolved class shape rides along so a recorded trace replays the
+    /// exact job mix (`workload: replay:`).
+    JobArrival { job: u32, size: u32, len: Time, standbys: u32 },
+    /// An arrived job's first successful allocation — it leaves the
+    /// admission queue after `waited` minutes (0 when admitted on
+    /// arrival). Legacy closed-loop jobs are born admitted and never
+    /// emit this.
+    JobAdmitted { job: u32, waited: Time },
     Failure { server: u32, systematic: bool },
     StandbySwap { failed: u32, replacement: u32 },
     HostSelection { allotted: usize },
@@ -58,6 +67,8 @@ impl TraceKind {
     pub fn name(&self) -> &'static str {
         match self {
             TraceKind::JobStarted => "job_started",
+            TraceKind::JobArrival { .. } => "job_arrival",
+            TraceKind::JobAdmitted { .. } => "job_admitted",
             TraceKind::Failure { .. } => "failure",
             TraceKind::StandbySwap { .. } => "standby_swap",
             TraceKind::HostSelection { .. } => "host_selection",
@@ -87,6 +98,16 @@ pub fn event_json(at: Time, kind: &TraceKind) -> Json {
     let mut add = |k: &str, v: Json| fields.push((k.to_string(), v));
     match kind {
         TraceKind::JobStarted | TraceKind::RecoveryDone | TraceKind::Horizon => {}
+        TraceKind::JobArrival { job, size, len, standbys } => {
+            add("job", (*job as u64).into());
+            add("size", (*size as u64).into());
+            add("len", (*len).into());
+            add("standbys", (*standbys as u64).into());
+        }
+        TraceKind::JobAdmitted { job, waited } => {
+            add("job", (*job as u64).into());
+            add("waited", (*waited).into());
+        }
         TraceKind::Failure { server, systematic } => {
             add("server", (*server as u64).into());
             add("systematic", (*systematic).into());

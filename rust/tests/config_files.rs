@@ -91,6 +91,33 @@ fn aging_fleet_yaml_runs_scaled_down() {
 }
 
 #[test]
+fn scenario_workload_yaml_runs_scaled_down() {
+    let doc = load("configs/scenario_workload.yaml");
+    let p = validate::params_from_config(&doc).expect("params valid");
+    let w = p.workload.as_ref().expect("workload block present");
+    assert!(!w.is_replay());
+    assert_eq!(w.classes.len(), 2);
+    assert_eq!(p.num_jobs, 4);
+
+    let mut sweep = sweep_from_doc(&doc, 1, 1).expect("sweep");
+    assert_eq!(sweep.points.len(), 6); // 3 repair disciplines x 2 capacities
+    sweep.replications = 2;
+    let result = run_sweep(&p, &sweep, 0);
+    for pr in &result.points {
+        let arrived = pr.summary("jobs_arrived").unwrap();
+        assert_eq!(arrived.n, 2);
+        assert!(arrived.mean > 0.0, "arrivals must be delivered");
+        let admitted = pr.summary("jobs_admitted").unwrap();
+        assert!(
+            admitted.mean <= arrived.mean,
+            "admitted {} > arrived {}",
+            admitted.mean,
+            arrived.mean
+        );
+    }
+}
+
+#[test]
 fn artifact_contract_matches_rust_mirror() {
     // The AOT step writes artifacts/analytic.hlo.json describing the
     // parameter/output columns; the Rust mirror must agree. (Gated on the

@@ -1,0 +1,306 @@
+//! Workload subsystem integration: open-loop arrivals, the admission
+//! queue and its metrics, NDJSON trace replay, and the `shortest_first`
+//! repair discipline.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use airesim::config::Params;
+use airesim::model::cluster::Simulation;
+use airesim::model::policy::PolicySpec;
+use airesim::model::workload::{parse_replay, ArrivalProcess, WorkloadSpec};
+use airesim::sim::rng::Rng;
+use airesim::trace::{Trace, TraceKind};
+
+fn poisson(rate: f64) -> Option<WorkloadSpec> {
+    Some(WorkloadSpec { arrival: ArrivalProcess::Poisson { rate }, classes: vec![] })
+}
+
+/// Pools sized for exactly one small job at a time: arrivals beyond the
+/// first must wait in the admission queue.
+fn tight_params(num_jobs: u32, rate: f64) -> Params {
+    let mut p = Params::small_test();
+    p.num_jobs = num_jobs;
+    p.job_size = 32;
+    p.warm_standbys = 4;
+    p.working_pool = 40; // fits one 32+4 job
+    p.spare_pool = 0;
+    p.job_len = 480.0;
+    p.random_failure_rate = 0.0; // failure-free: exact admission timing
+    p.systematic_failure_rate = 0.0;
+    p.max_sim_time = 1e6;
+    p.workload = poisson(rate);
+    p
+}
+
+/// Recompute the queue accounting independently from the trace: per-job
+/// arrival/admission times, the event-walk depth integral, and the peak
+/// depth. Still-queued jobs are censored at `horizon` exactly like
+/// `SimCtx::finalize`.
+struct QueueFromTrace {
+    arrived: BTreeMap<u32, f64>,
+    admitted_wait: BTreeMap<u32, f64>,
+    depth_integral: f64,
+    depth_max: u64,
+}
+
+fn queue_from_trace(t: &Trace, horizon: f64) -> QueueFromTrace {
+    let mut q = QueueFromTrace {
+        arrived: BTreeMap::new(),
+        admitted_wait: BTreeMap::new(),
+        depth_integral: 0.0,
+        depth_max: 0,
+    };
+    let (mut depth, mut prev) = (0u64, 0.0f64);
+    for r in &t.records {
+        let delta: i64 = match r.kind {
+            TraceKind::JobArrival { job, .. } => {
+                q.arrived.insert(job, r.at);
+                1
+            }
+            TraceKind::JobAdmitted { job, waited } => {
+                q.admitted_wait.insert(job, waited);
+                -1
+            }
+            _ => continue,
+        };
+        q.depth_integral += depth as f64 * (r.at - prev);
+        depth = (depth as i64 + delta) as u64;
+        q.depth_max = q.depth_max.max(depth);
+        prev = r.at;
+    }
+    q.depth_integral += depth as f64 * (horizon - prev);
+    q
+}
+
+#[test]
+fn no_workload_reports_no_queue_activity() {
+    let p = Params::small_test(); // workload: None
+    let (out, trace) = Simulation::new(&p, 42).with_trace().run_traced();
+    assert_eq!(out.jobs_arrived, 0);
+    assert_eq!(out.jobs_admitted, 0);
+    assert_eq!(out.queue_wait_total, 0.0);
+    assert_eq!(out.queue_depth_max, 0);
+    assert_eq!(out.queue_wait_p50, 0.0);
+    assert_eq!(out.queue_wait_p99, 0.0);
+    assert_eq!(
+        trace.count(|k| matches!(
+            k,
+            TraceKind::JobArrival { .. } | TraceKind::JobAdmitted { .. }
+        )),
+        0,
+        "legacy closed-loop runs must emit no workload events"
+    );
+}
+
+#[test]
+fn open_loop_arrivals_deliver_every_job() {
+    let mut p = tight_params(4, 0.01);
+    p.working_pool = 160; // ample: all four jobs fit concurrently
+    let (out, trace) = Simulation::new(&p, 7).with_trace().run_traced();
+    assert!(out.completed, "ample pools + no failures must finish");
+    assert_eq!(out.jobs_arrived, 4);
+    assert_eq!(out.jobs_admitted, 4);
+    assert_eq!(trace.count(|k| matches!(k, TraceKind::JobArrival { .. })), 4);
+    // Ample pools: every arrival is admitted on the spot.
+    let q = queue_from_trace(&trace, p.max_sim_time);
+    assert!(q.admitted_wait.values().all(|&w| w == 0.0), "{:?}", q.admitted_wait);
+    assert_eq!(out.queue_wait_total, 0.0);
+    // Arrival events come in time order with drawn (positive) gaps.
+    let ats: Vec<f64> = trace
+        .records
+        .iter()
+        .filter(|r| matches!(r.kind, TraceKind::JobArrival { .. }))
+        .map(|r| r.at)
+        .collect();
+    assert!(ats.windows(2).all(|w| w[0] <= w[1]), "{ats:?}");
+    assert!(ats[0] > 0.0, "Poisson arrivals draw the first gap too");
+}
+
+#[test]
+fn empirical_gaps_schedule_exact_arrival_times() {
+    let mut p = tight_params(4, 0.0);
+    p.workload = Some(WorkloadSpec {
+        arrival: ArrivalProcess::Empirical {
+            file: "gaps.txt".into(),
+            gaps: vec![5.0, 10.0],
+        },
+        classes: vec![],
+    });
+    let (_, trace) = Simulation::new(&p, 1).with_trace().run_traced();
+    let ats: Vec<f64> = trace
+        .records
+        .iter()
+        .filter(|r| matches!(r.kind, TraceKind::JobArrival { .. }))
+        .map(|r| r.at)
+        .collect();
+    assert_eq!(ats, vec![5.0, 15.0, 20.0, 30.0]);
+}
+
+#[test]
+fn queue_wait_total_is_the_depth_integral() {
+    // Jobs arrive faster than the single-job pool drains them, so a real
+    // backlog builds. The metric must equal the time-integral of the
+    // queue depth, recomputed here two independent ways from the trace:
+    // the event-walk integral and the per-job wait sum (Little's law —
+    // L·T = Σ waits = λT·W̄ — ties the two together).
+    for seed in [1, 2, 3, 11] {
+        let p = tight_params(6, 1.0 / 240.0); // ~2 arrivals per 480-min service
+        let (out, trace) = Simulation::new(&p, seed).with_trace().run_traced();
+        let q = queue_from_trace(&trace, p.max_sim_time);
+        assert_eq!(out.jobs_arrived, q.arrived.len() as u64, "seed {seed}");
+        assert_eq!(out.jobs_admitted, q.admitted_wait.len() as u64, "seed {seed}");
+
+        // Per-job wait sum, censoring still-queued jobs at the horizon.
+        let mut wait_sum: f64 = q.admitted_wait.values().sum();
+        for (job, &at) in &q.arrived {
+            if !q.admitted_wait.contains_key(job) {
+                wait_sum += p.max_sim_time - at;
+            }
+        }
+        assert!(
+            (out.queue_wait_total - wait_sum).abs() < 1e-6,
+            "seed {seed}: metric {} vs per-job sum {wait_sum}",
+            out.queue_wait_total
+        );
+        assert!(
+            (out.queue_wait_total - q.depth_integral).abs() < 1e-6,
+            "seed {seed}: metric {} vs depth integral {}",
+            out.queue_wait_total,
+            q.depth_integral
+        );
+        assert_eq!(out.queue_depth_max, q.depth_max, "seed {seed}");
+
+        // Tight pools serialize jobs: someone must actually have waited.
+        assert!(out.queue_wait_total > 0.0, "seed {seed}: no backlog formed");
+        assert!(out.queue_wait_p50 <= out.queue_wait_p99, "seed {seed}");
+    }
+}
+
+#[test]
+fn arrivals_conserve_into_admissions_and_backlog() {
+    // jobs_arrived = jobs_admitted + still-queued-at-horizon, with the
+    // backlog read independently off the trace.
+    let mut p = tight_params(8, 1.0 / 60.0); // heavy overload
+    p.max_sim_time = 1200.0; // cut the horizon while the queue is deep
+    let (out, trace) = Simulation::new(&p, 5).with_trace().run_traced();
+    let q = queue_from_trace(&trace, p.max_sim_time);
+    let still_queued = q.arrived.len() - q.admitted_wait.len();
+    assert_eq!(
+        out.jobs_arrived,
+        out.jobs_admitted + still_queued as u64,
+        "arrived {} admitted {} queued {still_queued}",
+        out.jobs_arrived,
+        out.jobs_admitted
+    );
+    assert!(still_queued > 0, "overload config should leave a backlog");
+    assert!(!out.completed);
+}
+
+#[test]
+fn replay_round_trip_reproduces_the_timeline() {
+    // Record a stochastic run, lift its NDJSON trace, replay it with the
+    // clocks silenced: the replayed arrival + failure timeline must be
+    // the recorded one, event for event.
+    let mut p = Params::small_test();
+    p.num_jobs = 3;
+    p.job_size = 16;
+    p.warm_standbys = 2;
+    p.working_pool = 60;
+    p.spare_pool = 8;
+    p.job_len = 1440.0;
+    p.max_sim_time = 1e6;
+    // Deterministic mechanics outside the clocks: perfect diagnosis, and
+    // repairs so slow no repaired server re-enters within the horizon.
+    p.diagnosis_prob = 1.0;
+    p.diagnosis_uncertainty = 0.0;
+    p.auto_repair_time = 1e9;
+    p.manual_repair_time = 1e9;
+    p.random_failure_rate = 1.0 / 10_000.0;
+    p.systematic_failure_rate = 1.0 / 10_000.0;
+    p.workload = poisson(1.0 / 300.0);
+
+    let (rec_out, rec_trace) = Simulation::new(&p, 1234).with_trace().run_traced();
+    assert!(rec_out.failures_total > 0, "recording saw no failures — vacuous test");
+    let ndjson = rec_trace.to_ndjson();
+
+    let (arrivals, failures) = parse_replay(&ndjson).unwrap();
+    assert_eq!(arrivals.len(), rec_out.jobs_arrived as usize);
+    assert_eq!(failures.len(), rec_out.failures_total as usize);
+
+    let mut rp = p.clone();
+    rp.random_failure_rate = 0.0; // silence the stochastic clocks
+    rp.systematic_failure_rate = 0.0;
+    rp.num_jobs = arrivals.len() as u32; // what config loading auto-syncs
+    rp.workload = Some(WorkloadSpec {
+        arrival: ArrivalProcess::Replay {
+            file: "recorded.ndjson".into(),
+            arrivals,
+            failures,
+        },
+        classes: vec![],
+    });
+    let (rep_out, rep_trace) = Simulation::new(&rp, 999).with_trace().run_traced();
+
+    let timeline = |t: &Trace| -> Vec<(f64, TraceKind)> {
+        t.records
+            .iter()
+            .filter(|r| {
+                matches!(
+                    r.kind,
+                    TraceKind::JobArrival { .. } | TraceKind::Failure { .. }
+                )
+            })
+            .map(|r| (r.at, r.kind.clone()))
+            .collect()
+    };
+    assert_eq!(timeline(&rec_trace), timeline(&rep_trace));
+    assert_eq!(rep_out.failures_total, rec_out.failures_total);
+    assert_eq!(rep_out.jobs_arrived, rec_out.jobs_arrived);
+    // Identical failures against identical arrivals: same makespan too.
+    assert!(
+        (rep_out.makespan - rec_out.makespan).abs() < 1e-6,
+        "record {} vs replay {}",
+        rec_out.makespan,
+        rep_out.makespan
+    );
+}
+
+#[test]
+fn workload_runs_are_deterministic_per_seed() {
+    let p = tight_params(6, 1.0 / 240.0);
+    let a = Simulation::new(&p, 77).run();
+    let b = Simulation::new(&p, 77).run();
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.queue_wait_total, b.queue_wait_total);
+    assert_eq!(a.jobs_admitted, b.jobs_admitted);
+    let c = Simulation::new(&p, 78).run();
+    assert_ne!(
+        (a.makespan, a.queue_wait_total),
+        (c.makespan, c.queue_wait_total),
+        "two seeds gave identical workloads (astronomically unlikely)"
+    );
+}
+
+#[test]
+fn shortest_first_runs_to_completion_and_is_deterministic() {
+    // A capacity-1 shop under sustained failures keeps a real repair
+    // queue, so the SPT discipline actually reorders work.
+    let mut p = Params::small_test();
+    p.auto_repair_capacity = 1;
+    p.manual_repair_capacity = 1;
+    p.random_failure_rate = 1.0 / 400.0;
+    p.systematic_failure_rate = 1.0 / 400.0;
+    let mut spec = PolicySpec::default();
+    spec.set("repair", "shortest_first").unwrap();
+    let run = |seed: u64| {
+        Simulation::from_spec(&p, &spec, Rng::new(seed)).unwrap().run()
+    };
+    let a = run(3);
+    let b = run(3);
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.failures_total, b.failures_total);
+    assert!(
+        a.repairs_auto + a.repairs_manual > 0,
+        "no repairs completed — the discipline was never exercised"
+    );
+}
