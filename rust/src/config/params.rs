@@ -163,6 +163,13 @@ pub struct Params {
     /// Sliding window for the failure score, minutes.
     pub retirement_window: f64,
 
+    // ---- failure-history-aware selection (`selection: history_scored`) ----
+    /// Sliding window, in minutes, within which `selection: history_scored`
+    /// counts a candidate server's past failures (preferring the cleanest
+    /// history). 0 disables history tracking for selection; the policy
+    /// itself then refuses to build, naming this knob.
+    pub selection_history_window: f64,
+
     // ---- bad-server regeneration (assumption 1, case 2) ----
     /// Every this many minutes, new bad servers appear (aging / new
     /// hardware); 0 disables regeneration.
@@ -243,6 +250,7 @@ impl Params {
             diagnosis_uncertainty: 0.0,
             retirement_threshold: 0,
             retirement_window: 7.0 * MIN_PER_DAY,
+            selection_history_window: 0.0,
             bad_regen_interval: 0.0,
             bad_regen_fraction: 0.0,
             checkpoint_interval: 0.0,
@@ -286,6 +294,7 @@ impl Params {
             diagnosis_uncertainty: 0.0,
             retirement_threshold: 0,
             retirement_window: 7.0 * MIN_PER_DAY,
+            selection_history_window: 0.0,
             bad_regen_interval: 0.0,
             bad_regen_fraction: 0.0,
             checkpoint_interval: 0.0,
@@ -339,6 +348,7 @@ impl Params {
             "diagnosis_uncertainty" => self.diagnosis_uncertainty = value,
             "retirement_threshold" => self.retirement_threshold = value as u32,
             "retirement_window" => self.retirement_window = value,
+            "selection_history_window" => self.selection_history_window = value,
             "bad_regen_interval" => self.bad_regen_interval = value,
             "bad_regen_fraction" => self.bad_regen_fraction = value,
             "checkpoint_interval" => self.checkpoint_interval = value,
@@ -383,6 +393,7 @@ impl Params {
             "diagnosis_uncertainty" => self.diagnosis_uncertainty,
             "retirement_threshold" => self.retirement_threshold as f64,
             "retirement_window" => self.retirement_window,
+            "selection_history_window" => self.selection_history_window,
             "bad_regen_interval" => self.bad_regen_interval,
             "bad_regen_fraction" => self.bad_regen_fraction,
             "checkpoint_interval" => self.checkpoint_interval,
@@ -424,6 +435,7 @@ impl Params {
             "diagnosis_uncertainty",
             "retirement_threshold",
             "retirement_window",
+            "selection_history_window",
             "bad_regen_interval",
             "bad_regen_fraction",
             "checkpoint_interval",

@@ -90,6 +90,7 @@ pub fn validate(p: &Params) -> Result<(), ConfigError> {
     prob("diagnosis_prob", p.diagnosis_prob)?;
     prob("diagnosis_uncertainty", p.diagnosis_uncertainty)?;
     non_neg("retirement_window", p.retirement_window)?;
+    non_neg("selection_history_window", p.selection_history_window)?;
     non_neg("bad_regen_interval", p.bad_regen_interval)?;
     prob("bad_regen_fraction", p.bad_regen_fraction)?;
     non_neg("checkpoint_interval", p.checkpoint_interval)?;

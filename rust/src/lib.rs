@@ -39,6 +39,7 @@
 pub mod analytical;
 pub mod config;
 pub mod model;
+pub mod optimize;
 pub mod report;
 pub mod runtime;
 pub mod scenario;

@@ -9,6 +9,7 @@
 //!                  [--policy axis=name,...] [--csv] [--format ...]
 //! airesim scenario --config scenario.yaml [--seed N] [--threads N]
 //!                  [--set ...] [--policy ...] [--format ...] [--trace-out f]
+//!                  [--best-out f]
 //! airesim analytic [--config f.yaml] [--artifact path] [--set name=value,...]
 //! airesim whatif   [--config f.yaml] --param name --factor F [--reps N]
 //!                  [--format ...]
@@ -69,9 +70,10 @@ fn print_usage() {
          \x20 run            run one simulation and print its outputs\n\
          \x20 sweep          one- or two-way parameter sweep with replications\n\
          \x20 scenario       run a declarative scenario file (single/sweep/\n\
-         \x20                whatif/inject/compare/multi, policies by name;\n\
-         \x20                `multi:` runs a labeled study with a combined\n\
-         \x20                comparison report)\n\
+         \x20                whatif/inject/compare/multi/optimize, policies by\n\
+         \x20                name; `multi:` runs a labeled study with a combined\n\
+         \x20                comparison report, `optimize:` screens knob\n\
+         \x20                importance or auto-tunes over a knob grid)\n\
          \x20 analytic       run the AOT analytical baseline (PJRT artifact)\n\
          \x20 prescreen      analytically rank a sweep grid, DES the top-k\n\
          \x20 whatif         scale one parameter by a factor, compare outputs\n\
@@ -375,6 +377,11 @@ fn cmd_scenario(argv: &[String]) -> Result<()> {
     spec.extend([
         OptSpec { name: "seed", takes_value: true, help: "override the file's seed" },
         OptSpec { name: "threads", takes_value: true, help: "worker threads (0=auto)" },
+        OptSpec {
+            name: "best-out",
+            takes_value: true,
+            help: "optimize tune: write the winner as a runnable single-scenario YAML (- = stdout)",
+        },
         trace_out_opt(),
         format_opt(),
     ]);
@@ -403,9 +410,13 @@ fn cmd_scenario(argv: &[String]) -> Result<()> {
         apply_policy_clauses(&mut scenario.policies, clauses)?;
         // Sweep scenarios validate per point (`Sweep::validate`) and
         // studies per child (`Study::resolve_all` inside `run_study`),
-        // both with overrides applied; everything else runs the base
-        // params verbatim and must build against them now.
-        if !matches!(scenario.kind, ScenarioKind::Sweep(_) | ScenarioKind::Multi(_)) {
+        // both with overrides applied; optimize resolves every grid
+        // point the same way. Everything else runs the base params
+        // verbatim and must build against them now.
+        if !matches!(
+            scenario.kind,
+            ScenarioKind::Sweep(_) | ScenarioKind::Multi(_) | ScenarioKind::Optimize(_)
+        ) {
             scenario.policies.build(&scenario.params).map_err(|e| anyhow!("{e}"))?;
         }
     }
@@ -452,7 +463,47 @@ fn cmd_scenario(argv: &[String]) -> Result<()> {
         }
     }
 
+    // `--best-out` asks for the tune winner as a runnable single-run
+    // YAML; validate the request before paying for the search.
+    if args.get("best-out").is_some() {
+        if !matches!(scenario.kind, ScenarioKind::Optimize(_)) {
+            bail!("--best-out applies to `scenario: optimize` (mode: tune) only");
+        }
+        // Same stdout-corruption guard as `--trace-out -`: YAML lines
+        // would break a json document or csv table.
+        if args.get("best-out") == Some("-") && !matches!(format, Format::Text) {
+            bail!(
+                "--best-out - mixes YAML into --format {} output; \
+                 write the winner to a file instead",
+                format.name()
+            );
+        }
+        // The emitted file pins scalar params + policies; it cannot
+        // express a topology: or workload: block, so a winner written
+        // without them would silently run a different experiment.
+        if scenario.params.topology.is_some() || scenario.params.workload.is_some() {
+            bail!(
+                "--best-out cannot express `topology:`/`workload:` blocks in the \
+                 emitted single-run YAML; drop --best-out or the block"
+            );
+        }
+    }
+
     let mut outcome = scenario.run().map_err(|e| anyhow!("{e}"))?;
+    if let Some(out_path) = args.get("best-out") {
+        let ScenarioOutcome::Optimize(record) = &outcome else {
+            unreachable!("guarded above");
+        };
+        let best = record.best.as_ref().ok_or_else(|| {
+            anyhow!("--best-out needs `optimize.mode: tune` (screen ranks knobs, it picks no winner)")
+        })?;
+        if out_path == "-" {
+            print!("{}", best.yaml);
+        } else {
+            std::fs::write(out_path, &best.yaml)
+                .with_context(|| format!("writing best config to {out_path}"))?;
+        }
+    }
     if let Some(out_path) = args.get("trace-out") {
         match &mut outcome {
             ScenarioOutcome::Single { trace, .. } | ScenarioOutcome::Inject { trace, .. } => {

@@ -4,7 +4,7 @@
 //!
 //! ```yaml
 //! policies:
-//!   selection: locality      # first_fit | random | locality | anti_affinity | power_of_two_choices
+//!   selection: locality      # first_fit | random | locality | anti_affinity | power_of_two_choices | history_scored
 //!   repair: job_first        # fifo | lifo | job_first | sla_aged | shortest_first
 //!   checkpoint: periodic     # auto | continuous | periodic | young_daly | adaptive | tiered
 //!   failure: auto            # auto | gang | per_server | thinned | correlated
@@ -25,7 +25,8 @@ use crate::model::failure::{
 };
 use crate::model::repair::{Fifo, JobFirst, Lifo, RepairPolicy, ShortestFirst, SlaAged};
 use crate::model::selection::{
-    AntiAffinity, FirstFit, Locality, PowerOfTwoChoices, Random, SelectionPolicy,
+    AntiAffinity, FirstFit, HistoryScored, Locality, PowerOfTwoChoices, Random,
+    SelectionPolicy,
 };
 
 /// The four policy subsystems of one simulation run.
@@ -66,8 +67,14 @@ impl Default for PolicySpec {
 }
 
 /// Valid selection-policy names.
-pub const SELECTION_NAMES: &[&str] =
-    &["first_fit", "random", "locality", "anti_affinity", "power_of_two_choices"];
+pub const SELECTION_NAMES: &[&str] = &[
+    "first_fit",
+    "random",
+    "locality",
+    "anti_affinity",
+    "power_of_two_choices",
+    "history_scored",
+];
 /// Valid repair-policy names.
 pub const REPAIR_NAMES: &[&str] =
     &["fifo", "lifo", "job_first", "sla_aged", "shortest_first"];
@@ -123,6 +130,17 @@ impl PolicySpec {
                 Box::new(AntiAffinity)
             }
             "power_of_two_choices" => Box::new(PowerOfTwoChoices),
+            "history_scored" => {
+                if p.selection_history_window <= 0.0 {
+                    return Err(
+                        "selection policy `history_scored` requires \
+                         `selection_history_window` > 0 (the sliding window its \
+                         failure scores count within)"
+                            .into(),
+                    );
+                }
+                Box::new(HistoryScored)
+            }
             other => return Err(format!("unknown selection policy `{other}`")),
         };
         let repair: Box<dyn RepairPolicy> = match self.repair.as_str() {
@@ -394,6 +412,7 @@ mod tests {
         p.checkpoint_tier2_interval = 240.0;
         p.checkpoint_tier2_cost = 20.0;
         p.checkpoint_tier2_restore = 60.0;
+        p.selection_history_window = 1440.0;
         p.topology = Some(crate::config::TopologySpec {
             levels: vec![crate::config::TopologyLevelSpec {
                 name: "rack".into(),
@@ -483,6 +502,22 @@ mod tests {
         p.checkpoint_interval = p.job_len / 2e6;
         let err = spec.build(&p).unwrap_err();
         assert!(err.contains("pathologically small"), "{err}");
+    }
+
+    #[test]
+    fn history_scored_requires_a_window() {
+        // With `selection_history_window` at its 0 default no failure
+        // history is ever retained, so the scan would silently be LIFO:
+        // a build error naming the knob instead.
+        let p = Params::small_test();
+        let mut spec = PolicySpec::default();
+        spec.set("selection", "history_scored").unwrap();
+        let err = spec.build(&p).unwrap_err();
+        assert!(err.contains("selection_history_window"), "{err}");
+
+        let mut p = Params::small_test();
+        p.selection_history_window = 1440.0;
+        assert_eq!(spec.build(&p).unwrap().selection.name(), "history_scored");
     }
 
     #[test]

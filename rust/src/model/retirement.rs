@@ -5,6 +5,12 @@
 //!
 //! Disabled at Table I defaults (`retirement_threshold == 0`); the
 //! ablation bench sweeps it.
+//!
+//! The per-server `failure_times` log this module maintains is shared
+//! with failure-history-aware selection
+//! ([`crate::model::selection::HistoryScored`]): when
+//! `selection_history_window` is set the log is kept even with
+//! retirement disabled, pruned to the larger of the two windows.
 
 use crate::config::Params;
 use crate::model::server::Server;
@@ -14,14 +20,22 @@ use crate::sim::Time;
 /// decide whether the policy retires it.
 pub fn record_and_decide(p: &Params, server: &mut Server, now: Time) -> bool {
     server.total_failures += 1;
+    if p.retirement_threshold == 0 && p.selection_history_window <= 0.0 {
+        return false;
+    }
+    // Maintain the sliding window: entries are kept as long as *either*
+    // consumer (retirement scoring, history-scored selection) still
+    // counts them; the retirement decision below re-filters to its own
+    // window, so a longer selection window never changes retirements.
+    let retire_w = if p.retirement_threshold > 0 { p.retirement_window } else { 0.0 };
+    let keep = retire_w.max(p.selection_history_window);
+    server.failure_times.retain(|&t| t > now - keep);
+    server.failure_times.push(now);
     if p.retirement_threshold == 0 {
         return false;
     }
-    // Maintain the sliding window.
-    let cutoff = now - p.retirement_window;
-    server.failure_times.retain(|&t| t > cutoff);
-    server.failure_times.push(now);
-    server.failure_times.len() >= p.retirement_threshold as usize
+    server.failure_times.iter().filter(|&&t| t > now - p.retirement_window).count()
+        >= p.retirement_threshold as usize
 }
 
 #[cfg(test)]
@@ -71,6 +85,44 @@ mod tests {
         // failure soon after should still not trip (2 < 3)...
         assert!(!record_and_decide(&p, &mut s, 160.0));
         // ...but a third inside the window does.
+        assert!(record_and_decide(&p, &mut s, 170.0));
+    }
+
+    #[test]
+    fn selection_window_keeps_history_without_retiring() {
+        // Retirement disabled, but a selection window set: the log is
+        // maintained (HistoryScored's score source), old entries age
+        // out, and nothing ever retires.
+        let mut p = Params::small_test(); // threshold 0
+        p.selection_history_window = 100.0;
+        let mut s = server();
+        assert!(!record_and_decide(&p, &mut s, 10.0));
+        assert!(!record_and_decide(&p, &mut s, 20.0));
+        assert_eq!(s.failure_times, vec![10.0, 20.0]);
+        // t=10 falls out of the (t-100, t] window by t=130.
+        assert!(!record_and_decide(&p, &mut s, 130.0));
+        assert_eq!(s.failure_times, vec![20.0, 130.0]);
+        assert_eq!(s.total_failures, 3);
+    }
+
+    #[test]
+    fn longer_selection_window_never_changes_retirements() {
+        // Retirement counts only its own window even when the selection
+        // window retains older entries in the shared log.
+        let mut p = Params::small_test();
+        p.retirement_threshold = 3;
+        p.retirement_window = 100.0;
+        p.selection_history_window = 10_000.0;
+        let mut s = server();
+        assert!(!record_and_decide(&p, &mut s, 0.0));
+        assert!(!record_and_decide(&p, &mut s, 50.0));
+        // The t=0 entry is still in the log (selection window) but out
+        // of the retirement window at t=150: only {50, 150} count.
+        assert!(!record_and_decide(&p, &mut s, 150.0));
+        assert_eq!(s.failure_times, vec![0.0, 50.0, 150.0]);
+        // Two in-window failures (150, 160) still sit below threshold 3
+        // even though the log holds four entries; the third trips it.
+        assert!(!record_and_decide(&p, &mut s, 160.0));
         assert!(record_and_decide(&p, &mut s, 170.0));
     }
 

@@ -13,6 +13,7 @@
 //! | `locality`  | [`Locality`] — pack within failure domains (id proximity when no topology) |
 //! | `anti_affinity` | [`AntiAffinity`] — spread the gang across failure domains |
 //! | `power_of_two_choices` | [`PowerOfTwoChoices`] — sample 2, keep the less failure-prone |
+//! | `history_scored` | [`HistoryScored`] — fewest failures within `selection_history_window` |
 //!
 //! Topology-aware policies read the fleet's failure-domain hierarchy
 //! ([`crate::model::topology::Topology`], threaded through from
@@ -261,6 +262,55 @@ impl SelectionPolicy for PowerOfTwoChoices {
     }
 }
 
+/// Scan the whole idle list and take the server with the fewest recorded
+/// failures inside the sliding `selection_history_window` (the same
+/// per-server `failure_times` log retirement counts over, pruned as
+/// failures land; with retirement also enabled the log is pruned to the
+/// larger of the two windows). Ties keep the most recently freed candidate
+/// — so a fresh fleet behaves exactly like `first_fit` (LIFO,
+/// cache-warm) and the bias only kicks in once history accumulates.
+/// Deterministic and draw-free: the RNG stream position is untouched,
+/// so runs pair exactly with `first_fit` under CRN.
+///
+/// Requires `selection_history_window > 0` (enforced at policy build):
+/// with a zero window no failures are ever retained and the scan would
+/// silently degrade to LIFO.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistoryScored;
+
+impl SelectionPolicy for HistoryScored {
+    fn name(&self) -> &'static str {
+        "history_scored"
+    }
+
+    fn take_idle(
+        &mut self,
+        _job: &Job,
+        pools: &mut Pools,
+        fleet: &mut [Server],
+        _topo: Option<&Topology>,
+        _rng: &mut Rng,
+    ) -> Option<ServerId> {
+        let idle = pools.idle_ids();
+        if idle.is_empty() {
+            return None;
+        }
+        // Back-to-front scan with a strict `<`: the last (most recently
+        // freed) holder of the minimum score wins ties.
+        let mut best = idle.len() - 1;
+        let mut best_score = fleet[idle[best] as usize].failure_times.len();
+        for k in (0..idle.len() - 1).rev() {
+            let score = fleet[idle[k] as usize].failure_times.len();
+            if score < best_score {
+                best = k;
+                best_score = score;
+            }
+        }
+        pools.swap_idle_to_back(best);
+        pools.take_idle(fleet)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -453,6 +503,36 @@ mod tests {
     }
 
     #[test]
+    fn history_scored_prefers_the_cleanest_server() {
+        let (job, mut pools, mut fleet, mut rng) = setup();
+        // Every idle server but one carries recent-failure history: the
+        // clean one must win regardless of its free-list position.
+        let clean = pools.idle_ids()[0];
+        for &id in pools.idle_ids() {
+            if id != clean {
+                fleet[id as usize].failure_times.push(100.0);
+            }
+        }
+        let got =
+            HistoryScored.take_idle(&job, &mut pools, &mut fleet, None, &mut rng).unwrap();
+        assert_eq!(got, clean);
+    }
+
+    #[test]
+    fn history_scored_ties_fall_back_to_lifo_and_draw_nothing() {
+        // A fresh fleet has no history anywhere: the pick must match
+        // first_fit exactly (LIFO top) and consume zero RNG draws, so
+        // CRN runs pair against first_fit stream-for-stream.
+        let (job, mut pools, mut fleet, mut rng) = setup();
+        let mut untouched = rng.clone();
+        let top = *pools.idle_ids().last().unwrap();
+        let got =
+            HistoryScored.take_idle(&job, &mut pools, &mut fleet, None, &mut rng).unwrap();
+        assert_eq!(got, top, "fresh fleet behaves like first_fit");
+        assert_eq!(rng.next_u64(), untouched.next_u64(), "stream position untouched");
+    }
+
+    #[test]
     fn exhausted_pool_returns_none() {
         let (job, mut pools, mut fleet, mut rng) = setup();
         let topo = rack_switch_topo(fleet.len() as u32);
@@ -464,6 +544,9 @@ mod tests {
             .take_idle(&job, &mut pools, &mut fleet, Some(&topo), &mut rng)
             .is_none());
         assert!(PowerOfTwoChoices
+            .take_idle(&job, &mut pools, &mut fleet, None, &mut rng)
+            .is_none());
+        assert!(HistoryScored
             .take_idle(&job, &mut pools, &mut fleet, None, &mut rng)
             .is_none());
     }

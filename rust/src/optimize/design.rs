@@ -1,0 +1,231 @@
+//! Two-level factorial screening design (`mode: screen`).
+//!
+//! Knob importance is estimated with a fold-over of a two-level
+//! orthogonal design built from the Sylvester Hadamard matrix: column
+//! `j` of row `i` is `+1` when `popcount(i & j)` is even. Taking `N` =
+//! the smallest power of two ≥ `k + 1` gives `k` mutually orthogonal
+//! ±1 columns over `N` runs (the power-of-two Plackett–Burman
+//! construction); appending the `N` sign-flipped rows (the fold-over)
+//! lifts the design to resolution IV, so main effects are clear of
+//! two-factor interactions. Total runs: `2N × replications`.
+//!
+//! Every run rides the shared CRN streams, so the per-replication
+//! effect estimates are paired and the CI comes from the
+//! between-replication spread of the *effect*, not of the raw
+//! objective.
+
+use crate::config::Params;
+use crate::model::PolicySpec;
+use crate::optimize::stats::mean_ci;
+use crate::optimize::Optimize;
+use crate::report::record::{OptimizeRecord, ScreenEffect};
+use crate::sim::rng::Rng;
+use crate::stats::metrics;
+use crate::sweep::{run_pool_ordered, AxisValue, CRN_STREAM};
+
+/// Sylvester Hadamard sign: +1 when `popcount(i & j)` is even.
+fn sign(i: usize, j: usize) -> i8 {
+    if (i & j).count_ones() % 2 == 0 {
+        1
+    } else {
+        -1
+    }
+}
+
+/// The fold-over design for `k` knobs: `2N` rows of `k` signs, where
+/// `N` is the smallest power of two ≥ `k + 1`. Rows `0..N` are Hadamard
+/// columns `1..=k`; rows `N..2N` are their negation.
+pub fn fold_over_design(k: usize) -> Vec<Vec<i8>> {
+    let n = (k + 1).next_power_of_two();
+    let mut rows = Vec::with_capacity(2 * n);
+    for i in 0..n {
+        rows.push((1..=k).map(|j| sign(i, j)).collect());
+    }
+    for i in 0..n {
+        rows.push((1..=k).map(|j| -sign(i, j)).collect());
+    }
+    rows
+}
+
+/// Main effects from a design matrix and one replication's objective
+/// values: `e_j = (2/R) Σ_i s_ij y_i` — the mean objective at the high
+/// level minus the mean at the low level.
+pub fn main_effects(design: &[Vec<i8>], y: &[f64]) -> Vec<f64> {
+    assert_eq!(design.len(), y.len());
+    let k = design.first().map(|r| r.len()).unwrap_or(0);
+    let r = design.len() as f64;
+    (0..k)
+        .map(|j| {
+            2.0 / r
+                * design
+                    .iter()
+                    .zip(y)
+                    .map(|(row, &yi)| f64::from(row[j]) * yi)
+                    .sum::<f64>()
+        })
+        .collect()
+}
+
+/// Run the factorial screen: every design row × replication through the
+/// shared pool on CRN streams, then the ranked main-effects table.
+pub fn run_screen(
+    base: &Params,
+    policies: &PolicySpec,
+    opt: &Optimize,
+    seed: u64,
+    threads: usize,
+) -> Result<OptimizeRecord, String> {
+    let metric = metrics::resolve(&opt.objective)?;
+    let design = fold_over_design(opt.knobs.len());
+    let reps = opt.replications.max(1);
+    let total_runs = design.len() * reps;
+    if opt.budget > 0 && total_runs > opt.budget {
+        return Err(format!(
+            "screen needs {} runs ({} design rows x {reps} replications) but \
+             optimize.budget is {} — raise the budget or drop knobs",
+            total_runs,
+            design.len(),
+            opt.budget
+        ));
+    }
+
+    // Low level = first declared value, high level = last.
+    let level = |knob: usize, s: i8| -> AxisValue {
+        let values = &opt.knobs[knob].values;
+        if s > 0 { values[values.len() - 1].clone() } else { values[0].clone() }
+    };
+    let mut resolved = Vec::with_capacity(design.len());
+    for row in &design {
+        let overrides: Vec<(String, AxisValue)> = opt
+            .knobs
+            .iter()
+            .enumerate()
+            .map(|(j, knob)| (knob.name.clone(), level(j, row[j])))
+            .collect();
+        resolved.push(super::resolve_point(base, policies, &overrides)?);
+    }
+
+    let results = run_pool_ordered(design.len(), reps, threads, |runner, row, rep| {
+        let (p, spec) = &resolved[row];
+        let rng = Rng::derived(seed, &[CRN_STREAM, rep as u64]);
+        let out = runner.run(p, spec, rng);
+        (p.clone(), out)
+    });
+    // y[row][rep] on the objective metric.
+    let y: Vec<Vec<f64>> = results
+        .iter()
+        .map(|(p, outs)| outs.iter().map(|o| (metric.extract)(p, o)).collect())
+        .collect();
+
+    // One effect estimate per replication (CRN-paired across rows), CI
+    // from their spread. A single replication has no between-rep spread,
+    // so fall back to the row-contrast series `2 s_ij y_i` (its mean is
+    // exactly the effect; its spread is the classic contrast variance).
+    let mut effects = Vec::with_capacity(opt.knobs.len());
+    for (j, knob) in opt.knobs.iter().enumerate() {
+        let ci = if reps > 1 {
+            let per_rep: Vec<f64> = (0..reps)
+                .map(|r| {
+                    let y_r: Vec<f64> = (0..design.len()).map(|i| y[i][r]).collect();
+                    main_effects(&design, &y_r)[j]
+                })
+                .collect();
+            mean_ci(&per_rep)
+        } else {
+            let contrasts: Vec<f64> = design
+                .iter()
+                .enumerate()
+                .map(|(i, row)| 2.0 * f64::from(row[j]) * y[i][0])
+                .collect();
+            mean_ci(&contrasts)
+        }
+        .expect("screen always has runs");
+        effects.push(ScreenEffect {
+            knob: knob.name.clone(),
+            lo: knob.values[0].to_string(),
+            hi: knob.values[knob.values.len() - 1].to_string(),
+            effect: ci.mean,
+            ci95: ci.half,
+            n: ci.n,
+            rank: 0,
+            significant: ci.significant(),
+        });
+    }
+    // Rank by |effect| descending; the sort is stable, so ties keep knob
+    // declaration order (deterministic across runs and thread counts).
+    let mut order: Vec<usize> = (0..effects.len()).collect();
+    order.sort_by(|&a, &b| {
+        effects[b]
+            .effect
+            .abs()
+            .partial_cmp(&effects[a].effect.abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut ranked = Vec::with_capacity(effects.len());
+    for (rank, &idx) in order.iter().enumerate() {
+        let mut e = effects[idx].clone();
+        e.rank = rank + 1;
+        ranked.push(e);
+    }
+
+    Ok(OptimizeRecord {
+        mode: "screen".to_string(),
+        objective: metric.name.to_string(),
+        objective_unit: metric.unit.to_string(),
+        direction: opt.direction.name().to_string(),
+        replications: reps,
+        total_runs,
+        budget: opt.budget,
+        effects: ranked,
+        trail: Vec::new(),
+        best: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn design_columns_are_balanced_and_orthogonal() {
+        for k in 1..=9 {
+            let d = fold_over_design(k);
+            let n = (k + 1).next_power_of_two();
+            assert_eq!(d.len(), 2 * n, "k={k}");
+            for j in 0..k {
+                let sum: i32 = d.iter().map(|r| i32::from(r[j])).sum();
+                assert_eq!(sum, 0, "k={k} column {j} unbalanced");
+                for l in (j + 1)..k {
+                    let dot: i32 = d.iter().map(|r| i32::from(r[j]) * i32::from(r[l])).sum();
+                    assert_eq!(dot, 0, "k={k} columns {j},{l} not orthogonal");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_over_rows_negate_the_first_half() {
+        let d = fold_over_design(3);
+        let n = d.len() / 2;
+        for i in 0..n {
+            for j in 0..3 {
+                assert_eq!(d[i][j], -d[i + n][j]);
+            }
+        }
+    }
+
+    #[test]
+    fn main_effects_recover_a_planted_linear_model() {
+        // y = 10 + 3*s1 - 1*s2 (+ 0*s3): effects are the hi-vs-lo
+        // differences 2a = [6, -2, 0].
+        let d = fold_over_design(3);
+        let y: Vec<f64> = d
+            .iter()
+            .map(|r| 10.0 + 3.0 * f64::from(r[0]) - 1.0 * f64::from(r[1]))
+            .collect();
+        let e = main_effects(&d, &y);
+        assert!((e[0] - 6.0).abs() < 1e-12, "{e:?}");
+        assert!((e[1] + 2.0).abs() < 1e-12, "{e:?}");
+        assert!(e[2].abs() < 1e-12, "{e:?}");
+    }
+}

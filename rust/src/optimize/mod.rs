@@ -1,0 +1,369 @@
+//! Optimization subsystem: the `scenario: optimize` kind.
+//!
+//! Three layers on top of the existing CRN/run-pool substrate, turning
+//! the simulator from a report generator into a recommendation engine:
+//!
+//! * [`stats`] — paired-CRN confidence intervals (t-based paired deltas;
+//!   Welch fallback for unpaired studies). Also powers the
+//!   `delta_ci`/`significant` columns in `scenario: multi`.
+//! * [`design`] — `mode: screen`: a declared `knobs:` block is expanded
+//!   into a two-level fold-over (resolution IV) factorial design, run on
+//!   common random numbers, and reported as a ranked main-effects table
+//!   ("which knobs matter").
+//! * [`search`] — `mode: tune`: successive halving over the full knob
+//!   grid with CRN-paired elimination (a config is pruned only when its
+//!   paired CI against the incumbent excludes zero), emitting the winner
+//!   as a runnable `scenario: single` YAML (`--best-out`).
+//!
+//! ```yaml
+//! scenario: optimize
+//! replications: 8
+//! optimize:
+//!   mode: screen            # or tune
+//!   objective: makespan_hours
+//!   direction: min          # or max (e.g. goodput_fraction)
+//!   budget: 64              # max total simulator runs
+//!   knobs:
+//!     - param: checkpoint_interval
+//!       values: [15, 120, 2880]
+//!     - param: policies.selection
+//!       values: [first_fit, history_scored]
+//! ```
+//!
+//! Seed discipline: every replication `r` rides the shared CRN stream
+//! `Rng::derived(seed, &[CRN_STREAM, r])` — the same streams a CRN
+//! sweep or study uses, and zero extra draws for every other kind.
+
+pub mod design;
+pub mod search;
+pub mod stats;
+
+use crate::config::yaml::Value;
+use crate::config::Params;
+use crate::model::PolicySpec;
+use crate::report::record::OptimizeRecord;
+use crate::stats::metrics;
+use crate::sweep::{AxisValue, SweepPoint};
+
+/// What to do with the declared knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Factorial main-effects screen: rank knobs by impact.
+    Screen,
+    /// Successive-halving search: find the best grid point.
+    Tune,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Screen => "screen",
+            Mode::Tune => "tune",
+        }
+    }
+}
+
+/// Whether a smaller or larger objective is better.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Min,
+    Max,
+}
+
+impl Direction {
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::Min => "min",
+            Direction::Max => "max",
+        }
+    }
+}
+
+/// One declared knob: a numeric registry parameter or a `policies.*`
+/// axis, with the candidate values to explore (declaration order; the
+/// screen uses first = low level, last = high level).
+#[derive(Clone, Debug)]
+pub struct Knob {
+    pub name: String,
+    pub values: Vec<AxisValue>,
+}
+
+/// A parsed, validated `optimize:` block.
+#[derive(Clone, Debug)]
+pub struct Optimize {
+    pub mode: Mode,
+    /// Objective metric (a registry name).
+    pub objective: String,
+    pub direction: Direction,
+    pub knobs: Vec<Knob>,
+    /// Max total simulator runs (0 = derived default; see each mode).
+    pub budget: usize,
+    pub replications: usize,
+}
+
+/// Parse and validate the `optimize:` section of a scenario document.
+/// Every knob value is checked against the registries at parse time so
+/// errors name the offender, not a worker thread.
+pub fn optimize_from_doc(
+    doc: &Value,
+    base: &Params,
+    _policies: &PolicySpec,
+    replications: usize,
+) -> Result<Optimize, String> {
+    let section = doc
+        .get("optimize")
+        .ok_or("scenario kind `optimize` needs an `optimize:` section")?;
+    let map = section.as_map().ok_or("`optimize:` must be a map")?;
+    for (key, _) in map {
+        match key.as_str() {
+            "mode" | "objective" | "direction" | "budget" | "knobs" => {}
+            other => {
+                return Err(format!(
+                    "unknown `optimize:` key `{other}` (expected mode, objective, \
+                     direction, budget, or knobs)"
+                ))
+            }
+        }
+    }
+    let mode = match section.get("mode").and_then(|v| v.as_str()) {
+        Some("screen") => Mode::Screen,
+        Some("tune") => Mode::Tune,
+        Some(other) => {
+            return Err(format!("unknown optimize mode `{other}` (expected screen or tune)"))
+        }
+        None => return Err("optimize.mode missing (expected screen or tune)".into()),
+    };
+    let objective = section
+        .get("objective")
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or("optimize.objective must be a metric name".to_string())
+        })
+        .unwrap_or_else(|| Ok(metrics::DEFAULT_METRIC.to_string()))?;
+    metrics::resolve(&objective)?;
+    let direction = match section.get("direction").and_then(|v| v.as_str()) {
+        None | Some("min") => Direction::Min,
+        Some("max") => Direction::Max,
+        Some(other) => {
+            return Err(format!(
+                "unknown optimize direction `{other}` (expected min or max)"
+            ))
+        }
+    };
+    let budget = match section.get("budget") {
+        None => 0,
+        Some(v) => {
+            let b = v
+                .as_f64()
+                .ok_or("optimize.budget must be a number of simulator runs")?;
+            if b < 1.0 {
+                return Err("optimize.budget must be >= 1".into());
+            }
+            b as usize
+        }
+    };
+
+    let knob_list = section
+        .get("knobs")
+        .ok_or("optimize.knobs missing (declare at least one knob)")?
+        .as_list()
+        .ok_or("optimize.knobs must be a list")?;
+    if knob_list.is_empty() {
+        return Err("optimize.knobs must declare at least one knob".into());
+    }
+    let mut knobs = Vec::with_capacity(knob_list.len());
+    for (i, item) in knob_list.iter().enumerate() {
+        let item_map = item
+            .as_map()
+            .ok_or_else(|| format!("optimize.knobs[{i}] must be a map"))?;
+        for (key, _) in item_map {
+            match key.as_str() {
+                "param" | "values" => {}
+                other => {
+                    return Err(format!(
+                        "optimize.knobs[{i}]: unknown key `{other}` (expected param, values)"
+                    ))
+                }
+            }
+        }
+        let name = item
+            .get("param")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("optimize.knobs[{i}].param missing"))?
+            .to_string();
+        if knobs.iter().any(|k: &Knob| k.name == name) {
+            return Err(format!("optimize.knobs: duplicate knob `{name}`"));
+        }
+        let raw = item
+            .get("values")
+            .ok_or_else(|| format!("optimize.knobs[{i}] ({name}): values missing"))?;
+        let values = match name.strip_prefix("policies.") {
+            Some(axis) => {
+                let list = raw
+                    .as_list()
+                    .ok_or_else(|| format!("knob `{name}`: values must be a list of names"))?;
+                let mut out = Vec::with_capacity(list.len());
+                for v in list {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| format!("knob `{name}`: expected policy names"))?;
+                    PolicySpec::default()
+                        .set(axis, s)
+                        .map_err(|e| format!("knob `{name}`: {e}"))?;
+                    out.push(AxisValue::Name(s.to_string()));
+                }
+                out
+            }
+            None => {
+                if base.get_by_name(&name).is_none() {
+                    return Err(format!(
+                        "knob `{name}` is not a sweepable parameter (see `airesim list-params`)"
+                    ));
+                }
+                raw.as_f64_list()
+                    .ok_or_else(|| format!("knob `{name}`: values must be a list of numbers"))?
+                    .into_iter()
+                    .map(AxisValue::Num)
+                    .collect()
+            }
+        };
+        if values.len() < 2 {
+            return Err(format!(
+                "knob `{name}` needs at least 2 values (got {})",
+                values.len()
+            ));
+        }
+        knobs.push(Knob { name, values });
+    }
+
+    Ok(Optimize { mode, objective, direction, knobs, budget, replications: replications.max(1) })
+}
+
+/// Resolve one candidate point — apply knob overrides, then run the full
+/// config validation and policy build so worker threads never see an
+/// error.
+pub(crate) fn resolve_point(
+    base: &Params,
+    policies: &PolicySpec,
+    overrides: &[(String, AxisValue)],
+) -> Result<(Params, PolicySpec), String> {
+    let point = SweepPoint { overrides: overrides.to_vec() };
+    let label = if overrides.is_empty() { "base".to_string() } else { point.label() };
+    let (p, spec) = point
+        .apply_full(base, policies)
+        .map_err(|e| format!("optimize point `{label}`: {e}"))?;
+    crate::config::validate::validate(&p)
+        .map_err(|e| format!("optimize point `{label}`: {e}"))?;
+    spec.build(&p)
+        .map_err(|e| format!("optimize point `{label}`: {e}"))?;
+    Ok((p, spec))
+}
+
+/// Run the optimize scenario: dispatch on mode.
+pub fn run_optimize(
+    base: &Params,
+    policies: &PolicySpec,
+    opt: &Optimize,
+    seed: u64,
+    threads: usize,
+) -> Result<OptimizeRecord, String> {
+    match opt.mode {
+        Mode::Screen => design::run_screen(base, policies, opt, seed, threads),
+        Mode::Tune => search::run_tune(base, policies, opt, seed, threads),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::yaml;
+
+    fn base() -> Params {
+        Params::small_test()
+    }
+
+    fn parse(optimize_block: &str) -> Result<Optimize, String> {
+        let doc = yaml::parse(optimize_block).unwrap();
+        optimize_from_doc(&doc, &base(), &PolicySpec::default(), 4)
+    }
+
+    const GOOD: &str = "optimize:\n  mode: screen\n  objective: makespan_hours\n  \
+                        direction: min\n  budget: 64\n  knobs:\n    - param: checkpoint_interval\n      \
+                        values: [15, 120]\n    - param: policies.selection\n      \
+                        values: [first_fit, locality]\n";
+
+    #[test]
+    fn parses_a_full_block() {
+        let opt = parse(GOOD).unwrap();
+        assert_eq!(opt.mode, Mode::Screen);
+        assert_eq!(opt.objective, "makespan_hours");
+        assert_eq!(opt.direction, Direction::Min);
+        assert_eq!(opt.budget, 64);
+        assert_eq!(opt.replications, 4);
+        assert_eq!(opt.knobs.len(), 2);
+        assert_eq!(opt.knobs[0].name, "checkpoint_interval");
+        assert_eq!(opt.knobs[1].values[1], AxisValue::Name("locality".into()));
+    }
+
+    #[test]
+    fn defaults_objective_and_direction() {
+        let opt = parse(
+            "optimize:\n  mode: tune\n  knobs:\n    - param: recovery_time\n      values: [10, 30]\n",
+        )
+        .unwrap();
+        assert_eq!(opt.objective, metrics::DEFAULT_METRIC);
+        assert_eq!(opt.direction, Direction::Min);
+        assert_eq!(opt.budget, 0, "budget defaults per mode");
+    }
+
+    #[test]
+    fn rejects_offenders_by_name() {
+        let err = parse("optimize:\n  knobs:\n    - param: recovery_time\n      values: [10, 30]\n")
+            .unwrap_err();
+        assert!(err.contains("mode"), "{err}");
+
+        let err = parse(
+            "optimize:\n  mode: screen\n  knobs:\n    - param: not_a_param\n      values: [1, 2]\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("not_a_param"), "{err}");
+
+        let err = parse(
+            "optimize:\n  mode: screen\n  knobs:\n    - param: policies.selection\n      values: [bogus, locality]\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("bogus"), "{err}");
+
+        let err = parse(
+            "optimize:\n  mode: screen\n  objective: not_a_metric\n  knobs:\n    - param: recovery_time\n      values: [10, 30]\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("not_a_metric"), "{err}");
+
+        let err = parse(
+            "optimize:\n  mode: screen\n  knobs:\n    - param: recovery_time\n      values: [10]\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("at least 2"), "{err}");
+
+        let err = parse(
+            "optimize:\n  mode: screen\n  surprise: 1\n  knobs:\n    - param: recovery_time\n      values: [10, 30]\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("surprise"), "{err}");
+
+        let err = parse(
+            "optimize:\n  mode: screen\n  knobs:\n    - param: recovery_time\n      values: [10, 30]\n    - param: recovery_time\n      values: [5, 15]\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn resolve_point_names_bad_points() {
+        let overrides = vec![("recovery_time".to_string(), AxisValue::Num(-5.0))];
+        let err = resolve_point(&base(), &PolicySpec::default(), &overrides).unwrap_err();
+        assert!(err.contains("recovery_time=-5"), "{err}");
+    }
+}

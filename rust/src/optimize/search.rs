@@ -1,0 +1,331 @@
+//! Successive-halving search over the knob grid (`mode: tune`).
+//!
+//! Candidates are the base configuration plus every point of the full
+//! cartesian knob grid (declaration order, first knob outermost). All
+//! surviving candidates are always evaluated to the *same* replication
+//! count on the shared CRN streams, so every pairwise comparison is a
+//! paired comparison. Each round doubles the replication count, ranks
+//! by the direction-adjusted mean, and keeps the best half
+//! unconditionally; a worse-half candidate is pruned **only when its
+//! paired CI against the incumbent excludes zero** on the worse side —
+//! a noisy loser is never eliminated on a coin flip. The base
+//! configuration is exempt from pruning: it is the control arm the
+//! final winner-vs-base verdict pairs against, so it always runs to the
+//! full replication count.
+//!
+//! Tie handling is deterministic by construction: ranking sorts by
+//! (adjusted mean, candidate declaration index) with a stable sort, and
+//! all bookkeeping is indexed by candidate id — never by map iteration
+//! order. Output is byte-identical across runs and thread counts.
+
+use crate::config::Params;
+use crate::model::PolicySpec;
+use crate::optimize::stats::{mean_ci, paired_delta_ci, Ci};
+use crate::optimize::{Direction, Optimize};
+use crate::report::record::{BestConfig, OptimizeRecord, TunePoint};
+use crate::sim::rng::Rng;
+use crate::stats::metrics;
+use crate::sweep::{run_pool_ordered, AxisValue, CRN_STREAM};
+
+/// One search candidate: its grid overrides and resolved config.
+struct Candidate {
+    label: String,
+    overrides: Vec<(String, AxisValue)>,
+    params: Params,
+    spec: PolicySpec,
+    /// Objective values in replication order (CRN stream `r` at index `r`).
+    values: Vec<f64>,
+    pruned_round: Option<usize>,
+}
+
+/// The base point plus the full cartesian grid, in declaration order
+/// (first knob outermost — matches sweep axis order).
+fn candidates(opt: &Optimize) -> Vec<Vec<(String, AxisValue)>> {
+    let mut grid: Vec<Vec<(String, AxisValue)>> = vec![Vec::new()];
+    for knob in &opt.knobs {
+        let mut next = Vec::with_capacity(grid.len() * knob.values.len());
+        for stem in &grid {
+            for v in &knob.values {
+                let mut overrides = stem.clone();
+                overrides.push((knob.name.clone(), v.clone()));
+                next.push(overrides);
+            }
+        }
+        grid = next;
+    }
+    let mut all = Vec::with_capacity(grid.len() + 1);
+    all.push(Vec::new()); // candidate 0: the base configuration
+    all.extend(grid);
+    all
+}
+
+/// Render the winning configuration as a runnable `scenario: single`
+/// document (every sweepable parameter pinned, plus the resolved policy
+/// selection). `systematic_rate_multiplier` is omitted — it is derived
+/// from the two rates already emitted and would double-apply.
+fn best_yaml(label: &str, seed: u64, p: &Params, spec: &PolicySpec) -> String {
+    let mut s = String::new();
+    s.push_str("# Emitted by `scenario: optimize` (mode: tune): the winning configuration.\n");
+    s.push_str(&format!("# Winner: {label}\n"));
+    s.push_str("scenario: single\n");
+    s.push_str(&format!("title: tuned {label}\n"));
+    s.push_str(&format!("seed: {seed}\n"));
+    s.push_str("params:\n");
+    for &name in Params::sweepable_names() {
+        if name == "systematic_rate_multiplier" {
+            continue;
+        }
+        let v = p.get_by_name(name).expect("sweepable names readable");
+        s.push_str(&format!("  {name}: {v}\n"));
+    }
+    match p.failure_dist {
+        crate::config::DistKind::Exponential => {}
+        crate::config::DistKind::Weibull { shape } => {
+            s.push_str(&format!("  failure_dist: weibull:{shape}\n"));
+        }
+        crate::config::DistKind::LogNormal { sigma } => {
+            s.push_str(&format!("  failure_dist: lognormal:{sigma}\n"));
+        }
+    }
+    s.push_str("policies:\n");
+    s.push_str(&format!("  selection: {}\n", spec.selection));
+    s.push_str(&format!("  repair: {}\n", spec.repair));
+    s.push_str(&format!("  checkpoint: {}\n", spec.checkpoint));
+    s.push_str(&format!("  failure: {}\n", spec.failure));
+    s
+}
+
+/// Run the successive-halving search.
+pub fn run_tune(
+    base: &Params,
+    policies: &PolicySpec,
+    opt: &Optimize,
+    seed: u64,
+    threads: usize,
+) -> Result<OptimizeRecord, String> {
+    let metric = metrics::resolve(&opt.objective)?;
+    let reps_cap = opt.replications.max(1);
+    let mut cands: Vec<Candidate> = Vec::new();
+    for overrides in candidates(opt) {
+        let (params, spec) = super::resolve_point(base, policies, &overrides)?;
+        let label = if overrides.is_empty() {
+            "base".to_string()
+        } else {
+            crate::sweep::SweepPoint { overrides: overrides.clone() }.label()
+        };
+        cands.push(Candidate { label, overrides, params, spec, values: Vec::new(), pruned_round: None });
+    }
+
+    let initial_reps = reps_cap.min(2);
+    let budget = if opt.budget == 0 { cands.len() * reps_cap } else { opt.budget };
+    if budget < cands.len() * initial_reps {
+        return Err(format!(
+            "optimize.budget {} cannot cover the first round ({} candidates x \
+             {initial_reps} replications = {} runs)",
+            budget,
+            cands.len(),
+            cands.len() * initial_reps
+        ));
+    }
+
+    // Direction-adjusted mean: smaller is always better internally.
+    let adj = |mean: f64| match opt.direction {
+        Direction::Min => mean,
+        Direction::Max => -mean,
+    };
+    let mean_of = |c: &Candidate| c.values.iter().sum::<f64>() / c.values.len().max(1) as f64;
+
+    let mut alive: Vec<usize> = (0..cands.len()).collect();
+    let mut have = 0usize;
+    let mut target = initial_reps;
+    let mut total_runs = 0usize;
+    let mut round = 0usize;
+    loop {
+        let new = target - have;
+        if new == 0 || total_runs + alive.len() * new > budget {
+            break;
+        }
+        // Run the missing replications for every surviving candidate.
+        // Replication `have + r` rides CRN stream `have + r` for every
+        // candidate — pairing holds across rounds.
+        let results = run_pool_ordered(alive.len(), new, threads, |runner, ai, rep| {
+            let c = &cands[alive[ai]];
+            let rng = Rng::derived(seed, &[CRN_STREAM, (have + rep) as u64]);
+            let out = runner.run(&c.params, &c.spec, rng);
+            (c.params.clone(), out)
+        });
+        for (ai, (p, outs)) in results.into_iter().enumerate() {
+            let c = &mut cands[alive[ai]];
+            c.values.extend(outs.iter().map(|o| (metric.extract)(&p, o)));
+        }
+        total_runs += alive.len() * new;
+        have = target;
+        round += 1;
+
+        // Rank survivors: adjusted mean, ties by declaration index
+        // (stable — never map iteration order).
+        alive.sort_by(|&a, &b| {
+            adj(mean_of(&cands[a]))
+                .partial_cmp(&adj(mean_of(&cands[b])))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        if alive.len() > 1 {
+            let keep = alive.len().div_ceil(2);
+            let incumbent = alive[0];
+            let mut survivors: Vec<usize> = alive[..keep].to_vec();
+            for &c in &alive[keep..] {
+                // The base configuration is the control arm the final
+                // winner-vs-base verdict pairs against: it always rides
+                // to the full replication count, so the verdict's CI is
+                // never starved down to a first-round sample.
+                if c == 0 {
+                    survivors.push(c);
+                    continue;
+                }
+                let ci = paired_delta_ci(&cands[incumbent].values, &cands[c].values)
+                    .expect("equal-length CRN series");
+                // Delta is candidate - incumbent; prune only when the CI
+                // puts the candidate strictly on the worse side of zero.
+                let provably_worse = match opt.direction {
+                    Direction::Min => ci.lo() > 0.0,
+                    Direction::Max => ci.hi() < 0.0,
+                };
+                if provably_worse {
+                    cands[c].pruned_round = Some(round);
+                } else {
+                    survivors.push(c);
+                }
+            }
+            alive = survivors;
+        }
+        if have >= reps_cap || alive.len() == 1 {
+            break;
+        }
+        target = (have * 2).min(reps_cap);
+    }
+
+    // Winner: the best-ranked survivor (alive is sorted best-first after
+    // at least one round; guard the degenerate zero-round case anyway).
+    let winner = alive
+        .iter()
+        .copied()
+        .min_by(|&a, &b| {
+            adj(mean_of(&cands[a]))
+                .partial_cmp(&adj(mean_of(&cands[b])))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        })
+        .expect("at least the base candidate survives");
+
+    // Final paired verdict vs the base config, over the replications
+    // both actually ran (a prefix — CRN streams are positional).
+    let common = cands[0].values.len().min(cands[winner].values.len());
+    let delta = if winner == 0 || common == 0 {
+        Ci { n: common, mean: 0.0, half: 0.0 }
+    } else {
+        paired_delta_ci(&cands[0].values[..common], &cands[winner].values[..common])
+            .expect("equal-length prefixes")
+    };
+    let w = &cands[winner];
+    let best = BestConfig {
+        label: w.label.clone(),
+        overrides: w.overrides.clone(),
+        mean: mean_of(w),
+        delta_mean: delta.mean,
+        delta_ci95: delta.half,
+        delta_n: delta.n,
+        significant: winner != 0 && delta.significant(),
+        yaml: best_yaml(&w.label, seed, &w.params, &w.spec),
+    };
+
+    let trail = cands
+        .iter()
+        .enumerate()
+        .map(|(i, c)| TunePoint {
+            label: c.label.clone(),
+            overrides: c.overrides.clone(),
+            n: c.values.len(),
+            mean: mean_of(c),
+            ci95: mean_ci(&c.values).map(|ci| ci.half).unwrap_or(f64::INFINITY),
+            pruned_round: c.pruned_round,
+            winner: i == winner,
+        })
+        .collect();
+
+    Ok(OptimizeRecord {
+        mode: "tune".to_string(),
+        objective: metric.name.to_string(),
+        objective_unit: metric.unit.to_string(),
+        direction: opt.direction.name().to_string(),
+        replications: reps_cap,
+        total_runs,
+        budget,
+        effects: Vec::new(),
+        trail,
+        best: Some(best),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimize::{Knob, Mode};
+
+    fn opt(knobs: Vec<Knob>) -> Optimize {
+        Optimize {
+            mode: Mode::Tune,
+            objective: "makespan_hours".to_string(),
+            direction: Direction::Min,
+            knobs,
+            budget: 0,
+            replications: 4,
+        }
+    }
+
+    #[test]
+    fn grid_includes_base_and_is_declaration_ordered() {
+        let o = opt(vec![
+            Knob { name: "recovery_time".into(), values: vec![10.0.into(), 30.0.into()] },
+            Knob {
+                name: "policies.selection".into(),
+                values: vec!["first_fit".into(), "locality".into()],
+            },
+        ]);
+        let c = candidates(&o);
+        assert_eq!(c.len(), 5); // base + 2x2 grid
+        assert!(c[0].is_empty());
+        assert_eq!(c[1][0], ("recovery_time".to_string(), AxisValue::Num(10.0)));
+        assert_eq!(c[1][1], ("policies.selection".to_string(), AxisValue::Name("first_fit".into())));
+        assert_eq!(c[4][0], ("recovery_time".to_string(), AxisValue::Num(30.0)));
+        assert_eq!(c[4][1], ("policies.selection".to_string(), AxisValue::Name("locality".into())));
+    }
+
+    #[test]
+    fn best_yaml_reparses_as_a_single_scenario() {
+        let p = Params::small_test();
+        let spec = PolicySpec::default();
+        let y = best_yaml("recovery_time=10", 42, &p, &spec);
+        let doc = crate::config::yaml::parse(&y).expect("emitted YAML parses");
+        assert_eq!(doc.get("scenario").and_then(|v| v.as_str()), Some("single"));
+        let parsed = crate::config::validate::params_from_config(&doc).expect("params valid");
+        for &name in Params::sweepable_names() {
+            let a = parsed.get_by_name(name).unwrap();
+            let b = p.get_by_name(name).unwrap();
+            assert!(
+                (a - b).abs() <= 1e-12 * b.abs().max(1.0),
+                "{name}: emitted {a} != source {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn best_yaml_round_trips_non_exponential_dists() {
+        let mut p = Params::small_test();
+        p.failure_dist = crate::config::DistKind::Weibull { shape: 1.5 };
+        let y = best_yaml("base", 1, &p, &PolicySpec::default());
+        let doc = crate::config::yaml::parse(&y).unwrap();
+        let parsed = crate::config::validate::params_from_config(&doc).unwrap();
+        assert_eq!(parsed.failure_dist, p.failure_dist);
+    }
+}

@@ -1,0 +1,219 @@
+//! Confidence-interval machinery for the optimization subsystem.
+//!
+//! Two inference paths, both returning a [`Ci`]:
+//!
+//! * [`paired_delta_ci`] — replication-level paired deltas between two
+//!   CRN-matched variants (rep *r* of A and rep *r* of B share the same
+//!   random-number stream, so their difference cancels the common noise).
+//!   The t-interval is computed on the paired differences.
+//! * [`welch_delta_ci`] — unpaired (Welch) interval for studies run
+//!   without CRN, where replication indices carry no pairing.
+//!
+//! Both are exact small-sample t-intervals: the critical value comes
+//! from a fixed two-sided 97.5% table (no incomplete-beta evaluation,
+//! keeping the crate dependency-free), conservative for the df gaps.
+
+/// A two-sided 95% confidence interval on a mean: `mean ± half`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Ci {
+    /// Number of observations the interval was computed from.
+    pub n: usize,
+    /// Point estimate.
+    pub mean: f64,
+    /// 95% half-width (`INFINITY` when n < 2 — one observation carries
+    /// no variance information; `0.0` for degenerate zero variance).
+    pub half: f64,
+}
+
+impl Ci {
+    pub fn lo(&self) -> f64 {
+        self.mean - self.half
+    }
+
+    pub fn hi(&self) -> f64 {
+        self.mean + self.half
+    }
+
+    /// True when the interval excludes zero (the paired delta is
+    /// distinguishable from "no difference" at the 95% level).
+    pub fn significant(&self) -> bool {
+        self.half.is_finite() && (self.lo() > 0.0 || self.hi() < 0.0)
+    }
+}
+
+/// Two-sided 97.5% Student-t critical value for `df` degrees of
+/// freedom. Exact for df 1–30, then the standard coarse table
+/// (40/60/120/∞) — conservative in the gaps (uses the smaller df's
+/// larger critical value).
+pub fn t975(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    match df {
+        0 => f64::INFINITY,
+        1..=30 => TABLE[df - 1],
+        31..=40 => 2.021,
+        41..=60 => 2.000,
+        61..=120 => 1.980,
+        _ => 1.960,
+    }
+}
+
+/// t-based 95% CI on the mean of `values`. `None` when empty; a single
+/// value yields an infinite half-width; zero sample variance yields a
+/// zero half-width (never NaN).
+pub fn mean_ci(values: &[f64]) -> Option<Ci> {
+    let n = values.len();
+    if n == 0 {
+        return None;
+    }
+    let mean = values.iter().sum::<f64>() / n as f64;
+    if n == 1 {
+        return Some(Ci { n, mean, half: f64::INFINITY });
+    }
+    let var = values.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / (n - 1) as f64;
+    let half = if var <= 0.0 {
+        0.0
+    } else {
+        t975(n - 1) * (var / n as f64).sqrt()
+    };
+    Some(Ci { n, mean, half })
+}
+
+/// Paired 95% CI on the mean of `b - a`, replication by replication.
+/// Requires equal lengths (the CRN pairing is positional); `None` when
+/// the series are empty or mismatched.
+pub fn paired_delta_ci(a: &[f64], b: &[f64]) -> Option<Ci> {
+    if a.len() != b.len() || a.is_empty() {
+        return None;
+    }
+    let deltas: Vec<f64> = a.iter().zip(b).map(|(x, y)| y - x).collect();
+    mean_ci(&deltas)
+}
+
+/// Unpaired Welch 95% CI on `mean(b) - mean(a)` with the
+/// Welch–Satterthwaite degrees of freedom (floored, min 1). Used when
+/// the study ran without CRN so replication indices carry no pairing.
+pub fn welch_delta_ci(a: &[f64], b: &[f64]) -> Option<Ci> {
+    if a.is_empty() || b.is_empty() {
+        return None;
+    }
+    let (na, nb) = (a.len(), b.len());
+    let ma = a.iter().sum::<f64>() / na as f64;
+    let mb = b.iter().sum::<f64>() / nb as f64;
+    let mean = mb - ma;
+    if na < 2 || nb < 2 {
+        return Some(Ci { n: na.min(nb), mean, half: f64::INFINITY });
+    }
+    let va = a.iter().map(|v| (v - ma).powi(2)).sum::<f64>() / (na - 1) as f64;
+    let vb = b.iter().map(|v| (v - mb).powi(2)).sum::<f64>() / (nb - 1) as f64;
+    let (sa, sb) = (va / na as f64, vb / nb as f64);
+    let se2 = sa + sb;
+    if se2 <= 0.0 {
+        return Some(Ci { n: na.min(nb), mean, half: 0.0 });
+    }
+    let df_num = se2 * se2;
+    let df_den = sa * sa / (na - 1) as f64 + sb * sb / (nb - 1) as f64;
+    let df = if df_den > 0.0 {
+        ((df_num / df_den).floor() as usize).max(1)
+    } else {
+        1
+    };
+    Some(Ci { n: na.min(nb), mean, half: t975(df) * se2.sqrt() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t_table_monotone_and_anchored() {
+        assert_eq!(t975(1), 12.706);
+        assert_eq!(t975(4), 2.776);
+        assert_eq!(t975(30), 2.042);
+        assert_eq!(t975(1000), 1.960);
+        assert!(t975(0).is_infinite());
+        for df in 1..200 {
+            assert!(t975(df + 1) <= t975(df), "t975 must be non-increasing");
+        }
+    }
+
+    #[test]
+    fn paired_ci_matches_hand_computed_fixture() {
+        // deltas = [1, 2, 3, 4, 5]: mean 3, sample var 2.5, df 4.
+        let a = [10.0, 10.0, 10.0, 10.0, 10.0];
+        let b = [11.0, 12.0, 13.0, 14.0, 15.0];
+        let ci = paired_delta_ci(&a, &b).unwrap();
+        assert_eq!(ci.n, 5);
+        assert!((ci.mean - 3.0).abs() < 1e-12);
+        let expected_half = 2.776 * (2.5f64 / 5.0).sqrt();
+        assert!((ci.half - expected_half).abs() < 1e-9, "{} vs {expected_half}", ci.half);
+        assert!(ci.significant(), "interval [1.04, 4.96] excludes zero");
+    }
+
+    #[test]
+    fn degenerate_variance_yields_zero_width_not_nan() {
+        let a = [5.0, 5.0, 5.0];
+        let b = [7.0, 7.0, 7.0];
+        let ci = paired_delta_ci(&a, &b).unwrap();
+        assert_eq!(ci.mean, 2.0);
+        assert_eq!(ci.half, 0.0);
+        assert!(!ci.half.is_nan());
+        assert!(ci.significant());
+        // All-equal deltas with zero mean: zero-width, not significant.
+        let ci = paired_delta_ci(&a, &a).unwrap();
+        assert_eq!(ci.mean, 0.0);
+        assert_eq!(ci.half, 0.0);
+        assert!(!ci.significant());
+    }
+
+    #[test]
+    fn single_pair_is_infinite_width() {
+        let ci = paired_delta_ci(&[1.0], &[4.0]).unwrap();
+        assert_eq!(ci.mean, 3.0);
+        assert!(ci.half.is_infinite());
+        assert!(!ci.significant());
+    }
+
+    #[test]
+    fn mismatched_or_empty_series_yield_none() {
+        assert!(paired_delta_ci(&[1.0, 2.0], &[1.0]).is_none());
+        assert!(paired_delta_ci(&[], &[]).is_none());
+        assert!(welch_delta_ci(&[], &[1.0]).is_none());
+        assert!(mean_ci(&[]).is_none());
+    }
+
+    #[test]
+    fn welch_matches_hand_computed_fixture() {
+        // a = [1,2,3], b = [5,7,9]: ma=2 va=1, mb=7 vb=4, delta 5,
+        // se2 = 1/3 + 4/3 = 5/3, df = (5/3)^2 / ((1/9)/2 + (16/9)/2)
+        //     = (25/9)/(17/18) = 50/17 ≈ 2.94 → floor 2 → t=4.303.
+        let ci = welch_delta_ci(&[1.0, 2.0, 3.0], &[5.0, 7.0, 9.0]).unwrap();
+        assert!((ci.mean - 5.0).abs() < 1e-12);
+        let expected = 4.303 * (5.0f64 / 3.0).sqrt();
+        assert!((ci.half - expected).abs() < 1e-9, "{} vs {expected}", ci.half);
+    }
+
+    #[test]
+    fn welch_single_observation_is_infinite() {
+        let ci = welch_delta_ci(&[1.0], &[2.0, 3.0]).unwrap();
+        assert!(ci.half.is_infinite());
+    }
+
+    #[test]
+    fn paired_beats_welch_when_noise_is_shared() {
+        // Same per-rep noise on both arms plus a fixed offset: paired
+        // deltas are constant (zero-width CI) while Welch sees the full
+        // between-rep variance.
+        let noise = [0.0, 3.0, -2.0, 5.0, 1.0, -4.0];
+        let a: Vec<f64> = noise.iter().map(|z| 100.0 + z).collect();
+        let b: Vec<f64> = noise.iter().map(|z| 102.0 + z).collect();
+        let paired = paired_delta_ci(&a, &b).unwrap();
+        let welch = welch_delta_ci(&a, &b).unwrap();
+        assert_eq!(paired.half, 0.0);
+        assert!(welch.half > 1.0, "welch sees the shared noise: {}", welch.half);
+        assert!(paired.half < welch.half);
+    }
+}

@@ -12,8 +12,9 @@ pub mod record;
 pub mod sink;
 
 pub use record::{
-    CompareRecord, ComparisonEntry, PrescreenRecord, RecordBody, RunRecord,
-    ScenarioRecord, StudyChildRecord, StudyRecord, SweepRecord, WhatIfRecord,
+    BestConfig, CompareRecord, ComparisonEntry, OptimizeRecord, PrescreenRecord,
+    RecordBody, RunRecord, ScenarioRecord, ScreenEffect, StudyChildRecord, StudyRecord,
+    SweepRecord, TunePoint, WhatIfRecord,
 };
 pub use sink::{Format, Sink};
 

@@ -171,6 +171,13 @@ pub struct ComparisonEntry {
     /// Percent change vs the baseline mean; `None` on the baseline row,
     /// without a baseline, or when the baseline mean is 0.
     pub delta_pct: Option<f64>,
+    /// 95% half-width on the delta — paired (CRN studies) or Welch
+    /// (independent streams). `None` on the baseline row, without a
+    /// baseline, or when too few replications make it infinite.
+    pub delta_ci: Option<f64>,
+    /// Whether the delta CI excludes zero; populated exactly when
+    /// `delta_ci` is.
+    pub significant: Option<bool>,
 }
 
 /// The combined result of a `multi:` study: per-child records plus the
@@ -182,6 +189,10 @@ pub struct StudyRecord {
     pub crn: bool,
     /// Index of the designated baseline child, if any.
     pub baseline: Option<usize>,
+    /// Show the delta-CI / significance columns in the *text* table
+    /// (`show_ci: true`); the machine formats always carry them. Off by
+    /// default so the legacy table stays byte-identical.
+    pub show_ci: bool,
     pub children: Vec<StudyChildRecord>,
 }
 
@@ -195,12 +206,14 @@ impl StudyRecord {
     /// child (in child order) with delta-vs-baseline columns. Children
     /// missing a metric's summary are skipped in that metric's row set.
     pub fn comparison(&self) -> Vec<(&'static metrics::Metric, Vec<ComparisonEntry>)> {
+        use crate::optimize::stats::{paired_delta_ci, welch_delta_ci};
         let mut table = Vec::with_capacity(metrics::REGISTRY.len());
         for m in metrics::REGISTRY {
             let base_mean = self
                 .baseline
                 .and_then(|i| self.children[i].summary(m.name))
                 .map(|s| s.mean);
+            let base_vals = self.baseline.and_then(|i| self.children[i].collector.values(m.name));
             let mut entries = Vec::with_capacity(self.children.len());
             for (i, child) in self.children.iter().enumerate() {
                 let Some(s) = child.summary(m.name) else { continue };
@@ -211,6 +224,29 @@ impl StudyRecord {
                     ),
                     _ => (None, None),
                 };
+                // Delta inference: CRN studies pair replication-by-
+                // replication (collectors are replication-ordered);
+                // independent streams fall back to Welch. Infinite
+                // half-widths (too few replications) are suppressed
+                // rather than rendered as nulls.
+                let (delta_ci, significant) = match (base_vals, self.baseline) {
+                    (Some(bv), Some(bi)) if bi != i => {
+                        let ci = child.collector.values(m.name).and_then(|v| {
+                            if self.crn {
+                                paired_delta_ci(bv, v)
+                            } else {
+                                welch_delta_ci(bv, v)
+                            }
+                        });
+                        match ci {
+                            Some(c) if c.half.is_finite() => {
+                                (Some(c.half), Some(c.significant()))
+                            }
+                            _ => (None, None),
+                        }
+                    }
+                    _ => (None, None),
+                };
                 entries.push(ComparisonEntry {
                     child: i,
                     n: s.n,
@@ -218,6 +254,8 @@ impl StudyRecord {
                     ci95: s.ci95_halfwidth(),
                     delta,
                     delta_pct,
+                    delta_ci,
+                    significant,
                 });
             }
             table.push((m, entries));
@@ -269,6 +307,12 @@ impl StudyRecord {
                                 }
                                 if let Some(pct) = e.delta_pct {
                                     fields.push(("delta_pct".to_string(), Json::Num(pct)));
+                                }
+                                if let Some(h) = e.delta_ci {
+                                    fields.push(("delta_ci".to_string(), Json::Num(h)));
+                                }
+                                if let Some(sig) = e.significant {
+                                    fields.push(("significant".to_string(), Json::Bool(sig)));
                                 }
                                 Json::Obj(fields)
                             })
@@ -436,6 +480,167 @@ impl PrescreenRecord {
     }
 }
 
+/// One ranked row of the factorial screen (`mode: screen`): a knob's
+/// main effect on the objective — mean objective at the knob's high
+/// level minus at its low level, CRN-paired across replications.
+#[derive(Clone, Debug)]
+pub struct ScreenEffect {
+    /// Knob name (parameter or `policies.*` axis).
+    pub knob: String,
+    /// Low / high level labels (first / last declared value).
+    pub lo: String,
+    pub hi: String,
+    /// Main effect: mean(objective | hi) − mean(objective | lo).
+    pub effect: f64,
+    /// 95% half-width on the effect.
+    pub ci95: f64,
+    /// Observations behind the CI (replications, or design rows when
+    /// replications == 1).
+    pub n: usize,
+    /// 1-based rank by |effect| (1 = most important).
+    pub rank: usize,
+    /// Whether the effect's CI excludes zero.
+    pub significant: bool,
+}
+
+/// One evaluated candidate of the successive-halving search
+/// (`mode: tune`), in candidate declaration order.
+#[derive(Clone, Debug)]
+pub struct TunePoint {
+    pub label: String,
+    pub overrides: Vec<(String, AxisValue)>,
+    /// Replications this candidate actually ran before (if) pruning.
+    pub n: usize,
+    pub mean: f64,
+    /// 95% half-width on the candidate's own mean.
+    pub ci95: f64,
+    /// The halving round that pruned it; `None` = survived to the end.
+    pub pruned_round: Option<usize>,
+    pub winner: bool,
+}
+
+/// The search winner, with its paired verdict against the base config
+/// and a runnable `scenario: single` YAML rendition (`--best-out`).
+#[derive(Clone, Debug)]
+pub struct BestConfig {
+    pub label: String,
+    pub overrides: Vec<(String, AxisValue)>,
+    /// Winner's mean objective.
+    pub mean: f64,
+    /// Paired delta winner − base (negative = improvement for `min`).
+    pub delta_mean: f64,
+    /// 95% half-width on the paired delta.
+    pub delta_ci95: f64,
+    /// Paired replications behind the delta.
+    pub delta_n: usize,
+    /// Whether the winner beats the base with a CI excluding zero.
+    pub significant: bool,
+    /// The winning configuration as a runnable YAML document.
+    pub yaml: String,
+}
+
+/// The `scenario: optimize` result: a ranked main-effects table
+/// (`mode: screen`) or a full search trail plus winner (`mode: tune`).
+#[derive(Clone, Debug)]
+pub struct OptimizeRecord {
+    /// `screen | tune`.
+    pub mode: String,
+    /// Objective metric name and unit (from the registry).
+    pub objective: String,
+    pub objective_unit: String,
+    /// `min | max`.
+    pub direction: String,
+    pub replications: usize,
+    /// Simulator runs actually executed.
+    pub total_runs: usize,
+    /// Effective run budget (screen: declared cap; tune: declared or
+    /// candidates × replications).
+    pub budget: usize,
+    /// Ranked knob effects (`mode: screen`; empty for tune).
+    pub effects: Vec<ScreenEffect>,
+    /// Every candidate evaluated (`mode: tune`; empty for screen).
+    pub trail: Vec<TunePoint>,
+    /// The search winner (`mode: tune` only).
+    pub best: Option<BestConfig>,
+}
+
+impl OptimizeRecord {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("kind".to_string(), Json::str("optimize")),
+            ("mode".to_string(), Json::str(&self.mode)),
+            ("objective".to_string(), Json::str(&self.objective)),
+            ("objective_unit".to_string(), Json::str(&self.objective_unit)),
+            ("direction".to_string(), Json::str(&self.direction)),
+            ("replications".to_string(), self.replications.into()),
+            ("total_runs".to_string(), self.total_runs.into()),
+            ("budget".to_string(), self.budget.into()),
+        ];
+        if !self.effects.is_empty() {
+            fields.push((
+                "effects".to_string(),
+                Json::Arr(
+                    self.effects
+                        .iter()
+                        .map(|e| {
+                            Json::obj([
+                                ("rank", e.rank.into()),
+                                ("knob", Json::str(&e.knob)),
+                                ("lo", Json::str(&e.lo)),
+                                ("hi", Json::str(&e.hi)),
+                                ("effect", Json::Num(e.effect)),
+                                ("ci95", Json::Num(e.ci95)),
+                                ("n", e.n.into()),
+                                ("significant", Json::Bool(e.significant)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.trail.is_empty() {
+            fields.push((
+                "trail".to_string(),
+                Json::Arr(
+                    self.trail
+                        .iter()
+                        .map(|t| {
+                            let mut f = vec![
+                                ("label".to_string(), Json::str(&t.label)),
+                                ("overrides".to_string(), overrides_json(&t.overrides)),
+                                ("n".to_string(), t.n.into()),
+                                ("mean".to_string(), Json::Num(t.mean)),
+                                ("ci95".to_string(), Json::Num(t.ci95)),
+                            ];
+                            if let Some(r) = t.pruned_round {
+                                f.push(("pruned_round".to_string(), r.into()));
+                            }
+                            f.push(("winner".to_string(), Json::Bool(t.winner)));
+                            Json::Obj(f)
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if let Some(b) = &self.best {
+            fields.push((
+                "best".to_string(),
+                Json::obj([
+                    ("label", Json::str(&b.label)),
+                    ("overrides", overrides_json(&b.overrides)),
+                    ("mean", Json::Num(b.mean)),
+                    ("delta_mean", Json::Num(b.delta_mean)),
+                    ("delta_ci95", Json::Num(b.delta_ci95)),
+                    ("delta_n", b.delta_n.into()),
+                    ("significant", Json::Bool(b.significant)),
+                    ("yaml", Json::str(&b.yaml)),
+                ]),
+            ));
+        }
+        Json::Obj(fields)
+    }
+}
+
 /// What a scenario produced, wrapped with the scenario's metadata.
 pub enum RecordBody {
     Run(RunRecord),
@@ -443,12 +648,13 @@ pub enum RecordBody {
     WhatIf(WhatIfRecord),
     Compare(CompareRecord),
     Study(StudyRecord),
+    Optimize(OptimizeRecord),
 }
 
 /// A scenario outcome: metadata + the kind-specific body record.
 pub struct ScenarioRecord {
     pub title: String,
-    /// `single | sweep | whatif | inject | compare | multi`.
+    /// `single | sweep | whatif | inject | compare | multi | optimize`.
     pub kind: &'static str,
     pub seed: u64,
     pub policies: PolicySpec,
@@ -463,6 +669,7 @@ impl ScenarioRecord {
             RecordBody::WhatIf(r) => r.to_json(),
             RecordBody::Compare(r) => r.to_json(),
             RecordBody::Study(r) => r.to_json(),
+            RecordBody::Optimize(r) => r.to_json(),
         };
         Json::obj([
             ("kind", Json::str("scenario")),

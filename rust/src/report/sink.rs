@@ -10,8 +10,8 @@
 
 use crate::report::json::Json;
 use crate::report::record::{
-    CompareRecord, RecordBody, RunRecord, ScenarioRecord, StudyRecord, SweepRecord,
-    WhatIfRecord,
+    CompareRecord, OptimizeRecord, RecordBody, RunRecord, ScenarioRecord, StudyRecord,
+    SweepRecord, WhatIfRecord,
 };
 use crate::report::{csv, text_table};
 
@@ -65,6 +65,7 @@ pub trait Sink {
     fn whatif(&self, r: &WhatIfRecord) -> String;
     fn compare(&self, r: &CompareRecord) -> String;
     fn study(&self, r: &StudyRecord) -> String;
+    fn optimize(&self, r: &OptimizeRecord) -> String;
     fn scenario(&self, r: &ScenarioRecord) -> String;
 }
 
@@ -165,10 +166,17 @@ fn study_text(r: &StudyRecord) -> String {
         "\n== comparison — per-child means{} ==\n",
         if r.baseline.is_some() { " (Δ% vs baseline *)" } else { "" }
     ));
-    s.push_str(&format!(
-        "{:<24} {:<6} {:<40} {:>14} {:>12} {:>10}\n",
-        "metric", "unit", "child", "mean", "±95%CI", "Δ%"
-    ));
+    if r.show_ci {
+        s.push_str(&format!(
+            "{:<24} {:<6} {:<40} {:>14} {:>12} {:>10} {:>14} {:>4}\n",
+            "metric", "unit", "child", "mean", "±95%CI", "Δ%", "Δ±95%CI", "sig"
+        ));
+    } else {
+        s.push_str(&format!(
+            "{:<24} {:<6} {:<40} {:>14} {:>12} {:>10}\n",
+            "metric", "unit", "child", "mean", "±95%CI", "Δ%"
+        ));
+    }
     for (m, entries) in r.comparison() {
         for (k, e) in entries.iter().enumerate() {
             // Name the metric on its first row only: the blank rows read
@@ -180,10 +188,88 @@ fn study_text(r: &StudyRecord) -> String {
             };
             let mark = if Some(e.child) == r.baseline { "*" } else { " " };
             s.push_str(&format!(
-                "{:<24} {:<6} {:<38} {mark} {:>14.3} {:>12.3} {delta}\n",
+                "{:<24} {:<6} {:<38} {mark} {:>14.3} {:>12.3} {delta}",
                 name, unit, r.children[e.child].label, e.mean, e.ci95
             ));
+            if r.show_ci {
+                let dci = match e.delta_ci {
+                    Some(h) => format!("{h:>14.3}"),
+                    None => format!("{:>14}", "-"),
+                };
+                let sig = match e.significant {
+                    Some(true) => "*",
+                    Some(false) => "",
+                    None => "-",
+                };
+                s.push_str(&format!(" {dci} {sig:>4}"));
+            }
+            s.push('\n');
         }
+    }
+    s
+}
+
+/// The optimize report: the run header, then the ranked knob table
+/// (`mode: screen`) or the search trail plus winner (`mode: tune`).
+fn optimize_text(r: &OptimizeRecord) -> String {
+    let mut s = format!(
+        "optimize: {} — objective {} ({}), {} replications, {} runs (budget {})\n",
+        r.mode, r.objective, r.direction, r.replications, r.total_runs, r.budget
+    );
+    if !r.effects.is_empty() {
+        s.push_str(&format!(
+            "\n== knob importance — main effect on {} ({}) ==\n",
+            r.objective, r.objective_unit
+        ));
+        s.push_str(&format!(
+            "{:<4} {:<28} {:>14} {:>14} {:>14} {:>12} {:>4}\n",
+            "rank", "knob", "lo", "hi", "effect", "±95%CI", "sig"
+        ));
+        for e in &r.effects {
+            s.push_str(&format!(
+                "{:<4} {:<28} {:>14} {:>14} {:>+14.3} {:>12.3} {:>4}\n",
+                e.rank,
+                e.knob,
+                e.lo,
+                e.hi,
+                e.effect,
+                e.ci95,
+                if e.significant { "*" } else { "" }
+            ));
+        }
+    }
+    if !r.trail.is_empty() {
+        s.push_str(&format!(
+            "\n== search trail — {} per candidate (winner *) ==\n",
+            r.objective
+        ));
+        s.push_str(&format!(
+            "{:<44} {:>4} {:>14} {:>12} {:>8}\n",
+            "candidate", "n", "mean", "±95%CI", "pruned"
+        ));
+        for t in &r.trail {
+            let mark = if t.winner { "*" } else { " " };
+            let pruned = match t.pruned_round {
+                Some(round) => format!("r{round}"),
+                None => "-".to_string(),
+            };
+            s.push_str(&format!(
+                "{:<42} {mark} {:>4} {:>14.3} {:>12.3} {:>8}\n",
+                t.label, t.n, t.mean, t.ci95, pruned
+            ));
+        }
+    }
+    if let Some(b) = &r.best {
+        s.push_str(&format!(
+            "\nwinner: {} — {} {:.3} (Δ vs base {:+.3} ±{:.3}, n {}{})\n",
+            b.label,
+            r.objective,
+            b.mean,
+            b.delta_mean,
+            b.delta_ci95,
+            b.delta_n,
+            if b.significant { ", significant" } else { "" }
+        ));
     }
     s
 }
@@ -228,6 +314,10 @@ impl Sink for TextSink {
         study_text(r)
     }
 
+    fn optimize(&self, r: &OptimizeRecord) -> String {
+        optimize_text(r)
+    }
+
     fn scenario(&self, r: &ScenarioRecord) -> String {
         let mut s = format!(
             "== scenario: {} [{}] ==\npolicies: selection={} repair={} checkpoint={} failure={}\n",
@@ -249,6 +339,7 @@ impl Sink for TextSink {
             RecordBody::WhatIf(wr) => s.push_str(&self.whatif(wr)),
             RecordBody::Compare(cr) => s.push_str(&self.compare(cr)),
             RecordBody::Study(st) => s.push_str(&self.study(st)),
+            RecordBody::Optimize(or) => s.push_str(&self.optimize(or)),
         }
         s
     }
@@ -281,6 +372,10 @@ impl Sink for JsonSink {
         r.to_json().render() + "\n"
     }
 
+    fn optimize(&self, r: &OptimizeRecord) -> String {
+        r.to_json().render() + "\n"
+    }
+
     fn scenario(&self, r: &ScenarioRecord) -> String {
         r.to_json().render() + "\n"
     }
@@ -291,6 +386,18 @@ impl Sink for JsonSink {
 // ------------------------------------------------------------------ //
 
 pub struct CsvSink;
+
+/// Standard CSV quoting for free-form columns: child/candidate labels
+/// and knob names are user text (one containing a comma would shift
+/// every subsequent column); metric names/units come from the registry
+/// and never need it.
+fn csv_field(s: &str) -> String {
+    if s.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
 
 impl Sink for CsvSink {
     fn run(&self, r: &RunRecord) -> String {
@@ -322,20 +429,12 @@ impl Sink for CsvSink {
     }
 
     fn study(&self, r: &StudyRecord) -> String {
-        // Standard CSV quoting for the one free-form column: child
-        // labels are user text (a label containing a comma would shift
-        // every subsequent column); metric names/units come from the
-        // registry and never need it.
-        fn csv_field(s: &str) -> String {
-            if s.contains([',', '"', '\n', '\r']) {
-                format!("\"{}\"", s.replace('"', "\"\""))
-            } else {
-                s.to_string()
-            }
-        }
         // Long form: one row per (metric, child). Delta columns are empty
-        // on the baseline row and when no baseline is designated.
-        let mut s = String::from("metric,unit,child,n,mean,std,ci95,delta,delta_pct\n");
+        // on the baseline row and when no baseline is designated; the
+        // delta-CI columns additionally need enough replications for a
+        // finite interval.
+        let mut s =
+            String::from("metric,unit,child,n,mean,std,ci95,delta,delta_pct,delta_ci,significant\n");
         for (m, entries) in r.comparison() {
             for e in &entries {
                 let std = r.children[e.child]
@@ -344,8 +443,10 @@ impl Sink for CsvSink {
                     .unwrap_or(0.0);
                 let delta = e.delta.map(|d| d.to_string()).unwrap_or_default();
                 let pct = e.delta_pct.map(|d| d.to_string()).unwrap_or_default();
+                let dci = e.delta_ci.map(|d| d.to_string()).unwrap_or_default();
+                let sig = e.significant.map(|b| b.to_string()).unwrap_or_default();
                 s.push_str(&format!(
-                    "{},{},{},{},{},{},{},{delta},{pct}\n",
+                    "{},{},{},{},{},{},{},{delta},{pct},{dci},{sig}\n",
                     m.name,
                     m.unit,
                     csv_field(&r.children[e.child].label),
@@ -359,6 +460,40 @@ impl Sink for CsvSink {
         s
     }
 
+    fn optimize(&self, r: &OptimizeRecord) -> String {
+        if r.mode == "screen" {
+            let mut s = String::from("rank,knob,lo,hi,effect,ci95,n,significant\n");
+            for e in &r.effects {
+                s.push_str(&format!(
+                    "{},{},{},{},{},{},{},{}\n",
+                    e.rank,
+                    csv_field(&e.knob),
+                    csv_field(&e.lo),
+                    csv_field(&e.hi),
+                    e.effect,
+                    e.ci95,
+                    e.n,
+                    e.significant
+                ));
+            }
+            s
+        } else {
+            let mut s = String::from("candidate,n,mean,ci95,pruned_round,winner\n");
+            for t in &r.trail {
+                let pruned = t.pruned_round.map(|v| v.to_string()).unwrap_or_default();
+                s.push_str(&format!(
+                    "{},{},{},{},{pruned},{}\n",
+                    csv_field(&t.label),
+                    t.n,
+                    t.mean,
+                    t.ci95,
+                    t.winner
+                ));
+            }
+            s
+        }
+    }
+
     fn scenario(&self, r: &ScenarioRecord) -> String {
         match &r.body {
             RecordBody::Run(rr) => self.run(rr),
@@ -366,6 +501,7 @@ impl Sink for CsvSink {
             RecordBody::WhatIf(wr) => self.whatif(wr),
             RecordBody::Compare(cr) => self.compare(cr),
             RecordBody::Study(st) => self.study(st),
+            RecordBody::Optimize(or) => self.optimize(or),
         }
     }
 }
@@ -479,6 +615,43 @@ impl Sink for NdjsonSink {
         s
     }
 
+    fn optimize(&self, r: &OptimizeRecord) -> String {
+        // One summary line, then one line per effect (`mode: screen`) or
+        // per candidate plus the winner (`mode: tune`) —
+        // `jq 'select(.type == "effect")'` extracts the ranked table.
+        let mut s = ndjson_line(
+            vec![
+                ("mode".to_string(), Json::str(&r.mode)),
+                ("objective".to_string(), Json::str(&r.objective)),
+                ("objective_unit".to_string(), Json::str(&r.objective_unit)),
+                ("direction".to_string(), Json::str(&r.direction)),
+                ("replications".to_string(), r.replications.into()),
+                ("total_runs".to_string(), r.total_runs.into()),
+                ("budget".to_string(), r.budget.into()),
+            ],
+            "optimize",
+        );
+        let j = r.to_json();
+        if let Some(Json::Arr(effects)) = obj_field(&j, "effects") {
+            for e in effects {
+                if let Json::Obj(fields) = e {
+                    s.push_str(&ndjson_line(fields.clone(), "effect"));
+                }
+            }
+        }
+        if let Some(Json::Arr(trail)) = obj_field(&j, "trail") {
+            for t in trail {
+                if let Json::Obj(fields) = t {
+                    s.push_str(&ndjson_line(fields.clone(), "candidate"));
+                }
+            }
+        }
+        if let Some(Json::Obj(fields)) = obj_field(&j, "best") {
+            s.push_str(&ndjson_line(fields.clone(), "best"));
+        }
+        s
+    }
+
     fn scenario(&self, r: &ScenarioRecord) -> String {
         let meta = ndjson_line(
             vec![
@@ -498,6 +671,7 @@ impl Sink for NdjsonSink {
             RecordBody::WhatIf(wr) => self.whatif(wr),
             RecordBody::Compare(cr) => self.compare(cr),
             RecordBody::Study(st) => self.study(st),
+            RecordBody::Optimize(or) => self.optimize(or),
         };
         meta + &body
     }

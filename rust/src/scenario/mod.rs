@@ -6,7 +6,7 @@
 //! A scenario file is the YAML subset [`crate::config::yaml`] parses:
 //!
 //! ```yaml
-//! scenario: sweep            # single | sweep | whatif | inject | compare | multi
+//! scenario: sweep            # single | sweep | whatif | inject | compare | multi | optimize
 //! title: recovery-time sensitivity
 //! seed: 42
 //! replications: 30
@@ -46,8 +46,8 @@ use crate::model::cluster::{ReplicationRunner, Simulation};
 use crate::model::events::FailureKind;
 use crate::model::{PolicySpec, RunOutputs};
 use crate::report::{
-    CompareRecord, Format, RecordBody, RunRecord, ScenarioRecord, Sink, StudyRecord,
-    SweepRecord, WhatIfRecord,
+    CompareRecord, Format, OptimizeRecord, RecordBody, RunRecord, ScenarioRecord, Sink,
+    StudyRecord, SweepRecord, WhatIfRecord,
 };
 use crate::sim::rng::Rng;
 use crate::stats::{metrics, Summary};
@@ -72,6 +72,9 @@ pub enum ScenarioKind {
     /// A `multi:` study: labeled children as overrides on the shared
     /// base config, all replications drained through one worker pool.
     Multi(Study),
+    /// An `optimize:` block: knob-importance screening or a goodput
+    /// auto-tuning search over a declared knob grid (see [`crate::optimize`]).
+    Optimize(crate::optimize::Optimize),
 }
 
 /// A declarative experiment: parameters + named policies + kind.
@@ -96,6 +99,9 @@ pub enum ScenarioOutcome {
     /// A study's combined record (already the report data model — per-
     /// child collectors plus the derived comparison table).
     Study(StudyRecord),
+    /// An optimization's combined record (ranked effects or the search
+    /// trail plus the winning configuration).
+    Optimize(OptimizeRecord),
 }
 
 impl Scenario {
@@ -197,10 +203,13 @@ impl Scenario {
             "multi" => ScenarioKind::Multi(study::study_from_doc(
                 doc, &params, &policies, reps,
             )?),
+            "optimize" => ScenarioKind::Optimize(crate::optimize::optimize_from_doc(
+                doc, &params, &policies, reps,
+            )?),
             other => {
                 return Err(format!(
                     "unknown scenario kind `{other}` (expected single, sweep, whatif, \
-                     inject, compare, or multi)"
+                     inject, compare, multi, or optimize)"
                 ))
             }
         };
@@ -212,8 +221,12 @@ impl Scenario {
         // done in `study_from_doc`) — in both, a point/child may supply
         // the very knob a policy needs (e.g. sweeping
         // `checkpoint_interval` under `checkpoint: periodic`), so the
-        // bare base spec need not build.
-        if !matches!(kind, ScenarioKind::Sweep(_) | ScenarioKind::Multi(_)) {
+        // bare base spec need not build. Optimize points resolve the
+        // same way (each grid point validated with its overrides).
+        if !matches!(
+            kind,
+            ScenarioKind::Sweep(_) | ScenarioKind::Multi(_) | ScenarioKind::Optimize(_)
+        ) {
             policies.build(&params)?;
         }
 
@@ -306,6 +319,15 @@ impl Scenario {
                 self.seed,
                 self.threads,
             )?)),
+            ScenarioKind::Optimize(opt) => {
+                Ok(ScenarioOutcome::Optimize(crate::optimize::run_optimize(
+                    &self.params,
+                    &self.policies,
+                    opt,
+                    self.seed,
+                    self.threads,
+                )?))
+            }
         }
     }
 
@@ -337,6 +359,7 @@ impl Scenario {
                 RecordBody::Compare(CompareRecord { analytic, des_makespan, replications })
             }
             ScenarioOutcome::Study(record) => RecordBody::Study(record),
+            ScenarioOutcome::Optimize(record) => RecordBody::Optimize(record),
         };
         ScenarioRecord {
             title: self.title.clone(),
@@ -369,6 +392,7 @@ fn kind_name(kind: &ScenarioKind) -> &'static str {
         ScenarioKind::Inject { .. } => "inject",
         ScenarioKind::Compare { .. } => "compare",
         ScenarioKind::Multi(_) => "multi",
+        ScenarioKind::Optimize(_) => "optimize",
     }
 }
 

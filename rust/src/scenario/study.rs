@@ -28,8 +28,10 @@
 //! ## Execution: one shared work queue
 //!
 //! [`run_study`] flattens **every child's replications** into the single
-//! (unit, replication) work queue of [`crate::sweep::run_pool`] — the
-//! same [`crate::model::ReplicationRunner`] worker pool sweeps use. A
+//! (unit, replication) work queue of [`crate::sweep::run_pool_ordered`] —
+//! the same [`crate::model::ReplicationRunner`] worker pool sweeps use
+//! (the replication-ordered variant, so paired-CRN delta CIs can match
+//! replication `r` across children). A
 //! 6-child study therefore saturates all cores instead of running its
 //! children serially, and results are independent of the thread count.
 //!
@@ -50,7 +52,8 @@ use crate::model::cluster::Simulation;
 use crate::model::PolicySpec;
 use crate::report::record::{StudyChildRecord, StudyRecord};
 use crate::sim::rng::Rng;
-use crate::sweep::{parse_crn, run_pool, AxisValue, SweepPoint, CRN_STREAM};
+use crate::stats::Collector;
+use crate::sweep::{collect_outputs, parse_crn, run_pool_ordered, AxisValue, SweepPoint, CRN_STREAM};
 use crate::trace::Trace;
 
 /// One child of a study: a label plus overrides on the shared base.
@@ -71,6 +74,9 @@ pub struct Study {
     pub replications: usize,
     /// Common random numbers across children.
     pub crn: bool,
+    /// Show the delta-CI / significance columns in the text comparison
+    /// table (`show_ci: true`); machine formats always carry them.
+    pub show_ci: bool,
 }
 
 /// FNV-1a hash of a child label: the label's stream-path key.
@@ -224,15 +230,21 @@ pub fn study_from_doc(
         None => false,
         Some(v) => parse_crn(v)?,
     };
-    let study = Study { children, baseline, replications, crn };
+    // `show_ci:` shares `crn:`'s strict boolean parse: a misspelling must
+    // not silently drop the significance columns someone asked for.
+    let show_ci = match doc.get("show_ci") {
+        None => false,
+        Some(v) => parse_crn(v).map_err(|e| e.replace("crn", "show_ci"))?,
+    };
+    let study = Study { children, baseline, replications, crn, show_ci };
     // Every child must resolve against the base it was written for.
     study.resolve_all(base, policies)?;
     Ok(study)
 }
 
 /// Execute a study: every child's replications flattened into one shared
-/// [`run_pool`] work queue, collected into a [`StudyRecord`] (per-child
-/// records + the derived comparison table).
+/// [`run_pool_ordered`] work queue, collected into a [`StudyRecord`]
+/// (per-child records + the derived comparison table).
 pub fn run_study(
     base: &Params,
     policies: &PolicySpec,
@@ -244,7 +256,12 @@ pub fn run_study(
     // land after parse time, and a worker must never see a build error.
     let resolved = study.resolve_all(base, policies)?;
     let reps = study.replications.max(1);
-    let collectors = run_pool(study.children.len(), reps, threads, |runner, idx, rep| {
+    // Replication-ordered execution: the paired-delta CIs in the
+    // comparison table match CRN replication `r` of one child against
+    // replication `r` of another, so collectors must be filled in rep
+    // order, not worker completion order. (Summaries sort before
+    // reducing, so every other output is unaffected.)
+    let results = run_pool_ordered(study.children.len(), reps, threads, |runner, idx, rep| {
         let (p, spec) = &resolved[idx];
         let out = runner.run(p, spec, study.rng(seed, idx, rep));
         (p.clone(), out)
@@ -253,15 +270,22 @@ pub fn run_study(
         replications: reps,
         crn: study.crn,
         baseline: study.baseline,
+        show_ci: study.show_ci,
         children: study
             .children
             .iter()
-            .zip(resolved.iter().zip(collectors))
-            .map(|(child, ((_, spec), collector))| StudyChildRecord {
-                label: child.label.clone(),
-                overrides: child.overrides.clone(),
-                policies: spec.clone(),
-                collector,
+            .zip(resolved.iter().zip(results))
+            .map(|(child, ((_, spec), (p, outs)))| {
+                let mut collector = Collector::new();
+                for out in &outs {
+                    collect_outputs(&mut collector, &p, out);
+                }
+                StudyChildRecord {
+                    label: child.label.clone(),
+                    overrides: child.overrides.clone(),
+                    policies: spec.clone(),
+                    collector,
+                }
             })
             .collect(),
     })

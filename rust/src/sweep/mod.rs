@@ -472,6 +472,73 @@ where
     collectors.into_iter().map(|c| c.into_inner().unwrap()).collect()
 }
 
+/// [`run_pool`]'s replication-ordered sibling: the same flat task queue
+/// and per-worker runner reuse, but raw outputs land in `slots[rep]` of
+/// their unit instead of a completion-ordered collector. Paired-CRN
+/// inference ([`crate::optimize`]) needs replication `r` of unit A
+/// aligned with replication `r` of unit B — a completion-ordered
+/// collector destroys exactly that alignment under multi-threading.
+/// Returns, per unit, the unit's params and its outputs in rep order.
+pub fn run_pool_ordered<F>(
+    n_units: usize,
+    reps: usize,
+    threads: usize,
+    run: F,
+) -> Vec<(Params, Vec<RunOutputs>)>
+where
+    F: Fn(&mut ReplicationRunner, usize, usize) -> (Params, RunOutputs) + Sync,
+{
+    let reps = reps.max(1);
+    let total = n_units * reps;
+
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        threads
+    }
+    .min(total.max(1));
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Vec<Option<(Params, RunOutputs)>>>> = (0..n_units)
+        .map(|_| Mutex::new((0..reps).map(|_| None).collect()))
+        .collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut runner = ReplicationRunner::new();
+                loop {
+                    let task = next.fetch_add(1, Ordering::Relaxed);
+                    if task >= total {
+                        break;
+                    }
+                    let unit = task / reps;
+                    let rep = task % reps;
+                    let (p, out) = run(&mut runner, unit, rep);
+                    slots[unit].lock().unwrap()[rep] = Some((p, out));
+                }
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|unit| {
+            let filled = unit.into_inner().unwrap();
+            let mut params = None;
+            let outs = filled
+                .into_iter()
+                .map(|slot| {
+                    let (p, out) = slot.expect("every (unit, rep) task ran");
+                    params.get_or_insert(p);
+                    out
+                })
+                .collect();
+            (params.expect("reps >= 1"), outs)
+        })
+        .collect()
+}
+
 /// Execute a sweep over the shared execution pool ([`run_pool`]).
 pub fn run_sweep(base: &Params, sweep: &Sweep, threads: usize) -> SweepResult {
     let reps = sweep.replications.max(1);

@@ -152,9 +152,64 @@ fn list_policies_covers_every_axis() {
         "adaptive",
         "tiered",
         "sla_aged",
+        "history_scored",
     ] {
         assert!(out.contains(name), "list-policies missing {name}");
     }
+}
+
+#[test]
+fn list_params_covers_selection_history_window() {
+    let (out, _, ok) = airesim(&["list-params"]);
+    assert!(ok);
+    assert!(out.contains("selection_history_window"), "{out}");
+}
+
+#[test]
+fn scenario_optimize_tune_best_out_round_trips() {
+    // The full CLI loop: tune via a temp scenario, write the winner with
+    // --best-out, then run the emitted file as a single scenario.
+    let dir = std::env::temp_dir();
+    let spec = dir.join("airesim_cli_tune.yaml");
+    let best = dir.join("airesim_cli_best.yaml");
+    std::fs::write(
+        &spec,
+        "scenario: optimize\nseed: 11\nreplications: 2\n\
+         params:\n  job_size: 16\n  working_pool: 24\n  spare_pool: 4\n  warm_standbys: 2\n  job_len: 720\n  random_failure_rate: 0.5/1440\n  systematic_failure_rate: 2.5/1440\n  checkpoint_interval: 720\n  checkpoint_cost: 5\n\
+         policies:\n  checkpoint: periodic\n\
+         optimize:\n  mode: tune\n  knobs:\n    - param: checkpoint_interval\n      values: [30, 720]\n",
+    )
+    .unwrap();
+    let (out, err, ok) = airesim(&[
+        "scenario",
+        "--config",
+        spec.to_str().unwrap(),
+        "--best-out",
+        best.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("winner:"), "{out}");
+    let (out, err, ok) = airesim(&["scenario", "--config", best.to_str().unwrap()]);
+    assert!(ok, "best-out file must run: {err}");
+    assert!(out.contains("[single]"), "{out}");
+    let _ = std::fs::remove_file(&spec);
+    let _ = std::fs::remove_file(&best);
+}
+
+#[test]
+fn best_out_rejects_non_optimize_scenarios() {
+    let dir = std::env::temp_dir();
+    let spec = dir.join("airesim_cli_single_for_bestout.yaml");
+    std::fs::write(
+        &spec,
+        "scenario: single\nparams:\n  job_size: 16\n  working_pool: 24\n  spare_pool: 4\n  warm_standbys: 2\n  job_len: 720\n  random_failure_rate: 0.5/1440\n  systematic_failure_rate: 2.5/1440\n",
+    )
+    .unwrap();
+    let (_, err, ok) =
+        airesim(&["scenario", "--config", spec.to_str().unwrap(), "--best-out", "-"]);
+    assert!(!ok);
+    assert!(err.contains("--best-out"), "{err}");
+    let _ = std::fs::remove_file(&spec);
 }
 
 #[test]

@@ -1,0 +1,332 @@
+//! Acceptance suite for the optimization subsystem
+//! (`scenario: optimize`) and the paired-CRN statistics under it:
+//!
+//! * the paired-CI machinery matches hand-computed fixtures and is
+//!   degenerate-safe (zero variance -> zero width, never NaN);
+//! * on real simulator outputs, CRN pairing yields strictly narrower
+//!   intervals than the unpaired Welch fallback;
+//! * the shipped screen config runs and emits a ranked knob table in
+//!   all four formats;
+//! * a rigged tune finds a winner that beats the base config with a
+//!   paired CI excluding zero, and its `--best-out` YAML re-parses and
+//!   runs as a `scenario: single`;
+//! * optimize output is byte-identical across repeated runs and worker
+//!   thread counts.
+
+use airesim::config::Params;
+use airesim::model::cluster::ReplicationRunner;
+use airesim::model::PolicySpec;
+use airesim::optimize::stats::{mean_ci, paired_delta_ci, welch_delta_ci};
+use airesim::report::json::Json;
+use airesim::report::{Format, Sink};
+use airesim::scenario::{Scenario, ScenarioKind, ScenarioOutcome};
+use airesim::sim::rng::Rng;
+use airesim::sweep::CRN_STREAM;
+use airesim::testkit::parse_json;
+
+const SMALL: &str = "params:\n  job_size: 32\n  working_pool: 40\n  spare_pool: 8\n  warm_standbys: 4\n  job_len: 1440\n  random_failure_rate: 0.5/1440\n  systematic_failure_rate: 2.5/1440\n";
+
+fn obj_get<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    match j {
+        Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------- stats
+
+#[test]
+fn paired_ci_matches_hand_computed_fixture() {
+    // Deltas b - a = [1, 2, 3, 4, 5]: mean 3, sample var 2.5,
+    // half-width = t(4) * sqrt(2.5 / 5) = 2.776 * 0.7071.
+    let a = [10.0, 10.0, 10.0, 10.0, 10.0];
+    let b = [11.0, 12.0, 13.0, 14.0, 15.0];
+    let ci = paired_delta_ci(&a, &b).unwrap();
+    assert_eq!(ci.n, 5);
+    assert!((ci.mean - 3.0).abs() < 1e-12);
+    assert!((ci.half - 2.776 * (2.5f64 / 5.0).sqrt()).abs() < 1e-9, "{}", ci.half);
+    assert!(ci.significant());
+}
+
+#[test]
+fn degenerate_variance_is_zero_width_not_nan() {
+    // Identical series: delta 0 with zero spread. The CI must be an
+    // honest zero-width interval, not NaN from 0/0.
+    let a = [5.0, 5.0, 5.0, 5.0];
+    let ci = paired_delta_ci(&a, &a).unwrap();
+    assert_eq!(ci.mean, 0.0);
+    assert_eq!(ci.half, 0.0);
+    assert!(!ci.significant(), "a zero delta is not a significant delta");
+
+    let m = mean_ci(&a).unwrap();
+    assert_eq!(m.mean, 5.0);
+    assert_eq!(m.half, 0.0);
+}
+
+/// The tentpole's statistical payoff, pinned on real simulator outputs:
+/// two configs run on the same CRN streams share failure noise, so the
+/// paired interval on their delta is strictly narrower than the
+/// unpaired Welch interval over the same numbers.
+#[test]
+fn crn_pairing_beats_welch_on_simulator_outputs() {
+    let base = Params::small_test();
+    let mut varied = base.clone();
+    varied.recovery_time = 60.0;
+    let spec = PolicySpec::default();
+    let mut runner = ReplicationRunner::new();
+    let run = |runner: &mut ReplicationRunner, p: &Params, r: u64| {
+        runner.run(p, &spec, Rng::derived(42, &[CRN_STREAM, r])).makespan / 60.0
+    };
+    let reps = 8;
+    let a: Vec<f64> = (0..reps).map(|r| run(&mut runner, &base, r)).collect();
+    let b: Vec<f64> = (0..reps).map(|r| run(&mut runner, &varied, r)).collect();
+
+    let paired = paired_delta_ci(&a, &b).unwrap();
+    let welch = welch_delta_ci(&a, &b).unwrap();
+    assert!((paired.mean - welch.mean).abs() < 1e-9, "same point estimate");
+    assert!(
+        paired.half < welch.half,
+        "CRN pairing must shrink the interval: paired ±{} vs welch ±{}",
+        paired.half,
+        welch.half
+    );
+}
+
+// --------------------------------------------------------------- screen
+
+#[test]
+fn shipped_screen_config_emits_a_ranked_knob_table_in_all_formats() {
+    let text = std::fs::read_to_string("configs/scenario_optimize.yaml").unwrap();
+    let sc = Scenario::from_yaml(&text).unwrap();
+    assert!(matches!(sc.kind, ScenarioKind::Optimize(_)));
+    let outcome = sc.run().unwrap();
+    let ScenarioOutcome::Optimize(rec) = &outcome else { panic!("expected Optimize") };
+    assert_eq!(rec.mode, "screen");
+    assert_eq!(rec.effects.len(), 3);
+    assert_eq!(rec.total_runs, 8 * 4, "2N x reps for k=3 knobs");
+    // Ranked 1..=k by |effect| descending.
+    for (i, e) in rec.effects.iter().enumerate() {
+        assert_eq!(e.rank, i + 1);
+        assert!(e.n > 0);
+        assert!(e.ci95.is_finite());
+        if i > 0 {
+            assert!(
+                rec.effects[i - 1].effect.abs() >= e.effect.abs(),
+                "effects out of rank order"
+            );
+        }
+    }
+    let record = sc.record(&outcome);
+
+    // Text: the ranked table with CI and significance columns.
+    let txt = Format::Text.sink().scenario(&record);
+    assert!(txt.contains("== scenario:"), "{txt}");
+    assert!(txt.contains("knob importance"), "{txt}");
+    assert!(txt.contains("±95%CI"), "{txt}");
+    for knob in ["checkpoint_interval", "recovery_time", "policies.selection"] {
+        assert!(txt.contains(knob), "text misses knob {knob}: {txt}");
+    }
+
+    // JSON: one document, ranked effects under result.effects.
+    let doc = parse_json(Format::Json.sink().scenario(&record).trim_end()).unwrap();
+    assert_eq!(obj_get(&doc, "scenario"), Some(&Json::str("optimize")));
+    let result = obj_get(&doc, "result").unwrap();
+    assert_eq!(obj_get(result, "mode"), Some(&Json::str("screen")));
+    let Some(Json::Arr(effects)) = obj_get(result, "effects") else { panic!() };
+    assert_eq!(effects.len(), 3);
+    for e in effects {
+        for key in ["rank", "knob", "lo", "hi", "effect", "ci95", "n", "significant"] {
+            assert!(obj_get(e, key).is_some(), "effect json missing {key}");
+        }
+    }
+
+    // CSV: one row per ranked knob.
+    let csv = Format::Csv.sink().scenario(&record);
+    let mut lines = csv.lines();
+    assert_eq!(lines.next().unwrap(), "rank,knob,lo,hi,effect,ci95,n,significant");
+    assert_eq!(csv.trim_end().lines().count(), 1 + 3);
+    assert!(csv.contains("\n1,"), "{csv}");
+
+    // NDJSON: a summary line plus one typed line per effect.
+    let nd = Format::Ndjson.sink().scenario(&record);
+    let mut summary = 0usize;
+    let mut effect_lines = 0usize;
+    for line in nd.trim_end().lines() {
+        let doc = parse_json(line).unwrap_or_else(|e| panic!("bad line `{line}`: {e}"));
+        match obj_get(&doc, "type") {
+            Some(Json::Str(t)) if t == "optimize" => summary += 1,
+            Some(Json::Str(t)) if t == "effect" => effect_lines += 1,
+            _ => {}
+        }
+    }
+    assert_eq!(summary, 1);
+    assert_eq!(effect_lines, 3);
+}
+
+// ----------------------------------------------------------------- tune
+
+/// A deliberately rigged search space: the base config checkpoints once
+/// per job length (max work loss per failure) and the grid offers two
+/// poor intervals plus one clearly better one. The winner must beat the
+/// base on CRN-paired seeds with a CI excluding zero.
+fn rigged_tune_yaml() -> String {
+    format!(
+        "scenario: optimize\ntitle: rigged tune\nseed: 11\nreplications: 4\n{SMALL}\
+         \x20 checkpoint_interval: 1440\n  checkpoint_cost: 5\n\
+         policies:\n  checkpoint: periodic\n\
+         optimize:\n  mode: tune\n  objective: makespan_hours\n  direction: min\n  knobs:\n\
+         \x20   - param: checkpoint_interval\n      values: [30, 720, 1440]\n"
+    )
+}
+
+fn run_tune(threads: usize) -> airesim::report::OptimizeRecord {
+    let mut sc = Scenario::from_yaml(&rigged_tune_yaml()).unwrap();
+    sc.threads = threads;
+    match sc.run().unwrap() {
+        ScenarioOutcome::Optimize(rec) => rec,
+        _ => panic!("expected Optimize outcome"),
+    }
+}
+
+#[test]
+fn tune_winner_beats_base_with_significant_paired_ci() {
+    let rec = run_tune(0);
+    assert_eq!(rec.mode, "tune");
+    // Trail covers every candidate in declaration order: base + grid.
+    assert_eq!(rec.trail.len(), 4);
+    assert_eq!(rec.trail[0].label, "base");
+    assert_eq!(rec.trail[1].label, "checkpoint_interval=30");
+    assert_eq!(rec.trail[3].label, "checkpoint_interval=1440");
+    assert!(rec.total_runs <= rec.budget);
+
+    let best = rec.best.as_ref().expect("tune always names a winner");
+    assert_ne!(best.label, "base", "a 1440-min interval must not win");
+    assert!(best.delta_mean < 0.0, "winner improves the objective (min)");
+    assert!(
+        best.significant,
+        "paired CI must exclude zero: delta {} ±{} over n {}",
+        best.delta_mean, best.delta_ci95, best.delta_n
+    );
+    assert!(best.delta_mean + best.delta_ci95 < 0.0, "CI strictly below zero");
+    assert_eq!(
+        best.delta_n, rec.replications,
+        "the base control arm rides to the full replication count"
+    );
+    // Exactly one trail point is flagged as the winner, and it is best's.
+    let winners: Vec<_> = rec.trail.iter().filter(|t| t.winner).collect();
+    assert_eq!(winners.len(), 1);
+    assert_eq!(winners[0].label, best.label);
+}
+
+#[test]
+fn tune_best_yaml_reparses_and_runs_as_single() {
+    let rec = run_tune(0);
+    let best = rec.best.as_ref().unwrap();
+    let sc = Scenario::from_yaml(&best.yaml).expect("emitted YAML parses");
+    assert!(matches!(sc.kind, ScenarioKind::Single { .. }));
+    // The winner's knob setting survived the round trip.
+    let winner_interval: f64 = best.label.strip_prefix("checkpoint_interval=").unwrap().parse().unwrap();
+    assert_eq!(sc.params.checkpoint_interval, winner_interval);
+    match sc.run().unwrap() {
+        ScenarioOutcome::Single { outputs, .. } => assert!(outputs.completed),
+        _ => panic!("expected Single outcome"),
+    }
+}
+
+#[test]
+fn tune_renders_in_all_four_formats() {
+    let sc = Scenario::from_yaml(&rigged_tune_yaml()).unwrap();
+    let outcome = sc.run().unwrap();
+    let record = sc.record(&outcome);
+
+    let txt = Format::Text.sink().scenario(&record);
+    assert!(txt.contains("search trail"), "{txt}");
+    assert!(txt.contains("winner:"), "{txt}");
+
+    let doc = parse_json(Format::Json.sink().scenario(&record).trim_end()).unwrap();
+    let result = obj_get(&doc, "result").unwrap();
+    let Some(Json::Arr(trail)) = obj_get(result, "trail") else { panic!() };
+    assert_eq!(trail.len(), 4);
+    let best = obj_get(result, "best").unwrap();
+    let Some(Json::Str(yaml)) = obj_get(best, "yaml") else { panic!("best.yaml missing") };
+    assert!(yaml.contains("scenario: single"), "{yaml}");
+
+    let csv = Format::Csv.sink().scenario(&record);
+    assert_eq!(csv.lines().next().unwrap(), "candidate,n,mean,ci95,pruned_round,winner");
+    assert_eq!(csv.trim_end().lines().count(), 1 + 4);
+
+    let nd = Format::Ndjson.sink().scenario(&record);
+    let mut counts = std::collections::BTreeMap::new();
+    for line in nd.trim_end().lines() {
+        let doc = parse_json(line).unwrap_or_else(|e| panic!("bad line `{line}`: {e}"));
+        let Some(Json::Str(t)) = obj_get(&doc, "type") else { panic!("untyped line") };
+        *counts.entry(t.clone()).or_insert(0usize) += 1;
+    }
+    assert_eq!(counts.get("optimize"), Some(&1));
+    assert_eq!(counts.get("candidate"), Some(&4));
+    assert_eq!(counts.get("best"), Some(&1));
+}
+
+// ------------------------------------------------------- determinism
+
+/// Satellite bugfix pin: optimize reports are byte-identical across
+/// repeated runs and across worker thread counts — ranking and pruning
+/// always iterate stable declaration-order structures, never map order.
+#[test]
+fn optimize_output_byte_identical_across_runs_and_threads() {
+    let render = |threads: usize, yaml: &str| {
+        let mut sc = Scenario::from_yaml(yaml).unwrap();
+        sc.threads = threads;
+        let outcome = sc.run().unwrap();
+        Format::Text.sink().scenario(&sc.record_owned(outcome))
+    };
+    let screen = std::fs::read_to_string("configs/scenario_optimize.yaml").unwrap();
+    assert_eq!(render(1, &screen), render(1, &screen), "screen: repeated runs");
+    assert_eq!(render(1, &screen), render(4, &screen), "screen: thread counts");
+    let tune = rigged_tune_yaml();
+    assert_eq!(render(1, &tune), render(1, &tune), "tune: repeated runs");
+    assert_eq!(render(1, &tune), render(4, &tune), "tune: thread counts");
+}
+
+// -------------------------------------------- multi delta-CI columns
+
+/// `scenario: multi` rides the same stats: structured sinks gain
+/// `delta_ci`/`significant` on non-baseline rows, while the legacy text
+/// table stays byte-free of the new columns unless `show_ci: true`.
+#[test]
+fn multi_gains_delta_ci_columns_in_structured_formats_only() {
+    let yaml = |show_ci: &str| {
+        format!(
+            "scenario: multi\nseed: 9\nreplications: 4\ncrn: true\nbaseline: slow\n{show_ci}{SMALL}\
+             children:\n  - label: slow\n    params: {{ recovery_time: 60 }}\n\
+             \x20 - label: fast\n    params: {{ recovery_time: 5 }}\n"
+        )
+    };
+    let sc = Scenario::from_yaml(&yaml("")).unwrap();
+    let outcome = sc.run().unwrap();
+    let record = sc.record(&outcome);
+
+    // JSON: baseline rows carry no delta_ci; non-baseline rows do.
+    let doc = parse_json(Format::Json.sink().scenario(&record).trim_end()).unwrap();
+    let result = obj_get(&doc, "result").unwrap();
+    let Some(Json::Arr(rows)) = obj_get(result, "comparison") else { panic!() };
+    let Some(Json::Arr(children)) = obj_get(&rows[0], "children") else { panic!() };
+    assert!(obj_get(&children[0], "delta_ci").is_none(), "baseline has no delta CI");
+    assert!(obj_get(&children[1], "delta_ci").is_some(), "non-baseline rows gain delta_ci");
+    assert!(obj_get(&children[1], "significant").is_some());
+
+    // CSV: the extended header always present; baseline cells empty.
+    let csv = Format::Csv.sink().scenario(&record);
+    assert!(csv.starts_with("metric,unit,child,n,mean,std,ci95,delta,delta_pct,delta_ci,significant\n"));
+
+    // Text without `show_ci`: the legacy table, no CI column.
+    let txt = Format::Text.sink().scenario(&record);
+    assert!(!txt.contains("Δ±95%CI"), "legacy text must not grow columns: {txt}");
+
+    // Text with `show_ci: true`: the CI column and significance marks.
+    let sc = Scenario::from_yaml(&yaml("show_ci: true\n")).unwrap();
+    let outcome = sc.run().unwrap();
+    let txt = Format::Text.sink().scenario(&sc.record_owned(outcome));
+    assert!(txt.contains("Δ±95%CI"), "{txt}");
+    assert!(txt.contains("sig"), "{txt}");
+}

@@ -112,7 +112,7 @@ fn study_renders_in_all_four_formats() {
     let mut lines = csv.lines();
     assert_eq!(
         lines.next().unwrap(),
-        "metric,unit,child,n,mean,std,ci95,delta,delta_pct"
+        "metric,unit,child,n,mean,std,ci95,delta,delta_pct,delta_ci,significant"
     );
     assert_eq!(csv.lines().count(), 1 + metrics::REGISTRY.len() * 4);
     assert!(csv.contains("\nmakespan,min,slow,3,"), "{csv}");
@@ -147,6 +147,7 @@ fn study_children_byte_equal_standalone_runs() {
             baseline: None,
             replications: 3,
             crn: false,
+            show_ci: false,
         };
         let sc = Scenario::from_yaml(&four_child_study_yaml()).unwrap();
         let solo = run_study(&sc.params, &PolicySpec::default(), &solo_spec, 9, 1).unwrap();
