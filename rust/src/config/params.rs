@@ -149,6 +149,12 @@ pub struct Params {
     /// of service once it has waited this many minutes (0 = every queued
     /// server is instantly "aged": pure FIFO).
     pub repair_sla_minutes: f64,
+    /// `repair: pool_aware` only — the spare-pool high-water mark as a
+    /// fraction of `spare_pool` in [0, 1]. While at least this fraction
+    /// of the spares sits idle in the pool, repair capacity serves only
+    /// servers a job is actively waiting on; pool-bound drain-backs wait.
+    /// The policy refuses to build at 0 (it would throttle nothing).
+    pub repair_pool_high_water: f64,
 
     // ---- diagnosis (inputs 12–13) ----
     /// P(the failure is diagnosed and *some* server is identified).
@@ -197,6 +203,13 @@ pub struct Params {
     /// Restore latency from an expensive-tier checkpoint; <= 0 falls
     /// back to `recovery_time` (which the cheap tier always restores at).
     pub checkpoint_tier2_restore: f64,
+    /// Bandwidth-bound commit writes: extra wall minutes per *gang
+    /// server* added to `checkpoint_cost` at every commit (effective
+    /// cost = `checkpoint_cost + checkpoint_cost_per_server * job_size`).
+    /// 0 = the flat-cost model, byte-identical to it. Applies to the
+    /// single-tier policies (periodic / young_daly / adaptive); the
+    /// tiered policy keeps its explicitly configured per-tier costs.
+    pub checkpoint_cost_per_server: f64,
 
     // ---- preemption cost accounting (assumption 7) ----
     /// Fixed cost, in minutes of other-job work lost, per preempted server.
@@ -246,6 +259,7 @@ impl Params {
             auto_repair_capacity: 0,
             manual_repair_capacity: 0,
             repair_sla_minutes: MIN_PER_DAY,
+            repair_pool_high_water: 0.0,
             diagnosis_prob: 0.8,
             diagnosis_uncertainty: 0.0,
             retirement_threshold: 0,
@@ -258,6 +272,7 @@ impl Params {
             checkpoint_tier2_interval: 0.0,
             checkpoint_tier2_cost: 0.0,
             checkpoint_tier2_restore: 0.0,
+            checkpoint_cost_per_server: 0.0,
             preemption_cost: 0.0,
             max_sim_time: 10.0 * 256.0 * MIN_PER_DAY,
             topology: None,
@@ -290,6 +305,7 @@ impl Params {
             auto_repair_capacity: 0,
             manual_repair_capacity: 0,
             repair_sla_minutes: MIN_PER_DAY,
+            repair_pool_high_water: 0.0,
             diagnosis_prob: 0.8,
             diagnosis_uncertainty: 0.0,
             retirement_threshold: 0,
@@ -302,6 +318,7 @@ impl Params {
             checkpoint_tier2_interval: 0.0,
             checkpoint_tier2_cost: 0.0,
             checkpoint_tier2_restore: 0.0,
+            checkpoint_cost_per_server: 0.0,
             preemption_cost: 0.0,
             max_sim_time: 100.0 * MIN_PER_DAY,
             topology: None,
@@ -344,6 +361,7 @@ impl Params {
             "auto_repair_capacity" => self.auto_repair_capacity = value as u32,
             "manual_repair_capacity" => self.manual_repair_capacity = value as u32,
             "repair_sla_minutes" => self.repair_sla_minutes = value,
+            "repair_pool_high_water" => self.repair_pool_high_water = value,
             "diagnosis_prob" => self.diagnosis_prob = value,
             "diagnosis_uncertainty" => self.diagnosis_uncertainty = value,
             "retirement_threshold" => self.retirement_threshold = value as u32,
@@ -356,6 +374,7 @@ impl Params {
             "checkpoint_tier2_interval" => self.checkpoint_tier2_interval = value,
             "checkpoint_tier2_cost" => self.checkpoint_tier2_cost = value,
             "checkpoint_tier2_restore" => self.checkpoint_tier2_restore = value,
+            "checkpoint_cost_per_server" => self.checkpoint_cost_per_server = value,
             "preemption_cost" => self.preemption_cost = value,
             "max_sim_time" => self.max_sim_time = value,
             _ => return false,
@@ -389,6 +408,7 @@ impl Params {
             "auto_repair_capacity" => self.auto_repair_capacity as f64,
             "manual_repair_capacity" => self.manual_repair_capacity as f64,
             "repair_sla_minutes" => self.repair_sla_minutes,
+            "repair_pool_high_water" => self.repair_pool_high_water,
             "diagnosis_prob" => self.diagnosis_prob,
             "diagnosis_uncertainty" => self.diagnosis_uncertainty,
             "retirement_threshold" => self.retirement_threshold as f64,
@@ -401,6 +421,7 @@ impl Params {
             "checkpoint_tier2_interval" => self.checkpoint_tier2_interval,
             "checkpoint_tier2_cost" => self.checkpoint_tier2_cost,
             "checkpoint_tier2_restore" => self.checkpoint_tier2_restore,
+            "checkpoint_cost_per_server" => self.checkpoint_cost_per_server,
             "preemption_cost" => self.preemption_cost,
             "max_sim_time" => self.max_sim_time,
             _ => return None,
@@ -431,6 +452,7 @@ impl Params {
             "auto_repair_capacity",
             "manual_repair_capacity",
             "repair_sla_minutes",
+            "repair_pool_high_water",
             "diagnosis_prob",
             "diagnosis_uncertainty",
             "retirement_threshold",
@@ -443,6 +465,7 @@ impl Params {
             "checkpoint_tier2_interval",
             "checkpoint_tier2_cost",
             "checkpoint_tier2_restore",
+            "checkpoint_cost_per_server",
             "preemption_cost",
             "max_sim_time",
         ]

@@ -87,6 +87,7 @@ pub fn validate(p: &Params) -> Result<(), ConfigError> {
     pos("auto_repair_time", p.auto_repair_time)?;
     pos("manual_repair_time", p.manual_repair_time)?;
     non_neg("repair_sla_minutes", p.repair_sla_minutes)?;
+    prob("repair_pool_high_water", p.repair_pool_high_water)?;
     prob("diagnosis_prob", p.diagnosis_prob)?;
     prob("diagnosis_uncertainty", p.diagnosis_uncertainty)?;
     non_neg("retirement_window", p.retirement_window)?;
@@ -98,6 +99,7 @@ pub fn validate(p: &Params) -> Result<(), ConfigError> {
     non_neg("checkpoint_tier2_interval", p.checkpoint_tier2_interval)?;
     non_neg("checkpoint_tier2_cost", p.checkpoint_tier2_cost)?;
     non_neg("checkpoint_tier2_restore", p.checkpoint_tier2_restore)?;
+    non_neg("checkpoint_cost_per_server", p.checkpoint_cost_per_server)?;
     non_neg("preemption_cost", p.preemption_cost)?;
     pos("max_sim_time", p.max_sim_time)?;
 

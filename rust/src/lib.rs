@@ -43,6 +43,7 @@ pub mod optimize;
 pub mod report;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod sim;
 pub mod stats;
 pub mod sweep;

@@ -184,6 +184,17 @@ impl CommitClock {
     }
 }
 
+/// The effective per-commit stall for `p`'s gang: the flat
+/// `checkpoint_cost` plus the bandwidth-bound per-server term
+/// `checkpoint_cost_per_server × job_size` (a gang-wide barrier write
+/// scales with the gang's aggregate state). Both knobs default to 0, so
+/// the effective cost is 0 — and every commit path short-circuits —
+/// unless one is configured. Used by `periodic`/`auto`/`young_daly`/
+/// `adaptive`; `tiered` keeps its explicit per-tier costs.
+pub(crate) fn effective_commit_cost(p: &Params) -> Time {
+    p.checkpoint_cost + p.checkpoint_cost_per_server * p.job_size as f64
+}
+
 /// Young's optimal interval √(2·C·MTBF) for commit cost `C` and gang
 /// failure rate `rate` (1/min). A rate of 0 yields an infinite interval:
 /// no failures, no commits needed.
@@ -383,9 +394,10 @@ pub struct SelfTuning {
 
 impl SelfTuning {
     fn new(n_jobs: usize, p: &Params, source: MtbfSource) -> SelfTuning {
-        let initial = young_daly_interval(p.checkpoint_cost, configured_gang_rate(p));
+        let cost = effective_commit_cost(p);
+        let initial = young_daly_interval(cost, configured_gang_rate(p));
         SelfTuning {
-            cost: p.checkpoint_cost,
+            cost,
             recovery_time: p.recovery_time,
             source,
             interval: vec![initial; n_jobs],
@@ -748,6 +760,29 @@ mod tests {
         }
         assert_eq!(c.account(74.0, true).commits, 2);
         assert_eq!(c.account(74.0, false).commits, 1, "completion skips the boundary");
+    }
+
+    #[test]
+    fn effective_cost_scales_with_gang_size() {
+        let mut p = Params::small_test();
+        p.checkpoint_cost = 2.0;
+        p.checkpoint_cost_per_server = 0.5;
+        assert_eq!(effective_commit_cost(&p), 2.0 + 0.5 * p.job_size as f64);
+        // Either knob alone supplies a positive effective cost.
+        p.checkpoint_cost = 0.0;
+        assert_eq!(effective_commit_cost(&p), 0.5 * p.job_size as f64);
+        // Both at their defaults: 0 — the byte-identity short-circuit.
+        p.checkpoint_cost_per_server = 0.0;
+        assert_eq!(effective_commit_cost(&p), 0.0);
+        // The per-server term feeds the self-tuning interval: a bigger
+        // effective cost widens √(2·C·MTBF) exactly as a flat cost would.
+        p.checkpoint_cost_per_server = 1.0;
+        let scaled = SelfTuning::young_daly(1, &p);
+        p.checkpoint_cost_per_server = 0.0;
+        p.checkpoint_cost = p.job_size as f64;
+        let flat = SelfTuning::young_daly(1, &p);
+        assert_eq!(scaled.interval[0], flat.interval[0]);
+        assert_eq!(scaled.cost, flat.cost);
     }
 
     #[test]

@@ -57,8 +57,20 @@ impl Simulation {
 
     /// Build with named policies (the Scenario/sweep entry point).
     pub fn from_spec(p: &Params, spec: &PolicySpec, rng: Rng) -> Result<Simulation, String> {
+        Self::from_spec_warm(p, spec, rng, None)
+    }
+
+    /// [`Simulation::from_spec`] with fleet/topology construction routed
+    /// through a serve-layer warm cache (`None` = cold build; warm and
+    /// cold runs are byte-identical).
+    pub fn from_spec_warm(
+        p: &Params,
+        spec: &PolicySpec,
+        rng: Rng,
+        warm: Option<&crate::serve::cache::WarmHandle>,
+    ) -> Result<Simulation, String> {
         Ok(Simulation {
-            ctx: SimCtx::new(p, rng),
+            ctx: SimCtx::new_warm(p, rng, warm),
             policies: spec.build(p)?,
             injections: InjectionPlan::default(),
             injection_buf: Vec::new(),
@@ -118,8 +130,14 @@ impl Simulation {
 
     /// Re-initialize in place for a new run, reusing the previous run's
     /// allocations (the [`ReplicationRunner`] path).
-    fn reset(&mut self, p: &Params, spec: &PolicySpec, rng: Rng) -> Result<(), String> {
-        self.ctx.reset(p, rng);
+    fn reset(
+        &mut self,
+        p: &Params,
+        spec: &PolicySpec,
+        rng: Rng,
+        warm: Option<&crate::serve::cache::WarmHandle>,
+    ) -> Result<(), String> {
+        self.ctx.reset_warm(p, rng, warm);
         self.policies = spec.build(p)?;
         self.injections = InjectionPlan::default();
         self.injection_buf.clear();
@@ -351,11 +369,21 @@ impl Simulation {
 #[derive(Default)]
 pub struct ReplicationRunner {
     sim: Option<Simulation>,
+    /// Warm fleet/topology cache consulted on every (re)build — installed
+    /// by the serve layer's execution control. `None` (the default, and
+    /// always the CLI path) builds cold; warm and cold runs are
+    /// byte-identical.
+    pub warm: Option<crate::serve::cache::WarmHandle>,
+    /// Cooperative cancellation: when the flag is set, `run` returns
+    /// `RunOutputs::default()` without simulating. The pool still fills
+    /// every result slot (so `run_pool_ordered`'s completeness invariant
+    /// holds); the serve layer discards the whole response anyway.
+    pub cancel: Option<std::sync::Arc<std::sync::atomic::AtomicBool>>,
 }
 
 impl ReplicationRunner {
     pub fn new() -> ReplicationRunner {
-        ReplicationRunner { sim: None }
+        ReplicationRunner::default()
     }
 
     /// Run one replication, reusing buffers from previous runs.
@@ -363,11 +391,18 @@ impl ReplicationRunner {
     /// Panics if `spec` cannot be built for `p` (validate specs up front;
     /// numeric sweeps never change policy validity).
     pub fn run(&mut self, p: &Params, spec: &PolicySpec, rng: Rng) -> RunOutputs {
+        use std::sync::atomic::Ordering;
+        if self.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed)) {
+            return RunOutputs::default();
+        }
         const MSG: &str = "policy spec must build for swept params";
         match &mut self.sim {
-            Some(sim) => sim.reset(p, spec, rng).expect(MSG),
+            Some(sim) => sim.reset(p, spec, rng, self.warm.as_ref()).expect(MSG),
             slot @ None => {
-                *slot = Some(Simulation::from_spec(p, spec, rng).expect(MSG));
+                *slot = Some(
+                    Simulation::from_spec_warm(p, spec, rng, self.warm.as_ref())
+                        .expect(MSG),
+                );
             }
         }
         self.sim.as_mut().expect("initialized above").run_in_place()

@@ -20,6 +20,7 @@ use crate::model::outputs::RunOutputs;
 use crate::model::pool::Pools;
 use crate::model::repair::RepairShop;
 use crate::model::server::{build_fleet_into, Server, ServerState};
+use crate::serve::cache::WarmHandle;
 use crate::model::topology::Topology;
 use crate::sim::engine::Engine;
 use crate::sim::rng::Rng;
@@ -65,6 +66,13 @@ pub struct SimCtx {
 impl SimCtx {
     /// Build a fresh context for `p`, seeded with `rng`.
     pub fn new(p: &Params, rng: Rng) -> SimCtx {
+        Self::new_warm(p, rng, None)
+    }
+
+    /// Build a fresh context, routing fleet/topology construction through
+    /// a serve-layer warm cache when one is supplied (`None` = cold build,
+    /// the CLI path — byte-identical either way).
+    pub fn new_warm(p: &Params, rng: Rng, warm: Option<&WarmHandle>) -> SimCtx {
         let mut ctx = SimCtx {
             p: p.clone(),
             engine: Engine::new(),
@@ -84,17 +92,28 @@ impl SimCtx {
             wait_p50: P2Quantile::new(0.5),
             wait_p99: P2Quantile::new(0.99),
         };
-        ctx.reset(p, rng);
+        ctx.reset_warm(p, rng, warm);
         ctx
     }
 
     /// Re-initialize in place for a new run, reusing every allocation the
     /// previous run left behind (event heap, fleet vector, pool
     /// free-lists, job server-lists, repair queues).
-    pub fn reset(&mut self, p: &Params, mut rng: Rng) {
+    pub fn reset(&mut self, p: &Params, rng: Rng) {
+        self.reset_warm(p, rng, None)
+    }
+
+    /// [`SimCtx::reset`] with the fleet and topology builds routed
+    /// through a warm cache when one is supplied. A fleet-cache hit
+    /// restores both the fleet and the RNG's stream position, so warm
+    /// runs continue byte-identically to cold ones.
+    pub fn reset_warm(&mut self, p: &Params, mut rng: Rng, warm: Option<&WarmHandle>) {
         // Same draw order as a fresh construction: the fleet's bad-set
         // shuffle consumes the stream first.
-        build_fleet_into(p, &mut rng, &mut self.fleet, &mut self.scratch_ids);
+        match warm {
+            Some(h) => h.fetch_fleet(p, &mut rng, &mut self.fleet, &mut self.scratch_ids),
+            None => build_fleet_into(p, &mut rng, &mut self.fleet, &mut self.scratch_ids),
+        }
         self.pools.rebuild(&self.fleet);
         let n_jobs = p.num_jobs.max(1) as usize;
         self.jobs.truncate(n_jobs);
@@ -106,7 +125,10 @@ impl SimCtx {
         }
         self.engine.reset(p.job_size as usize + 64);
         self.shop.reset();
-        self.topo = p.topology.as_ref().map(|s| Topology::build(s, p.total_servers()));
+        self.topo = match warm {
+            Some(h) => h.fetch_topology(p),
+            None => p.topology.as_ref().map(|s| Topology::build(s, p.total_servers())),
+        };
         self.out = RunOutputs::default();
         self.trace = None;
         self.observer = None;
@@ -275,6 +297,32 @@ mod tests {
         let mut b = fresh.rng.clone();
         for _ in 0..32 {
             assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn warm_reset_is_byte_identical_to_cold() {
+        let p = Params::small_test();
+        let cold = SimCtx::new(&p, Rng::new(9));
+        let warm = WarmHandle::new(8);
+        let first = SimCtx::new_warm(&p, Rng::new(9), Some(&warm)); // miss
+        let hit = SimCtx::new_warm(&p, Rng::new(9), Some(&warm)); // hit
+        assert_eq!(warm.stats().fleet_hits, 1);
+        assert_eq!(warm.stats().fleet_misses, 1);
+        for ctx in [&first, &hit] {
+            assert_eq!(ctx.fleet.len(), cold.fleet.len());
+            for (a, b) in ctx.fleet.iter().zip(&cold.fleet) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.is_bad, b.is_bad);
+                assert_eq!(a.state, b.state);
+            }
+            // The post-build stream position matches: subsequent draws —
+            // i.e. the whole rest of the run — are identical.
+            let mut x = ctx.rng.clone();
+            let mut y = cold.rng.clone();
+            for _ in 0..16 {
+                assert_eq!(x.next_u64(), y.next_u64());
+            }
         }
     }
 

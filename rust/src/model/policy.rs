@@ -5,7 +5,7 @@
 //! ```yaml
 //! policies:
 //!   selection: locality      # first_fit | random | locality | anti_affinity | power_of_two_choices | history_scored
-//!   repair: job_first        # fifo | lifo | job_first | sla_aged | shortest_first
+//!   repair: job_first        # fifo | lifo | job_first | sla_aged | shortest_first | pool_aware
 //!   checkpoint: periodic     # auto | continuous | periodic | young_daly | adaptive | tiered
 //!   failure: auto            # auto | gang | per_server | thinned | correlated
 //! ```
@@ -18,12 +18,14 @@
 
 use crate::config::{DistKind, Params};
 use crate::model::checkpoint::{
-    CheckpointPolicy, Continuous, Periodic, SelfTuning, Tiered,
+    effective_commit_cost, CheckpointPolicy, Continuous, Periodic, SelfTuning, Tiered,
 };
 use crate::model::failure::{
     CorrelatedFailures, FailureModel, GangExponential, PerServerClocks, ThinnedClocks,
 };
-use crate::model::repair::{Fifo, JobFirst, Lifo, RepairPolicy, ShortestFirst, SlaAged};
+use crate::model::repair::{
+    Fifo, JobFirst, Lifo, PoolAware, RepairPolicy, ShortestFirst, SlaAged,
+};
 use crate::model::selection::{
     AntiAffinity, FirstFit, HistoryScored, Locality, PowerOfTwoChoices, Random,
     SelectionPolicy,
@@ -77,7 +79,7 @@ pub const SELECTION_NAMES: &[&str] = &[
 ];
 /// Valid repair-policy names.
 pub const REPAIR_NAMES: &[&str] =
-    &["fifo", "lifo", "job_first", "sla_aged", "shortest_first"];
+    &["fifo", "lifo", "job_first", "sla_aged", "shortest_first", "pool_aware"];
 /// Valid checkpoint-policy names.
 pub const CHECKPOINT_NAMES: &[&str] =
     &["auto", "continuous", "periodic", "young_daly", "adaptive", "tiered"];
@@ -149,15 +151,30 @@ impl PolicySpec {
             "job_first" => Box::new(JobFirst),
             "sla_aged" => Box::new(SlaAged),
             "shortest_first" => Box::new(ShortestFirst),
+            "pool_aware" => {
+                // At the 0 default the mark is "always flush": every
+                // drain-back repair would be deferred forever. Name the
+                // knob instead of running a silently starved shop.
+                if p.repair_pool_high_water <= 0.0 {
+                    return Err(
+                        "repair policy `pool_aware` requires `repair_pool_high_water` \
+                         > 0 (the spare-pool fraction above which drain-back repairs \
+                         are deferred; at 0 every repair would defer forever)"
+                            .into(),
+                    );
+                }
+                Box::new(PoolAware)
+            }
             other => return Err(format!("unknown repair policy `{other}`")),
         };
         // The self-optimizing interval √(2·C·MTBF) is degenerate at C = 0
         // (a zero commit cost makes an infinitesimal interval optimal —
         // the exact degeneracy the cost knob exists to remove).
         let needs_cost = |name: &str| -> Result<(), String> {
-            if p.checkpoint_cost <= 0.0 {
+            if effective_commit_cost(p) <= 0.0 {
                 return Err(format!(
-                    "checkpoint policy `{name}` requires `checkpoint_cost` > 0 \
+                    "checkpoint policy `{name}` requires `checkpoint_cost` (or \
+                     `checkpoint_cost_per_server`) > 0 \
                      (its interval √(2·C·MTBF) is degenerate at C = 0; with free \
                      commits use `continuous` or `periodic`)"
                 ));
@@ -180,7 +197,7 @@ impl PolicySpec {
                 }
                 Box::new(Periodic {
                     interval: p.checkpoint_interval,
-                    cost: p.checkpoint_cost,
+                    cost: effective_commit_cost(p),
                     recovery_time: p.recovery_time,
                 })
             }
@@ -229,7 +246,7 @@ impl PolicySpec {
                 if p.checkpoint_interval > 0.0 {
                     Box::new(Periodic {
                         interval: p.checkpoint_interval,
-                        cost: p.checkpoint_cost,
+                        cost: effective_commit_cost(p),
                         recovery_time: p.recovery_time,
                     })
                 } else {
@@ -413,6 +430,7 @@ mod tests {
         p.checkpoint_tier2_cost = 20.0;
         p.checkpoint_tier2_restore = 60.0;
         p.selection_history_window = 1440.0;
+        p.repair_pool_high_water = 0.25;
         p.topology = Some(crate::config::TopologySpec {
             levels: vec![crate::config::TopologyLevelSpec {
                 name: "rack".into(),
@@ -479,6 +497,34 @@ mod tests {
             spec.set("checkpoint", name).unwrap();
             assert_eq!(spec.build(&p).unwrap().checkpoint.name(), name);
         }
+    }
+
+    #[test]
+    fn per_server_cost_satisfies_the_commit_cost_requirement() {
+        // √(2·C·MTBF) is non-degenerate as soon as the *effective* cost
+        // is positive, whichever knob supplies it.
+        let mut p = Params::small_test();
+        p.checkpoint_cost = 0.0;
+        p.checkpoint_cost_per_server = 0.5;
+        let mut spec = PolicySpec::default();
+        spec.set("checkpoint", "young_daly").unwrap();
+        assert_eq!(spec.build(&p).unwrap().checkpoint.name(), "young_daly");
+    }
+
+    #[test]
+    fn pool_aware_requires_a_high_water_mark() {
+        // At the 0 default the mark is "always flush" and every
+        // drain-back repair would defer forever: a build error naming
+        // the knob instead.
+        let p = Params::small_test();
+        let mut spec = PolicySpec::default();
+        spec.set("repair", "pool_aware").unwrap();
+        let err = spec.build(&p).unwrap_err();
+        assert!(err.contains("repair_pool_high_water"), "{err}");
+
+        let mut p = Params::small_test();
+        p.repair_pool_high_water = 0.5;
+        assert_eq!(spec.build(&p).unwrap().repair.name(), "pool_aware");
     }
 
     #[test]

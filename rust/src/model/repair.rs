@@ -21,7 +21,7 @@
 use crate::config::Params;
 use crate::model::events::{RepairStage, ServerId};
 use crate::model::job::Job;
-use crate::model::server::Server;
+use crate::model::server::{Server, ServerState};
 use crate::sim::dist::Dist;
 use crate::sim::rng::Rng;
 use crate::sim::Time;
@@ -152,6 +152,17 @@ impl RepairQueue {
     /// O(jobs) comparisons: buckets hold live entries in arrival order,
     /// so comparing bucket heads finds the global earliest.
     pub fn pop_first_waiting(&mut self, waiting: impl Fn(usize) -> bool) -> Option<ServerId> {
+        self.pop_first_waiting_only(waiting).or_else(|| self.pop_front())
+    }
+
+    /// Like [`RepairQueue::pop_first_waiting`] but with *no* FIFO
+    /// fallback: `None` when no queued server's job is waiting, even if
+    /// the queue holds pool-bound entries. [`PoolAware`] uses this to
+    /// defer drain-back repairs while the spare pool is flush.
+    pub fn pop_first_waiting_only(
+        &mut self,
+        waiting: impl Fn(usize) -> bool,
+    ) -> Option<ServerId> {
         let mut best: Option<(u64, usize)> = None;
         for (j, q) in self.by_job.iter().enumerate() {
             let Some(&(seq, _)) = q.front() else { continue };
@@ -162,24 +173,20 @@ impl RepairQueue {
                 best = Some((seq, j));
             }
         }
-        match best {
-            Some((_, j)) => {
-                let (seq, server) = self.by_job[j].pop_front().expect("head checked");
-                self.dead.insert(seq); // the fifo copy becomes a tombstone
-                // Reclaim any tombstones this pick exposed at the front.
-                while self
-                    .fifo
-                    .front()
-                    .is_some_and(|(s, _, _, _)| self.dead.contains(s))
-                {
-                    let (s, ..) = self.fifo.pop_front().expect("front checked");
-                    self.dead.remove(&s);
-                }
-                self.len -= 1;
-                Some(server)
-            }
-            None => self.pop_front(),
+        let (_, j) = best?;
+        let (seq, server) = self.by_job[j].pop_front().expect("head checked");
+        self.dead.insert(seq); // the fifo copy becomes a tombstone
+        // Reclaim any tombstones this pick exposed at the front.
+        while self
+            .fifo
+            .front()
+            .is_some_and(|(s, _, _, _)| self.dead.contains(s))
+        {
+            let (s, ..) = self.fifo.pop_front().expect("front checked");
+            self.dead.remove(&s);
         }
+        self.len -= 1;
+        Some(server)
     }
 
     /// Remove and return the live entry minimizing `key(server)`, ties
@@ -227,6 +234,7 @@ impl RepairQueue {
 /// | `job_first` | [`JobFirst`] — servers a live job is waiting on jump the queue |
 /// | `sla_aged`  | [`SlaAged`] — freshest first, until the head breaches `repair_sla_minutes` |
 /// | `shortest_first` | [`ShortestFirst`] — shortest pre-drawn repair duration first (SPT) |
+/// | `pool_aware` | [`PoolAware`] — defer drain-back repairs while the spare pool is above `repair_pool_high_water` |
 pub trait RepairPolicy {
     /// Stable policy name (the YAML/CLI selector).
     fn name(&self) -> &'static str;
@@ -370,6 +378,45 @@ impl RepairPolicy for ShortestFirst {
         _now: Time,
     ) -> Option<ServerId> {
         queue.pop_min_by(|s| fleet[s as usize].predrawn_repair.unwrap_or(f64::INFINITY))
+    }
+}
+
+/// Pool-aware repair throttle: while the spare pool is flush — holding
+/// at least `repair_pool_high_water × spare_pool` idle servers — a
+/// repair slot is spent only on servers a live job is waiting on (the
+/// `job_first` scan with *no* FIFO fallback); repairs that would merely
+/// drain back to the already-full pools stay queued. Once the pool dips
+/// below the mark, plain FIFO resumes. Deferred servers are never
+/// stranded by the policy itself: they are reconsidered at every later
+/// completion, and dispatch as soon as the pool drains below the mark
+/// or their job starts wanting capacity. (Capacity 0 — the default
+/// unlimited shop — never consults any discipline, so this knob only
+/// acts alongside `auto_repair_capacity`/`manual_repair_capacity`.)
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolAware;
+
+impl RepairPolicy for PoolAware {
+    fn name(&self) -> &'static str {
+        "pool_aware"
+    }
+
+    fn pick_next(
+        &self,
+        queue: &mut RepairQueue,
+        fleet: &[Server],
+        jobs: &[Job],
+        p: &Params,
+        _now: Time,
+    ) -> Option<ServerId> {
+        let spares = fleet
+            .iter()
+            .filter(|s| s.state == ServerState::SparePool)
+            .count();
+        if spares as f64 >= p.repair_pool_high_water * p.spare_pool as f64 {
+            queue.pop_first_waiting_only(|j| jobs[j].wants_more(p))
+        } else {
+            queue.pop_front()
+        }
     }
 }
 
@@ -822,6 +869,50 @@ mod tests {
         assert_eq!(Fifo.pick_next(&mut q, &fleet, &jobs, &p, 0.0), None);
         assert!(q.fifo.is_empty() && q.dead.is_empty());
         assert!(q.by_job.iter().all(|b| b.is_empty()));
+    }
+
+    #[test]
+    fn pool_aware_defers_drain_backs_while_pool_is_flush() {
+        let mut p = Params::small_test();
+        p.spare_pool = 4;
+        p.repair_pool_high_water = 0.5; // mark = 2 idle spares
+        // Job 0 is done (its servers would drain back); job 1 is waiting.
+        let mut done = Job::with_id(0, p.job_len);
+        done.phase = JobPhase::Done;
+        let jobs = vec![done, Job::with_id(1, p.job_len)];
+        let mut fleet = test_fleet(6);
+        fleet[4].state = ServerState::SparePool;
+        fleet[5].state = ServerState::SparePool; // 2 >= mark: flush
+        let mut q = queue_of(&[(0, Some(0)), (1, Some(1)), (2, Some(0))]);
+        // Flush pool: only the awaited server dispatches, drain-backs defer.
+        assert_eq!(PoolAware.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(1));
+        assert_eq!(PoolAware.pick_next(&mut q, &fleet, &jobs, &p, 0.0), None);
+        assert_eq!(q.len(), 2, "deferred servers stay queued");
+        // The pool dips below the mark: plain FIFO resumes.
+        fleet[5].state = ServerState::JobActive;
+        assert_eq!(PoolAware.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(0));
+        assert_eq!(PoolAware.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(2));
+        assert_eq!(PoolAware.pick_next(&mut q, &fleet, &jobs, &p, 0.0), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pool_aware_boundary_counts_exact_mark_as_flush() {
+        // `>=` at the mark: exactly high_water × spare_pool idle spares
+        // still throttles (the pool is "full enough").
+        let mut p = Params::small_test();
+        p.spare_pool = 2;
+        p.repair_pool_high_water = 1.0; // mark = 2
+        let jobs = waiting_job(&p);
+        let mut fleet = test_fleet(4);
+        fleet[2].state = ServerState::SparePool;
+        fleet[3].state = ServerState::SparePool;
+        let mut q = queue_of(&[(0, None), (1, Some(0))]);
+        // Unassigned server 0 is a pure drain-back: deferred. The awaited
+        // server 1 (job 0 is waiting) dispatches out of arrival order.
+        assert_eq!(PoolAware.pick_next(&mut q, &fleet, &jobs, &p, 0.0), Some(1));
+        assert_eq!(PoolAware.pick_next(&mut q, &fleet, &jobs, &p, 0.0), None);
+        assert_eq!(q.len(), 1);
     }
 
     #[test]

@@ -67,6 +67,15 @@ pub trait Sink {
     fn study(&self, r: &StudyRecord) -> String;
     fn optimize(&self, r: &OptimizeRecord) -> String;
     fn scenario(&self, r: &ScenarioRecord) -> String;
+
+    /// Stream a scenario record: `out` receives ordered text chunks
+    /// whose concatenation is exactly [`Sink::scenario`]'s string.
+    /// Document formats (text, json, csv) emit one chunk; NDJSON
+    /// overrides this to emit line by line, so a serve consumer can act
+    /// on records as they arrive instead of waiting for the full body.
+    fn scenario_stream(&self, r: &ScenarioRecord, out: &mut dyn FnMut(&str)) {
+        out(&self.scenario(r));
+    }
 }
 
 // ------------------------------------------------------------------ //
@@ -653,18 +662,6 @@ impl Sink for NdjsonSink {
     }
 
     fn scenario(&self, r: &ScenarioRecord) -> String {
-        let meta = ndjson_line(
-            vec![
-                ("scenario".to_string(), Json::str(r.kind)),
-                ("title".to_string(), Json::str(&r.title)),
-                ("seed".to_string(), r.seed.into()),
-                (
-                    "policies".to_string(),
-                    crate::report::record::policies_json(&r.policies),
-                ),
-            ],
-            "scenario",
-        );
         let body = match &r.body {
             RecordBody::Run(rr) => self.run(rr),
             RecordBody::Sweep(sr) => self.sweep(sr),
@@ -673,8 +670,34 @@ impl Sink for NdjsonSink {
             RecordBody::Study(st) => self.study(st),
             RecordBody::Optimize(or) => self.optimize(or),
         };
-        meta + &body
+        scenario_meta_line(r) + &body
     }
+
+    /// One chunk per NDJSON line: the meta line first, then each body
+    /// record as soon as it is rendered (`jq`-able mid-stream).
+    fn scenario_stream(&self, r: &ScenarioRecord, out: &mut dyn FnMut(&str)) {
+        let full = self.scenario(r);
+        for line in full.split_inclusive('\n') {
+            out(line);
+        }
+    }
+}
+
+/// The `{"type":"scenario",...}` header line opening every NDJSON
+/// scenario stream.
+fn scenario_meta_line(r: &ScenarioRecord) -> String {
+    ndjson_line(
+        vec![
+            ("scenario".to_string(), Json::str(r.kind)),
+            ("title".to_string(), Json::str(&r.title)),
+            ("seed".to_string(), r.seed.into()),
+            (
+                "policies".to_string(),
+                crate::report::record::policies_json(&r.policies),
+            ),
+        ],
+        "scenario",
+    )
 }
 
 #[cfg(test)]

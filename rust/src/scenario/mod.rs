@@ -51,7 +51,7 @@ use crate::report::{
 };
 use crate::sim::rng::Rng;
 use crate::stats::{metrics, Summary};
-use crate::sweep::{policies_from_doc, run_sweep, sweep_from_doc, Sweep, SweepResult};
+use crate::sweep::{ctrl, policies_from_doc, run_sweep, sweep_from_doc, Sweep, SweepResult};
 use crate::trace::inject::{Injection, InjectionPlan};
 use crate::trace::Trace;
 use study::Study;
@@ -242,8 +242,18 @@ impl Scenario {
     pub fn run(&self) -> Result<ScenarioOutcome, String> {
         match &self.kind {
             ScenarioKind::Single { trace } => {
-                let mut sim =
-                    Simulation::from_spec(&self.params, &self.policies, Rng::new(self.seed))?;
+                // Ambient control (see `sweep::ctrl`): the serve daemon
+                // gates single runs through the shared slot budget and
+                // reuses warm fleet/topology builds; the CLI's default
+                // all-`None` ctrl makes both hooks no-ops.
+                let ec = ctrl::current();
+                let _permit = ec.gate.as_ref().map(|g| g.acquire());
+                let mut sim = Simulation::from_spec_warm(
+                    &self.params,
+                    &self.policies,
+                    Rng::new(self.seed),
+                    ec.warm.as_ref(),
+                )?;
                 if *trace {
                     sim = sim.with_trace();
                 }
@@ -281,9 +291,15 @@ impl Scenario {
                 })
             }
             ScenarioKind::Inject { failures, trace } => {
-                let mut sim =
-                    Simulation::from_spec(&self.params, &self.policies, Rng::new(self.seed))?
-                        .with_injections(InjectionPlan::new(failures.clone()));
+                let ec = ctrl::current();
+                let _permit = ec.gate.as_ref().map(|g| g.acquire());
+                let mut sim = Simulation::from_spec_warm(
+                    &self.params,
+                    &self.policies,
+                    Rng::new(self.seed),
+                    ec.warm.as_ref(),
+                )?
+                .with_injections(InjectionPlan::new(failures.clone()));
                 if *trace {
                     sim = sim.with_trace();
                 }
@@ -291,10 +307,20 @@ impl Scenario {
                 Ok(ScenarioOutcome::Inject { outputs, trace })
             }
             ScenarioKind::Compare { replications } => {
-                let analytic = analytical::analyze(&self.params);
+                let ec = ctrl::current();
+                // The CTMC side goes through the prescreen cache when a
+                // warm handle is ambient (repeat compares answer from the
+                // same analysis the router serves).
+                let analytic = match ec.warm.as_ref() {
+                    Some(h) => h.fetch_analysis(&self.params),
+                    None => analytical::analyze(&self.params),
+                };
                 let mut runner = ReplicationRunner::new();
+                runner.warm = ec.warm.clone();
+                runner.cancel = ec.cancel.clone();
                 let makespans: Vec<f64> = (0..*replications)
                     .map(|r| {
+                        let _permit = ec.gate.as_ref().map(|g| g.acquire());
                         runner
                             .run(
                                 &self.params,

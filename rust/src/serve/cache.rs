@@ -1,0 +1,332 @@
+//! Warm plan caches keyed by a canonical config fingerprint.
+//!
+//! The serving access pattern (ROADMAP item 4, Kokolis et al.'s
+//! operator loop) is many near-identical what-ifs over one shared base
+//! cluster. Three artifacts of a run are pure functions of the config
+//! (and, for fleets, the RNG stream position) and dominate setup cost at
+//! scale, so the daemon keeps them warm across requests:
+//!
+//! - **Topology** — [`Topology::build`] is RNG-free and deterministic in
+//!   the spec, keyed by fingerprint alone.
+//! - **Fleets** — [`build_fleet_into`] is deterministic in `(params,
+//!   rng state)`: the cache key is `(fingerprint, state before)` and the
+//!   value carries the state *after*, so a hit restores both the fleet
+//!   and the stream position and the run continues byte-identically to a
+//!   cold build.
+//! - **CTMC prescreen results** — [`crate::analytical::analyze`] is a
+//!   pure function of the config, keyed by fingerprint alone (the
+//!   prescreen fast-path router's answer store).
+//!
+//! The fingerprint is an FNV-1a hash over every sweepable parameter by
+//! name plus the non-numeric config (failure distribution, topology
+//! levels, workload spec), so any knob change — including params added
+//! in future PRs, which join `sweepable_names` — lands in a different
+//! cache line. Collisions are the usual 64-bit-hash risk, accepted as
+//! such (a collision serves a wrong-but-valid cached artifact; at
+//! interactive request volumes the probability is negligible).
+
+use crate::config::{DistKind, Params};
+use crate::model::server::{build_fleet_into, Server};
+use crate::model::topology::Topology;
+use crate::sim::rng::Rng;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+const FNV_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(FNV_BASIS)
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+        self.bytes(&[0xff]); // field separator: "ab"+"c" != "a"+"bc"
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.bytes(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Canonical fingerprint of a parameter set: equal configs hash equal,
+/// and any knob the simulator reads lands in the hash (numeric params
+/// via the [`Params::sweepable_names`] registry, so future params are
+/// covered automatically; distribution/topology/workload explicitly).
+pub fn fingerprint(p: &Params) -> u64 {
+    let mut h = Fnv::new();
+    for &name in Params::sweepable_names() {
+        h.str(name);
+        h.f64(p.get_by_name(name).expect("registry names always resolve"));
+    }
+    h.str(p.failure_dist.name());
+    match p.failure_dist {
+        DistKind::Exponential => {}
+        DistKind::Weibull { shape } => h.f64(shape),
+        DistKind::LogNormal { sigma } => h.f64(sigma),
+    }
+    if let Some(t) = &p.topology {
+        h.str("topology");
+        for l in &t.levels {
+            h.str(&l.name);
+            h.f64(l.size as f64);
+            h.f64(l.outage_rate);
+        }
+    }
+    if let Some(w) = &p.workload {
+        h.str("workload");
+        // The spec is plain data (arrival process + classes); its Debug
+        // form is a canonical rendering of every field.
+        h.str(&format!("{w:?}"));
+    }
+    h.0
+}
+
+/// Cache-traffic counters, cumulative over the cache's lifetime. The
+/// serve protocol reports them per `done` response so tests (and
+/// operators) can observe that a repeated request skipped rebuilds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub fleet_hits: u64,
+    pub fleet_misses: u64,
+    pub topo_hits: u64,
+    pub topo_misses: u64,
+    pub prescreen_hits: u64,
+    pub prescreen_misses: u64,
+}
+
+struct FleetEntry {
+    fleet: Vec<Server>,
+    rng_after: [u64; 4],
+}
+
+/// The warm store behind one daemon: fleets, topologies, and prescreen
+/// answers, plus the traffic counters. One instance is shared (via
+/// [`WarmHandle`]) across every request and worker thread.
+#[derive(Default)]
+pub struct WarmCache {
+    fleets: HashMap<(u64, [u64; 4]), FleetEntry>,
+    topos: HashMap<u64, Topology>,
+    prescreen: HashMap<u64, crate::analytical::AnalyticOutputs>,
+    stats: CacheStats,
+    /// Max fleet entries retained; at the cap the fleet map is cleared
+    /// wholesale (entries are per-(config, stream-position), so an
+    /// unbounded sweep would otherwise hold one fleet clone per
+    /// replication). Topology/prescreen maps are per-config and tiny.
+    fleet_cap: usize,
+}
+
+impl WarmCache {
+    pub fn new(fleet_cap: usize) -> WarmCache {
+        WarmCache { fleet_cap: fleet_cap.max(1), ..WarmCache::default() }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+/// A cheaply-cloneable handle on a shared [`WarmCache`]. The model layer
+/// consults it through `Option<&WarmHandle>` parameters: `None`
+/// everywhere on the CLI path, so cold runs never touch a lock.
+#[derive(Clone)]
+pub struct WarmHandle {
+    cache: Arc<Mutex<WarmCache>>,
+}
+
+impl WarmHandle {
+    pub fn new(fleet_cap: usize) -> WarmHandle {
+        WarmHandle { cache: Arc::new(Mutex::new(WarmCache::new(fleet_cap))) }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.cache.lock().expect("warm cache lock").stats()
+    }
+
+    /// Fleet build through the cache: byte-identical to a cold
+    /// [`build_fleet_into`] call. On a hit the cached fleet is copied
+    /// into `fleet` (reusing its allocations) and `rng` jumps to the
+    /// position the cold build would have left it at; on a miss the cold
+    /// build runs and its result is remembered.
+    pub fn fetch_fleet(
+        &self,
+        p: &Params,
+        rng: &mut Rng,
+        fleet: &mut Vec<Server>,
+        scratch: &mut Vec<u32>,
+    ) {
+        let key = (fingerprint(p), rng.state());
+        let mut cache = self.cache.lock().expect("warm cache lock");
+        if let Some(e) = cache.fleets.get(&key) {
+            fleet.clone_from(&e.fleet);
+            rng.set_state(e.rng_after);
+            cache.stats.fleet_hits += 1;
+            return;
+        }
+        cache.stats.fleet_misses += 1;
+        drop(cache); // build outside the lock: misses run concurrently
+        build_fleet_into(p, rng, fleet, scratch);
+        let mut cache = self.cache.lock().expect("warm cache lock");
+        if cache.fleets.len() >= cache.fleet_cap {
+            cache.fleets.clear();
+        }
+        cache
+            .fleets
+            .insert(key, FleetEntry { fleet: fleet.clone(), rng_after: rng.state() });
+    }
+
+    /// Topology build through the cache ([`Topology::build`] is RNG-free
+    /// and deterministic, so the fingerprint alone keys it).
+    pub fn fetch_topology(&self, p: &Params) -> Option<Topology> {
+        let spec = p.topology.as_ref()?;
+        let key = fingerprint(p);
+        let mut cache = self.cache.lock().expect("warm cache lock");
+        if let Some(t) = cache.topos.get(&key) {
+            cache.stats.topo_hits += 1;
+            return Some(t.clone());
+        }
+        cache.stats.topo_misses += 1;
+        drop(cache);
+        let t = Topology::build(spec, p.total_servers());
+        let mut cache = self.cache.lock().expect("warm cache lock");
+        cache.topos.insert(key, t.clone());
+        Some(t)
+    }
+
+    /// CTMC analysis through the cache (`analyze` is a pure function of
+    /// the config). Feeds both `analytic`/`compare` runs and the
+    /// prescreen fast-path router.
+    pub fn fetch_analysis(&self, p: &Params) -> crate::analytical::AnalyticOutputs {
+        let key = fingerprint(p);
+        let mut cache = self.cache.lock().expect("warm cache lock");
+        if let Some(&o) = cache.prescreen.get(&key) {
+            cache.stats.prescreen_hits += 1;
+            return o;
+        }
+        cache.stats.prescreen_misses += 1;
+        drop(cache);
+        let o = crate::analytical::analyze(p);
+        let mut cache = self.cache.lock().expect("warm cache lock");
+        cache.prescreen.insert(key, o);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_stable_and_knob_sensitive() {
+        let p = Params::small_test();
+        assert_eq!(fingerprint(&p), fingerprint(&Params::small_test()));
+        // Every registered numeric knob perturbs the hash.
+        for &name in Params::sweepable_names() {
+            let mut q = Params::small_test();
+            let v = q.get_by_name(name).unwrap();
+            q.set_by_name(name, v + 1.0);
+            assert_ne!(fingerprint(&p), fingerprint(&q), "insensitive to {name}");
+        }
+        // Non-numeric config too.
+        let mut q = Params::small_test();
+        q.failure_dist = DistKind::Weibull { shape: 1.5 };
+        assert_ne!(fingerprint(&p), fingerprint(&q));
+        let mut r = Params::small_test();
+        r.failure_dist = DistKind::Weibull { shape: 2.0 };
+        assert_ne!(fingerprint(&q), fingerprint(&r), "insensitive to dist shape");
+        let mut t = Params::small_test();
+        t.topology = Some(crate::config::TopologySpec {
+            levels: vec![crate::config::TopologyLevelSpec {
+                name: "rack".into(),
+                size: 8,
+                outage_rate: 0.0,
+            }],
+        });
+        assert_ne!(fingerprint(&p), fingerprint(&t));
+    }
+
+    #[test]
+    fn fleet_cache_hit_is_byte_identical_to_cold_build() {
+        let p = Params::small_test();
+        let h = WarmHandle::new(64);
+
+        // Cold reference.
+        let mut cold_rng = Rng::new(7);
+        let mut cold_fleet = Vec::new();
+        let mut scratch = Vec::new();
+        build_fleet_into(&p, &mut cold_rng, &mut cold_fleet, &mut scratch);
+
+        // Miss, then hit, from the same stream position.
+        let same = |fleet: &Vec<Server>, rng: &Rng| {
+            assert_eq!(fleet.len(), cold_fleet.len());
+            for (a, b) in fleet.iter().zip(&cold_fleet) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.is_bad, b.is_bad);
+                assert_eq!(a.state, b.state);
+            }
+            assert_eq!(rng.state(), cold_rng.state(), "stream position restored");
+        };
+        for pass in 0..2 {
+            let mut rng = Rng::new(7);
+            let mut fleet = Vec::new();
+            h.fetch_fleet(&p, &mut rng, &mut fleet, &mut scratch);
+            same(&fleet, &rng);
+            let s = h.stats();
+            assert_eq!((s.fleet_misses, s.fleet_hits), (1, pass), "pass {pass}");
+        }
+        // A different stream position is a different cache line.
+        let mut rng = Rng::new(8);
+        let mut fleet = Vec::new();
+        h.fetch_fleet(&p, &mut rng, &mut fleet, &mut scratch);
+        assert_eq!(h.stats().fleet_misses, 2);
+    }
+
+    #[test]
+    fn fleet_cap_bounds_the_store() {
+        let p = Params::small_test();
+        let h = WarmHandle::new(2);
+        let mut scratch = Vec::new();
+        for seed in 0..5 {
+            let mut rng = Rng::new(seed);
+            let mut fleet = Vec::new();
+            h.fetch_fleet(&p, &mut rng, &mut fleet, &mut scratch);
+        }
+        assert!(h.cache.lock().unwrap().fleets.len() <= 2);
+    }
+
+    #[test]
+    fn topology_and_analysis_caches_count_traffic() {
+        let mut p = Params::small_test();
+        p.topology = Some(crate::config::TopologySpec {
+            levels: vec![crate::config::TopologyLevelSpec {
+                name: "rack".into(),
+                size: 8,
+                outage_rate: 0.0,
+            }],
+        });
+        let h = WarmHandle::new(4);
+        let a = h.fetch_topology(&p).expect("topology configured");
+        let b = h.fetch_topology(&p).expect("topology configured");
+        assert_eq!(a, b);
+        let s = h.stats();
+        assert_eq!((s.topo_misses, s.topo_hits), (1, 1));
+        assert!(h.fetch_topology(&Params::small_test()).is_none());
+
+        let x = h.fetch_analysis(&p);
+        let y = h.fetch_analysis(&p);
+        assert_eq!(x, y);
+        assert_eq!(x, crate::analytical::analyze(&p));
+        let s = h.stats();
+        assert_eq!((s.prescreen_misses, s.prescreen_hits), (1, 1));
+    }
+}

@@ -1,0 +1,819 @@
+//! The CLI command implementations: a thin adapter from argv onto the
+//! serving pipeline (and, for the non-scenario subcommands, onto the
+//! library layers directly). `src/main.rs` is nothing but a dispatch
+//! table over these functions, so the binary and any embedder share one
+//! execution path — and `airesim scenario` is the degenerate serve
+//! request: one [`pipeline::ExecRequest`], run cold (default
+//! [`ExecCtrl`]: no gate, no cancel flag, no warm caches), rendered
+//! buffered. Output stays byte-identical to the pre-refactor monolith.
+
+use crate::analytical;
+use crate::config::{validate, yaml, Params};
+use crate::model::cluster::Simulation;
+use crate::model::policy::{
+    PolicySpec, CHECKPOINT_NAMES, FAILURE_NAMES, REPAIR_NAMES, SELECTION_NAMES,
+};
+use crate::report::{self, Format, RunRecord, Sink, SweepRecord, WhatIfRecord};
+use crate::runtime::AnalyticModel;
+use crate::scenario::{ScenarioKind, ScenarioOutcome};
+use crate::serve::{daemon, pipeline, router};
+use crate::stats::metrics;
+use crate::sweep::ctrl::ExecCtrl;
+use crate::sweep::{run_sweep, Sweep};
+use crate::trace::{Shared, Trace};
+use crate::util::cli::{render_help, Args, OptSpec};
+use crate::util::err::{Context, Result};
+use crate::{anyhow, bail};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+pub fn print_usage() {
+    println!(
+        "AIReSim — discrete event simulator for AI cluster reliability\n\n\
+         Subcommands:\n\
+         \x20 run            run one simulation and print its outputs\n\
+         \x20 sweep          one- or two-way parameter sweep with replications\n\
+         \x20 scenario       run a declarative scenario file (single/sweep/\n\
+         \x20                whatif/inject/compare/multi/optimize, policies by\n\
+         \x20                name; `multi:` runs a labeled study with a combined\n\
+         \x20                comparison report, `optimize:` screens knob\n\
+         \x20                importance or auto-tunes over a knob grid)\n\
+         \x20 serve          daemon: NDJSON scenario requests on stdin, streamed\n\
+         \x20                responses on stdout, warm plan caches across requests\n\
+         \x20 analytic       run the AOT analytical baseline (PJRT artifact)\n\
+         \x20 prescreen      analytically rank a sweep grid, DES the top-k\n\
+         \x20 whatif         scale one parameter by a factor, compare outputs\n\
+         \x20 list-params    show every sweepable parameter name\n\
+         \x20 list-policies  show every named policy per subsystem\n\
+         \x20 list-metrics   show every reported output metric (name, unit)\n\n\
+         run, sweep, whatif, and scenario accept `--format {{text|json|csv|ndjson}}`;\n\
+         prescreen accepts `--format {{text|json}}`.\n\
+         Run `airesim <cmd> --help` for per-command options."
+    );
+}
+
+/// A `--config` file, read and parsed exactly once per invocation
+/// (params, policies, and the sweep section all come from this one doc).
+struct ConfigDoc {
+    path: String,
+    doc: yaml::Value,
+}
+
+fn load_doc(args: &Args) -> Result<Option<ConfigDoc>> {
+    match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            let doc = yaml::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+            Ok(Some(ConfigDoc { path: path.to_string(), doc }))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Shared option handling: config `params:` + --set name=value[,...].
+fn load_params(doc: Option<&ConfigDoc>, args: &Args) -> Result<Params> {
+    let mut p = match doc {
+        Some(c) => validate::params_from_config(&c.doc)
+            .map_err(|e| anyhow!("{}: {e}", c.path))?,
+        None => Params::table1_defaults(),
+    };
+    if let Some(sets) = args.get("set") {
+        pipeline::apply_set_clauses(&mut p, sets).map_err(|e| anyhow!("{e}"))?;
+    }
+    validate::validate(&p)?;
+    Ok(p)
+}
+
+/// Config `policies:` section + `--policy` overrides, names validated
+/// but NOT built against any params — the sweep path checks every point
+/// with its overrides applied (`Sweep::validate`), where a point may
+/// supply the knob a policy needs (e.g. sweeping `checkpoint_interval`
+/// under `checkpoint: periodic`).
+fn load_policy_names(doc: Option<&ConfigDoc>, args: &Args) -> Result<PolicySpec> {
+    let mut spec = match doc {
+        Some(c) => crate::sweep::policies_from_doc(&c.doc)
+            .map_err(|e| anyhow!("{}: {e}", c.path))?,
+        None => PolicySpec::default(),
+    };
+    if let Some(clauses) = args.get("policy") {
+        pipeline::apply_policy_clauses(&mut spec, clauses).map_err(|e| anyhow!("{e}"))?;
+    }
+    Ok(spec)
+}
+
+/// Config `policies:` section + `--policy` overrides, validated to build
+/// against `p` (so an incompatible combo — e.g. `failure=gang` with
+/// Weibull clocks — is a clean CLI error, not a worker-thread panic).
+fn load_policies(doc: Option<&ConfigDoc>, args: &Args, p: &Params) -> Result<PolicySpec> {
+    let spec = load_policy_names(doc, args)?;
+    spec.build(p).map_err(|e| anyhow!("{e}"))?;
+    Ok(spec)
+}
+
+fn common_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "config", takes_value: true, help: "YAML config file" },
+        OptSpec {
+            name: "set",
+            takes_value: true,
+            help: "comma-separated name=value overrides (exprs ok: 2*1440)",
+        },
+        OptSpec {
+            name: "policy",
+            takes_value: true,
+            help: "policy overrides: axis=name,... (see list-policies)",
+        },
+        OptSpec { name: "help", takes_value: false, help: "show help" },
+    ]
+}
+
+fn format_opt() -> OptSpec {
+    OptSpec {
+        name: "format",
+        takes_value: true,
+        help: "output format: text|json|csv|ndjson (default text)",
+    }
+}
+
+fn trace_out_opt() -> OptSpec {
+    OptSpec {
+        name: "trace-out",
+        takes_value: true,
+        help: "write the event timeline as NDJSON to a file (- = stdout)",
+    }
+}
+
+/// Resolve `--format` (default: the legacy text tables).
+fn parse_format(args: &Args) -> Result<Format> {
+    match args.get("format") {
+        Some(s) => Format::parse(s).map_err(|e| anyhow!("{e}")),
+        None => Ok(Format::Text),
+    }
+}
+
+/// Resolve `--metric` against the registry (typos become a clean error
+/// naming every valid metric instead of an empty table).
+fn parse_metric(args: &Args) -> Result<&str> {
+    let name = args.get("metric").unwrap_or(metrics::DEFAULT_METRIC);
+    metrics::resolve(name).map_err(|e| anyhow!("{e}"))?;
+    Ok(name)
+}
+
+/// Dump an NDJSON event timeline to `path` (`-` = stdout).
+fn write_trace_out(path: &str, ndjson: &str) -> Result<()> {
+    if path == "-" {
+        print!("{ndjson}");
+        Ok(())
+    } else {
+        std::fs::write(path, ndjson).with_context(|| format!("writing trace to {path}"))
+    }
+}
+
+pub fn cmd_run(argv: &[String]) -> Result<()> {
+    let mut spec = common_spec();
+    spec.extend([
+        OptSpec { name: "seed", takes_value: true, help: "rng seed (default 42)" },
+        OptSpec { name: "trace", takes_value: false, help: "print the event trace" },
+        trace_out_opt(),
+        format_opt(),
+    ]);
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!("{}", render_help("airesim run", "run one simulation", &spec));
+        return Ok(());
+    }
+    let format = parse_format(&args)?;
+    // `--trace-out -` shares stdout with the report: fine for text (the
+    // legacy --trace shape) and ndjson (one object per line), but it
+    // would corrupt a json document or csv table.
+    if args.get("trace-out") == Some("-") && matches!(format, Format::Json | Format::Csv) {
+        bail!(
+            "--trace-out - mixes event lines into --format {} output; \
+             write the trace to a file instead",
+            format.name()
+        );
+    }
+    let doc = load_doc(&args)?;
+    let p = load_params(doc.as_ref(), &args)?;
+    let policies = load_policies(doc.as_ref(), &args, &p)?;
+    let seed = args.get_u64("seed")?.unwrap_or(42);
+
+    let mut sim = Simulation::from_spec(&p, &policies, crate::sim::rng::Rng::new(seed))
+        .map_err(|e| anyhow!("{e}"))?;
+    if args.flag("trace") {
+        sim = sim.with_trace();
+    }
+    // `--trace-out` goes through the Observer API: an event log shared
+    // with the simulation streams the timeline regardless of `--trace`.
+    let event_log = if args.get("trace-out").is_some() {
+        let log = Rc::new(RefCell::new(Trace::default()));
+        sim = sim.with_observer(Box::new(Shared(log.clone())));
+        Some(log)
+    } else {
+        None
+    };
+    let (out, mut trace) = sim.run_traced();
+
+    if let (Some(path), Some(log)) = (args.get("trace-out"), event_log) {
+        write_trace_out(path, &log.borrow().to_ndjson())?;
+        if path == "-" && format == Format::Ndjson {
+            // The timeline is already on stdout in the sink's own event
+            // schema; emitting it again from the record would double
+            // every event for downstream `jq` aggregations.
+            trace = Trace::default();
+        }
+    }
+    let record = RunRecord { seed, params: p, policies, outputs: out, trace };
+    print!("{}", format.sink().run(&record));
+    Ok(())
+}
+
+fn parse_values(s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(|x| yaml::eval_expr(x.trim()).map_err(|e| anyhow!("{e}")))
+        .collect()
+}
+
+pub fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let mut spec = common_spec();
+    spec.extend([
+        OptSpec { name: "param", takes_value: true, help: "swept parameter name" },
+        OptSpec { name: "values", takes_value: true, help: "comma-separated values" },
+        OptSpec { name: "param2", takes_value: true, help: "second axis (two-way)" },
+        OptSpec { name: "values2", takes_value: true, help: "second-axis values" },
+        OptSpec { name: "reps", takes_value: true, help: "replications (default 30)" },
+        OptSpec { name: "seed", takes_value: true, help: "master seed (default 42)" },
+        OptSpec { name: "threads", takes_value: true, help: "worker threads (0=auto)" },
+        OptSpec {
+            name: "metric",
+            takes_value: true,
+            help: "metric to report (default makespan_hours)",
+        },
+        OptSpec { name: "csv", takes_value: false, help: "legacy CSV flag (equivalent: --format csv)" },
+        OptSpec { name: "figure", takes_value: false, help: "emit Fig-2-style bar series" },
+        format_opt(),
+    ]);
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!("{}", render_help("airesim sweep", "parameter sweep", &spec));
+        return Ok(());
+    }
+    // Validate the cheap flags before any simulation work: a mistyped
+    // `--format`/`--metric` must not cost a full multi-replication sweep.
+    let format = match args.get("format") {
+        Some(s) => Some(Format::parse(s).map_err(|e| anyhow!("{e}"))?),
+        None => None,
+    };
+    if format.is_some() && (args.flag("figure") || args.flag("csv")) {
+        bail!("--format is mutually exclusive with the legacy --csv/--figure flags");
+    }
+    let doc = load_doc(&args)?;
+    let base = load_params(doc.as_ref(), &args)?;
+    let reps = args.get_usize("reps")?.unwrap_or(30);
+    let seed = args.get_u64("seed")?.unwrap_or(42);
+    let threads = args.get_usize("threads")?.unwrap_or(0);
+    let metric = parse_metric(&args)?;
+
+    let sweep = match (args.get("param"), args.get("values")) {
+        (Some(name), Some(values)) => {
+            let xs = parse_values(values)?;
+            match (args.get("param2"), args.get("values2")) {
+                (Some(n2), Some(v2)) => Sweep::two_way(
+                    &format!("{name} x {n2}"),
+                    name,
+                    &xs,
+                    n2,
+                    &parse_values(v2)?,
+                    reps,
+                    seed,
+                ),
+                _ => Sweep::one_way(name, name, &xs, reps, seed),
+            }
+        }
+        _ => sweep_from_config(doc.as_ref(), reps, seed)?,
+    }
+    .with_policies(load_policy_names(doc.as_ref(), &args)?);
+    // Policy axes (and any bad point) fail here, not in a worker thread —
+    // every point is built with its overrides applied, so a swept knob
+    // can satisfy a policy the bare base params would not.
+    sweep.validate(&base).map_err(|e| anyhow!("{e}"))?;
+
+    let result = run_sweep(&base, &sweep, threads);
+    match format {
+        Some(f) => print!("{}", f.sink().sweep(&SweepRecord::new(result, metric))),
+        None if args.flag("csv") => print!("{}", report::csv(&result, metric)),
+        None if args.flag("figure") => {
+            print!("{}", report::figure_series(&result, metric))
+        }
+        None => print!("{}", report::text_table(&result, metric)),
+    }
+    Ok(())
+}
+
+/// Run a declarative scenario file through the serving pipeline: the
+/// flags become one [`pipeline::ExecRequest`] — exactly what a serve
+/// request submits — run cold and rendered buffered.
+pub fn cmd_scenario(argv: &[String]) -> Result<()> {
+    let mut spec = common_spec();
+    spec.extend([
+        OptSpec { name: "seed", takes_value: true, help: "override the file's seed" },
+        OptSpec { name: "threads", takes_value: true, help: "worker threads (0=auto)" },
+        OptSpec {
+            name: "best-out",
+            takes_value: true,
+            help: "optimize tune: write the winner as a runnable single-scenario YAML (- = stdout)",
+        },
+        trace_out_opt(),
+        format_opt(),
+    ]);
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!(
+            "{}",
+            render_help("airesim scenario", "run a declarative scenario file", &spec)
+        );
+        return Ok(());
+    }
+    let format = parse_format(&args)?;
+    let path = args
+        .get("config")
+        .ok_or_else(|| anyhow!("scenario needs --config <file.yaml>"))?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading scenario {path}"))?;
+    let req = pipeline::ExecRequest {
+        doc: text,
+        format,
+        seed: args.get_u64("seed")?,
+        threads: args.get_usize("threads")?,
+        sets: args.get("set").map(str::to_string),
+        policies: args.get("policy").map(str::to_string),
+        trace: false,
+        route: pipeline::Route::Des,
+        origin: Some(path.to_string()),
+    };
+    let mut prep = pipeline::prepare(&req).map_err(|e| anyhow!("{e}"))?;
+
+    // `--trace-out` needs the event timeline captured; remember whether
+    // the file asked for a printed trace itself, so the stdout report
+    // stays byte-identical when it did not.
+    let mut forced_trace = false;
+    if let Some(out_path) = args.get("trace-out") {
+        // Same stdout-corruption guard as `airesim run`.
+        if out_path == "-" && matches!(format, Format::Json | Format::Csv) {
+            bail!(
+                "--trace-out - mixes event lines into --format {} output; \
+                 write the trace to a file instead",
+                format.name()
+            );
+        }
+        match &mut prep.scenario.kind {
+            ScenarioKind::Single { trace } | ScenarioKind::Inject { trace, .. } => {
+                forced_trace = !*trace;
+                *trace = true;
+            }
+            // A study of single-style children (one replication each)
+            // can dump one timeline per child; with replications > 1 a
+            // single file would be a misleading sample.
+            ScenarioKind::Multi(study) => {
+                if study.replications != 1 {
+                    bail!(
+                        "--trace-out on a multi study needs `replications: 1` \
+                         (single-style children; this study runs {})",
+                        study.replications
+                    );
+                }
+            }
+            _ => bail!(
+                "--trace-out applies to single/inject scenarios and \
+                 replications-1 multi studies (event timelines)"
+            ),
+        }
+    }
+
+    // `--best-out` asks for the tune winner as a runnable single-run
+    // YAML; validate the request before paying for the search.
+    if args.get("best-out").is_some() {
+        if !matches!(prep.scenario.kind, ScenarioKind::Optimize(_)) {
+            bail!("--best-out applies to `scenario: optimize` (mode: tune) only");
+        }
+        // Same stdout-corruption guard as `--trace-out -`: YAML lines
+        // would break a json document or csv table.
+        if args.get("best-out") == Some("-") && !matches!(format, Format::Text) {
+            bail!(
+                "--best-out - mixes YAML into --format {} output; \
+                 write the winner to a file instead",
+                format.name()
+            );
+        }
+        // The emitted file pins scalar params + policies; it cannot
+        // express a topology: or workload: block, so a winner written
+        // without them would silently run a different experiment.
+        if prep.scenario.params.topology.is_some() || prep.scenario.params.workload.is_some()
+        {
+            bail!(
+                "--best-out cannot express `topology:`/`workload:` blocks in the \
+                 emitted single-run YAML; drop --best-out or the block"
+            );
+        }
+    }
+
+    let result =
+        pipeline::run_prepared(&prep, &ExecCtrl::default()).map_err(|e| anyhow!("{e}"))?;
+    let pipeline::RunResult::Des(mut outcome) = result else {
+        unreachable!("route=des with no cancel flag always yields a DES outcome");
+    };
+    if let Some(out_path) = args.get("best-out") {
+        let ScenarioOutcome::Optimize(record) = &outcome else {
+            unreachable!("guarded above");
+        };
+        let best = record.best.as_ref().ok_or_else(|| {
+            anyhow!("--best-out needs `optimize.mode: tune` (screen ranks knobs, it picks no winner)")
+        })?;
+        if out_path == "-" {
+            print!("{}", best.yaml);
+        } else {
+            std::fs::write(out_path, &best.yaml)
+                .with_context(|| format!("writing best config to {out_path}"))?;
+        }
+    }
+    if let Some(out_path) = args.get("trace-out") {
+        match &mut outcome {
+            ScenarioOutcome::Single { trace, .. } | ScenarioOutcome::Inject { trace, .. } => {
+                write_trace_out(out_path, &trace.to_ndjson())?;
+                if forced_trace || (out_path == "-" && format == Format::Ndjson) {
+                    // Either the trace existed only to feed the timeline
+                    // file, or the timeline is already on stdout in the
+                    // same schema — keep the report single-copy.
+                    *trace = Trace::default();
+                }
+            }
+            ScenarioOutcome::Study(_) => {
+                // Replication 0 of every child, re-run traced (traces
+                // never perturb draws — the report above is untouched).
+                let ScenarioKind::Multi(study) = &prep.scenario.kind else {
+                    unreachable!("outcome kind matches scenario kind");
+                };
+                let timelines = crate::scenario::study::child_timelines(
+                    &prep.scenario.params,
+                    &prep.scenario.policies,
+                    study,
+                    prep.scenario.seed,
+                )
+                .map_err(|e| anyhow!("{e}"))?;
+                let mut ndjson = String::new();
+                for (label, trace) in &timelines {
+                    // A separator line names the child; the event lines
+                    // that follow use the standard timeline schema.
+                    let sep = crate::report::json::Json::obj([
+                        ("type", crate::report::json::Json::str("child-timeline")),
+                        ("label", crate::report::json::Json::str(label.as_str())),
+                    ]);
+                    ndjson.push_str(&(sep.render() + "\n"));
+                    ndjson.push_str(&trace.to_ndjson());
+                }
+                write_trace_out(out_path, &ndjson)?;
+            }
+            _ => unreachable!("guarded above"),
+        }
+    }
+    print!("{}", pipeline::render_outcome(prep.format, &prep.scenario, outcome));
+    Ok(())
+}
+
+/// The serve daemon: NDJSON requests on stdin, responses on stdout (see
+/// [`crate::serve::daemon`] for the protocol), or — with the `http`
+/// feature — a minimal HTTP POST endpoint.
+pub fn cmd_serve(argv: &[String]) -> Result<()> {
+    let spec = vec![
+        OptSpec {
+            name: "threads",
+            takes_value: true,
+            help: "worker slots shared across ALL concurrent requests (0=auto)",
+        },
+        OptSpec {
+            name: "fleet-cache",
+            takes_value: true,
+            help: "warm fleet-cache capacity, entries (default 256)",
+        },
+        OptSpec {
+            name: "http",
+            takes_value: true,
+            help: "serve HTTP POST on addr:port instead of stdin/stdout (needs the `http` feature)",
+        },
+        OptSpec { name: "help", takes_value: false, help: "show help" },
+    ];
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!(
+            "{}",
+            render_help("airesim serve", "NDJSON request daemon with warm caches", &spec)
+        );
+        return Ok(());
+    }
+    let opts = daemon::ServeOpts {
+        threads: args.get_usize("threads")?.unwrap_or(0),
+        fleet_cache: args.get_usize("fleet-cache")?.unwrap_or(256),
+    };
+    if let Some(_addr) = args.get("http") {
+        #[cfg(feature = "http")]
+        return crate::serve::http::serve(_addr, &opts);
+        #[cfg(not(feature = "http"))]
+        bail!(
+            "this build lacks the `http` feature (rebuild with --features http); \
+             stdin/stdout serving needs no feature"
+        );
+    }
+    let stdin = std::io::stdin();
+    daemon::serve_loop(stdin.lock(), std::io::stdout(), &opts)
+        .map_err(|e| anyhow!("serve io: {e}"))
+}
+
+pub fn cmd_list_metrics() -> Result<()> {
+    println!("{:<20} {:<6} {}", "metric", "unit", "description");
+    for m in metrics::REGISTRY {
+        println!("{:<20} {:<6} {}", m.name, m.unit, m.doc);
+    }
+    println!(
+        "\nselect a table's metric with `--metric <name>`; the json/ndjson \
+         sinks emit every metric"
+    );
+    Ok(())
+}
+
+pub fn cmd_list_policies() -> Result<()> {
+    println!("{:<12} {}", "axis", "named policies (first is default)");
+    println!("{:<12} {}", "selection", SELECTION_NAMES.join(", "));
+    println!("{:<12} {}", "repair", REPAIR_NAMES.join(", "));
+    println!("{:<12} {}", "checkpoint", CHECKPOINT_NAMES.join(", "));
+    println!("{:<12} {}", "failure", FAILURE_NAMES.join(", "));
+    println!(
+        "\nselect per-axis with `--policy axis=name,...` or a config's \
+         `policies:` section"
+    );
+    Ok(())
+}
+
+fn sweep_from_config(doc: Option<&ConfigDoc>, reps: usize, seed: u64) -> Result<Sweep> {
+    let c = doc.ok_or_else(|| {
+        anyhow!("sweep needs --param/--values or a config with a sweep: section")
+    })?;
+    crate::sweep::sweep_from_doc(&c.doc, reps, seed)
+        .map_err(|e| anyhow!("{}: {e}", c.path))
+}
+
+pub fn cmd_analytic(argv: &[String]) -> Result<()> {
+    let mut spec = common_spec();
+    spec.extend([
+        OptSpec { name: "artifact", takes_value: true, help: "HLO artifact path" },
+        OptSpec {
+            name: "rust-only",
+            takes_value: false,
+            help: "skip PJRT, use the pure-Rust mirror",
+        },
+    ]);
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!(
+            "{}",
+            render_help("airesim analytic", "analytical CTMC baseline", &spec)
+        );
+        return Ok(());
+    }
+    let doc = load_doc(&args)?;
+    let p = load_params(doc.as_ref(), &args)?;
+    let rust_out = analytical::analyze(&p);
+    println!("== analytical baseline (pure rust) ==");
+    // The router's rendering IS the legacy block (one format string for
+    // both the CLI and routed serve answers keeps them byte-identical).
+    print!("{}", router::analytic_text(&rust_out));
+
+    if !args.flag("rust-only") {
+        let path = args.get("artifact").unwrap_or(AnalyticModel::default_path());
+        // Degrade, don't die: without the `pjrt` feature (or artifact)
+        // the pure-Rust mirror above is the answer.
+        match AnalyticModel::load(path) {
+            Ok(model) => {
+                println!(
+                    "\n== analytical baseline (PJRT artifact, platform {}) ==",
+                    model.platform()
+                );
+                let pjrt_out = model.analyze_many(std::slice::from_ref(&p))?[0];
+                print!("{}", router::analytic_text(&pjrt_out));
+                let rel = (pjrt_out.makespan_est - rust_out.makespan_est).abs()
+                    / rust_out.makespan_est.max(1.0);
+                println!("\nmakespan_est rust-vs-pjrt relative delta: {rel:.2e}");
+            }
+            Err(e) => {
+                eprintln!("note: PJRT path unavailable ({e:#}); the pure-Rust mirror above stands");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The three-layer workflow in one command: the AOT CTMC artifact screens
+/// the whole sweep grid in one PJRT batch pass, then the DES validates
+/// only the most promising configurations (§II-C: analytical for breadth,
+/// DES for fidelity).
+pub fn cmd_prescreen(argv: &[String]) -> Result<()> {
+    let mut spec = common_spec();
+    spec.extend([
+        OptSpec { name: "param", takes_value: true, help: "swept parameter name" },
+        OptSpec { name: "values", takes_value: true, help: "comma-separated values" },
+        OptSpec { name: "param2", takes_value: true, help: "second axis (two-way)" },
+        OptSpec { name: "values2", takes_value: true, help: "second-axis values" },
+        OptSpec { name: "top", takes_value: true, help: "DES-validate the best k (default 3)" },
+        OptSpec { name: "reps", takes_value: true, help: "DES replications for the top-k (default 10)" },
+        OptSpec { name: "seed", takes_value: true, help: "master seed (default 42)" },
+        OptSpec { name: "artifact", takes_value: true, help: "HLO artifact path" },
+        OptSpec {
+            name: "format",
+            takes_value: true,
+            help: "output format: text|json (default text)",
+        },
+    ]);
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!(
+            "{}",
+            render_help("airesim prescreen", "analytical screen + DES top-k", &spec)
+        );
+        return Ok(());
+    }
+    // Validate before any simulation work (as the other commands do).
+    let format = parse_format(&args)?;
+    if !matches!(format, Format::Text | Format::Json) {
+        bail!("prescreen supports --format text or json");
+    }
+    // In json mode every progress/diagnostic line moves to stderr so
+    // stdout stays one parseable document; text output is unchanged.
+    let note = |line: &str| {
+        if format == Format::Json {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
+    };
+    let doc = load_doc(&args)?;
+    let base = load_params(doc.as_ref(), &args)?;
+    let policies = load_policies(doc.as_ref(), &args, &base)?;
+    let top = args.get_usize("top")?.unwrap_or(3);
+    let reps = args.get_usize("reps")?.unwrap_or(10);
+    let seed = args.get_u64("seed")?.unwrap_or(42);
+
+    // Build the grid (CLI axes or config sweep section).
+    let sweep = match (args.get("param"), args.get("values")) {
+        (Some(name), Some(values)) => {
+            let xs = parse_values(values)?;
+            match (args.get("param2"), args.get("values2")) {
+                (Some(n2), Some(v2)) => Sweep::two_way(
+                    &format!("{name} x {n2}"),
+                    name,
+                    &xs,
+                    n2,
+                    &parse_values(v2)?,
+                    reps,
+                    seed,
+                ),
+                _ => Sweep::one_way(name, name, &xs, reps, seed),
+            }
+        }
+        _ => sweep_from_config(doc.as_ref(), reps, seed)?,
+    };
+    // The CTMC screen cannot see policies: a `policies.*` axis would
+    // rank identically-parameterized points under distinct policy labels
+    // — silently wrong. Refuse instead of misinforming.
+    if sweep
+        .points
+        .iter()
+        .any(|pt| pt.overrides.iter().any(|(name, _)| name.starts_with("policies.")))
+    {
+        bail!(
+            "prescreen's analytical screen is policy-blind and cannot rank \
+             `policies.*` sweep axes; run them through `airesim sweep` or \
+             `airesim scenario` instead"
+        );
+    }
+    let configs: Vec<Params> = sweep.points.iter().map(|pt| pt.apply(&base)).collect();
+    if policies != PolicySpec::default() {
+        note(
+            "note: the CTMC screen is policy-blind; the selected policies apply \
+             to the DES validation only",
+        );
+    }
+
+    // Layer 2/1 via PJRT: one batched pass over the whole grid.
+    let path = args.get("artifact").unwrap_or(AnalyticModel::default_path());
+    let screened: Vec<crate::analytical::AnalyticOutputs> =
+        match AnalyticModel::load(path) {
+            Ok(model) => {
+                note(&format!(
+                    "screening {} configurations through the PJRT artifact ({})…",
+                    configs.len(),
+                    model.platform()
+                ));
+                model.analyze_many(&configs)?
+            }
+            Err(e) => {
+                eprintln!("note: PJRT artifact unavailable ({e:#}); using the Rust mirror");
+                configs.iter().map(crate::analytical::analyze).collect()
+            }
+        };
+
+    let mut order: Vec<usize> = (0..configs.len()).collect();
+    order.sort_by(|&a, &b| {
+        screened[a].makespan_est.partial_cmp(&screened[b].makespan_est).unwrap()
+    });
+
+    // Stream the ranking before the DES stage (text mode): a failing
+    // replication must not discard the screening work already done.
+    let ranking: Vec<(String, crate::analytical::AnalyticOutputs)> =
+        order.iter().map(|&i| (sweep.points[i].label(), screened[i])).collect();
+    if format == Format::Text {
+        print!("{}", report::PrescreenRecord::ranking_text(&ranking));
+    }
+
+    // Layer 3: DES-validate the survivors, then render the rest (text =
+    // the legacy tables, byte-identical).
+    let k = top.min(order.len());
+    let mut validated = Vec::with_capacity(k);
+    for &i in order.iter().take(k) {
+        let p = &configs[i];
+        let mut vals = Vec::with_capacity(reps);
+        for r in 0..reps {
+            let out = Simulation::from_spec(
+                p,
+                &policies,
+                crate::sim::rng::Rng::derived(seed, &[i as u64, r as u64]),
+            )
+            .map_err(|e| anyhow!("{e}"))?
+            .run();
+            vals.push(out.makespan / 60.0);
+        }
+        let s = crate::stats::Summary::from_values(&vals).unwrap();
+        validated.push((sweep.points[i].label(), s));
+    }
+    let record = report::PrescreenRecord { ranking, validated, reps };
+    match format {
+        Format::Json => print!("{}", record.to_json().render() + "\n"),
+        _ => print!("{}", record.validation_text()),
+    }
+    Ok(())
+}
+
+pub fn cmd_whatif(argv: &[String]) -> Result<()> {
+    let mut spec = common_spec();
+    spec.extend([
+        OptSpec { name: "param", takes_value: true, help: "parameter to scale" },
+        OptSpec { name: "factor", takes_value: true, help: "multiplier (e.g. 0.5, 2)" },
+        OptSpec { name: "reps", takes_value: true, help: "replications (default 30)" },
+        OptSpec { name: "seed", takes_value: true, help: "master seed" },
+        format_opt(),
+    ]);
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("help") {
+        print!("{}", render_help("airesim whatif", "what-if scenario", &spec));
+        return Ok(());
+    }
+    let format = parse_format(&args)?;
+    let doc = load_doc(&args)?;
+    let base = load_params(doc.as_ref(), &args)?;
+    let name = args.get("param").ok_or_else(|| anyhow!("--param required"))?;
+    let factor = args
+        .get_f64("factor")?
+        .ok_or_else(|| anyhow!("--factor required"))?;
+    let reps = args.get_usize("reps")?.unwrap_or(30);
+    let seed = args.get_u64("seed")?.unwrap_or(42);
+
+    let current = base
+        .get_by_name(name)
+        .ok_or_else(|| anyhow!("unknown parameter `{name}`"))?;
+    let scaled = current * factor;
+    let sweep = Sweep::one_way(
+        &format!("what-if: {name} x{factor}"),
+        name,
+        &[current, scaled],
+        reps,
+        seed,
+    )
+    .with_policies(load_policies(doc.as_ref(), &args, &base)?);
+    let result = run_sweep(&base, &sweep, 0);
+    let record = WhatIfRecord {
+        result,
+        param: name.to_string(),
+        factor,
+        metric: metrics::DEFAULT_METRIC.to_string(),
+    };
+    print!("{}", format.sink().whatif(&record));
+    Ok(())
+}
+
+pub fn cmd_list_params() -> Result<()> {
+    let p = Params::table1_defaults();
+    println!("{:<28} {:>16}", "parameter", "Table-I default");
+    for name in Params::sweepable_names() {
+        println!("{:<28} {:>16.6}", name, p.get_by_name(name).unwrap());
+    }
+    Ok(())
+}

@@ -1,0 +1,339 @@
+//! `airesim serve`: an NDJSON request daemon over the shared pipeline.
+//!
+//! One JSON object per stdin line, one JSON object per stdout line:
+//!
+//! ```text
+//! → {"id":"a","scenario":"scenario: single\n…","format":"text","seed":7}
+//! ← {"id":"a","accepted":true}
+//! ← {"id":"a","chunk":"== scenario: single [single] ==\n"}
+//! ← …                         (chunk concatenation == the CLI's stdout)
+//! ← {"id":"a","done":true,"routed":false,"cancelled":false,
+//!    "fingerprint":"…","cache":{"fleet_hits":0,…}}
+//! → {"cancel":"a"}            (control message: flip a's cancel flag)
+//! ← {"id":"a","cancelling":true}
+//! ```
+//!
+//! Request fields: `id` (required; string or integer), `scenario`
+//! (required; the YAML document as one JSON string), and optional
+//! `format`, `seed`, `threads`, `set`, `policy`, `trace`, `route`
+//! (`"des"` default / `"auto"` enables the prescreen router) — the same
+//! overrides `airesim scenario` accepts as flags.
+//!
+//! Concurrency: every request runs on its own handler thread, but all
+//! requests share ONE worker-slot [`Gate`] sized to `--threads` and one
+//! [`WarmHandle`] — N concurrent requests multiplex fairly over the
+//! machine instead of each spawning a full-width pool, and repeated
+//! configs skip fleet/topology/prescreen rebuilds. A malformed line or a
+//! failed run answers with an `error` object; the loop never dies.
+//! Responses from concurrent requests interleave by line — readers
+//! demultiplex on `id`.
+
+use crate::report::json::Json;
+use crate::report::Format;
+use crate::serve::cache::{CacheStats, WarmHandle};
+use crate::serve::pipeline::{self, ExecRequest, Route, RunResult};
+use crate::serve::router;
+use crate::sweep::ctrl::{ExecCtrl, Gate};
+use crate::testkit::parse_json;
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Daemon configuration (the `airesim serve` flags).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Shared worker slots across ALL concurrent requests (0 = auto).
+    pub threads: usize,
+    /// Warm fleet-cache capacity, in entries.
+    pub fleet_cache: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { threads: 0, fleet_cache: 256 }
+    }
+}
+
+/// Resolve a `--threads` value the way the worker pools do.
+pub(crate) fn resolve_threads(threads: usize) -> usize {
+    match threads {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+}
+
+/// One parsed stdin line.
+enum Msg {
+    Run { id: String, req: ExecRequest },
+    Cancel(String),
+}
+
+fn jget<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    match j {
+        Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+        _ => None,
+    }
+}
+
+fn jstr(j: &Json) -> Option<&str> {
+    match j {
+        Json::Str(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+/// Request ids may arrive as strings or integers; both address the same
+/// id space (`7` and `"7"` are one request).
+fn jid(j: &Json) -> Option<String> {
+    match j {
+        Json::Str(s) => Some(s.clone()),
+        Json::Num(n) if *n == n.trunc() && n.abs() < 9e15 => Some(format!("{}", *n as i64)),
+        _ => None,
+    }
+}
+
+/// Decode one run request (everything but `id`/`cancel`). Shared with
+/// the HTTP adapter, whose POST body is this same object minus `id`.
+pub(crate) fn exec_request_from_json(j: &Json) -> Result<ExecRequest, String> {
+    let doc = jget(j, "scenario")
+        .and_then(jstr)
+        .ok_or("request needs `scenario` (the YAML document as a JSON string)")?
+        .to_string();
+    let format = match jget(j, "format").and_then(jstr) {
+        Some(s) => Format::parse(s)?,
+        None => Format::Text,
+    };
+    let route = match jget(j, "route").and_then(jstr) {
+        None | Some("des") => Route::Des,
+        Some("auto") => Route::Auto,
+        Some(other) => return Err(format!("unknown route `{other}` (expected des or auto)")),
+    };
+    let num = |key: &str| -> Result<Option<f64>, String> {
+        match jget(j, key) {
+            None => Ok(None),
+            Some(Json::Num(n)) => Ok(Some(*n)),
+            Some(_) => Err(format!("`{key}` must be a number")),
+        }
+    };
+    let trace = match jget(j, "trace") {
+        None => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => return Err("`trace` must be a boolean".into()),
+    };
+    Ok(ExecRequest {
+        doc,
+        format,
+        seed: num("seed")?.map(|v| v as u64),
+        threads: num("threads")?.map(|v| v as usize),
+        sets: jget(j, "set").and_then(jstr).map(str::to_string),
+        policies: jget(j, "policy").and_then(jstr).map(str::to_string),
+        trace,
+        route,
+        origin: None,
+    })
+}
+
+fn parse_line(line: &str) -> Result<Msg, String> {
+    let j = parse_json(line).map_err(|e| format!("bad request JSON: {e}"))?;
+    if let Some(target) = jget(&j, "cancel") {
+        let id = jid(target).ok_or("`cancel` must name a request id")?;
+        return Ok(Msg::Cancel(id));
+    }
+    let id = jget(&j, "id")
+        .and_then(jid)
+        .ok_or("request needs an `id` (string or integer)")?;
+    let req = exec_request_from_json(&j).map_err(|e| format!("request `{id}`: {e}"))?;
+    Ok(Msg::Run { id, req })
+}
+
+/// Write one response line (all responses from all handler threads
+/// funnel through this lock, so lines never interleave mid-object).
+fn emit<W: Write>(out: &Mutex<W>, line: &Json) -> std::io::Result<()> {
+    let mut w = out.lock().expect("response writer lock");
+    writeln!(w, "{}", line.render())?;
+    w.flush()
+}
+
+fn error_line(id: Option<&str>, msg: &str) -> Json {
+    let id_field = match id {
+        Some(id) => Json::str(id),
+        None => Json::Null,
+    };
+    Json::obj([("id", id_field), ("error", Json::str(msg))])
+}
+
+fn done_line(
+    id: &str,
+    cancelled: bool,
+    routed: bool,
+    fingerprint: u64,
+    before: CacheStats,
+    after: CacheStats,
+) -> Json {
+    // Deltas over the shared cache while this request ran; with
+    // concurrent requests in flight they are attributions, not exact
+    // per-request counts (the counters themselves are daemon-global).
+    let cache = Json::obj([
+        ("fleet_hits", (after.fleet_hits - before.fleet_hits).into()),
+        ("fleet_misses", (after.fleet_misses - before.fleet_misses).into()),
+        ("topo_hits", (after.topo_hits - before.topo_hits).into()),
+        ("topo_misses", (after.topo_misses - before.topo_misses).into()),
+        ("prescreen_hits", (after.prescreen_hits - before.prescreen_hits).into()),
+        ("prescreen_misses", (after.prescreen_misses - before.prescreen_misses).into()),
+    ]);
+    Json::obj([
+        ("id", Json::str(id)),
+        ("done", true.into()),
+        ("routed", routed.into()),
+        ("cancelled", cancelled.into()),
+        ("fingerprint", Json::str(&format!("{fingerprint:016x}"))),
+        ("cache", cache),
+    ])
+}
+
+/// Run one accepted request to completion and stream its responses.
+fn handle<W: Write + Send>(
+    id: String,
+    req: ExecRequest,
+    ec: ExecCtrl,
+    out: &Mutex<W>,
+    warm: &WarmHandle,
+    cancels: &Mutex<HashMap<String, Arc<AtomicBool>>>,
+) {
+    let before = warm.stats();
+    let run = pipeline::prepare(&req)
+        .and_then(|prep| pipeline::run_prepared(&prep, &ec).map(|r| (prep, r)));
+    // Writer errors (consumer hung up) end this response quietly; the
+    // accept loop keeps serving whoever is still listening.
+    let _ = match run {
+        Err(e) => emit(out, &error_line(Some(&id), &e)),
+        Ok((prep, result)) => {
+            let cancelled = matches!(result, RunResult::Cancelled);
+            let routed = matches!(result, RunResult::Analytic(_));
+            let mut io = Ok(());
+            {
+                let mut sink_chunk = |chunk: &str| {
+                    if io.is_ok() {
+                        io = emit(
+                            out,
+                            &Json::obj([("id", Json::str(&id)), ("chunk", Json::str(chunk))]),
+                        );
+                    }
+                };
+                match result {
+                    RunResult::Cancelled => {}
+                    RunResult::Analytic(o) => {
+                        for chunk in router::render(prep.format, &o).split_inclusive('\n') {
+                            sink_chunk(chunk);
+                        }
+                    }
+                    RunResult::Des(outcome) => {
+                        let record = pipeline::record(&prep.scenario, outcome);
+                        prep.format.sink().scenario_stream(&record, &mut sink_chunk);
+                    }
+                }
+            }
+            io.and_then(|_| {
+                let after = warm.stats();
+                emit(out, &done_line(&id, cancelled, routed, prep.fingerprint, before, after))
+            })
+        }
+    };
+    cancels.lock().expect("cancel registry lock").remove(&id);
+}
+
+/// The accept loop: read NDJSON requests from `reader` until EOF,
+/// streaming responses to `writer`. Generic over the streams so tests
+/// drive it with in-memory buffers; `airesim serve` passes stdin/stdout.
+pub fn serve_loop<R, W>(reader: R, writer: W, opts: &ServeOpts) -> std::io::Result<()>
+where
+    R: BufRead,
+    W: Write + Send,
+{
+    let warm = WarmHandle::new(opts.fleet_cache);
+    let gate = Gate::new(resolve_threads(opts.threads));
+    let out = Mutex::new(writer);
+    let cancels: Mutex<HashMap<String, Arc<AtomicBool>>> = Mutex::new(HashMap::new());
+    let (out, cancels, warm_ref, gate_ref) = (&out, &cancels, &warm, &gate);
+
+    std::thread::scope(|s| -> std::io::Result<()> {
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_line(line.trim()) {
+                Err(e) => emit(out, &error_line(None, &e))?,
+                Ok(Msg::Cancel(id)) => {
+                    let known = match cancels.lock().expect("cancel registry lock").get(&id) {
+                        Some(flag) => {
+                            flag.store(true, Ordering::Relaxed);
+                            true
+                        }
+                        None => false,
+                    };
+                    if known {
+                        emit(
+                            out,
+                            &Json::obj([("id", Json::str(&id)), ("cancelling", true.into())]),
+                        )?;
+                    } else {
+                        emit(
+                            out,
+                            &error_line(Some(&id), "no active request with this id"),
+                        )?;
+                    }
+                }
+                Ok(Msg::Run { id, req }) => {
+                    let cancel = Arc::new(AtomicBool::new(false));
+                    cancels
+                        .lock()
+                        .expect("cancel registry lock")
+                        .insert(id.clone(), Arc::clone(&cancel));
+                    emit(out, &Json::obj([("id", Json::str(&id)), ("accepted", true.into())]))?;
+                    let ec = ExecCtrl {
+                        gate: Some(Arc::clone(gate_ref)),
+                        cancel: Some(cancel),
+                        warm: Some(warm_ref.clone()),
+                    };
+                    s.spawn(move || handle(id, req, ec, out, warm_ref, cancels));
+                }
+            }
+        }
+        Ok(())
+        // The scope joins every in-flight handler before returning, so
+        // EOF on stdin still flushes every response.
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_accept_strings_and_integers() {
+        assert_eq!(jid(&Json::str("a7")), Some("a7".into()));
+        assert_eq!(jid(&Json::Num(7.0)), Some("7".into()));
+        assert_eq!(jid(&Json::Num(7.5)), None);
+        assert_eq!(jid(&Json::Null), None);
+    }
+
+    #[test]
+    fn parse_line_classifies_messages() {
+        assert!(matches!(parse_line(r#"{"cancel":"a"}"#), Ok(Msg::Cancel(id)) if id == "a"));
+        let run = parse_line(r#"{"id":1,"scenario":"scenario: single\n","route":"auto"}"#);
+        match run {
+            Ok(Msg::Run { id, req }) => {
+                assert_eq!(id, "1");
+                assert_eq!(req.route, Route::Auto);
+                assert_eq!(req.format, Format::Text);
+            }
+            _ => panic!("expected a run message"),
+        }
+        assert!(parse_line("not json").is_err());
+        assert!(parse_line(r#"{"scenario":"x"}"#).unwrap_err().contains("id"));
+        assert!(parse_line(r#"{"id":"a"}"#).unwrap_err().contains("scenario"));
+        assert!(parse_line(r#"{"id":"a","scenario":"x","route":"maybe"}"#).is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal HTTP adapter over the serve pipeline (feature `http`).
+//!
+//! `airesim serve --http 127.0.0.1:8321` accepts `POST /` with a JSON
+//! body in the daemon's request schema minus `id` (one connection is one
+//! request, so ids are redundant) and answers `200` with the rendered
+//! output — the same bytes the stdin/stdout daemon would stream as
+//! `chunk` payloads. Hand-rolled HTTP/1.0 over `std::net::TcpListener`:
+//! the core build stays zero-dependency, and the default build (feature
+//! off) exposes no network surface at all.
+
+use crate::report::json::Json;
+use crate::serve::cache::WarmHandle;
+use crate::serve::daemon::{self, ServeOpts};
+use crate::serve::pipeline::{self, RunResult};
+use crate::sweep::ctrl::{ExecCtrl, Gate};
+use crate::testkit::parse_json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Bind `addr` and serve until the process is killed. Connections are
+/// handled on scoped threads sharing one warm cache and one worker-slot
+/// gate with each other (exactly the stdin daemon's fairness model).
+pub fn serve(addr: &str, opts: &ServeOpts) -> crate::util::err::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("airesim serve: listening on http://{addr}/ (POST a request object)");
+    let warm = WarmHandle::new(opts.fleet_cache);
+    let gate = Gate::new(daemon::resolve_threads(opts.threads));
+    std::thread::scope(|s| {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let warm = warm.clone();
+            let gate = Arc::clone(&gate);
+            s.spawn(move || {
+                let _ = handle(stream, &warm, &gate);
+            });
+        }
+    });
+    Ok(())
+}
+
+fn handle(mut stream: TcpStream, warm: &WarmHandle, gate: &Arc<Gate>) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 {
+            break;
+        }
+        let header = header.trim();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    if !request_line.starts_with("POST ") {
+        return respond(
+            &mut stream,
+            405,
+            "Method Not Allowed",
+            "POST a JSON request object (the serve schema minus `id`)\n",
+        );
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    match run_body(&String::from_utf8_lossy(&body), warm, gate) {
+        Ok(payload) => respond(&mut stream, 200, "OK", &payload),
+        Err(e) => respond(
+            &mut stream,
+            400,
+            "Bad Request",
+            &(Json::obj([("error", Json::str(&e))]).render() + "\n"),
+        ),
+    }
+}
+
+fn run_body(body: &str, warm: &WarmHandle, gate: &Arc<Gate>) -> Result<String, String> {
+    let j = parse_json(body.trim()).map_err(|e| format!("bad request JSON: {e}"))?;
+    let req = daemon::exec_request_from_json(&j)?;
+    let prep = pipeline::prepare(&req)?;
+    let ec = ExecCtrl {
+        gate: Some(Arc::clone(gate)),
+        cancel: None, // cancellation = closing the connection, no flag
+        warm: Some(warm.clone()),
+    };
+    let result = pipeline::run_prepared(&prep, &ec)?;
+    debug_assert!(!matches!(result, RunResult::Cancelled), "no cancel flag installed");
+    Ok(pipeline::render(&prep, result))
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    code: u16,
+    reason: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.0 {code} {reason}\r\nContent-Type: application/x-ndjson\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}

@@ -1,0 +1,36 @@
+//! The serving layer: one execution path from the CLI to `airesim
+//! serve`.
+//!
+//! Every way of running an experiment funnels through the same shape:
+//!
+//! ```text
+//! ExecRequest { scenario doc, format, seed, … }
+//!     │  pipeline::prepare      — parse, overrides, validate, fingerprint
+//!     ▼
+//! Prepared { Scenario, Format, fingerprint, route }
+//!     │  pipeline::run_prepared — router fast path or the DES, under an
+//!     ▼                           ambient ExecCtrl (gate/cancel/warm)
+//! RunResult ── pipeline::render ─▶ the output text (a stream of records)
+//! ```
+//!
+//! - [`cli`] is the thin adapter the `airesim` binary dispatches to: the
+//!   `scenario` subcommand builds one [`pipeline::ExecRequest`] and runs
+//!   it cold (no gate, no cancel, no warm cache), byte-identical to the
+//!   pre-refactor CLI.
+//! - [`daemon`] is `airesim serve`: NDJSON requests on stdin, streamed
+//!   NDJSON responses per request id, per-request cancellation, fair
+//!   multiplexing of concurrent requests over one shared worker budget.
+//! - [`cache`] holds the warm plan caches (fleets, topologies, CTMC
+//!   prescreen answers) keyed by a canonical config fingerprint.
+//! - [`router`] answers prescreen-routable requests analytically without
+//!   touching the DES.
+//! - [`http`] (feature `http`) exposes the same pipeline over a minimal
+//!   HTTP/1.0 POST endpoint; the default build has no network surface.
+
+pub mod cache;
+pub mod cli;
+pub mod daemon;
+#[cfg(feature = "http")]
+pub mod http;
+pub mod pipeline;
+pub mod router;

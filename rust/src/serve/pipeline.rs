@@ -1,0 +1,314 @@
+//! The one execution path: `ExecRequest → Prepared → RunResult → text`.
+//!
+//! Both entrypoints — `airesim scenario` (one cold request, exits) and
+//! `airesim serve` (many concurrent requests over shared warm state) —
+//! build an [`ExecRequest`] and walk the same three stages. The CLI path
+//! runs with the default (all-`None`) [`ExecCtrl`], which makes every
+//! serving hook a no-op, so its output is byte-identical to the
+//! pre-refactor monolithic command.
+
+use crate::config::{validate, yaml, Params};
+use crate::model::PolicySpec;
+use crate::report::{Format, ScenarioRecord, Sink};
+use crate::scenario::{Scenario, ScenarioKind, ScenarioOutcome};
+use crate::serve::{cache, router};
+use crate::sweep::ctrl::{self, ExecCtrl};
+
+/// Whether a request may be answered analytically ([`Route::Auto`], the
+/// serve default for `route: auto`) or must run the DES ([`Route::Des`],
+/// the CLI's behavior and the serve default).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    Des,
+    Auto,
+}
+
+/// One unit of work, as submitted by the CLI or a serve request: the
+/// scenario document plus the overrides both front ends accept.
+#[derive(Clone, Debug)]
+pub struct ExecRequest {
+    /// The scenario YAML text (a file's contents or a request field).
+    pub doc: String,
+    pub format: Format,
+    /// Override the document's `seed:`.
+    pub seed: Option<u64>,
+    /// Override the document's `threads:`.
+    pub threads: Option<usize>,
+    /// `--set`-style `name=value,...` parameter overrides.
+    pub sets: Option<String>,
+    /// `--policy`-style `axis=name,...` overrides.
+    pub policies: Option<String>,
+    /// Force the event timeline into the record (serve's `trace: true`;
+    /// single/inject scenarios only).
+    pub trace: bool,
+    pub route: Route,
+    /// Label prefixed onto document parse errors (the CLI passes the
+    /// file path; serve passes nothing — errors read as the doc's own).
+    pub origin: Option<String>,
+}
+
+/// A validated execution plan: the scenario to run, how to render it,
+/// and the canonical fingerprint of its parameter set (the warm caches'
+/// key, reported in serve `done` responses).
+pub struct Prepared {
+    pub scenario: Scenario,
+    pub format: Format,
+    pub fingerprint: u64,
+    pub route: Route,
+}
+
+/// Apply `name=value[,name=value...]` clauses onto params (the CLI's
+/// `--set`, serve's `"set"` field).
+pub fn apply_set_clauses(p: &mut Params, clauses: &str) -> Result<(), String> {
+    for clause in clauses.split(',') {
+        let (name, value) = clause
+            .split_once('=')
+            .ok_or_else(|| format!("--set expects name=value, got `{clause}`"))?;
+        let v = yaml::eval_expr(value).map_err(|e| format!("{name}: {e}"))?;
+        if !p.set_by_name(name.trim(), v) {
+            return Err(format!("unknown parameter `{name}` in --set"));
+        }
+    }
+    Ok(())
+}
+
+/// Apply `axis=name[,axis=name...]` clauses onto a policy spec (the
+/// CLI's `--policy`, serve's `"policy"` field).
+pub fn apply_policy_clauses(spec: &mut PolicySpec, clauses: &str) -> Result<(), String> {
+    for clause in clauses.split(',') {
+        let (axis, name) = clause
+            .split_once('=')
+            .ok_or_else(|| format!("--policy expects axis=name, got `{clause}`"))?;
+        spec.set(axis.trim(), name.trim())?;
+    }
+    Ok(())
+}
+
+/// Stage 1: parse the document, layer the request's overrides on top
+/// (same order and same validation points as the historical CLI), and
+/// fingerprint the resulting parameter set.
+pub fn prepare(req: &ExecRequest) -> Result<Prepared, String> {
+    let mut scenario = Scenario::from_yaml(&req.doc).map_err(|e| match &req.origin {
+        Some(origin) => format!("{origin}: {e}"),
+        None => e,
+    })?;
+
+    if let Some(sets) = &req.sets {
+        apply_set_clauses(&mut scenario.params, sets)?;
+        validate::validate(&scenario.params).map_err(|e| e.to_string())?;
+    }
+    if let Some(clauses) = &req.policies {
+        apply_policy_clauses(&mut scenario.policies, clauses)?;
+        // Sweep scenarios validate per point (`Sweep::validate`) and
+        // studies per child, both with overrides applied; optimize
+        // resolves every grid point the same way. Everything else runs
+        // the base params verbatim and must build against them now.
+        if !matches!(
+            scenario.kind,
+            ScenarioKind::Sweep(_) | ScenarioKind::Multi(_) | ScenarioKind::Optimize(_)
+        ) {
+            scenario.policies.build(&scenario.params)?;
+        }
+    }
+    if let Some(seed) = req.seed {
+        scenario.seed = seed;
+    }
+    if let Some(threads) = req.threads {
+        scenario.threads = threads;
+    }
+    if req.trace {
+        match &mut scenario.kind {
+            ScenarioKind::Single { trace } | ScenarioKind::Inject { trace, .. } => {
+                *trace = true;
+            }
+            _ => {
+                return Err(
+                    "`trace` applies to single/inject scenarios (event timelines)".into()
+                )
+            }
+        }
+    }
+
+    let fingerprint = cache::fingerprint(&scenario.params);
+    Ok(Prepared { scenario, format: req.format, fingerprint, route: req.route })
+}
+
+/// How a prepared request resolved.
+pub enum RunResult {
+    /// The DES (or analytic-vs-DES compare, study, …) ran to completion.
+    Des(ScenarioOutcome),
+    /// The prescreen router answered analytically; the DES never ran.
+    Analytic(crate::analytical::AnalyticOutputs),
+    /// The request's cancel flag was set before or during the run.
+    Cancelled,
+}
+
+/// Stage 2: execute the plan under `ec`. The control travels ambiently
+/// (see [`crate::sweep::ctrl`]): worker pools started anywhere below
+/// `Scenario::run` pick up the gate, the cancel flag, and the warm
+/// caches without any signature changes on the hot path.
+pub fn run_prepared(prep: &Prepared, ec: &ExecCtrl) -> Result<RunResult, String> {
+    if ec.is_cancelled() {
+        return Ok(RunResult::Cancelled);
+    }
+    if prep.route == Route::Auto && router::routable(&prep.scenario) {
+        let out = match &ec.warm {
+            Some(h) => h.fetch_analysis(&prep.scenario.params),
+            None => crate::analytical::analyze(&prep.scenario.params),
+        };
+        return Ok(RunResult::Analytic(out));
+    }
+    let outcome = ctrl::with(ec.clone(), || prep.scenario.run())?;
+    if ec.is_cancelled() {
+        return Ok(RunResult::Cancelled);
+    }
+    Ok(RunResult::Des(outcome))
+}
+
+/// Stage 3 for buffered callers: the complete output text. (The daemon
+/// streams instead, via [`Sink::scenario_stream`] — concatenation of its
+/// chunks equals this string.)
+pub fn render(prep: &Prepared, result: RunResult) -> String {
+    match result {
+        RunResult::Des(outcome) => render_outcome(prep.format, &prep.scenario, outcome),
+        RunResult::Analytic(out) => router::render(prep.format, &out),
+        RunResult::Cancelled => String::new(),
+    }
+}
+
+/// Render a DES outcome exactly as the CLI prints it.
+pub fn render_outcome(
+    format: Format,
+    scenario: &Scenario,
+    outcome: ScenarioOutcome,
+) -> String {
+    format.sink().scenario(&scenario.record_owned(outcome))
+}
+
+/// The record for a DES outcome (the daemon renders it through the
+/// streaming sink API).
+pub fn record(scenario: &Scenario, outcome: ScenarioOutcome) -> ScenarioRecord {
+    scenario.record_owned(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::cache::WarmHandle;
+    use crate::sweep::ctrl::Gate;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    const DOC: &str = "scenario: single\nseed: 7\nparams:\n  job_size: 32\n  working_pool: 40\n  spare_pool: 8\n  warm_standbys: 4\n  job_len: 1440\n  random_failure_rate: 0.5/1440\n  systematic_failure_rate: 2.5/1440\n";
+
+    fn req(doc: &str, format: Format) -> ExecRequest {
+        ExecRequest {
+            doc: doc.to_string(),
+            format,
+            seed: None,
+            threads: None,
+            sets: None,
+            policies: None,
+            trace: false,
+            route: Route::Des,
+            origin: None,
+        }
+    }
+
+    /// The CLI's historical path, inlined: parse → run → buffered sink.
+    fn cli_reference(doc: &str, format: Format) -> String {
+        let sc = Scenario::from_yaml(doc).unwrap();
+        let outcome = sc.run().unwrap();
+        format.sink().scenario(&sc.record_owned(outcome))
+    }
+
+    #[test]
+    fn pipeline_matches_the_cli_path_in_every_format() {
+        for format in [Format::Text, Format::Json, Format::Csv, Format::Ndjson] {
+            let prep = prepare(&req(DOC, format)).unwrap();
+            let result = run_prepared(&prep, &ExecCtrl::default()).unwrap();
+            assert_eq!(
+                render(&prep, result),
+                cli_reference(DOC, format),
+                "format {}",
+                format.name()
+            );
+        }
+    }
+
+    #[test]
+    fn overrides_apply_in_cli_order() {
+        let mut r = req(DOC, Format::Text);
+        r.seed = Some(99);
+        r.sets = Some("recovery_time=5".into());
+        r.policies = Some("selection=locality".into());
+        let prep = prepare(&r).unwrap();
+        assert_eq!(prep.scenario.seed, 99);
+        assert_eq!(prep.scenario.params.recovery_time, 5.0);
+        assert_eq!(prep.scenario.policies.selection, "locality");
+        // The fingerprint sees the overridden params, not the document's.
+        let base = prepare(&req(DOC, Format::Text)).unwrap();
+        assert_ne!(prep.fingerprint, base.fingerprint);
+    }
+
+    #[test]
+    fn origin_prefixes_parse_errors_only() {
+        let mut r = req("scenario: frobnicate\n", Format::Text);
+        r.origin = Some("demo.yaml".into());
+        let e = prepare(&r).unwrap_err();
+        assert!(e.starts_with("demo.yaml: "), "{e}");
+        // Override errors are not path-prefixed (CLI parity).
+        let mut r = req(DOC, Format::Text);
+        r.origin = Some("demo.yaml".into());
+        r.sets = Some("bogus=1".into());
+        let e = prepare(&r).unwrap_err();
+        assert!(e.contains("unknown parameter `bogus`") && !e.contains("demo.yaml"), "{e}");
+    }
+
+    #[test]
+    fn warm_rerun_is_byte_identical_and_hits_the_fleet_cache() {
+        let warm = WarmHandle::new(64);
+        let ec = ExecCtrl { warm: Some(warm.clone()), ..ExecCtrl::default() };
+        let run = || {
+            let prep = prepare(&req(DOC, Format::Text)).unwrap();
+            let result = run_prepared(&prep, &ec).unwrap();
+            render(&prep, result)
+        };
+        let cold = run();
+        let misses = warm.stats().fleet_misses;
+        let hot = run();
+        assert_eq!(cold, hot, "cache hits must not perturb the stream");
+        let s = warm.stats();
+        assert_eq!(s.fleet_misses, misses, "second run rebuilds nothing");
+        assert!(s.fleet_hits > 0, "second run must hit the fleet cache");
+    }
+
+    #[test]
+    fn cancelled_before_start_runs_nothing_and_holds_no_slots() {
+        let gate = Gate::new(2);
+        let ec = ExecCtrl {
+            gate: Some(Arc::clone(&gate)),
+            cancel: Some(Arc::new(AtomicBool::new(true))),
+            ..ExecCtrl::default()
+        };
+        let prep = prepare(&req(DOC, Format::Text)).unwrap();
+        assert!(matches!(run_prepared(&prep, &ec).unwrap(), RunResult::Cancelled));
+        assert_eq!(gate.available(), 2, "cancellation must leave every slot free");
+    }
+
+    #[test]
+    fn auto_route_answers_analytically_des_route_does_not() {
+        let mut r = req(DOC, Format::Text);
+        r.route = Route::Auto;
+        let prep = prepare(&r).unwrap();
+        assert!(matches!(
+            run_prepared(&prep, &ExecCtrl::default()).unwrap(),
+            RunResult::Analytic(_)
+        ));
+        let prep = prepare(&req(DOC, Format::Text)).unwrap();
+        assert!(matches!(
+            run_prepared(&prep, &ExecCtrl::default()).unwrap(),
+            RunResult::Des(_)
+        ));
+    }
+}

@@ -1,0 +1,170 @@
+//! The prescreen fast-path router: answer analytically when the CTMC
+//! screen is valid, fall through to the DES otherwise.
+//!
+//! The analytical layer models the paper's base dynamics — one
+//! gang-scheduled job under exponential failure clocks with the default
+//! policies, no checkpointing, no topology/workload extensions, no
+//! repair-capacity queueing. Inside that envelope `analyze` is the same
+//! estimate `airesim prescreen` ranks with, so a `route: auto` serve
+//! request can skip the DES entirely (and, warm, skip even the analysis
+//! via the prescreen cache). Outside the envelope the screen would be
+//! silently wrong, so [`routable`] is a strict whitelist: any knob the
+//! CTMC cannot see routes to the DES.
+
+use crate::analytical::AnalyticOutputs;
+use crate::config::DistKind;
+use crate::model::PolicySpec;
+use crate::report::json::Json;
+use crate::report::Format;
+use crate::scenario::{Scenario, ScenarioKind};
+
+/// Whether the analytical screen models this scenario exactly: a plain
+/// untraced single run, default policies, exponential clocks, and none
+/// of the DES-only subsystems armed.
+pub fn routable(sc: &Scenario) -> bool {
+    let p = &sc.params;
+    matches!(sc.kind, ScenarioKind::Single { trace: false })
+        && sc.policies == PolicySpec::default()
+        && p.failure_dist == DistKind::Exponential
+        && p.topology.is_none()
+        && p.workload.is_none()
+        && p.num_jobs == 1
+        && p.retirement_threshold == 0
+        && p.bad_regen_interval == 0.0
+        && p.auto_repair_capacity == 0
+        && p.manual_repair_capacity == 0
+        && p.preemption_cost == 0.0
+        && p.diagnosis_uncertainty == 0.0
+        && p.checkpoint_interval == 0.0
+        && p.checkpoint_cost == 0.0
+        && p.checkpoint_cost_per_server == 0.0
+}
+
+/// Field table shared by the json/csv renderings (name, value).
+fn fields(o: &AnalyticOutputs) -> [(&'static str, f64); 8] {
+    [
+        ("avail_t", o.avail_t),
+        ("avail_avg", o.avail_avg),
+        ("frac_bad_t", o.frac_bad_t),
+        ("rbar", o.rbar),
+        ("exp_failures", o.exp_failures),
+        ("makespan_est", o.makespan_est),
+        ("overhead_frac", o.overhead_frac),
+        ("pi_retired", o.pi_retired),
+    ]
+}
+
+/// The analytic block exactly as `airesim analytic` prints it (the CLI
+/// prints this string, so the two stay byte-identical by construction).
+pub fn analytic_text(o: &AnalyticOutputs) -> String {
+    format!(
+        "avail_T        {:>14.6}\n\
+         avail_avg      {:>14.6}\n\
+         frac_bad_T     {:>14.6}\n\
+         rbar           {:>14.3e} /min\n\
+         exp_failures   {:>14.2}\n\
+         makespan_est   {:>14.2} min ({:.2} days)\n\
+         overhead_frac  {:>14.4}\n\
+         pi_retired     {:>14.6}\n",
+        o.avail_t,
+        o.avail_avg,
+        o.frac_bad_t,
+        o.rbar,
+        o.exp_failures,
+        o.makespan_est,
+        o.makespan_est / 1440.0,
+        o.overhead_frac,
+        o.pi_retired
+    )
+}
+
+/// The routed answer as one JSON object (`kind: "analytic"` marks it as
+/// the screen's estimate, not a DES record).
+pub fn analytic_json(o: &AnalyticOutputs) -> Json {
+    let mut obj = vec![("kind".to_string(), Json::str("analytic"))];
+    for (name, v) in fields(o) {
+        obj.push((name.to_string(), Json::Num(v)));
+    }
+    Json::Obj(obj)
+}
+
+/// Render a routed answer in any `--format`.
+pub fn render(format: Format, o: &AnalyticOutputs) -> String {
+    match format {
+        Format::Text => analytic_text(o),
+        Format::Json | Format::Ndjson => analytic_json(o).render() + "\n",
+        Format::Csv => {
+            let mut s = String::from("quantity,value\n");
+            for (name, v) in fields(o) {
+                s.push_str(&format!("{name},{v}\n"));
+            }
+            s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Params;
+    use crate::testkit::parse_json;
+
+    fn base() -> Scenario {
+        Scenario::single(Params::small_test())
+    }
+
+    #[test]
+    fn base_single_runs_are_routable() {
+        assert!(routable(&base()));
+    }
+
+    #[test]
+    fn any_des_only_knob_falls_through() {
+        let mut traced = base();
+        traced.kind = ScenarioKind::Single { trace: true };
+        assert!(!routable(&traced), "traces need the DES timeline");
+
+        let mut sweep_doc = base();
+        sweep_doc.kind = ScenarioKind::Compare { replications: 3 };
+        assert!(!routable(&sweep_doc), "only single runs route");
+
+        let mut pol = base();
+        pol.policies.selection = "locality".into();
+        assert!(!routable(&pol), "non-default policies are CTMC-blind");
+
+        for (set, msg) in [
+            (
+                Box::new(|p: &mut Params| p.failure_dist = DistKind::Weibull { shape: 1.5 })
+                    as Box<dyn Fn(&mut Params)>,
+                "non-exponential clocks",
+            ),
+            (Box::new(|p: &mut Params| p.num_jobs = 2), "multi-job"),
+            (Box::new(|p: &mut Params| p.retirement_threshold = 3), "retirement"),
+            (Box::new(|p: &mut Params| p.auto_repair_capacity = 2), "repair queueing"),
+            (Box::new(|p: &mut Params| p.checkpoint_interval = 60.0), "checkpointing"),
+            (
+                Box::new(|p: &mut Params| p.checkpoint_cost_per_server = 0.01),
+                "per-server commit cost",
+            ),
+            (Box::new(|p: &mut Params| p.diagnosis_uncertainty = 0.1), "diagnosis noise"),
+        ] {
+            let mut sc = base();
+            set(&mut sc.params);
+            assert!(!routable(&sc), "{msg} must fall through to the DES");
+        }
+    }
+
+    #[test]
+    fn renderings_carry_every_field() {
+        let o = crate::analytical::analyze(&Params::small_test());
+        let text = analytic_text(&o);
+        for label in ["avail_T", "makespan_est", "pi_retired", "days"] {
+            assert!(text.contains(label), "text missing {label}");
+        }
+        let j = parse_json(render(Format::Json, &o).trim_end()).unwrap();
+        let Json::Obj(obj) = j else { panic!("object expected") };
+        assert_eq!(obj.len(), 9, "kind + 8 metrics");
+        let csv = render(Format::Csv, &o);
+        assert_eq!(csv.lines().count(), 9, "header + 8 rows: {csv}");
+    }
+}

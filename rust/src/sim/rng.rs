@@ -49,6 +49,24 @@ impl Rng {
         Rng::new(sm)
     }
 
+    /// Snapshot the full generator state. Together with [`Rng::set_state`]
+    /// this lets a cache key on "the stream position a deterministic
+    /// consumer started from" and replay the consumer's draws by restoring
+    /// the position it ended at (the serve layer's warm fleet cache).
+    #[inline]
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Restore a state captured by [`Rng::state`]. The caller must only
+    /// feed back states that came from `state()` — xoshiro256++ has one
+    /// forbidden all-zero state, which no reachable stream position is.
+    #[inline]
+    pub fn set_state(&mut self, s: [u64; 4]) {
+        debug_assert!(s != [0; 4], "all-zero is not a reachable xoshiro state");
+        self.s = s;
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]
@@ -155,6 +173,19 @@ mod tests {
         assert_ne!(xs, ys);
         assert_ne!(xs, zs);
         assert_ne!(ys, zs);
+    }
+
+    #[test]
+    fn state_roundtrip_replays_the_stream() {
+        let mut a = Rng::new(11);
+        let snap = a.state();
+        let xs: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        let after = a.state();
+        let mut b = Rng::new(999);
+        b.set_state(snap);
+        let ys: Vec<u64> = (0..32).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_eq!(b.state(), after);
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Ambient execution control for the shared worker pools.
+//!
+//! The serve daemon multiplexes many concurrent requests over worker
+//! pools that were designed for one CLI invocation at a time. Rather
+//! than thread new parameters through every `run_pool` caller (and
+//! perturb the CLI path, which is pinned byte-identical), control
+//! travels *ambiently*: [`with`] installs an [`ExecCtrl`] in a
+//! thread-local, [`crate::sweep::run_pool`] captures it before spawning
+//! workers, and each worker consults it — a fairness [`Gate`] bounding
+//! how many of the request's tasks run at once, a cancellation flag the
+//! [`crate::model::cluster::ReplicationRunner`] fast-skips on, and a
+//! [`WarmHandle`] the fleet/topology builds go through. The CLI never
+//! installs anything, so `current()` yields the all-`None` default and
+//! every hook is a single branch.
+
+use crate::serve::cache::WarmHandle;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Counting semaphore: the daemon gives every request's pool the same
+/// gate, sized to the physical core budget, so N concurrent requests
+/// share the machine instead of each spawning a full-width pool.
+pub struct Gate {
+    slots: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Gate {
+    pub fn new(slots: usize) -> Arc<Gate> {
+        Arc::new(Gate { slots: Mutex::new(slots.max(1)), cv: Condvar::new() })
+    }
+
+    /// Block until a slot frees, then hold it for the permit's lifetime.
+    pub fn acquire(self: &Arc<Self>) -> Permit {
+        let mut n = self.slots.lock().expect("gate lock");
+        while *n == 0 {
+            n = self.cv.wait(n).expect("gate lock");
+        }
+        *n -= 1;
+        Permit { gate: Arc::clone(self) }
+    }
+
+    /// Slots free right now (tests assert cancellation releases them).
+    pub fn available(&self) -> usize {
+        *self.slots.lock().expect("gate lock")
+    }
+}
+
+/// RAII slot hold; dropping releases the slot and wakes one waiter.
+pub struct Permit {
+    gate: Arc<Gate>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let mut n = self.gate.slots.lock().expect("gate lock");
+        *n += 1;
+        self.gate.cv.notify_one();
+    }
+}
+
+/// Per-request execution control. `Default` is all-`None`: no gating, no
+/// cancellation, cold builds — exactly the standalone CLI behavior.
+#[derive(Clone, Default)]
+pub struct ExecCtrl {
+    pub gate: Option<Arc<Gate>>,
+    pub cancel: Option<Arc<AtomicBool>>,
+    pub warm: Option<WarmHandle>,
+}
+
+impl ExecCtrl {
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed))
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<ExecCtrl> = RefCell::new(ExecCtrl::default());
+}
+
+/// Install `ctrl` as this thread's ambient control for the duration of
+/// `f`; the previous control is restored on exit (unwinds included).
+pub fn with<T>(ctrl: ExecCtrl, f: impl FnOnce() -> T) -> T {
+    struct Restore(ExecCtrl);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            CURRENT.with(|c| *c.borrow_mut() = std::mem::take(&mut self.0));
+        }
+    }
+    let prev = CURRENT.with(|c| std::mem::replace(&mut *c.borrow_mut(), ctrl));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// The ambient control installed on this thread (all-`None` unless a
+/// [`with`] frame is active).
+pub fn current() -> ExecCtrl {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_inert() {
+        let c = current();
+        assert!(c.gate.is_none() && c.cancel.is_none() && c.warm.is_none());
+        assert!(!c.is_cancelled());
+    }
+
+    #[test]
+    fn with_scopes_and_restores() {
+        let cancel = Arc::new(AtomicBool::new(true));
+        let ctrl = ExecCtrl { cancel: Some(Arc::clone(&cancel)), ..ExecCtrl::default() };
+        with(ctrl, || {
+            assert!(current().is_cancelled());
+            // Nested frames shadow and restore.
+            with(ExecCtrl::default(), || assert!(!current().is_cancelled()));
+            assert!(current().is_cancelled());
+        });
+        assert!(!current().is_cancelled());
+    }
+
+    #[test]
+    fn gate_bounds_concurrency_and_permits_release() {
+        let gate = Gate::new(2);
+        assert_eq!(gate.available(), 2);
+        let a = gate.acquire();
+        let b = gate.acquire();
+        assert_eq!(gate.available(), 0);
+        drop(a);
+        assert_eq!(gate.available(), 1);
+        // A blocked waiter wakes when a permit drops.
+        let g2 = Arc::clone(&gate);
+        let waiter = std::thread::spawn(move || {
+            let _p = g2.acquire();
+        });
+        drop(b);
+        waiter.join().expect("waiter finishes");
+        assert_eq!(gate.available(), 2);
+    }
+}

@@ -14,6 +14,8 @@
 //! (same stream at every point for a given `r`) — the classic variance-
 //! reduction technique for estimating point-to-point *differences*.
 
+pub mod ctrl;
+
 use crate::config::Params;
 use crate::model::cluster::ReplicationRunner;
 use crate::model::{PolicySpec, RunOutputs};
@@ -449,12 +451,18 @@ where
     let next = AtomicUsize::new(0);
     let collectors: Vec<Mutex<Collector>> =
         (0..n_units).map(|_| Mutex::new(Collector::new())).collect();
+    // Ambient execution control (serve requests install a gate /
+    // cancellation flag / warm cache; the CLI default is all-None).
+    let ec = ctrl::current();
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| {
                 let mut runner = ReplicationRunner::new();
+                runner.warm = ec.warm.clone();
+                runner.cancel = ec.cancel.clone();
                 loop {
+                    let _permit = ec.gate.as_ref().map(|g| g.acquire());
                     let task = next.fetch_add(1, Ordering::Relaxed);
                     if task >= total {
                         break;
@@ -502,18 +510,25 @@ where
     let slots: Vec<Mutex<Vec<Option<(Params, RunOutputs)>>>> = (0..n_units)
         .map(|_| Mutex::new((0..reps).map(|_| None).collect()))
         .collect();
+    let ec = ctrl::current();
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| {
                 let mut runner = ReplicationRunner::new();
+                runner.warm = ec.warm.clone();
+                runner.cancel = ec.cancel.clone();
                 loop {
+                    let _permit = ec.gate.as_ref().map(|g| g.acquire());
                     let task = next.fetch_add(1, Ordering::Relaxed);
                     if task >= total {
                         break;
                     }
                     let unit = task / reps;
                     let rep = task % reps;
+                    // Cancellation never skips a slot (`run_pool_ordered`
+                    // asserts completeness): the runner fast-skips and
+                    // fills the slot with default outputs instead.
                     let (p, out) = run(&mut runner, unit, rep);
                     slots[unit].lock().unwrap()[rep] = Some((p, out));
                 }

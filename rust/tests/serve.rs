@@ -1,0 +1,282 @@
+//! End-to-end tests for `airesim serve`: drive the daemon's accept loop
+//! with in-memory streams and check the tentpole guarantees — chunk
+//! concatenation equals the CLI's stdout byte-for-byte, a repeated
+//! request hits the warm fleet cache, malformed input never kills the
+//! loop, and `route: auto` answers analytically.
+
+use airesim::report::json::Json;
+use airesim::report::Format;
+use airesim::serve::daemon::{serve_loop, ServeOpts};
+use airesim::serve::pipeline::{self, ExecRequest, Route};
+use airesim::sweep::ctrl::ExecCtrl;
+use airesim::testkit::parse_json;
+use std::io::{BufReader, Cursor, Read, Write};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// A routable single-run scenario (exponential clocks, default policies,
+/// no DES-only subsystems armed) — small enough that a test replication
+/// finishes in milliseconds.
+const DOC: &str = "scenario: single\n\
+                   seed: 7\n\
+                   params:\n\
+                   \x20 job_size: 32\n\
+                   \x20 working_pool: 40\n\
+                   \x20 spare_pool: 8\n\
+                   \x20 warm_standbys: 4\n\
+                   \x20 job_len: 1440\n\
+                   \x20 random_failure_rate: 0.5/1440\n\
+                   \x20 systematic_failure_rate: 2.5/1440\n";
+
+/// Build one NDJSON request line for [`DOC`].
+fn request_line(id: &str, extra: &[(&str, Json)]) -> String {
+    let mut fields =
+        vec![("id".to_string(), Json::str(id)), ("scenario".to_string(), Json::str(DOC))];
+    for (k, v) in extra {
+        fields.push((k.to_string(), v.clone()));
+    }
+    Json::Obj(fields).render() + "\n"
+}
+
+fn jget<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    match j {
+        Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+        _ => None,
+    }
+}
+
+fn jstr(j: &Json) -> &str {
+    match j {
+        Json::Str(s) => s.as_str(),
+        other => panic!("expected a string, got {other:?}"),
+    }
+}
+
+/// Parse every response line addressed to `id`, in order.
+fn lines_for(text: &str, id: &str) -> Vec<Json> {
+    text.lines()
+        .map(|l| parse_json(l).unwrap_or_else(|e| panic!("unparseable response `{l}`: {e}")))
+        .filter(|j| jget(j, "id").map(|v| matches!(v, Json::Str(s) if s == id)) == Some(true))
+        .collect()
+}
+
+/// Concatenate the `chunk` payloads for `id` — the serve equivalent of
+/// the CLI's stdout for that request.
+fn stream_of(text: &str, id: &str) -> String {
+    lines_for(text, id)
+        .iter()
+        .filter_map(|j| jget(j, "chunk").map(jstr).map(str::to_string))
+        .collect()
+}
+
+fn done_of(text: &str, id: &str) -> Json {
+    lines_for(text, id)
+        .into_iter()
+        .find(|j| jget(j, "done").is_some())
+        .unwrap_or_else(|| panic!("no done line for `{id}` in:\n{text}"))
+}
+
+fn cache_count(done: &Json, field: &str) -> f64 {
+    match jget(jget(done, "cache").expect("cache object"), field) {
+        Some(Json::Num(n)) => *n,
+        other => panic!("cache.{field} missing or non-numeric: {other:?}"),
+    }
+}
+
+/// What the CLI would print for [`DOC`] in `format` (the pipeline run
+/// cold, exactly as `cmd_scenario` drives it).
+fn cli_reference(format: Format) -> String {
+    let req = ExecRequest {
+        doc: DOC.to_string(),
+        format,
+        seed: None,
+        threads: None,
+        sets: None,
+        policies: None,
+        trace: false,
+        route: Route::Des,
+        origin: None,
+    };
+    let prep = pipeline::prepare(&req).expect("reference prepare");
+    let result = pipeline::run_prepared(&prep, &ExecCtrl::default()).expect("reference run");
+    pipeline::render(&prep, result)
+}
+
+/// Feed the daemon a fixed script all at once and return its full
+/// response text (requests may run concurrently — fine when the
+/// assertions don't depend on cache warmth).
+fn serve_script(input: &str, threads: usize) -> String {
+    let mut out = Vec::new();
+    serve_loop(
+        Cursor::new(input.to_string()),
+        &mut out,
+        &ServeOpts { threads, fleet_cache: 8 },
+    )
+    .expect("serve_loop io");
+    String::from_utf8(out).expect("utf8 responses")
+}
+
+#[test]
+fn chunks_concatenate_to_the_cli_output_in_every_format() {
+    for format in [Format::Text, Format::Json, Format::Csv, Format::Ndjson] {
+        let input = request_line("r", &[("format", Json::str(format.name()))]);
+        let text = serve_script(&input, 2);
+        let done = done_of(&text, "r");
+        assert_eq!(jget(&done, "routed"), Some(&Json::Bool(false)));
+        assert_eq!(jget(&done, "cancelled"), Some(&Json::Bool(false)));
+        assert_eq!(
+            stream_of(&text, "r"),
+            cli_reference(format),
+            "serve stream != CLI stdout for --format {}",
+            format.name()
+        );
+    }
+}
+
+#[test]
+fn malformed_lines_and_unknown_cancels_never_kill_the_loop() {
+    let input = format!(
+        "this is not json\n\n{{\"id\":\"bad\"}}\n{{\"cancel\":\"ghost\"}}\n{}",
+        request_line("ok", &[])
+    );
+    let text = serve_script(&input, 2);
+
+    // The garbage line answers with an un-addressed error object…
+    let parse_errors: Vec<String> = text
+        .lines()
+        .map(|l| parse_json(l).unwrap())
+        .filter(|j| jget(j, "id") == Some(&Json::Null))
+        .map(|j| jstr(jget(&j, "error").expect("error field")).to_string())
+        .collect();
+    assert!(
+        parse_errors.iter().any(|e| e.contains("bad request JSON")),
+        "expected a parse error line, got {parse_errors:?}"
+    );
+    // …the id-only request errors under its own id…
+    let bad = lines_for(&text, "bad");
+    assert!(
+        bad.iter().any(|j| jget(j, "error").is_some()),
+        "missing-scenario request must answer an error"
+    );
+    // …cancelling an unknown id errors instead of acking…
+    let ghost = lines_for(&text, "ghost");
+    assert!(ghost.iter().any(|j| {
+        jget(j, "error").map(jstr) == Some("no active request with this id")
+    }));
+    // …and the request behind all of them still completes normally.
+    let done = done_of(&text, "ok");
+    assert_eq!(jget(&done, "cancelled"), Some(&Json::Bool(false)));
+    assert_eq!(stream_of(&text, "ok"), cli_reference(Format::Text));
+}
+
+#[test]
+fn auto_route_answers_analytically() {
+    let input = request_line(
+        "fast",
+        &[("route", Json::str("auto")), ("format", Json::str("json"))],
+    );
+    let text = serve_script(&input, 2);
+    let done = done_of(&text, "fast");
+    assert_eq!(jget(&done, "routed"), Some(&Json::Bool(true)), "done: {done:?}");
+    let body = parse_json(stream_of(&text, "fast").trim_end()).expect("analytic json");
+    assert_eq!(jget(&body, "kind").map(jstr), Some("analytic"));
+    assert!(matches!(jget(&body, "makespan_est"), Some(Json::Num(_))));
+}
+
+// ---- sequenced warm-cache test: the second request must start only ----
+// ---- after the first finishes, so its fleet fetch is a guaranteed ----
+// ---- cache hit.                                                    ----
+
+/// Reader fed line-by-line over a channel; EOF when the sender drops.
+struct ChanReader {
+    rx: mpsc::Receiver<Vec<u8>>,
+    pending: Vec<u8>,
+}
+
+impl Read for ChanReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pending.is_empty() {
+            match self.rx.recv() {
+                Ok(bytes) => self.pending = bytes,
+                Err(_) => return Ok(0),
+            }
+        }
+        let n = buf.len().min(self.pending.len());
+        buf[..n].copy_from_slice(&self.pending[..n]);
+        self.pending.drain(..n);
+        Ok(n)
+    }
+}
+
+/// Writer into a shared buffer the test thread can watch live.
+#[derive(Clone)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+fn wait_for_done(buf: &Arc<Mutex<Vec<u8>>>, id: &str) {
+    for _ in 0..2000 {
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        // Only parse complete lines — a chunk may be mid-write.
+        let upto = text.rfind('\n').map(|i| &text[..i]).unwrap_or("");
+        if upto
+            .lines()
+            .filter_map(|l| parse_json(l).ok())
+            .any(|j| {
+                jget(&j, "done").is_some()
+                    && jget(&j, "id") == Some(&Json::Str(id.to_string()))
+            })
+        {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    panic!("request `{id}` never finished");
+}
+
+#[test]
+fn a_repeated_request_is_byte_identical_and_skips_the_fleet_build() {
+    let (tx, rx) = mpsc::channel::<Vec<u8>>();
+    let buf = Arc::new(Mutex::new(Vec::new()));
+    let writer = SharedBuf(Arc::clone(&buf));
+    let server = std::thread::spawn(move || {
+        serve_loop(
+            BufReader::new(ChanReader { rx, pending: Vec::new() }),
+            writer,
+            &ServeOpts { threads: 2, fleet_cache: 8 },
+        )
+        .expect("serve_loop io")
+    });
+
+    let req = |id: &str| request_line(id, &[("format", Json::str("ndjson"))]).into_bytes();
+    tx.send(req("first")).unwrap();
+    wait_for_done(&buf, "first");
+    tx.send(req("again")).unwrap();
+    wait_for_done(&buf, "again");
+    drop(tx); // EOF: the accept loop joins its handlers and returns
+    server.join().unwrap();
+
+    let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+    let (first, again) = (stream_of(&text, "first"), stream_of(&text, "again"));
+    assert!(!first.is_empty());
+    assert_eq!(first, again, "warm rerun must stream identical bytes");
+    assert_eq!(first, cli_reference(Format::Ndjson), "stream != CLI stdout");
+
+    let cold = done_of(&text, "first");
+    assert!(cache_count(&cold, "fleet_misses") >= 1.0, "cold run builds the fleet");
+    assert_eq!(cache_count(&cold, "fleet_hits"), 0.0, "nothing cached yet");
+    let warm = done_of(&text, "again");
+    assert!(cache_count(&warm, "fleet_hits") >= 1.0, "warm rerun must hit: {warm:?}");
+    assert_eq!(cache_count(&warm, "fleet_misses"), 0.0, "warm rerun rebuilt the fleet");
+
+    // The fingerprints agree — same doc, same plan key.
+    assert_eq!(jget(&cold, "fingerprint"), jget(&warm, "fingerprint"));
+}
