@@ -47,6 +47,24 @@ impl fmt::Display for ConfigError {
 
 impl std::error::Error for ConfigError {}
 
+/// Sweepable params whose whole range is already enforced by their `u32`
+/// storage type (counts/capacities: any value is meaningful, 0 included —
+/// except `num_jobs`/`job_size`, range-checked in [`validate`]) or that are
+/// derived views over other params (`systematic_rate_multiplier` writes
+/// through to `systematic_failure_rate`). Listed here so `airesim-lint`'s
+/// registry pass can prove that *every* sweepable name is consciously
+/// covered by validation: a new param must either gain a range check in
+/// [`validate`] or be added here — silently skipping validation fails CI.
+pub const TYPE_ENFORCED_PARAMS: &[&str] = &[
+    "systematic_rate_multiplier",
+    "warm_standbys",
+    "working_pool",
+    "spare_pool",
+    "auto_repair_capacity",
+    "manual_repair_capacity",
+    "retirement_threshold",
+];
+
 /// Validate a parameter set.
 pub fn validate(p: &Params) -> Result<(), ConfigError> {
     fn prob(name: &'static str, v: f64) -> Result<(), ConfigError> {

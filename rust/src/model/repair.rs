@@ -25,7 +25,7 @@ use crate::model::server::{Server, ServerState};
 use crate::sim::dist::Dist;
 use crate::sim::rng::Rng;
 use crate::sim::Time;
-use std::collections::{HashSet, VecDeque};
+use std::collections::{BTreeSet, VecDeque};
 
 /// Order-preserving repair queue with a per-job index.
 ///
@@ -49,8 +49,10 @@ pub struct RepairQueue {
     /// Servers with no assigned job live only in `fifo`.
     by_job: Vec<VecDeque<(u64, ServerId)>>,
     /// Seqs picked via a job bucket whose `fifo` copy is not yet
-    /// reclaimed (lazy deletion).
-    dead: HashSet<u64>,
+    /// reclaimed (lazy deletion). Only ever probed by key (never
+    /// iterated), but kept a `BTreeSet` so sim-core stays free of
+    /// hash-ordered containers by construction.
+    dead: BTreeSet<u64>,
     next_seq: u64,
     len: usize,
 }

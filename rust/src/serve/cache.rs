@@ -29,6 +29,8 @@ use crate::config::{DistKind, Params};
 use crate::model::server::{build_fleet_into, Server};
 use crate::model::topology::Topology;
 use crate::sim::rng::Rng;
+// lint:allow(hash-container) keyed lookup only; LRU eviction picks the unique
+// min stamp, so iteration order never reaches an observable result.
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -108,6 +110,10 @@ pub struct CacheStats {
 struct FleetEntry {
     fleet: Vec<Server>,
     rng_after: [u64; 4],
+    /// Logical timestamp of the last hit (or the insert), from
+    /// [`WarmCache::clock`]. Strictly increasing, hence unique — the LRU
+    /// victim (minimum stamp) is well-defined regardless of map order.
+    last_used: u64,
 }
 
 /// The warm store behind one daemon: fleets, topologies, and prescreen
@@ -115,15 +121,22 @@ struct FleetEntry {
 /// [`WarmHandle`]) across every request and worker thread.
 #[derive(Default)]
 pub struct WarmCache {
+    // lint:allow(hash-container) keyed lookup only; eviction selects the
+    // unique min last_used stamp, independent of iteration order.
     fleets: HashMap<(u64, [u64; 4]), FleetEntry>,
+    // lint:allow(hash-container) keyed lookup only, never iterated.
     topos: HashMap<u64, Topology>,
+    // lint:allow(hash-container) keyed lookup only, never iterated.
     prescreen: HashMap<u64, crate::analytical::AnalyticOutputs>,
     stats: CacheStats,
-    /// Max fleet entries retained; at the cap the fleet map is cleared
-    /// wholesale (entries are per-(config, stream-position), so an
+    /// Max fleet entries retained; at the cap the least-recently-used
+    /// entry is evicted (entries are per-(config, stream-position), so an
     /// unbounded sweep would otherwise hold one fleet clone per
-    /// replication). Topology/prescreen maps are per-config and tiny.
+    /// replication, while the sweep's *base* config stays hot). The
+    /// topology/prescreen maps are per-config and tiny.
     fleet_cap: usize,
+    /// Logical LRU clock: bumped on every fleet hit and insert.
+    clock: u64,
 }
 
 impl WarmCache {
@@ -167,7 +180,10 @@ impl WarmHandle {
     ) {
         let key = (fingerprint(p), rng.state());
         let mut cache = self.cache.lock().expect("warm cache lock");
-        if let Some(e) = cache.fleets.get(&key) {
+        cache.clock += 1;
+        let now = cache.clock;
+        if let Some(e) = cache.fleets.get_mut(&key) {
+            e.last_used = now;
             fleet.clone_from(&e.fleet);
             rng.set_state(e.rng_after);
             cache.stats.fleet_hits += 1;
@@ -177,12 +193,28 @@ impl WarmHandle {
         drop(cache); // build outside the lock: misses run concurrently
         build_fleet_into(p, rng, fleet, scratch);
         let mut cache = self.cache.lock().expect("warm cache lock");
-        if cache.fleets.len() >= cache.fleet_cap {
-            cache.fleets.clear();
+        while cache.fleets.len() >= cache.fleet_cap {
+            // Evict the least-recently-used entry. Stamps are unique
+            // (strictly increasing clock), so the minimum is the same
+            // whatever order the map yields entries in.
+            let oldest = cache
+                .fleets
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            match oldest {
+                Some(k) => {
+                    cache.fleets.remove(&k);
+                }
+                None => break,
+            }
         }
-        cache
-            .fleets
-            .insert(key, FleetEntry { fleet: fleet.clone(), rng_after: rng.state() });
+        cache.clock += 1;
+        let now = cache.clock;
+        cache.fleets.insert(
+            key,
+            FleetEntry { fleet: fleet.clone(), rng_after: rng.state(), last_used: now },
+        );
     }
 
     /// Topology build through the cache ([`Topology::build`] is RNG-free
@@ -289,6 +321,26 @@ mod tests {
         let mut fleet = Vec::new();
         h.fetch_fleet(&p, &mut rng, &mut fleet, &mut scratch);
         assert_eq!(h.stats().fleet_misses, 2);
+    }
+
+    #[test]
+    fn lru_keeps_recently_touched_entries() {
+        let p = Params::small_test();
+        let h = WarmHandle::new(2);
+        let mut scratch = Vec::new();
+        let mut run = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut fleet = Vec::new();
+            h.fetch_fleet(&p, &mut rng, &mut fleet, &mut scratch);
+        };
+        run(1); // A: miss
+        run(2); // B: miss              cache = {A, B}
+        run(1); // A: hit (A now newer than B)
+        run(3); // C: miss, evicts B    cache = {A, C}
+        run(1); // A: hit — survived the eviction
+        run(2); // B: miss — it was the LRU victim
+        let s = h.stats();
+        assert_eq!((s.fleet_misses, s.fleet_hits), (4, 2));
     }
 
     #[test]

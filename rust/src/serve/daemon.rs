@@ -35,6 +35,8 @@ use crate::serve::pipeline::{self, ExecRequest, Route, RunResult};
 use crate::serve::router;
 use crate::sweep::ctrl::{ExecCtrl, Gate};
 use crate::testkit::parse_json;
+// lint:allow(hash-container) cancel flags are looked up by request id only;
+// the map is never iterated, so order cannot leak into any output.
 use std::collections::HashMap;
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -199,6 +201,7 @@ fn handle<W: Write + Send>(
     ec: ExecCtrl,
     out: &Mutex<W>,
     warm: &WarmHandle,
+    // lint:allow(hash-container) keyed lookup by request id only.
     cancels: &Mutex<HashMap<String, Arc<AtomicBool>>>,
 ) {
     let before = warm.stats();
@@ -254,6 +257,7 @@ where
     let warm = WarmHandle::new(opts.fleet_cache);
     let gate = Gate::new(resolve_threads(opts.threads));
     let out = Mutex::new(writer);
+    // lint:allow(hash-container) keyed lookup by request id only.
     let cancels: Mutex<HashMap<String, Arc<AtomicBool>>> = Mutex::new(HashMap::new());
     let (out, cancels, warm_ref, gate_ref) = (&out, &cancels, &warm, &gate);
 

@@ -1,0 +1,302 @@
+//! Pass 4 — config lint.
+//!
+//! Every `rust/configs/*.yaml` must reference only registered names: params
+//! from `Params::sweepable_names` (plus `failure_dist`), policies from the
+//! `model/policy.rs` registries, scenario kinds from `scenario/mod.rs`,
+//! optimize objectives from the metric registry, and only the structural keys
+//! each section's parser actually reads. This catches the config that would
+//! fail (or worse, silently ignore a knob) at runtime — at lint time.
+//!
+//! Key sets mirror the strict parsers in `config/validate.rs`,
+//! `scenario/mod.rs`, `scenario/study.rs`, `sweep/mod.rs`, `optimize/mod.rs`.
+
+use std::path::Path;
+
+use crate::registry::Registries;
+use crate::yaml::{self, Y};
+use crate::{rel_path, Finding};
+
+const TOP_KEYS: &[&str] = &[
+    "baseline",
+    "children",
+    "crn",
+    "inject",
+    "optimize",
+    "params",
+    "policies",
+    "replications",
+    "scenario",
+    "seed",
+    "show_ci",
+    "sweep",
+    "threads",
+    "title",
+    "topology",
+    "trace",
+    "whatif",
+    "workload",
+];
+
+pub fn check(root: &Path, regs: &Registries) -> Result<Vec<Finding>, String> {
+    let dir = root.join("rust/configs");
+    let mut paths: Vec<_> = std::fs::read_dir(&dir)
+        .map_err(|e| format!("cannot read rust/configs: {e}"))?
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("yaml"))
+        .collect();
+    paths.sort();
+    let mut findings = Vec::new();
+    for path in paths {
+        let rel = rel_path(root, &path);
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| format!("cannot read {rel}: {e}"))?;
+        findings.extend(check_doc(&rel, &text, regs));
+    }
+    Ok(findings)
+}
+
+/// Lint one config document. `rel` is used only for reporting.
+pub fn check_doc(rel: &str, text: &str, regs: &Registries) -> Vec<Finding> {
+    let mut f = Vec::new();
+    let doc = match yaml::parse(text) {
+        Ok(doc) => doc,
+        Err(e) => {
+            f.push(Finding::new("configs", "yaml-parse", rel, 0, e));
+            return f;
+        }
+    };
+
+    check_keys(&mut f, rel, &doc, "top level", TOP_KEYS);
+
+    if let Some(kind) = doc.get("scenario").and_then(|v| v.as_str()) {
+        if !regs.kinds.contains(kind) {
+            f.push(bad(rel, "scenario-kind", format!("unknown scenario kind `{kind}`")));
+        }
+    }
+    if let Some(params) = doc.get("params") {
+        check_params(&mut f, rel, params, regs, "params");
+    }
+    if let Some(policies) = doc.get("policies") {
+        check_policies(&mut f, rel, policies, regs, "policies");
+    }
+    if let Some(sweep) = doc.get("sweep") {
+        check_keys(&mut f, rel, sweep, "sweep", &["crn", "kind", "x", "y"]);
+        if let Some(kind) = sweep.get("kind").and_then(|v| v.as_str()) {
+            if kind != "one_way" && kind != "two_way" {
+                f.push(bad(rel, "sweep", format!("unknown sweep kind `{kind}`")));
+            }
+        }
+        for key in ["x", "y"] {
+            if let Some(axis) = sweep.get(key) {
+                check_keys(&mut f, rel, axis, &format!("sweep.{key}"), &["name", "values"]);
+                check_knob(
+                    &mut f,
+                    rel,
+                    &format!("sweep.{key}"),
+                    axis.get("name").and_then(|v| v.as_str()),
+                    axis.get("values"),
+                    regs,
+                );
+            }
+        }
+    }
+    if let Some(whatif) = doc.get("whatif") {
+        check_keys(&mut f, rel, whatif, "whatif", &["factor", "param"]);
+        if let Some(p) = whatif.get("param").and_then(|v| v.as_str()) {
+            if !regs.params.contains(p) {
+                f.push(bad(rel, "whatif", format!("unknown param `{p}` in whatif")));
+            }
+        }
+    }
+    if let Some(inject) = doc.get("inject") {
+        check_keys(&mut f, rel, inject, "inject", &["failures"]);
+        for item in inject.get("failures").and_then(|v| v.as_list()).unwrap_or(&[]) {
+            check_keys(&mut f, rel, item, "inject failure", &["at", "job", "kind", "victim"]);
+            if let Some(k) = item.get("kind").and_then(|v| v.as_str()) {
+                if k != "random" && k != "systematic" {
+                    f.push(bad(rel, "inject", format!("unknown injection kind `{k}`")));
+                }
+            }
+        }
+    }
+    if let Some(opt) = doc.get("optimize") {
+        check_keys(
+            &mut f,
+            rel,
+            opt,
+            "optimize",
+            &["budget", "direction", "knobs", "mode", "objective"],
+        );
+        if let Some(m) = opt.get("mode").and_then(|v| v.as_str()) {
+            if m != "screen" && m != "tune" {
+                f.push(bad(rel, "optimize", format!("unknown optimize mode `{m}`")));
+            }
+        }
+        if let Some(d) = opt.get("direction").and_then(|v| v.as_str()) {
+            if d != "min" && d != "max" {
+                f.push(bad(rel, "optimize", format!("unknown direction `{d}`")));
+            }
+        }
+        if let Some(o) = opt.get("objective").and_then(|v| v.as_str()) {
+            if !regs.metric_names().contains(o) {
+                f.push(bad(rel, "optimize", format!("objective `{o}` is not a metric")));
+            }
+        }
+        for knob in opt.get("knobs").and_then(|v| v.as_list()).unwrap_or(&[]) {
+            check_keys(&mut f, rel, knob, "optimize knob", &["param", "values"]);
+            check_knob(
+                &mut f,
+                rel,
+                "optimize knob",
+                knob.get("param").and_then(|v| v.as_str()),
+                knob.get("values"),
+                regs,
+            );
+        }
+    }
+    if let Some(children) = doc.get("children").and_then(|v| v.as_list()) {
+        for child in children {
+            check_keys(&mut f, rel, child, "study child", &["label", "params", "policies"]);
+            if let Some(params) = child.get("params") {
+                check_params(&mut f, rel, params, regs, "child params");
+            }
+            if let Some(policies) = child.get("policies") {
+                check_policies(&mut f, rel, policies, regs, "child policies");
+            }
+        }
+    }
+    if let Some(topo) = doc.get("topology") {
+        check_keys(
+            &mut f,
+            rel,
+            topo,
+            "topology",
+            &[
+                "levels",
+                "rack_outage_rate",
+                "racks_per_switch",
+                "servers_per_rack",
+                "switch_outage_rate",
+            ],
+        );
+        for level in topo.get("levels").and_then(|v| v.as_list()).unwrap_or(&[]) {
+            check_keys(&mut f, rel, level, "topology level", &["name", "outage_rate", "size"]);
+        }
+    }
+    if let Some(wl) = doc.get("workload") {
+        check_keys(&mut f, rel, wl, "workload", &["classes", "empirical", "poisson", "replay"]);
+        if let Some(p) = wl.get("poisson") {
+            check_keys(&mut f, rel, p, "workload.poisson", &["rate"]);
+        }
+        for key in ["empirical", "replay"] {
+            if let Some(v) = wl.get(key) {
+                check_keys(&mut f, rel, v, &format!("workload.{key}"), &["file"]);
+            }
+        }
+        for class in wl.get("classes").and_then(|v| v.as_list()).unwrap_or(&[]) {
+            check_keys(
+                &mut f,
+                rel,
+                class,
+                "workload class",
+                &["job_len", "job_size", "warm_standbys", "weight"],
+            );
+        }
+    }
+    f
+}
+
+fn bad(rel: &str, rule: &'static str, msg: String) -> Finding {
+    Finding::new("configs", rule, rel, 0, msg)
+}
+
+fn check_keys(f: &mut Vec<Finding>, rel: &str, v: &Y, what: &str, known: &[&str]) {
+    for key in v.keys() {
+        if !known.contains(&key) {
+            f.push(Finding::new(
+                "configs",
+                "unknown-key",
+                rel,
+                0,
+                format!("unknown {what} key `{key}` (expected one of: {})", known.join(", ")),
+            ));
+        }
+    }
+}
+
+fn check_params(f: &mut Vec<Finding>, rel: &str, params: &Y, regs: &Registries, what: &str) {
+    for key in params.keys() {
+        if key != "failure_dist" && !regs.params.contains(key) {
+            f.push(Finding::new(
+                "configs",
+                "unknown-param",
+                rel,
+                0,
+                format!("unknown param `{key}` in {what}"),
+            ));
+        }
+    }
+}
+
+fn check_policies(f: &mut Vec<Finding>, rel: &str, policies: &Y, regs: &Registries, what: &str) {
+    for axis in policies.keys() {
+        match regs.axis(axis) {
+            None => f.push(Finding::new(
+                "configs",
+                "unknown-policy",
+                rel,
+                0,
+                format!("unknown policy axis `{axis}` in {what}"),
+            )),
+            Some(names) => {
+                if let Some(v) = policies.get(axis).and_then(|v| v.as_str()) {
+                    if !names.contains(v) {
+                        f.push(Finding::new(
+                            "configs",
+                            "unknown-policy",
+                            rel,
+                            0,
+                            format!("unknown `{axis}` policy `{v}` in {what}"),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A sweep axis or optimize knob: numeric param, or `policies.<axis>` with
+/// every value a registered policy name.
+fn check_knob(
+    f: &mut Vec<Finding>,
+    rel: &str,
+    what: &str,
+    name: Option<&str>,
+    values: Option<&Y>,
+    regs: &Registries,
+) {
+    let Some(name) = name else {
+        return;
+    };
+    if let Some(axis) = name.strip_prefix("policies.") {
+        match regs.axis(axis) {
+            None => f.push(bad(rel, "unknown-policy", format!("unknown policy axis `{name}` in {what}"))),
+            Some(names) => {
+                for v in values.and_then(|v| v.as_list()).unwrap_or(&[]) {
+                    if let Some(s) = v.as_str() {
+                        if !names.contains(s) {
+                            f.push(bad(
+                                rel,
+                                "unknown-policy",
+                                format!("unknown `{axis}` policy `{s}` in {what}"),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    } else if !regs.params.contains(name) {
+        f.push(bad(rel, "unknown-param", format!("unknown param `{name}` in {what}")));
+    }
+}

@@ -1,0 +1,140 @@
+//! Pass 2 — determinism.
+//!
+//! AIReSim's paired-CRN comparisons are only valid if a given seed produces a
+//! byte-identical event stream on every run. Three lexical hazards can break
+//! that silently in sim-core code (`model/`, `sim/`, `scenario/`, `sweep/`,
+//! `optimize/`, `serve/`):
+//!
+//! * `hash-container` — `HashMap`/`HashSet` iterate in randomized hash order.
+//!   Use `BTreeMap`/`BTreeSet`, or annotate when the container is only ever
+//!   used for keyed lookup (never iterated into an order-sensitive result).
+//! * `wall-clock` — `Instant`/`SystemTime` import real time into a simulated
+//!   timeline.
+//! * `float-accum` — in a module that shares state through locks, `+=` with a
+//!   non-integer right-hand side accumulates in completion order; integer
+//!   counters are exact in any order, float sums are not. Sort samples before
+//!   reducing (see `sweep::run_pool`) or annotate.
+//!
+//! Audited exceptions carry `// lint:allow(<rule>) <reason>` on (or directly
+//! above) the offending line; an annotation without a reason is itself a
+//! finding. Test code (`#[cfg(test)]` blocks) is skipped.
+
+use std::path::Path;
+
+use crate::lexer;
+use crate::{rel_path, walk_rs, Finding};
+
+/// Directories under `rust/src/` held to the determinism rules.
+pub const SIM_CORE_DIRS: &[&str] = &["model", "sim", "scenario", "sweep", "optimize", "serve"];
+
+pub fn check(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut findings = Vec::new();
+    for dir in SIM_CORE_DIRS {
+        let mut files = Vec::new();
+        walk_rs(&root.join("rust/src").join(dir), &mut files);
+        for path in files {
+            let rel = rel_path(root, &path);
+            let src = std::fs::read_to_string(&path)
+                .map_err(|e| format!("cannot read {rel}: {e}"))?;
+            findings.extend(scan_file(&rel, &src));
+        }
+    }
+    Ok(findings)
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// `word` occurs in `line` with non-identifier characters on both sides.
+fn has_word(line: &str, word: &str) -> bool {
+    let b = line.as_bytes();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(word) {
+        let at = from + p;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_ident(b[at - 1]);
+        let after_ok = end >= b.len() || !is_ident(b[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// RHS of the first `+=` on the line is a bare integer literal (`1`, `2_000`).
+fn int_rhs(line: &str) -> bool {
+    let Some(p) = line.find("+=") else {
+        return true;
+    };
+    let rhs = line[p + 2..].trim().trim_end_matches(';').trim();
+    !rhs.is_empty() && rhs.bytes().all(|c| c.is_ascii_digit() || c == b'_')
+}
+
+/// Scan one file's source. `rel` is used only for reporting.
+pub fn scan_file(rel: &str, src: &str) -> Vec<Finding> {
+    let s = lexer::scan(src);
+    let mut out = Vec::new();
+
+    for a in &s.allows {
+        if !a.has_reason {
+            out.push(Finding::new(
+                "determinism",
+                "allow-reason",
+                rel,
+                a.line,
+                format!(
+                    "`lint:allow({})` without a reason — say why the exception is sound",
+                    a.rule
+                ),
+            ));
+        }
+    }
+
+    let locks = (1..=s.num_lines())
+        .any(|n| !s.in_tests(n) && s.code_line(n).contains(".lock("));
+
+    for n in 1..=s.num_lines() {
+        if s.in_tests(n) {
+            continue;
+        }
+        let line = s.code_line(n);
+        if (has_word(line, "HashMap") || has_word(line, "HashSet"))
+            && !s.is_allowed(n, "hash-container")
+        {
+            out.push(Finding::new(
+                "determinism",
+                "hash-container",
+                rel,
+                n,
+                "hash-ordered container in sim-core; use BTreeMap/BTreeSet or \
+                 `lint:allow(hash-container)` with the audit reason",
+            ));
+        }
+        if (has_word(line, "Instant") || has_word(line, "SystemTime"))
+            && !s.is_allowed(n, "wall-clock")
+        {
+            out.push(Finding::new(
+                "determinism",
+                "wall-clock",
+                rel,
+                n,
+                "wall-clock time in sim-core; simulated time only, or \
+                 `lint:allow(wall-clock)` with the audit reason",
+            ));
+        }
+        if locks && line.contains("+=") && !int_rhs(line) && !s.is_allowed(n, "float-accum") {
+            out.push(Finding::new(
+                "determinism",
+                "float-accum",
+                rel,
+                n,
+                "non-integer `+=` in a lock-sharing module accumulates in \
+                 completion order; sort before reducing (see sweep::run_pool) \
+                 or `lint:allow(float-accum)` with the audit reason",
+            ));
+        }
+    }
+    out
+}

@@ -1,0 +1,142 @@
+//! Pass 3 — RNG draw-site discipline.
+//!
+//! CRN pairing and byte-identity depend on every replication consuming the
+//! exact same draw sequence. A new `rng.` draw site anywhere in sim code can
+//! shift every subsequent draw and silently invalidate paired comparisons, so
+//! each draw site must be accounted for in the committed allowlist
+//! `rust/tools/lint/draw_sites.txt` (`<file> <method> <count>` per line,
+//! paths relative to `rust/src/`). The lint fails on *both* new sites and
+//! stale entries: adding a draw requires a human to re-audit stream
+//! discipline (derived streams, draw order) and bump the allowlist in the
+//! same commit.
+//!
+//! `sim/rng.rs` (the generator itself) and `testkit/` are exempt, as is all
+//! `#[cfg(test)]` code.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::lexer;
+use crate::{read_rel, rel_path, walk_rs, Finding};
+
+/// Methods on `sim::rng::Rng` (plus `Dist::sample`) that consume randomness.
+pub const DRAW_METHODS: &[&str] = &[
+    "bernoulli",
+    "next_below",
+    "next_f64",
+    "next_normal",
+    "next_open_f64",
+    "next_u64",
+    "sample",
+    "shuffle",
+];
+
+pub const ALLOWLIST: &str = "rust/tools/lint/draw_sites.txt";
+
+/// Count non-test draw sites per method in one file.
+pub fn count_draws(src: &str) -> BTreeMap<String, usize> {
+    let s = lexer::scan(src);
+    let mut out = BTreeMap::new();
+    for n in 1..=s.num_lines() {
+        if s.in_tests(n) {
+            continue;
+        }
+        let line = s.code_line(n);
+        for m in DRAW_METHODS {
+            let hits = line.matches(&format!(".{m}(")).count();
+            if hits > 0 {
+                *out.entry(m.to_string()).or_insert(0) += hits;
+            }
+        }
+    }
+    out
+}
+
+pub fn parse_allowlist(text: &str) -> Result<BTreeMap<(String, String), usize>, String> {
+    let mut out = BTreeMap::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(file), Some(method), Some(count), None) =
+            (parts.next(), parts.next(), parts.next(), parts.next())
+        else {
+            return Err(format!(
+                "{ALLOWLIST}:{}: expected `<file> <method> <count>`",
+                i + 1
+            ));
+        };
+        let count: usize = count
+            .parse()
+            .map_err(|_| format!("{ALLOWLIST}:{}: bad count `{count}`", i + 1))?;
+        out.insert((file.to_string(), method.to_string()), count);
+    }
+    Ok(out)
+}
+
+/// Compare found draw sites against the allowlist; both directions fail.
+pub fn diff(
+    found: &BTreeMap<(String, String), usize>,
+    allowed: &BTreeMap<(String, String), usize>,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for ((file, method), n) in found {
+        match allowed.get(&(file.clone(), method.clone())) {
+            Some(a) if a == n => {}
+            Some(a) => out.push(Finding::new(
+                "draws",
+                "draw-site",
+                format!("rust/src/{file}"),
+                0,
+                format!(
+                    "{n} `.{method}(` draw site(s), allowlist says {a} — confirm CRN \
+                     stream discipline is preserved, then update {ALLOWLIST}"
+                ),
+            )),
+            None => out.push(Finding::new(
+                "draws",
+                "draw-site",
+                format!("rust/src/{file}"),
+                0,
+                format!(
+                    "new draw site: {n} `.{method}(` call(s) not in {ALLOWLIST} — \
+                     confirm CRN stream discipline, then add `{file} {method} {n}`"
+                ),
+            )),
+        }
+    }
+    for ((file, method), a) in allowed {
+        if !found.contains_key(&(file.clone(), method.clone())) {
+            out.push(Finding::new(
+                "draws",
+                "draw-site",
+                ALLOWLIST,
+                0,
+                format!("stale entry `{file} {method} {a}`: no such draw site remains"),
+            ));
+        }
+    }
+    out
+}
+
+pub fn check(root: &Path) -> Result<Vec<Finding>, String> {
+    let allowed = parse_allowlist(&read_rel(root, ALLOWLIST)?)?;
+    let mut files = Vec::new();
+    walk_rs(&root.join("rust/src"), &mut files);
+    let mut found: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for path in files {
+        let rel = rel_path(root, &path);
+        let short = rel.strip_prefix("rust/src/").unwrap_or(&rel).to_string();
+        if short == "sim/rng.rs" || short.starts_with("testkit/") {
+            continue;
+        }
+        let src =
+            std::fs::read_to_string(&path).map_err(|e| format!("cannot read {rel}: {e}"))?;
+        for (method, n) in count_draws(&src) {
+            *found.entry((short.clone(), method)).or_insert(0) += n;
+        }
+    }
+    Ok(diff(&found, &allowed))
+}

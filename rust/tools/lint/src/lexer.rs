@@ -1,0 +1,396 @@
+//! A comment/string-aware scanner for Rust source — the only "parsing" the
+//! lint does. No syn, no proc-macro machinery: we blank out comments and
+//! string-literal *contents* (preserving byte offsets and newlines) so the
+//! passes can run plain substring searches over `code` without tripping on
+//! names that merely appear in prose, and we record every string literal with
+//! its position so registry extraction can slice function bodies by brace
+//! matching and collect the literals inside.
+//!
+//! The scanner also understands two repo conventions:
+//!
+//! * `// lint:allow(<rule>) <reason>` — an audited exception. An annotation on
+//!   a code line covers that line; an annotation on a comment-only line covers
+//!   the next code line.
+//! * `#[cfg(test)]` — everything inside the attribute's brace block is marked
+//!   as test code, which the determinism and draw-site passes skip.
+
+/// A string literal found in the source: raw contents (escapes untouched),
+/// the byte offset of the opening quote, and its 1-based line.
+#[derive(Debug, Clone)]
+pub struct Lit {
+    pub text: String,
+    pub offset: usize,
+    pub line: usize,
+}
+
+/// A `lint:allow` annotation site (before target-line resolution).
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub line: usize,
+    pub rule: String,
+    pub has_reason: bool,
+}
+
+/// Scanned view of one source file.
+pub struct Scanned {
+    /// Source with comments and string contents replaced by spaces (newlines
+    /// kept), so byte offsets and line numbers match the original file.
+    pub code: String,
+    /// Every string literal, in source order.
+    pub lits: Vec<Lit>,
+    /// Raw annotation sites (useful for reason checking).
+    pub allows: Vec<Allow>,
+    line_start: Vec<usize>,
+    /// Per line (1-based, index 0 unused): rules allowed on that line.
+    allowed: Vec<Vec<String>>,
+    /// Per line (1-based): line is inside a `#[cfg(test)]` block.
+    in_tests: Vec<bool>,
+}
+
+impl Scanned {
+    /// 1-based line number containing byte `offset`.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_start.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    pub fn is_allowed(&self, line: usize, rule: &str) -> bool {
+        self.allowed
+            .get(line)
+            .map(|rules| rules.iter().any(|r| r == rule))
+            .unwrap_or(false)
+    }
+
+    pub fn in_tests(&self, line: usize) -> bool {
+        self.in_tests.get(line).copied().unwrap_or(false)
+    }
+
+    pub fn num_lines(&self) -> usize {
+        self.line_start.len()
+    }
+
+    /// Slice of `code` for 1-based line `n`, without the trailing newline.
+    pub fn code_line(&self, n: usize) -> &str {
+        let start = self.line_start[n - 1];
+        let end = self
+            .line_start
+            .get(n)
+            .map(|e| e - 1)
+            .unwrap_or(self.code.len());
+        &self.code[start..end.max(start)]
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn utf8_len(b: u8) -> usize {
+    if b < 0x80 {
+        1
+    } else if b < 0xe0 {
+        2
+    } else if b < 0xf0 {
+        3
+    } else {
+        4
+    }
+}
+
+/// Blank `code[from..to]` with spaces, preserving newlines.
+fn blank(code: &mut [u8], from: usize, to: usize) {
+    for c in code[from..to].iter_mut() {
+        if *c != b'\n' {
+            *c = b' ';
+        }
+    }
+}
+
+/// Parse `lint:allow(rule) reason` out of a comment's text, if present.
+fn parse_allow(comment: &str) -> Option<(String, bool)> {
+    let at = comment.find("lint:allow(")?;
+    let rest = &comment[at + "lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let reason = rest[close + 1..].trim();
+    Some((rule, !reason.is_empty()))
+}
+
+pub fn scan(src: &str) -> Scanned {
+    let bytes = src.as_bytes();
+    let n = bytes.len();
+    let mut code = bytes.to_vec();
+    let mut lits = Vec::new();
+    let mut allows = Vec::new();
+
+    let mut line_start = vec![0usize];
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'\n' && i + 1 < n {
+            line_start.push(i + 1);
+        }
+    }
+    let line_of = |offset: usize, starts: &[usize]| -> usize {
+        match starts.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    };
+
+    let mut i = 0;
+    while i < n {
+        let b = bytes[i];
+        // Line comment (covers `//`, `///`, `//!`).
+        if b == b'/' && i + 1 < n && bytes[i + 1] == b'/' {
+            let end = bytes[i..]
+                .iter()
+                .position(|&c| c == b'\n')
+                .map(|p| i + p)
+                .unwrap_or(n);
+            let text = std::str::from_utf8(&bytes[i..end]).unwrap_or("");
+            if let Some((rule, has_reason)) = parse_allow(text) {
+                allows.push(Allow {
+                    line: line_of(i, &line_start),
+                    rule,
+                    has_reason,
+                });
+            }
+            blank(&mut code, i, end);
+            i = end;
+            continue;
+        }
+        // Block comment, possibly nested.
+        if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+            let start = i;
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if bytes[i] == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if bytes[i] == b'*' && i + 1 < n && bytes[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut code, start, i);
+            continue;
+        }
+        // Raw string: r"..." / r#"..."# / br"..." (prev byte must not be ident).
+        if (b == b'r' || b == b'b') && (i == 0 || !is_ident(bytes[i - 1])) {
+            let mut j = i;
+            if b == b'b' && j + 1 < n && bytes[j + 1] == b'r' {
+                j += 1;
+            }
+            if bytes[j] == b'r' {
+                let mut hashes = 0;
+                let mut k = j + 1;
+                while k < n && bytes[k] == b'#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && bytes[k] == b'"' {
+                    let open = k + 1;
+                    let closer: Vec<u8> = std::iter::once(b'"')
+                        .chain(std::iter::repeat(b'#').take(hashes))
+                        .collect();
+                    let mut m = open;
+                    while m < n && !bytes[m..].starts_with(&closer) {
+                        m += 1;
+                    }
+                    let close = m.min(n);
+                    lits.push(Lit {
+                        text: String::from_utf8_lossy(&bytes[open..close]).into_owned(),
+                        offset: k,
+                        line: line_of(k, &line_start),
+                    });
+                    blank(&mut code, open, close);
+                    i = (close + closer.len()).min(n);
+                    continue;
+                }
+            }
+            // `b"..."` byte string falls through to the string arm below;
+            // a lone `r`/`b` identifier falls through to the default arm.
+            if b == b'b' && i + 1 < n && (bytes[i + 1] == b'"' || bytes[i + 1] == b'\'') {
+                i += 1; // let the next iteration handle the quote itself
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        // Ordinary string literal.
+        if b == b'"' {
+            let open = i + 1;
+            let mut j = open;
+            while j < n {
+                if bytes[j] == b'\\' {
+                    j += 2;
+                } else if bytes[j] == b'"' {
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            let close = j.min(n);
+            lits.push(Lit {
+                text: String::from_utf8_lossy(&bytes[open..close]).into_owned(),
+                offset: i,
+                line: line_of(i, &line_start),
+            });
+            blank(&mut code, open, close);
+            i = (close + 1).min(n);
+            continue;
+        }
+        // Char literal vs lifetime.
+        if b == b'\'' {
+            if i + 1 < n && bytes[i + 1] == b'\\' {
+                // Escaped char literal: scan past the escape to the closing quote.
+                let mut j = i + 3;
+                while j < n && bytes[j] != b'\'' {
+                    j += 1;
+                }
+                blank(&mut code, i + 1, j.min(n));
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 1 < n {
+                let len = utf8_len(bytes[i + 1]);
+                if i + 1 + len < n && bytes[i + 1 + len] == b'\'' {
+                    // Plain char literal like 'x' (or '"').
+                    blank(&mut code, i + 1, i + 1 + len);
+                    i += len + 2;
+                    continue;
+                }
+            }
+            // Lifetime — leave as code.
+            i += 1;
+            continue;
+        }
+        // Skip identifiers wholesale so `br`/`r` prefixes inside names
+        // (e.g. `order`) are never mistaken for raw-string openers.
+        if is_ident(b) {
+            let mut j = i + 1;
+            while j < n && is_ident(bytes[j]) {
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+
+    let code = String::from_utf8(code).expect("blanking preserves UTF-8");
+
+    // Per-line blankness of the *code* view (comment-only lines are blank).
+    let num_lines = line_start.len();
+    let mut blank_line = vec![true; num_lines + 1];
+    for (idx, &start) in line_start.iter().enumerate() {
+        let end = line_start.get(idx + 1).copied().unwrap_or(code.len());
+        blank_line[idx + 1] = code[start..end].trim().is_empty();
+    }
+
+    // Resolve allow targets: comment-only lines cover the next code line.
+    let mut allowed = vec![Vec::new(); num_lines + 1];
+    for a in &allows {
+        let mut target = a.line;
+        while target <= num_lines && blank_line[target] {
+            target += 1;
+        }
+        if target <= num_lines {
+            allowed[target].push(a.rule.clone());
+        }
+    }
+
+    // Mark `#[cfg(test)]` brace regions.
+    let mut in_tests = vec![false; num_lines + 1];
+    let cb = code.as_bytes();
+    let mut depth: usize = 0;
+    let mut pending = false;
+    let mut test_depth: Option<usize> = None;
+    let mut k = 0;
+    while k < cb.len() {
+        if test_depth.is_none() && code[k..].starts_with("#[cfg(test)]") {
+            pending = true;
+            k += "#[cfg(test)]".len();
+            continue;
+        }
+        match cb[k] {
+            b'{' => {
+                if pending {
+                    test_depth = Some(depth);
+                    pending = false;
+                }
+                depth += 1;
+            }
+            b'}' => {
+                depth = depth.saturating_sub(1);
+                if test_depth == Some(depth) {
+                    test_depth = None;
+                    in_tests[line_of(k, &line_start)] = true;
+                }
+            }
+            b';' if pending && test_depth.is_none() => pending = false,
+            _ => {}
+        }
+        if test_depth.is_some() {
+            in_tests[line_of(k, &line_start)] = true;
+        }
+        k += 1;
+    }
+
+    Scanned {
+        code,
+        lits,
+        allows,
+        line_start,
+        allowed,
+        in_tests,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked_but_offsets_survive() {
+        let src = "let x = \"HashMap\"; // HashMap in a comment\nlet y = 2;\n";
+        let s = scan(src);
+        assert_eq!(s.code.len(), src.len());
+        assert!(!s.code.contains("HashMap"));
+        assert_eq!(s.lits.len(), 1);
+        assert_eq!(s.lits[0].text, "HashMap");
+        assert_eq!(s.lits[0].line, 1);
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals() {
+        let src = "let a = r#\"he \"quoted\" {x}\"#; let c = '\"'; let l: &'static str = \"s\";";
+        let s = scan(src);
+        assert_eq!(s.lits.len(), 2);
+        assert_eq!(s.lits[0].text, "he \"quoted\" {x}");
+        assert_eq!(s.lits[1].text, "s");
+        assert!(s.code.contains("&'static str"));
+    }
+
+    #[test]
+    fn allow_on_comment_line_covers_next_code_line() {
+        let src = "// lint:allow(hash-container) keyed lookups only\nuse std::collections::HashMap;\nlet x = 1;\n";
+        let s = scan(src);
+        assert!(s.is_allowed(2, "hash-container"));
+        assert!(!s.is_allowed(3, "hash-container"));
+        assert!(s.allows[0].has_reason);
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let m = 1; }\n}\nfn after() {}\n";
+        let s = scan(src);
+        assert!(!s.in_tests(1));
+        assert!(s.in_tests(4));
+        assert!(!s.in_tests(6));
+    }
+}

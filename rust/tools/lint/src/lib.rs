@@ -1,0 +1,105 @@
+//! airesim-lint: dep-free cross-layer consistency and determinism checks.
+//!
+//! Four passes (see `rust/README.md` § Static analysis):
+//!
+//! 1. `registry`   — param / policy / metric / scenario-kind name sets must be
+//!    identical across every layer that spells them out by hand.
+//! 2. `determinism` — sim-core modules must not use hash-ordered containers,
+//!    wall clocks, or lock-ordered float accumulation.
+//! 3. `draws`      — every RNG draw site must appear in the committed
+//!    allowlist `rust/tools/lint/draw_sites.txt`.
+//! 4. `configs`    — every `rust/configs/*.yaml` references only registered
+//!    params, policies, metrics, and scenario keys.
+
+use std::path::Path;
+
+pub mod configs;
+pub mod determinism;
+pub mod draws;
+pub mod lexer;
+pub mod registry;
+pub mod yaml;
+
+/// One lint violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Which pass produced it: `registry`, `determinism`, `draws`, `configs`.
+    pub pass: &'static str,
+    /// Machine-readable rule id (also the `lint:allow` key where applicable).
+    pub rule: String,
+    /// Repo-relative file path.
+    pub file: String,
+    /// 1-based line, or 0 when the finding is about a whole file/set.
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(
+        pass: &'static str,
+        rule: &str,
+        file: impl Into<String>,
+        line: usize,
+        message: impl Into<String>,
+    ) -> Self {
+        Finding {
+            pass,
+            rule: rule.to_string(),
+            file: file.into(),
+            line,
+            message: message.into(),
+        }
+    }
+
+    pub fn render(&self) -> String {
+        if self.line > 0 {
+            format!(
+                "[{}/{}] {}:{}: {}",
+                self.pass, self.rule, self.file, self.line, self.message
+            )
+        } else {
+            format!("[{}/{}] {}: {}", self.pass, self.rule, self.file, self.message)
+        }
+    }
+}
+
+/// Run all four passes rooted at the repo root (the directory containing
+/// `rust/src/config/params.rs`). Returns findings; `Err` means the lint
+/// itself could not run (missing anchor, unreadable file).
+pub fn run_all(root: &Path) -> Result<Vec<Finding>, String> {
+    let (regs, mut findings) = registry::check(root)?;
+    findings.extend(determinism::check(root)?);
+    findings.extend(draws::check(root)?);
+    findings.extend(configs::check(root, &regs)?);
+    Ok(findings)
+}
+
+pub(crate) fn read_rel(root: &Path, rel: &str) -> Result<String, String> {
+    std::fs::read_to_string(root.join(rel)).map_err(|e| format!("cannot read {rel}: {e}"))
+}
+
+/// Collect `.rs` files under `dir` recursively, in sorted (deterministic) order.
+pub(crate) fn walk_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut entries: Vec<_> = rd.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out);
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// `path` rendered relative to `root` with forward slashes.
+pub(crate) fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}

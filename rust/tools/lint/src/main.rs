@@ -1,0 +1,106 @@
+//! `airesim-lint` CLI: run all four passes over the repo and report findings.
+//!
+//!     cargo run -p airesim-lint            # human-readable, exit 1 on findings
+//!     cargo run -p airesim-lint -- --json  # machine-readable findings array
+//!
+//! The repo root is discovered by walking up from the current directory until
+//! `rust/src/config/params.rs` is found, or pass `--root <dir>` explicitly.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: airesim-lint [--json] [--root <repo-root>]";
+
+fn discover_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust/src/config/params.rs").is_file() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(dir) => root = Some(PathBuf::from(dir)),
+                None => {
+                    eprintln!("{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("airesim-lint: unknown argument `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let Some(root) = root.or_else(discover_root) else {
+        eprintln!("airesim-lint: cannot find repo root (looked for rust/src/config/params.rs)");
+        return ExitCode::from(2);
+    };
+
+    match airesim_lint::run_all(&root) {
+        Err(e) => {
+            eprintln!("airesim-lint: fatal: {e}");
+            ExitCode::from(2)
+        }
+        Ok(findings) => {
+            if json {
+                let items: Vec<String> = findings
+                    .iter()
+                    .map(|f| {
+                        format!(
+                            "{{\"pass\":\"{}\",\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
+                            f.pass,
+                            json_escape(&f.rule),
+                            json_escape(&f.file),
+                            f.line,
+                            json_escape(&f.message)
+                        )
+                    })
+                    .collect();
+                println!("[{}]", items.join(","));
+            } else if findings.is_empty() {
+                println!("airesim-lint: clean (registry, determinism, draws, configs)");
+            } else {
+                for f in &findings {
+                    println!("{}", f.render());
+                }
+                println!("airesim-lint: {} finding(s)", findings.len());
+            }
+            if findings.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+    }
+}

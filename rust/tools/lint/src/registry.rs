@@ -1,0 +1,561 @@
+//! Pass 1 — registry drift.
+//!
+//! Every knob/policy/metric/scenario-kind name is spelled out by hand in
+//! several layers (params set/get/sweepable, validate, `model/policy.rs`
+//! consts + builder matches + module doc, `stats/metrics.rs` registry, README
+//! tables). The compiler cannot tell when one copy drifts; this pass extracts
+//! each name set lexically and asserts they are identical.
+//!
+//! Extraction never interprets Rust — it slices a function/const body by
+//! brace matching over the comment/string-blanked `code` view, then collects
+//! the string literals inside, optionally restricted to match-arm *patterns*
+//! (literal followed by `=>` or `|`) or match-arm *values* (literal preceded
+//! by `=>`).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::lexer::{self, Lit, Scanned};
+use crate::{read_rel, Finding};
+
+const PARAMS_RS: &str = "rust/src/config/params.rs";
+const VALIDATE_RS: &str = "rust/src/config/validate.rs";
+const POLICY_RS: &str = "rust/src/model/policy.rs";
+const METRICS_RS: &str = "rust/src/stats/metrics.rs";
+const SCENARIO_RS: &str = "rust/src/scenario/mod.rs";
+const README_MD: &str = "rust/README.md";
+
+/// The authoritative name sets, shared with pass 4 (config lint).
+pub struct Registries {
+    /// Sweepable param names (`Params::sweepable_names`).
+    pub params: BTreeSet<String>,
+    /// Policy axis -> registered policy names (`*_NAMES` consts).
+    pub axes: Vec<(String, BTreeSet<String>)>,
+    /// `(name, unit)` in registry (presentation) order.
+    pub metrics: Vec<(String, String)>,
+    /// Scenario kinds (`fn kind_name`).
+    pub kinds: BTreeSet<String>,
+}
+
+impl Registries {
+    pub fn axis(&self, name: &str) -> Option<&BTreeSet<String>> {
+        self.axes.iter().find(|(a, _)| a == name).map(|(_, s)| s)
+    }
+
+    pub fn metric_names(&self) -> BTreeSet<String> {
+        self.metrics.iter().map(|(n, _)| n.clone()).collect()
+    }
+}
+
+// ---------------------------------------------------------------- slicing
+
+fn anchor_pos(s: &Scanned, anchor: &str, file: &str) -> Result<usize, String> {
+    s.code
+        .find(anchor)
+        .ok_or_else(|| format!("{file}: anchor `{anchor}` not found (lint needs updating?)"))
+}
+
+fn delim_block(
+    s: &Scanned,
+    from: usize,
+    open: u8,
+    close: u8,
+    file: &str,
+    anchor: &str,
+) -> Result<(usize, usize), String> {
+    let cb = s.code.as_bytes();
+    let mut i = from;
+    while i < cb.len() && cb[i] != open {
+        i += 1;
+    }
+    if i >= cb.len() {
+        return Err(format!("{file}: no opening delimiter after `{anchor}`"));
+    }
+    let start = i + 1;
+    let mut depth = 1usize;
+    i += 1;
+    while i < cb.len() {
+        if cb[i] == open {
+            depth += 1;
+        } else if cb[i] == close {
+            depth -= 1;
+            if depth == 0 {
+                return Ok((start, i));
+            }
+        }
+        i += 1;
+    }
+    Err(format!("{file}: unbalanced delimiters after `{anchor}`"))
+}
+
+/// Body of the fn/match introduced by `anchor` (first `{...}` after it).
+fn fn_block(s: &Scanned, anchor: &str, file: &str) -> Result<(usize, usize), String> {
+    let at = anchor_pos(s, anchor, file)?;
+    delim_block(s, at + anchor.len(), b'{', b'}', file, anchor)
+}
+
+/// Body of the `&[...]` array initializer of the const named by `anchor`
+/// (first `[...]` after the `=`, skipping the `[` in the type).
+fn array_block(s: &Scanned, anchor: &str, file: &str) -> Result<(usize, usize), String> {
+    let at = anchor_pos(s, anchor, file)?;
+    let cb = s.code.as_bytes();
+    let mut i = at + anchor.len();
+    while i < cb.len() && cb[i] != b'=' {
+        i += 1;
+    }
+    delim_block(s, i, b'[', b']', file, anchor)
+}
+
+// ------------------------------------------------------------- literals
+
+fn lits_in<'a>(s: &'a Scanned, range: (usize, usize)) -> impl Iterator<Item = &'a Lit> {
+    s.lits
+        .iter()
+        .filter(move |l| l.offset >= range.0 && l.offset < range.1)
+}
+
+/// Byte offset just past the closing quote (interior is blanked, so the next
+/// `"` after the opening quote is always the closing one).
+fn lit_end(s: &Scanned, lit: &Lit) -> usize {
+    let cb = s.code.as_bytes();
+    let mut j = lit.offset + 1;
+    while j < cb.len() && cb[j] != b'"' {
+        j += 1;
+    }
+    (j + 1).min(cb.len())
+}
+
+/// Literal is a match-arm pattern: next token is `=>` or a single `|`.
+fn is_arm_pattern(s: &Scanned, lit: &Lit) -> bool {
+    let cb = s.code.as_bytes();
+    let mut j = lit_end(s, lit);
+    while j < cb.len() && cb[j].is_ascii_whitespace() {
+        j += 1;
+    }
+    if cb[j..].starts_with(b"=>") {
+        return true;
+    }
+    cb.get(j) == Some(&b'|') && cb.get(j + 1) != Some(&b'|')
+}
+
+/// Literal is a match-arm value: previous token is `=>`.
+fn is_arm_value(s: &Scanned, lit: &Lit) -> bool {
+    let cb = s.code.as_bytes();
+    let mut j = lit.offset;
+    while j > 0 && cb[j - 1].is_ascii_whitespace() {
+        j -= 1;
+    }
+    j >= 2 && &cb[j - 2..j] == b"=>"
+}
+
+pub fn is_snake(name: &str) -> bool {
+    let b = name.as_bytes();
+    !b.is_empty()
+        && b[0].is_ascii_lowercase()
+        && b.iter()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == b'_')
+}
+
+fn arm_lits(s: &Scanned, range: (usize, usize)) -> BTreeSet<String> {
+    lits_in(s, range)
+        .filter(|l| is_arm_pattern(s, l) && is_snake(&l.text))
+        .map(|l| l.text.clone())
+        .collect()
+}
+
+fn value_lits(s: &Scanned, range: (usize, usize)) -> BTreeSet<String> {
+    lits_in(s, range)
+        .filter(|l| is_arm_value(s, l) && is_snake(&l.text))
+        .map(|l| l.text.clone())
+        .collect()
+}
+
+fn all_lits(s: &Scanned, range: (usize, usize)) -> BTreeSet<String> {
+    lits_in(s, range).map(|l| l.text.clone()).collect()
+}
+
+/// Struct field the literal initializes (`name:`, `unit:`, ...), if any.
+fn field_of(s: &Scanned, lit: &Lit) -> Option<String> {
+    let cb = s.code.as_bytes();
+    let mut j = lit.offset;
+    while j > 0 && cb[j - 1].is_ascii_whitespace() {
+        j -= 1;
+    }
+    if j == 0 || cb[j - 1] != b':' {
+        return None;
+    }
+    let end = j - 1;
+    let mut k = end;
+    while k > 0 && (cb[k - 1].is_ascii_alphanumeric() || cb[k - 1] == b'_') {
+        k -= 1;
+    }
+    (k < end).then(|| s.code[k..end].to_string())
+}
+
+// ------------------------------------------------------------- reporting
+
+fn assert_same(
+    findings: &mut Vec<Finding>,
+    rule: &str,
+    file: &str,
+    line: usize,
+    reference: (&str, &BTreeSet<String>),
+    other: (&str, &BTreeSet<String>),
+) {
+    let missing: Vec<&String> = reference.1.difference(other.1).collect();
+    let extra: Vec<&String> = other.1.difference(reference.1).collect();
+    if missing.is_empty() && extra.is_empty() {
+        return;
+    }
+    let mut parts = Vec::new();
+    if !missing.is_empty() {
+        parts.push(format!(
+            "in {} but missing from {}: {}",
+            reference.0,
+            other.0,
+            missing
+                .iter()
+                .map(|s| s.as_str())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+    }
+    if !extra.is_empty() {
+        parts.push(format!(
+            "in {} but not in {}: {}",
+            other.0,
+            reference.0,
+            extra.iter().map(|s| s.as_str()).collect::<Vec<_>>().join(", ")
+        ));
+    }
+    findings.push(Finding::new("registry", rule, file, line, parts.join("; ")));
+}
+
+// ---------------------------------------------------------- README tables
+
+/// Rows of the lint-marked table that follows `<!-- airesim-lint:<tag> -->`:
+/// `(marker_line, [(row_line, backtick spans)])`. Header and separator rows
+/// carry no backticks and are skipped.
+pub fn md_table(readme: &str, tag: &str) -> Option<(usize, Vec<(usize, Vec<String>)>)> {
+    let marker = format!("<!-- airesim-lint:{tag} -->");
+    let mut rows = Vec::new();
+    let mut marker_line = None;
+    for (i, line) in readme.lines().enumerate() {
+        let t = line.trim();
+        if marker_line.is_none() {
+            if t == marker {
+                marker_line = Some(i + 1);
+            }
+            continue;
+        }
+        if t == "<!-- airesim-lint:end -->" {
+            break;
+        }
+        if t.starts_with('|') {
+            let spans: Vec<String> = t
+                .split('`')
+                .enumerate()
+                .filter(|(k, _)| k % 2 == 1)
+                .map(|(_, v)| v.to_string())
+                .collect();
+            if !spans.is_empty() {
+                rows.push((i + 1, spans));
+            }
+        }
+    }
+    marker_line.map(|l| (l, rows))
+}
+
+// ----------------------------------------------------------------- check
+
+pub fn check(root: &Path) -> Result<(Registries, Vec<Finding>), String> {
+    let mut f = Vec::new();
+
+    // --- params: set_by_name == get_by_name == sweepable_names == validate.
+    let ps = lexer::scan(&read_rel(root, PARAMS_RS)?);
+    let set_names = arm_lits(&ps, fn_block(&ps, "fn set_by_name(", PARAMS_RS)?);
+    let get_names = arm_lits(&ps, fn_block(&ps, "fn get_by_name(", PARAMS_RS)?);
+    let sweep_names = all_lits(&ps, fn_block(&ps, "fn sweepable_names(", PARAMS_RS)?);
+    assert_same(
+        &mut f,
+        "param-drift",
+        PARAMS_RS,
+        0,
+        ("sweepable_names", &sweep_names),
+        ("set_by_name", &set_names),
+    );
+    assert_same(
+        &mut f,
+        "param-drift",
+        PARAMS_RS,
+        0,
+        ("sweepable_names", &sweep_names),
+        ("get_by_name", &get_names),
+    );
+
+    let vs = lexer::scan(&read_rel(root, VALIDATE_RS)?);
+    let mut val_names: BTreeSet<String> = {
+        let body = fn_block(&vs, "fn validate(", VALIDATE_RS)?;
+        lits_in(&vs, body)
+            .filter(|l| is_snake(&l.text))
+            .map(|l| l.text.clone())
+            .collect()
+    };
+    val_names.extend(all_lits(
+        &vs,
+        array_block(&vs, "const TYPE_ENFORCED_PARAMS", VALIDATE_RS)?,
+    ));
+    assert_same(
+        &mut f,
+        "param-drift",
+        VALIDATE_RS,
+        0,
+        ("sweepable_names", &sweep_names),
+        ("validate (range checks + TYPE_ENFORCED_PARAMS)", &val_names),
+    );
+
+    // --- policies: consts == builder matches == module doc == axis names.
+    let pol_src = read_rel(root, POLICY_RS)?;
+    let pol = lexer::scan(&pol_src);
+    let axis_consts = [
+        ("selection", "SELECTION_NAMES"),
+        ("repair", "REPAIR_NAMES"),
+        ("checkpoint", "CHECKPOINT_NAMES"),
+        ("failure", "FAILURE_NAMES"),
+    ];
+    let mut axes = Vec::new();
+    for (axis, konst) in axis_consts {
+        let names = all_lits(&pol, array_block(&pol, &format!("const {konst}"), POLICY_RS)?);
+        let build_anchor = format!("match self.{axis}.as_str()");
+        let built = arm_lits(&pol, fn_block(&pol, &build_anchor, POLICY_RS)?);
+        assert_same(
+            &mut f,
+            "policy-drift",
+            POLICY_RS,
+            0,
+            (konst, &names),
+            (&format!("PolicySpec::build `{build_anchor}`"), &built),
+        );
+        axes.push((axis.to_string(), names));
+    }
+    let set_axes = arm_lits(&pol, fn_block(&pol, "fn set(", POLICY_RS)?);
+    let expect_axes: BTreeSet<String> =
+        axis_consts.iter().map(|(a, _)| a.to_string()).collect();
+    assert_same(
+        &mut f,
+        "policy-drift",
+        POLICY_RS,
+        0,
+        ("policy axes", &expect_axes),
+        ("PolicySpec::set", &set_axes),
+    );
+    // Module doc lists: `//!   <axis>: <default>   # name | name | ...`.
+    for (i, line) in pol_src.lines().enumerate() {
+        let Some(rest) = line.trim_start().strip_prefix("//!") else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        for (axis, names) in &axes {
+            let Some(tail) = rest.strip_prefix(&format!("{axis}:")) else {
+                continue;
+            };
+            let Some((_, list)) = tail.split_once('#') else {
+                continue;
+            };
+            let doc_names: BTreeSet<String> = list
+                .split('|')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            assert_same(
+                &mut f,
+                "policy-drift",
+                POLICY_RS,
+                i + 1,
+                (&format!("{axis} registry"), names),
+                ("module doc list", &doc_names),
+            );
+        }
+    }
+
+    // --- metrics: REGISTRY names/units, DEFAULT_METRIC membership.
+    let ms = lexer::scan(&read_rel(root, METRICS_RS)?);
+    let reg_block = array_block(&ms, "const REGISTRY", METRICS_RS)?;
+    let mut metrics: Vec<(String, String)> = Vec::new();
+    for lit in lits_in(&ms, reg_block) {
+        match field_of(&ms, lit).as_deref() {
+            Some("name") => metrics.push((lit.text.clone(), String::new())),
+            Some("unit") => {
+                if let Some(last) = metrics.last_mut() {
+                    last.1 = lit.text.clone();
+                }
+            }
+            _ => {}
+        }
+    }
+    let metric_names: BTreeSet<String> = metrics.iter().map(|(n, _)| n.clone()).collect();
+    if metrics.len() != metric_names.len() {
+        f.push(Finding::new(
+            "registry",
+            "metric-drift",
+            METRICS_RS,
+            0,
+            "duplicate metric name in REGISTRY",
+        ));
+    }
+    {
+        let at = anchor_pos(&ms, "const DEFAULT_METRIC", METRICS_RS)?;
+        match ms.lits.iter().find(|l| l.offset > at) {
+            Some(d) if metric_names.contains(&d.text) => {}
+            Some(d) => f.push(Finding::new(
+                "registry",
+                "metric-drift",
+                METRICS_RS,
+                d.line,
+                format!("DEFAULT_METRIC `{}` is not in REGISTRY", d.text),
+            )),
+            None => f.push(Finding::new(
+                "registry",
+                "metric-drift",
+                METRICS_RS,
+                0,
+                "cannot find DEFAULT_METRIC value",
+            )),
+        }
+    }
+
+    // --- scenario kinds: from_doc parse arms == kind_name values.
+    let ss = lexer::scan(&read_rel(root, SCENARIO_RS)?);
+    let parse_kinds = arm_lits(&ss, fn_block(&ss, "match kind_name", SCENARIO_RS)?);
+    let kinds = value_lits(&ss, fn_block(&ss, "fn kind_name(", SCENARIO_RS)?);
+    assert_same(
+        &mut f,
+        "kind-drift",
+        SCENARIO_RS,
+        0,
+        ("kind_name (reporting)", &kinds),
+        ("Scenario::from_doc (parsing)", &parse_kinds),
+    );
+
+    // --- README lint-marked tables.
+    let readme = read_rel(root, README_MD)?;
+    match md_table(&readme, "params") {
+        None => f.push(Finding::new(
+            "registry",
+            "readme-table",
+            README_MD,
+            0,
+            "missing `<!-- airesim-lint:params -->` table",
+        )),
+        Some((line, rows)) => {
+            let names: BTreeSet<String> = rows
+                .iter()
+                .filter_map(|(_, spans)| spans.first().cloned())
+                .collect();
+            assert_same(
+                &mut f,
+                "readme-table",
+                README_MD,
+                line,
+                ("sweepable_names", &sweep_names),
+                ("README params table", &names),
+            );
+        }
+    }
+    match md_table(&readme, "policies") {
+        None => f.push(Finding::new(
+            "registry",
+            "readme-table",
+            README_MD,
+            0,
+            "missing `<!-- airesim-lint:policies -->` table",
+        )),
+        Some((line, rows)) => {
+            let mut seen = BTreeSet::new();
+            for (rowline, spans) in &rows {
+                let axis = &spans[0];
+                seen.insert(axis.clone());
+                match axes.iter().find(|(a, _)| a == axis) {
+                    None => f.push(Finding::new(
+                        "registry",
+                        "readme-table",
+                        README_MD,
+                        *rowline,
+                        format!("unknown policy axis `{axis}` in README table"),
+                    )),
+                    Some((_, names)) => {
+                        let row_names: BTreeSet<String> = spans[1..].iter().cloned().collect();
+                        assert_same(
+                            &mut f,
+                            "readme-table",
+                            README_MD,
+                            *rowline,
+                            (&format!("{axis} registry"), names),
+                            ("README policies table row", &row_names),
+                        );
+                    }
+                }
+            }
+            let expect: BTreeSet<String> = axes.iter().map(|(a, _)| a.clone()).collect();
+            assert_same(
+                &mut f,
+                "readme-table",
+                README_MD,
+                line,
+                ("policy axes", &expect),
+                ("README policies table", &seen),
+            );
+        }
+    }
+    match md_table(&readme, "metrics") {
+        None => f.push(Finding::new(
+            "registry",
+            "readme-table",
+            README_MD,
+            0,
+            "missing `<!-- airesim-lint:metrics -->` table",
+        )),
+        Some((line, rows)) => {
+            let row_pairs: Vec<(String, String)> = rows
+                .iter()
+                .map(|(_, spans)| {
+                    (
+                        spans.first().cloned().unwrap_or_default(),
+                        spans.get(1).cloned().unwrap_or_default(),
+                    )
+                })
+                .collect();
+            if row_pairs != metrics {
+                let row_names: BTreeSet<String> =
+                    row_pairs.iter().map(|(n, _)| n.clone()).collect();
+                assert_same(
+                    &mut f,
+                    "readme-table",
+                    README_MD,
+                    line,
+                    ("metrics REGISTRY", &metric_names),
+                    ("README metrics table", &row_names),
+                );
+                if row_names == metric_names {
+                    f.push(Finding::new(
+                        "registry",
+                        "readme-table",
+                        README_MD,
+                        line,
+                        "README metrics table must match REGISTRY order and units exactly",
+                    ));
+                }
+            }
+        }
+    }
+
+    Ok((
+        Registries {
+            params: sweep_names,
+            axes,
+            metrics,
+            kinds,
+        },
+        f,
+    ))
+}

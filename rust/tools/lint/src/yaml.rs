@@ -1,0 +1,309 @@
+//! A tiny YAML-subset reader for pass 4 — just enough to walk the maps,
+//! lists, and scalars that `rust/configs/*.yaml` actually use (the same
+//! subset `airesim`'s own `config::yaml` accepts): indentation-nested maps,
+//! `- ` block lists (including list items that open a block map), inline
+//! `{k: v, ...}` maps, inline `[a, b]` lists, and `#` comments. Scalars are
+//! kept as raw strings — the lint only ever compares names, never numbers.
+
+/// Parsed YAML value. Scalars stay strings.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Y {
+    Str(String),
+    List(Vec<Y>),
+    Map(Vec<(String, Y)>),
+}
+
+impl Y {
+    pub fn get(&self, key: &str) -> Option<&Y> {
+        match self {
+            Y::Map(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn keys(&self) -> Vec<&str> {
+        match self {
+            Y::Map(entries) => entries.iter().map(|(k, _)| k.as_str()).collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Y::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Y]> {
+        match self {
+            Y::List(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// `(indent, content, 1-based line)` for each non-blank line, comments gone.
+type Line = (usize, String, usize);
+
+fn strip_comment(line: &str) -> &str {
+    let b = line.as_bytes();
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'#' && (i == 0 || b[i - 1].is_ascii_whitespace()) {
+            return &line[..i];
+        }
+    }
+    line
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    for q in ['"', '\''] {
+        if s.len() >= 2 && s.starts_with(q) && s.ends_with(q) {
+            return s[1..s.len() - 1].to_string();
+        }
+    }
+    s.to_string()
+}
+
+/// Position of the first `:` outside brackets that ends the line or is
+/// followed by whitespace — i.e. this text opens a map entry.
+fn entry_colon(s: &str) -> Option<usize> {
+    let b = s.as_bytes();
+    let mut depth = 0usize;
+    for (i, &c) in b.iter().enumerate() {
+        match c {
+            b'[' | b'{' => depth += 1,
+            b']' | b'}' => depth = depth.saturating_sub(1),
+            b':' if depth == 0 => {
+                if i + 1 == b.len() || b[i + 1].is_ascii_whitespace() {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Split inline text on top-level commas.
+fn split_commas(s: &str) -> Vec<&str> {
+    let b = s.as_bytes();
+    let mut depth = 0usize;
+    let mut start = 0;
+    let mut out = Vec::new();
+    for (i, &c) in b.iter().enumerate() {
+        match c {
+            b'[' | b'{' => depth += 1,
+            b']' | b'}' => depth = depth.saturating_sub(1),
+            b',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+fn parse_inline(s: &str, ln: usize) -> Result<Y, String> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('{') {
+        let inner = inner
+            .strip_suffix('}')
+            .ok_or_else(|| format!("line {ln}: unterminated inline map"))?;
+        let mut entries = Vec::new();
+        for part in split_commas(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let c = entry_colon(part)
+                .ok_or_else(|| format!("line {ln}: inline map entry `{part}` has no `:`"))?;
+            entries.push((unquote(&part[..c]), parse_inline(&part[c + 1..], ln)?));
+        }
+        return Ok(Y::Map(entries));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("line {ln}: unterminated inline list"))?;
+        let mut items = Vec::new();
+        for part in split_commas(inner) {
+            if !part.trim().is_empty() {
+                items.push(parse_inline(part, ln)?);
+            }
+        }
+        return Ok(Y::List(items));
+    }
+    Ok(Y::Str(unquote(s)))
+}
+
+struct Parser<'a> {
+    lines: &'a [Line],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<&'a Line> {
+        self.lines.get(self.pos)
+    }
+
+    /// Parse the block starting at the current line, which has `indent`.
+    fn block(&mut self, indent: usize) -> Result<Y, String> {
+        match self.peek() {
+            Some((_, content, _)) if content == "-" || content.starts_with("- ") => {
+                self.list(indent)
+            }
+            _ => self.map(indent, None),
+        }
+    }
+
+    fn list(&mut self, indent: usize) -> Result<Y, String> {
+        let mut items = Vec::new();
+        while let Some(&(ind, ref content, ln)) = self.peek() {
+            if ind != indent || !(content == "-" || content.starts_with("- ")) {
+                break;
+            }
+            let rest = content[1..].trim_start().to_string();
+            // Column where the item's own content begins.
+            let item_indent = ind + (content.len() - rest.len());
+            self.pos += 1;
+            if rest.is_empty() {
+                match self.peek() {
+                    Some(&(next_ind, _, _)) if next_ind > indent => {
+                        items.push(self.block(next_ind)?);
+                    }
+                    _ => items.push(Y::Str(String::new())),
+                }
+            } else if !rest.starts_with('{') && !rest.starts_with('[') && entry_colon(&rest).is_some() {
+                // `- key: ...` opens a block map inlined after the dash.
+                items.push(self.map(item_indent, Some((rest, ln)))?);
+            } else {
+                items.push(parse_inline(&rest, ln)?);
+            }
+        }
+        Ok(Y::List(items))
+    }
+
+    fn map(&mut self, indent: usize, first: Option<(String, usize)>) -> Result<Y, String> {
+        let mut entries = Vec::new();
+        if let Some((content, ln)) = first {
+            self.entry(&content, ln, indent, &mut entries)?;
+        }
+        while let Some(&(ind, ref content, ln)) = self.peek() {
+            if ind != indent || content == "-" || content.starts_with("- ") {
+                break;
+            }
+            let content = content.clone();
+            self.pos += 1;
+            self.entry(&content, ln, indent, &mut entries)?;
+        }
+        Ok(Y::Map(entries))
+    }
+
+    fn entry(
+        &mut self,
+        content: &str,
+        ln: usize,
+        indent: usize,
+        entries: &mut Vec<(String, Y)>,
+    ) -> Result<(), String> {
+        let c = entry_colon(content)
+            .ok_or_else(|| format!("line {ln}: expected `key:`, got `{content}`"))?;
+        let key = unquote(&content[..c]);
+        let rest = content[c + 1..].trim();
+        if rest.is_empty() {
+            match self.peek() {
+                Some(&(next_ind, _, _)) if next_ind > indent => {
+                    let v = self.block(next_ind)?;
+                    entries.push((key, v));
+                }
+                // YAML allows a block list at the same indent as its key.
+                Some(&(next_ind, ref c, _))
+                    if next_ind == indent && (c == "-" || c.starts_with("- ")) =>
+                {
+                    let v = self.list(next_ind)?;
+                    entries.push((key, v));
+                }
+                _ => entries.push((key, Y::Str(String::new()))),
+            }
+        } else {
+            entries.push((key, parse_inline(rest, ln)?));
+        }
+        Ok(())
+    }
+}
+
+pub fn parse(text: &str) -> Result<Y, String> {
+    let mut lines: Vec<Line> = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let no_comment = strip_comment(raw);
+        let trimmed = no_comment.trim_end();
+        let content = trimmed.trim_start();
+        if content.is_empty() || content == "---" {
+            continue;
+        }
+        let indent = trimmed.len() - content.len();
+        lines.push((indent, content.to_string(), i + 1));
+    }
+    if lines.is_empty() {
+        return Ok(Y::Map(Vec::new()));
+    }
+    let indent = lines[0].0;
+    let mut p = Parser {
+        lines: &lines,
+        pos: 0,
+    };
+    let doc = p.block(indent)?;
+    if let Some((_, content, ln)) = p.peek() {
+        return Err(format!("line {ln}: unexpected dedent/content `{content}`"));
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_maps_lists_and_inline_forms() {
+        let doc = parse(
+            "title: demo # comment\nparams:\n  num_jobs: 8\n  rate: 0.5/1440\npolicies: { selection: locality }\nsweep:\n  x:\n    name: job_size\n    values: [64, 128]\nchildren:\n  - label: a\n    params:\n      num_jobs: 4\n  - label: b\n",
+        )
+        .unwrap();
+        assert_eq!(
+            doc.get("params").unwrap().get("num_jobs").unwrap().as_str(),
+            Some("8")
+        );
+        assert_eq!(
+            doc.get("policies").unwrap().get("selection").unwrap().as_str(),
+            Some("locality")
+        );
+        let x = doc.get("sweep").unwrap().get("x").unwrap();
+        assert_eq!(x.get("name").unwrap().as_str(), Some("job_size"));
+        assert_eq!(x.get("values").unwrap().as_list().unwrap().len(), 2);
+        let kids = doc.get("children").unwrap().as_list().unwrap();
+        assert_eq!(kids.len(), 2);
+        assert_eq!(kids[0].get("label").unwrap().as_str(), Some("a"));
+        assert_eq!(
+            kids[0].get("params").unwrap().get("num_jobs").unwrap().as_str(),
+            Some("4")
+        );
+        assert_eq!(kids[1].get("label").unwrap().as_str(), Some("b"));
+    }
+
+    #[test]
+    fn inline_map_list_items() {
+        let doc = parse("inject:\n  failures:\n    - {at: 100, job: 1, kind: random}\n").unwrap();
+        let fails = doc
+            .get("inject")
+            .unwrap()
+            .get("failures")
+            .unwrap()
+            .as_list()
+            .unwrap();
+        assert_eq!(fails[0].get("kind").unwrap().as_str(), Some("random"));
+    }
+}

@@ -1,0 +1,416 @@
+//! Fixture tests: each pass catches a seeded violation, and the annotated /
+//! allowlisted variant passes. Fixtures are tiny fake repo trees under
+//! `CARGO_TARGET_TMPDIR` carrying just the files the lint reads; the final
+//! test runs the real lint against the real repo and requires it clean.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use airesim_lint::{configs, determinism, draws, registry, run_all, Finding};
+
+static SEQ: AtomicUsize = AtomicUsize::new(0);
+
+struct TempRepo {
+    root: PathBuf,
+}
+
+impl TempRepo {
+    fn new(tag: &str) -> TempRepo {
+        let root = Path::new(env!("CARGO_TARGET_TMPDIR")).join(format!(
+            "lint-{tag}-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&root).unwrap();
+        TempRepo { root }
+    }
+
+    fn write(&self, rel: &str, content: &str) {
+        let p = self.root.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(p, content).unwrap();
+    }
+}
+
+impl Drop for TempRepo {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+    }
+}
+
+const PARAMS_RS: &str = r#"
+impl Params {
+    pub fn set_by_name(&mut self, name: &str, value: f64) -> bool {
+        match name {
+            "alpha" => self.alpha = value,
+            "beta" => self.beta = value,
+            _ => return false,
+        }
+        true
+    }
+
+    pub fn get_by_name(&self, name: &str) -> Option<f64> {
+        Some(match name {
+            "alpha" => self.alpha,
+            "beta" => self.beta,
+            _ => return None,
+        })
+    }
+
+    pub fn sweepable_names() -> &'static [&'static str] {
+        &["alpha", "beta"]
+    }
+}
+"#;
+
+const VALIDATE_RS: &str = r#"
+pub const TYPE_ENFORCED_PARAMS: &[&str] = &["beta"];
+
+pub fn validate(p: &Params) -> Result<(), ConfigError> {
+    non_neg("alpha", p.alpha)?;
+    Ok(())
+}
+"#;
+
+const POLICY_RS: &str = r#"//! Policy registry fixture.
+//!
+//!   selection: one      # one | two
+//!   repair: fifo        # fifo
+//!   checkpoint: auto    # auto
+//!   failure: auto       # auto
+
+pub const SELECTION_NAMES: &[&str] = &["one", "two"];
+pub const REPAIR_NAMES: &[&str] = &["fifo"];
+pub const CHECKPOINT_NAMES: &[&str] = &["auto"];
+pub const FAILURE_NAMES: &[&str] = &["auto"];
+
+impl PolicySpec {
+    pub fn set(&mut self, axis: &str, value: &str) -> Result<(), String> {
+        match axis {
+            "selection" => {}
+            "repair" => {}
+            "checkpoint" => {}
+            "failure" => {}
+            _ => return Err(format!("unknown axis {axis} {value}")),
+        }
+        Ok(())
+    }
+
+    pub fn build(&self) {
+        match self.selection.as_str() {
+            "one" => {}
+            "two" => {}
+            _ => {}
+        }
+        match self.repair.as_str() {
+            "fifo" => {}
+            _ => {}
+        }
+        match self.checkpoint.as_str() {
+            "auto" => {}
+            _ => {}
+        }
+        match self.failure.as_str() {
+            "auto" => {}
+            _ => {}
+        }
+    }
+}
+"#;
+
+const METRICS_RS: &str = r#"
+pub const DEFAULT_METRIC: &str = "m_one";
+
+pub const REGISTRY: &[Metric] = &[
+    Metric { name: "m_one", unit: "min", doc: "first metric" },
+    Metric { name: "m_two", unit: "count", doc: "second metric" },
+];
+"#;
+
+const SCENARIO_RS: &str = r#"
+impl Scenario {
+    pub fn from_doc() {
+        let kind = match kind_name {
+            "single" => 1,
+            "sweep" => 2,
+            other => 0,
+        };
+    }
+}
+
+fn kind_name(kind: &ScenarioKind) -> &'static str {
+    match kind {
+        ScenarioKind::Single => "single",
+        ScenarioKind::Sweep => "sweep",
+    }
+}
+"#;
+
+const README_MD: &str = r#"# fixture
+
+<!-- airesim-lint:params -->
+| parameter | meaning |
+|---|---|
+| `alpha` | a knob |
+| `beta` | another knob |
+<!-- airesim-lint:end -->
+
+<!-- airesim-lint:policies -->
+| axis | policies |
+|---|---|
+| `selection` | `one`, `two` |
+| `repair` | `fifo` |
+| `checkpoint` | `auto` |
+| `failure` | `auto` |
+<!-- airesim-lint:end -->
+
+<!-- airesim-lint:metrics -->
+| metric | unit | meaning |
+|---|---|---|
+| `m_one` | `min` | first metric |
+| `m_two` | `count` | second metric |
+<!-- airesim-lint:end -->
+"#;
+
+const MODEL_RS: &str = r#"
+pub fn roll(rng: &mut Rng) -> bool {
+    rng.bernoulli(0.5)
+}
+"#;
+
+const DRAW_SITES: &str = "model/x.rs bernoulli 1\n";
+
+const OK_YAML: &str = "title: fixture\nparams:\n  alpha: 0.5\npolicies: { selection: one }\n";
+
+fn clean_repo(tag: &str) -> TempRepo {
+    let repo = TempRepo::new(tag);
+    repo.write("rust/src/config/params.rs", PARAMS_RS);
+    repo.write("rust/src/config/validate.rs", VALIDATE_RS);
+    repo.write("rust/src/model/policy.rs", POLICY_RS);
+    repo.write("rust/src/model/x.rs", MODEL_RS);
+    repo.write("rust/src/stats/metrics.rs", METRICS_RS);
+    repo.write("rust/src/scenario/mod.rs", SCENARIO_RS);
+    repo.write("rust/README.md", README_MD);
+    repo.write("rust/tools/lint/draw_sites.txt", DRAW_SITES);
+    repo.write("rust/configs/ok.yaml", OK_YAML);
+    repo
+}
+
+fn rendered(findings: &[Finding]) -> String {
+    findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+}
+
+#[test]
+fn clean_fixture_repo_lints_clean() {
+    let repo = clean_repo("clean");
+    let findings = run_all(&repo.root).expect("lint runs");
+    assert!(findings.is_empty(), "unexpected findings:\n{}", rendered(&findings));
+}
+
+// ---------------------------------------------------------------- pass 1
+
+#[test]
+fn registry_pass_catches_readme_param_drift() {
+    let repo = clean_repo("readme-drift");
+    // Drop `beta` from the README param table: README drifts from the code.
+    repo.write("rust/README.md", &README_MD.replace("| `beta` | another knob |\n", ""));
+    let findings = run_all(&repo.root).expect("lint runs");
+    assert_eq!(findings.len(), 1, "want 1 finding:\n{}", rendered(&findings));
+    assert_eq!(findings[0].rule, "readme-table");
+    assert!(findings[0].message.contains("beta"), "{}", findings[0].message);
+}
+
+#[test]
+fn registry_pass_catches_builder_match_drift() {
+    let repo = clean_repo("builder-drift");
+    // A policy registered in SELECTION_NAMES but missing from the builder.
+    repo.write(
+        "rust/src/model/policy.rs",
+        &POLICY_RS.replace("            \"two\" => {}\n", ""),
+    );
+    let findings = run_all(&repo.root).expect("lint runs");
+    assert_eq!(findings.len(), 1, "want 1 finding:\n{}", rendered(&findings));
+    assert_eq!(findings[0].rule, "policy-drift");
+    assert!(findings[0].message.contains("two"), "{}", findings[0].message);
+}
+
+#[test]
+fn registry_pass_catches_unvalidated_param() {
+    let repo = clean_repo("validate-drift");
+    // `beta` covered neither by a range check nor by TYPE_ENFORCED_PARAMS.
+    repo.write(
+        "rust/src/config/validate.rs",
+        &VALIDATE_RS.replace("&[\"beta\"]", "&[]"),
+    );
+    let findings = run_all(&repo.root).expect("lint runs");
+    assert_eq!(findings.len(), 1, "want 1 finding:\n{}", rendered(&findings));
+    assert_eq!(findings[0].rule, "param-drift");
+    assert!(findings[0].message.contains("beta"), "{}", findings[0].message);
+}
+
+// ---------------------------------------------------------------- pass 2
+
+#[test]
+fn determinism_pass_catches_hash_container_and_accepts_annotation() {
+    let bad = "use std::collections::HashMap;\npub struct S {\n    m: HashMap<u32, u32>,\n}\n";
+    let findings = determinism::scan_file("rust/src/model/bad.rs", bad);
+    assert_eq!(findings.len(), 2, "{}", rendered(&findings));
+    assert!(findings.iter().all(|f| f.rule == "hash-container"));
+
+    let annotated = "// lint:allow(hash-container) keyed lookups only, audited\n\
+                     use std::collections::HashMap;\n\
+                     pub struct S {\n    \
+                     // lint:allow(hash-container) keyed lookups only, audited\n    \
+                     m: HashMap<u32, u32>,\n}\n";
+    let findings = determinism::scan_file("rust/src/model/bad.rs", annotated);
+    assert!(findings.is_empty(), "{}", rendered(&findings));
+
+    // An annotation without a reason is itself a finding.
+    let bare = "use std::collections::HashMap; // lint:allow(hash-container)\n";
+    let findings = determinism::scan_file("rust/src/model/bad.rs", bare);
+    assert_eq!(findings.len(), 1, "{}", rendered(&findings));
+    assert_eq!(findings[0].rule, "allow-reason");
+}
+
+#[test]
+fn determinism_pass_ignores_tests_comments_and_strings() {
+    let src = "// HashMap in a comment is fine\n\
+               pub const DOC: &str = \"HashMap in a string is fine\";\n\
+               #[cfg(test)]\n\
+               mod tests {\n    \
+               use std::collections::HashMap;\n    \
+               fn t() { let _m: HashMap<u32, u32> = HashMap::new(); }\n}\n";
+    let findings = determinism::scan_file("rust/src/model/ok.rs", src);
+    assert!(findings.is_empty(), "{}", rendered(&findings));
+}
+
+#[test]
+fn determinism_pass_catches_wall_clock_and_float_accum() {
+    let src = "use std::time::Instant;\n";
+    let findings = determinism::scan_file("rust/src/sim/clock.rs", src);
+    assert_eq!(findings.len(), 1, "{}", rendered(&findings));
+    assert_eq!(findings[0].rule, "wall-clock");
+
+    let src = "fn reduce(total: &Mutex<f64>, dt: f64) {\n    \
+               let mut t = total.lock().unwrap();\n    \
+               *t += dt;\n}\n";
+    let findings = determinism::scan_file("rust/src/sweep/reduce.rs", src);
+    assert_eq!(findings.len(), 1, "{}", rendered(&findings));
+    assert_eq!(findings[0].rule, "float-accum");
+
+    // Integer counters are exact in any accumulation order.
+    let src = "fn count(n: &Mutex<u64>) {\n    \
+               let mut t = n.lock().unwrap();\n    \
+               *t += 1;\n}\n";
+    let findings = determinism::scan_file("rust/src/sweep/reduce.rs", src);
+    assert!(findings.is_empty(), "{}", rendered(&findings));
+}
+
+// ---------------------------------------------------------------- pass 3
+
+#[test]
+fn draws_pass_catches_new_site_and_stale_entry() {
+    let repo = clean_repo("draws");
+    // Seed a second draw: the committed count (1) no longer matches.
+    repo.write(
+        "rust/src/model/x.rs",
+        "pub fn roll(rng: &mut Rng) -> bool {\n    rng.bernoulli(0.5) && rng.bernoulli(0.1)\n}\n",
+    );
+    let findings = run_all(&repo.root).expect("lint runs");
+    assert_eq!(findings.len(), 1, "{}", rendered(&findings));
+    assert_eq!(findings[0].rule, "draw-site");
+    assert!(findings[0].message.contains("allowlist says 1"), "{}", findings[0].message);
+
+    // A brand-new method not in the allowlist at all.
+    let repo = clean_repo("draws-new");
+    repo.write(
+        "rust/src/model/y.rs",
+        "pub fn pick(rng: &mut Rng) -> u64 {\n    rng.next_below(7)\n}\n",
+    );
+    let findings = run_all(&repo.root).expect("lint runs");
+    assert_eq!(findings.len(), 1, "{}", rendered(&findings));
+    assert!(findings[0].message.contains("new draw site"), "{}", findings[0].message);
+
+    // A stale allowlist entry (site removed, entry kept) also fails.
+    let repo = clean_repo("draws-stale");
+    repo.write("rust/src/model/x.rs", "pub fn roll() -> bool {\n    true\n}\n");
+    let findings = run_all(&repo.root).expect("lint runs");
+    assert_eq!(findings.len(), 1, "{}", rendered(&findings));
+    assert!(findings[0].message.contains("stale entry"), "{}", findings[0].message);
+}
+
+#[test]
+fn draws_pass_skips_test_code() {
+    let counts = draws::count_draws(
+        "pub fn live(rng: &mut Rng) -> f64 {\n    rng.next_f64()\n}\n\
+         #[cfg(test)]\nmod tests {\n    \
+         fn t(rng: &mut Rng) { rng.next_f64(); rng.bernoulli(0.5); }\n}\n",
+    );
+    assert_eq!(counts.get("next_f64"), Some(&1));
+    assert_eq!(counts.get("bernoulli"), None);
+}
+
+// ---------------------------------------------------------------- pass 4
+
+#[test]
+fn configs_pass_catches_unknown_names() {
+    let repo = clean_repo("configs");
+    repo.write(
+        "rust/configs/bad.yaml",
+        "title: bad\nparams:\n  gamma: 1.0\npolicies: { selection: three }\nbudgett: 2\n",
+    );
+    let findings = run_all(&repo.root).expect("lint runs");
+    let rules: Vec<&str> = findings.iter().map(|f| f.rule.as_str()).collect();
+    assert_eq!(
+        rules,
+        vec!["unknown-key", "unknown-param", "unknown-policy"],
+        "{}",
+        rendered(&findings)
+    );
+    assert!(findings.iter().all(|f| f.file.ends_with("bad.yaml")));
+}
+
+#[test]
+fn configs_pass_checks_sweep_axes_and_scenario_kind() {
+    let repo = clean_repo("configs-sweep");
+    repo.write(
+        "rust/configs/sweep.yaml",
+        "scenario: sweeep\nsweep:\n  kind: one_way\n  x:\n    name: policies.selection\n    values: [one, three]\n",
+    );
+    let findings = run_all(&repo.root).expect("lint runs");
+    let rules: Vec<&str> = findings.iter().map(|f| f.rule.as_str()).collect();
+    assert_eq!(
+        rules,
+        vec!["scenario-kind", "unknown-policy"],
+        "{}",
+        rendered(&findings)
+    );
+}
+
+#[test]
+fn configs_check_doc_accepts_the_full_feature_surface() {
+    // One doc exercising every structural section the linter knows.
+    let (regs, findings) = registry::check(&clean_repo("regs").root).expect("registry");
+    assert!(findings.is_empty(), "{}", rendered(&findings));
+    let doc = "title: all\nscenario: single\nseed: 7\nreplications: 4\n\
+               params:\n  alpha: 1.0\n  beta: 2.0\n\
+               policies: { selection: two }\n\
+               topology:\n  levels:\n    - {name: rack, size: 8, outage_rate: 0.1}\n\
+               workload:\n  poisson: { rate: 0.5 }\n  classes:\n    - {weight: 1, job_size: 4}\n\
+               children:\n  - label: a\n    params:\n      alpha: 3.0\n";
+    let findings = configs::check_doc("rust/configs/all.yaml", doc, &regs);
+    assert!(findings.is_empty(), "{}", rendered(&findings));
+}
+
+// ------------------------------------------------------------ integration
+
+#[test]
+fn lint_runs_clean_on_this_repo() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../..");
+    let findings = run_all(&root).expect("lint runs on the real repo");
+    assert!(
+        findings.is_empty(),
+        "the repo must lint clean; findings:\n{}",
+        rendered(&findings)
+    );
+}
